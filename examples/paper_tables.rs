@@ -1,0 +1,33 @@
+//! Regenerate every throughput/utilization table of the paper in one run
+//! (Tables 1, 2, 3, 4, 5, 7 + the Table 8 LF configs). The per-table
+//! bench binaries under `rust/benches/` print the same rows; this example
+//! is the single-shot "give me the whole evaluation section" driver.
+//!
+//! Run: `cargo run --release --example paper_tables [-- --out results/]`
+
+use anyhow::Result;
+use llmq::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out = args.str("out", "results");
+    std::fs::create_dir_all(&out)?;
+    let mut all = String::new();
+
+    for (name, table) in [
+        ("table1", llmq::sim::tables::table1_single_gpu()),
+        ("table2", llmq::sim::tables::table2_multi_gpu()),
+        ("table3", llmq::sim::tables::table3_dgx_spark()),
+        ("table4", llmq::sim::tables::table4_hw_compare()),
+        ("table5", llmq::sim::tables::table5_collectives()),
+        ("table7", llmq::sim::tables::table7_configs()),
+        ("table8", llmq::sim::tables::table8_lf_configs()),
+    ] {
+        table.print();
+        std::fs::write(format!("{out}/{name}.csv"), table.to_csv())?;
+        all += &table.to_markdown();
+    }
+    std::fs::write(format!("{out}/paper_tables.md"), &all)?;
+    println!("written to {out}/paper_tables.md and {out}/table*.csv");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the 60-second tour of llmq.
+//!
+//! 1. verify the AOT artifacts + runtime numerics,
+//! 2. train the `tiny` model for a handful of FP8 steps (real PJRT
+//!    execution: Pallas-lowered HLO driven from rust),
+//! 3. plan a paper-scale model on a consumer GPU (what fits, how fast).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use anyhow::Result;
+use llmq::config::{Dtype, TrainConfig};
+use llmq::sim::CommBackend;
+use llmq::train::Trainer;
+
+fn main() -> Result<()> {
+    // --- 1. runtime selftest ------------------------------------------------
+    let rt = llmq::runtime::Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    rt.quantize_selftest()?;
+    println!("FP8 quantize artifact matches the rust codec ✓\n");
+
+    // --- 2. a few real FP8 training steps ----------------------------------
+    let cfg = TrainConfig {
+        dtype: Dtype::Fp8,
+        grad_accum: 2,
+        steps: 8,
+        lr: 1e-3,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new("artifacts", "tiny", cfg)?;
+    let corpus = llmq::data::SynthCorpus::new(0).text(0, 100_000);
+    println!("training `tiny` ({} params) in FP8:", trainer.man.total_numel);
+    trainer.train_loop(&corpus, 8, |s| {
+        println!(
+            "  step {:>2}  loss {:.4}{}",
+            s.step,
+            s.loss,
+            s.val_loss
+                .map(|v| format!("  val {v:.4}"))
+                .unwrap_or_default()
+        );
+    })?;
+
+    // --- 3. plan a 7B model on a 16 GB card (paper §3.1) --------------------
+    let model = llmq::config::by_name("7B").unwrap();
+    let gpu = llmq::hw::gpu_by_name("RTX 5060Ti").unwrap();
+    let (chosen, r) = llmq::coordinator::autoplan(
+        &model, &gpu, 1, true, 500_000, CommBackend::MemcpyFull, 0,
+    )?;
+    println!(
+        "\n7B on one RTX 5060Ti (16 GB): micro-batch {}, recompute {}, offload [{}]",
+        chosen.micro_batch,
+        chosen.recompute.label(),
+        chosen.offload.label()
+    );
+    println!(
+        "  device {:.1} GiB, host {:.1} GiB → {:.1}k tok/s at {:.0}% MFU (simulated)",
+        chosen.plan.dev_gib(),
+        chosen.plan.host_gib(),
+        r.tokens_per_s / 1000.0,
+        r.mfu * 100.0
+    );
+    Ok(())
+}

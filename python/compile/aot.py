@@ -1,0 +1,196 @@
+"""AOT compile path: lower L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the runtime's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per executable preset (tiny/small/e2e):
+  artifacts/<cfg>_train_{bf16,fp8,fp8_e5m2}.hlo.txt   (p.., tok, tgt) -> (loss, g..)
+  artifacts/<cfg>_fwd.hlo.txt                         (p.., tok) -> logits
+  artifacts/<cfg>_adamw.hlo.txt     per-shard flat AdamW (p,m,v,g,scalars)
+  artifacts/<cfg>_init.bin          flat f32 init params (manifest order)
+  artifacts/<cfg>_manifest.json     the rust-side ABI: shapes, offsets, meta
+  artifacts/quantize_selftest.hlo.txt   (x) -> (q, scale)  runtime check
+
+Run: ``cd python && python -m compile.aot --out ../artifacts`` (Makefile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .kernels import adamw as adamw_k
+from .kernels import quantize as qk, ref
+
+POLICIES = ("bf16", "fp8", "fp8_e5m2")
+
+# Per-preset microbatch size and LM-head/attention chunking used for the
+# lowered artifacts (rust grad-accumulates across microbatches).
+PRESET_META = {
+    "tiny": dict(batch=2, lmhead_chunks=2, attn_chunks=1),
+    "small": dict(batch=4, lmhead_chunks=4, attn_chunks=1),
+    "e2e": dict(batch=8, lmhead_chunks=4, attn_chunks=1),
+}
+
+WORLD = 4          # virtual devices in the multi-GPU coordinator
+SHARD_ALIGN = 1024  # flat param buffer padded to WORLD * SHARD_ALIGN
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+def lower_train(cfg: configs.ModelConfig, policy: str, batch: int,
+                lmhead_chunks: int, attn_chunks: int) -> str:
+    names = [n for n, _ in cfg.param_shapes()]
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        loss, grads = model.train_step(
+            params, tokens, targets, cfg, policy, lmhead_chunks, attn_chunks)
+        return (loss, *[grads[n] for n in names])
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for _, s in cfg.param_shapes()]
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(*specs, tok, tok))
+
+
+def lower_fwd(cfg: configs.ModelConfig, batch: int, policy: str = "bf16") -> str:
+    names = [n for n, _ in cfg.param_shapes()]
+
+    def fn(*args):
+        params = dict(zip(names, args[:len(names)]))
+        return (model.forward_logits(params, args[len(names)], cfg, policy),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for _, s in cfg.param_shapes()]
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(*specs, tok))
+
+
+def lower_adamw(shard_len: int) -> str:
+    def fn(p, m, v, g, scalars):
+        return adamw_k.adamw_step_raw(p, m, v, g, scalars)
+
+    vec = jax.ShapeDtypeStruct((shard_len,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((8,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(vec, vec, vec, vec, sc))
+
+
+def lower_quantize_selftest(n: int = 4096) -> str:
+    def fn(x):
+        q, s = qk.quantize(x, ref.E4M3)
+        return q, s.reshape(1)
+
+    return to_hlo_text(jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32)))
+
+
+def flat_layout(cfg: configs.ModelConfig):
+    """Flat f32 buffer layout: manifest order, padded to WORLD*SHARD_ALIGN."""
+    offsets = []
+    off = 0
+    for name, shape in cfg.param_shapes():
+        n = int(np.prod(shape))
+        offsets.append({"name": name, "shape": list(shape),
+                        "offset": off, "numel": n})
+        off += n
+    align = WORLD * SHARD_ALIGN
+    padded = (off + align - 1) // align * align
+    return offsets, off, padded
+
+
+def export_preset(cfg: configs.ModelConfig, outdir: str, seed: int) -> None:
+    meta = PRESET_META[cfg.name]
+    print(f"preset {cfg.name}: {cfg.n_params():,} params, "
+          f"batch {meta['batch']}", flush=True)
+
+    for policy in POLICIES:
+        _write(os.path.join(outdir, f"{cfg.name}_train_{policy}.hlo.txt"),
+               lower_train(cfg, policy, meta["batch"],
+                           meta["lmhead_chunks"], meta["attn_chunks"]))
+    _write(os.path.join(outdir, f"{cfg.name}_fwd.hlo.txt"),
+           lower_fwd(cfg, meta["batch"]))
+    # FP8 inference path (Table 6: I → FP8 columns).
+    _write(os.path.join(outdir, f"{cfg.name}_fwd_fp8.hlo.txt"),
+           lower_fwd(cfg, meta["batch"], "fp8"))
+
+    offsets, total, padded = flat_layout(cfg)
+    shard = padded // WORLD
+    _write(os.path.join(outdir, f"{cfg.name}_adamw.hlo.txt"),
+           lower_adamw(shard))
+
+    # Flat initial parameters (bf16 grid), manifest order.
+    params = model.init_params(cfg, seed)
+    flat = np.zeros(padded, dtype=np.float32)
+    for ent in offsets:
+        flat[ent["offset"]:ent["offset"] + ent["numel"]] = \
+            np.asarray(params[ent["name"]], dtype=np.float32).ravel()
+    init_path = os.path.join(outdir, f"{cfg.name}_init.bin")
+    flat.tofile(init_path)
+    print(f"  wrote {init_path} ({flat.nbytes / 1e6:.2f} MB)", flush=True)
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "batch": meta["batch"],
+        "lmhead_chunks": meta["lmhead_chunks"],
+        "attn_chunks": meta["attn_chunks"],
+        "world": WORLD,
+        "params": offsets,
+        "total_numel": total,
+        "padded_numel": padded,
+        "shard_numel": shard,
+        "policies": list(POLICIES),
+        "abi_hash": hashlib.sha256(
+            json.dumps(offsets).encode()).hexdigest()[:16],
+        "artifacts": {
+            **{f"train_{p}": f"{cfg.name}_train_{p}.hlo.txt"
+               for p in POLICIES},
+            "fwd": f"{cfg.name}_fwd.hlo.txt",
+            "fwd_fp8": f"{cfg.name}_fwd_fp8.hlo.txt",
+            "adamw": f"{cfg.name}_adamw.hlo.txt",
+            "init": f"{cfg.name}_init.bin",
+        },
+    }
+    with open(os.path.join(outdir, f"{cfg.name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,e2e")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    _write(os.path.join(args.out, "quantize_selftest.hlo.txt"),
+           lower_quantize_selftest())
+    for name in args.presets.split(","):
+        export_preset(configs.EXECUTABLE[name], args.out, args.seed)
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

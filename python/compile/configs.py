@@ -1,0 +1,89 @@
+"""Model size presets, shared (via the artifact manifest) with the rust L3.
+
+``tiny``/``small``/``e2e`` are the *executable* presets — sized so CPU-PJRT
+training runs in seconds/minutes. The paper-scale presets (0.5B…32B,
+Qwen2.5-style shapes) exist for the memory planner and the performance
+simulator on the rust side; they are never lowered to HLO here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    seq_len: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    def param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Canonical (name, shape) order — the grad/flat-buffer ABI.
+
+        The rust coordinator reads this order from the manifest; any change
+        here is an ABI break caught by the manifest hash.
+        """
+        shapes: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model))]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            shapes += [
+                (p + "attn_norm", (self.d_model,)),
+                (p + "wq", (self.d_model, self.qkv_dim)),
+                (p + "wk", (self.d_model, self.qkv_dim)),
+                (p + "wv", (self.d_model, self.qkv_dim)),
+                (p + "wo", (self.qkv_dim, self.d_model)),
+                (p + "mlp_norm", (self.d_model,)),
+                (p + "wgate", (self.d_model, self.d_ff)),
+                (p + "wup", (self.d_model, self.d_ff)),
+                (p + "wdown", (self.d_ff, self.d_model)),
+            ]
+        shapes += [
+            ("final_norm", (self.d_model,)),
+            ("lm_head", (self.d_model, self.vocab)),
+        ]
+        return shapes
+
+    def n_params(self) -> int:
+        return sum(int(__import__("math").prod(s)) for _, s in self.param_shapes())
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# Executable presets (lowered to HLO, run by the rust runtime).
+TINY = ModelConfig("tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                   d_head=16, d_ff=64, seq_len=32)
+SMALL = ModelConfig("small", vocab=256, d_model=128, n_layers=4, n_heads=4,
+                    d_head=32, d_ff=384, seq_len=128)
+E2E = ModelConfig("e2e", vocab=512, d_model=384, n_layers=6, n_heads=6,
+                  d_head=64, d_ff=1152, seq_len=256)
+
+EXECUTABLE = {c.name: c for c in (TINY, SMALL, E2E)}
+
+# Paper-scale presets (Qwen2.5-style; planner/simulator only).
+PAPER_SCALE = {
+    "0.5B": ModelConfig("0.5B", vocab=151936, d_model=896, n_layers=24,
+                        n_heads=14, d_head=64, d_ff=4864, seq_len=2048),
+    "1.5B": ModelConfig("1.5B", vocab=151936, d_model=1536, n_layers=28,
+                        n_heads=12, d_head=128, d_ff=8960, seq_len=2048),
+    "3B": ModelConfig("3B", vocab=151936, d_model=2048, n_layers=36,
+                      n_heads=16, d_head=128, d_ff=11008, seq_len=2048),
+    "7B": ModelConfig("7B", vocab=152064, d_model=3584, n_layers=28,
+                      n_heads=28, d_head=128, d_ff=18944, seq_len=2048),
+    "14B": ModelConfig("14B", vocab=152064, d_model=5120, n_layers=48,
+                       n_heads=40, d_head=128, d_ff=13824, seq_len=2048),
+    "32B": ModelConfig("32B", vocab=152064, d_model=5120, n_layers=64,
+                       n_heads=40, d_head=128, d_ff=27648, seq_len=2048),
+}

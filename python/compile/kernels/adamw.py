@@ -1,0 +1,124 @@
+"""Fused AdamW Pallas kernel with stochastic rounding to the bf16 grid.
+
+Paper §3.1 "Reduced-precision optimizer states": moments m, v and master
+weights are stored in BF16; the f32→bf16 conversion uses stochastic
+rounding to stay unbiased, drawing from a counter-based generator so no RNG
+state needs to live on device ("Reproducibility" §3). One pass reads
+(p, m, v, g), updates Adam moments, applies decoupled weight decay, rounds
+all three outputs stochastically.
+
+All buffers are f32 *holding bf16-grid values* (see ref.py FP8 note).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _pick(n: int, target: int = 1024) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _rng_u32(counter, key):
+    x = counter * jnp.uint32(0x9E3779B9)
+    x = x ^ jnp.uint32(key)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _sr_bf16(x, counter, key):
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    r = _rng_u32(counter, key) & jnp.uint32(0xFFFF)
+    return lax.bitcast_convert_type((bits + r) & jnp.uint32(0xFFFF0000),
+                                    jnp.float32)
+
+
+def _adamw_kernel(scalars_ref, p_ref, m_ref, v_ref, g_ref,
+                  po_ref, mo_ref, vo_ref, *, block, n, key):
+    lr = scalars_ref[0]
+    beta1 = scalars_ref[1]
+    beta2 = scalars_ref[2]
+    eps = scalars_ref[3]
+    wd = scalars_ref[4]
+    bc1 = scalars_ref[5]       # 1 - beta1^t, precomputed on host
+    bc2 = scalars_ref[6]
+    counter_base = lax.bitcast_convert_type(scalars_ref[7], jnp.uint32)
+
+    g = g_ref[...]
+    m2 = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v2 = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * p_ref[...]
+    p2 = p_ref[...] - lr * upd
+
+    off = (pl.program_id(0) * block).astype(jnp.uint32)
+    idx = jax.lax.iota(jnp.uint32, block) + off + counter_base
+    po_ref[...] = _sr_bf16(p2, idx, key)
+    mo_ref[...] = _sr_bf16(m2, idx + jnp.uint32(n), key ^ 0x6D616D6D)
+    vo_ref[...] = _sr_bf16(v2, idx + jnp.uint32(2 * n), key ^ 0x76766172)
+
+
+def adamw_step_raw(p, m, v, g, scalars, key: int = 0x11A17,
+                   block: int = 4096):
+    """AOT entry point: scalars = [lr, beta1, beta2, eps, wd, bc1, bc2,
+    counter_bits(f32-bitcast u32)] prepared host-side by the rust
+    coordinator (bias correction on CPU, as in the paper)."""
+    n = p.shape[0]
+    b = _pick(n, block)
+    return pl.pallas_call(
+        functools.partial(_adamw_kernel, block=b, n=n, key=key),
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,))]
+        + [pl.BlockSpec((b,), lambda i: (i,))] * 4,
+        out_specs=[pl.BlockSpec((b,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=INTERPRET,
+    )(scalars, p.astype(jnp.float32), m.astype(jnp.float32),
+      v.astype(jnp.float32), g.astype(jnp.float32))
+
+
+def adamw_step(p, m, v, g, lr, beta1, beta2, eps, weight_decay, step,
+               counter_base, key: int = 0x11A17, block: int = 1024):
+    """Flat [N] AdamW update with SR-to-bf16 state; returns (p', m', v').
+
+    ``step`` is the 1-based optimizer step (for bias correction);
+    ``counter_base`` a uint32 scalar that the trainer advances by 3N per
+    step so random draws never repeat.
+    """
+    n = p.shape[0]
+    b = _pick(n, block)
+    bc1 = 1.0 - beta1 ** jnp.asarray(step, jnp.float32)
+    bc2 = 1.0 - beta2 ** jnp.asarray(step, jnp.float32)
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(beta1, jnp.float32),
+        jnp.asarray(beta2, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32),
+        bc1, bc2,
+        lax.bitcast_convert_type(jnp.asarray(counter_base, jnp.uint32),
+                                 jnp.float32),
+    ])
+    return pl.pallas_call(
+        functools.partial(_adamw_kernel, block=b, n=n, key=key),
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,))]
+        + [pl.BlockSpec((b,), lambda i: (i,))] * 4,
+        out_specs=[pl.BlockSpec((b,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=INTERPRET,
+    )(scalars, p.astype(jnp.float32), m.astype(jnp.float32),
+      v.astype(jnp.float32), g.astype(jnp.float32))

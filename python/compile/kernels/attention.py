@@ -1,0 +1,95 @@
+"""Blocked (flash-style) causal attention forward Pallas kernel.
+
+The paper uses cuDNN for SDPA; this kernel is the in-repo equivalent so the
+full stack has no external-kernel dependency. Online-softmax over KV blocks
+bounds the workspace to one [bq, bk] tile — the same property the paper
+exploits when *chunking* the cuDNN workspace (§3.1 "Chunking"): iterate
+over query slices, calling the kernel with a smaller workspace.
+
+TPU adaptation: the CUDA warps-per-row reduction becomes a sequential KV
+grid dimension with running (max, sum, acc) carried in the output tiles
+(index maps ignore the KV index, keeping them VMEM-resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+NEG_INF = -1e30
+
+
+def _pick(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale, bq, bk, kv_steps, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    q = q_ref[0]
+    k = k_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[0]                                   # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                     # [bq, 1]
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = o_ref[0] * alpha + jnp.dot(
+        p, v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 64, bk: int = 64):
+    """[BH, T, D] blocked causal attention; returns [BH, T, D] f32."""
+    bh, t, d = q.shape
+    bq = _pick(t, bq)
+    bk = _pick(t, bk)
+    kv_steps = t // bk
+    scale = 1.0 / (d ** 0.5)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          kv_steps=kv_steps, causal=causal),
+        grid=(bh, t // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, t, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, t, 1), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    return out

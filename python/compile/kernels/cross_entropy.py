@@ -1,0 +1,81 @@
+"""Fused cross-entropy forward+backward Pallas kernel.
+
+Paper §3: "we fuse the forward and backward pass of the cross-entropy loss
+into a single kernel [Renee, Liger], avoiding the need to materialize a
+huge per-token loss tensor". One pass over a block of rows computes the
+loss-sum contribution, the valid-token count, AND d(loss_sum)/dlogits.
+The token-mean division happens at the caller, which is what makes the
+paper's chunked LM-head (§3.1 "Chunking") correct: the chunk kernels only
+know the global count after all chunks ran.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _pick_rows(n: int, target: int = 256) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _ce_kernel(logits_ref, tgt_ref, dlogits_ref, loss_ref, count_ref, *,
+               ignore_index, vocab):
+    logits = logits_ref[...]
+    tgt = tgt_ref[...]
+    valid = tgt != ignore_index
+    tsafe = jnp.where(valid, tgt, 0)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1)
+    lse = m[:, 0] + jnp.log(z)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+              == tsafe[:, None])
+    tl = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    per_tok = jnp.where(valid, lse - tl, 0.0)
+    p = e / z[:, None]
+    dlogits_ref[...] = jnp.where(
+        valid[:, None], p - onehot.astype(jnp.float32), 0.0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[0] = 0.0
+        count_ref[0] = 0.0
+
+    loss_ref[0] += jnp.sum(per_tok)
+    count_ref[0] += jnp.sum(valid.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  ignore_index: int = -1, block_rows: int = 64):
+    """[N, V] logits, [N] int32 targets → (loss_sum, count, dlogits_unscaled)."""
+    n, vocab = logits.shape
+    br = _pick_rows(n, block_rows)
+    dlogits, loss, count = pl.pallas_call(
+        functools.partial(_ce_kernel, ignore_index=ignore_index, vocab=vocab),
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, vocab), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(logits.astype(jnp.float32), targets.astype(jnp.int32))
+    return loss[0], count[0], dlogits

@@ -1,0 +1,70 @@
+"""Blocked FP8-emulated matmul Pallas kernel.
+
+Stands in for cuBLAS FP8 TN GEMM (paper §3): operands arrive already on the
+FP8 grid with per-tensor scales; the kernel multiplies grid values with f32
+accumulation and applies ``sx·sw`` once in the epilogue — exactly the
+per-tensor-scaled GEMM semantics of cublasLtMatmul with
+CUBLASLT_MATMUL_DESC_{A,B}_SCALE_POINTER.
+
+TPU adaptation: the CUDA threadblock tiling becomes an (M/bm, N/bn, K/bk)
+BlockSpec grid; K is the innermost (sequential, ordered) grid dimension
+accumulating into the output tile, which stays resident in VMEM across K
+steps because its index map ignores the K index. interpret=True for CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _pick(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(sx_ref, sw_ref, x_ref, w_ref, o_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        o_ref[...] *= sx_ref[0] * sw_ref[0]
+
+
+def matmul_scaled(qx: jax.Array, sx: jax.Array, qw: jax.Array, sw: jax.Array,
+                  bm: int = 256, bn: int = 256, bk: int = 256) -> jax.Array:
+    """(qx[M,K] @ qw[K,N]) · (sx·sw) with f32 tile accumulation."""
+    m, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2, (qx.shape, qw.shape)
+    bm = _pick(m, bm)
+    bn = _pick(n, bn)
+    bk = _pick(k, bk)
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(jnp.reshape(sx.astype(jnp.float32), (1,)),
+      jnp.reshape(sw.astype(jnp.float32), (1,)),
+      qx.astype(jnp.float32), qw.astype(jnp.float32))

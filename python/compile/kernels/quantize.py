@@ -1,0 +1,175 @@
+"""Pallas kernels for JIT tensor-level absmax scaling + FP8 quantization.
+
+Paper §3 "Overview": LLMQ uses just-in-time tensor-level absmax scaling —
+one kernel performs the global |x| reduction, a second rescales so the
+largest magnitude maps to the largest representable FP8 value. On consumer
+cards FP8 GEMM only supports the TN layout, so the backward pass needs
+explicit transposes, which LLMQ fuses with quantization
+(``transpose_quantize``).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA global reduction
+(atomics-free two-phase, for determinism) becomes a sequential-grid Pallas
+reduction — TPU grids execute in order, so accumulating into the output ref
+across grid steps is deterministic by construction. Tiles are sized for
+VMEM via BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls.
+
+
+def _round_fp8_block(a: jax.Array, fmt: ref.Fp8Format) -> jax.Array:
+    """In-kernel RNE-to-FP8 on a block (same math as ref.round_to_fp8)."""
+    sign = jnp.sign(a)
+    mag = jnp.minimum(jnp.abs(a), fmt.max_val)
+    bits = lax.bitcast_convert_type(mag, jnp.uint32)
+    e = (bits >> jnp.uint32(23)).astype(jnp.int32) - 127
+    e_eff = jnp.maximum(e, 1 - fmt.bias)
+    # exact 2^(e_eff - man_bits) via bit construction (see ref.round_to_fp8)
+    ulp = lax.bitcast_convert_type(
+        ((e_eff - fmt.man_bits + 127) << 23).astype(jnp.uint32), jnp.float32)
+    q = jnp.round(mag / ulp) * ulp
+    q = jnp.minimum(q, fmt.max_val)
+    q = jnp.where(mag == 0.0, 0.0, q)
+    return sign * q
+
+
+def _pick_block(n: int, target: int = 256) -> int:
+    """Largest divisor of n that is <= target (VMEM-sized row block)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# absmax: two-phase deterministic global reduction.
+# ---------------------------------------------------------------------------
+
+
+def _absmax_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0] = 0.0
+
+    o_ref[0] = jnp.maximum(o_ref[0], jnp.max(jnp.abs(x_ref[...])))
+
+
+def absmax(x: jax.Array, block_rows: int = 16384) -> jax.Array:
+    """Global absmax of a tensor via a sequential-grid Pallas reduction."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    b = _pick_block(n, block_rows)
+    grid = n // b
+    out = pl.pallas_call(
+        _absmax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=INTERPRET,
+    )(flat.astype(jnp.float32))
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# quantize: scale into the representable range, RNE cast to the FP8 grid.
+# The absmax arrives as a scalar operand (paper: recompute passes reuse the
+# forward-pass statistics, so no second global reduction is needed).
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kernel(amax_ref, x_ref, q_ref, s_ref, *, fmt: ref.Fp8Format):
+    amax = amax_ref[0]
+    scale = jnp.where(amax > 0, amax / fmt.max_val, 1.0)
+    q_ref[...] = _round_fp8_block(x_ref[...] / scale, fmt)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _write_scale():
+        s_ref[0] = scale
+
+
+def quantize_with_amax(x: jax.Array, amax: jax.Array, fmt: ref.Fp8Format,
+                       block_rows: int = 16384):
+    """Quantize with a known absmax; returns (q, scale) with x ≈ q·scale."""
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    b = _pick_block(n, block_rows)
+    q, s = pl.pallas_call(
+        functools.partial(_quantize_kernel, fmt=fmt),
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(jnp.reshape(amax.astype(jnp.float32), (1,)), flat)
+    return q.reshape(shape), s[0]
+
+
+def quantize(x: jax.Array, fmt: ref.Fp8Format):
+    """JIT absmax quantize (reduction kernel + scale kernel), (q, scale)."""
+    return quantize_with_amax(x, absmax(x), fmt)
+
+
+# ---------------------------------------------------------------------------
+# Fused transpose + quantize (paper §3: FP8 gemm on consumer cards is
+# TN-only, so the backward operands must be transposed; LLMQ fuses the
+# transpose with the quantization to avoid an extra pass over HBM).
+# ---------------------------------------------------------------------------
+
+
+def _transpose_quantize_kernel(amax_ref, x_ref, q_ref, s_ref, *, fmt):
+    amax = amax_ref[0]
+    scale = jnp.where(amax > 0, amax / fmt.max_val, 1.0)
+    q_ref[...] = _round_fp8_block(x_ref[...].T / scale, fmt)
+
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _write_scale():
+        s_ref[0] = scale
+
+
+def transpose_quantize(x: jax.Array, amax: jax.Array, fmt: ref.Fp8Format,
+                       block: int = 256):
+    """Fused x.T quantization for a 2-D tensor; returns (qT, scale)."""
+    assert x.ndim == 2
+    m, n = x.shape
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    q, s = pl.pallas_call(
+        functools.partial(_transpose_quantize_kernel, fmt=fmt),
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (j, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(jnp.reshape(amax.astype(jnp.float32), (1,)), x.astype(jnp.float32))
+    return q, s[0]

@@ -1,0 +1,272 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions define the *semantics* the kernels must match bit-for-bit
+(quantization codecs, stochastic rounding) or to tight float tolerance
+(matmul, norm, attention). pytest/hypothesis in ``python/tests`` sweeps
+shapes and dtypes against these.
+
+FP8 note: the paper trains with hardware E4M3/E5M2 tensor cores. We have no
+FP8 hardware, so the codecs here are bit-exact *software emulations*: they
+take f32 arrays and return f32 arrays whose values lie exactly on the FP8
+grid (round-to-nearest-even, saturating).  All HLO stays in f32/u32, which
+the xla_extension 0.5.1 CPU runtime is guaranteed to parse and execute.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# FP8 formats (paper §2, §3): E4M3 (bias 7, max 448) and E5M2 (bias 15,
+# max 57344). E4M3 is the "fn" variant: no infinities, saturate at max.
+# ---------------------------------------------------------------------------
+
+
+class Fp8Format(NamedTuple):
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    max_val: float
+
+
+E4M3 = Fp8Format("e4m3", 4, 3, 7, 448.0)
+E5M2 = Fp8Format("e5m2", 5, 2, 15, 57344.0)
+
+FORMATS = {"e4m3": E4M3, "e5m2": E5M2}
+
+
+def round_to_fp8(x: jax.Array, fmt: Fp8Format) -> jax.Array:
+    """Round f32 values to the nearest FP8 grid point (RNE, saturating).
+
+    Handles normals and FP8 subnormals; returns f32 holding exact FP8
+    values. Zero (and signed zero) maps to zero. NaN propagates.
+    """
+    x = x.astype(jnp.float32)
+    sign = jnp.sign(x)
+    a = jnp.abs(x)
+    a = jnp.minimum(a, fmt.max_val)  # saturate (absmax scaling → no clip)
+    # Unbiased f32 exponent via bit twiddling: floor(log2 a) for normals.
+    bits = lax.bitcast_convert_type(a, jnp.uint32)
+    e_f32 = (bits >> jnp.uint32(23)).astype(jnp.int32) - 127
+    # Effective exponent is clamped below by the min-normal exponent, which
+    # makes the same formula cover FP8 subnormals (fixed ulp below 2^(1-bias)).
+    e_eff = jnp.maximum(e_f32, 1 - fmt.bias)
+    # exact ulp = 2^(e_eff - man_bits), built from bits (jnp.exp2 on CPU
+    # is not exactly 2^k for integer k!)
+    ulp = lax.bitcast_convert_type(
+        ((e_eff - fmt.man_bits + 127) << 23).astype(jnp.uint32), jnp.float32)
+    q = jnp.round(a / ulp) * ulp  # jnp.round == round-half-even
+    q = jnp.minimum(q, fmt.max_val)
+    q = jnp.where(a == 0.0, 0.0, q)
+    out = sign * q
+    return jnp.where(jnp.isnan(x), jnp.float32(jnp.nan), out)
+
+
+def round_to_bf16(x: jax.Array) -> jax.Array:
+    """RNE f32 -> bf16 grid (returned as f32). Bit-exact to bf16 cast."""
+    x = x.astype(jnp.float32)
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    rnd = bits + jnp.uint32(0x7FFF) + ((bits >> jnp.uint32(16)) & jnp.uint32(1))
+    out = lax.bitcast_convert_type(rnd & jnp.uint32(0xFFFF0000), jnp.float32)
+    return jnp.where(jnp.isnan(x), jnp.float32(jnp.nan), out)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG (paper §3 "Reproducibility"): deterministic pseudo-random
+# numbers from (counter, key) with no internal state. murmur3-finalizer mix,
+# mirrored exactly in rust/src/precision/philox.rs.
+# ---------------------------------------------------------------------------
+
+
+def counter_rng_u32(counter: jax.Array, key: int) -> jax.Array:
+    """Map uint32 counters to uint32 pseudo-random values (stateless)."""
+    x = counter.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x = x ^ jnp.uint32(key & 0xFFFFFFFF)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def stochastic_round_bf16(x: jax.Array, counter_base, key: int) -> jax.Array:
+    """Stochastically round f32 -> bf16 grid (as f32), unbiased.
+
+    counter_base: scalar uint32; element i uses counter_base + i (row-major).
+    """
+    x = x.astype(jnp.float32)
+    n = x.size
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(x.shape)
+    r = counter_rng_u32(idx + jnp.uint32(counter_base), key)
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    rnd = bits + (r & jnp.uint32(0xFFFF))
+    out = lax.bitcast_convert_type(rnd & jnp.uint32(0xFFFF0000), jnp.float32)
+    return jnp.where(jnp.isnan(x), jnp.float32(jnp.nan), out)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-level just-in-time absmax scaling (paper §3 "Overview").
+# ---------------------------------------------------------------------------
+
+
+def absmax(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+def quantize_absmax(x: jax.Array, fmt: Fp8Format):
+    """JIT tensor-scaled quantize: returns (q, scale) with x ≈ q * scale.
+
+    q holds FP8-grid values in [-max, max]; scale = amax / fmt.max so the
+    largest magnitude maps exactly to the largest representable value.
+    An all-zero tensor gets scale 1.
+    """
+    x = x.astype(jnp.float32)
+    amax = absmax(x)
+    scale = jnp.where(amax > 0, amax / fmt.max_val, 1.0).astype(jnp.float32)
+    q = round_to_fp8(x / scale, fmt)
+    return q, scale
+
+
+def quantize_with_amax(x: jax.Array, amax: jax.Array, fmt: Fp8Format):
+    """Quantize with a precomputed absmax (paper: recomputation keeps the
+    forward-pass statistics so the global reduction is skipped)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / fmt.max_val, 1.0).astype(jnp.float32)
+    return round_to_fp8(x / scale, fmt), scale
+
+
+def fp8_matmul(x: jax.Array, w: jax.Array, fmt_x: Fp8Format = E4M3,
+               fmt_w: Fp8Format = E4M3) -> jax.Array:
+    """Reference FP8 GEMM: quantize both operands (JIT absmax), multiply on
+    the FP8 grid with f32 accumulation, rescale. Mirrors cuBLAS FP8 TN gemm
+    with per-tensor scale factors."""
+    qx, sx = quantize_absmax(x, fmt_x)
+    qw, sw = quantize_absmax(w, fmt_w)
+    acc = jnp.matmul(qx, qw, preferred_element_type=jnp.float32)
+    return acc * (sx * sw)
+
+
+# ---------------------------------------------------------------------------
+# Fused ops (paper §3: "we fuse all successive operations that are not
+# either a global reduction or involve a matrix multiplication", with absmax
+# side outputs).
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+
+
+def rmsnorm_residual(x: jax.Array, res: jax.Array, gamma: jax.Array,
+                     eps: float = 1e-6):
+    """Fused residual-add + RMSNorm; returns (y, new_res, absmax(y))."""
+    new_res = x.astype(jnp.float32) + res.astype(jnp.float32)
+    y = rmsnorm(new_res, gamma, eps)
+    return y, new_res, absmax(y)
+
+
+def rmsnorm_bwd(x: jax.Array, gamma: jax.Array, dy: jax.Array,
+                eps: float = 1e-6):
+    """Analytic RMSNorm backward: returns (dx, dgamma)."""
+    x = x.astype(jnp.float32)
+    dy = dy.astype(jnp.float32)
+    g = gamma.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    r = lax.rsqrt(ms + eps)
+    xhat = x * r
+    dxhat = dy * g
+    dx = r * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    dgamma = jnp.sum(dy * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx, dgamma
+
+
+def swiglu(gate: jax.Array, up: jax.Array):
+    """SwiGLU nonlinearity silu(gate) * up; returns (y, absmax(y))."""
+    g = gate.astype(jnp.float32)
+    u = up.astype(jnp.float32)
+    y = g * jax.nn.sigmoid(g) * u
+    return y, absmax(y)
+
+
+def swiglu_bwd(gate: jax.Array, up: jax.Array, dy: jax.Array):
+    g = gate.astype(jnp.float32)
+    u = up.astype(jnp.float32)
+    dy = dy.astype(jnp.float32)
+    s = jax.nn.sigmoid(g)
+    silu = g * s
+    dsilu = s * (1.0 + g * (1.0 - s))
+    return dy * u * dsilu, dy * silu
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True):
+    """Scaled dot-product attention, f32, causal. [B,H,T,D] layout."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        t = q.shape[-2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, ignore_index: int = -1):
+    """Fused CE fwd/bwd (Liger-style, paper §3): returns
+    (loss_sum, count, dlogits_unscaled).
+
+    dlogits_unscaled is d(sum of per-token loss)/dlogits; callers divide by
+    the global valid-token count (which chunked callers only know globally).
+    """
+    logits = logits.astype(jnp.float32)
+    n, vocab = logits.shape
+    valid = targets != ignore_index
+    tsafe = jnp.where(valid, targets, 0)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    tl = jnp.take_along_axis(logits, tsafe[:, None], axis=-1)[:, 0]
+    per_tok = jnp.where(valid, lse - tl, 0.0)
+    loss_sum = jnp.sum(per_tok)
+    count = jnp.sum(valid).astype(jnp.float32)
+    p = jnp.exp(logits - lse[:, None])
+    onehot = jax.nn.one_hot(tsafe, vocab, dtype=jnp.float32)
+    dlogits = jnp.where(valid[:, None], p - onehot, 0.0)
+    return loss_sum, count, dlogits
+
+
+def adamw_step(p, m, v, g, lr, beta1, beta2, eps, weight_decay, step,
+               counter_base, key, stochastic: bool = True):
+    """AdamW with bf16-grid moments & master weights via stochastic rounding
+    (paper §3.1 "Reduced-precision optimizer states"). All arrays f32 holding
+    bf16-grid values; returns (p', m', v')."""
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    t = jnp.asarray(step, dtype=jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    mh = m2 / bc1
+    vh = v2 / bc2
+    upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p
+    p2 = p - lr * upd
+    if stochastic:
+        n = p.size
+        p2 = stochastic_round_bf16(p2, counter_base, key)
+        m2 = stochastic_round_bf16(m2, counter_base + n, key ^ 0x6D616D6D)
+        v2 = stochastic_round_bf16(v2, counter_base + 2 * n, key ^ 0x76766172)
+    return p2, m2, v2
+
+
+def global_norm(tensors) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(t.astype(jnp.float32) ** 2) for t in tensors))

@@ -1,0 +1,84 @@
+"""Fused SwiGLU Pallas kernels with absmax side output.
+
+Paper §3: "all our non-linearity operators have an additional output
+parameter that returns the abs-max of its result" — so the subsequent FP8
+quantization needs no extra global reduction. The backward kernel fuses the
+silu-derivative math into one pass over (gate, up, dy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _pick_rows(n: int, target: int = 128) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(g_ref, u_ref, y_ref, amax_ref):
+    g = g_ref[...]
+    y = g * jax.nn.sigmoid(g) * u_ref[...]
+    y_ref[...] = y
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        amax_ref[0] = 0.0
+
+    amax_ref[0] = jnp.maximum(amax_ref[0], jnp.max(jnp.abs(y)))
+
+
+def swiglu(gate: jax.Array, up: jax.Array, block_rows: int = 512):
+    """[N, F] silu(gate)·up; returns (y, absmax(y))."""
+    n, f = gate.shape
+    br = _pick_rows(n, block_rows)
+    y, amax = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, f), lambda i: (i, 0)),
+            pl.BlockSpec((br, f), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, f), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, f), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(gate.astype(jnp.float32), up.astype(jnp.float32))
+    return y, amax[0]
+
+
+def _bwd_kernel(g_ref, u_ref, dy_ref, dg_ref, du_ref):
+    g = g_ref[...]
+    u = u_ref[...]
+    dy = dy_ref[...]
+    s = jax.nn.sigmoid(g)
+    silu = g * s
+    dg_ref[...] = dy * u * (s * (1.0 + g * (1.0 - s)))
+    du_ref[...] = dy * silu
+
+
+def swiglu_bwd(gate: jax.Array, up: jax.Array, dy: jax.Array,
+               block_rows: int = 512):
+    """Returns (dgate, dup)."""
+    n, f = gate.shape
+    br = _pick_rows(n, block_rows)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, f), lambda i: (i, 0))] * 3,
+        out_specs=[pl.BlockSpec((br, f), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n, f), jnp.float32)] * 2,
+        interpret=INTERPRET,
+    )(gate.astype(jnp.float32), up.astype(jnp.float32),
+      dy.astype(jnp.float32))

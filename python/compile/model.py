@@ -1,0 +1,163 @@
+"""L2: Qwen-style transformer forward/backward in JAX, calling L1 kernels.
+
+Mixed-precision layout mirrors the paper exactly (§3 "Overview"):
+  * transformer-block matmuls (QKV, O, gate/up/down) run under the GEMM
+    precision policy (bf16 / fp8-E4M3 / fp8 with E5M2 grads);
+  * nonlinearities (SwiGLU), SDPA, the embedding and the LM-head, and
+    gradient accumulation stay in BF16;
+  * fused residual+RMSNorm and SwiGLU kernels emit absmax side outputs
+    that would feed delayed-free FP8 quantization of the next GEMM.
+
+This file is build-time only: ``aot.py`` lowers ``train_step`` /
+``forward_logits`` to HLO text; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ops, ref
+
+Params = dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Initialization (GPT-2-style scaled init, deterministic from an int seed).
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    scale_out = 0.02 / (2 * cfg.n_layers) ** 0.5
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("wo", "wdown")):
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * scale_out)
+        else:
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+    # Master weights live on the bf16 grid (paper §3.1).
+    return {k: ref.round_to_bf16(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_cache(cfg: ModelConfig, t: int):
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (cfg.rope_theta ** (
+        jnp.arange(0, cfg.d_head, 2, dtype=jnp.float32) / cfg.d_head))
+    ang = pos * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, H, T, Dh]; rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+
+def block(params: Params, i: int, h: jax.Array, res: jax.Array,
+          cfg: ModelConfig, policy: ops.GemmPolicy, b: int, t: int,
+          attn_chunks: int = 1):
+    """One pre-norm block on flattened [B·T, D]; returns (h', res')."""
+    p = lambda s: params[f"layers.{i}.{s}"]
+
+    # --- attention half: fused residual+norm feeds policy GEMMs ---
+    x, res, _amax = ops.rmsnorm_residual(h, res, p("attn_norm"))
+    q = ops.gemm(x, p("wq"), policy)
+    k = ops.gemm(x, p("wk"), policy)
+    v = ops.gemm(x, p("wv"), policy)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    cos, sin = rope_cache(cfg, t)
+    qh = apply_rope(heads(q), cos, sin)
+    kh = apply_rope(heads(k), cos, sin)
+    # SDPA stays BF16 ("cuDNN"); chunked over query slices when configured.
+    o = ops.sdpa_chunked(ref.round_to_bf16(qh), ref.round_to_bf16(kh),
+                         ref.round_to_bf16(heads(v)), attn_chunks)
+    o = o.transpose(0, 2, 1, 3).reshape(b * t, cfg.qkv_dim)
+    attn_out = ops.gemm(o, p("wo"), policy)
+
+    # --- MLP half ---
+    x, res, _amax = ops.rmsnorm_residual(attn_out, res, p("mlp_norm"))
+    gate = ops.gemm(x, p("wgate"), policy)
+    up = ops.gemm(x, p("wup"), policy)
+    y, _amax = ops.swiglu(gate, up)
+    mlp_out = ops.gemm(y, p("wdown"), policy)
+    return mlp_out, res
+
+
+def trunk(params: Params, tokens: jax.Array, cfg: ModelConfig,
+          policy: ops.GemmPolicy, attn_chunks: int = 1,
+          remat_blocks: bool = False) -> jax.Array:
+    """Embedding + all blocks + final norm; returns [B·T, D] hidden."""
+    b, t = tokens.shape
+    h = params["embed"][tokens.reshape(-1)]          # BF16 embedding lookup
+    res = jnp.zeros_like(h)
+
+    blk = block
+    if remat_blocks:
+        # Paper's "Block" recompute policy: only the FFN residual survives
+        # the forward pass; everything else is recomputed in backward.
+        blk = jax.checkpoint(block, static_argnums=(1, 4, 5, 6, 7, 8))
+
+    for i in range(cfg.n_layers):
+        h, res = blk(params, i, h, res, cfg, policy, b, t, attn_chunks)
+
+    final = ops.rmsnorm(h + res, params["final_norm"])
+    return final
+
+
+def loss_fn(params: Params, tokens: jax.Array, targets: jax.Array,
+            cfg: ModelConfig, policy: ops.GemmPolicy,
+            lmhead_chunks: int = 4, attn_chunks: int = 1,
+            remat_blocks: bool = False) -> jax.Array:
+    """Token-mean CE loss via the chunked fused LM-head (never materializes
+    full logits in residuals)."""
+    h = trunk(params, tokens, cfg, policy, attn_chunks, remat_blocks)
+    return ops.lm_head_loss(h, params["lm_head"], targets.reshape(-1),
+                            lmhead_chunks)
+
+
+def forward_logits(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                   policy: ops.GemmPolicy = "bf16") -> jax.Array:
+    """Inference forward returning [B, T, V] logits (for eval/decoding)."""
+    b, t = tokens.shape
+    h = trunk(params, tokens, cfg, policy)
+    logits = ops.gemm(h, params["lm_head"], "bf16")
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def train_step(params: Params, tokens: jax.Array, targets: jax.Array,
+               cfg: ModelConfig, policy: ops.GemmPolicy,
+               lmhead_chunks: int = 4, attn_chunks: int = 1,
+               remat_blocks: bool = False):
+    """Fused fwd+bwd: returns (loss, grads) with grads on the bf16 grid
+    (paper: gradient accumulation in BF16)."""
+    loss, grads = jax.value_and_grad(loss_fn)(
+        params, tokens, targets, cfg, policy, lmhead_chunks, attn_chunks,
+        remat_blocks)
+    grads = {k: ref.round_to_bf16(v) for k, v in grads.items()}
+    return loss, grads

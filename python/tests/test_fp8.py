@@ -1,0 +1,135 @@
+"""Property tests for the FP8/BF16 codecs and the counter RNG (ref.py) —
+the numeric foundation everything else builds on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+FMTS = [ref.E4M3, ref.E5M2]
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+class TestRoundToFp8:
+    def test_exact_values_fixed(self, fmt):
+        for v in [0.0, 1.0, -1.0, 0.5, 2.0, fmt.max_val]:
+            assert float(ref.round_to_fp8(jnp.float32(v), fmt)) == v
+
+    def test_saturates(self, fmt):
+        assert float(ref.round_to_fp8(jnp.float32(1e9), fmt)) == fmt.max_val
+        assert float(ref.round_to_fp8(jnp.float32(-1e9), fmt)) == -fmt.max_val
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(-1048576.0, 1048576.0, allow_nan=False, width=32))
+    def test_idempotent(self, fmt, x):
+        q = ref.round_to_fp8(jnp.float32(x), fmt)
+        q2 = ref.round_to_fp8(q, fmt)
+        assert np.asarray(q).tobytes() == np.asarray(q2).tobytes()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(0.0009765625, 400.0, allow_nan=False, width=32))
+    def test_half_ulp_error(self, fmt, x):
+        q = float(ref.round_to_fp8(jnp.float32(x), fmt))
+        # RNE: |x - q| <= ulp(x)/2 with ulp = 2^(floor(log2 x) - man_bits)
+        import math
+
+        e = max(math.floor(math.log2(abs(x))), 1 - fmt.bias)
+        ulp = 2.0 ** (e - fmt.man_bits)
+        assert abs(x - q) <= ulp / 2 + 1e-12
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.floats(0.0009765625, 448.0, width=32))
+    def test_sign_symmetry(self, fmt, x):
+        qp = float(ref.round_to_fp8(jnp.float32(x), fmt))
+        qn = float(ref.round_to_fp8(jnp.float32(-x), fmt))
+        assert qp == -qn
+
+    def test_grid_count(self, fmt):
+        # Distinct magnitudes on the grid within (0, max]: every code with
+        # mantissa+exponent combination reachable by rounding a dense sweep.
+        xs = jnp.linspace(-fmt.max_val, fmt.max_val, 400_001)
+        q = np.unique(np.asarray(ref.round_to_fp8(xs, fmt)))
+        # e.g. E4M3 has ~ 2*(15*8+7) ≈ 253 finite values representable.
+        assert 100 < len(q) <= 256
+
+
+class TestBf16:
+    def test_matches_jnp_cast(self):
+        xs = np.random.RandomState(0).randn(4096).astype(np.float32) * 100
+        ours = np.asarray(ref.round_to_bf16(jnp.asarray(xs)))
+        theirs = np.asarray(jnp.asarray(xs).astype(jnp.bfloat16).astype(jnp.float32))
+        assert np.array_equal(ours, theirs)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.floats(-1e30, 1e30, allow_nan=False, allow_infinity=False, width=64))
+    def test_idempotent(self, x):
+        a = float(ref.round_to_bf16(jnp.float32(x)))
+        b = float(ref.round_to_bf16(jnp.float32(a)))
+        assert a == b or (np.isnan(a) and np.isnan(b))
+
+
+class TestStochasticRounding:
+    def test_unbiased(self):
+        x = jnp.full((20000,), 1.00390625, jnp.float32)  # between bf16 points
+        out = ref.stochastic_round_bf16(x, 0, 0x11A17)
+        assert abs(float(jnp.mean(out)) - 1.00390625) < 1e-4
+
+    def test_deterministic(self):
+        x = jnp.asarray(np.random.RandomState(1).randn(256).astype(np.float32))
+        a = np.asarray(ref.stochastic_round_bf16(x, 7, 3))
+        b = np.asarray(ref.stochastic_round_bf16(x, 7, 3))
+        assert np.array_equal(a, b)
+        c = np.asarray(ref.stochastic_round_bf16(x, 8, 3))
+        assert not np.array_equal(a, c)
+
+    def test_lands_on_grid(self):
+        x = jnp.asarray(np.random.RandomState(2).randn(512).astype(np.float32))
+        out = ref.stochastic_round_bf16(x, 0, 1)
+        grid = ref.round_to_bf16(out)
+        assert np.array_equal(np.asarray(out), np.asarray(grid))
+
+
+class TestQuantizeAbsmax:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 300), st.floats(0.0009765625, 1024.0, width=32))
+    def test_amax_maps_to_max(self, n, scale_mag):
+        rng = np.random.RandomState(n)
+        x = (rng.randn(n) * scale_mag).astype(np.float32)
+        q, s = ref.quantize_absmax(jnp.asarray(x), ref.E4M3)
+        if np.abs(x).max() > 0:
+            assert np.abs(np.asarray(q)).max() == pytest.approx(448.0)
+            # reconstruction error bounded by half an ulp of the scale
+            err = np.abs(np.asarray(q) * float(s) - x)
+            assert err.max() <= float(s) * 448.0 / 8.0
+
+    def test_zero_tensor(self):
+        q, s = ref.quantize_absmax(jnp.zeros(16), ref.E4M3)
+        assert float(s) == 1.0
+        assert np.all(np.asarray(q) == 0)
+
+    def test_known_amax_skips_reduction(self):
+        x = jnp.asarray(np.random.RandomState(3).randn(64).astype(np.float32))
+        amax = ref.absmax(x)
+        q1, s1 = ref.quantize_absmax(x, ref.E4M3)
+        q2, s2 = ref.quantize_with_amax(x, amax, ref.E4M3)
+        assert np.array_equal(np.asarray(q1), np.asarray(q2))
+        assert float(s1) == float(s2)
+
+
+class TestCounterRng:
+    def test_rust_parity_fixture(self):
+        # Must match rust/src/precision/philox.rs::parity_fixture
+        got = [int(ref.counter_rng_u32(jnp.uint32(c), 0x11A17)) for c in range(4)]
+        assert got == [4173432441, 3468058597, 3409582607, 2989545819]
+
+    def test_uniformity(self):
+        n = 50000
+        vals = np.asarray(
+            ref.counter_rng_u32(jnp.arange(n, dtype=jnp.uint32), 9)
+        ).astype(np.float64) / 2**32
+        assert abs(vals.mean() - 0.5) < 0.01
+        hist, _ = np.histogram(vals, bins=16, range=(0, 1))
+        assert hist.min() > n / 16 * 0.9

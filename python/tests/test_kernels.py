@@ -1,0 +1,257 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py): hypothesis sweeps over
+shapes; assert_allclose against ref. The CORE L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (adamw as ak, attention as atk,
+                             cross_entropy as ck, matmul as mk, ops,
+                             quantize as qk, ref, rmsnorm as rk, swiglu as sk)
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 7), st.integers(1, 150), st.integers(0, 2**31))
+def test_absmax_kernel_exact(rows, cols, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    x = arr(rng, rows, cols, scale=10.0)
+    assert float(qk.absmax(x)) == float(ref.absmax(x))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(2, 120), st.sampled_from(["e4m3", "e5m2"]), st.integers(0, 999))
+def test_quantize_kernel_matches_ref(n, fmt_name, seed):
+    fmt = ref.FORMATS[fmt_name]
+    rng = np.random.RandomState(seed)
+    x = arr(rng, n, scale=5.0)
+    q, s = qk.quantize(x, fmt)
+    # grid values must match ref under the kernel's own scale (scale can
+    # differ by 1 ulp from eager division)
+    exp, _ = ref.quantize_with_amax(x, s * fmt.max_val, fmt)
+    assert_allclose(np.asarray(q), np.asarray(exp), rtol=1e-6, atol=1e-7)
+    assert np.abs(np.asarray(q)).max() <= fmt.max_val
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 999))
+def test_transpose_quantize_fused(m, n, seed):
+    rng = np.random.RandomState(seed)
+    x = arr(rng, m, n, scale=3.0)
+    amax = ref.absmax(x)
+    qt, s = qk.transpose_quantize(x, amax, ref.E4M3)
+    exp, _ = ref.quantize_with_amax(x, amax, ref.E4M3)
+    assert qt.shape == (n, m)
+    assert_allclose(np.asarray(qt), np.asarray(exp).T, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused norm / swiglu
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 65), st.sampled_from([8, 32, 96]), st.integers(0, 999))
+def test_rmsnorm_residual_fwd(rows, d, seed):
+    rng = np.random.RandomState(seed)
+    x, res, g = arr(rng, rows, d), arr(rng, rows, d), arr(rng, d)
+    y, nres, amax = rk.rmsnorm_residual(x, res, g)
+    yr, nresr, amaxr = ref.rmsnorm_residual(x, res, g)
+    assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    assert_allclose(np.asarray(nres), np.asarray(nresr), atol=1e-6)
+    assert abs(float(amax) - float(amaxr)) < 2e-5
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 65), st.sampled_from([8, 48]), st.integers(0, 999))
+def test_rmsnorm_bwd(rows, d, seed):
+    rng = np.random.RandomState(seed)
+    x, g, dy = arr(rng, rows, d), arr(rng, d), arr(rng, rows, d)
+    dx, dg = rk.rmsnorm_bwd(x, g, dy)
+    dxr, dgr = ref.rmsnorm_bwd(x, g, dy)
+    assert_allclose(np.asarray(dx), np.asarray(dxr), atol=3e-5)
+    assert_allclose(np.asarray(dg), np.asarray(dgr), atol=3e-4)
+
+
+def test_rmsnorm_bwd_matches_autodiff():
+    rng = np.random.RandomState(0)
+    x, g = arr(rng, 16, 24), arr(rng, 24)
+    dy = arr(rng, 16, 24)
+    f = lambda x, g: jnp.sum(ref.rmsnorm(x, g) * dy)
+    dxr, dgr = jax.grad(f, argnums=(0, 1))(x, g)
+    dx, dg = rk.rmsnorm_bwd(x, g, dy)
+    assert_allclose(np.asarray(dx), np.asarray(dxr), atol=2e-5)
+    assert_allclose(np.asarray(dg), np.asarray(dgr), atol=2e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 65), st.sampled_from([8, 64]), st.integers(0, 999))
+def test_swiglu_fwd_bwd(rows, f, seed):
+    rng = np.random.RandomState(seed)
+    g, u, dy = arr(rng, rows, f), arr(rng, rows, f), arr(rng, rows, f)
+    y, amax = sk.swiglu(g, u)
+    yr, amaxr = ref.swiglu(g, u)
+    assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    assert abs(float(amax) - float(amaxr)) < 2e-5
+    dg, du = sk.swiglu_bwd(g, u, dy)
+    dgr, dur = ref.swiglu_bwd(g, u, dy)
+    assert_allclose(np.asarray(dg), np.asarray(dgr), atol=2e-5)
+    assert_allclose(np.asarray(du), np.asarray(dur), atol=2e-5)
+
+
+def test_swiglu_bwd_matches_autodiff():
+    rng = np.random.RandomState(1)
+    g, u, dy = arr(rng, 8, 16), arr(rng, 8, 16), arr(rng, 8, 16)
+    f = lambda g, u: jnp.sum(ref.swiglu(g, u)[0] * dy)
+    dgr, dur = jax.grad(f, argnums=(0, 1))(g, u)
+    dg, du = sk.swiglu_bwd(g, u, dy)
+    assert_allclose(np.asarray(dg), np.asarray(dgr), atol=2e-5)
+    assert_allclose(np.asarray(du), np.asarray(dur), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 48), st.integers(1, 48),
+       st.integers(0, 999))
+def test_matmul_scaled_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    qx, sx = ref.quantize_absmax(arr(rng, m, k), ref.E4M3)
+    qw, sw = ref.quantize_absmax(arr(rng, k, n), ref.E4M3)
+    got = mk.matmul_scaled(qx, sx, qw, sw, bm=16, bn=16, bk=16)
+    exp = jnp.matmul(qx, qw) * (sx * sw)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-6, atol=1e-5)
+
+
+def test_fp8_matmul_error_bounded():
+    # end-to-end fp8 gemm error vs f32 matmul stays within quantization
+    # noise (relative Frobenius error ~ 2-4% for E4M3).
+    rng = np.random.RandomState(0)
+    x, w = arr(rng, 64, 64), arr(rng, 64, 64)
+    exact = np.asarray(jnp.matmul(x, w))
+    got = np.asarray(ref.fp8_matmul(x, w))
+    rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# cross entropy + attention + adamw
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 33), st.sampled_from([11, 64]), st.integers(0, 999))
+def test_cross_entropy_kernel(nrows, vocab, seed):
+    rng = np.random.RandomState(seed)
+    logits = arr(rng, nrows, vocab, scale=3.0)
+    tgt = jnp.asarray(rng.randint(0, vocab, nrows))
+    tgt = tgt.at[0].set(-1)  # ignore_index
+    ls, cnt, dl = ck.cross_entropy(logits, tgt)
+    lsr, cntr, dlr = ref.cross_entropy(logits, tgt)
+    assert abs(float(ls) - float(lsr)) < 1e-3
+    assert float(cnt) == float(cntr)
+    assert_allclose(np.asarray(dl), np.asarray(dlr), atol=2e-5)
+
+
+def test_cross_entropy_grad_is_correct():
+    # dlogits/count must equal autodiff gradient of the mean loss
+    rng = np.random.RandomState(2)
+    logits = arr(rng, 8, 13, scale=2.0)
+    tgt = jnp.asarray(rng.randint(0, 13, 8))
+
+    def mean_loss(lg):
+        ls, cnt, _ = ref.cross_entropy(lg, tgt)
+        return ls / cnt
+
+    gr = jax.grad(mean_loss)(logits)
+    _, cnt, dl = ck.cross_entropy(logits, tgt)
+    assert_allclose(np.asarray(dl) / float(cnt), np.asarray(gr), atol=2e-5)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([16, 32]), st.sampled_from([8, 16]),
+       st.integers(0, 99))
+def test_flash_attention_vs_ref(bh, t, d, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = arr(rng, bh, t, d), arr(rng, bh, t, d), arr(rng, bh, t, d)
+    o = atk.flash_attention(q, k, v, bq=8, bk=8)
+    orf = ref.sdpa(q[None], k[None], v[None])[0]
+    assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-4)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(4, 600), st.integers(1, 20), st.integers(0, 999))
+def test_adamw_kernel_bitexact_vs_ref(n, step, seed):
+    rng = np.random.RandomState(seed)
+    p = ref.round_to_bf16(arr(rng, n, scale=0.1))
+    m = ref.round_to_bf16(arr(rng, n, scale=0.01))
+    v = ref.round_to_bf16(jnp.abs(arr(rng, n, scale=0.001)))
+    g = ref.round_to_bf16(arr(rng, n, scale=0.05))
+    args = (1e-3, 0.9, 0.95, 1e-8, 0.1)
+    p1, m1, v1 = ak.adamw_step(p, m, v, g, *args, step, seed % 1000)
+    p2, m2, v2 = ref.adamw_step(p, m, v, g, *args, jnp.float32(step),
+                                seed % 1000, 0x11A17)
+    for a, b in [(p1, p2), (m1, m2), (v1, v2)]:
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp ops
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_policy_gradients_close_to_f32():
+    rng = np.random.RandomState(3)
+    x, w = arr(rng, 16, 12), arr(rng, 12, 8)
+    dy = arr(rng, 16, 8)
+    for policy in ["bf16", "fp8", "fp8_e5m2"]:
+        f = lambda x, w: jnp.sum(ops.gemm(x, w, policy) * dy)
+        dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+        dxr, dwr = jax.grad(lambda x, w: jnp.sum((x @ w) * dy),
+                            argnums=(0, 1))(x, w)
+        tol = 0.02 if policy == "bf16" else 0.12
+        rel = np.linalg.norm(np.asarray(dx) - np.asarray(dxr)) / (
+            np.linalg.norm(np.asarray(dxr)) + 1e-9)
+        assert rel < tol, (policy, rel)
+        rel = np.linalg.norm(np.asarray(dw) - np.asarray(dwr)) / (
+            np.linalg.norm(np.asarray(dwr)) + 1e-9)
+        assert rel < tol, (policy, rel)
+
+
+def test_lm_head_loss_chunks_equivalent():
+    rng = np.random.RandomState(4)
+    x, w = arr(rng, 16, 12), arr(rng, 12, 32)
+    tgt = jnp.asarray(rng.randint(0, 32, 16))
+    losses = [float(ops.lm_head_loss(x, w, tgt, c)) for c in (1, 2, 4)]
+    for l in losses[1:]:
+        assert abs(l - losses[0]) < 1e-5
+
+    # grads agree across chunk counts too
+    g1 = jax.grad(lambda x, w: ops.lm_head_loss(x, w, tgt, 1), argnums=(0, 1))(x, w)
+    g4 = jax.grad(lambda x, w: ops.lm_head_loss(x, w, tgt, 4), argnums=(0, 1))(x, w)
+    assert_allclose(np.asarray(g1[0]), np.asarray(g4[0]), atol=2e-4)
+    assert_allclose(np.asarray(g1[1]), np.asarray(g4[1]), atol=2e-3)
+
+
+def test_sdpa_chunked_equivalent():
+    rng = np.random.RandomState(5)
+    q = arr(rng, 2, 2, 16, 8)
+    k = arr(rng, 2, 2, 16, 8)
+    v = arr(rng, 2, 2, 16, 8)
+    full = ops.sdpa_chunked(q, k, v, 1)
+    chunked = ops.sdpa_chunked(q, k, v, 4)
+    assert_allclose(np.asarray(full), np.asarray(chunked), atol=1e-5)

@@ -1,0 +1,157 @@
+"""L2 model tests: shapes, precision-policy behaviour, chunking
+equivalences, and the manifest ABI."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, model
+from compile.kernels import ref
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.RandomState(0)
+    tok = jnp.asarray(rng.randint(0, CFG.vocab, (2, CFG.seq_len)))
+    tgt = jnp.asarray(rng.randint(0, CFG.vocab, (2, CFG.seq_len)))
+    return tok, tgt
+
+
+def test_param_shapes_cover_all(params):
+    names = {n for n, _ in CFG.param_shapes()}
+    assert set(params.keys()) == names
+    for n, s in CFG.param_shapes():
+        assert params[n].shape == s
+
+
+def test_params_on_bf16_grid(params):
+    for n, p in params.items():
+        assert np.array_equal(np.asarray(p), np.asarray(ref.round_to_bf16(p))), n
+
+
+def test_forward_logits_shape_and_finite(params, batch):
+    tok, _ = batch
+    logits = model.forward_logits(params, tok, CFG)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params, batch):
+    # Changing a future token must not change past logits.
+    tok, _ = batch
+    logits1 = model.forward_logits(params, tok, CFG)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab)
+    logits2 = model.forward_logits(params, tok2, CFG)
+    assert_allclose(np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]),
+                    atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["bf16", "fp8", "fp8_e5m2"])
+def test_train_step_loss_and_grads(params, batch, policy):
+    tok, tgt = batch
+    loss, grads = model.train_step(params, tok, tgt, CFG, policy)
+    # random targets → loss ≈ ln(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+    assert set(grads.keys()) == set(params.keys())
+    for n, g in grads.items():
+        assert g.shape == params[n].shape
+        assert bool(jnp.all(jnp.isfinite(g))), n
+        # grads arrive on the bf16 grid (paper: bf16 grad accumulation)
+        assert np.array_equal(np.asarray(g), np.asarray(ref.round_to_bf16(g))), n
+
+
+def test_policies_agree_at_init(params, batch):
+    tok, tgt = batch
+    losses = [float(model.train_step(params, tok, tgt, CFG, p)[0])
+              for p in ("bf16", "fp8", "fp8_e5m2")]
+    assert max(losses) - min(losses) < 0.05, losses
+
+
+def test_gradients_match_finite_difference(params, batch):
+    # Check one scalar direction of one parameter against central
+    # differences through the bf16 policy.
+    tok, tgt = batch
+    name = "final_norm"
+    loss_fn = lambda p: model.loss_fn(p, tok, tgt, CFG, "bf16")
+    _, grads = model.train_step(params, tok, tgt, CFG, "bf16")
+    eps = 1e-2
+    direction = jnp.zeros_like(params[name]).at[3].set(1.0)
+    pp = dict(params)
+    pp[name] = params[name] + eps * direction
+    lp = float(loss_fn(pp))
+    pp[name] = params[name] - eps * direction
+    lm = float(loss_fn(pp))
+    fd = (lp - lm) / (2 * eps)
+    an = float(grads[name][3])
+    assert abs(fd - an) < max(0.05 * abs(fd), 2e-3), (fd, an)
+
+
+def test_training_reduces_loss_quickly(params, batch):
+    # A few SGD steps on a fixed batch must overfit it (sanity of the
+    # whole fwd/bwd pipeline).
+    tok, tgt = batch
+    p = dict(params)
+    first = None
+    for _ in range(8):
+        loss, grads = model.train_step(p, tok, tgt, CFG, "fp8")
+        if first is None:
+            first = float(loss)
+        p = {k: ref.round_to_bf16(v - 0.5 * grads[k]) for k, v in p.items()}
+    final = float(model.train_step(p, tok, tgt, CFG, "fp8")[0])
+    assert final < first - 0.2, (first, final)
+
+
+def test_remat_block_same_loss(params, batch):
+    tok, tgt = batch
+    a = float(model.loss_fn(params, tok, tgt, CFG, "bf16", remat_blocks=False))
+    b = float(model.loss_fn(params, tok, tgt, CFG, "bf16", remat_blocks=True))
+    assert abs(a - b) < 1e-5
+
+
+def test_attention_chunking_equivalent(params, batch):
+    tok, tgt = batch
+    a = float(model.loss_fn(params, tok, tgt, CFG, "bf16", attn_chunks=1))
+    b = float(model.loss_fn(params, tok, tgt, CFG, "bf16", attn_chunks=4))
+    assert abs(a - b) < 1e-4
+
+
+def test_manifest_abi_consistency():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "tiny_manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    shapes = CFG.param_shapes()
+    assert len(man["params"]) == len(shapes)
+    off = 0
+    for ent, (name, shape) in zip(man["params"], shapes):
+        assert ent["name"] == name
+        assert tuple(ent["shape"]) == shape
+        assert ent["offset"] == off
+        off += ent["numel"]
+    assert man["total_numel"] == off
+    assert man["padded_numel"] % man["world"] == 0
+
+
+def test_rope_rotation_properties():
+    cos, sin = model.rope_cache(CFG, 8)
+    x = jnp.asarray(np.random.RandomState(0).randn(1, 2, 8, CFG.d_head)
+                    .astype(np.float32))
+    y = model.apply_rope(x, cos, sin)
+    # norm-preserving per pair
+    assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                    np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # position 0 unchanged
+    assert_allclose(np.asarray(y[:, :, 0]), np.asarray(x[:, :, 0]), atol=1e-6)

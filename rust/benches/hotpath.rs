@@ -1,0 +1,82 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 operations
+//! that sit between PJRT calls in the training loop — FP8/BF16 codecs,
+//! stochastic rounding, gradient accumulation, collectives, the DES
+//! engine, and the host AdamW.
+
+use llmq::collectives::{reduce_scatter_memcpy, DeviceGroup};
+use llmq::precision::{bf16, fp8, CounterRng, E4M3};
+use llmq::util::Bencher;
+
+fn main() {
+    let n = 1 << 22; // 4M elements
+    let rng = CounterRng::new(1);
+    let base: Vec<f32> = (0..n).map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0).collect();
+    let mut b = Bencher::new(2, 7);
+
+    // --- FP8 codec ----------------------------------------------------------
+    let mut x = base.clone();
+    b.bench("fp8 quantize 4M f32 (absmax + RNE)", || {
+        x.copy_from_slice(&base);
+        E4M3.quantize(&mut x)
+    });
+    let t = b.throughput("fp8 quantize 4M f32 (absmax + RNE)", (n * 4) as f64);
+    println!("  -> {:.2} GB/s", t.unwrap_or(0.0) / 1e9);
+
+    let (bytes, scale) = fp8::encode_tensor(E4M3, &base[..1 << 20]);
+    let mut out = vec![0f32; 1 << 20];
+    b.bench("fp8 decode 1M bytes", || {
+        fp8::decode_tensor(E4M3, &bytes, scale, &mut out)
+    });
+
+    // --- BF16 SR + accumulation ----------------------------------------------
+    let mut y = base.clone();
+    b.bench("bf16 stochastic round 4M", || {
+        y.copy_from_slice(&base);
+        bf16::stochastic_round_slice(&mut y, &rng, 0)
+    });
+    let mut acc = vec![0f32; n];
+    b.bench("bf16 grad accumulate 4M", || {
+        bf16::accumulate_bf16(&mut acc, &base)
+    });
+
+    // --- global norm (the unhidable reduction, §3.2) -------------------------
+    b.bench("global_norm 4M", || llmq::optim::global_norm(&base));
+
+    // --- collectives over host arenas ----------------------------------------
+    let world = 4;
+    let g = DeviceGroup::from_fn(world, 1 << 20, |r, i| (r + i) as f32 * 1e-6);
+    b.bench("reduce_scatter_memcpy 4x1M", || {
+        let mut acc = vec![vec![0f32; (1 << 20) / world]; world];
+        reduce_scatter_memcpy(&g, &mut acc, &rng, 0);
+        acc
+    });
+
+    // --- host AdamW (offloaded-optimizer path) --------------------------------
+    let hp = llmq::optim::AdamWParams::default();
+    let opt = llmq::optim::AdamW::new(hp);
+    let mut p = base.clone();
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    b.bench("host adamw step 4M", || {
+        opt.step(&mut p, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
+    });
+
+    // --- DES engine -----------------------------------------------------------
+    let model = llmq::config::by_name("14B").unwrap();
+    let node = llmq::hw::NodeTopology::new(
+        llmq::hw::gpu_by_name("RTX 4090").unwrap(),
+        4,
+    );
+    let cfg = llmq::sim::StepConfig {
+        micro_batch: 32,
+        grad_accum: 4,
+        recompute: llmq::recompute::Recompute::Block,
+        offload: llmq::offload::OffloadConfig::FULL,
+        shard: llmq::shard::ShardConfig::full(4),
+        comm: llmq::sim::CommBackend::MemcpyFull,
+        transfer_mode: llmq::offload::TransferMode::DoubleBuffer,
+    };
+    b.bench("DES simulate_step 14B 4-gpu ga=4", || {
+        llmq::sim::simulate_step(&model, &node, true, &cfg)
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 1 (single-GPU TPS/MFU) and time the
+//! simulator + auto-planner pipeline behind it.
+use llmq::util::Bencher;
+
+fn main() {
+    let t = llmq::sim::tables::table1_single_gpu();
+    t.print();
+    let mut b = Bencher::new(1, 5);
+    b.bench("table1: full autoplan+simulate sweep", || {
+        llmq::sim::tables::table1_single_gpu()
+    });
+}

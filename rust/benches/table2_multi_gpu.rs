@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Table 2 (4xL40S vs 4x4090 TPS/MFU).
+use llmq::util::Bencher;
+
+fn main() {
+    let t = llmq::sim::tables::table2_multi_gpu();
+    t.print();
+    let mut b = Bencher::new(1, 3);
+    b.bench("table2: full autoplan+simulate sweep", || {
+        llmq::sim::tables::table2_multi_gpu()
+    });
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Table 3 (DGX Spark, unified memory).
+use llmq::util::Bencher;
+
+fn main() {
+    let t = llmq::sim::tables::table3_dgx_spark();
+    t.print();
+    let mut b = Bencher::new(1, 5);
+    b.bench("table3: spark sweep", || llmq::sim::tables::table3_dgx_spark());
+}

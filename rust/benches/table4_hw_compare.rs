@@ -1,0 +1,4 @@
+//! Bench: regenerate paper Table 4 (H100 vs RTX 4090 spec ratios).
+fn main() {
+    llmq::sim::tables::table4_hw_compare().print();
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table 5 (NCCL vs memcpy collectives, 14B) and
+//! time the REAL collective implementations on host buffers.
+use llmq::collectives::{reduce_scatter_memcpy, reduce_scatter_ring, DeviceGroup};
+use llmq::precision::CounterRng;
+use llmq::util::Bencher;
+
+fn main() {
+    llmq::sim::tables::table5_collectives().print();
+
+    // Real-buffer collective throughput (the rust hot path itself).
+    let world = 4;
+    let n = 1 << 22; // 4M f32 per rank
+    let g = DeviceGroup::from_fn(world, n, |r, i| (r + i) as f32 * 1e-6);
+    let rng = CounterRng::new(7);
+    let mut b = Bencher::new(1, 5);
+    b.bench("reduce_scatter_memcpy 4x4M f32", || {
+        let mut acc = vec![vec![0f32; n / world]; world];
+        reduce_scatter_memcpy(&g, &mut acc, &rng, 0);
+        acc
+    });
+    b.bench("reduce_scatter_ring   4x4M f32", || {
+        let mut acc = vec![vec![0f32; n / world]; world];
+        reduce_scatter_ring(&g, &mut acc, &rng, 0);
+        acc
+    });
+    let bytes = (n * 4) as f64;
+    if let Some(eps) = b.throughput("reduce_scatter_memcpy 4x4M f32", bytes) {
+        println!("memcpy RS effective: {:.2} GB/s per rank", eps / 1e9);
+    }
+}

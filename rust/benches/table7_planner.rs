@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 7 (chosen configurations) + Table 8 (LF)
+//! and time the auto-planner search.
+use llmq::util::Bencher;
+
+fn main() {
+    llmq::sim::tables::table7_configs().print();
+    llmq::sim::tables::table8_lf_configs().print();
+    let m = llmq::config::by_name("7B").unwrap();
+    let g = llmq::hw::gpu_by_name("RTX 4090").unwrap();
+    let mut b = Bencher::new(1, 5);
+    b.bench("autoplan 7B@4090 (full ladder search)", || {
+        llmq::coordinator::autoplan(
+            &m, &g, 1, true, 500_000, llmq::sim::CommBackend::MemcpyFull, 0,
+        )
+        .unwrap()
+    });
+}

@@ -1,0 +1,160 @@
+//! Baselines the paper compares against.
+//!
+//! **LLama-Factory ("LF")** — Tables 1/2/8: a PyTorch-stack fine-tuning
+//! framework. We model it as a cost/behaviour profile on top of the same
+//! hardware model: higher per-step framework overhead, activation
+//! checkpointing always on, DeepSpeed-style ZeRO-2/3 offload (all-or-
+//! nothing: "as soon as offloading is required, it is more efficient to
+//! do full offloading ... than partial offloading at medium batch sizes",
+//! §4), NCCL-only collectives, BF16 only at the sizes the paper ran.
+
+use crate::config::ModelPreset;
+use crate::hw::NodeTopology;
+use crate::memory;
+use crate::offload::{OffloadConfig, TransferMode};
+use crate::recompute::Recompute;
+use crate::shard::ShardConfig;
+use crate::sim::{simulate_step, CommBackend, StepConfig, StepResult};
+
+/// Per-microbatch framework overhead (python dispatch, autograd graph,
+/// optimizer glue): the paper attributes LF's large-model gap shrinking
+/// to llmq's far lower per-step overheads. Seconds per fwd+bwd.
+pub const LF_STEP_OVERHEAD_S: f64 = 0.085;
+/// LF kernels are less fused: effective compute inflation.
+pub const LF_COMPUTE_INFLATION: f64 = 1.12;
+
+/// The ZeRO level LF ends up using (Table 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LfZero {
+    None,
+    Zero2,
+    Zero3,
+}
+
+impl LfZero {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LfZero::None => "-",
+            LfZero::Zero2 => "ZeRO-2",
+            LfZero::Zero3 => "ZeRO-3",
+        }
+    }
+}
+
+/// Pick LF's configuration for a model/node (Table 8 policy: no offload
+/// while it fits; otherwise full ZeRO-3 offload at a very large batch).
+pub fn lf_config(m: &ModelPreset, node: &NodeTopology, step_tokens: usize) -> Option<(LfZero, StepConfig)> {
+    let world = node.n_gpus;
+    // try no-offload first (checkpointing always on)
+    let plain = memory::planner::max_micro_batch(
+        m,
+        &node.gpu,
+        false,
+        Recompute::Block,
+        OffloadConfig::NONE,
+        ShardConfig::zero1(world),
+        node.host_mem_gib,
+        128,
+    );
+    let (zero, offload, shard, mb) = if plain >= 8 {
+        (LfZero::None, OffloadConfig::NONE, ShardConfig::zero1(world), plain)
+    } else {
+        // full offload, big batch (LF's observed optimum)
+        let mb = memory::planner::max_micro_batch(
+            m,
+            &node.gpu,
+            false,
+            Recompute::Block,
+            OffloadConfig::FULL,
+            ShardConfig::full(world),
+            node.host_mem_gib,
+            128,
+        );
+        if mb == 0 {
+            return None; // OOM (Table 8: 32B OOM on 1×4090)
+        }
+        let z = if world > 1 { LfZero::Zero3 } else { LfZero::Zero3 };
+        (z, OffloadConfig::FULL, ShardConfig::full(world), mb)
+    };
+    let ga = crate::coordinator::plan::grad_accum_for(m, world, mb, step_tokens);
+    Some((
+        zero,
+        StepConfig {
+            micro_batch: mb,
+            grad_accum: ga,
+            recompute: Recompute::Block,
+            offload,
+            shard,
+            comm: CommBackend::Nccl, // LF/DeepSpeed: NCCL only
+            transfer_mode: TransferMode::ZeroCopy,
+        },
+    ))
+}
+
+/// Simulate LF on a node: llmq's step graph + LF's overhead profile.
+pub fn simulate_lf(m: &ModelPreset, node: &NodeTopology, step_tokens: usize) -> Option<StepResult> {
+    let (_z, cfg) = lf_config(m, node, step_tokens)?;
+    let r = simulate_step(m, node, false, &cfg);
+    // Inflate with framework overheads: per-microbatch fixed cost +
+    // compute inflation on the non-overlapped part.
+    let overhead = LF_STEP_OVERHEAD_S * cfg.grad_accum as f64
+        + r.breakdown.compute_s * (LF_COMPUTE_INFLATION - 1.0);
+    let step_s = r.step_s + overhead;
+    Some(StepResult {
+        step_s,
+        tokens_per_s: r.step_tokens as f64 / step_s,
+        mfu: r.mfu * r.step_s / step_s,
+        step_tokens: r.step_tokens,
+        breakdown: crate::metrics::StepBreakdown {
+            overhead_s: overhead,
+            ..r.breakdown
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn lf_slower_than_llmq_small_models() {
+        // Table 1: 0.5B on 4090 — llmq BF16 39k vs LF 30.4k.
+        let m = by_name("0.5B").unwrap();
+        let node = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 1);
+        let lf = simulate_lf(&m, &node, 500_000).unwrap();
+        let (_c, llmq) = crate::coordinator::autoplan(
+            &m, &node.gpu, 1, false, 500_000, CommBackend::MemcpyFull, 0,
+        )
+        .unwrap();
+        assert!(
+            llmq.tokens_per_s > lf.tokens_per_s * 1.1,
+            "llmq {:.0} vs LF {:.0}",
+            llmq.tokens_per_s,
+            lf.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn lf_32b_oom_on_single_4090() {
+        let m = by_name("32B").unwrap();
+        let node = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 1);
+        assert!(lf_config(&m, &node, 500_000).is_none());
+    }
+
+    #[test]
+    fn lf_gap_large_at_14b_multi_gpu() {
+        // §4: "at the largest scale supported by LF, 14B, the llmq
+        // implementation is twice as fast" (4×4090, BF16: 5.2k vs 2.6k).
+        let m = by_name("14B").unwrap();
+        let node = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 4);
+        let lf = simulate_lf(&m, &node, 500_000).unwrap();
+        let (_c, llmq) = crate::coordinator::autoplan(
+            &m, &node.gpu, 4, false, 500_000, CommBackend::MemcpyFull, 0,
+        )
+        .unwrap();
+        let ratio = llmq.tokens_per_s / lf.tokens_per_s;
+        assert!(ratio > 1.5, "expected ~2x, got {ratio:.2}");
+    }
+}

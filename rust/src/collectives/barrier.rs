@@ -1,0 +1,235 @@
+//! Multi-threaded workers + the NCCL deadlock and its CPU-barrier fix
+//! (paper §3.2 "Multi-threaded multi-GPU and deadlocks").
+//!
+//! The paper's hypothesis: a per-process submission resource fills up as
+//! GPU ops are enqueued. A fast worker can enqueue the collective (which
+//! blocks on a *global* barrier at execution time) and keep enqueueing
+//! until the resource is exhausted; then it can neither execute (barrier
+//! not reached by others) nor submit, while the slow worker cannot submit
+//! the collective because the resource is full → deadlock.
+//!
+//! `QueueDeadlock` reproduces this mechanism with a bounded submission
+//! queue per process, and `DeadlockPolicy::CpuBarrier` demonstrates the
+//! paper's fix: a CPU-side thread barrier *before* submitting the
+//! collective ("the CPU threads are synchronizing among each other, but
+//! not with the GPU"), which prevents post-collective submissions from
+//! exhausting the resource first.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::time::Duration;
+
+/// CPU-side synchronization barrier for worker threads.
+pub struct CpuBarrier {
+    inner: Barrier,
+}
+
+impl CpuBarrier {
+    pub fn new(world: usize) -> Self {
+        Self {
+            inner: Barrier::new(world),
+        }
+    }
+
+    pub fn wait(&self) {
+        self.inner.wait();
+    }
+}
+
+/// How workers guard collective submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlockPolicy {
+    /// Submit freely (the deadlocking behaviour).
+    None,
+    /// CPU-side barrier before every collective submission (the fix).
+    CpuBarrier,
+}
+
+/// A bounded per-process submission queue + a global execution barrier —
+/// the minimal model of the paper's hypothesized deadlock mechanism.
+pub struct QueueDeadlock {
+    capacity: usize,
+    /// Ops currently enqueued but not executed (the shared resource).
+    in_flight: Mutex<usize>,
+    space: Condvar,
+    /// Count of workers whose collective has reached the device.
+    at_collective: AtomicUsize,
+    world: usize,
+    gave_up: AtomicBool,
+}
+
+pub enum Submitted {
+    Ok,
+    WouldDeadlock,
+}
+
+impl QueueDeadlock {
+    pub fn new(world: usize, capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            capacity,
+            in_flight: Mutex::new(0),
+            space: Condvar::new(),
+            at_collective: AtomicUsize::new(0),
+            world,
+            gave_up: AtomicBool::new(false),
+        })
+    }
+
+    /// Take a submission slot, blocking while the resource is exhausted.
+    /// Returns WouldDeadlock if it could not proceed within the timeout
+    /// (the detector for tests — real CUDA would hang forever).
+    fn take_slot(&self, timeout: Duration) -> Submitted {
+        let mut q = self.in_flight.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while *q >= self.capacity {
+            if self.gave_up.load(Ordering::SeqCst) {
+                return Submitted::WouldDeadlock;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                self.gave_up.store(true, Ordering::SeqCst);
+                self.space.notify_all();
+                return Submitted::WouldDeadlock;
+            }
+            let (qq, _res) = self.space.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+        }
+        *q += 1;
+        Submitted::Ok
+    }
+
+    /// Enqueue a normal kernel. While **no** collective is pending the
+    /// stream drains continuously (kernels execute as fast as they are
+    /// submitted → the resource never fills). While a collective is
+    /// blocked at its global barrier, everything queued behind it
+    /// accumulates and consumes submission slots — the paper's hazard.
+    pub fn submit_kernel(&self, timeout: Duration) -> Submitted {
+        if self.at_collective.load(Ordering::SeqCst) == 0 {
+            return Submitted::Ok;
+        }
+        self.take_slot(timeout)
+    }
+
+    /// Enqueue the collective: takes a slot and blocks the stream until
+    /// all `world` workers have submitted theirs; then the stream
+    /// executes and the whole queue drains.
+    pub fn submit_collective(&self, timeout: Duration) -> Submitted {
+        if let Submitted::WouldDeadlock = self.take_slot(timeout) {
+            return Submitted::WouldDeadlock;
+        }
+        let n = self.at_collective.fetch_add(1, Ordering::SeqCst) + 1;
+        if n == self.world {
+            // all reached: the stream executes, draining the queue
+            self.at_collective.store(0, Ordering::SeqCst);
+            let mut q = self.in_flight.lock().unwrap();
+            *q = 0;
+            self.space.notify_all();
+        }
+        Submitted::Ok
+    }
+}
+
+/// Spawn `world` worker threads and run `f(rank)` on each; propagates the
+/// first panic. The execution model of LLMQ's multi-threaded multi-GPU
+/// mode (one thread per virtual device, shared address space).
+pub fn run_workers<F, T>(world: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+    T: Send,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let f = &f;
+                s.spawn(move || f(rank))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// One training-ish iteration per worker: `pre` kernels, the collective,
+/// `post` kernels. With `DeadlockPolicy::None` and a skewed fast worker
+/// this deadlocks (detected); with `CpuBarrier` it always completes.
+pub fn iteration(
+    rank: usize,
+    q: &QueueDeadlock,
+    barrier: &CpuBarrier,
+    policy: DeadlockPolicy,
+    post_kernels: usize,
+    skew: bool,
+    timeout: Duration,
+) -> bool {
+    // pre-collective work; rank 0 is "fast" when skewed
+    if skew && rank != 0 {
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    if matches!(q.submit_kernel(timeout), Submitted::WouldDeadlock) {
+        return false;
+    }
+    if matches!(q.submit_collective(timeout), Submitted::WouldDeadlock) {
+        return false;
+    }
+    if policy == DeadlockPolicy::CpuBarrier {
+        // The paper's fix: "prevent new kernels getting submitted until
+        // every worker has issued the collective" — CPU threads sync with
+        // each other (not with the GPU) right after issuing it.
+        barrier.wait();
+    }
+    // fast worker races ahead enqueueing more kernels
+    for _ in 0..post_kernels {
+        if matches!(q.submit_kernel(timeout), Submitted::WouldDeadlock) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_skew_no_deadlock() {
+        let world = 4;
+        let q = QueueDeadlock::new(world, 64);
+        let b = CpuBarrier::new(world);
+        let ok = run_workers(world, |r| {
+            iteration(r, &q, &b, DeadlockPolicy::None, 2, false,
+                      Duration::from_millis(500))
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn skewed_fast_worker_deadlocks_without_barrier() {
+        // capacity 8, world 4: the fast rank 0 submits 1 pre + collective
+        // + 6 post = 8 ops, exhausting the queue alone before the slow
+        // workers submit their collectives.
+        let world = 4;
+        let q = QueueDeadlock::new(world, 8);
+        let b = CpuBarrier::new(world);
+        let ok = run_workers(world, |r| {
+            iteration(r, &q, &b, DeadlockPolicy::None, 6, true,
+                      Duration::from_millis(300))
+        });
+        assert!(
+            ok.iter().any(|&x| !x),
+            "expected the submission-queue deadlock"
+        );
+    }
+
+    #[test]
+    fn cpu_barrier_fixes_it() {
+        // Same capacity as the deadlocking test: with the CPU barrier the
+        // queue holds at most world pre-kernels + world collectives = 8.
+        let world = 4;
+        let q = QueueDeadlock::new(world, 8);
+        let b = CpuBarrier::new(world);
+        let ok = run_workers(world, |r| {
+            iteration(r, &q, &b, DeadlockPolicy::CpuBarrier, 6, true,
+                      Duration::from_millis(2000))
+        });
+        assert!(ok.iter().all(|&x| x), "CPU-side sync must prevent deadlock");
+    }
+}

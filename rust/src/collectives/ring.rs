@@ -1,0 +1,119 @@
+//! Ring collectives — the NCCL-style baseline (paper Table 5 "None"):
+//! reduce-scatter and all-gather as `world-1` ring steps with arithmetic
+//! interleaved into the communication (which is why the real thing needs
+//! SMs and can't run on copy engines alone — §3.2).
+//!
+//! Numerics: ring reduction order differs from the memcpy collective's
+//! fixed-src order; we keep it deterministic (fixed ring direction) and
+//! round once at the end, like the memcpy path, so both are valid
+//! implementations of the same collective contract.
+
+use super::DeviceGroup;
+use crate::precision::{bf16, CounterRng};
+
+/// Ring reduce-scatter: after `world-1` steps, rank `w` holds the sum of
+/// everyone's chunk `w`, accumulated into `acc[w]` with one SR epilogue.
+pub fn reduce_scatter_ring(
+    grads: &DeviceGroup,
+    acc: &mut [Vec<f32>],
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let world = grads.world;
+    let chunk = grads.chunk_len();
+    // working copies (the "in-flight" ring payloads)
+    let mut work: Vec<Vec<f32>> = grads.buffers.clone();
+
+    // Step s: rank w sends chunk (w - 1 - s) mod world to rank w+1, which
+    // adds it into its copy. Chunk k thus *starts* its journey at rank
+    // k+1 and accumulates through k+2, …, ending complete at rank k after
+    // world-1 steps — so rank w finishes owning the full sum of chunk w.
+    for s in 0..world - 1 {
+        // snapshot of the chunks being sent this step
+        let sends: Vec<(usize, Vec<f32>)> = (0..world)
+            .map(|w| {
+                let c = (w + 2 * world - 1 - s) % world;
+                (c, work[w][c * chunk..(c + 1) * chunk].to_vec())
+            })
+            .collect();
+        for w in 0..world {
+            let dst = (w + 1) % world;
+            let (c, ref payload) = sends[w];
+            for i in 0..chunk {
+                work[dst][c * chunk + i] += payload[i];
+            }
+        }
+    }
+
+    for w in 0..world {
+        let a = &mut acc[w];
+        for i in 0..chunk {
+            let sum = a[i] + work[w][w * chunk + i];
+            a[i] = bf16::stochastic_round_bf16(
+                sum,
+                rng,
+                counter.wrapping_add((w * chunk + i) as u32),
+            );
+        }
+    }
+}
+
+/// Ring all-gather: `world-1` forwarding steps.
+pub fn all_gather_ring(shards: &[Vec<f32>], out: &mut DeviceGroup) {
+    let world = shards.len();
+    let chunk = shards[0].len();
+    for w in 0..world {
+        out.buffers[w][w * chunk..(w + 1) * chunk].copy_from_slice(&shards[w]);
+    }
+    for s in 0..world - 1 {
+        for w in 0..world {
+            let dst = (w + 1) % world;
+            let c = (w + world - s) % world;
+            let payload: Vec<f32> =
+                out.buffers[w][c * chunk..(c + 1) * chunk].to_vec();
+            out.buffers[dst][c * chunk..(c + 1) * chunk]
+                .copy_from_slice(&payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{all_gather_memcpy, allreduce_reference};
+    use crate::precision::round_to_bf16;
+
+    #[test]
+    fn ring_matches_reference() {
+        let world = 4;
+        let n = 32;
+        let rng = CounterRng::new(11);
+        let g = DeviceGroup::from_fn(world, n, |r, i| {
+            round_to_bf16(rng.next_f32((r * n + i) as u32))
+        });
+        let reference = allreduce_reference(&g);
+        let mut acc = vec![vec![0f32; n / world]; world];
+        reduce_scatter_ring(&g, &mut acc, &CounterRng::new(3), 0);
+        for w in 0..world {
+            for i in 0..n / world {
+                let exact = reference[w * (n / world) + i];
+                let err = (acc[w][i] - exact).abs();
+                assert!(err <= exact.abs().max(1e-2) / 64.0, "{} vs {exact}", acc[w][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_and_memcpy_gather_agree() {
+        let world = 3;
+        let chunk = 5;
+        let shards: Vec<Vec<f32>> = (0..world)
+            .map(|r| (0..chunk).map(|i| (r * 7 + i) as f32).collect())
+            .collect();
+        let mut a = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        let mut b = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        all_gather_ring(&shards, &mut a);
+        all_gather_memcpy(&shards, &mut b);
+        assert_eq!(a.buffers, b.buffers);
+    }
+}

@@ -1,0 +1,8 @@
+//! Model/training configuration: paper-scale presets (0.5B…32B) and the
+//! training config, mirroring `python/compile/configs.py`.
+
+pub mod model;
+pub mod train;
+
+pub use model::{by_name, paper_presets, ModelPreset, StepFlops};
+pub use train::{Dtype, TrainConfig};

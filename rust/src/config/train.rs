@@ -1,0 +1,130 @@
+//! Training configuration: precision, batch geometry, LR schedule knobs.
+
+
+/// GEMM precision policy for transformer-block matmuls (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// Pure BF16 pipeline (all GPU generations from Ampere).
+    Bf16,
+    /// FP8 E4M3 forward and backward (the paper's recommended setting).
+    Fp8,
+    /// FP8 with E5M2 activation gradients (traditional recommendation;
+    /// Fig. 2 shows it slightly *worse*).
+    Fp8E5m2,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "bf16" => Dtype::Bf16,
+            "fp8" | "e4m3" => Dtype::Fp8,
+            "fp8_e5m2" | "e5m2" => Dtype::Fp8E5m2,
+            other => anyhow::bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn artifact_key(&self) -> &'static str {
+        match self {
+            Dtype::Bf16 => "train_bf16",
+            Dtype::Fp8 => "train_fp8",
+            Dtype::Fp8E5m2 => "train_fp8_e5m2",
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dtype::Bf16 => "bf16",
+            Dtype::Fp8 => "fp8",
+            Dtype::Fp8E5m2 => "fp8_e5m2",
+        }
+    }
+}
+
+/// Hyper-parameters of a training run (defaults match the paper's GSM8k
+/// appendix A.2 style: AdamW, warmup + linear decay).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub dtype: Dtype,
+    /// Microbatches accumulated per optimizer step.
+    pub grad_accum: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_steps: usize,
+    /// Final LR as a fraction of peak (paper: decay to 25%).
+    pub final_lr_frac: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    pub seed: u32,
+    /// Virtual devices (1 = single GPU; 4 = the paper's workstation).
+    pub world: usize,
+    /// Validation cadence (0 = never).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            dtype: Dtype::Fp8,
+            grad_accum: 4,
+            steps: 200,
+            lr: 3e-4,
+            warmup_steps: 10,
+            final_lr_frac: 0.25,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            grad_clip: 1.0,
+            seed: 0,
+            world: 1,
+            eval_every: 25,
+            eval_batches: 4,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// LR at a (0-based) optimizer step: linear warmup then linear decay
+    /// to `final_lr_frac · lr` (paper A.2).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            return self.lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let total = self.steps.max(self.warmup_steps + 1);
+        let t = (step - self.warmup_steps) as f32
+            / (total - self.warmup_steps) as f32;
+        let t = t.min(1.0);
+        self.lr * (1.0 - t * (1.0 - self.final_lr_frac))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = TrainConfig {
+            lr: 1.0,
+            warmup_steps: 10,
+            steps: 110,
+            final_lr_frac: 0.25,
+            ..Default::default()
+        };
+        assert!((c.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-6);
+        assert!(c.lr_at(60) < 1.0 && c.lr_at(60) > 0.25);
+        assert!((c.lr_at(109) - 0.2575).abs() < 0.01);
+        // never increases after warmup
+        let mut prev = c.lr_at(10);
+        for s in 11..110 {
+            let v = c.lr_at(s);
+            assert!(v <= prev + 1e-7);
+            prev = v;
+        }
+    }
+}

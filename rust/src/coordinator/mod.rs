@@ -1,0 +1,79 @@
+//! The coordinator: LLMQ's auto-planner. Given a model and a node, walk
+//! the paper's optimization ladder — recomputation policies (§3.1),
+//! offload classes (§3.1), sharding order (§3.2: weights *before* grads
+//! on consumer boards) — find every configuration that fits, simulate it,
+//! and pick the fastest. This reproduces the per-cell configuration
+//! choices of Table 7.
+
+pub mod plan;
+
+pub use plan::{autoplan, autoplan_and_simulate, ChosenConfig};
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::util::Args;
+
+/// CLI: `llmq plan --model all --gpu "RTX 4090" --gpus 1 --dtype fp8`.
+pub fn run_plan_cli(args: &Args) -> Result<()> {
+    let gpu_name = args.str("gpu", "RTX 4090");
+    let gpu = crate::hw::gpu_by_name(&gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu {gpu_name}"))?;
+    let dtype = crate::config::Dtype::parse(&args.str("dtype", "fp8"))?;
+    let gpus = args.usize("gpus", 1);
+    let step_tokens = args.usize("step-tokens", 500_000);
+    let fp8 = dtype != crate::config::Dtype::Bf16;
+    let model_name = args.str("model", "all");
+    let models: Vec<_> = if model_name == "all" {
+        crate::config::paper_presets()
+    } else {
+        vec![crate::config::by_name(&model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?]
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "Plan: {}x{} [{}] (Table 7 logic)",
+            gpus,
+            gpu.name,
+            dtype.label()
+        ),
+        &["Size", "Batch", "Recompute", "Offload", "Shard", "TPS", "MFU", "VRAM", "Host"],
+    );
+    for m in &models {
+        match autoplan_and_simulate(
+            m,
+            &gpu,
+            gpus,
+            fp8,
+            step_tokens,
+            crate::sim::CommBackend::MemcpyFull,
+            0,
+        ) {
+            Ok((cfg, r)) => t.row(vec![
+                m.name.clone(),
+                cfg.micro_batch.to_string(),
+                cfg.recompute.label().to_string(),
+                cfg.offload.label(),
+                cfg.shard.label(),
+                crate::metrics::table::fmt_tps(r.tokens_per_s),
+                crate::metrics::table::fmt_mfu(r.mfu),
+                format!("{:.1}G", cfg.plan.dev_gib()),
+                format!("{:.1}G", cfg.plan.host_gib()),
+            ]),
+            Err(_) => t.row(vec![
+                m.name.clone(),
+                "—".into(),
+                "OOM".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+            ]),
+        }
+    }
+    t.print();
+    Ok(())
+}

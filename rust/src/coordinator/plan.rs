@@ -1,0 +1,191 @@
+//! The configuration search (auto-planner).
+
+use anyhow::Result;
+
+use crate::config::ModelPreset;
+use crate::hw::{GpuSpec, NodeTopology};
+use crate::memory::{self, MemoryPlan, PlanInput};
+use crate::offload::{OffloadConfig, TransferMode};
+use crate::recompute::Recompute;
+use crate::shard::ShardConfig;
+use crate::sim::{simulate_step, CommBackend, StepConfig, StepResult};
+
+/// A fully resolved configuration (what Table 7 rows record).
+#[derive(Debug, Clone)]
+pub struct ChosenConfig {
+    pub micro_batch: usize,
+    pub grad_accum: usize,
+    pub recompute: Recompute,
+    pub offload: OffloadConfig,
+    pub shard: ShardConfig,
+    pub plan: MemoryPlan,
+}
+
+/// Grad-accumulation count to reach `step_tokens` (paper: 500k/step).
+pub fn grad_accum_for(
+    m: &ModelPreset,
+    world: usize,
+    micro_batch: usize,
+    step_tokens: usize,
+) -> usize {
+    let per_micro = world * micro_batch * m.seq_len;
+    (step_tokens + per_micro - 1) / per_micro.max(1)
+}
+
+/// Search (shard ladder × offload ladder × recompute × micro-batch) for
+/// the fastest configuration that fits; `forced_micro != 0` pins the
+/// micro-batch.
+pub fn autoplan(
+    m: &ModelPreset,
+    gpu: &GpuSpec,
+    world: usize,
+    fp8: bool,
+    step_tokens: usize,
+    comm: CommBackend,
+    forced_micro: usize,
+) -> Result<(ChosenConfig, StepResult)> {
+    let node = NodeTopology::new(gpu.clone(), world);
+    let mut best: Option<(ChosenConfig, StepResult)> = None;
+
+    for shard in ShardConfig::ladder(world) {
+        for offload in OffloadConfig::ladder() {
+            for rc in Recompute::ALL {
+                let bmax = memory::planner::max_micro_batch(
+                    m, gpu, fp8, rc, offload, shard, node.host_mem_gib, 64,
+                );
+                if bmax == 0 {
+                    continue;
+                }
+                // Candidate micro-batches: the max and a couple below it
+                // (bigger isn't always faster once transfers are hidden).
+                let mut cands = vec![bmax];
+                if bmax >= 2 {
+                    cands.push(bmax / 2);
+                }
+                if bmax >= 4 {
+                    cands.push(bmax / 4);
+                }
+                if forced_micro != 0 {
+                    if forced_micro > bmax {
+                        continue;
+                    }
+                    cands = vec![forced_micro];
+                }
+                for mb in cands {
+                    let ga = grad_accum_for(m, world, mb, step_tokens);
+                    let cfg = StepConfig {
+                        micro_batch: mb,
+                        grad_accum: ga,
+                        recompute: rc,
+                        offload,
+                        shard,
+                        comm,
+                        transfer_mode: TransferMode::DoubleBuffer,
+                    };
+                    let r = simulate_step(m, &node, fp8, &cfg);
+                    let better = match &best {
+                        None => true,
+                        Some((_, b)) => r.tokens_per_s > b.tokens_per_s,
+                    };
+                    if better {
+                        let plan = memory::plan(
+                            &PlanInput {
+                                model: m,
+                                gpu,
+                                fp8,
+                                recompute: rc,
+                                offload,
+                                shard,
+                                micro_batch: mb,
+                            },
+                            node.host_mem_gib,
+                        );
+                        best = Some((
+                            ChosenConfig {
+                                micro_batch: mb,
+                                grad_accum: ga,
+                                recompute: rc,
+                                offload,
+                                shard,
+                                plan,
+                            },
+                            r,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "{} does not fit on {}x{} in any configuration (OOM)",
+            m.name,
+            world,
+            gpu.name
+        )
+    })
+}
+
+/// Convenience wrapper used by the CLI and benches.
+pub fn autoplan_and_simulate(
+    m: &ModelPreset,
+    gpu: &GpuSpec,
+    world: usize,
+    fp8: bool,
+    step_tokens: usize,
+    comm: CommBackend,
+    forced_micro: usize,
+) -> Result<(ChosenConfig, StepResult)> {
+    autoplan(m, gpu, world, fp8, step_tokens, comm, forced_micro)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn small_model_needs_no_tricks() {
+        let m = by_name("0.5B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        let (cfg, r) = autoplan(&m, &g, 1, true, 500_000, CommBackend::MemcpyFull, 0).unwrap();
+        assert!(!cfg.offload.any(), "0.5B should not offload: {:?}", cfg.offload);
+        assert!(r.tokens_per_s > 10_000.0);
+    }
+
+    #[test]
+    fn large_model_escalates() {
+        let m = by_name("14B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        let (cfg, _) = autoplan(&m, &g, 1, true, 500_000, CommBackend::MemcpyFull, 0).unwrap();
+        // Table 7: 14B on one 4090 = heavy recompute + everything
+        // offloaded. (Our simulator ranks SwiGLU-at-smaller-batch within
+        // a few % of Block-at-batch-32, so we assert the *class* of the
+        // configuration rather than the exact recompute level — see
+        // EXPERIMENTS.md calibration notes.)
+        assert!(cfg.recompute >= Recompute::Swiglu, "needs recomputation");
+        assert!(cfg.offload.moments && cfg.offload.master && cfg.offload.params);
+    }
+
+    #[test]
+    fn thirtytwo_b_oom_single_but_fits_on_four() {
+        let m = by_name("32B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        assert!(autoplan(&m, &g, 1, true, 500_000, CommBackend::MemcpyFull, 0).is_err());
+        assert!(autoplan(&m, &g, 4, true, 500_000, CommBackend::MemcpyFull, 0).is_ok());
+    }
+
+    #[test]
+    fn multi_gpu_shards_weights_before_grads() {
+        // On consumer boards the planner should reach for host-cached
+        // weight sharding for big models (§3.2 ordering).
+        let m = by_name("14B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        let (cfg, _) = autoplan(&m, &g, 4, true, 500_000, CommBackend::MemcpyFull, 0).unwrap();
+        assert!(cfg.shard.optimizer, "ZeRO-1 always on");
+        if cfg.shard.grads {
+            assert!(cfg.shard.weights, "grads sharded implies weights sharded");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Packed next-token-prediction batches over a token stream.
+
+use super::tokenizer::ByteTokenizer;
+use super::IGNORE_INDEX;
+use crate::precision::CounterRng;
+
+/// One microbatch: `tokens` [b, t] inputs and `targets` [b, t] shifted by
+/// one (next-token), both row-major i32.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// A tokenized corpus packed into fixed-length windows.
+#[derive(Debug)]
+pub struct PackedDataset {
+    pub ids: Vec<i32>,
+    pub seq: usize,
+    rng: CounterRng,
+}
+
+impl PackedDataset {
+    pub fn from_text(text: &str, tok: &ByteTokenizer, seq: usize, seed: u32) -> Self {
+        let mut ids = vec![tok.bos()];
+        ids.extend(tok.encode(text));
+        Self {
+            ids,
+            seq,
+            rng: CounterRng::new(seed ^ 0xDA7A),
+        }
+    }
+
+    /// Number of non-overlapping windows.
+    pub fn n_windows(&self) -> usize {
+        (self.ids.len().saturating_sub(1)) / self.seq
+    }
+
+    /// Window `w` as (input, target) pair.
+    fn window(&self, w: usize) -> (Vec<i32>, Vec<i32>) {
+        let start = w * self.seq;
+        let inp = self.ids[start..start + self.seq].to_vec();
+        let mut tgt = self.ids[start + 1..start + self.seq + 1].to_vec();
+        // Never predict across a document if PAD appears (byte corpus has
+        // no pads, GSM-mini uses '\n' boundaries; keep targets as-is).
+        debug_assert_eq!(tgt.len(), self.seq);
+        if tgt.is_empty() {
+            tgt = vec![IGNORE_INDEX; self.seq];
+        }
+        (inp, tgt)
+    }
+
+    /// Deterministically shuffled microbatch `idx` of `batch` windows.
+    /// Distinct `stream`s (e.g. per virtual device) see disjoint windows.
+    pub fn batch(&self, idx: usize, stream: usize, batch: usize) -> Batch {
+        let n = self.n_windows();
+        assert!(n > 0, "corpus shorter than one window");
+        let mut tokens = Vec::with_capacity(batch * self.seq);
+        let mut targets = Vec::with_capacity(batch * self.seq);
+        for b in 0..batch {
+            let draw = self
+                .rng
+                .next_u32((idx * 31 + b) as u32 ^ ((stream as u32) << 20));
+            let w = (draw as usize) % n;
+            let (i, t) = self.window(w);
+            tokens.extend(i);
+            targets.extend(t);
+        }
+        Batch {
+            tokens,
+            targets,
+            batch,
+            seq: self.seq,
+        }
+    }
+
+    /// Sequential (non-shuffled) validation batch `idx`; windows are taken
+    /// from the *end* of the corpus so train/val overlap is limited.
+    pub fn val_batch(&self, idx: usize, batch: usize) -> Batch {
+        let n = self.n_windows();
+        let mut tokens = Vec::with_capacity(batch * self.seq);
+        let mut targets = Vec::with_capacity(batch * self.seq);
+        for b in 0..batch {
+            let w = n - 1 - ((idx * batch + b) % n);
+            let (i, t) = self.window(w);
+            tokens.extend(i);
+            targets.extend(t);
+        }
+        Batch {
+            tokens,
+            targets,
+            batch,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> PackedDataset {
+        let tok = ByteTokenizer::new(512);
+        let text = "abcdefgh".repeat(100);
+        PackedDataset::from_text(&text, &tok, 16, 0)
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let d = ds();
+        let (i, t) = d.window(3);
+        assert_eq!(i[1..], t[..15]);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = ds();
+        let b = d.batch(0, 0, 4);
+        assert_eq!(b.tokens.len(), 64);
+        assert_eq!(b.targets.len(), 64);
+    }
+
+    #[test]
+    fn deterministic_batches() {
+        let d1 = ds();
+        let d2 = ds();
+        assert_eq!(d1.batch(5, 0, 8).tokens, d2.batch(5, 0, 8).tokens);
+        assert_ne!(d1.batch(5, 0, 8).tokens, d1.batch(6, 0, 8).tokens);
+        assert_ne!(d1.batch(5, 0, 8).tokens, d1.batch(5, 1, 8).tokens);
+    }
+
+    #[test]
+    fn val_from_tail() {
+        let d = ds();
+        let v = d.val_batch(0, 2);
+        assert_eq!(v.tokens.len(), 32);
+    }
+}

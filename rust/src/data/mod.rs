@@ -1,0 +1,17 @@
+//! Data pipeline: byte-level tokenizer, synthetic pretraining corpus
+//! (ClimbMix stand-in, see DESIGN.md §2 substitutions), the GSM-mini
+//! arithmetic fine-tuning task (GSM8k stand-in), and deterministic packed
+//! batch loading.
+
+pub mod dataset;
+pub mod gsm_mini;
+pub mod synth;
+pub mod tokenizer;
+
+pub use dataset::{Batch, PackedDataset};
+pub use gsm_mini::GsmMini;
+pub use synth::SynthCorpus;
+pub use tokenizer::ByteTokenizer;
+
+/// CE ignore index — must match `aot.py` lowering (ignore_index = -1).
+pub const IGNORE_INDEX: i32 = -1;

@@ -1,0 +1,90 @@
+//! Byte-level tokenizer: token id = byte value; a few special ids above
+//! 255. Vocabularies of the executable presets (≥264) always cover it;
+//! for smaller vocabs (tiny preset, vocab 64) bytes are folded modulo the
+//! printable range — documented lossy mode for smoke tests only.
+
+/// Special token ids.
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const N_SPECIAL: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        Self { vocab }
+    }
+
+    /// True byte-level mode (lossless round-trip) available?
+    pub fn lossless(&self) -> bool {
+        self.vocab >= 256 + N_SPECIAL
+    }
+
+    pub fn encode_byte(&self, b: u8) -> i32 {
+        if self.lossless() {
+            b as i32
+        } else {
+            // fold into [0, vocab): smoke-test mode
+            (b as usize % self.vocab) as i32
+        }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| self.encode_byte(b)).collect()
+    }
+
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = vec![self.bos()];
+        v.extend(self.encode(text));
+        v
+    }
+
+    pub fn bos(&self) -> i32 {
+        if self.lossless() {
+            BOS
+        } else {
+            0
+        }
+    }
+
+    pub fn eos(&self) -> i32 {
+        if self.lossless() {
+            EOS
+        } else {
+            (self.vocab - 1) as i32
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8 as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_lossless() {
+        let t = ByteTokenizer::new(512);
+        let s = "Q: 17+25=? A: 42\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_in_range() {
+        let t = ByteTokenizer::new(512);
+        assert!(t.bos() < 512 && t.eos() < 512);
+        assert!(t.lossless());
+        let tiny = ByteTokenizer::new(64);
+        assert!(!tiny.lossless());
+        assert!(tiny.encode("hello world").iter().all(|&x| x < 64));
+    }
+}

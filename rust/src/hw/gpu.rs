@@ -1,0 +1,147 @@
+//! GPU spec table. Peak numbers are spec-sheet values; `throttle` is the
+//! paper's measured achievable fraction (§A.3: L40S sustains ~3/4 of peak,
+//! DGX Spark ~0.7, 4090/5060Ti slightly above 1.0 in matmul microbench).
+
+
+/// How GPUs in a node talk to each other (paper: consumer boards lost P2P).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interconnect {
+    /// PCIe without peer-to-peer: all traffic staged through host memory
+    /// (RTX 40xx/50xx gaming cards).
+    PcieHostStaged,
+    /// PCIe with P2P (professional cards, e.g. L40S).
+    PcieP2p,
+    /// NVLink (datacenter).
+    NvLink,
+    /// Unified CPU/GPU memory (DGX Spark): no PCIe hop at all, but all
+    /// traffic at LPDDR bandwidth.
+    Unified,
+}
+
+/// One accelerator model.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Dense peak TFLOP/s (no sparsity) per dtype.
+    pub bf16_tflops: f64,
+    pub fp8_tflops: f64,
+    /// Device memory capacity, GiB.
+    pub vram_gib: f64,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Host link bandwidth per direction, GB/s (PCIe x16 or unified-mem).
+    pub pcie_gbs: f64,
+    /// Dedicated copy engines usable for host<->device DMA.
+    pub copy_engines: usize,
+    /// Achievable fraction of spec-sheet peak (paper §A.3 microbench).
+    pub throttle: f64,
+    /// FP8 tensor cores present (Ada/Blackwell; Ampere = false).
+    pub has_fp8: bool,
+    pub interconnect: Interconnect,
+    pub cost_usd: f64,
+    pub power_w: f64,
+}
+
+impl GpuSpec {
+    /// Effective (achievable) FLOP/s for a dtype, after throttling.
+    pub fn eff_flops(&self, fp8: bool) -> f64 {
+        let peak = if fp8 && self.has_fp8 {
+            self.fp8_tflops
+        } else {
+            self.bf16_tflops
+        };
+        peak * 1e12 * self.throttle
+    }
+
+    pub fn vram_bytes(&self) -> f64 {
+        self.vram_gib * super::GIB
+    }
+}
+
+fn spec(
+    name: &str,
+    bf16: f64,
+    fp8: f64,
+    vram: f64,
+    mem_bw: f64,
+    pcie: f64,
+    throttle: f64,
+    has_fp8: bool,
+    icx: Interconnect,
+    cost: f64,
+    power: f64,
+) -> GpuSpec {
+    GpuSpec {
+        name: name.to_string(),
+        bf16_tflops: bf16,
+        fp8_tflops: fp8,
+        vram_gib: vram,
+        mem_bw_gbs: mem_bw,
+        pcie_gbs: pcie,
+        copy_engines: 2,
+        throttle,
+        has_fp8,
+        interconnect: icx,
+        cost_usd: cost,
+        power_w: power,
+    }
+}
+
+/// All modelled GPUs. Sources: Table 4 (H100 vs 4090), §4 (5060Ti 448GB/s,
+/// Spark 300GB/s unified 128GB), §A.3 (throttle factors).
+pub fn all_gpus() -> Vec<GpuSpec> {
+    use Interconnect::*;
+    vec![
+        // name        bf16   fp8   vram  membw  pcie  thr   fp8?  icx        $     W
+        spec("RTX 5060Ti", 61.4, 122.8, 16.0, 448.0, 32.0, 1.05, true, PcieHostStaged, 450.0, 180.0),
+        spec("RTX 4090", 165.2, 330.4, 24.0, 1008.0, 32.0, 1.03, true, PcieHostStaged, 2000.0, 450.0),
+        spec("L40S", 181.0, 362.0, 48.0, 864.0, 32.0, 0.75, true, PcieP2p, 8000.0, 350.0),
+        spec("H100", 989.4, 1978.9, 80.0, 3300.0, 64.0, 0.90, true, NvLink, 30000.0, 700.0),
+        // DGX Spark: GB10, 128GB unified LPDDR5x @ 273-300 GB/s.
+        spec("DGX Spark", 62.5, 125.0, 128.0, 300.0, 300.0, 0.70, true, Unified, 4000.0, 140.0),
+        // Ampere card for the BF16-only path (no FP8 tensor cores).
+        spec("RTX 3090", 71.0, 71.0, 24.0, 936.0, 32.0, 1.0, false, PcieHostStaged, 1500.0, 350.0),
+    ]
+}
+
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    all_gpus()
+        .into_iter()
+        .find(|g| g.name.eq_ignore_ascii_case(name) || g.name.replace(' ', "").eq_ignore_ascii_case(&name.replace(' ', "")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_ratios() {
+        // Table 4: H100/4090 — BF16 6x, memory 3.3x, bandwidth 3.3x,
+        // cost 15x, comm-bandwidth 14x.
+        let h = gpu_by_name("H100").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        assert!((h.bf16_tflops / g.bf16_tflops - 6.0).abs() < 0.1);
+        assert!((h.vram_gib / g.vram_gib - 3.33).abs() < 0.05);
+        assert!((h.mem_bw_gbs / g.mem_bw_gbs - 3.3).abs() < 0.1);
+        assert!((h.cost_usd / g.cost_usd - 15.0).abs() < 0.1);
+        // NVLink 900 GB/s vs PCIe 4.0 ~64 GB/s bidirectional → ratio 14
+        assert!((900.0 / (2.0 * g.pcie_gbs) - 14.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn lookup_flexible() {
+        assert!(gpu_by_name("rtx 4090").is_some());
+        assert!(gpu_by_name("RTX4090").is_some());
+        assert!(gpu_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fp8_doubles_bf16() {
+        for g in all_gpus() {
+            if g.has_fp8 {
+                assert!((g.fp8_tflops / g.bf16_tflops - 2.0).abs() < 0.01, "{}", g.name);
+            }
+            assert!(g.eff_flops(true) >= g.eff_flops(false) * 0.99, "{}", g.name);
+        }
+    }
+}

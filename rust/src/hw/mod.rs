@@ -1,0 +1,12 @@
+//! Hardware models: the GPUs the paper evaluates (Table 4 + §4/§A.3), the
+//! node topologies, and PCIe/NVLink links. These constants drive the
+//! memory planner and the discrete-event performance simulator.
+
+pub mod gpu;
+pub mod node;
+
+pub use gpu::{gpu_by_name, GpuSpec, Interconnect};
+pub use node::{NodeTopology, COMM_LATENCY_S};
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const GB: f64 = 1e9;

@@ -1,0 +1,70 @@
+//! Node topologies: a set of identical GPUs plus host memory and the
+//! PCIe/host fabric connecting them.
+
+
+use super::gpu::{GpuSpec, Interconnect};
+
+/// Per-transfer fixed latency on the host fabric (kernel-launch / DMA
+/// setup, seconds). Small but matters for tiny collective chunks.
+pub const COMM_LATENCY_S: f64 = 15e-6;
+
+/// A single machine: `n_gpus` × `gpu`, `host_mem_gib` of DRAM.
+#[derive(Debug, Clone)]
+pub struct NodeTopology {
+    pub gpu: GpuSpec,
+    pub n_gpus: usize,
+    pub host_mem_gib: f64,
+    /// Aggregate host-DRAM bandwidth (GB/s) shared by all PCIe streams —
+    /// on a consumer board all GPU↔GPU traffic bounces through this.
+    pub host_bw_gbs: f64,
+}
+
+impl NodeTopology {
+    pub fn new(gpu: GpuSpec, n_gpus: usize) -> Self {
+        // Paper's testbeds: the 5060Ti sits in a high-end gaming PC
+        // (~96 GB DDR5; §3.1: "even a high-end gaming PC will reach its
+        // limits"), the 4090/L40S in workstation-class hosts (~256 GB).
+        let host_mem_gib = if gpu.name.contains("5060") { 96.0 } else { 256.0 };
+        Self {
+            gpu,
+            n_gpus,
+            host_mem_gib,
+            host_bw_gbs: 80.0,
+        }
+    }
+
+    /// Can two GPUs copy directly, or must data stage through the host?
+    pub fn p2p(&self) -> bool {
+        matches!(
+            self.gpu.interconnect,
+            Interconnect::PcieP2p | Interconnect::NvLink
+        )
+    }
+
+    /// Effective GPU→GPU bandwidth for one pairwise stream (GB/s).
+    /// Host-staged: the transfer crosses PCIe twice (down + up) and both
+    /// halves contend for host DRAM.
+    pub fn p2p_bw_gbs(&self) -> f64 {
+        match self.gpu.interconnect {
+            Interconnect::NvLink => 450.0,
+            Interconnect::PcieP2p => self.gpu.pcie_gbs,
+            Interconnect::PcieHostStaged => self.gpu.pcie_gbs / 2.0,
+            Interconnect::Unified => self.gpu.mem_bw_gbs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn consumer_is_host_staged() {
+        let n = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 4);
+        assert!(!n.p2p());
+        assert_eq!(n.p2p_bw_gbs(), 16.0);
+        let l = NodeTopology::new(gpu_by_name("L40S").unwrap(), 4);
+        assert!(l.p2p());
+    }
+}

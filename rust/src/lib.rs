@@ -1,0 +1,33 @@
+//! # llmq — Efficient Lower-Precision Pretraining for Consumer GPUs
+//!
+//! Rust + JAX + Pallas reproduction of *LLMQ* (Schultheis & Alistarh, 2025).
+//!
+//! Three layers (see `DESIGN.md`):
+//! * **L3 (this crate)** — the coordinator: configuration, memory planning,
+//!   recomputation/offloading policies, ZeRO sharding, copy-engine
+//!   collectives (Fig. 1), the discrete-event performance model that
+//!   regenerates the paper's tables, and the real training loop.
+//! * **L2/L1 (python, build-time only)** — JAX transformer fwd/bwd calling
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — loads the HLO artifacts via the PJRT CPU client and
+//!   executes them from the rust hot path; python never runs at train time.
+
+pub mod baselines;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod memory;
+pub mod metrics;
+pub mod offload;
+pub mod optim;
+pub mod precision;
+pub mod recompute;
+pub mod runtime;
+pub mod shard;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+pub use anyhow::Result;

@@ -1,0 +1,58 @@
+//! `llmq` — leader entrypoint + CLI.
+//!
+//! Subcommands mirror the paper's workflows:
+//!   * `train`     — real training through the PJRT artifacts (single or
+//!                   multi virtual-GPU, FP8 or BF16).
+//!   * `plan`      — memory planner: what fits on which GPU with which
+//!                   offload/recompute combination (Table 7 logic).
+//!   * `simulate`  — discrete-event performance model for a configuration
+//!                   (the engine behind Tables 1/2/3/5).
+//!   * `selftest`  — load artifacts, verify runtime numerics vs the rust
+//!                   FP8/BF16 codecs.
+
+use anyhow::Result;
+use llmq::util::Args;
+
+const USAGE: &str = "\
+llmq — LLMQ reproduction: efficient lower-precision pretraining for consumer GPUs
+
+USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
+
+  selftest                   verify artifacts + runtime numerics
+  train     --preset tiny|small|e2e --dtype bf16|fp8|fp8_e5m2 --steps N
+            --grad-accum N --world N --lr F --seed N --data synth|gsm
+            --eval-every N --log FILE --save FILE --resume FILE
+  plan      --model 0.5B..32B|all --gpu NAME --gpus N --dtype D
+  simulate  --model NAME --gpu NAME --gpus N --dtype D --comm nccl|gather|scatter|full
+            --micro-batch N --step-tokens N
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("selftest") => {
+            let rt = llmq::runtime::Runtime::new(&artifacts)?;
+            println!("platform: {}", rt.platform());
+            rt.quantize_selftest()?;
+            println!("quantize selftest: OK");
+            for preset in ["tiny", "small", "e2e"] {
+                match rt.manifest(preset) {
+                    Ok(m) => println!(
+                        "manifest {preset}: {} params, batch {}, abi {}",
+                        m.total_numel, m.batch, m.abi_hash
+                    ),
+                    Err(e) => println!("manifest {preset}: unavailable ({e})"),
+                }
+            }
+            Ok(())
+        }
+        Some("train") => llmq::train::run_cli(&artifacts, &args),
+        Some("plan") => llmq::coordinator::run_plan_cli(&args),
+        Some("simulate") => llmq::sim::run_sim_cli(&args),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Static memory planning (paper §3: "All memory allocations in LLMQ
+//! happen at program startup... if the program does not run out of memory
+//! before the first step, it will never run out of memory").
+//!
+//! The planner computes the exact per-device and host footprints of a
+//! (model, dtype, recompute, offload, shard, batch) configuration and a
+//! fits/OOM verdict — reproducing the paper's "what fits on which card"
+//! results (§3.1 walkthrough, Table 7).
+
+pub mod planner;
+
+pub use planner::{plan, MemoryPlan, PlanInput};
+
+/// Bytes per element of each storage class.
+pub const BYTES_BF16: f64 = 2.0;
+pub const BYTES_FP8: f64 = 1.0;
+pub const BYTES_F32: f64 = 4.0;
+
+/// Fixed reserve for CUDA context, cuBLAS/cuDNN workspaces and kernel
+/// images (paper: OOM possible if <50 MiB free for kernels at step 1).
+pub const RESERVE_BYTES: f64 = 700.0 * 1024.0 * 1024.0;

@@ -1,0 +1,82 @@
+//! Model-FLOPs-Utilization, computed the way the paper does (§4):
+//! "we calculate the amount of floating-point operations to be done in
+//! each precision, divide by the device's peak rate, and get a lower
+//! bound for the achievable duration. The ratio of achievable duration to
+//! actual timing is presented in the MFU columns."
+//!
+//! Note the subtlety: MFU is *not* flops/peak_flops — it is
+//! `t_ideal / t_actual` where `t_ideal` sums per-precision ideal times.
+//! This is why FP8 runs can show *lower* MFU than BF16 runs at identical
+//! wall-clock (the ideal time shrinks).
+
+use crate::config::StepFlops;
+use crate::hw::GpuSpec;
+
+/// Per-step timing decomposition coming out of the simulator or a real run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepBreakdown {
+    pub compute_s: f64,
+    pub exposed_comm_s: f64,
+    pub exposed_offload_s: f64,
+    pub optimizer_s: f64,
+    pub overhead_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s
+            + self.exposed_comm_s
+            + self.exposed_offload_s
+            + self.optimizer_s
+            + self.overhead_s
+    }
+}
+
+/// Ideal (lower-bound) step duration on `gpu` for the given FLOP split.
+/// `fp8_linear` selects whether block matmuls count at the FP8 peak.
+/// Uses *spec-sheet* peak (throttle = 1), exactly like the paper — which
+/// is why L40S MFU looks low (§A.3).
+pub fn ideal_time_s(flops: &StepFlops, gpu: &GpuSpec, fp8_linear: bool) -> f64 {
+    let fp8_rate = if gpu.has_fp8 {
+        gpu.fp8_tflops * 1e12
+    } else {
+        gpu.bf16_tflops * 1e12
+    };
+    let bf16_rate = gpu.bf16_tflops * 1e12;
+    let linear_rate = if fp8_linear { fp8_rate } else { bf16_rate };
+    flops.linear / linear_rate + (flops.lm_head + flops.attention) / bf16_rate
+}
+
+/// MFU = ideal / actual (per paper §4), for one device.
+pub fn mfu(flops: &StepFlops, gpu: &GpuSpec, fp8_linear: bool, actual_s: f64) -> f64 {
+    ideal_time_s(flops, gpu, fp8_linear) / actual_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::hw::gpu_by_name;
+
+    #[test]
+    fn mfu_upper_bounded_by_one_at_ideal() {
+        let p = by_name("7B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        let f = p.step_flops(16 * 2048);
+        let t = ideal_time_s(&f, &g, true);
+        assert!((mfu(&f, &g, true, t) - 1.0).abs() < 1e-9);
+        assert!(mfu(&f, &g, true, t * 2.0) - 0.5 < 1e-9);
+    }
+
+    #[test]
+    fn fp8_ideal_time_smaller() {
+        let p = by_name("7B").unwrap();
+        let g = gpu_by_name("RTX 4090").unwrap();
+        let f = p.step_flops(2048);
+        assert!(ideal_time_s(&f, &g, true) < ideal_time_s(&f, &g, false));
+        // ...but not 2x smaller: LM-head + attention stay BF16 (paper:
+        // max theoretical FP8 speed-up for 7B ≈ 1.9x).
+        let ratio = ideal_time_s(&f, &g, false) / ideal_time_s(&f, &g, true);
+        assert!(ratio > 1.6 && ratio < 2.0, "ratio {ratio}");
+    }
+}

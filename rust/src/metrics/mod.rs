@@ -1,0 +1,8 @@
+//! Metrics: the paper's mixed-precision MFU definition (§4), throughput,
+//! and table formatting for the bench harnesses.
+
+pub mod mfu;
+pub mod table;
+
+pub use mfu::{mfu, StepBreakdown};
+pub use table::Table;

@@ -1,0 +1,107 @@
+//! Markdown table writer for the bench harnesses (each paper table is
+//! regenerated as a printed markdown table + CSV row dump).
+
+/// Simple aligned markdown table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line += &format!(" {:<w$} |", c, w = w);
+            }
+            line + "\n"
+        };
+        s += &fmt_row(&self.header, &width);
+        s += "|";
+        for w in &width {
+            s += &format!("{:-<w$}|", "", w = w + 2);
+        }
+        s += "\n";
+        for r in &self.rows {
+            s += &fmt_row(r, &width);
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",") + "\n";
+        for r in &self.rows {
+            s += &(r.join(",") + "\n");
+        }
+        s
+    }
+}
+
+/// Format tokens/sec the way the paper prints it ("7.8k", "191k", "970").
+pub fn fmt_tps(tps: f64) -> String {
+    if tps >= 100_000.0 {
+        format!("{:.0}k", tps / 1000.0)
+    } else if tps >= 10_000.0 {
+        format!("{:.1}k", tps / 1000.0)
+    } else if tps >= 1000.0 {
+        format!("{:.1}k", tps / 1000.0)
+    } else {
+        format!("{:.0}", tps)
+    }
+}
+
+/// Format MFU as a percentage.
+pub fn fmt_mfu(mfu: f64) -> String {
+    format!("{:.0}%", mfu * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("t", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bbbb |"));
+        assert!(md.contains("| 1 | 2    |"));
+    }
+
+    #[test]
+    fn tps_formats() {
+        assert_eq!(fmt_tps(7800.0), "7.8k");
+        assert_eq!(fmt_tps(191_000.0), "191k");
+        assert_eq!(fmt_tps(970.0), "970");
+    }
+}

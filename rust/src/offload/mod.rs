@@ -1,0 +1,122 @@
+//! CPU-offloading policies (paper §3.1 "Offloading", Table 7 legend):
+//! each tensor class can independently live in pinned host memory —
+//! residuals `x`, moments `m`,`v`, master params `θ*`, quantized params
+//! `θ`, gradients `g` — with explicit double-buffering (or zero-copy)
+//! prefetch so PCIe transfers hide behind compute.
+
+pub mod double_buffer;
+
+
+pub use double_buffer::{DoubleBuffer, TransferMode};
+
+/// Which tensor classes are offloaded to host memory. Table 7 notation:
+/// x, m, v, θ* (master), θ (quantized weights), g.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OffloadConfig {
+    pub residuals: bool,
+    pub moments: bool, // m and v together
+    pub master: bool,  // θ*
+    pub params: bool,  // θ (compute weights)
+    pub grads: bool,   // g
+    /// Zero-copy (GPU reads host directly) instead of double-buffering.
+    /// Paper: zero-copy is *slower* on gaming cards, faster on L40S.
+    pub zero_copy: bool,
+}
+
+impl OffloadConfig {
+    pub const NONE: OffloadConfig = OffloadConfig {
+        residuals: false,
+        moments: false,
+        master: false,
+        params: false,
+        grads: false,
+        zero_copy: false,
+    };
+
+    /// Everything offloaded (the paper's 7B-on-16GB configuration).
+    pub const FULL: OffloadConfig = OffloadConfig {
+        residuals: true,
+        moments: true,
+        master: true,
+        params: true,
+        grads: true,
+        zero_copy: false,
+    };
+
+    /// Table 7 shorthand ("x, m, v, θ*" etc.).
+    pub fn label(&self) -> String {
+        let mut parts = vec![];
+        if self.residuals {
+            parts.push("x");
+        }
+        if self.moments {
+            parts.push("m, v");
+        }
+        if self.grads {
+            parts.push("g");
+        }
+        if self.params {
+            parts.push("θ");
+        }
+        if self.master {
+            parts.push("θ*");
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+
+    /// Ordered escalation the auto-planner walks when a model doesn't fit
+    /// (paper §3.1 walks the same ladder: moments → master → residuals →
+    /// params → grads).
+    pub fn ladder() -> Vec<OffloadConfig> {
+        let mut steps = vec![OffloadConfig::NONE];
+        let mut c = OffloadConfig::NONE;
+        c.moments = true;
+        steps.push(c);
+        c.master = true;
+        steps.push(c);
+        c.residuals = true;
+        steps.push(c);
+        c.params = true;
+        steps.push(c);
+        c.grads = true;
+        steps.push(c);
+        steps
+    }
+
+    pub fn any(&self) -> bool {
+        self.residuals || self.moments || self.master || self.params || self.grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_monotone() {
+        let count = |c: &OffloadConfig| {
+            [c.residuals, c.moments, c.master, c.params, c.grads]
+                .iter()
+                .filter(|b| **b)
+                .count()
+        };
+        let l = OffloadConfig::ladder();
+        for w in l.windows(2) {
+            assert!(count(&w[1]) > count(&w[0]));
+        }
+        assert_eq!(*l.last().unwrap(), OffloadConfig::FULL);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(OffloadConfig::NONE.label(), "-");
+        let mut c = OffloadConfig::NONE;
+        c.moments = true;
+        c.master = true;
+        assert_eq!(c.label(), "m, v, θ*");
+    }
+}

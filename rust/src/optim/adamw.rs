@@ -1,0 +1,142 @@
+//! AdamW over flat f32 buffers holding bf16-grid state.
+
+use crate::precision::{bf16, CounterRng};
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        Self {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        }
+    }
+}
+
+/// Flat AdamW with SR-to-bf16 state, bit-identical to the Pallas kernel.
+#[derive(Debug)]
+pub struct AdamW {
+    pub hp: AdamWParams,
+    pub rng: CounterRng,
+}
+
+/// The key the Pallas kernel uses (kernels/adamw.py `key=0x11A17`).
+pub const ADAMW_RNG_KEY: u32 = 0x11A17;
+
+impl AdamW {
+    pub fn new(hp: AdamWParams) -> Self {
+        Self {
+            hp,
+            rng: CounterRng::new(ADAMW_RNG_KEY),
+        }
+    }
+
+    /// Update a shard in place. `step` is 1-based; `counter_base` must
+    /// advance by `3 * full_numel` per optimizer step (trainer's job) and
+    /// be offset per shard so draws never collide across ranks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        step: u32,
+        counter_base: u32,
+        n_full: u32,
+    ) {
+        let n = p.len();
+        let bc1 = 1.0 - self.hp.beta1.powi(step as i32);
+        let bc2 = 1.0 - self.hp.beta2.powi(step as i32);
+        let key_m = CounterRng::new(ADAMW_RNG_KEY ^ 0x6D61_6D6D);
+        let key_v = CounterRng::new(ADAMW_RNG_KEY ^ 0x7676_6172);
+        for i in 0..n {
+            let gi = g[i];
+            let m2 = self.hp.beta1 * m[i] + (1.0 - self.hp.beta1) * gi;
+            let v2 = self.hp.beta2 * v[i] + (1.0 - self.hp.beta2) * gi * gi;
+            let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + self.hp.eps)
+                + self.hp.weight_decay * p[i];
+            let p2 = p[i] - lr * upd;
+            let c = counter_base.wrapping_add(i as u32);
+            p[i] = bf16::stochastic_round_bf16(p2, &self.rng, c);
+            m[i] = bf16::stochastic_round_bf16(m2, &key_m, c.wrapping_add(n_full));
+            v[i] = bf16::stochastic_round_bf16(v2, &key_v, c.wrapping_add(2 * n_full));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::round_to_bf16;
+
+    #[test]
+    fn decreases_quadratic_loss() {
+        // minimize f(p) = p^2 / 2, grad = p
+        let hp = AdamWParams {
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        let opt = AdamW::new(hp);
+        let mut p = vec![round_to_bf16(2.0)];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        for s in 1..=300u32 {
+            let g = vec![p[0]];
+            opt.step(&mut p, &mut m, &mut v, &g, 0.05, s, s * 3, 1);
+        }
+        assert!(p[0].abs() < 0.2, "p = {}", p[0]);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let hp = AdamWParams {
+            weight_decay: 0.5,
+            ..Default::default()
+        };
+        let opt = AdamW::new(hp);
+        let mut p = vec![round_to_bf16(1.0)];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        for s in 1..=100u32 {
+            let g = vec![0.0];
+            opt.step(&mut p, &mut m, &mut v, &g, 0.01, s, s * 3, 1);
+        }
+        assert!(p[0] < 0.9);
+    }
+
+    #[test]
+    fn state_stays_on_bf16_grid() {
+        let opt = AdamW::new(AdamWParams::default());
+        let mut p = vec![round_to_bf16(0.3); 16];
+        let mut m = vec![0.0; 16];
+        let mut v = vec![0.0; 16];
+        let g: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.01).collect();
+        opt.step(&mut p, &mut m, &mut v, &g, 1e-3, 1, 0, 16);
+        for &x in p.iter().chain(&m).chain(&v) {
+            assert_eq!(x, round_to_bf16(x), "not on bf16 grid: {x}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let opt = AdamW::new(AdamWParams::default());
+            let mut p = vec![round_to_bf16(0.3); 8];
+            let mut m = vec![0.0; 8];
+            let mut v = vec![0.0; 8];
+            opt.step(&mut p, &mut m, &mut v, &[0.1; 8], 1e-3, 1, 42, 8);
+            p
+        };
+        assert_eq!(run(), run());
+    }
+}

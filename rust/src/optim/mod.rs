@@ -1,0 +1,49 @@
+//! Host-side optimizer: AdamW with BF16 stochastically-rounded state —
+//! the exact semantics of the AdamW Pallas kernel (`kernels/adamw.py`),
+//! used (a) for the host-offloaded optimizer path, (b) as the oracle the
+//! runtime artifact is tested against, and (c) for gradient-norm
+//! clipping, which the paper performs on the CPU side.
+
+pub mod adamw;
+
+pub use adamw::{AdamW, AdamWParams};
+
+/// Global L2 norm over a flat gradient buffer (f64 accumulation — this is
+/// the one reduction the paper cannot hide behind compute, §3.2).
+pub fn global_norm(grads: &[f32]) -> f32 {
+    grads
+        .iter()
+        .map(|&g| (g as f64) * (g as f64))
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Clip `grads` in place to `max_norm`; returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = global_norm(grads);
+    if norm > max_norm && norm > 0.0 {
+        let s = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= s;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_and_clip() {
+        let mut g = vec![3.0f32, 4.0];
+        assert!((global_norm(&g) - 5.0).abs() < 1e-6);
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((global_norm(&g) - 1.0).abs() < 1e-6);
+        // under the limit: untouched
+        let mut h = vec![0.1f32, 0.1];
+        clip_global_norm(&mut h, 1.0);
+        assert_eq!(h, vec![0.1, 0.1]);
+    }
+}

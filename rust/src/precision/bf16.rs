@@ -1,0 +1,134 @@
+//! BF16 grid arithmetic on f32 storage — mirrors `ref.round_to_bf16` /
+//! `ref.stochastic_round_bf16` bit-exactly.
+//!
+//! The paper (§3.1) keeps optimizer moments and master weights in BF16
+//! with *stochastic rounding* on the f32→bf16 conversion to stay unbiased,
+//! and accumulates gradients in BF16 ("many steps of gradient accumulation
+//! ... without catastrophic cancellation").
+
+use super::philox::CounterRng;
+
+/// Round-to-nearest-even f32 -> bf16 grid, returned as f32.
+#[inline]
+pub fn round_to_bf16(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    let rnd = bits
+        .wrapping_add(0x7FFF)
+        .wrapping_add((bits >> 16) & 1);
+    f32::from_bits(rnd & 0xFFFF_0000)
+}
+
+/// Stochastic rounding f32 -> bf16 grid: element `i` draws from
+/// `rng.next_u32(counter_base + i)` (identical to the AdamW Pallas kernel).
+#[inline]
+pub fn stochastic_round_bf16(x: f32, rng: &CounterRng, counter: u32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    let r = rng.next_u32(counter) & 0xFFFF;
+    f32::from_bits(bits.wrapping_add(r) & 0xFFFF_0000)
+}
+
+/// Round a slice onto the bf16 grid in place (RNE).
+pub fn round_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = round_to_bf16(*v);
+    }
+}
+
+/// Stochastically round a slice; element i uses counter_base + i.
+pub fn stochastic_round_slice(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = stochastic_round_bf16(*v, rng, counter_base.wrapping_add(i as u32));
+    }
+}
+
+/// BF16-grid accumulation: `acc = bf16(acc + x)` elementwise — the paper's
+/// gradient-accumulation semantics.
+pub fn accumulate_bf16(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a = round_to_bf16(*a + b);
+    }
+}
+
+/// Pack a bf16-grid f32 slice into raw u16 bf16 bits (wire/storage format:
+/// the paper communicates gradients in BF16 = 2 bytes/element).
+pub fn pack(x: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v.to_bits() >> 16) as u16;
+    }
+}
+
+/// Unpack u16 bf16 bits to f32.
+pub fn unpack(bits: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(bits.len(), out.len());
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = f32::from_bits((b as u32) << 16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rne_parity_with_python() {
+        // From ref.round_to_bf16([1.000001, -3.14159, 0.3333333, 65504.0]).
+        let xs = [1.000001f32, -3.14159, 0.3333333, 65504.0];
+        let exp = [0x3f80_0000u32, 0xc049_0000, 0x3eab_0000, 0x4780_0000];
+        for (x, e) in xs.iter().zip(exp) {
+            assert_eq!(round_to_bf16(*x).to_bits(), e, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sr_parity_with_python() {
+        // ref.stochastic_round_bf16(x, counter_base=12345, key=0x11A17).
+        let xs = [1.000001f32, -3.14159, 0.3333333, 65504.0];
+        let exp = [0x3f80_0000u32, 0xc049_0000, 0x3eab_0000, 0x477f_0000];
+        let rng = CounterRng::new(0x11A17);
+        for (i, (x, e)) in xs.iter().zip(exp).enumerate() {
+            let got = stochastic_round_bf16(*x, &rng, 12345 + i as u32);
+            assert_eq!(got.to_bits(), e, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sr_is_unbiased() {
+        // Mean of SR over many counters approaches the true value.
+        let x = 1.00390625f32; // halfway-ish between bf16 neighbours
+        let rng = CounterRng::new(99);
+        let n = 200_000u32;
+        let mean: f64 = (0..n)
+            .map(|c| stochastic_round_bf16(x, &rng, c) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - x as f64).abs() < 1e-4, "mean={mean}");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut x: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) * 0.37).collect();
+        round_slice(&mut x);
+        let mut bits = vec![0u16; x.len()];
+        pack(&x, &mut bits);
+        let mut back = vec![0f32; x.len()];
+        unpack(&bits, &mut back);
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn idempotent() {
+        for i in 0..1000 {
+            let x = (i as f32 - 500.0) * 0.773;
+            let q = round_to_bf16(x);
+            assert_eq!(round_to_bf16(q), q);
+        }
+    }
+}

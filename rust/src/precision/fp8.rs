@@ -1,0 +1,301 @@
+//! FP8 E4M3 / E5M2 codec — bit-exact mirror of `ref.round_to_fp8`.
+//!
+//! The paper's FP8 pipeline uses E4M3 (4 exponent bits, bias 7, max 448,
+//! no inf — the "fn" variant) for forward tensors and optionally E5M2
+//! (5 exponent bits, bias 15, max 57344) for activation gradients.
+//! With just-in-time absmax scaling no value is ever clipped (§3).
+
+use super::philox::CounterRng;
+
+/// An FP8 floating-point format description.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fp8Format {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    pub man_bits: u32,
+    pub bias: i32,
+    /// Largest finite magnitude, as f32 (exact).
+    pub max_val_bits: u32,
+}
+
+impl Fp8Format {
+    pub const fn max_val(&self) -> f32 {
+        f32::from_bits(self.max_val_bits)
+    }
+}
+
+// `max_val` can't be a const f32 field pre-1.83 float-const rules; store bits.
+pub const E4M3: Fp8Format = Fp8Format {
+    name: "e4m3",
+    exp_bits: 4,
+    man_bits: 3,
+    bias: 7,
+    max_val_bits: 0x43E0_0000, // 448.0
+};
+
+pub const E5M2: Fp8Format = Fp8Format {
+    name: "e5m2",
+    exp_bits: 5,
+    man_bits: 2,
+    bias: 15,
+    max_val_bits: 0x4760_0000, // 57344.0
+};
+
+impl Fp8Format {
+    /// Round a single f32 to the nearest FP8 grid value (RNE, saturating).
+    /// Identical algorithm to `ref.round_to_fp8` (and thus the Pallas
+    /// kernels): clamp, effective-exponent ulp, round-half-even.
+    pub fn round(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return f32::NAN;
+        }
+        let max_val = self.max_val();
+        let sign = if x < 0.0 { -1.0f32 } else { 1.0f32 };
+        let a = x.abs().min(max_val);
+        if a == 0.0 {
+            return 0.0;
+        }
+        let e_f32 = ((a.to_bits() >> 23) as i32) - 127;
+        let e_eff = e_f32.max(1 - self.bias);
+        // exact 2^(e_eff - man_bits) via bit construction (mirrors ref.py)
+        let ulp = f32::from_bits(((e_eff - self.man_bits as i32 + 127) as u32) << 23);
+        let q = round_half_even(a / ulp) * ulp;
+        sign * q.min(max_val)
+    }
+
+    /// Quantize a slice in place given a precomputed absmax; returns scale.
+    pub fn quantize_with_amax(&self, x: &mut [f32], amax: f32) -> f32 {
+        let scale = super::absmax_scale(amax, *self);
+        for v in x.iter_mut() {
+            *v = self.round(*v / scale);
+        }
+        scale
+    }
+
+    /// JIT absmax quantize: returns (scale); mutates x to grid values.
+    pub fn quantize(&self, x: &mut [f32]) -> f32 {
+        let amax = super::absmax(x);
+        self.quantize_with_amax(x, amax)
+    }
+
+    /// Dequantize grid values back to real magnitudes.
+    pub fn dequantize(&self, q: &mut [f32], scale: f32) {
+        for v in q.iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    /// Encode a grid value (output of `round` after scaling) into the raw
+    /// 8-bit pattern. Used by the offload/communication layers, which move
+    /// FP8 tensors as actual bytes (paper: weights gathered *in FP8*).
+    pub fn encode(&self, grid_val: f32) -> u8 {
+        if grid_val.is_nan() {
+            // canonical NaN: all-ones exponent+mantissa
+            return 0x7F;
+        }
+        let sign = if grid_val.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = grid_val.abs();
+        if a == 0.0 {
+            return sign;
+        }
+        let e_f32 = ((a.to_bits() >> 23) as i32) - 127;
+        let e_eff = e_f32.max(1 - self.bias);
+        let ulp = f32::from_bits(((e_eff - self.man_bits as i32 + 127) as u32) << 23);
+        let units = (a / ulp) as u32; // exact for grid values
+        let (exp_field, man_field) = if e_f32 < 1 - self.bias {
+            (0u32, units) // subnormal
+        } else {
+            (
+                (e_f32 + self.bias) as u32,
+                units - (1 << self.man_bits),
+            )
+        };
+        sign | ((exp_field << self.man_bits) | man_field) as u8
+    }
+
+    /// Decode a raw 8-bit pattern back to the f32 grid value.
+    pub fn decode(&self, byte: u8) -> f32 {
+        let sign = if byte & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let body = (byte & 0x7F) as u32;
+        let exp_field = body >> self.man_bits;
+        let man_field = body & ((1 << self.man_bits) - 1);
+        if exp_field == 0 {
+            // subnormal: man * 2^(1 - bias - man_bits)
+            let v = man_field as f32
+                * f32::from_bits(((1 - self.bias - self.man_bits as i32 + 127) as u32) << 23);
+            return sign * v;
+        }
+        let e = exp_field as i32 - self.bias;
+        let frac = 1.0 + man_field as f32 / (1u32 << self.man_bits) as f32;
+        sign * frac * f32::from_bits(((e + 127) as u32) << 23)
+    }
+
+    /// Number of distinct finite non-negative grid magnitudes.
+    pub fn grid_size(&self) -> usize {
+        // exponent fields 0..2^E-1, mantissa 0..2^M-1 (E4M3: top code is
+        // NaN only at all-ones mantissa; we treat full range as finite
+        // because `round` saturates at max_val before encode).
+        (1usize << (self.exp_bits + self.man_bits)) as usize
+    }
+}
+
+#[inline]
+fn round_half_even(x: f32) -> f32 {
+    // f32::round() rounds half away from zero; we need banker's rounding
+    // to match jnp.round / the Pallas kernels.
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let t = x.trunc();
+        if (t as i64) % 2 == 0 {
+            t
+        } else {
+            t + x.signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Stochastic FP8 rounding (used by the gradient reduce-scatter epilogue
+/// when accumulating in low precision).
+pub fn stochastic_round_fp8(fmt: Fp8Format, x: f32, rng_draw: u32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let max_val = fmt.max_val();
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let a = x.abs().min(max_val);
+    if a == 0.0 {
+        return 0.0;
+    }
+    let e_f32 = ((a.to_bits() >> 23) as i32) - 127;
+    let e_eff = e_f32.max(1 - fmt.bias);
+    let ulp = f32::from_bits(((e_eff - fmt.man_bits as i32 + 127) as u32) << 23);
+    let u = (rng_draw as f64 / u32::MAX as f64) as f32;
+    let q = (a / ulp + u).floor() * ulp;
+    sign * q.min(max_val)
+}
+
+/// Round an entire slice onto the FP8 grid (no scaling).
+pub fn round_slice(fmt: Fp8Format, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = fmt.round(*v);
+    }
+}
+
+/// Quantize + encode to bytes: the wire format for FP8 weight gathers.
+pub fn encode_tensor(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
+    let amax = super::absmax(x);
+    let scale = super::absmax_scale(amax, fmt);
+    let bytes = x
+        .iter()
+        .map(|&v| fmt.encode(fmt.round(v / scale)))
+        .collect();
+    (bytes, scale)
+}
+
+/// Decode bytes back to f32 (dequantized).
+pub fn decode_tensor(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len());
+    for (o, &b) in out.iter_mut().zip(bytes) {
+        *o = fmt.decode(b) * scale;
+    }
+}
+
+/// Unused variable silencer for CounterRng re-export coherence.
+#[allow(dead_code)]
+fn _rng_marker(_r: CounterRng) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_constants() {
+        assert_eq!(E4M3.max_val(), 448.0);
+        assert_eq!(E5M2.max_val(), 57344.0);
+    }
+
+    #[test]
+    fn round_saturates() {
+        assert_eq!(E4M3.round(1e9), 448.0);
+        assert_eq!(E4M3.round(-1e9), -448.0);
+        assert_eq!(E5M2.round(1e9), 57344.0);
+    }
+
+    #[test]
+    fn round_exact_values_fixed() {
+        // 1.0, 0.5, 448, and a subnormal are exactly representable.
+        for v in [0.0f32, 1.0, -1.0, 0.5, 448.0, 0.001953125] {
+            assert_eq!(E4M3.round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn round_is_idempotent() {
+        let mut x = -3.0f32;
+        while x < 3.0 {
+            let q = E4M3.round(x);
+            assert_eq!(E4M3.round(q), q, "x={x} q={q}");
+            x += 0.0137;
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // Between 1.0 (mantissa 000) and 1.125 (mantissa 001) the midpoint
+        // 1.0625 must round to 1.0 (even mantissa).
+        assert_eq!(E4M3.round(1.0625), 1.0);
+        // Between 1.125 and 1.25 midpoint 1.1875 -> 1.25 (even).
+        assert_eq!(E4M3.round(1.1875), 1.25);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        for fmt in [E4M3, E5M2] {
+            for byte in 0u16..=255 {
+                let b = byte as u8;
+                let v = fmt.decode(b);
+                if v.is_nan() || v.abs() > fmt.max_val() {
+                    continue;
+                }
+                let b2 = fmt.encode(v);
+                let v2 = fmt.decode(b2);
+                assert_eq!(v.to_bits(), v2.to_bits(), "{} byte {b:#x}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_roundtrip_random() {
+        let mut rng = crate::precision::CounterRng::new(7);
+        for i in 0..10_000u32 {
+            let x = (rng.next_u32(i) as f32 / u32::MAX as f32 - 0.5) * 1000.0;
+            let q = E4M3.round(x);
+            let b = E4M3.encode(q);
+            assert_eq!(E4M3.decode(b).to_bits(), q.to_bits());
+            // RNE is within half-ulp: |x - q| <= max(|x|,min_normal)*2^-3
+            if x.abs() <= 448.0 {
+                let err = (x - q).abs();
+                let bound = (x.abs().max(0.015625)) / 8.0;
+                assert!(err <= bound + 1e-7, "x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_scale_maps_amax_to_max() {
+        let mut x = vec![0.5f32, -2.0, 3.75, 0.0];
+        let scale = E4M3.quantize(&mut x);
+        assert!((scale - 3.75 / 448.0).abs() < 1e-9);
+        assert_eq!(x[2], 448.0);
+    }
+
+    #[test]
+    fn zero_tensor_scale_one() {
+        let mut x = vec![0.0f32; 8];
+        assert_eq!(E4M3.quantize(&mut x), 1.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,29 @@
+//! Low-precision numerics: FP8 E4M3/E5M2 codecs, the bf16 grid, absmax
+//! scaling and the counter-based RNG for stochastic rounding.
+//!
+//! Everything here mirrors `python/compile/kernels/ref.py` **bit-exactly**;
+//! `rust/tests/integration.rs` and the python parity fixtures enforce it.
+//! All buffers store f32 values that lie exactly on the lower-precision
+//! grid (same emulation strategy as the Pallas kernels — see ref.py).
+
+pub mod bf16;
+pub mod fp8;
+pub mod philox;
+
+pub use bf16::{round_to_bf16, stochastic_round_bf16};
+pub use fp8::{Fp8Format, E4M3, E5M2};
+pub use philox::CounterRng;
+
+/// Tensor-level absmax (paper §3: just-in-time scaling statistics).
+pub fn absmax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// JIT absmax scale for a format: largest magnitude maps to `fmt.max_val`.
+pub fn absmax_scale(amax: f32, fmt: Fp8Format) -> f32 {
+    if amax > 0.0 {
+        amax / fmt.max_val()
+    } else {
+        1.0
+    }
+}

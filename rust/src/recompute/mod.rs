@@ -1,0 +1,148 @@
+//! Selective activation recomputation (paper §3.1 "Activation
+//! checkpointing"): from recomputing nothing, through only the non-GEMM
+//! ops (SwiGLU, RMSNorm), up to recomputing entire transformer blocks
+//! keeping only the feed-forward residual.
+//!
+//! "In addition to preserving the feed-forward residual, we also always
+//! keep small statistics tensors from the forward pass" — the absmax
+//! stats, so recomputation can fuse quantization into the nonlinearity
+//! without a second global reduction. We model those stats (a few floats
+//! per tensor) as negligible bytes but *do* model the recompute FLOPs.
+
+
+use crate::config::ModelPreset;
+
+/// Recompute policy, ordered from cheapest memory savings to largest.
+/// Matches the paper's Table 7 vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Recompute {
+    /// Keep everything.
+    None,
+    /// Recompute SwiGLU output only (non-GEMM, cheap).
+    Swiglu,
+    /// Recompute SwiGLU + both RMSNorms ("FFN" nonlinearities).
+    FfnAtt,
+    /// Recompute QKV projections + FFN up/gate/SwiGLU.
+    QkvFfn,
+    /// Recompute the whole block; keep only the FFN residual (+stats).
+    Block,
+}
+
+impl Recompute {
+    pub const ALL: [Recompute; 5] = [
+        Recompute::None,
+        Recompute::Swiglu,
+        Recompute::FfnAtt,
+        Recompute::QkvFfn,
+        Recompute::Block,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Recompute::None => "-",
+            Recompute::Swiglu => "SwiGLU",
+            Recompute::FfnAtt => "FFN, Att",
+            Recompute::QkvFfn => "QKV, FFN",
+            Recompute::Block => "Block",
+        }
+    }
+
+    /// Activation elements stored per token per layer for the backward
+    /// pass (bf16-ish elements; residual counted separately since it can
+    /// be offloaded independently).
+    ///
+    /// Full inventory kept with `None` (elements/token):
+    ///   norm1 out d · q,k,v 3·qkv · sdpa out qkv · wo out d ·
+    ///   norm2 out d · gate f · up f · swiglu f · (softmax stats ~ T-free)
+    pub fn stored_elems_per_token(&self, m: &ModelPreset) -> f64 {
+        let d = m.d_model as f64;
+        let q = m.qkv_dim() as f64;
+        let f = m.d_ff as f64;
+        match self {
+            Recompute::None => 3.0 * d + 4.0 * q + 3.0 * f,
+            Recompute::Swiglu => 3.0 * d + 4.0 * q + 2.0 * f,
+            // norms + swiglu recomputed: drop norm outs and swiglu
+            Recompute::FfnAtt => d + 4.0 * q + 2.0 * f,
+            // + recompute qkv and gate/up: keep sdpa out + wo in only
+            Recompute::QkvFfn => d + 1.0 * q,
+            // whole block recomputed; only stats remain (residual is
+            // accounted separately as the per-layer residual stream)
+            Recompute::Block => 0.0,
+        }
+    }
+
+    /// Extra forward FLOPs during backward (fraction of one forward pass
+    /// of a block) caused by recomputation.
+    pub fn recompute_flops_frac(&self, m: &ModelPreset) -> f64 {
+        let d = m.d_model as f64;
+        let q = m.qkv_dim() as f64;
+        let f = m.d_ff as f64;
+        let gemm_macs = 4.0 * d * q + 3.0 * d * f;
+        match self {
+            Recompute::None => 0.0,
+            // nonlinearities only: negligible matmul flops
+            Recompute::Swiglu => 0.0,
+            Recompute::FfnAtt => 0.0,
+            Recompute::QkvFfn => (3.0 * d * q + 2.0 * d * f) / gemm_macs,
+            Recompute::Block => 1.0,
+        }
+    }
+
+    /// With Block recompute the FP8 transpose/quantize buffers have to be
+    /// rebuilt during backward, so FP8 *adds* memory (paper §4: "FP8
+    /// requires additional buffers for transposes and quantization, thus
+    /// actually using more memory when entire transformer blocks are
+    /// recomputed").
+    pub fn fp8_extra_elems_per_token(&self, m: &ModelPreset, fp8: bool) -> f64 {
+        if !fp8 {
+            return 0.0;
+        }
+        let d = m.d_model as f64;
+        let q = m.qkv_dim() as f64;
+        let f = m.d_ff as f64;
+        match self {
+            // transpose+quantize scratch for the largest concurrent GEMM
+            // input pair (FP8 = 1 byte/elem → count as 0.5 bf16 elems)
+            Recompute::Block | Recompute::QkvFfn => 0.5 * (d + f.max(q)),
+            _ => 0.5 * d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+
+    #[test]
+    fn monotone_memory_savings() {
+        let m = by_name("7B").unwrap();
+        let mut prev = f64::INFINITY;
+        for r in Recompute::ALL {
+            let e = r.stored_elems_per_token(&m);
+            assert!(e <= prev, "{r:?} stores more than previous policy");
+            prev = e;
+        }
+        assert_eq!(Recompute::Block.stored_elems_per_token(&m), 0.0);
+    }
+
+    #[test]
+    fn monotone_flops_cost() {
+        let m = by_name("7B").unwrap();
+        let mut prev = -1.0;
+        for r in Recompute::ALL {
+            let f = r.recompute_flops_frac(&m);
+            assert!(f >= prev);
+            assert!(f <= 1.0);
+            prev = f;
+        }
+        assert_eq!(Recompute::Block.recompute_flops_frac(&m), 1.0);
+    }
+
+    #[test]
+    fn fp8_block_recompute_costs_extra() {
+        let m = by_name("7B").unwrap();
+        assert!(Recompute::Block.fp8_extra_elems_per_token(&m, true) > 0.0);
+        assert_eq!(Recompute::Block.fp8_extra_elems_per_token(&m, false), 0.0);
+    }
+}

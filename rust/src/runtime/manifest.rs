@@ -1,0 +1,200 @@
+//! The artifact manifest — the ABI between `python/compile/aot.py` and the
+//! rust coordinator: parameter order/shapes/flat-offsets, microbatch size,
+//! chunking, and artifact file names. Parsed with the in-repo JSON reader
+//! (offline build — no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelCfg,
+    pub batch: usize,
+    pub lmhead_chunks: usize,
+    pub attn_chunks: usize,
+    pub world: usize,
+    pub params: Vec<ParamEntry>,
+    pub total_numel: usize,
+    pub padded_numel: usize,
+    pub shard_numel: usize,
+    pub policies: Vec<String>,
+    pub abi_hash: String,
+    pub artifacts: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let m = Self::from_json(&text)
+            .with_context(|| format!("parsing {:?}", path.as_ref()))?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let c = j.get("config")?;
+        let config = ModelCfg {
+            name: c.get("name")?.str()?.to_string(),
+            vocab: c.get("vocab")?.usize()?,
+            d_model: c.get("d_model")?.usize()?,
+            n_layers: c.get("n_layers")?.usize()?,
+            n_heads: c.get("n_heads")?.usize()?,
+            d_head: c.get("d_head")?.usize()?,
+            d_ff: c.get("d_ff")?.usize()?,
+            seq_len: c.get("seq_len")?.usize()?,
+            rope_theta: c.get("rope_theta")?.num()?,
+            norm_eps: c.get("norm_eps")?.num()?,
+        };
+        let params = j
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .arr()?
+                        .iter()
+                        .map(|d| d.usize())
+                        .collect::<Result<_>>()?,
+                    offset: p.get("offset")?.usize()?,
+                    numel: p.get("numel")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = match j.get("artifacts")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.str()?.to_string())))
+                .collect::<Result<HashMap<_, _>>>()?,
+            _ => anyhow::bail!("artifacts not an object"),
+        };
+        Ok(Manifest {
+            config,
+            batch: j.get("batch")?.usize()?,
+            lmhead_chunks: j.get("lmhead_chunks")?.usize()?,
+            attn_chunks: j.get("attn_chunks")?.usize()?,
+            world: j.get("world")?.usize()?,
+            params,
+            total_numel: j.get("total_numel")?.usize()?,
+            padded_numel: j.get("padded_numel")?.usize()?,
+            shard_numel: j.get("shard_numel")?.usize()?,
+            policies: j
+                .get("policies")?
+                .arr()?
+                .iter()
+                .map(|p| Ok(p.str()?.to_string()))
+                .collect::<Result<_>>()?,
+            abi_hash: j.get("abi_hash")?.str()?.to_string(),
+            artifacts,
+        })
+    }
+
+    /// Internal consistency: offsets contiguous, padding sane, shard even.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for p in &self.params {
+            anyhow::ensure!(p.offset == off, "param {} offset gap", p.name);
+            anyhow::ensure!(
+                p.numel == p.shape.iter().product::<usize>(),
+                "param {} numel/shape mismatch",
+                p.name
+            );
+            off += p.numel;
+        }
+        anyhow::ensure!(off == self.total_numel, "total_numel mismatch");
+        anyhow::ensure!(self.padded_numel >= self.total_numel);
+        anyhow::ensure!(self.padded_numel % self.world == 0);
+        anyhow::ensure!(self.shard_numel * self.world == self.padded_numel);
+        Ok(())
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&str> {
+        self.artifacts
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no artifact {key} in manifest"))
+    }
+
+    pub fn tokens_per_microbatch(&self) -> usize {
+        self.batch * self.config.seq_len
+    }
+
+    /// Read the flat initial-parameter file (f32, padded_numel values).
+    pub fn load_init(&self, dir: impl AsRef<Path>) -> Result<Vec<f32>> {
+        let path = dir.as_ref().join(self.artifact("init")?);
+        let bytes = std::fs::read(&path).with_context(|| format!("{path:?}"))?;
+        anyhow::ensure!(bytes.len() == self.padded_numel * 4, "init size");
+        let mut out = vec![0f32; self.padded_numel];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "config": {"name": "t", "vocab": 64, "d_model": 32, "n_layers": 2,
+                 "n_heads": 2, "d_head": 16, "d_ff": 64, "seq_len": 32,
+                 "rope_theta": 10000.0, "norm_eps": 1e-6},
+      "batch": 2, "lmhead_chunks": 2, "attn_chunks": 1, "world": 4,
+      "params": [
+        {"name": "a", "shape": [4, 2], "offset": 0, "numel": 8},
+        {"name": "b", "shape": [8], "offset": 8, "numel": 8}
+      ],
+      "total_numel": 16, "padded_numel": 16, "shard_numel": 4,
+      "policies": ["bf16"], "abi_hash": "xyz",
+      "artifacts": {"fwd": "t_fwd.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json(DOC).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.config.vocab, 64);
+        assert_eq!(m.params[1].offset, 8);
+        assert_eq!(m.artifact("fwd").unwrap(), "t_fwd.hlo.txt");
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(m.tokens_per_microbatch(), 64);
+    }
+
+    #[test]
+    fn rejects_offset_gap() {
+        let bad = DOC.replace("\"offset\": 8", "\"offset\": 9");
+        let m = Manifest::from_json(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the L3
+//! hot path. Python never runs here — the artifacts in `artifacts/` are the
+//! only hand-off from the compile path.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Outputs are lowered with `return_tuple=True`, so every execution yields
+//! a single tuple literal that we decompose.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+pub use manifest::{Manifest, ParamEntry};
+
+/// A loaded, compiled HLO executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute with device-resident input buffers (hot path: params stay
+    /// on device across steps, avoiding host→device copies). Outputs come
+    /// back as one tuple (return_tuple lowering), downloaded + decomposed.
+    pub fn run_b(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let mut out = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let bufs = out.swap_remove(0);
+        let lit = bufs[0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// `run_b` over borrowed buffers (mixing cached parameter buffers with
+    /// per-step token uploads without cloning).
+    pub fn run_b_refs(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let mut out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let bufs = out.swap_remove(0);
+        let lit = bufs[0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// The PJRT client plus a cache of compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+        let exe = Arc::new(Executable {
+            exe,
+            name: file.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Read a model manifest (`<preset>_manifest.json`).
+    pub fn manifest(&self, preset: &str) -> Result<Manifest> {
+        Manifest::load(self.artifacts_dir.join(format!("{preset}_manifest.json")))
+    }
+
+    /// Upload an f32 slice as a device buffer.
+    /// (`buffer_from_host_buffer`, not `buffer_from_host_literal` — the
+    /// latter segfaults in xla_extension 0.5.1's CPU plugin.)
+    pub fn buffer_f32(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        self.client
+            .buffer_from_host_buffer(data, &udims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Upload an i32 slice as a device buffer.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        self.client
+            .buffer_from_host_buffer(data, &udims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Run the FP8 quantize self-test artifact to verify the loaded stack's
+    /// numerics against the rust codec (startup sanity check).
+    pub fn quantize_selftest(&self) -> Result<()> {
+        let exe = self.load("quantize_selftest.hlo.txt")?;
+        let n = 4096usize;
+        let rng = crate::precision::CounterRng::new(0xA0);
+        let x: Vec<f32> = (0..n)
+            .map(|i| (rng.next_f32(i as u32) - 0.5) * 64.0)
+            .collect();
+        let out = exe.run(&[literal_f32(&x, &[n as i64])?])?;
+        let q: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let scale: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let mut expect = x.clone();
+        let s = crate::precision::E4M3.quantize(&mut expect);
+        // scale may differ by 1 ulp (eager-vs-lowered division rounding);
+        // grid values must match under the artifact's own scale.
+        anyhow::ensure!(
+            (scale[0] - s).abs() <= s.abs() * 1e-6,
+            "scale mismatch: {} vs {}",
+            scale[0],
+            s
+        );
+        let mut expect2 = x.clone();
+        crate::precision::E4M3
+            .quantize_with_amax(&mut expect2, scale[0] * crate::precision::E4M3.max_val());
+        for i in 0..n {
+            anyhow::ensure!(
+                (q[i] - expect2[i]).abs() <= (expect2[i].abs() * 1e-6).max(1e-7),
+                "q[{i}]: {} vs {}",
+                q[i],
+                expect2[i]
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build an f32 literal with shape `dims`.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Build an i32 literal with shape `dims`.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

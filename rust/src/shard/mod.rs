@@ -1,0 +1,156 @@
+//! ZeRO-style sharding (paper §3, §3.2): optimizer states are *always*
+//! sharded across workers ("strictly better than DDP"); weights and
+//! gradients shard independently. On consumer boards without P2P, sharded
+//! weights are cached in *host* memory — which inverts the classic ZeRO
+//! ordering: shard weights *before* gradients (§3.2 "Weight caching").
+
+
+/// Sharding configuration for a multi-GPU run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardConfig {
+    pub world: usize,
+    /// Optimizer states sharded — always true in LLMQ when world > 1.
+    pub optimizer: bool,
+    /// Model (compute) weights sharded, gathered layer-by-layer.
+    pub weights: bool,
+    /// Gradients sharded (reduce-scatter instead of all-reduce).
+    pub grads: bool,
+    /// Sharded weights cached in host memory (consumer PCIe topology).
+    pub host_weight_cache: bool,
+}
+
+impl ShardConfig {
+    pub fn single() -> Self {
+        Self {
+            world: 1,
+            optimizer: false,
+            weights: false,
+            grads: false,
+            host_weight_cache: false,
+        }
+    }
+
+    /// LLMQ default for a world size: ZeRO-1 always on.
+    pub fn zero1(world: usize) -> Self {
+        Self {
+            world,
+            optimizer: world > 1,
+            weights: false,
+            grads: false,
+            host_weight_cache: false,
+        }
+    }
+
+    /// Full sharding with host weight cache (paper's large-model config).
+    pub fn full(world: usize) -> Self {
+        Self {
+            world,
+            optimizer: world > 1,
+            weights: world > 1,
+            grads: world > 1,
+            host_weight_cache: world > 1,
+        }
+    }
+
+    /// The escalation order LLMQ recommends on consumer hardware:
+    /// ZeRO-1 → +weights (host-cached) → +grads. (Inverted vs ZeRO-2/3!)
+    pub fn ladder(world: usize) -> Vec<ShardConfig> {
+        if world <= 1 {
+            return vec![ShardConfig::single()];
+        }
+        let z1 = ShardConfig::zero1(world);
+        let mut zw = z1;
+        zw.weights = true;
+        zw.host_weight_cache = true;
+        let mut zwg = zw;
+        zwg.grads = true;
+        vec![z1, zw, zwg]
+    }
+
+    /// Fraction of a tensor class resident per device.
+    pub fn opt_frac(&self) -> f64 {
+        if self.optimizer {
+            1.0 / self.world as f64
+        } else {
+            1.0
+        }
+    }
+
+    pub fn weight_frac(&self) -> f64 {
+        if self.weights {
+            1.0 / self.world as f64
+        } else {
+            1.0
+        }
+    }
+
+    pub fn grad_frac(&self) -> f64 {
+        if self.grads {
+            1.0 / self.world as f64
+        } else {
+            1.0
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if self.world == 1 {
+            return "-".into();
+        }
+        let mut s = String::from("Z1");
+        if self.weights {
+            s += "+W";
+        }
+        if self.grads {
+            s += "+G";
+        }
+        if self.host_weight_cache {
+            s += " (host)";
+        }
+        s
+    }
+}
+
+/// Partition `[0, numel)` into `world` contiguous equal shards (numel must
+/// be padded to a multiple of world — aot.py guarantees this for the flat
+/// parameter buffer).
+pub fn shard_range(numel: usize, world: usize, rank: usize) -> std::ops::Range<usize> {
+    assert!(numel % world == 0, "unpadded shard");
+    let per = numel / world;
+    rank * per..(rank + 1) * per
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition() {
+        let n = 4096;
+        let mut covered = vec![false; n];
+        for r in 0..4 {
+            for i in shard_range(n, 4, r) {
+                assert!(!covered[i]);
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ladder_orders_weights_before_grads() {
+        let l = ShardConfig::ladder(4);
+        assert!(l[1].weights && !l[1].grads, "weights shard first (paper §3.2)");
+        assert!(l[2].weights && l[2].grads);
+        assert!(l.iter().skip(1).all(|c| c.host_weight_cache));
+    }
+
+    #[test]
+    fn fracs() {
+        let c = ShardConfig::full(4);
+        assert_eq!(c.opt_frac(), 0.25);
+        assert_eq!(c.weight_frac(), 0.25);
+        assert_eq!(c.grad_frac(), 0.25);
+        let s = ShardConfig::single();
+        assert_eq!(s.opt_frac(), 1.0);
+    }
+}

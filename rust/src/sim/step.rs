@@ -1,0 +1,493 @@
+//! Build and schedule the task graph of one optimizer step.
+//!
+//! The graph encodes the paper's overlap structure:
+//!  * layer-weight prefetches (host cache / offload) run on CE-in and
+//!    hide behind the previous layer's compute (§3.1, §3.2);
+//!  * gradient reduce-scatter (Fig. 1) runs on the copy engines and hides
+//!    behind the *next* transformer layer's backward — only a sync at the
+//!    end of that layer ("Only after that transformer layer has finished
+//!    do we need to synchronize");
+//!  * NCCL-style collectives instead run as SM kernels: they serialize
+//!    with compute and see poor PCIe utilization on consumer boards
+//!    (Table 5's gap);
+//!  * the LM-head gradient sync overlaps the last two layers' backward
+//!    (§3.2 "Imbalances"); the embedding gradient sync cannot be hidden.
+
+
+use super::cost::CostModel;
+use super::engine::{Engine, Stream, TaskId};
+use crate::config::ModelPreset;
+use crate::hw::NodeTopology;
+use crate::metrics::StepBreakdown;
+use crate::offload::{OffloadConfig, TransferMode};
+use crate::recompute::Recompute;
+use crate::shard::ShardConfig;
+
+/// Which collective implementation runs (Table 5 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommBackend {
+    /// NCCL for both all-gather and reduce-scatter ("None" column).
+    Nccl,
+    /// Memcpy all-gather, NCCL reduce-scatter ("Gather").
+    MemcpyGather,
+    /// NCCL all-gather, memcpy reduce-scatter ("Scatter").
+    MemcpyScatter,
+    /// Memcpy for all large collectives ("Full").
+    MemcpyFull,
+}
+
+impl CommBackend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "nccl" | "none" => CommBackend::Nccl,
+            "gather" => CommBackend::MemcpyGather,
+            "scatter" => CommBackend::MemcpyScatter,
+            "full" | "memcpy" => CommBackend::MemcpyFull,
+            _ => anyhow::bail!("unknown comm backend {s}"),
+        })
+    }
+
+    pub fn gather_is_memcpy(&self) -> bool {
+        matches!(self, CommBackend::MemcpyGather | CommBackend::MemcpyFull)
+    }
+
+    pub fn scatter_is_memcpy(&self) -> bool {
+        matches!(self, CommBackend::MemcpyScatter | CommBackend::MemcpyFull)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CommBackend::Nccl => "None",
+            CommBackend::MemcpyGather => "Gather",
+            CommBackend::MemcpyScatter => "Scatter",
+            CommBackend::MemcpyFull => "Full",
+        }
+    }
+}
+
+/// Full step configuration.
+#[derive(Debug, Clone)]
+pub struct StepConfig {
+    pub micro_batch: usize,
+    pub grad_accum: usize,
+    pub recompute: Recompute,
+    pub offload: OffloadConfig,
+    pub shard: ShardConfig,
+    pub comm: CommBackend,
+    pub transfer_mode: TransferMode,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub step_s: f64,
+    pub tokens_per_s: f64,
+    pub mfu: f64,
+    pub step_tokens: usize,
+    pub breakdown: StepBreakdown,
+}
+
+const TAG_COMPUTE: u64 = 1;
+const TAG_COMM: u64 = 2;
+const TAG_OFFLOAD: u64 = 3;
+const TAG_OPT: u64 = 4;
+
+/// Simulate one optimizer step; `fp8` selects the block-GEMM precision.
+pub fn simulate_step(
+    m: &ModelPreset,
+    node: &NodeTopology,
+    fp8: bool,
+    cfg: &StepConfig,
+) -> StepResult {
+    let cm = CostModel::new(node.clone(), fp8);
+    let world = node.n_gpus;
+    let tokens_micro = (cfg.micro_batch * m.seq_len) as f64;
+    let step_tokens = cfg.micro_batch * m.seq_len * cfg.grad_accum * world;
+    let nl = m.n_layers;
+
+    // Weights streamed per layer? (offloaded, or sharded w/ host cache —
+    // the host cache is a memcpy-path feature; under NCCL the gather runs
+    // as an NCCL all-gather instead, which is exactly what Table 5's
+    // "None" column measures.)
+    let host_cache_active =
+        cfg.shard.weights && cfg.shard.host_weight_cache && cfg.comm.gather_is_memcpy();
+    let stream_weights = cfg.offload.params || host_cache_active;
+    // Sharded weights without an active host cache need per-layer gathers.
+    let gather_weights = cfg.shard.weights && !host_cache_active;
+
+    let lw_bytes = cm.layer_weight_bytes(m);
+    let lg_bytes = cm.layer_grad_bytes(m);
+    let resid_bytes = m.d_model as f64 * tokens_micro * 2.0;
+
+    let mut eng = Engine::new();
+
+    // Per-device prior-task handles for dependencies.
+    let mut dev_done: Vec<Vec<TaskId>> = vec![vec![]; world];
+
+    for dev in 0..world {
+        let sm = Stream::sm(dev);
+        let ce_in = Stream::ce_in(dev);
+        let ce_out = Stream::ce_out(dev);
+
+        let mut scatter_sync: Option<TaskId> = None;
+        let mut last_rs: Option<TaskId> = None;
+        let mut last_bwd: Option<TaskId> = None;
+
+        for micro in 0..cfg.grad_accum {
+            // ---------------- forward ----------------
+            let mut prefetches: Vec<Option<TaskId>> = vec![None; nl];
+            if stream_weights {
+                // First fwd after the optimizer step also writes the local
+                // shard to the host cache (§3.2): model as extra CE-out.
+                if micro == 0 && cfg.shard.weights {
+                    let shard_bytes = lw_bytes * nl as f64 / world as f64;
+                    eng.push_tagged(
+                        ce_out,
+                        cm.pcie_s(shard_bytes, cfg.transfer_mode),
+                        &[],
+                        "host-cache-write",
+                        TAG_OFFLOAD,
+                    );
+                }
+                for (l, p) in prefetches.iter_mut().enumerate().take(nl) {
+                    *p = Some(eng.push_tagged(
+                        ce_in,
+                        cm.pcie_s(lw_bytes, cfg.transfer_mode),
+                        &[],
+                        "w-prefetch",
+                        TAG_OFFLOAD,
+                    ));
+                    let _ = l;
+                }
+            }
+
+            for l in 0..nl {
+                let mut deps = vec![];
+                if let Some(p) = prefetches[l] {
+                    deps.push(p);
+                }
+                if gather_weights {
+                    // all-gather of this layer's weights
+                    let bytes = lw_bytes * (world as f64 - 1.0) / world as f64;
+                    let t = if cfg.comm.gather_is_memcpy() {
+                        eng.push_tagged(ce_in, cm.p2p_copy_s(bytes), &deps, "ag-memcpy", TAG_COMM)
+                    } else {
+                        eng.push_tagged(sm, cm.nccl_ring_s(bytes), &deps, "ag-nccl", TAG_COMM)
+                    };
+                    deps = vec![t];
+                }
+                let f = eng.push_tagged(
+                    sm,
+                    cm.layer_fwd_s(m, tokens_micro),
+                    &deps,
+                    "fwd",
+                    TAG_COMPUTE,
+                );
+                if cfg.offload.residuals {
+                    eng.push_tagged(
+                        ce_out,
+                        cm.pcie_s(resid_bytes, cfg.transfer_mode),
+                        &[f],
+                        "resid-out",
+                        TAG_OFFLOAD,
+                    );
+                }
+            }
+
+            // ---------------- head (fwd+bwd fused, chunked CE) ----------
+            let head = eng.push_tagged(
+                sm,
+                cm.head_s(m, tokens_micro),
+                &[],
+                "head",
+                TAG_COMPUTE,
+            );
+            let mut prev_bwd = head;
+
+            // ---------------- backward ----------------
+            let last_micro = micro + 1 == cfg.grad_accum;
+            for _l in (0..nl).rev() {
+                let mut deps = vec![prev_bwd];
+                if stream_weights {
+                    // bwd re-reads the host-cached layer (double-buffered,
+                    // prefetched during the previous layer's bwd).
+                    let p = eng.push_tagged(
+                        ce_in,
+                        cm.pcie_s(lw_bytes, cfg.transfer_mode),
+                        &[],
+                        "w-prefetch-bwd",
+                        TAG_OFFLOAD,
+                    );
+                    deps.push(p);
+                }
+                if cfg.offload.residuals {
+                    let p = eng.push_tagged(
+                        ce_in,
+                        cm.pcie_s(resid_bytes, cfg.transfer_mode),
+                        &[],
+                        "resid-in",
+                        TAG_OFFLOAD,
+                    );
+                    deps.push(p);
+                }
+                // Fig. 1 rule: before running layer l's backward we must
+                // have synced the reduce-scatter issued at layer l+1.
+                if let Some(s) = scatter_sync.take() {
+                    deps.push(s);
+                }
+                let b = eng.push_tagged(
+                    sm,
+                    cm.layer_bwd_s(m, tokens_micro, cfg.recompute.recompute_flops_frac(m)),
+                    &deps,
+                    "bwd",
+                    TAG_COMPUTE,
+                );
+                prev_bwd = b;
+                last_bwd = Some(b);
+
+                if cfg.offload.grads {
+                    eng.push_tagged(
+                        ce_out,
+                        cm.pcie_s(lg_bytes, cfg.transfer_mode),
+                        &[b],
+                        "grad-out",
+                        TAG_OFFLOAD,
+                    );
+                }
+                if world > 1 && last_micro {
+                    // gradient reduce-scatter for this layer
+                    let bytes = lg_bytes * (world as f64 - 1.0) / world as f64;
+                    let t = if cfg.comm.scatter_is_memcpy() {
+                        // Fig. 1: local accumulate (SM, tiny) + CE round-robin
+                        let acc = eng.push_tagged(
+                            sm,
+                            cm.membound_s(lg_bytes / world as f64 * 2.0),
+                            &[b],
+                            "rs-local-acc",
+                            TAG_COMPUTE,
+                        );
+                        let cp = eng.push_tagged(
+                            ce_out,
+                            cm.p2p_copy_s(bytes),
+                            &[acc],
+                            "rs-memcpy",
+                            TAG_COMM,
+                        );
+                        // final reduction of received chunks (SM, after sync)
+                        eng.push_tagged(
+                            sm,
+                            cm.membound_s(lg_bytes / world as f64 * world as f64),
+                            &[cp],
+                            "rs-reduce",
+                            TAG_COMPUTE,
+                        )
+                    } else {
+                        eng.push_tagged(sm, cm.nccl_ring_s(bytes), &[b], "rs-nccl", TAG_COMM)
+                    };
+                    scatter_sync = Some(t);
+                    last_rs = Some(t);
+                } else if world > 1 && last_micro {
+                    // Unsharded grads: bucketed per-layer all-reduce that
+                    // overlaps the remaining backward (DDP-style).
+                    let bytes = lg_bytes * 2.0 * (world as f64 - 1.0) / world as f64;
+                    let t = if cfg.comm.scatter_is_memcpy() {
+                        eng.push_tagged(ce_out, cm.p2p_copy_s(bytes), &[b], "ar-memcpy", TAG_COMM)
+                    } else {
+                        eng.push_tagged(sm, cm.nccl_ring_s(bytes), &[b], "ar-nccl", TAG_COMM)
+                    };
+                    last_rs = Some(t);
+                }
+            }
+
+
+            // Replicated LM-head/embedding grad sync (overlap-able with
+            // the last layers per §3.2; we issue it on CE after head bwd).
+            if world > 1 && last_micro {
+                let head_bytes = m.embed_head_params() as f64 * 2.0;
+                let t = if cfg.comm.scatter_is_memcpy() {
+                    eng.push_tagged(
+                        ce_out,
+                        cm.p2p_copy_s(head_bytes * 2.0 * (world as f64 - 1.0) / world as f64),
+                        &[head],
+                        "head-ar",
+                        TAG_COMM,
+                    )
+                } else {
+                    eng.push_tagged(sm, cm.nccl_ring_s(head_bytes * 2.0), &[head], "head-ar-nccl", TAG_COMM)
+                };
+                last_rs = Some(match last_rs {
+                    Some(prev) => eng.barrier(Stream::host(dev), &[prev, t]),
+                    None => t,
+                });
+            }
+        }
+
+        // ---------------- optimizer (ZeRO-1 sharded) ----------------
+        let opt_frac = cfg.shard.opt_frac();
+        let numel = m.n_params() as f64 * opt_frac;
+        let mut opt_deps: Vec<TaskId> = last_bwd.into_iter().collect();
+        if let Some(s) = scatter_sync.take() {
+            opt_deps.push(s);
+        }
+        if let Some(s) = last_rs {
+            opt_deps.push(s);
+        }
+        let opt = if cfg.offload.moments || cfg.offload.master {
+            // streamed optimizer: p,m,v roundtrip over PCIe, double-
+            // buffered against the memory-bound update → max() of the two
+            let stream_bytes = numel * 2.0 * 6.0; // m,v,p in + out (bf16)
+            let pcie = cm.pcie_s(stream_bytes, cfg.transfer_mode);
+            let compute = cm.optimizer_s(numel);
+            eng.push_tagged(sm, pcie.max(compute), &opt_deps, "opt-streamed", TAG_OPT)
+        } else {
+            eng.push_tagged(sm, cm.optimizer_s(numel), &opt_deps, "opt", TAG_OPT)
+        };
+        let mut final_task = opt;
+
+        // Updated weights redistribution: sharded+host-cache writes its
+        // shard back next step (modelled there); sharded w/o host-cache
+        // needs an all-gather of updated weights now.
+        if gather_weights {
+            let bytes = m.n_params() as f64 * (if fp8 { 1.0 } else { 2.0 })
+                * (world as f64 - 1.0)
+                / world as f64;
+            final_task = if cfg.comm.gather_is_memcpy() {
+                eng.push_tagged(ce_in, cm.p2p_copy_s(bytes), &[opt], "w-ag", TAG_COMM)
+            } else {
+                eng.push_tagged(sm, cm.nccl_ring_s(bytes), &[opt], "w-ag-nccl", TAG_COMM)
+            };
+        }
+        dev_done[dev].push(final_task);
+    }
+
+    let sched = eng.run();
+    let step_s = sched.makespan;
+
+    // Breakdown from per-tag totals (per device).
+    let w = world as f64;
+    let compute_s = eng.tagged_dur(TAG_COMPUTE) / w;
+    let opt_s = eng.tagged_dur(TAG_OPT) / w;
+    let comm_total = eng.tagged_dur(TAG_COMM) / w;
+    let off_total = eng.tagged_dur(TAG_OFFLOAD) / w;
+    let exposed = (step_s - compute_s - opt_s).max(0.0);
+    let denom = (comm_total + off_total).max(1e-12);
+    let breakdown = StepBreakdown {
+        compute_s,
+        exposed_comm_s: exposed * comm_total / denom,
+        exposed_offload_s: exposed * off_total / denom,
+        optimizer_s: opt_s,
+        overhead_s: 0.0,
+    };
+
+    let flops = m.step_flops(step_tokens / world);
+    let mfu = crate::metrics::mfu(&flops, &node.gpu, fp8, step_s);
+
+    StepResult {
+        step_s,
+        tokens_per_s: step_tokens as f64 / step_s,
+        mfu,
+        step_tokens,
+        breakdown,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::by_name;
+    use crate::hw::gpu_by_name;
+
+    fn base_cfg() -> StepConfig {
+        StepConfig {
+            micro_batch: 16,
+            grad_accum: 2,
+            recompute: Recompute::Block,
+            offload: OffloadConfig::FULL,
+            shard: ShardConfig::single(),
+            comm: CommBackend::MemcpyFull,
+            transfer_mode: TransferMode::DoubleBuffer,
+        }
+    }
+
+    #[test]
+    fn fp8_speedup_grows_with_model_size() {
+        let node = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 1);
+        let cfg = base_cfg();
+        let sp = |name: &str| {
+            let m = by_name(name).unwrap();
+            let f8 = simulate_step(&m, &node, true, &cfg).tokens_per_s;
+            let bf = simulate_step(&m, &node, false, &cfg).tokens_per_s;
+            f8 / bf
+        };
+        let s05 = sp("0.5B");
+        let s7 = sp("7B");
+        assert!(s7 > s05, "speedup should grow: 0.5B {s05:.2} vs 7B {s7:.2}");
+        assert!(s7 > 1.3 && s7 < 2.0, "7B speedup {s7:.2}");
+    }
+
+    #[test]
+    fn memcpy_beats_nccl_on_consumer_multi_gpu() {
+        let node = NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 4);
+        let m = by_name("14B").unwrap();
+        let mut cfg = base_cfg();
+        cfg.shard = ShardConfig::full(4);
+        cfg.micro_batch = 32;
+        cfg.grad_accum = 1;
+        let full = simulate_step(&m, &node, true, &cfg).tokens_per_s;
+        cfg.comm = CommBackend::Nccl;
+        let nccl = simulate_step(&m, &node, true, &cfg).tokens_per_s;
+        assert!(
+            full / nccl > 1.3,
+            "Table 5: memcpy {full:.0} vs nccl {nccl:.0}"
+        );
+    }
+
+    #[test]
+    fn nccl_gap_small_on_p2p_cards() {
+        let node = NodeTopology::new(gpu_by_name("L40S").unwrap(), 4);
+        let m = by_name("14B").unwrap();
+        let mut cfg = base_cfg();
+        cfg.shard = ShardConfig::full(4);
+        cfg.shard.host_weight_cache = false; // P2P cards gather directly
+        cfg.micro_batch = 32;
+        cfg.grad_accum = 1;
+        cfg.offload = OffloadConfig::NONE;
+        let full = simulate_step(&m, &node, true, &cfg).tokens_per_s;
+        cfg.comm = CommBackend::Nccl;
+        let nccl = simulate_step(&m, &node, true, &cfg).tokens_per_s;
+        let ratio = full / nccl;
+        assert!(
+            ratio < 1.25,
+            "Table 5 L40S: memcpy {full:.0} vs nccl {nccl:.0} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn multi_gpu_scales() {
+        let m = by_name("1.5B").unwrap();
+        let mut cfg = base_cfg();
+        cfg.offload = OffloadConfig::NONE;
+        cfg.recompute = Recompute::Swiglu;
+        cfg.micro_batch = 4;
+        cfg.grad_accum = 8;
+        let one = simulate_step(
+            &m,
+            &NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 1),
+            true,
+            &cfg,
+        )
+        .tokens_per_s;
+        let mut cfg4 = cfg.clone();
+        cfg4.shard = ShardConfig::zero1(4);
+        cfg4.grad_accum = 2;
+        let four = simulate_step(
+            &m,
+            &NodeTopology::new(gpu_by_name("RTX 4090").unwrap(), 4),
+            true,
+            &cfg4,
+        )
+        .tokens_per_s;
+        let scaling = four / one;
+        assert!(scaling > 2.5 && scaling < 4.2, "4-GPU scaling {scaling:.2}");
+    }
+}

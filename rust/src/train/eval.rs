@@ -1,0 +1,120 @@
+//! Evaluation utilities: host-side cross-entropy over artifact logits and
+//! greedy decoding for GSM-mini scoring (Table 6 reproduction).
+
+use anyhow::Result;
+
+use super::trainer::Trainer;
+use crate::data::{Batch, GsmMini, IGNORE_INDEX};
+
+/// Token-summed CE + valid count over flat `[n, vocab]` logits.
+pub fn host_cross_entropy(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, f64) {
+    let n = targets.len();
+    assert_eq!(logits.len(), n * vocab);
+    let mut sum = 0f64;
+    let mut count = 0f64;
+    for (i, &t) in targets.iter().enumerate() {
+        if t == IGNORE_INDEX || t < 0 || t as usize >= vocab {
+            continue;
+        }
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let z: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum();
+        sum += (m as f64 + z.ln()) - row[t as usize] as f64;
+        count += 1.0;
+    }
+    (sum, count)
+}
+
+/// Greedy-decode `max_new` tokens after `prompt_ids` using the fwd
+/// artifact (fixed [batch, seq] shape; right-padding is harmless under
+/// the causal mask). Returns the generated ids.
+pub fn greedy_decode(
+    trainer: &mut Trainer,
+    prompt_ids: &[i32],
+    max_new: usize,
+) -> Result<Vec<i32>> {
+    let seq = trainer.man.config.seq_len;
+    let batch = trainer.man.batch;
+    let vocab = trainer.man.config.vocab;
+    let mut ids: Vec<i32> = prompt_ids.to_vec();
+    if ids.len() >= seq {
+        ids = ids[ids.len() - (seq - max_new - 1).max(1)..].to_vec();
+    }
+    for _ in 0..max_new {
+        let pos = ids.len().min(seq) - 1;
+        let mut tokens = vec![0i32; batch * seq];
+        let window = if ids.len() > seq { &ids[ids.len() - seq..] } else { &ids };
+        tokens[..window.len()].copy_from_slice(window);
+        let b = Batch {
+            tokens,
+            targets: vec![0; batch * seq],
+            batch,
+            seq,
+        };
+        let logits = trainer.forward_logits(&b)?;
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+        ids.push(next);
+        if next == b'\n' as i32 {
+            break;
+        }
+        if ids.len() >= seq {
+            break;
+        }
+    }
+    Ok(ids[prompt_ids.len().min(ids.len())..].to_vec())
+}
+
+/// GSM-mini exact-match accuracy over `n_eval` held-out problems with
+/// `shots` in-context examples.
+pub fn gsm_mini_accuracy(
+    trainer: &mut Trainer,
+    seed: u32,
+    n_eval: u32,
+    shots: u32,
+) -> Result<f64> {
+    let gsm = GsmMini::new(seed);
+    let tok = crate::data::ByteTokenizer::new(trainer.man.config.vocab);
+    let mut correct = 0u32;
+    for i in 0..n_eval {
+        let (prompt, answer) = gsm.prompt(0x4000_0000 + i, shots);
+        let ids = tok.encode_with_bos(&prompt);
+        let gen = greedy_decode(trainer, &ids, 8)?;
+        let text = format!("a:{}", tok.decode(&gen));
+        if GsmMini::extract_answer(&text) == Some(answer) {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n_eval as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_ce_matches_uniform() {
+        // uniform logits → CE = ln(vocab)
+        let vocab = 8;
+        let logits = vec![0.0f32; 4 * vocab];
+        let targets = vec![1i32, 2, 3, IGNORE_INDEX];
+        let (sum, count) = host_cross_entropy(&logits, &targets, vocab);
+        assert_eq!(count, 3.0);
+        assert!((sum / count - (vocab as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_ce_peaked() {
+        let vocab = 4;
+        let mut logits = vec![0.0f32; vocab];
+        logits[2] = 50.0;
+        let (sum, count) = host_cross_entropy(&logits, &[2], vocab);
+        assert_eq!(count, 1.0);
+        assert!(sum < 1e-6, "confident correct → ~0 loss, got {sum}");
+    }
+}

@@ -1,0 +1,83 @@
+//! The real training path: rust coordinator driving the AOT PJRT
+//! artifacts. Python never runs here.
+//!
+//! One optimizer step = `grad_accum` microbatch fwd+bwd executions
+//! (device-resident parameters, BF16 gradient accumulation on the host
+//! arenas), optional multi-virtual-device reduce-scatter (the Fig. 1
+//! memcpy collective — real numerics), CPU-side global-norm clip, and the
+//! ZeRO-1-sharded AdamW artifact with stochastic rounding.
+
+pub mod eval;
+pub mod trainer;
+
+pub use eval::{greedy_decode, host_cross_entropy};
+pub use trainer::{StepStats, Trainer};
+
+use anyhow::Result;
+
+use crate::config::{Dtype, TrainConfig};
+use crate::util::Args;
+
+/// CLI: `llmq train --preset small --dtype fp8 --steps 50 --grad-accum 2
+/// --world 1 --lr 3e-4 --seed 0 --data synth --eval-every 10
+/// [--log FILE] [--save FILE] [--resume FILE]`.
+pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        dtype: Dtype::parse(&args.str("dtype", "fp8"))?,
+        grad_accum: args.usize("grad-accum", 2),
+        steps: args.usize("steps", 50),
+        lr: args.f32("lr", 3e-4),
+        seed: args.u32("seed", 0),
+        world: args.usize("world", 1),
+        eval_every: args.usize("eval-every", 10),
+        ..Default::default()
+    };
+    let preset = args.str("preset", "small");
+    let steps = cfg.steps;
+    let mut trainer = Trainer::new(artifacts, &preset, cfg)?;
+    if let Some(path) = args.get("resume") {
+        trainer.load_checkpoint(path)?;
+    }
+
+    let corpus_text = build_corpus(&args.str("data", "synth"), args.u32("seed", 0), &trainer)?;
+    let log = trainer.train_loop(&corpus_text, steps, |s| {
+        println!(
+            "step {:>4}  loss {:.4}  {}  {:>6.0} tok/s",
+            s.step,
+            s.loss,
+            s.val_loss
+                .map(|v| format!("val {v:.4}"))
+                .unwrap_or_else(|| "        ".into()),
+            s.tokens_per_s
+        );
+    })?;
+
+    if let Some(path) = args.get("log") {
+        std::fs::write(path, trainer::stats_to_csv(&log))?;
+        println!("log written to {path}");
+    }
+    if let Some(path) = args.get("save") {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// Build the training text for a dataset choice, sized to the run.
+pub fn build_corpus(kind: &str, seed: u32, trainer: &Trainer) -> Result<String> {
+    let tokens_needed = trainer.tokens_per_step() * (trainer.cfg.steps + 8) * 2;
+    Ok(match kind {
+        "synth" => crate::data::SynthCorpus::new(seed).text(0, tokens_needed),
+        "gsm" => {
+            let g = crate::data::GsmMini::new(seed);
+            let mut s = String::new();
+            let mut i = 0u32;
+            while s.len() < tokens_needed {
+                s += &g.corpus(i * 1000, 1000);
+                i += 1;
+            }
+            s
+        }
+        other => anyhow::bail!("unknown dataset {other}"),
+    })
+}

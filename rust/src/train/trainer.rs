@@ -1,0 +1,372 @@
+//! The Trainer: state, the optimizer-step pipeline, checkpoints.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::collectives::{all_gather_memcpy, reduce_scatter_memcpy, DeviceGroup};
+use crate::config::TrainConfig;
+use crate::data::{Batch, PackedDataset};
+use crate::optim;
+use crate::precision::{bf16, CounterRng};
+use crate::runtime::{literal_f32, literal_i32, Executable, Manifest, Runtime};
+use crate::shard::shard_range;
+
+/// Per-step statistics.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f32,
+    pub val_loss: Option<f32>,
+    pub grad_norm: f32,
+    pub tokens_per_s: f64,
+}
+
+pub fn stats_to_csv(stats: &[StepStats]) -> String {
+    let mut s = String::from("step,loss,val_loss,grad_norm,tokens_per_s\n");
+    for st in stats {
+        s += &format!(
+            "{},{},{},{},{}\n",
+            st.step,
+            st.loss,
+            st.val_loss.map(|v| v.to_string()).unwrap_or_default(),
+            st.grad_norm,
+            st.tokens_per_s
+        );
+    }
+    s
+}
+
+/// Real-training coordinator over one executable preset.
+pub struct Trainer {
+    pub rt: Runtime,
+    pub man: Manifest,
+    pub cfg: TrainConfig,
+    exe_train: std::sync::Arc<Executable>,
+    exe_adamw: std::sync::Arc<Executable>,
+    exe_fwd: std::sync::Arc<Executable>,
+    /// Flat bf16-grid state, padded to `world * shard` (master copy).
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Device-resident parameter buffers (invalidated by optimizer steps).
+    param_bufs: Option<Vec<xla::PjRtBuffer>>,
+    pub step: u32,
+    pub counter: u32,
+}
+
+impl Trainer {
+    pub fn new(artifacts: &str, preset: &str, cfg: TrainConfig) -> Result<Self> {
+        let rt = Runtime::new(artifacts)?;
+        let man = rt.manifest(preset)?;
+        anyhow::ensure!(
+            cfg.world == 1 || man.padded_numel % cfg.world == 0,
+            "world must divide padded_numel"
+        );
+        let exe_train = rt.load(man.artifact(cfg.dtype.artifact_key())?)?;
+        let exe_adamw = rt.load(man.artifact("adamw")?)?;
+        let exe_fwd = rt.load(man.artifact("fwd")?)?;
+        let params = man.load_init(rt.artifacts_dir())?;
+        let n = params.len();
+        Ok(Self {
+            rt,
+            man,
+            cfg,
+            exe_train,
+            exe_adamw,
+            exe_fwd,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            param_bufs: None,
+            step: 0,
+            counter: 1,
+        })
+    }
+
+    /// Switch the inference path to the FP8 forward artifact (Table 6's
+    /// "I → FP8" columns). Falls back with an error if the artifact set
+    /// predates fwd_fp8.
+    pub fn set_fp8_inference(&mut self, fp8: bool) -> Result<()> {
+        let key = if fp8 { "fwd_fp8" } else { "fwd" };
+        self.exe_fwd = self.rt.load(self.man.artifact(key)?)?;
+        Ok(())
+    }
+
+    pub fn tokens_per_step(&self) -> usize {
+        self.man.tokens_per_microbatch() * self.cfg.grad_accum * self.cfg.world
+    }
+
+    /// Upload parameters as device buffers (one per manifest entry).
+    fn ensure_param_bufs(&mut self) -> Result<()> {
+        if self.param_bufs.is_some() {
+            return Ok(());
+        }
+        let mut bufs = Vec::with_capacity(self.man.params.len());
+        for p in &self.man.params {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            let slice = &self.params[p.offset..p.offset + p.numel];
+            bufs.push(self.rt.buffer_f32(slice, &dims)?);
+        }
+        self.param_bufs = Some(bufs);
+        Ok(())
+    }
+
+    /// One microbatch fwd+bwd; accumulates bf16 grads into `acc`
+    /// (flat, padded) and returns the microbatch loss.
+    fn micro_step(&mut self, batch: &Batch, acc: &mut [f32]) -> Result<f32> {
+        self.ensure_param_bufs()?;
+        let b = batch.batch as i64;
+        let t = batch.seq as i64;
+        let tok = self.rt.buffer_i32(&batch.tokens, &[b, t])?;
+        let tgt = self.rt.buffer_i32(&batch.targets, &[b, t])?;
+
+        let bufs = self.param_bufs.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        // execute_b over borrowed buffers
+        let outs = self.exe_train.run_b_refs(&args)?;
+        let loss: f32 = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+
+        // accumulate grads (bf16 accumulation, paper §3)
+        for (i, p) in self.man.params.iter().enumerate() {
+            let g: Vec<f32> = outs[i + 1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            anyhow::ensure!(g.len() == p.numel, "grad {} shape", p.name);
+            bf16::accumulate_bf16(&mut acc[p.offset..p.offset + p.numel], &g);
+        }
+        Ok(loss)
+    }
+
+    /// Run one full optimizer step over `grad_accum × world` microbatches.
+    pub fn train_step(&mut self, batches: &[Batch]) -> Result<StepStats> {
+        let t0 = Instant::now();
+        let world = self.cfg.world;
+        let n = self.man.padded_numel;
+        anyhow::ensure!(batches.len() == self.cfg.grad_accum * world);
+
+        // Per virtual device gradient accumulators.
+        let mut dev_grads = vec![vec![0f32; n]; world];
+        let mut loss_sum = 0f32;
+        for (i, batch) in batches.iter().enumerate() {
+            let dev = i % world;
+            loss_sum += self.micro_step(batch, &mut dev_grads[dev])?;
+        }
+        let n_micro = batches.len() as f32;
+        // Average over all microbatches (each loss is token-mean).
+        for g in dev_grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x = bf16::round_to_bf16(*x / n_micro);
+            }
+        }
+
+        // Gradient reduction across virtual devices → per-rank shards,
+        // reassembled into one flat gradient buffer (rank r owns chunk r).
+        let rng = CounterRng::new(0xC011_EC7 ^ self.cfg.seed);
+        let mut flat_grads: Vec<f32>;
+        if world > 1 {
+            let chunk = n / world;
+            let mut shards: Vec<Vec<f32>> = vec![vec![0f32; chunk]; world];
+            let group = DeviceGroup {
+                world,
+                buffers: std::mem::take(&mut dev_grads),
+            };
+            // The paper's Fig. 1 memcpy reduce-scatter, real numerics.
+            reduce_scatter_memcpy(&group, &mut shards, &rng, self.counter);
+            flat_grads = vec![0f32; n];
+            for (r, sh) in shards.iter().enumerate() {
+                flat_grads[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
+            }
+        } else {
+            flat_grads = std::mem::take(&mut dev_grads[0]);
+        }
+
+        // CPU-side global-norm clip.
+        let grad_norm = crate::optim::global_norm(&flat_grads);
+        if grad_norm > self.cfg.grad_clip && grad_norm > 0.0 {
+            let s = self.cfg.grad_clip / grad_norm;
+            for g in flat_grads.iter_mut() {
+                *g = bf16::round_to_bf16(*g * s);
+            }
+        }
+
+        // Sharded AdamW via the artifact. The artifact is lowered for
+        // shards of padded/man.world elements (ZeRO-1 layout); a single-
+        // device run simply walks all shards itself (the paper's world=1
+        // degenerate case).
+        self.step += 1;
+        let lr = self.cfg.lr_at((self.step - 1) as usize);
+        let bc1 = 1.0 - self.cfg.beta1.powi(self.step as i32);
+        let bc2 = 1.0 - self.cfg.beta2.powi(self.step as i32);
+        let shard_len = self.man.shard_numel;
+        for rank in 0..self.man.world {
+            let range = shard_range(n, self.man.world, rank);
+            let counter_base = self.counter.wrapping_add((rank * shard_len) as u32);
+            let scalars = [
+                lr,
+                self.cfg.beta1,
+                self.cfg.beta2,
+                self.cfg.eps,
+                self.cfg.weight_decay,
+                bc1,
+                bc2,
+                f32::from_bits(counter_base),
+            ];
+            let outs = self.exe_adamw.run(&[
+                literal_f32(&self.params[range.clone()], &[shard_len as i64])?,
+                literal_f32(&self.m[range.clone()], &[shard_len as i64])?,
+                literal_f32(&self.v[range.clone()], &[shard_len as i64])?,
+                literal_f32(&flat_grads[range.clone()], &[shard_len as i64])?,
+                literal_f32(&scalars, &[8])?,
+            ])?;
+            let p2: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let m2: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let v2: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            self.params[range.clone()].copy_from_slice(&p2);
+            self.m[range.clone()].copy_from_slice(&m2);
+            self.v[range].copy_from_slice(&v2);
+        }
+        self.counter = self.counter.wrapping_add(3 * n as u32);
+
+        // All-gather of updated parameters (real memcpy collective when
+        // world > 1; here all virtual devices share self.params, so the
+        // gather is exercised for its numerics in tests).
+        if world > 1 {
+            let shards_p: Vec<Vec<f32>> = (0..world)
+                .map(|r| self.params[shard_range(n, world, r)].to_vec())
+                .collect();
+            let mut gathered = DeviceGroup::from_fn(world, n, |_, _| 0.0);
+            all_gather_memcpy(&shards_p, &mut gathered);
+            self.params.copy_from_slice(&gathered.buffers[0]);
+        }
+        self.param_bufs = None; // params changed → re-upload lazily
+
+        let tokens = self.man.tokens_per_microbatch() * batches.len();
+        Ok(StepStats {
+            step: self.step as usize,
+            loss: loss_sum / n_micro,
+            val_loss: None,
+            grad_norm,
+            tokens_per_s: tokens as f64 / t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Validation loss: fwd artifact + host CE (identical CE math across
+    /// precision policies, so Fig. 2 curves are comparable).
+    pub fn val_loss(&mut self, batches: &[Batch]) -> Result<f32> {
+        self.ensure_param_bufs()?;
+        let mut sum = 0f64;
+        let mut count = 0f64;
+        for batch in batches {
+            let logits = self.forward_logits(batch)?;
+            let (ls, c) = super::eval::host_cross_entropy(
+                &logits,
+                &batch.targets,
+                self.man.config.vocab,
+            );
+            sum += ls;
+            count += c;
+        }
+        Ok((sum / count.max(1.0)) as f32)
+    }
+
+    /// Run the inference artifact; returns flat [b·t·vocab] logits.
+    pub fn forward_logits(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        self.ensure_param_bufs()?;
+        let b = batch.batch as i64;
+        let t = batch.seq as i64;
+        let tok = self.rt.buffer_i32(&batch.tokens, &[b, t])?;
+        let bufs = self.param_bufs.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        args.push(&tok);
+        let outs = self.exe_fwd.run_b_refs(&args)?;
+        outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// The standard loop: shuffled batches from a text corpus, periodic
+    /// validation, per-step callback.
+    pub fn train_loop(
+        &mut self,
+        corpus: &str,
+        steps: usize,
+        mut on_step: impl FnMut(&StepStats),
+    ) -> Result<Vec<StepStats>> {
+        let tok = crate::data::ByteTokenizer::new(self.man.config.vocab);
+        let ds = PackedDataset::from_text(corpus, &tok, self.man.config.seq_len, self.cfg.seed);
+        let mut out = Vec::with_capacity(steps);
+        let per_step = self.cfg.grad_accum * self.cfg.world;
+        for s in 0..steps {
+            let batches: Vec<Batch> = (0..per_step)
+                .map(|i| ds.batch(s * per_step + i, i % self.cfg.world, self.man.batch))
+                .collect();
+            let mut st = self.train_step(&batches)?;
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                let vb: Vec<Batch> = (0..self.cfg.eval_batches)
+                    .map(|i| ds.val_batch(i, self.man.batch))
+                    .collect();
+                st.val_loss = Some(self.val_loss(&vb)?);
+            }
+            on_step(&st);
+            out.push(st);
+        }
+        Ok(out)
+    }
+
+    // ----- checkpoints ------------------------------------------------------
+
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.params.len() * 12 + 16);
+        bytes.extend_from_slice(&self.step.to_le_bytes());
+        bytes.extend_from_slice(&self.counter.to_le_bytes());
+        bytes.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for buf in [&self.params, &self.m, &self.v] {
+            for &x in buf.iter() {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() >= 16, "truncated checkpoint");
+        self.step = u32::from_le_bytes(bytes[0..4].try_into()?);
+        self.counter = u32::from_le_bytes(bytes[4..8].try_into()?);
+        let n = u64::from_le_bytes(bytes[8..16].try_into()?) as usize;
+        anyhow::ensure!(n == self.params.len(), "checkpoint size mismatch");
+        anyhow::ensure!(bytes.len() == 16 + 12 * n, "truncated checkpoint body");
+        let read = |dst: &mut [f32], base: usize| {
+            for (i, x) in dst.iter_mut().enumerate() {
+                let o = base + 4 * i;
+                *x = f32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
+            }
+        };
+        read(&mut self.params, 16);
+        read(&mut self.m, 16 + 4 * n);
+        read(&mut self.v, 16 + 8 * n);
+        self.param_bufs = None;
+        Ok(())
+    }
+
+    /// Host-side reference optimizer step (used in tests to cross-check
+    /// the AdamW artifact bit-for-bit).
+    pub fn host_adamw_reference(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        step: u32,
+        counter_base: u32,
+    ) {
+        let hp = optim::AdamWParams {
+            beta1: self.cfg.beta1,
+            beta2: self.cfg.beta2,
+            eps: self.cfg.eps,
+            weight_decay: self.cfg.weight_decay,
+        };
+        optim::AdamW::new(hp).step(p, m, v, g, lr, step, counter_base, p.len() as u32);
+    }
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmark harness (criterion stand-in): warmup + timed
+//! iterations, reporting median/mean/min, used by `rust/benches/*`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} median   {:>10.3?} mean   {:>10.3?} min   ({} iters)",
+            self.name, self.median, self.mean, self.min, self.iters
+        )
+    }
+}
+
+/// Runs closures with warmup and prints stats.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            iters: 10,
+            results: vec![],
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self {
+            warmup,
+            iters,
+            results: vec![],
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            median: times[times.len() / 2],
+            min: times[0],
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Throughput helper: elements/second at the median.
+    pub fn throughput(&self, name: &str, elements: f64) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| elements / r.median.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new(1, 5);
+        b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].min.as_nanos() > 0);
+        assert!(b.throughput("spin", 10_000.0).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,282 @@
+//! Minimal JSON reader (serde_json stand-in) — enough for the artifact
+//! manifests: objects, arrays, strings (with escapes), numbers, bools,
+//! null. Strict on structure, permissive on whitespace.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key}")),
+            _ => bail!("not an object"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn num(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        Ok(self.num()? as usize)
+    }
+
+    pub fn arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = HashMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = vec![];
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                &self.b[self.i..self.i + 4],
+                            )?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?,
+                            );
+                        }
+                        _ => bail!("bad escape at {}", self.i),
+                    }
+                }
+                _ => {
+                    // collect full UTF-8 sequence
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse()?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_doc() {
+        let j = Json::parse(
+            r#"{"config": {"name": "tiny", "vocab": 64},
+                "params": [{"name": "embed", "shape": [64, 32], "offset": 0}],
+                "ok": true, "x": null, "pi": 3.25}"#,
+        )
+        .unwrap();
+        assert_eq!(j.get("config").unwrap().get("name").unwrap().str().unwrap(), "tiny");
+        assert_eq!(j.get("config").unwrap().get("vocab").unwrap().usize().unwrap(), 64);
+        let p = &j.get("params").unwrap().arr().unwrap()[0];
+        assert_eq!(p.get("shape").unwrap().arr().unwrap()[1].usize().unwrap(), 32);
+        assert_eq!(j.get("pi").unwrap().num().unwrap(), 3.25);
+        assert_eq!(*j.get("ok").unwrap(), Json::Bool(true));
+        assert_eq!(*j.get("x").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn escapes_and_unicode() {
+        let j = Json::parse(r#"{"s": "a\nb\"cA ü"}"#).unwrap();
+        assert_eq!(j.get("s").unwrap().str().unwrap(), "a\nb\"cA ü");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} extra").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let j = Json::parse("[-1.5e3, 0.25, -7]").unwrap();
+        let a = j.arr().unwrap();
+        assert_eq!(a[0].num().unwrap(), -1500.0);
+        assert_eq!(a[1].num().unwrap(), 0.25);
+        assert_eq!(a[2].num().unwrap(), -7.0);
+    }
+}

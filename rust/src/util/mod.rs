@@ -1,0 +1,14 @@
+//! Self-contained infrastructure: the build environment is fully offline
+//! (only the `xla` crate closure is vendored), so the pieces that would
+//! normally come from clap/serde_json/criterion/proptest are implemented
+//! here — a CLI flag parser, a minimal JSON reader, a micro-benchmark
+//! harness, and a deterministic property-testing helper.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use args::Args;
+pub use bench::Bencher;
+pub use json::Json;

@@ -1,0 +1,110 @@
+//! Deterministic property-testing helper (proptest stand-in): generates
+//! pseudo-random cases from the counter RNG and reports the failing case
+//! index + seed on panic, so failures reproduce exactly.
+
+use crate::precision::CounterRng;
+
+/// A deterministic case generator for one property run.
+pub struct Gen {
+    rng: CounterRng,
+    cursor: u32,
+}
+
+impl Gen {
+    pub fn new(seed: u32, case: u32) -> Self {
+        Self {
+            rng: CounterRng::new(seed),
+            cursor: case.wrapping_mul(0x100_0003),
+        }
+    }
+
+    fn draw(&mut self) -> u32 {
+        let v = self.rng.next_u32(self.cursor);
+        self.cursor = self.cursor.wrapping_add(1);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + (self.draw() as usize) % (hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.draw() as f32 / u32::MAX as f32) * (hi - lo)
+    }
+
+    /// Roughly log-uniform magnitude with random sign — good for
+    /// exercising float edge behaviour across decades.
+    pub fn f32_logspace(&mut self, min_exp: f32, max_exp: f32) -> f32 {
+        let e = self.f32_in(min_exp, max_exp);
+        let sign = if self.draw() & 1 == 0 { 1.0 } else { -1.0 };
+        sign * 10f32.powf(e)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+}
+
+/// Run `cases` deterministic property cases; panics with the case index
+/// on the first failure.
+pub fn check(seed: u32, cases: u32, f: impl Fn(&mut Gen)) {
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed={seed} case={case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Gen::new(1, 7);
+        let mut b = Gen::new(1, 7);
+        assert_eq!(a.vec_f32(8, -1.0, 1.0), b.vec_f32(8, -1.0, 1.0));
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU32::new(0);
+        check(3, 25, |_g| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(3, 10, |g| {
+            let v = g.usize_in(0, 100);
+            assert!(v > 1000, "boom {v}"); // always fails
+        });
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check(9, 50, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Property tests over the collectives (proptest-style, using the
+//! deterministic in-repo generator): both reduce-scatter implementations
+//! agree with each other and with the dense reference across random
+//! world sizes, lengths and values; all-gathers are exact and identical.
+
+use llmq::collectives::{
+    all_gather_memcpy, all_gather_ring, allreduce_reference,
+    reduce_scatter_memcpy, reduce_scatter_ring, DeviceGroup,
+};
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::util::prop;
+
+fn random_group(g: &mut prop::Gen) -> DeviceGroup {
+    let world = g.usize_in(2, 6);
+    let chunk = g.usize_in(1, 64);
+    let n = world * chunk;
+    let vals: Vec<Vec<f32>> = (0..world)
+        .map(|_| {
+            (0..n)
+                .map(|_| round_to_bf16(g.f32_in(-4.0, 4.0)))
+                .collect()
+        })
+        .collect();
+    DeviceGroup {
+        world,
+        buffers: vals,
+    }
+}
+
+#[test]
+fn prop_memcpy_rs_matches_reference() {
+    prop::check(0xA11CE, 60, |g| {
+        let grp = random_group(g);
+        let world = grp.world;
+        let chunk = grp.chunk_len();
+        let reference = allreduce_reference(&grp);
+        let mut acc = vec![vec![0f32; chunk]; world];
+        reduce_scatter_memcpy(&grp, &mut acc, &CounterRng::new(5), 0);
+        for w in 0..world {
+            for i in 0..chunk {
+                let exact = reference[w * chunk + i];
+                let err = (acc[w][i] - exact).abs();
+                // SR picks one of the bracketing bf16 neighbours
+                let ulp = exact.abs().max(1e-3) / 128.0;
+                assert!(err <= ulp, "w{w} i{i}: {} vs {exact}", acc[w][i]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ring_and_memcpy_rs_agree() {
+    // Same reduction contract: both within one bf16 SR ulp of the
+    // reference, hence within 2 ulp of each other.
+    prop::check(0xB0B, 40, |g| {
+        let grp = random_group(g);
+        let world = grp.world;
+        let chunk = grp.chunk_len();
+        let mut a = vec![vec![0f32; chunk]; world];
+        let mut b = vec![vec![0f32; chunk]; world];
+        reduce_scatter_memcpy(&grp, &mut a, &CounterRng::new(9), 7);
+        reduce_scatter_ring(&grp, &mut b, &CounterRng::new(9), 7);
+        for w in 0..world {
+            for i in 0..chunk {
+                let err = (a[w][i] - b[w][i]).abs();
+                let ulp = a[w][i].abs().max(1e-3) / 64.0;
+                assert!(err <= ulp, "w{w} i{i}: {} vs {}", a[w][i], b[w][i]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_all_gathers_identical_and_exact() {
+    prop::check(0xC0FFEE, 60, |g| {
+        let world = g.usize_in(2, 6);
+        let chunk = g.usize_in(1, 48);
+        let shards: Vec<Vec<f32>> = (0..world)
+            .map(|_| g.vec_f32(chunk, -100.0, 100.0))
+            .collect();
+        let mut a = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        let mut b = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        all_gather_memcpy(&shards, &mut a);
+        all_gather_ring(&shards, &mut b);
+        assert_eq!(a.buffers, b.buffers);
+        // every rank has the concatenation of all shards, bit-exact
+        for w in 0..world {
+            for (src, sh) in shards.iter().enumerate() {
+                assert_eq!(&a.buffers[w][src * chunk..(src + 1) * chunk], &sh[..]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rs_deterministic_under_repeat() {
+    prop::check(0xDE7, 30, |g| {
+        let grp = random_group(g);
+        let run = |grp: &DeviceGroup| {
+            let mut acc = vec![vec![0.5f32; grp.chunk_len()]; grp.world];
+            reduce_scatter_memcpy(grp, &mut acc, &CounterRng::new(3), 42);
+            acc
+        };
+        assert_eq!(run(&grp), run(&grp));
+    });
+}
+
+#[test]
+fn prop_gather_then_scatter_roundtrip() {
+    // all-gather shards, reduce-scatter the gathered copies: each rank
+    // ends with world × its shard (every rank contributed an identical
+    // full buffer).
+    prop::check(0x600D, 30, |g| {
+        let world = g.usize_in(2, 4);
+        let chunk = g.usize_in(1, 32);
+        let shards: Vec<Vec<f32>> = (0..world)
+            .map(|_| {
+                (0..chunk)
+                    .map(|_| round_to_bf16(g.f32_in(-1.0, 1.0)))
+                    .collect()
+            })
+            .collect();
+        let mut gathered = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        all_gather_memcpy(&shards, &mut gathered);
+        let mut acc = vec![vec![0f32; chunk]; world];
+        reduce_scatter_memcpy(&gathered, &mut acc, &CounterRng::new(1), 0);
+        for w in 0..world {
+            for i in 0..chunk {
+                let exact = shards[w][i] * world as f32;
+                let err = (acc[w][i] - exact).abs();
+                assert!(
+                    err <= exact.abs().max(1e-2) / 64.0,
+                    "{} vs {exact}",
+                    acc[w][i]
+                );
+            }
+        }
+    });
+}

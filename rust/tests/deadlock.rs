@@ -1,0 +1,76 @@
+//! The §3.2 multi-threaded NCCL deadlock scenario and its CPU-barrier fix,
+//! exercised over many random schedules (beyond the unit tests in
+//! collectives::barrier).
+
+use std::time::Duration;
+
+use llmq::collectives::{CpuBarrier, DeadlockPolicy, QueueDeadlock};
+
+#[test]
+fn deadlock_appears_and_fix_holds_across_sizes() {
+    for world in [2usize, 4, 6] {
+        // Queue sized so the fast worker alone can exhaust it.
+        let post = 2 * world;
+        let cap = 1 + 1 + post; // pre + collective + posts of one worker
+
+        // Without the barrier: skewed schedule deadlocks.
+        let q = QueueDeadlock::new(world, cap);
+        let b = CpuBarrier::new(world);
+        let ok = llmq::collectives::run_workers(world, |r| {
+            llmq::collectives::iteration(
+                r,
+                &q,
+                &b,
+                DeadlockPolicy::None,
+                post,
+                true,
+                Duration::from_millis(300),
+            )
+        });
+        assert!(
+            ok.iter().any(|&x| !x),
+            "world {world}: expected deadlock without CPU sync"
+        );
+
+        // With the paper's CPU-side barrier: always completes.
+        let q = QueueDeadlock::new(world, cap);
+        let b = CpuBarrier::new(world);
+        let ok = llmq::collectives::run_workers(world, |r| {
+            llmq::collectives::iteration(
+                r,
+                &q,
+                &b,
+                DeadlockPolicy::CpuBarrier,
+                post,
+                true,
+                Duration::from_millis(3000),
+            )
+        });
+        assert!(
+            ok.iter().all(|&x| x),
+            "world {world}: CPU barrier must prevent the deadlock"
+        );
+    }
+}
+
+#[test]
+fn repeated_iterations_with_barrier_stay_live() {
+    // Multiple optimizer steps in sequence (the trainer's actual pattern).
+    let world = 4;
+    let q = QueueDeadlock::new(world, 12);
+    let b = CpuBarrier::new(world);
+    for _step in 0..5 {
+        let ok = llmq::collectives::run_workers(world, |r| {
+            llmq::collectives::iteration(
+                r,
+                &q,
+                &b,
+                DeadlockPolicy::CpuBarrier,
+                8,
+                true,
+                Duration::from_millis(2000),
+            )
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-module integration tests: trainer end-to-end on the tiny preset,
+//! checkpoint round-trips, python↔rust numeric parity fixtures, and the
+//! determinism guarantees the paper claims (§3 "Reproducibility").
+
+use llmq::config::{Dtype, TrainConfig};
+use llmq::data::{ByteTokenizer, PackedDataset};
+use llmq::precision::{round_to_bf16, CounterRng, E4M3};
+use llmq::train::Trainer;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/tiny_manifest.json").exists()
+}
+
+fn tiny_cfg(dtype: Dtype, world: usize) -> TrainConfig {
+    TrainConfig {
+        dtype,
+        grad_accum: 2,
+        steps: 3,
+        lr: 1e-3,
+        seed: 7,
+        world,
+        eval_every: 0,
+        ..Default::default()
+    }
+}
+
+fn corpus() -> String {
+    llmq::data::SynthCorpus::new(1).text(0, 40_000)
+}
+
+#[test]
+fn trainer_reduces_loss_on_tiny() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut t = Trainer::new(
+        "artifacts",
+        "tiny",
+        TrainConfig {
+            steps: 12,
+            ..tiny_cfg(Dtype::Fp8, 1)
+        },
+    )
+    .unwrap();
+    let stats = t.train_loop(&corpus(), 12, |_| {}).unwrap();
+    let first = stats[0].loss;
+    let last = stats.last().unwrap().loss;
+    assert!(last < first, "loss should drop: {first} -> {last}");
+    assert!(stats.iter().all(|s| s.loss.is_finite()));
+}
+
+#[test]
+fn training_is_bitwise_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        let mut t = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+        t.train_loop(&corpus(), 3, |_| {}).unwrap();
+        (t.params.clone(), t.m.clone(), t.v.clone())
+    };
+    let (p1, m1, v1) = run();
+    let (p2, m2, v2) = run();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&p1), bits(&p2), "params bitwise equal (paper §3)");
+    assert_eq!(bits(&m1), bits(&m2));
+    assert_eq!(bits(&v1), bits(&v2));
+}
+
+#[test]
+fn world4_training_runs_and_state_stays_bf16() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Bf16, 4)).unwrap();
+    let stats = t.train_loop(&corpus(), 2, |_| {}).unwrap();
+    assert_eq!(stats.len(), 2);
+    for &x in t.params.iter().chain(&t.m).chain(&t.v) {
+        assert_eq!(x, round_to_bf16(x), "state on bf16 grid");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("llmq_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    let text = corpus();
+
+    let mut a = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    a.train_loop(&text, 2, |_| {}).unwrap();
+    a.save_checkpoint(path.to_str().unwrap()).unwrap();
+    let after_save_step = a.step;
+
+    let mut b = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    b.load_checkpoint(path.to_str().unwrap()).unwrap();
+    assert_eq!(b.step, after_save_step);
+    assert_eq!(
+        a.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        b.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(a.counter, b.counter);
+}
+
+#[test]
+fn val_loss_close_to_train_loss_at_init() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut t = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Bf16, 1)).unwrap();
+    let tok = ByteTokenizer::new(t.man.config.vocab);
+    let ds = PackedDataset::from_text(&corpus(), &tok, t.man.config.seq_len, 0);
+    let vb: Vec<_> = (0..2).map(|i| ds.val_batch(i, t.man.batch)).collect();
+    let vl = t.val_loss(&vb).unwrap();
+    // Untrained model on ~uniform byte data: CE near ln(vocab).
+    let expect = (t.man.config.vocab as f32).ln();
+    assert!((vl - expect).abs() < 0.8, "val {vl} vs ln(V) {expect}");
+}
+
+#[test]
+fn precision_policies_agree_at_init() {
+    if !have_artifacts() {
+        return;
+    }
+    // The three policies share initial params; their first-step losses
+    // must agree closely (quantization noise only).
+    let text = corpus();
+    let mut losses = vec![];
+    for dtype in [Dtype::Bf16, Dtype::Fp8, Dtype::Fp8E5m2] {
+        let mut t = Trainer::new("artifacts", "tiny", tiny_cfg(dtype, 1)).unwrap();
+        let stats = t.train_loop(&text, 1, |_| {}).unwrap();
+        losses.push(stats[0].loss);
+    }
+    for w in losses.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 0.05,
+            "policy losses diverge at init: {losses:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// python ↔ rust parity fixtures (generated from compile.kernels.ref).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fp8_codec_parity_fixture() {
+    // ref.round_to_fp8([0.3, -7.7, 300.0, 1e-5], E4M3)
+    //   == [0.3125, -7.5, 288.0, 0.0]
+    let inputs = [0.3f32, -7.7, 300.0, 1e-5];
+    let expect = [0.3125f32, -7.5, 288.0, 0.0];
+    for (x, e) in inputs.iter().zip(expect) {
+        assert_eq!(E4M3.round(*x), e, "x={x}");
+    }
+}
+
+#[test]
+fn counter_rng_stream_disjointness() {
+    // Trainer advances counter by 3·padded per step; SR draws must never
+    // collide within a step across elements.
+    let rng = CounterRng::new(0x11A17);
+    let n = 1024u32;
+    let mut seen = std::collections::HashSet::new();
+    for base in [1u32, 1 + 3 * n] {
+        for i in 0..n {
+            assert!(seen.insert(rng.next_u32(base + i)), "collision at {i}");
+        }
+    }
+}

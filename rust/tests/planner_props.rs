@@ -1,0 +1,172 @@
+//! Property tests over the memory planner and the auto-planner: footprint
+//! monotonicity, fit-implies-resources invariants, and the paper's
+//! qualitative relationships across random configurations.
+
+use llmq::config::paper_presets;
+use llmq::hw::gpu_by_name;
+use llmq::memory::{plan, PlanInput};
+use llmq::offload::OffloadConfig;
+use llmq::recompute::Recompute;
+use llmq::shard::ShardConfig;
+use llmq::util::prop;
+
+fn random_offload(g: &mut prop::Gen) -> OffloadConfig {
+    OffloadConfig {
+        residuals: g.bool(),
+        moments: g.bool(),
+        master: g.bool(),
+        params: g.bool(),
+        grads: g.bool(),
+        zero_copy: false,
+    }
+}
+
+fn random_recompute(g: &mut prop::Gen) -> Recompute {
+    Recompute::ALL[g.usize_in(0, Recompute::ALL.len() - 1)]
+}
+
+#[test]
+fn prop_offloading_never_increases_device_bytes() {
+    let gpus = ["RTX 5060Ti", "RTX 4090", "L40S"];
+    let models = paper_presets();
+    prop::check(0x11, 120, |g| {
+        let gpu = gpu_by_name(gpus[g.usize_in(0, 2)]).unwrap();
+        let m = &models[g.usize_in(0, models.len() - 1)];
+        let rc = random_recompute(g);
+        let off = random_offload(g);
+        let b = g.usize_in(1, 16);
+        let fp8 = g.bool();
+        let base = PlanInput {
+            model: m,
+            gpu: &gpu,
+            fp8,
+            recompute: rc,
+            offload: OffloadConfig::NONE,
+            shard: ShardConfig::single(),
+            micro_batch: b,
+        };
+        let with = PlanInput {
+            offload: off,
+            ..base.clone()
+        };
+        let p0 = plan(&base, 256.0);
+        let p1 = plan(&with, 256.0);
+        assert!(
+            p1.dev_total <= p0.dev_total + 1.0,
+            "offload increased device bytes: {} -> {}",
+            p0.dev_total,
+            p1.dev_total
+        );
+        // and whatever left the device must appear on the host
+        if off.any() {
+            assert!(p1.host_bytes > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_more_recompute_less_activation_memory() {
+    let models = paper_presets();
+    prop::check(0x22, 80, |g| {
+        let gpu = gpu_by_name("RTX 4090").unwrap();
+        let m = &models[g.usize_in(0, models.len() - 1)];
+        let b = g.usize_in(1, 8);
+        let fp8 = false; // fp8 adds transpose buffers (tested separately)
+        let mut prev = f64::INFINITY;
+        for rc in Recompute::ALL {
+            let p = plan(
+                &PlanInput {
+                    model: m,
+                    gpu: &gpu,
+                    fp8,
+                    recompute: rc,
+                    offload: OffloadConfig::NONE,
+                    shard: ShardConfig::single(),
+                    micro_batch: b,
+                },
+                256.0,
+            );
+            assert!(
+                p.dev_activations <= prev + 1.0,
+                "{rc:?} grew activations"
+            );
+            prev = p.dev_activations;
+        }
+    });
+}
+
+#[test]
+fn prop_sharding_reduces_per_device_state() {
+    let models = paper_presets();
+    prop::check(0x33, 80, |g| {
+        let gpu = gpu_by_name("RTX 4090").unwrap();
+        let m = &models[g.usize_in(0, models.len() - 1)];
+        let b = g.usize_in(1, 4);
+        let mk = |shard: ShardConfig| {
+            plan(
+                &PlanInput {
+                    model: m,
+                    gpu: &gpu,
+                    fp8: true,
+                    recompute: Recompute::Block,
+                    offload: OffloadConfig::NONE,
+                    shard,
+                    micro_batch: b,
+                },
+                256.0,
+            )
+        };
+        let single = mk(ShardConfig::single());
+        let z1 = mk(ShardConfig::zero1(4));
+        let full = mk(ShardConfig::full(4));
+        assert!(z1.dev_moments < single.dev_moments);
+        assert!(full.dev_total < z1.dev_total + 1.0);
+    });
+}
+
+#[test]
+fn prop_autoplan_result_always_fits() {
+    let models = paper_presets();
+    prop::check(0x44, 12, |g| {
+        let gpus = ["RTX 5060Ti", "RTX 4090", "L40S"];
+        let gpu = gpu_by_name(gpus[g.usize_in(0, 2)]).unwrap();
+        let m = &models[g.usize_in(0, 3)]; // 0.5B..7B keep runtime bounded
+        let world = [1usize, 4][g.usize_in(0, 1)];
+        if let Ok((cfg, r)) = llmq::coordinator::autoplan(
+            m,
+            &gpu,
+            world,
+            g.bool(),
+            500_000,
+            llmq::sim::CommBackend::MemcpyFull,
+            0,
+        ) {
+            assert!(cfg.plan.fits, "autoplan returned non-fitting config");
+            assert!(cfg.plan.host_fits);
+            assert!(r.tokens_per_s > 0.0 && r.mfu > 0.0 && r.mfu < 1.0);
+        }
+    });
+}
+
+#[test]
+fn prop_mfu_bounded() {
+    // Simulated MFU must stay in (0, 1) for every fitting random config.
+    let models = paper_presets();
+    prop::check(0x55, 40, |g| {
+        let gpu = gpu_by_name("RTX 4090").unwrap();
+        let m = &models[g.usize_in(0, 2)];
+        let node = llmq::hw::NodeTopology::new(gpu.clone(), 1);
+        let cfg = llmq::sim::StepConfig {
+            micro_batch: g.usize_in(1, 16),
+            grad_accum: g.usize_in(1, 8),
+            recompute: random_recompute(g),
+            offload: random_offload(g),
+            shard: ShardConfig::single(),
+            comm: llmq::sim::CommBackend::MemcpyFull,
+            transfer_mode: llmq::offload::TransferMode::DoubleBuffer,
+        };
+        let r = llmq::sim::simulate_step(m, &node, g.bool(), &cfg);
+        assert!(r.mfu > 0.0 && r.mfu < 1.0, "mfu {}", r.mfu);
+        assert!(r.step_s.is_finite() && r.step_s > 0.0);
+    });
+}

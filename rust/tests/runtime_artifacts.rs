@@ -1,0 +1,222 @@
+//! Integration tests against the real AOT artifacts (require
+//! `make artifacts` to have produced `artifacts/`). These exercise the
+//! full hand-off: Pallas/JAX-lowered HLO text → PJRT CPU → rust.
+
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::runtime::{literal_f32, literal_i32, Runtime};
+
+fn artifacts_dir() -> String {
+    // tests run from the workspace root
+    std::env::var("LLMQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir())
+        .join("tiny_manifest.json")
+        .exists()
+}
+
+#[test]
+fn quantize_selftest_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    rt.quantize_selftest().unwrap();
+}
+
+#[test]
+fn fwd_artifact_runs_with_literals() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let man = rt.manifest("tiny").unwrap();
+    let exe = rt.load(man.artifact("fwd").unwrap()).unwrap();
+    let params = man.load_init(rt.artifacts_dir()).unwrap();
+    let mut args = vec![];
+    for p in &man.params {
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        args.push(literal_f32(&params[p.offset..p.offset + p.numel], &dims).unwrap());
+    }
+    let b = man.batch;
+    let t = man.config.seq_len;
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % man.config.vocab) as i32).collect();
+    args.push(literal_i32(&tokens, &[b as i64, t as i64]).unwrap());
+    let outs = exe.run(&args).unwrap();
+    let logits: Vec<f32> = outs[0].to_vec().unwrap();
+    assert_eq!(logits.len(), b * t * man.config.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn fwd_artifact_runs_with_buffers() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let man = rt.manifest("tiny").unwrap();
+    let exe = rt.load(man.artifact("fwd").unwrap()).unwrap();
+    let params = man.load_init(rt.artifacts_dir()).unwrap();
+    let mut bufs = vec![];
+    for p in &man.params {
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        bufs.push(
+            rt.buffer_f32(&params[p.offset..p.offset + p.numel], &dims)
+                .unwrap(),
+        );
+    }
+    let b = man.batch;
+    let t = man.config.seq_len;
+    let tokens: Vec<i32> = vec![1; b * t];
+    bufs.push(rt.buffer_i32(&tokens, &[b as i64, t as i64]).unwrap());
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let outs = exe.run_b_refs(&refs).unwrap();
+    let logits: Vec<f32> = outs[0].to_vec().unwrap();
+    assert_eq!(logits.len(), b * t * man.config.vocab);
+}
+
+#[test]
+fn train_artifact_loss_and_grads_finite() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let man = rt.manifest("tiny").unwrap();
+    let exe = rt.load(man.artifact("train_fp8").unwrap()).unwrap();
+    let params = man.load_init(rt.artifacts_dir()).unwrap();
+    let mut args = vec![];
+    for p in &man.params {
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        args.push(literal_f32(&params[p.offset..p.offset + p.numel], &dims).unwrap());
+    }
+    let b = man.batch;
+    let t = man.config.seq_len;
+    let rng = CounterRng::new(3);
+    let tokens: Vec<i32> = (0..b * t)
+        .map(|i| (rng.next_u32(i as u32) % man.config.vocab as u32) as i32)
+        .collect();
+    let targets: Vec<i32> = (0..b * t)
+        .map(|i| (rng.next_u32(0x8000 + i as u32) % man.config.vocab as u32) as i32)
+        .collect();
+    args.push(literal_i32(&tokens, &[b as i64, t as i64]).unwrap());
+    args.push(literal_i32(&targets, &[b as i64, t as i64]).unwrap());
+    let outs = exe.run(&args).unwrap();
+    let loss: Vec<f32> = outs[0].to_vec().unwrap();
+    // random tokens, vocab 64 → loss near ln(64) = 4.16
+    assert!((loss[0] - 4.16).abs() < 0.5, "loss {}", loss[0]);
+    assert_eq!(outs.len(), 1 + man.params.len());
+    for (i, p) in man.params.iter().enumerate() {
+        let g: Vec<f32> = outs[i + 1].to_vec().unwrap();
+        assert_eq!(g.len(), p.numel, "{}", p.name);
+        assert!(g.iter().all(|x| x.is_finite()), "{} grads finite", p.name);
+        // grads arrive on the bf16 grid (paper: bf16 grad accumulation)
+        for &x in g.iter().take(64) {
+            assert_eq!(x, round_to_bf16(x), "{} on bf16 grid", p.name);
+        }
+    }
+}
+
+#[test]
+fn adamw_artifact_matches_host_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let man = rt.manifest("tiny").unwrap();
+    let exe = rt.load(man.artifact("adamw").unwrap()).unwrap();
+    let n = man.shard_numel;
+    let rng = CounterRng::new(0x5EED);
+    let mk = |salt: u32| -> Vec<f32> {
+        (0..n)
+            .map(|i| round_to_bf16((rng.next_f32(salt + i as u32) - 0.5) * 0.2))
+            .collect()
+    };
+    let p = mk(0);
+    let m = mk(1_000_000);
+    let v: Vec<f32> = mk(2_000_000).iter().map(|x| x.abs()).collect();
+    let g = mk(3_000_000);
+    let (lr, b1, b2, eps, wd) = (1e-3f32, 0.9f32, 0.95f32, 1e-8f32, 0.1f32);
+    let step = 3u32;
+    let counter = 777u32;
+    let bc1 = 1.0 - b1.powi(step as i32);
+    let bc2 = 1.0 - b2.powi(step as i32);
+    let scalars = [lr, b1, b2, eps, wd, bc1, bc2, f32::from_bits(counter)];
+    let outs = exe
+        .run(&[
+            literal_f32(&p, &[n as i64]).unwrap(),
+            literal_f32(&m, &[n as i64]).unwrap(),
+            literal_f32(&v, &[n as i64]).unwrap(),
+            literal_f32(&g, &[n as i64]).unwrap(),
+            literal_f32(&scalars, &[8]).unwrap(),
+        ])
+        .unwrap();
+    let p2: Vec<f32> = outs[0].to_vec().unwrap();
+    let m2: Vec<f32> = outs[1].to_vec().unwrap();
+    let v2: Vec<f32> = outs[2].to_vec().unwrap();
+
+    // host oracle (must be bit-identical: same SR counters, same math)
+    let hp = llmq::optim::AdamWParams {
+        beta1: b1,
+        beta2: b2,
+        eps,
+        weight_decay: wd,
+    };
+    let opt = llmq::optim::AdamW::new(hp);
+    let mut hp2 = p.clone();
+    let mut hm2 = m.clone();
+    let mut hv2 = v.clone();
+    opt.step(&mut hp2, &mut hm2, &mut hv2, &g, lr, step, counter, n as u32);
+
+    let mut mismatches = 0;
+    for i in 0..n {
+        if p2[i].to_bits() != hp2[i].to_bits()
+            || m2[i].to_bits() != hm2[i].to_bits()
+            || v2[i].to_bits() != hv2[i].to_bits()
+        {
+            mismatches += 1;
+        }
+    }
+    // Allow a tiny fraction of 1-ulp-pre-rounding differences (fma vs
+    // separate mul-add in XLA); bit-exact is the norm.
+    assert!(
+        mismatches <= n / 1000,
+        "adamw artifact vs host oracle: {mismatches}/{n} mismatches"
+    );
+}
+
+#[test]
+fn train_artifact_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let man = rt.manifest("tiny").unwrap();
+    let exe = rt.load(man.artifact("train_fp8").unwrap()).unwrap();
+    let params = man.load_init(rt.artifacts_dir()).unwrap();
+    let run_once = || -> (f32, Vec<f32>) {
+        let mut args = vec![];
+        for p in &man.params {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            args.push(literal_f32(&params[p.offset..p.offset + p.numel], &dims).unwrap());
+        }
+        let b = man.batch as i64;
+        let t = man.config.seq_len as i64;
+        let tokens: Vec<i32> = (0..(b * t) as usize).map(|i| (i % 60) as i32).collect();
+        args.push(literal_i32(&tokens, &[b, t]).unwrap());
+        args.push(literal_i32(&tokens, &[b, t]).unwrap());
+        let outs = exe.run(&args).unwrap();
+        let loss: Vec<f32> = outs[0].to_vec().unwrap();
+        let g: Vec<f32> = outs[1].to_vec().unwrap();
+        (loss[0], g)
+    };
+    let (l1, g1) = run_once();
+    let (l2, g2) = run_once();
+    assert_eq!(l1.to_bits(), l2.to_bits(), "bitwise-deterministic loss");
+    assert_eq!(
+        g1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        g2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "bitwise-deterministic grads"
+    );
+}
