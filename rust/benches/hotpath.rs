@@ -1,67 +1,239 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 operations
 //! that sit between PJRT calls in the training loop — FP8/BF16 codecs,
 //! stochastic rounding, gradient accumulation, collectives, the DES
-//! engine, and the host AdamW.
+//! engine, and the host AdamW — each measured serial vs. parallel
+//! (`LLMQ_THREADS` workers) to track the parallel execution layer.
+//!
+//! Emits machine-readable `BENCH_hotpath.json` at the repo root so the
+//! perf trajectory is comparable across PRs.
 
-use llmq::collectives::{reduce_scatter_memcpy, DeviceGroup};
-use llmq::precision::{bf16, fp8, CounterRng, E4M3};
-use llmq::util::Bencher;
+use llmq::collectives::{DeviceGroup, memcpy::reduce_scatter_memcpy_serial, reduce_scatter_memcpy};
+use llmq::precision::{bf16, CounterRng, E4M3, fp8};
+use llmq::util::{par, Bencher};
+
+/// One serial-vs-parallel comparison row for the JSON report.
+struct Row {
+    op: &'static str,
+    ns_serial: f64,
+    ns_par: f64,
+    /// Bytes read + written per iteration (consistent R+W accounting,
+    /// so gb_per_s is comparable across ops), for the GB/s figure.
+    bytes: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.ns_serial / self.ns_par
+    }
+    /// `None` for ops with no meaningful byte payload (e.g. the planner).
+    fn gbps(&self) -> Option<f64> {
+        if self.bytes > 0.0 {
+            Some(self.bytes / (self.ns_par * 1e-9) / 1e9)
+        } else {
+            None
+        }
+    }
+}
+
+fn median_ns(b: &Bencher, name: &str) -> f64 {
+    b.stats(name).expect("bench label").median.as_secs_f64() * 1e9
+}
+
+/// Benchmark one op serial (`f(false)`) vs parallel (`f(true)`).
+fn duel<T>(
+    b: &mut Bencher,
+    rows: &mut Vec<Row>,
+    op: &'static str,
+    bytes: f64,
+    mut f: impl FnMut(bool) -> T,
+) {
+    let sname = format!("{op} [serial]");
+    let pname = format!("{op} [par x{}]", par::num_threads());
+    b.bench(&sname, || f(false));
+    b.bench(&pname, || f(true));
+    let row = Row {
+        op,
+        ns_serial: median_ns(b, &sname),
+        ns_par: median_ns(b, &pname),
+        bytes,
+    };
+    match row.gbps() {
+        Some(g) => println!("  -> {op}: {:.2}x speedup, {g:.2} GB/s parallel", row.speedup()),
+        None => println!("  -> {op}: {:.2}x speedup", row.speedup()),
+    }
+    rows.push(row);
+}
+
+fn repo_root_path(file: &str) -> String {
+    for prefix in ["", "../"] {
+        if std::path::Path::new(&format!("{prefix}ROADMAP.md")).exists() {
+            return format!("{prefix}{file}");
+        }
+    }
+    file.to_string()
+}
+
+fn write_json(rows: &[Row], singles: &[(&str, f64)]) {
+    let threads = par::num_threads();
+    let mut s = String::from("{\n");
+    s += &format!("  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n");
+    s += "  \"ops\": [\n";
+    for (i, r) in rows.iter().enumerate() {
+        let gbps = match r.gbps() {
+            Some(g) => format!("{g:.3}"),
+            None => "null".to_string(),
+        };
+        s += &format!(
+            "    {{\"op\": \"{}\", \"ns_serial\": {:.0}, \"ns_par\": {:.0}, \
+             \"speedup\": {:.3}, \"gb_per_s\": {gbps}, \"threads\": {threads}}}{}\n",
+            r.op,
+            r.ns_serial,
+            r.ns_par,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    s += "  ],\n  \"singles\": [\n";
+    for (i, (op, ns)) in singles.iter().enumerate() {
+        s += &format!(
+            "    {{\"op\": \"{op}\", \"ns\": {ns:.0}, \"threads\": {threads}}}{}\n",
+            if i + 1 < singles.len() { "," } else { "" }
+        );
+    }
+    s += "  ]\n}\n";
+    let path = repo_root_path("BENCH_hotpath.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
 
 fn main() {
     let n = 1 << 22; // 4M elements
     let rng = CounterRng::new(1);
     let base: Vec<f32> = (0..n).map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0).collect();
     let mut b = Bencher::new(2, 7);
+    let mut rows: Vec<Row> = vec![];
+    println!("hotpath: {} worker threads (LLMQ_THREADS)\n", par::num_threads());
 
     // --- FP8 codec ----------------------------------------------------------
     let mut x = base.clone();
-    b.bench("fp8 quantize 4M f32 (absmax + RNE)", || {
-        x.copy_from_slice(&base);
-        E4M3.quantize(&mut x)
-    });
-    let t = b.throughput("fp8 quantize 4M f32 (absmax + RNE)", (n * 4) as f64);
-    println!("  -> {:.2} GB/s", t.unwrap_or(0.0) / 1e9);
+    duel(
+        &mut b,
+        &mut rows,
+        "fp8 quantize 4M f32 (absmax + RNE)",
+        (n * 8) as f64, // read + write in place
+        |p| {
+            x.copy_from_slice(&base);
+            if p {
+                E4M3.quantize(&mut x)
+            } else {
+                E4M3.quantize_serial(&mut x)
+            }
+        },
+    );
 
-    let (bytes, scale) = fp8::encode_tensor(E4M3, &base[..1 << 20]);
+    let (enc, scale) = fp8::encode_tensor(E4M3, &base[..1 << 20]);
     let mut out = vec![0f32; 1 << 20];
-    b.bench("fp8 decode 1M bytes", || {
-        fp8::decode_tensor(E4M3, &bytes, scale, &mut out)
-    });
+    duel(
+        &mut b,
+        &mut rows,
+        "fp8 decode 1M bytes",
+        ((1 << 20) * 5) as f64, // 1B/elem read + 4B/elem written
+        |p| {
+            if p {
+                fp8::decode_tensor(E4M3, &enc, scale, &mut out)
+            } else {
+                fp8::decode_tensor_serial(E4M3, &enc, scale, &mut out)
+            }
+        },
+    );
 
     // --- BF16 SR + accumulation ----------------------------------------------
     let mut y = base.clone();
-    b.bench("bf16 stochastic round 4M", || {
-        y.copy_from_slice(&base);
-        bf16::stochastic_round_slice(&mut y, &rng, 0)
-    });
+    duel(
+        &mut b,
+        &mut rows,
+        "bf16 stochastic round 4M",
+        (n * 8) as f64, // read + write in place
+        |p| {
+            y.copy_from_slice(&base);
+            if p {
+                bf16::stochastic_round_slice(&mut y, &rng, 0)
+            } else {
+                bf16::stochastic_round_slice_serial(&mut y, &rng, 0)
+            }
+        },
+    );
+
     let mut acc = vec![0f32; n];
-    b.bench("bf16 grad accumulate 4M", || {
-        bf16::accumulate_bf16(&mut acc, &base)
-    });
+    duel(
+        &mut b,
+        &mut rows,
+        "bf16 grad accumulate 4M",
+        (n * 12) as f64, // acc read + x read + acc written
+        |p| {
+            if p {
+                bf16::accumulate_bf16(&mut acc, &base)
+            } else {
+                bf16::accumulate_bf16_serial(&mut acc, &base)
+            }
+        },
+    );
 
     // --- global norm (the unhidable reduction, §3.2) -------------------------
-    b.bench("global_norm 4M", || llmq::optim::global_norm(&base));
+    // read-only reduction: n * 4 bytes read, nothing written
+    duel(&mut b, &mut rows, "global_norm 4M", (n * 4) as f64, |p| {
+        if p {
+            llmq::optim::global_norm(&base)
+        } else {
+            llmq::optim::global_norm_serial(&base)
+        }
+    });
 
     // --- collectives over host arenas ----------------------------------------
     let world = 4;
     let g = DeviceGroup::from_fn(world, 1 << 20, |r, i| (r + i) as f32 * 1e-6);
-    b.bench("reduce_scatter_memcpy 4x1M", || {
-        let mut acc = vec![vec![0f32; (1 << 20) / world]; world];
-        reduce_scatter_memcpy(&g, &mut acc, &rng, 0);
-        acc
-    });
+    let mut racc = vec![vec![0f32; (1 << 20) / world]; world];
+    duel(
+        &mut b,
+        &mut rows,
+        "reduce_scatter_memcpy 4x1M",
+        // each of the 1M outputs reads `world` srcs + acc and writes once
+        ((1 << 20) * (world + 2) * 4) as f64,
+        |p| {
+            for a in racc.iter_mut() {
+                a.fill(0.0);
+            }
+            if p {
+                reduce_scatter_memcpy(&g, &mut racc, &rng, 0)
+            } else {
+                reduce_scatter_memcpy_serial(&g, &mut racc, &rng, 0)
+            }
+        },
+    );
 
     // --- host AdamW (offloaded-optimizer path) --------------------------------
     let hp = llmq::optim::AdamWParams::default();
     let opt = llmq::optim::AdamW::new(hp);
-    let mut p = base.clone();
+    let mut p_ = base.clone();
     let mut m = vec![0f32; n];
     let mut v = vec![0f32; n];
-    b.bench("host adamw step 4M", || {
-        opt.step(&mut p, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
-    });
+    duel(
+        &mut b,
+        &mut rows,
+        "host adamw step 4M",
+        (n * 28) as f64, // p, m, v, g read + p, m, v written
+        |p| {
+            if p {
+                opt.step(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
+            } else {
+                opt.step_serial(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
+            }
+        },
+    );
 
-    // --- DES engine -----------------------------------------------------------
+    // --- DES engine (interned streams; single-threaded by design) -------------
     let model = llmq::config::by_name("14B").unwrap();
     let node = llmq::hw::NodeTopology::new(
         llmq::hw::gpu_by_name("RTX 4090").unwrap(),
@@ -76,7 +248,30 @@ fn main() {
         comm: llmq::sim::CommBackend::MemcpyFull,
         transfer_mode: llmq::offload::TransferMode::DoubleBuffer,
     };
-    b.bench("DES simulate_step 14B 4-gpu ga=4", || {
-        llmq::sim::simulate_step(&model, &node, true, &cfg)
+    let des_name = "DES simulate_step 14B 4-gpu ga=4";
+    b.bench(des_name, || llmq::sim::simulate_step(&model, &node, true, &cfg));
+    let singles = vec![(des_name, median_ns(&b, des_name))];
+
+    // --- auto-planner grid search (parallel candidates) -----------------------
+    duel(&mut b, &mut rows, "autoplan 14B@4090x4", 0.0, |p| {
+        let run = || {
+            llmq::coordinator::autoplan(
+                &model,
+                &node.gpu,
+                4,
+                true,
+                500_000,
+                llmq::sim::CommBackend::MemcpyFull,
+                0,
+            )
+            .unwrap()
+        };
+        if p {
+            run()
+        } else {
+            par::with_threads(1, run)
+        }
     });
+
+    write_json(&rows, &singles);
 }

@@ -24,7 +24,8 @@ fn main() {
         acc
     });
     let bytes = (n * 4) as f64;
-    if let Some(eps) = b.throughput("reduce_scatter_memcpy 4x4M f32", bytes) {
-        println!("memcpy RS effective: {:.2} GB/s per rank", eps / 1e9);
+    match b.throughput("reduce_scatter_memcpy 4x4M f32", bytes) {
+        Ok(eps) => println!("memcpy RS effective: {:.2} GB/s per rank", eps / 1e9),
+        Err(e) => println!("memcpy RS effective: n/a ({e})"),
     }
 }

@@ -16,15 +16,34 @@
 //!
 //! **All-gather** is trivially pure copies ("gathering only moves bytes
 //! around").
+//!
+//! **Execution model.** The host reproduction shares one address space,
+//! so phase 2's staging copies collapse into direct peer reads (the
+//! scratch-space accounting of Fig. 1 is still proven in
+//! `scratch_accounting` below). What remains — the SR reduction epilogue
+//! and the gather copies — is pure memory bandwidth, so both collectives
+//! are *chunk-pipelined and multi-threaded*: each rank's shard is cut
+//! into [`PIPELINE_BLOCK`]-element blocks (the per-channel copy-engine
+//! split of the paper) and the (rank × block) grid is spread over the
+//! `LLMQ_THREADS` workers. Outputs are elementwise with
+//! counter-per-index SR, so any schedule is bit-identical to
+//! [`reduce_scatter_memcpy_serial`].
 
 use super::DeviceGroup;
 use crate::precision::{bf16, CounterRng};
+use crate::util::par;
+
+/// Elements per pipelined block (32 KiB of f32): small enough that the
+/// `world` source streams stay cache-resident, large enough to amortize
+/// scheduling.
+pub const PIPELINE_BLOCK: usize = 8 * 1024;
 
 /// Reduce-scatter with BF16 stochastic-rounding accumulation.
 ///
 /// In: `grads` — per-rank full-length gradient buffers (bf16-grid f32).
 /// Out: per-rank shard accumulators `acc[r]` (length = chunk) receive
-/// `bf16_sr(acc + Σ_src grads[src][chunk r])`.
+/// `bf16_sr(acc + Σ_src grads[src][chunk r])`, summed in ascending src
+/// order (fixed — the paper's deterministic reduction).
 /// `counter` advances the SR stream (pass step·len to never reuse draws).
 pub fn reduce_scatter_memcpy(
     grads: &DeviceGroup,
@@ -35,56 +54,90 @@ pub fn reduce_scatter_memcpy(
     let world = grads.world;
     let chunk = grads.chunk_len();
     assert_eq!(acc.len(), world);
+    let rng = *rng;
 
-    // Phase 1: local chunk into the accumulator (plain add — the SR
-    // epilogue happens once, at the final reduction, like the paper's
-    // single rounding per optimizer-step reduction).
-    // Phase 2: receive buffers. Scratch reuse is modelled by staging:
-    // recv[w][src] <- grads[src] chunk w (the memcpy), with the dead
-    // local chunk conceptually providing the space. We verify the space
-    // accounting in `scratch_accounting` below.
-    let mut recv: Vec<Vec<(usize, Vec<f32>)>> = vec![vec![]; world];
-    for round in 1..world {
-        for w in 0..world {
-            let src = (w + round) % world;
-            let seg = &grads.buffers[src][w * chunk..(w + 1) * chunk];
-            recv[w].push((src, seg.to_vec()));
+    // (rank, block-offset, block) work grid — the chunk pipeline.
+    let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+    for (w, a) in acc.iter_mut().enumerate() {
+        assert_eq!(a.len(), chunk, "shard accumulator length");
+        let mut tail: &mut [f32] = a;
+        let mut i0 = 0usize;
+        while !tail.is_empty() {
+            let take = tail.len().min(PIPELINE_BLOCK);
+            let (head, rest) = tail.split_at_mut(take);
+            tail = rest;
+            items.push((w, i0, head));
+            i0 += take;
         }
     }
 
-    // Phase 3: deterministic reduction, fixed src order (0..world, self
-    // included via the original buffer), then one SR to the bf16 grid.
-    for w in 0..world {
-        recv[w].sort_by_key(|(src, _)| *src);
-        let a = &mut acc[w];
-        for i in 0..chunk {
-            let mut sum = a[i] + grads.buffers[w][w * chunk + i];
-            for (_, seg) in &recv[w] {
-                sum += seg[i];
+    // Round-robin blocks across workers: balances ranks and keeps every
+    // worker streaming from all source buffers (the multi-channel split).
+    par::for_each_item(items, |(w, i0, block)| {
+        reduce_block(grads, w, i0, block, &rng, counter)
+    });
+}
+
+/// The per-block reduction kernel: fixed ascending-src sum + one SR.
+fn reduce_block(
+    grads: &DeviceGroup,
+    w: usize,
+    i0: usize,
+    block: &mut [f32],
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let base = w * grads.chunk_len() + i0;
+    for (j, a) in block.iter_mut().enumerate() {
+        let mut sum = *a;
+        for src in 0..grads.world {
+            sum += grads.buffers[src][base + j];
+        }
+        *a = bf16::stochastic_round_bf16(sum, rng, counter.wrapping_add((base + j) as u32));
+    }
+}
+
+/// Single-threaded reference for `reduce_scatter_memcpy` (identical
+/// numerics: ascending-src sum, counter-per-index SR).
+pub fn reduce_scatter_memcpy_serial(
+    grads: &DeviceGroup,
+    acc: &mut [Vec<f32>],
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let world = grads.world;
+    let chunk = grads.chunk_len();
+    assert_eq!(acc.len(), world);
+    for (w, a) in acc.iter_mut().enumerate() {
+        assert_eq!(a.len(), chunk, "shard accumulator length");
+        for (i, ai) in a.iter_mut().enumerate() {
+            let mut sum = *ai;
+            for src in 0..world {
+                sum += grads.buffers[src][w * chunk + i];
             }
-            a[i] = bf16::stochastic_round_bf16(
+            *ai = bf16::stochastic_round_bf16(
                 sum,
                 rng,
-                counter
-                    .wrapping_add((w * chunk + i) as u32),
+                counter.wrapping_add((w * chunk + i) as u32),
             );
         }
     }
 }
 
 /// All-gather: each rank's shard (length chunk) is copied into every
-/// rank's full buffer. Pure memcpy — bitwise exact.
+/// rank's full buffer. Pure memcpy — bitwise exact; ranks copied in
+/// parallel.
 pub fn all_gather_memcpy(shards: &[Vec<f32>], out: &mut DeviceGroup) {
     let world = shards.len();
     assert_eq!(out.world, world);
     let chunk = shards[0].len();
     assert_eq!(out.numel(), world * chunk);
-    for w in 0..world {
-        for src in 0..world {
-            out.buffers[w][src * chunk..(src + 1) * chunk]
-                .copy_from_slice(&shards[src]);
+    let bufs: Vec<&mut Vec<f32>> = out.buffers.iter_mut().collect();
+    par::for_each_item(bufs, |buf| {
+        for (src, sh) in shards.iter().enumerate() {
+            buf[src * chunk..(src + 1) * chunk].copy_from_slice(sh);
         }
-    }
+    });
 }
 
 /// Bytes moved per rank by the memcpy reduce-scatter (for the simulator

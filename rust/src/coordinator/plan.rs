@@ -9,6 +9,7 @@ use crate::offload::{OffloadConfig, TransferMode};
 use crate::recompute::Recompute;
 use crate::shard::ShardConfig;
 use crate::sim::{simulate_step, CommBackend, StepConfig, StepResult};
+use crate::util::par;
 
 /// A fully resolved configuration (what Table 7 rows record).
 #[derive(Debug, Clone)]
@@ -32,9 +33,73 @@ pub fn grad_accum_for(
     (step_tokens + per_micro - 1) / per_micro.max(1)
 }
 
+/// One point of the (shard × offload × recompute × micro-batch) grid.
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    shard: ShardConfig,
+    offload: OffloadConfig,
+    recompute: Recompute,
+    micro_batch: usize,
+}
+
+/// Enumerate the feasible grid in the canonical ladder order (the order
+/// also serves as the deterministic tie-break: earlier wins).
+fn enumerate_candidates(
+    m: &ModelPreset,
+    gpu: &GpuSpec,
+    world: usize,
+    fp8: bool,
+    host_mem_gib: f64,
+    forced_micro: usize,
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for shard in ShardConfig::ladder(world) {
+        for offload in OffloadConfig::ladder() {
+            for rc in Recompute::ALL {
+                let bmax = memory::planner::max_micro_batch(
+                    m, gpu, fp8, rc, offload, shard, host_mem_gib, 64,
+                );
+                if bmax == 0 {
+                    continue;
+                }
+                // Candidate micro-batches: the max and a couple below it
+                // (bigger isn't always faster once transfers are hidden).
+                let mut mbs = vec![bmax];
+                if bmax >= 2 {
+                    mbs.push(bmax / 2);
+                }
+                if bmax >= 4 {
+                    mbs.push(bmax / 4);
+                }
+                if forced_micro != 0 {
+                    if forced_micro > bmax {
+                        continue;
+                    }
+                    mbs = vec![forced_micro];
+                }
+                for mb in mbs {
+                    out.push(Candidate {
+                        shard,
+                        offload,
+                        recompute: rc,
+                        micro_batch: mb,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Search (shard ladder × offload ladder × recompute × micro-batch) for
 /// the fastest configuration that fits; `forced_micro != 0` pins the
 /// micro-batch.
+///
+/// The grid is simulated across the `LLMQ_THREADS` workers
+/// (`simulate_step` is a pure function of the candidate); the argmax is
+/// taken over the results in enumeration order with a strict-`>`
+/// comparison, so ties break to the earliest candidate — exactly the
+/// result the serial loop produced.
 pub fn autoplan(
     m: &ModelPreset,
     gpu: &GpuSpec,
@@ -45,85 +110,65 @@ pub fn autoplan(
     forced_micro: usize,
 ) -> Result<(ChosenConfig, StepResult)> {
     let node = NodeTopology::new(gpu.clone(), world);
-    let mut best: Option<(ChosenConfig, StepResult)> = None;
+    let cands = enumerate_candidates(m, gpu, world, fp8, node.host_mem_gib, forced_micro);
 
-    for shard in ShardConfig::ladder(world) {
-        for offload in OffloadConfig::ladder() {
-            for rc in Recompute::ALL {
-                let bmax = memory::planner::max_micro_batch(
-                    m, gpu, fp8, rc, offload, shard, node.host_mem_gib, 64,
-                );
-                if bmax == 0 {
-                    continue;
-                }
-                // Candidate micro-batches: the max and a couple below it
-                // (bigger isn't always faster once transfers are hidden).
-                let mut cands = vec![bmax];
-                if bmax >= 2 {
-                    cands.push(bmax / 2);
-                }
-                if bmax >= 4 {
-                    cands.push(bmax / 4);
-                }
-                if forced_micro != 0 {
-                    if forced_micro > bmax {
-                        continue;
-                    }
-                    cands = vec![forced_micro];
-                }
-                for mb in cands {
-                    let ga = grad_accum_for(m, world, mb, step_tokens);
-                    let cfg = StepConfig {
-                        micro_batch: mb,
-                        grad_accum: ga,
-                        recompute: rc,
-                        offload,
-                        shard,
-                        comm,
-                        transfer_mode: TransferMode::DoubleBuffer,
-                    };
-                    let r = simulate_step(m, &node, fp8, &cfg);
-                    let better = match &best {
-                        None => true,
-                        Some((_, b)) => r.tokens_per_s > b.tokens_per_s,
-                    };
-                    if better {
-                        let plan = memory::plan(
-                            &PlanInput {
-                                model: m,
-                                gpu,
-                                fp8,
-                                recompute: rc,
-                                offload,
-                                shard,
-                                micro_batch: mb,
-                            },
-                            node.host_mem_gib,
-                        );
-                        best = Some((
-                            ChosenConfig {
-                                micro_batch: mb,
-                                grad_accum: ga,
-                                recompute: rc,
-                                offload,
-                                shard,
-                                plan,
-                            },
-                            r,
-                        ));
-                    }
-                }
-            }
+    let results: Vec<(usize, StepResult)> = par::parallel_map(&cands, |_, c| {
+        let ga = grad_accum_for(m, world, c.micro_batch, step_tokens);
+        let cfg = StepConfig {
+            micro_batch: c.micro_batch,
+            grad_accum: ga,
+            recompute: c.recompute,
+            offload: c.offload,
+            shard: c.shard,
+            comm,
+            transfer_mode: TransferMode::DoubleBuffer,
+        };
+        (ga, simulate_step(m, &node, fp8, &cfg))
+    });
+
+    let mut best: Option<usize> = None;
+    for (i, (_, r)) in results.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(b) => r.tokens_per_s > results[b].1.tokens_per_s,
+        };
+        if better {
+            best = Some(i);
         }
     }
-    best.ok_or_else(|| {
-        anyhow::anyhow!(
+    let Some(bi) = best else {
+        anyhow::bail!(
             "{} does not fit on {}x{} in any configuration (OOM)",
             m.name,
             world,
             gpu.name
-        )
-    })
+        );
+    };
+    let c = cands[bi];
+    let (ga, r) = results.into_iter().nth(bi).unwrap();
+    let plan = memory::plan(
+        &PlanInput {
+            model: m,
+            gpu,
+            fp8,
+            recompute: c.recompute,
+            offload: c.offload,
+            shard: c.shard,
+            micro_batch: c.micro_batch,
+        },
+        node.host_mem_gib,
+    );
+    Ok((
+        ChosenConfig {
+            micro_batch: c.micro_batch,
+            grad_accum: ga,
+            recompute: c.recompute,
+            offload: c.offload,
+            shard: c.shard,
+            plan,
+        },
+        r,
+    ))
 }
 
 /// Convenience wrapper used by the CLI and benches.

@@ -30,4 +30,9 @@ pub mod sim;
 pub mod train;
 pub mod util;
 
+/// Stand-in for the vendored `xla` PJRT bindings (see `xla_shim.rs`);
+/// the real crate takes its place under `--features pjrt`.
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_shim;
+
 pub use anyhow::Result;

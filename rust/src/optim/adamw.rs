@@ -1,6 +1,13 @@
 //! AdamW over flat f32 buffers holding bf16-grid state.
+//!
+//! The offloaded-optimizer path runs this on the host while the GPUs are
+//! busy (paper §3.1), so `step` is parallel: the four state slices are
+//! split at identical boundaries and each worker runs the scalar kernel
+//! on its part. SR counters are keyed by global element index, so the
+//! result is bit-identical to the serial kernel at any thread count.
 
 use crate::precision::{bf16, CounterRng};
+use crate::util::par;
 
 #[derive(Debug, Clone, Copy)]
 pub struct AdamWParams {
@@ -39,11 +46,61 @@ impl AdamW {
         }
     }
 
-    /// Update a shard in place. `step` is 1-based; `counter_base` must
-    /// advance by `3 * full_numel` per optimizer step (trainer's job) and
-    /// be offset per shard so draws never collide across ranks.
+    /// Update a shard in place, in parallel. `step` is 1-based;
+    /// `counter_base` must advance by `3 * full_numel` per optimizer step
+    /// (trainer's job) and be offset per shard so draws never collide
+    /// across ranks. Bit-identical to [`Self::step_serial`] at any
+    /// thread count (counter-per-global-index SR).
     #[allow(clippy::too_many_arguments)]
     pub fn step(
+        &self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        step: u32,
+        counter_base: u32,
+        n_full: u32,
+    ) {
+        let n = p.len();
+        debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+        let threads = par::workers_for(n, par::DEFAULT_GRAIN);
+        if threads <= 1 {
+            return self.step_serial(p, m, v, g, lr, step, counter_base, n_full);
+        }
+        let ranges = par::split_even(n, threads);
+        let n_ranges = ranges.len();
+        std::thread::scope(|s| {
+            let (mut pt, mut mt, mut vt, mut gt) = (p, m, v, g);
+            let mut off = 0usize;
+            for (k, r) in ranges.into_iter().enumerate() {
+                let (p1, p2) = pt.split_at_mut(r.len());
+                let (m1, m2) = mt.split_at_mut(r.len());
+                let (v1, v2) = vt.split_at_mut(r.len());
+                let (g1, g2) = gt.split_at(r.len());
+                pt = p2;
+                mt = m2;
+                vt = v2;
+                gt = g2;
+                let base = counter_base.wrapping_add(off as u32);
+                off += r.len();
+                if k + 1 == n_ranges {
+                    // final shard runs on the calling thread
+                    self.step_serial(p1, m1, v1, g1, lr, step, base, n_full);
+                } else {
+                    let this = &*self;
+                    s.spawn(move || {
+                        this.step_serial(p1, m1, v1, g1, lr, step, base, n_full)
+                    });
+                }
+            }
+        });
+    }
+
+    /// Single-threaded reference kernel (the exact Pallas-kernel math).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_serial(
         &self,
         p: &mut [f32],
         m: &mut [f32],

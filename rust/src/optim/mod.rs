@@ -8,24 +8,46 @@ pub mod adamw;
 
 pub use adamw::{AdamW, AdamWParams};
 
+use crate::util::par;
+
 /// Global L2 norm over a flat gradient buffer (f64 accumulation — this is
 /// the one reduction the paper cannot hide behind compute, §3.2).
+///
+/// Parallel tree reduction over the *fixed* chunk grid: per-chunk f64
+/// partial sums folded in chunk order, so the result is bit-identical at
+/// any thread count and within a few ULP of [`global_norm_serial`]
+/// (chunked vs. linear f64 summation).
 pub fn global_norm(grads: &[f32]) -> f32 {
-    grads
-        .iter()
-        .map(|&g| (g as f64) * (g as f64))
-        .sum::<f64>()
-        .sqrt() as f32
+    par::map_reduce(
+        grads.len(),
+        par::REDUCE_CHUNK,
+        0.0f64,
+        |r| sumsq(&grads[r]),
+        |a, b| a + b,
+    )
+    .sqrt() as f32
+}
+
+fn sumsq(x: &[f32]) -> f64 {
+    x.iter().map(|&g| (g as f64) * (g as f64)).sum()
+}
+
+/// Single-threaded, unchunked reference for `global_norm`.
+pub fn global_norm_serial(grads: &[f32]) -> f32 {
+    sumsq(grads).sqrt() as f32
 }
 
 /// Clip `grads` in place to `max_norm`; returns the pre-clip norm.
+/// The rescale loop is elementwise-parallel (bit-identical to serial).
 pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
     let norm = global_norm(grads);
     if norm > max_norm && norm > 0.0 {
         let s = max_norm / norm;
-        for g in grads.iter_mut() {
-            *g *= s;
-        }
+        par::for_each_slice_mut(grads, par::DEFAULT_GRAIN, |_, chunk| {
+            for g in chunk.iter_mut() {
+                *g *= s;
+            }
+        });
     }
     norm
 }

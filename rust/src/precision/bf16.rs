@@ -7,6 +7,7 @@
 //! ... without catastrophic cancellation").
 
 use super::philox::CounterRng;
+use crate::util::par;
 
 /// Round-to-nearest-even f32 -> bf16 grid, returned as f32.
 #[inline]
@@ -33,23 +34,50 @@ pub fn stochastic_round_bf16(x: f32, rng: &CounterRng, counter: u32) -> f32 {
     f32::from_bits(bits.wrapping_add(r) & 0xFFFF_0000)
 }
 
-/// Round a slice onto the bf16 grid in place (RNE).
+/// Round a slice onto the bf16 grid in place (RNE), in parallel.
 pub fn round_slice(x: &mut [f32]) {
+    par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
+        round_slice_serial(chunk)
+    });
+}
+
+/// Single-threaded reference for `round_slice`.
+pub fn round_slice_serial(x: &mut [f32]) {
     for v in x.iter_mut() {
         *v = round_to_bf16(*v);
     }
 }
 
 /// Stochastically round a slice; element i uses counter_base + i.
+/// Draws are keyed by *global* index, so the parallel chunking is
+/// bit-identical to [`stochastic_round_slice_serial`] at any thread
+/// count (the property the paper's counter-based RNG exists for).
 pub fn stochastic_round_slice(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
+    let rng = *rng;
+    par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |off, chunk| {
+        stochastic_round_slice_serial(chunk, &rng, counter_base.wrapping_add(off as u32))
+    });
+}
+
+/// Single-threaded reference for `stochastic_round_slice`.
+pub fn stochastic_round_slice_serial(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
     for (i, v) in x.iter_mut().enumerate() {
         *v = stochastic_round_bf16(*v, rng, counter_base.wrapping_add(i as u32));
     }
 }
 
 /// BF16-grid accumulation: `acc = bf16(acc + x)` elementwise — the paper's
-/// gradient-accumulation semantics.
+/// gradient-accumulation semantics. Parallel chunked; elementwise, so
+/// bit-identical to [`accumulate_bf16_serial`].
 pub fn accumulate_bf16(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    par::for_each_slice_mut(acc, par::DEFAULT_GRAIN, |off, chunk| {
+        accumulate_bf16_serial(chunk, &x[off..off + chunk.len()])
+    });
+}
+
+/// Single-threaded reference for `accumulate_bf16`.
+pub fn accumulate_bf16_serial(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     for (a, &b) in acc.iter_mut().zip(x) {
         *a = round_to_bf16(*a + b);
@@ -60,17 +88,21 @@ pub fn accumulate_bf16(acc: &mut [f32], x: &[f32]) {
 /// the paper communicates gradients in BF16 = 2 bytes/element).
 pub fn pack(x: &[f32], out: &mut [u16]) {
     debug_assert_eq!(x.len(), out.len());
-    for (o, &v) in out.iter_mut().zip(x) {
-        *o = (v.to_bits() >> 16) as u16;
-    }
+    par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = (x[off + j].to_bits() >> 16) as u16;
+        }
+    });
 }
 
 /// Unpack u16 bf16 bits to f32.
 pub fn unpack(bits: &[u16], out: &mut [f32]) {
     debug_assert_eq!(bits.len(), out.len());
-    for (o, &b) in out.iter_mut().zip(bits) {
-        *o = f32::from_bits((b as u32) << 16);
-    }
+    par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = f32::from_bits((bits[off + j] as u32) << 16);
+        }
+    });
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! With just-in-time absmax scaling no value is ever clipped (§3).
 
 use super::philox::CounterRng;
+use crate::util::par;
 
 /// An FP8 floating-point format description.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,8 +64,22 @@ impl Fp8Format {
         sign * q.min(max_val)
     }
 
-    /// Quantize a slice in place given a precomputed absmax; returns scale.
+    /// Quantize a slice in place given a precomputed absmax; returns
+    /// scale. Elementwise → the parallel chunking is bit-identical to
+    /// [`Self::quantize_with_amax_serial`].
     pub fn quantize_with_amax(&self, x: &mut [f32], amax: f32) -> f32 {
+        let scale = super::absmax_scale(amax, *self);
+        let fmt = *self;
+        par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v = fmt.round(*v / scale);
+            }
+        });
+        scale
+    }
+
+    /// Single-threaded reference for `quantize_with_amax`.
+    pub fn quantize_with_amax_serial(&self, x: &mut [f32], amax: f32) -> f32 {
         let scale = super::absmax_scale(amax, *self);
         for v in x.iter_mut() {
             *v = self.round(*v / scale);
@@ -73,16 +88,25 @@ impl Fp8Format {
     }
 
     /// JIT absmax quantize: returns (scale); mutates x to grid values.
+    /// Two parallel passes: absmax reduction, then the rounding loop.
     pub fn quantize(&self, x: &mut [f32]) -> f32 {
         let amax = super::absmax(x);
         self.quantize_with_amax(x, amax)
     }
 
+    /// Single-threaded reference for `quantize`.
+    pub fn quantize_serial(&self, x: &mut [f32]) -> f32 {
+        let amax = super::absmax_serial(x);
+        self.quantize_with_amax_serial(x, amax)
+    }
+
     /// Dequantize grid values back to real magnitudes.
     pub fn dequantize(&self, q: &mut [f32], scale: f32) {
-        for v in q.iter_mut() {
-            *v *= scale;
-        }
+        par::for_each_slice_mut(q, par::DEFAULT_GRAIN, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v *= scale;
+            }
+        });
     }
 
     /// Encode a grid value (output of `round` after scaling) into the raw
@@ -177,16 +201,37 @@ pub fn stochastic_round_fp8(fmt: Fp8Format, x: f32, rng_draw: u32) -> f32 {
     sign * q.min(max_val)
 }
 
-/// Round an entire slice onto the FP8 grid (no scaling).
+/// Round an entire slice onto the FP8 grid (no scaling), in parallel.
 pub fn round_slice(fmt: Fp8Format, x: &mut [f32]) {
+    par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
+        round_slice_serial(fmt, chunk)
+    });
+}
+
+/// Single-threaded reference for `round_slice`.
+pub fn round_slice_serial(fmt: Fp8Format, x: &mut [f32]) {
     for v in x.iter_mut() {
         *v = fmt.round(*v);
     }
 }
 
 /// Quantize + encode to bytes: the wire format for FP8 weight gathers.
+/// Parallel absmax then a parallel encode pass over the output buffer.
 pub fn encode_tensor(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
     let amax = super::absmax(x);
+    let scale = super::absmax_scale(amax, fmt);
+    let mut bytes = vec![0u8; x.len()];
+    par::for_each_slice_mut(&mut bytes, par::DEFAULT_GRAIN, |off, chunk| {
+        for (j, b) in chunk.iter_mut().enumerate() {
+            *b = fmt.encode(fmt.round(x[off + j] / scale));
+        }
+    });
+    (bytes, scale)
+}
+
+/// Single-threaded reference for `encode_tensor`.
+pub fn encode_tensor_serial(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
+    let amax = super::absmax_serial(x);
     let scale = super::absmax_scale(amax, fmt);
     let bytes = x
         .iter()
@@ -195,8 +240,18 @@ pub fn encode_tensor(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
     (bytes, scale)
 }
 
-/// Decode bytes back to f32 (dequantized).
+/// Decode bytes back to f32 (dequantized), in parallel.
 pub fn decode_tensor(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len());
+    par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = fmt.decode(bytes[off + j]) * scale;
+        }
+    });
+}
+
+/// Single-threaded reference for `decode_tensor`.
+pub fn decode_tensor_serial(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     assert_eq!(bytes.len(), out.len());
     for (o, &b) in out.iter_mut().zip(bytes) {
         *o = fmt.decode(b) * scale;

@@ -14,8 +14,24 @@ pub use bf16::{round_to_bf16, stochastic_round_bf16};
 pub use fp8::{Fp8Format, E4M3, E5M2};
 pub use philox::CounterRng;
 
+use crate::util::par;
+
 /// Tensor-level absmax (paper §3: just-in-time scaling statistics).
+/// Parallel over the fixed reduction grid; `max` is order-insensitive,
+/// so the result is bit-identical to [`absmax_serial`] at any thread
+/// count.
 pub fn absmax(x: &[f32]) -> f32 {
+    par::map_reduce(
+        x.len(),
+        par::REDUCE_CHUNK,
+        0.0f32,
+        |r| absmax_serial(&x[r]),
+        f32::max,
+    )
+}
+
+/// Single-threaded absmax reference.
+pub fn absmax_serial(x: &[f32]) -> f32 {
     x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }
 

@@ -15,7 +15,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::xla_shim as xla;
+
 pub use manifest::{Manifest, ParamEntry};
+/// Re-exported so downstream code (tests, benches) names PJRT types
+/// through this module instead of depending on the `xla` crate directly.
+#[cfg(not(feature = "pjrt"))]
+pub use crate::xla_shim::{Literal, PjRtBuffer};
+#[cfg(feature = "pjrt")]
+pub use ::xla::{Literal, PjRtBuffer};
 
 /// A loaded, compiled HLO executable.
 pub struct Executable {

@@ -44,19 +44,31 @@ impl Stream {
 
 pub type TaskId = usize;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct Task {
-    stream: Stream,
+    /// Interned stream index into `Engine::streams` (dense — the hot
+    /// `run()` loop indexes arrays instead of hashing `Stream` keys).
+    stream: u32,
     dur: f64,
-    deps: Vec<TaskId>,
+    /// Range into the flat `Engine::deps` arena (no per-task Vec).
+    deps_start: u32,
+    deps_len: u32,
     label: &'static str,
     tag: u64,
 }
 
 /// The engine: submit tasks in program order, then `run()`.
+///
+/// Streams are interned at submission into a dense index space and task
+/// dependencies live in one flat arena, so `run()` is tight
+/// array-indexed loops with zero hashing/allocation per task — the
+/// planner grid search calls `run()` thousands of times per `autoplan`.
 #[derive(Debug, Default)]
 pub struct Engine {
     tasks: Vec<Task>,
+    deps: Vec<TaskId>,
+    streams: Vec<Stream>,
+    stream_ids: HashMap<Stream, u32>,
 }
 
 #[derive(Debug)]
@@ -93,14 +105,41 @@ impl Engine {
         tag: u64,
     ) -> TaskId {
         let id = self.tasks.len();
+        let sid = self.intern(stream);
+        let deps_start = self.deps.len() as u32;
+        self.deps.extend_from_slice(deps);
         self.tasks.push(Task {
-            stream,
+            stream: sid,
             dur: dur.max(0.0),
-            deps: deps.to_vec(),
+            deps_start,
+            deps_len: deps.len() as u32,
             label,
             tag,
         });
         id
+    }
+
+    fn intern(&mut self, stream: Stream) -> u32 {
+        if let Some(&id) = self.stream_ids.get(&stream) {
+            return id;
+        }
+        let id = self.streams.len() as u32;
+        self.streams.push(stream);
+        self.stream_ids.insert(stream, id);
+        id
+    }
+
+    fn task_deps(&self, t: &Task) -> &[TaskId] {
+        &self.deps[t.deps_start as usize..(t.deps_start + t.deps_len) as usize]
+    }
+
+    /// Drop all submitted tasks but keep allocations (engine reuse across
+    /// simulated steps).
+    pub fn clear(&mut self) {
+        self.tasks.clear();
+        self.deps.clear();
+        self.streams.clear();
+        self.stream_ids.clear();
     }
 
     /// A zero-duration barrier on a stream waiting for `deps`.
@@ -112,29 +151,38 @@ impl Engine {
         self.tasks.len()
     }
 
-    /// Compute the schedule.
+    /// Compute the schedule. Hot loop: dense per-stream arrays (interned
+    /// ids), no hashing, no allocation beyond the returned vectors.
     pub fn run(&self) -> Schedule {
         let n = self.tasks.len();
+        let ns = self.streams.len();
         let mut finish = vec![0.0f64; n];
         let mut start = vec![0.0f64; n];
-        let mut stream_ready: HashMap<Stream, f64> = HashMap::new();
-        let mut busy: HashMap<Stream, f64> = HashMap::new();
+        let mut stream_ready = vec![0.0f64; ns];
+        let mut stream_busy = vec![0.0f64; ns];
         let mut makespan = 0.0f64;
 
         // Submission order == a valid topological order (deps must point
         // backwards; enforced by construction since ids grow).
         for (i, t) in self.tasks.iter().enumerate() {
-            let mut ready = *stream_ready.get(&t.stream).unwrap_or(&0.0);
-            for &d in &t.deps {
+            let sid = t.stream as usize;
+            let mut ready = stream_ready[sid];
+            for &d in self.task_deps(t) {
                 debug_assert!(d < i, "forward dep {d} -> {i} ({})", t.label);
                 ready = ready.max(finish[d]);
             }
             start[i] = ready;
             finish[i] = ready + t.dur;
-            stream_ready.insert(t.stream, finish[i]);
-            *busy.entry(t.stream).or_insert(0.0) += t.dur;
+            stream_ready[sid] = finish[i];
+            stream_busy[sid] += t.dur;
             makespan = makespan.max(finish[i]);
         }
+        let busy = self
+            .streams
+            .iter()
+            .copied()
+            .zip(stream_busy)
+            .collect::<HashMap<Stream, f64>>();
         Schedule {
             finish,
             start,
@@ -159,12 +207,13 @@ impl Engine {
             .iter()
             .enumerate()
             .map(|(i, t)| {
+                let stream = self.streams[t.stream as usize];
                 (
                     sched.start[i],
                     format!(
                         "{:>10.4} -> {:>10.4}  dev{} {:?} {}",
-                        sched.start[i], sched.finish[i], t.stream.device,
-                        t.stream.lane, t.label
+                        sched.start[i], sched.finish[i], stream.device,
+                        stream.lane, t.label
                     ),
                 )
             })
@@ -229,5 +278,34 @@ mod tests {
         e.push(Stream::sm(0), 0.5, &[], "b");
         let sched = e.run();
         assert_eq!(sched.busy[&Stream::sm(0)], 2.0);
+    }
+
+    #[test]
+    fn clear_resets_for_reuse() {
+        let mut e = Engine::new();
+        let a = e.push(Stream::sm(0), 1.0, &[], "a");
+        e.push(Stream::ce_in(0), 2.0, &[a], "b");
+        assert_eq!(e.run().makespan, 3.0);
+        e.clear();
+        assert_eq!(e.n_tasks(), 0);
+        e.push(Stream::sm(1), 4.0, &[], "c");
+        let sched = e.run();
+        assert_eq!(sched.makespan, 4.0);
+        assert_eq!(sched.busy[&Stream::sm(1)], 4.0);
+        assert!(sched.busy.get(&Stream::sm(0)).is_none());
+    }
+
+    #[test]
+    fn many_streams_interned_consistently() {
+        let mut e = Engine::new();
+        for dev in 0..8 {
+            e.push(Stream::sm(dev), 1.0, &[], "x");
+            e.push(Stream::sm(dev), 1.0, &[], "y");
+        }
+        let sched = e.run();
+        for dev in 0..8 {
+            assert_eq!(sched.busy[&Stream::sm(dev)], 2.0);
+        }
+        assert_eq!(sched.makespan, 2.0);
     }
 }

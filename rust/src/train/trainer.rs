@@ -4,6 +4,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::xla_shim as xla;
+
 use crate::collectives::{all_gather_memcpy, reduce_scatter_memcpy, DeviceGroup};
 use crate::config::TrainConfig;
 use crate::data::{Batch, PackedDataset};

@@ -73,12 +73,25 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Throughput helper: elements/second at the median.
-    pub fn throughput(&self, name: &str, elements: f64) -> Option<f64> {
-        self.results
-            .iter()
-            .find(|r| r.name == name)
-            .map(|r| elements / r.median.as_secs_f64())
+    /// Look up a finished benchmark by its exact label.
+    pub fn stats(&self, name: &str) -> anyhow::Result<&BenchStats> {
+        self.results.iter().find(|r| r.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no benchmark named {name:?}; known: [{}]",
+                self.results
+                    .iter()
+                    .map(|r| r.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Throughput at the median: elements/second. Errors on an unknown
+    /// label (a silent 0.0 here once shipped a bogus GB/s figure).
+    pub fn throughput(&self, name: &str, elements: f64) -> anyhow::Result<f64> {
+        let r = self.stats(name)?;
+        Ok(elements / r.median.as_secs_f64())
     }
 }
 
@@ -99,5 +112,14 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].min.as_nanos() > 0);
         assert!(b.throughput("spin", 10_000.0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unknown_label_is_an_error_not_zero() {
+        let mut b = Bencher::new(0, 1);
+        b.bench("real", || 1u32);
+        let err = b.throughput("no such bench", 1.0).unwrap_err();
+        assert!(err.to_string().contains("no such bench"), "{err}");
+        assert!(err.to_string().contains("real"), "lists known labels: {err}");
     }
 }

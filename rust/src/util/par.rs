@@ -1,0 +1,413 @@
+//! Scoped-thread parallel execution layer for the L3 host hot paths.
+//!
+//! The paper's pipeline keeps the *host* on the critical path: offloaded
+//! AdamW, FP8/BF16 codecs with stochastic rounding, and the copy-engine
+//! collectives all run CPU-side and must keep up with the GPUs. This
+//! module is the shared substrate: std-only scoped threads (no pool
+//! daemon, no dependencies) plus chunking helpers with two determinism
+//! contracts:
+//!
+//! * **Elementwise ops** (quantize, SR, accumulate, AdamW): output `i`
+//!   depends only on input `i` (the counter-based RNG draws by *global
+//!   index*, never by call order), so any chunking/thread assignment is
+//!   bit-identical to the serial loop.
+//! * **Reductions** ([`map_reduce`]): partials are computed over a chunk
+//!   grid that is *fixed* (independent of thread count) and folded in
+//!   chunk order — bit-identical across 1..N threads, ULP-close to an
+//!   unchunked serial fold.
+//!
+//! Worker count comes from `LLMQ_THREADS` (default: the machine's
+//! available parallelism); [`with_threads`] overrides it for the current
+//! thread, which is how the equivalence tests pin 1/2/8 workers without
+//! process-global env mutation.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Default minimum elements per worker: below `grain` extra threads cost
+/// more in spawn/teardown than they recover (scoped spawn is ~10µs; a
+/// 16K-element f32 chunk is ~64KB — half an L2 slice — of real work).
+pub const DEFAULT_GRAIN: usize = 16 * 1024;
+
+/// Fixed reduction-grid chunk (elements). Constant so that partial-sum
+/// boundaries — and therefore floating-point results — do not depend on
+/// the worker count.
+pub const REDUCE_CHUNK: usize = 64 * 1024;
+
+thread_local! {
+    static THREAD_OVERRIDE: Cell<usize> = Cell::new(0);
+}
+
+fn env_threads() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("LLMQ_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
+fn detected_threads() -> usize {
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Worker count for parallel hot paths: [`with_threads`] override, else
+/// `LLMQ_THREADS`, else the machine's available parallelism. Clamped to
+/// [1, 256].
+pub fn num_threads() -> usize {
+    let o = THREAD_OVERRIDE.with(|c| c.get());
+    let n = if o != 0 {
+        o
+    } else {
+        env_threads().unwrap_or_else(detected_threads)
+    };
+    n.clamp(1, 256)
+}
+
+/// Run `f` with the worker count pinned to `n` on this thread (nested
+/// calls: innermost wins; restored on unwind). Used by tests/benches to
+/// compare 1/2/8-thread execution without touching process env.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    assert!(n >= 1, "worker count must be >= 1");
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(THREAD_OVERRIDE.with(|c| c.replace(n)));
+    f()
+}
+
+/// Split `[0, len)` into at most `parts` contiguous near-equal ranges
+/// (first `len % parts` ranges are one longer). Empty iff `len == 0`.
+pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return vec![];
+    }
+    let parts = parts.clamp(1, len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// How many workers a job of `len` elements warrants at grain `grain`
+/// (the shared grain policy — kernels should use this rather than
+/// re-deriving it from [`num_threads`]).
+pub fn workers_for(len: usize, grain: usize) -> usize {
+    num_threads().min((len / grain.max(1)).max(1))
+}
+
+/// Apply `f(offset, chunk)` over disjoint contiguous chunks of `data`,
+/// in parallel. `offset` is the chunk's start index in `data`, so
+/// counter-based RNG draws stay aligned to *global* element indices.
+/// Falls back to a single serial call when the job is too small.
+pub fn for_each_slice_mut<T, F>(data: &mut [T], grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let threads = workers_for(len, grain);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let ranges = split_even(len, threads);
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let mut tail = data;
+        let mut off = 0usize;
+        for (k, r) in ranges.into_iter().enumerate() {
+            let (head, rest) = tail.split_at_mut(r.len());
+            tail = rest;
+            let o = off;
+            off += head.len();
+            if k + 1 == n_ranges {
+                // run the final partition on the calling thread instead of
+                // leaving it idle at the scope barrier
+                f(o, head);
+            } else {
+                let fr = &f;
+                s.spawn(move || fr(o, head));
+            }
+        }
+    });
+}
+
+/// Deterministic chunked map-reduce: `map` is applied to fixed-size
+/// chunks of `[0, len)` (grid independent of worker count) and the
+/// partials are folded **in chunk order** — the result is bit-identical
+/// for any thread count. Returns `identity` for `len == 0`.
+pub fn map_reduce<R, M, F>(len: usize, chunk: usize, identity: R, map: M, fold: F) -> R
+where
+    R: Send,
+    M: Fn(Range<usize>) -> R + Sync,
+    F: Fn(R, R) -> R,
+{
+    if len == 0 {
+        return identity;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = (len + chunk - 1) / chunk;
+    let chunk_range = |c: usize| c * chunk..((c + 1) * chunk).min(len);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        // Same grid, same fold order — just on the calling thread.
+        let mut acc = identity;
+        for c in 0..n_chunks {
+            acc = fold(acc, map(chunk_range(c)));
+        }
+        return acc;
+    }
+    let mut partials: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let next = AtomicUsize::new(0);
+        let next_ref = &next;
+        let map_ref = &map;
+        let worker = move || {
+            let mut out: Vec<(usize, R)> = Vec::new();
+            loop {
+                let c = next_ref.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                out.push((c, map_ref(chunk_range(c))));
+            }
+            out
+        };
+        // caller is worker 0; spawn the rest
+        let handles: Vec<_> = (1..threads).map(|_| s.spawn(worker)).collect();
+        for (c, r) in worker() {
+            partials[c] = Some(r);
+        }
+        for h in handles {
+            for (c, r) in h.join().expect("par worker panicked") {
+                partials[c] = Some(r);
+            }
+        }
+    });
+    let mut acc = identity;
+    for p in partials {
+        acc = fold(acc, p.expect("chunk not computed"));
+    }
+    acc
+}
+
+/// Distribute owned work items round-robin across the workers and run
+/// `f` on each (serial fallback for one worker). Use only when the
+/// output does not depend on which worker runs which item — true for
+/// all elementwise kernels (counter-per-index RNG). Items assigned to
+/// one worker run in their original relative order.
+pub fn for_each_item<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let threads = num_threads().min(items.len().max(1));
+    if threads <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let mut groups: Vec<Vec<T>> = (0..threads).map(|_| Vec::new()).collect();
+    for (k, item) in items.into_iter().enumerate() {
+        groups[k % threads].push(item);
+    }
+    std::thread::scope(|s| {
+        let mut iter = groups.into_iter();
+        // caller takes the first group; the rest are spawned
+        let mine = iter.next().unwrap_or_default();
+        for group in iter {
+            let fr = &f;
+            s.spawn(move || {
+                for item in group {
+                    fr(item);
+                }
+            });
+        }
+        for item in mine {
+            f(item);
+        }
+    });
+}
+
+/// Parallel map with order-preserving output: `out[i] = f(i, &items[i])`.
+/// Workers claim items through an atomic cursor (good balance when item
+/// costs vary, e.g. planner candidates). Falls back to serial for tiny
+/// inputs or one worker.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let next = AtomicUsize::new(0);
+        let next_ref = &next;
+        let f_ref = &f;
+        let worker = move || {
+            let mut out: Vec<(usize, R)> = Vec::new();
+            loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                out.push((i, f_ref(i, &items[i])));
+            }
+            out
+        };
+        // caller is worker 0; spawn the rest
+        let handles: Vec<_> = (1..threads).map(|_| s.spawn(worker)).collect();
+        for (i, r) in worker() {
+            slots[i] = Some(r);
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("par worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("item not computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        for len in [0usize, 1, 7, 64, 1001] {
+            for parts in [1usize, 2, 3, 8, 2000] {
+                let rs = split_even(len, parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len {len} parts {parts}");
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                if !rs.is_empty() {
+                    let max = rs.iter().map(|r| r.len()).max().unwrap();
+                    let min = rs.iter().map(|r| r.len()).min().unwrap();
+                    assert!(max - min <= 1, "unbalanced: {max} vs {min}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_slice_mut_matches_serial() {
+        for threads in [1usize, 2, 8] {
+            for len in [0usize, 1, 100, 10_000] {
+                let mut x: Vec<u64> = (0..len as u64).collect();
+                with_threads(threads, || {
+                    for_each_slice_mut(&mut x, 1, |off, chunk| {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = (off + j) as u64 * 3 + 1;
+                        }
+                    })
+                });
+                let expect: Vec<u64> = (0..len as u64).map(|i| i * 3 + 1).collect();
+                assert_eq!(x, expect, "threads {threads} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_bit_identical_across_threads() {
+        let xs: Vec<f64> = (0..100_001).map(|i| (i as f64).sin()).collect();
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                map_reduce(
+                    xs.len(),
+                    1000,
+                    0.0f64,
+                    |r| xs[r].iter().sum::<f64>(),
+                    |a, b| a + b,
+                )
+            })
+        };
+        let one = run(1);
+        for t in [2usize, 3, 8] {
+            assert_eq!(one.to_bits(), run(t).to_bits(), "threads {t}");
+        }
+        let serial: f64 = xs.iter().sum();
+        assert!((one - serial).abs() <= serial.abs() * 1e-12 + 1e-12);
+    }
+
+    #[test]
+    fn map_reduce_empty_is_identity() {
+        let r = map_reduce(0, 64, 42.0f64, |_| unreachable!(), |a: f64, b| a + b);
+        assert_eq!(r, 42.0);
+    }
+
+    #[test]
+    fn for_each_item_runs_every_item_once() {
+        use std::sync::atomic::AtomicU64;
+        for t in [1usize, 2, 8] {
+            let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+            let items: Vec<usize> = (0..100).collect();
+            with_threads(t, || {
+                for_each_item(items, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                })
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} threads {t}");
+            }
+        }
+        // empty input is a no-op
+        for_each_item(Vec::<usize>::new(), |_| panic!("called on empty"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..500).collect();
+        for t in [1usize, 2, 8] {
+            let out = with_threads(t, || parallel_map(&items, |i, &x| i * 1000 + x));
+            let expect: Vec<usize> = (0..500).map(|i| i * 1001).collect();
+            assert_eq!(out, expect, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let before = num_threads();
+        let inside = with_threads(3, num_threads);
+        assert_eq!(inside, 3);
+        assert_eq!(num_threads(), before);
+        // nested: innermost wins
+        let nested = with_threads(2, || with_threads(5, num_threads));
+        assert_eq!(nested, 5);
+    }
+}

@@ -1,0 +1,236 @@
+//! Parallelism-correctness suite for the parallel execution layer
+//! (`util::par`): every parallel hot path must produce results
+//! bit-identical to its single-threaded reference at 1, 2 and 8 worker
+//! threads — including empty and non-chunk-aligned lengths. The one
+//! documented exception is `global_norm`, whose fixed-grid tree
+//! reduction is bit-identical *across thread counts* but only
+//! ULP-bounded against the unchunked serial fold.
+
+use llmq::collectives::{DeviceGroup, memcpy::reduce_scatter_memcpy_serial, reduce_scatter_memcpy};
+use llmq::optim::{AdamW, AdamWParams, clip_global_norm, global_norm, global_norm_serial};
+use llmq::precision::{bf16, CounterRng, E4M3, E5M2, fp8};
+use llmq::util::par;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Test lengths: empty, single, sub-grain, non-aligned multi-chunk.
+const LENS: [usize; 5] = [0, 1, 1023, 65_537, 100_003];
+
+fn data(n: usize, salt: u32) -> Vec<f32> {
+    let rng = CounterRng::new(salt);
+    (0..n)
+        .map(|i| (rng.next_f32(i as u32) - 0.5) * 16.0)
+        .collect()
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fp8_quantize_parallel_equivalence() {
+    for fmt in [E4M3, E5M2] {
+        for n in LENS {
+            let base = data(n, 0xF8);
+            let mut reference = base.clone();
+            let s_ref = fmt.quantize_serial(&mut reference);
+            for t in THREAD_COUNTS {
+                let mut x = base.clone();
+                let s = par::with_threads(t, || fmt.quantize(&mut x));
+                assert_eq!(s.to_bits(), s_ref.to_bits(), "{} n={n} t={t}", fmt.name);
+                assert_eq!(bits(&x), bits(&reference), "{} n={n} t={t}", fmt.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn fp8_codec_roundtrip_parallel_equivalence() {
+    for n in LENS {
+        let base = data(n, 0xC0DE);
+        let (b_ref, s_ref) = fp8::encode_tensor_serial(E4M3, &base);
+        let mut d_ref = vec![0f32; n];
+        fp8::decode_tensor_serial(E4M3, &b_ref, s_ref, &mut d_ref);
+        for t in THREAD_COUNTS {
+            let (bytes, scale) = par::with_threads(t, || fp8::encode_tensor(E4M3, &base));
+            assert_eq!(bytes, b_ref, "encode n={n} t={t}");
+            assert_eq!(scale.to_bits(), s_ref.to_bits());
+            let mut dec = vec![0f32; n];
+            par::with_threads(t, || fp8::decode_tensor(E4M3, &bytes, scale, &mut dec));
+            assert_eq!(bits(&dec), bits(&d_ref), "decode n={n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn bf16_stochastic_round_parallel_equivalence() {
+    let rng = CounterRng::new(0x11A17);
+    for n in LENS {
+        let base = data(n, 0xB16);
+        for counter_base in [0u32, 977, u32::MAX - 5] {
+            let mut reference = base.clone();
+            bf16::stochastic_round_slice_serial(&mut reference, &rng, counter_base);
+            for t in THREAD_COUNTS {
+                let mut x = base.clone();
+                par::with_threads(t, || bf16::stochastic_round_slice(&mut x, &rng, counter_base));
+                assert_eq!(bits(&x), bits(&reference), "n={n} t={t} cb={counter_base}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bf16_accumulate_parallel_equivalence() {
+    for n in LENS {
+        let base = data(n, 0xACC);
+        let add = data(n, 0xADD);
+        let mut reference = base.clone();
+        bf16::accumulate_bf16_serial(&mut reference, &add);
+        for t in THREAD_COUNTS {
+            let mut acc = base.clone();
+            par::with_threads(t, || bf16::accumulate_bf16(&mut acc, &add));
+            assert_eq!(bits(&acc), bits(&reference), "n={n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn bf16_pack_unpack_parallel_equivalence() {
+    for n in LENS {
+        let mut base = data(n, 0xBA9);
+        bf16::round_slice(&mut base);
+        let mut packed_ref = vec![0u16; n];
+        let mut packed = vec![0u16; n];
+        // serial loop reference
+        for (o, &v) in packed_ref.iter_mut().zip(&base) {
+            *o = (v.to_bits() >> 16) as u16;
+        }
+        for t in THREAD_COUNTS {
+            par::with_threads(t, || bf16::pack(&base, &mut packed));
+            assert_eq!(packed, packed_ref, "pack n={n} t={t}");
+            let mut un = vec![0f32; n];
+            par::with_threads(t, || bf16::unpack(&packed, &mut un));
+            assert_eq!(bits(&un), bits(&base), "unpack n={n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn adamw_step_parallel_equivalence() {
+    let opt = AdamW::new(AdamWParams::default());
+    for n in LENS {
+        let p0 = data(n, 0x9A);
+        let m0 = data(n, 0x9B);
+        let v0: Vec<f32> = data(n, 0x9C).iter().map(|x| x.abs()).collect();
+        let g = data(n, 0x9D);
+        let run_serial = || {
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            opt.step_serial(&mut p, &mut m, &mut v, &g, 1e-3, 7, 4321, n as u32 + 13);
+            (p, m, v)
+        };
+        let (pr, mr, vr) = run_serial();
+        for t in THREAD_COUNTS {
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            par::with_threads(t, || {
+                opt.step(&mut p, &mut m, &mut v, &g, 1e-3, 7, 4321, n as u32 + 13)
+            });
+            assert_eq!(bits(&p), bits(&pr), "p n={n} t={t}");
+            assert_eq!(bits(&m), bits(&mr), "m n={n} t={t}");
+            assert_eq!(bits(&v), bits(&vr), "v n={n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn global_norm_identical_across_threads_and_ulp_close_to_serial() {
+    for n in LENS {
+        let g = data(n, 0x6068);
+        let one = par::with_threads(1, || global_norm(&g));
+        for t in THREAD_COUNTS {
+            let norm = par::with_threads(t, || global_norm(&g));
+            // fixed reduction grid → bit-identical for every thread count
+            assert_eq!(norm.to_bits(), one.to_bits(), "n={n} t={t}");
+        }
+        let serial = global_norm_serial(&g);
+        let tol = serial.abs() * 1e-6f32 + 1e-12f32;
+        assert!(
+            (one - serial).abs() <= tol,
+            "n={n}: chunked {one} vs serial {serial}"
+        );
+    }
+}
+
+#[test]
+fn clip_global_norm_parallel_equivalence() {
+    let n = 100_003;
+    let base = data(n, 0xC11F);
+    let mut reference = base.clone();
+    let pre_ref = {
+        // reference: serial norm + serial scale
+        let norm = par::with_threads(1, || global_norm(&reference));
+        let max_norm = norm / 3.0;
+        let s = max_norm / norm;
+        for v in reference.iter_mut() {
+            *v *= s;
+        }
+        (norm, max_norm)
+    };
+    for t in THREAD_COUNTS {
+        let mut g = base.clone();
+        let pre = par::with_threads(t, || clip_global_norm(&mut g, pre_ref.1));
+        assert_eq!(pre.to_bits(), pre_ref.0.to_bits(), "pre-clip norm t={t}");
+        assert_eq!(bits(&g), bits(&reference), "clipped grads t={t}");
+    }
+}
+
+#[test]
+fn reduce_scatter_parallel_equivalence() {
+    // chunk sizes straddle the pipeline block (8192): unaligned + aligned
+    for (world, chunk) in [(2usize, 5usize), (4, 1000), (2, 8192), (4, 20_011)] {
+        let n = world * chunk;
+        let rng = CounterRng::new(0x5CA7);
+        let grads = DeviceGroup::from_fn(world, n, |r, i| {
+            bf16::round_to_bf16((rng.next_f32((r * n + i) as u32) - 0.5) * 2.0)
+        });
+        let mk_acc = || -> Vec<Vec<f32>> {
+            (0..world)
+                .map(|w| {
+                    (0..chunk)
+                        .map(|i| bf16::round_to_bf16(rng.next_f32((w * chunk + i) as u32 ^ 0xACC)))
+                        .collect()
+                })
+                .collect()
+        };
+        let mut reference = mk_acc();
+        reduce_scatter_memcpy_serial(&grads, &mut reference, &CounterRng::new(3), 991);
+        for t in THREAD_COUNTS {
+            let mut acc = mk_acc();
+            par::with_threads(t, || {
+                reduce_scatter_memcpy(&grads, &mut acc, &CounterRng::new(3), 991)
+            });
+            for w in 0..world {
+                assert_eq!(
+                    bits(&acc[w]),
+                    bits(&reference[w]),
+                    "world={world} chunk={chunk} w={w} t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_gather_parallel_matches_any_thread_count() {
+    for (world, chunk) in [(2usize, 7usize), (4, 3000), (6, 9001)] {
+        let shards: Vec<Vec<f32>> = (0..world)
+            .map(|r| (0..chunk).map(|i| (r * 100_000 + i) as f32).collect())
+            .collect();
+        let mut reference = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+        par::with_threads(1, || llmq::collectives::all_gather_memcpy(&shards, &mut reference));
+        for t in THREAD_COUNTS {
+            let mut out = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+            par::with_threads(t, || llmq::collectives::all_gather_memcpy(&shards, &mut out));
+            assert_eq!(out.buffers, reference.buffers, "world={world} t={t}");
+        }
+    }
+}

@@ -71,7 +71,7 @@ fn fwd_artifact_runs_with_buffers() {
     let t = man.config.seq_len;
     let tokens: Vec<i32> = vec![1; b * t];
     bufs.push(rt.buffer_i32(&tokens, &[b as i64, t as i64]).unwrap());
-    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let refs: Vec<&llmq::runtime::PjRtBuffer> = bufs.iter().collect();
     let outs = exe.run_b_refs(&refs).unwrap();
     let logits: Vec<f32> = outs[0].to_vec().unwrap();
     assert_eq!(logits.len(), b * t * man.config.vocab);
