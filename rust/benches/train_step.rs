@@ -1,0 +1,247 @@
+//! Optimizer-step pipeline benchmark: the staged multi-pass host step
+//! vs. the fused streaming pipeline (`optim::fused`), end-to-end and per
+//! phase, at `LLMQ_THREADS` workers. Emits `BENCH_trainstep.json` at the
+//! repo root so the §3.1 "optimizer hidden behind compute" budget is
+//! trackable across PRs.
+//!
+//! `LLMQ_TRAINSTEP_SMALL=1` shrinks the buffer for CI smoke runs.
+
+use llmq::collectives::{
+    all_gather_memcpy, reduce_scatter_memcpy, DeviceGroup,
+};
+use llmq::optim::fused::{self, HostStep};
+use llmq::optim::{AdamW, AdamWParams};
+use llmq::precision::{bf16, round_to_bf16, CounterRng};
+use llmq::shard::shard_range;
+use llmq::train::StepWorkspace;
+use llmq::util::{par, Bencher};
+
+struct Phase {
+    path: &'static str,
+    phase: &'static str,
+    ns: f64,
+}
+
+fn median_ns(b: &Bencher, name: &str) -> f64 {
+    b.stats(name).expect("bench label").median.as_secs_f64() * 1e9
+}
+
+fn repo_root_path(file: &str) -> String {
+    for prefix in ["", "../"] {
+        if std::path::Path::new(&format!("{prefix}ROADMAP.md")).exists() {
+            return format!("{prefix}{file}");
+        }
+    }
+    file.to_string()
+}
+
+fn write_json(
+    n: usize,
+    world: usize,
+    n_micro: usize,
+    phases: &[Phase],
+    ns_staged: f64,
+    ns_fused: f64,
+) {
+    let threads = par::num_threads();
+    let mut s = String::from("{\n");
+    s += &format!(
+        "  \"bench\": \"train_step\",\n  \"projected\": false,\n  \"threads\": {threads},\n  \
+         \"n\": {n},\n  \"world\": {world},\n  \"n_micro\": {n_micro},\n"
+    );
+    s += "  \"phases\": [\n";
+    for (i, p) in phases.iter().enumerate() {
+        s += &format!(
+            "    {{\"path\": \"{}\", \"phase\": \"{}\", \"ns\": {:.0}}}{}\n",
+            p.path,
+            p.phase,
+            p.ns,
+            if i + 1 < phases.len() { "," } else { "" }
+        );
+    }
+    s += "  ],\n";
+    s += &format!(
+        "  \"total\": {{\"ns_staged\": {ns_staged:.0}, \"ns_fused\": {ns_fused:.0}, \
+         \"speedup\": {:.3}}}\n}}\n",
+        ns_staged / ns_fused
+    );
+    let path = repo_root_path("BENCH_trainstep.json");
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let small = std::env::var("LLMQ_TRAINSTEP_SMALL").is_ok();
+    // 4M f32 = 16 MiB of parameters (multi-MB host step); CI smoke: 256K.
+    let n: usize = if small { 1 << 18 } else { 1 << 22 };
+    let world = 4usize;
+    let n_micro = 8usize;
+    let hs = HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip: 1e9, // steady-state step: clip does not trigger
+        step: 2,
+        counter: 1,
+        seed: 0,
+        n_micro,
+        opt_world: world,
+    };
+    println!(
+        "train_step: n={n} world={world} threads={} ({})\n",
+        par::num_threads(),
+        if small { "small preset" } else { "full preset" }
+    );
+
+    let rng = CounterRng::new(1);
+    let mut ws = StepWorkspace::new(world, n);
+    ws.begin_step();
+    for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((d * n + i) as u32) - 0.5) * 0.02);
+        }
+    }
+    let p0: Vec<f32> = (0..n)
+        .map(|i| round_to_bf16((rng.next_f32(0x8000_0000 + i as u32) - 0.5) * 2.0))
+        .collect();
+    let mut b = Bencher::new(1, 5);
+    let mut phases: Vec<Phase> = vec![];
+    let mut record = |b: &Bencher, path: &'static str, phase: &'static str, label: &str| {
+        let ns = median_ns(b, label);
+        phases.push(Phase { path, phase, ns });
+    };
+    let scale = 1.0 / n_micro as f32;
+
+    // ---- staged phases (every intermediate materialized) -------------------
+    b.bench("staged: avg+round (alloc + full pass/device)", || {
+        let avg: Vec<Vec<f32>> = ws
+            .dev_grads
+            .iter()
+            .map(|g| {
+                let mut o = vec![0f32; n];
+                bf16::scaled_round_into(g, &mut o, scale);
+                o
+            })
+            .collect();
+        avg
+    });
+    record(&b, "staged", "avg+round", "staged: avg+round (alloc + full pass/device)");
+
+    // pre-averaged group for the isolated reduce/flatten timings
+    let avg_group = DeviceGroup {
+        world,
+        buffers: ws
+            .dev_grads
+            .iter()
+            .map(|g| {
+                let mut o = vec![0f32; n];
+                bf16::scaled_round_into(g, &mut o, scale);
+                o
+            })
+            .collect(),
+    };
+    let rs_rng = CounterRng::new(fused::REDUCE_RNG_KEY ^ hs.seed);
+    let chunk = n / world;
+    b.bench("staged: reduce-scatter (fresh shards)", || {
+        let mut shards = vec![vec![0f32; chunk]; world];
+        reduce_scatter_memcpy(&avg_group, &mut shards, &rs_rng, hs.counter);
+        shards
+    });
+    record(&b, "staged", "reduce-scatter", "staged: reduce-scatter (fresh shards)");
+
+    let mut shards = vec![vec![0f32; chunk]; world];
+    reduce_scatter_memcpy(&avg_group, &mut shards, &rs_rng, hs.counter);
+    b.bench("staged: flatten shards", || {
+        let mut flat = vec![0f32; n];
+        for (r, sh) in shards.iter().enumerate() {
+            flat[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
+        }
+        flat
+    });
+    record(&b, "staged", "flatten", "staged: flatten shards");
+
+    let mut flat = vec![0f32; n];
+    for (r, sh) in shards.iter().enumerate() {
+        flat[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
+    }
+    b.bench("staged: global norm", || fused::grad_norm(&flat));
+    record(&b, "staged", "norm", "staged: global norm");
+
+    let opt = AdamW::new(hs.hp);
+    let shard = n / hs.opt_world;
+    let mut p = p0.clone();
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    b.bench("staged: per-rank adamw", || {
+        for rank in 0..hs.opt_world {
+            let range = shard_range(n, hs.opt_world, rank);
+            let base = hs.counter.wrapping_add((rank * shard) as u32);
+            opt.step(
+                &mut p[range.clone()],
+                &mut m[range.clone()],
+                &mut v[range.clone()],
+                &flat[range],
+                hs.lr,
+                hs.step,
+                base,
+                shard as u32,
+            );
+        }
+    });
+    record(&b, "staged", "adamw", "staged: per-rank adamw");
+
+    b.bench("staged: all-gather (fresh buffers)", || {
+        let shards_p: Vec<Vec<f32>> = (0..world)
+            .map(|r| p[shard_range(n, world, r)].to_vec())
+            .collect();
+        let mut gathered = DeviceGroup::from_fn(world, n, |_, _| 0.0);
+        all_gather_memcpy(&shards_p, &mut gathered);
+        p.copy_from_slice(&gathered.buffers[0]);
+    });
+    record(&b, "staged", "all-gather", "staged: all-gather (fresh buffers)");
+
+    // ---- fused phases (persistent workspace) --------------------------------
+    b.bench("fused: reduce+avg (incl. arena zero)", || {
+        ws.grads.fill(0.0);
+        fused::reduce_phase(&mut ws, &hs);
+    });
+    record(&b, "fused", "reduce+avg", "fused: reduce+avg (incl. arena zero)");
+
+    b.bench("fused: norm (arena partials)", || fused::norm_phase(&mut ws));
+    record(&b, "fused", "norm", "fused: norm (arena partials)");
+
+    let norm = fused::norm_phase(&mut ws);
+    let mut pf = p0.clone();
+    let mut mf = vec![0f32; n];
+    let mut vf = vec![0f32; n];
+    b.bench("fused: clip+adamw+gather", || {
+        fused::update_phase(&mut ws, &mut pf, &mut mf, &mut vf, &hs, norm)
+    });
+    record(&b, "fused", "update+gather", "fused: clip+adamw+gather");
+
+    // ---- end-to-end duel ----------------------------------------------------
+    let mut ps = p0.clone();
+    let mut ms = vec![0f32; n];
+    let mut vs = vec![0f32; n];
+    b.bench("staged step [end-to-end]", || {
+        fused::staged_step(&mut ws, &mut ps, &mut ms, &mut vs, &hs)
+    });
+    let mut pf = p0.clone();
+    let mut mf = vec![0f32; n];
+    let mut vf = vec![0f32; n];
+    b.bench("fused step [end-to-end]", || {
+        ws.grads.fill(0.0);
+        fused::fused_step(&mut ws, &mut pf, &mut mf, &mut vf, &hs)
+    });
+
+    let ns_staged = median_ns(&b, "staged step [end-to-end]");
+    let ns_fused = median_ns(&b, "fused step [end-to-end]");
+    println!(
+        "\n  -> host step: {:.2}x speedup (staged {:.2} ms -> fused {:.2} ms)",
+        ns_staged / ns_fused,
+        ns_staged / 1e6,
+        ns_fused / 1e6
+    );
+    write_json(n, world, n_micro, &phases, ns_staged, ns_fused);
+}

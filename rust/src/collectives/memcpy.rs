@@ -56,44 +56,94 @@ pub fn reduce_scatter_memcpy(
     assert_eq!(acc.len(), world);
     let rng = *rng;
 
-    // (rank, block-offset, block) work grid — the chunk pipeline.
-    let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+    // (global-offset, block) work grid — the chunk pipeline.
+    let mut items: Vec<(usize, &mut [f32])> = Vec::new();
     for (w, a) in acc.iter_mut().enumerate() {
         assert_eq!(a.len(), chunk, "shard accumulator length");
-        let mut tail: &mut [f32] = a;
-        let mut i0 = 0usize;
-        while !tail.is_empty() {
-            let take = tail.len().min(PIPELINE_BLOCK);
-            let (head, rest) = tail.split_at_mut(take);
-            tail = rest;
-            items.push((w, i0, head));
-            i0 += take;
+        for (i0, block) in par::split_blocks_mut(a, PIPELINE_BLOCK) {
+            items.push((w * chunk + i0, block));
         }
     }
 
     // Round-robin blocks across workers: balances ranks and keeps every
     // worker streaming from all source buffers (the multi-channel split).
-    par::for_each_item(items, |(w, i0, block)| {
-        reduce_block(grads, w, i0, block, &rng, counter)
+    par::for_each_item(items, |(base, block)| {
+        reduce_block(grads, base, block, None, &rng, counter)
     });
 }
 
 /// The per-block reduction kernel: fixed ascending-src sum + one SR.
+/// `base` is the block's global element offset (= the SR counter offset).
+/// With `scale = Some(s)` each source term is pre-scaled and RNE-rounded
+/// onto the bf16 grid before the sum — fusing the microbatch
+/// average/round pass into the reduction epilogue.
 fn reduce_block(
     grads: &DeviceGroup,
-    w: usize,
-    i0: usize,
+    base: usize,
     block: &mut [f32],
+    scale: Option<f32>,
     rng: &CounterRng,
     counter: u32,
 ) {
-    let base = w * grads.chunk_len() + i0;
     for (j, a) in block.iter_mut().enumerate() {
         let mut sum = *a;
         for src in 0..grads.world {
-            sum += grads.buffers[src][base + j];
+            let g = grads.buffers[src][base + j];
+            sum += match scale {
+                Some(s) => bf16::round_to_bf16(g * s),
+                None => g,
+            };
         }
         *a = bf16::stochastic_round_bf16(sum, rng, counter.wrapping_add((base + j) as u32));
+    }
+}
+
+/// Pre-scaled reduce-scatter with a *flat* accumulator — the fused
+/// optimizer-step epilogue. `out` is the concatenation of all rank
+/// shards (rank `r` owns `out[r·chunk .. (r+1)·chunk]`, the layout the
+/// optimizer consumes), and each source term is RNE-rounded to bf16
+/// *after* scaling and *before* the ascending-src sum:
+///
+/// `out[j] = bf16_sr(out[j] + Σ_src bf16(grads[src][j] · scale))`
+///
+/// This is bit-identical to a separate `scaled_round_into` sweep over
+/// every source followed by [`reduce_scatter_memcpy`] — but touches each
+/// gradient element exactly once. Chunk-pipelined over
+/// [`PIPELINE_BLOCK`]s like the unscaled variant; bit-identical to
+/// [`reduce_scatter_scaled_memcpy_serial`] at any thread count.
+pub fn reduce_scatter_scaled_memcpy(
+    grads: &DeviceGroup,
+    out: &mut [f32],
+    scale: f32,
+    rng: &CounterRng,
+    counter: u32,
+) {
+    assert_eq!(out.len(), grads.numel(), "flat accumulator length");
+    let _ = grads.chunk_len(); // assert world | numel
+    let rng = *rng;
+
+    let items = par::split_blocks_mut(out, PIPELINE_BLOCK);
+    par::for_each_item(items, |(i0, block)| {
+        reduce_block(grads, i0, block, Some(scale), &rng, counter)
+    });
+}
+
+/// Single-threaded reference for `reduce_scatter_scaled_memcpy`.
+pub fn reduce_scatter_scaled_memcpy_serial(
+    grads: &DeviceGroup,
+    out: &mut [f32],
+    scale: f32,
+    rng: &CounterRng,
+    counter: u32,
+) {
+    assert_eq!(out.len(), grads.numel(), "flat accumulator length");
+    let _ = grads.chunk_len();
+    for (j, a) in out.iter_mut().enumerate() {
+        let mut sum = *a;
+        for src in 0..grads.world {
+            sum += bf16::round_to_bf16(grads.buffers[src][j] * scale);
+        }
+        *a = bf16::stochastic_round_bf16(sum, rng, counter.wrapping_add(j as u32));
     }
 }
 
@@ -204,6 +254,63 @@ mod tests {
             for i in 0..4 {
                 assert!((acc[w][i] - 12.0).abs() < 0.125, "{}", acc[w][i]);
             }
+        }
+    }
+
+    /// The fused pre-scaled variant must equal the two-pass chain it
+    /// replaces: RNE-scale every source, then classic reduce-scatter.
+    #[test]
+    fn scaled_variant_matches_two_pass_chain() {
+        let world = 4;
+        let n = 3 * PIPELINE_BLOCK + 77; // non-block-aligned... but must be % world
+        let n = n - n % world;
+        let g = mk_group(world, n);
+        let scale = 1.0f32 / 3.0;
+        let rng = CounterRng::new(9);
+
+        // two-pass reference
+        let rounded = DeviceGroup {
+            world,
+            buffers: g
+                .buffers
+                .iter()
+                .map(|b| b.iter().map(|&x| round_to_bf16(x * scale)).collect())
+                .collect(),
+        };
+        let chunk = n / world;
+        let mut acc = vec![vec![0f32; chunk]; world];
+        reduce_scatter_memcpy(&rounded, &mut acc, &rng, 55);
+        let mut expect = vec![0f32; n];
+        for (r, sh) in acc.iter().enumerate() {
+            expect[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
+        }
+
+        let mut out = vec![0f32; n];
+        reduce_scatter_scaled_memcpy(&g, &mut out, scale, &rng, 55);
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn scaled_variant_parallel_matches_serial() {
+        let world = 2;
+        let n = PIPELINE_BLOCK + 1024;
+        let g = mk_group(world, n);
+        let rng = CounterRng::new(3);
+        let mut reference = vec![0.5f32; n];
+        reduce_scatter_scaled_memcpy_serial(&g, &mut reference, 0.25, &rng, 7);
+        for t in [1usize, 2, 8] {
+            let mut out = vec![0.5f32; n];
+            crate::util::par::with_threads(t, || {
+                reduce_scatter_scaled_memcpy(&g, &mut out, 0.25, &rng, 7)
+            });
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "threads {t}"
+            );
         }
     }
 

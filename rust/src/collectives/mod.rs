@@ -19,7 +19,10 @@ pub mod memcpy;
 pub mod ring;
 
 pub use barrier::{iteration, run_workers, CpuBarrier, DeadlockPolicy, QueueDeadlock};
-pub use memcpy::{all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_memcpy_serial};
+pub use memcpy::{
+    all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_memcpy_serial,
+    reduce_scatter_scaled_memcpy, reduce_scatter_scaled_memcpy_serial,
+};
 pub use ring::{all_gather_ring, reduce_scatter_ring};
 
 /// A group of virtual devices, each owning a flat f32 arena per named

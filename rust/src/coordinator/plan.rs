@@ -8,7 +8,7 @@ use crate::memory::{self, MemoryPlan, PlanInput};
 use crate::offload::{OffloadConfig, TransferMode};
 use crate::recompute::Recompute;
 use crate::shard::ShardConfig;
-use crate::sim::{simulate_step, CommBackend, StepConfig, StepResult};
+use crate::sim::{simulate_step_with, CommBackend, Engine, StepConfig, StepResult};
 use crate::util::par;
 
 /// A fully resolved configuration (what Table 7 rows record).
@@ -56,6 +56,12 @@ fn enumerate_candidates(
     for shard in ShardConfig::ladder(world) {
         for offload in OffloadConfig::ladder() {
             for rc in Recompute::ALL {
+                // Prune: if the batch-independent memory floor already
+                // exceeds the device budget, no micro-batch can fit —
+                // skip the point before sizing batches or simulating.
+                if !memory::device_floor_fits(m, gpu, fp8, rc, offload, shard) {
+                    continue;
+                }
                 let bmax = memory::planner::max_micro_batch(
                     m, gpu, fp8, rc, offload, shard, host_mem_gib, 64,
                 );
@@ -95,8 +101,11 @@ fn enumerate_candidates(
 /// the fastest configuration that fits; `forced_micro != 0` pins the
 /// micro-batch.
 ///
-/// The grid is simulated across the `LLMQ_THREADS` workers
-/// (`simulate_step` is a pure function of the candidate); the argmax is
+/// Grid points whose batch-independent memory floor exceeds the device
+/// budget are pruned before any batch sizing or simulation. The
+/// survivors are simulated across the `LLMQ_THREADS` workers, each
+/// reusing one DES engine (`simulate_step_with` is a pure function of
+/// the candidate — the engine only recycles arenas); the argmax is
 /// taken over the results in enumeration order with a strict-`>`
 /// comparison, so ties break to the earliest candidate — exactly the
 /// result the serial loop produced.
@@ -112,19 +121,22 @@ pub fn autoplan(
     let node = NodeTopology::new(gpu.clone(), world);
     let cands = enumerate_candidates(m, gpu, world, fp8, node.host_mem_gib, forced_micro);
 
-    let results: Vec<(usize, StepResult)> = par::parallel_map(&cands, |_, c| {
-        let ga = grad_accum_for(m, world, c.micro_batch, step_tokens);
-        let cfg = StepConfig {
-            micro_batch: c.micro_batch,
-            grad_accum: ga,
-            recompute: c.recompute,
-            offload: c.offload,
-            shard: c.shard,
-            comm,
-            transfer_mode: TransferMode::DoubleBuffer,
-        };
-        (ga, simulate_step(m, &node, fp8, &cfg))
-    });
+    // One DES engine per worker: `simulate_step_with` clears and reuses
+    // its task/dep/stream arenas across the worker's share of the grid.
+    let results: Vec<(usize, StepResult)> =
+        par::parallel_map_with(&cands, Engine::new, |eng, _, c| {
+            let ga = grad_accum_for(m, world, c.micro_batch, step_tokens);
+            let cfg = StepConfig {
+                micro_batch: c.micro_batch,
+                grad_accum: ga,
+                recompute: c.recompute,
+                offload: c.offload,
+                shard: c.shard,
+                comm,
+                transfer_mode: TransferMode::DoubleBuffer,
+            };
+            (ga, simulate_step_with(eng, m, &node, fp8, &cfg))
+        });
 
     let mut best: Option<usize> = None;
     for (i, (_, r)) in results.iter().enumerate() {

@@ -180,6 +180,34 @@ pub fn plan(inp: &PlanInput, host_mem_gib: f64) -> MemoryPlan {
     p
 }
 
+/// Batch-independent device-memory lower bound of a (recompute, offload,
+/// shard) grid point: the footprint at zero tokens — resident weights,
+/// master copies, moments, gradient buffers and the fixed reserve. The
+/// footprint is monotone in the micro-batch, so a floor above the
+/// device budget means *no* batch fits and the planner can prune the
+/// point before sizing batches or simulating it.
+pub fn device_floor_fits(
+    model: &ModelPreset,
+    gpu: &GpuSpec,
+    fp8: bool,
+    recompute: Recompute,
+    offload: OffloadConfig,
+    shard: ShardConfig,
+) -> bool {
+    let inp = PlanInput {
+        model,
+        gpu,
+        fp8,
+        recompute,
+        offload,
+        shard,
+        micro_batch: 0,
+    };
+    // host_mem is irrelevant at zero tokens; only the device verdict is
+    // the lower bound.
+    plan(&inp, f64::MAX).fits
+}
+
 /// Largest micro-batch that fits (0 = nothing fits).
 pub fn max_micro_batch(
     model: &ModelPreset,
@@ -345,6 +373,27 @@ mod tests {
             .dev_activations
         };
         assert!(mk(true) > mk(false));
+    }
+
+    /// Pruning soundness: a failed floor must imply max_micro_batch == 0
+    /// (the planner only skips points that could never fit).
+    #[test]
+    fn device_floor_is_a_true_lower_bound() {
+        let gpu = gpu_by_name("RTX 4090").unwrap();
+        for name in ["0.5B", "1.5B", "7B", "14B", "32B"] {
+            let m = by_name(name).unwrap();
+            for shard in [ShardConfig::single(), ShardConfig::full(4)] {
+                for off in [OffloadConfig::NONE, OffloadConfig::FULL] {
+                    for rc in Recompute::ALL {
+                        let floor = device_floor_fits(&m, &gpu, true, rc, off, shard);
+                        let bmax = max_micro_batch(&m, &gpu, true, rc, off, shard, 256.0, 8);
+                        if !floor {
+                            assert_eq!(bmax, 0, "{name} {shard:?} {off:?} {rc:?}");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

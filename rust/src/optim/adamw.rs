@@ -38,6 +38,35 @@ pub struct AdamW {
 /// The key the Pallas kernel uses (kernels/adamw.py `key=0x11A17`).
 pub const ADAMW_RNG_KEY: u32 = 0x11A17;
 
+/// SR stream keys for the two moments (derived exactly as the Pallas
+/// kernel derives them; shared with the fused step kernel so the two
+/// paths cannot drift).
+pub(crate) const KEY_M: u32 = ADAMW_RNG_KEY ^ 0x6D61_6D6D;
+pub(crate) const KEY_V: u32 = ADAMW_RNG_KEY ^ 0x7676_6172;
+
+/// One AdamW element update *before* stochastic rounding: returns the
+/// exact-f32 `(p', m', v')`. This is the single source of truth for the
+/// update math — `AdamW::step_serial` and `optim::fused`'s clip+AdamW+SR
+/// chunk kernel both inline it, which is what makes the fused pipeline
+/// bit-identical to the staged reference.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_element(
+    hp: &AdamWParams,
+    p: f32,
+    m: f32,
+    v: f32,
+    g: f32,
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) -> (f32, f32, f32) {
+    let m2 = hp.beta1 * m + (1.0 - hp.beta1) * g;
+    let v2 = hp.beta2 * v + (1.0 - hp.beta2) * g * g;
+    let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + hp.eps) + hp.weight_decay * p;
+    (p - lr * upd, m2, v2)
+}
+
 impl AdamW {
     pub fn new(hp: AdamWParams) -> Self {
         Self {
@@ -114,15 +143,11 @@ impl AdamW {
         let n = p.len();
         let bc1 = 1.0 - self.hp.beta1.powi(step as i32);
         let bc2 = 1.0 - self.hp.beta2.powi(step as i32);
-        let key_m = CounterRng::new(ADAMW_RNG_KEY ^ 0x6D61_6D6D);
-        let key_v = CounterRng::new(ADAMW_RNG_KEY ^ 0x7676_6172);
+        let key_m = CounterRng::new(KEY_M);
+        let key_v = CounterRng::new(KEY_V);
         for i in 0..n {
-            let gi = g[i];
-            let m2 = self.hp.beta1 * m[i] + (1.0 - self.hp.beta1) * gi;
-            let v2 = self.hp.beta2 * v[i] + (1.0 - self.hp.beta2) * gi * gi;
-            let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + self.hp.eps)
-                + self.hp.weight_decay * p[i];
-            let p2 = p[i] - lr * upd;
+            let (p2, m2, v2) =
+                update_element(&self.hp, p[i], m[i], v[i], g[i], lr, bc1, bc2);
             let c = counter_base.wrapping_add(i as u32);
             p[i] = bf16::stochastic_round_bf16(p2, &self.rng, c);
             m[i] = bf16::stochastic_round_bf16(m2, &key_m, c.wrapping_add(n_full));

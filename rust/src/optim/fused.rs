@@ -1,0 +1,409 @@
+//! The fused streaming optimizer-step pipeline (host side).
+//!
+//! `Trainer::train_step` used to be a chain of seven full-buffer passes —
+//! average/round, reduce-scatter into throwaway shards, a flatten copy,
+//! a two-pass norm + clip, per-rank AdamW, and an all-gather through
+//! fresh buffers. This module collapses that chain into three streaming
+//! phases over a persistent [`StepWorkspace`]:
+//!
+//! 1. **reduce** — the microbatch average/RNE-round is folded into the
+//!    reduce-scatter epilogue ([`reduce_scatter_scaled_memcpy`]); each
+//!    gradient element is touched once and lands in the flat workspace
+//!    buffer in shard order (world == 1 degenerates to one scaled copy);
+//! 2. **norm** — per-[`PIPELINE_BLOCK`] f64 sum-of-squares partials into
+//!    the workspace's partials arena, folded *in chunk order* (the same
+//!    fixed-grid determinism contract as `optim::global_norm`). This is
+//!    the one barrier in the pipeline: the clip scale is global;
+//! 3. **update** — a fused clip + AdamW + stochastic-rounding kernel per
+//!    chunk that writes updated params/moments in place and gathers each
+//!    hot chunk straight into the persistent per-rank replica buffers.
+//!
+//! Every kernel draws SR randomness by *global element index*, so any
+//! chunking or thread schedule is bit-identical to [`staged_step`], the
+//! multi-pass reference that preserves the old chain (and is what
+//! `tests/fused_step_equivalence.rs` pins the pipeline against at
+//! 1/2/8 threads and world ∈ {1, 2, 4}).
+
+use crate::collectives::memcpy::PIPELINE_BLOCK;
+use crate::collectives::{
+    all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_scaled_memcpy, DeviceGroup,
+};
+use crate::optim::adamw::{self, AdamW, AdamWParams, ADAMW_RNG_KEY};
+use crate::precision::{bf16, CounterRng};
+use crate::shard::shard_range;
+use crate::train::workspace::StepWorkspace;
+use crate::util::par;
+
+/// RNG key for the gradient reduce-scatter SR stream (XORed with the run
+/// seed; distinct from [`ADAMW_RNG_KEY`] so the two streams never
+/// collide even on overlapping counters).
+pub const REDUCE_RNG_KEY: u32 = 0xC011_EC7;
+
+/// Everything the host step needs beyond the state buffers themselves.
+#[derive(Debug, Clone)]
+pub struct HostStep {
+    pub hp: AdamWParams,
+    /// LR for this step (schedule already applied).
+    pub lr: f32,
+    pub grad_clip: f32,
+    /// 1-based optimizer step (bias correction).
+    pub step: u32,
+    /// SR counter base; the trainer advances it by `3 · n` per step.
+    pub counter: u32,
+    /// Run seed (keys the reduce-scatter SR stream).
+    pub seed: u32,
+    /// Microbatches accumulated this step (the averaging divisor).
+    pub n_micro: usize,
+    /// Optimizer-shard count (`Manifest::world`) — fixes the SR counter
+    /// layout of the AdamW moments, independently of the collective
+    /// world size.
+    pub opt_world: usize,
+}
+
+impl HostStep {
+    /// The per-element gradient scale (reciprocal microbatch count).
+    fn grad_scale(&self) -> f32 {
+        1.0 / self.n_micro.max(1) as f32
+    }
+}
+
+/// Global L2 norm over the fixed `PIPELINE_BLOCK` chunk grid: per-chunk
+/// f64 partials folded in chunk order — bit-identical at any thread
+/// count, and bit-identical to [`norm_phase`]'s arena-backed fold.
+pub fn grad_norm(g: &[f32]) -> f32 {
+    par::map_reduce(
+        g.len(),
+        PIPELINE_BLOCK,
+        0.0f64,
+        |r| crate::optim::sumsq(&g[r]),
+        |a, b| a + b,
+    )
+    .sqrt() as f32
+}
+
+/// Phase 1 of the fused pipeline: reduce the per-device accumulators
+/// into the flat workspace gradient, averaging on the fly. `ws.grads`
+/// must be zeroed (`begin_step`); SR draws come from
+/// `REDUCE_RNG_KEY ^ seed` at counter-per-global-index, exactly like the
+/// staged reduce-scatter.
+pub fn reduce_phase(ws: &mut StepWorkspace, hs: &HostStep) {
+    let scale = hs.grad_scale();
+    if ws.world() == 1 {
+        // Degenerate case: no reduction, no SR — one scaled RNE copy.
+        bf16::scaled_round_into(&ws.dev_grads[0], &mut ws.grads, scale);
+        return;
+    }
+    let world = ws.world();
+    let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
+    // Move the accumulators into a DeviceGroup view and back — no copy.
+    let group = DeviceGroup {
+        world,
+        buffers: std::mem::take(&mut ws.dev_grads),
+    };
+    reduce_scatter_scaled_memcpy(&group, &mut ws.grads, scale, &rng, hs.counter);
+    ws.dev_grads = group.buffers;
+}
+
+/// Phase 2: the global-norm barrier. Partials land in the workspace's
+/// `norm_partials` arena (no allocation) and are folded in chunk order.
+pub fn norm_phase(ws: &mut StepWorkspace) -> f32 {
+    let n = ws.n();
+    let grads = &ws.grads;
+    let items: Vec<(usize, &mut f64)> = ws.norm_partials.iter_mut().enumerate().collect();
+    par::for_each_item(items, |(c, slot)| {
+        let r = c * PIPELINE_BLOCK..((c + 1) * PIPELINE_BLOCK).min(n);
+        *slot = crate::optim::sumsq(&grads[r]);
+    });
+    let mut acc = 0.0f64;
+    for p in &ws.norm_partials {
+        acc += p;
+    }
+    acc.sqrt() as f32
+}
+
+/// Phase 3: fused clip + AdamW + SR per chunk, updated params written in
+/// place and gathered directly into the persistent per-rank replicas.
+///
+/// Per element (global index `j`, shard length `S = n / opt_world`):
+/// `g = bf16(grads[j] · clip_scale)` when the clip triggers (else raw),
+/// then the exact [`adamw::update_element`] math with SR counters
+/// `counter + j` / `+ S` / `+ 2S` on the p/m/v streams — the same draws
+/// the staged per-rank `AdamW::step` chain makes.
+pub fn update_phase(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+    norm: f32,
+) {
+    let n = ws.n();
+    assert_eq!(p.len(), n);
+    assert_eq!(m.len(), n);
+    assert_eq!(v.len(), n);
+    assert!(hs.opt_world >= 1 && n % hs.opt_world == 0, "unpadded opt shard");
+    let shard = (n / hs.opt_world) as u32;
+    let clip_scale = if norm > hs.grad_clip && norm > 0.0 {
+        Some(hs.grad_clip / norm)
+    } else {
+        None
+    };
+    let bc1 = 1.0 - hs.hp.beta1.powi(hs.step as i32);
+    let bc2 = 1.0 - hs.hp.beta2.powi(hs.step as i32);
+    let rng_p = CounterRng::new(ADAMW_RNG_KEY);
+    let rng_m = CounterRng::new(adamw::KEY_M);
+    let rng_v = CounterRng::new(adamw::KEY_V);
+
+    // One work item per pipeline chunk: disjoint p/m/v/replica windows,
+    // so the (chunk × worker) schedule needs no synchronization.
+    struct Chunk<'a> {
+        off: usize,
+        p: &'a mut [f32],
+        m: &'a mut [f32],
+        v: &'a mut [f32],
+        g: &'a [f32],
+        replicas: Vec<&'a mut [f32]>,
+    }
+    let mut items: Vec<Chunk> = Vec::with_capacity(ws.n_chunks());
+    {
+        let (mut pt, mut mt, mut vt) = (p, m, v);
+        let mut gt: &[f32] = &ws.grads;
+        let mut reps: Vec<&mut [f32]> = ws
+            .rank_params
+            .iter_mut()
+            .map(|b| b.as_mut_slice())
+            .collect();
+        let mut off = 0usize;
+        while !gt.is_empty() {
+            let take = gt.len().min(PIPELINE_BLOCK);
+            let (p1, rest) = pt.split_at_mut(take);
+            pt = rest;
+            let (m1, rest) = mt.split_at_mut(take);
+            mt = rest;
+            let (v1, rest) = vt.split_at_mut(take);
+            vt = rest;
+            let (g1, rest) = gt.split_at(take);
+            gt = rest;
+            let mut chunk_reps = Vec::with_capacity(reps.len());
+            let mut next_reps = Vec::with_capacity(reps.len());
+            for r in reps {
+                let (head, rest) = r.split_at_mut(take);
+                chunk_reps.push(head);
+                next_reps.push(rest);
+            }
+            reps = next_reps;
+            items.push(Chunk {
+                off,
+                p: p1,
+                m: m1,
+                v: v1,
+                g: g1,
+                replicas: chunk_reps,
+            });
+            off += take;
+        }
+    }
+
+    par::for_each_item(items, |c| {
+        let base = hs.counter.wrapping_add(c.off as u32);
+        for i in 0..c.g.len() {
+            let g = match clip_scale {
+                Some(s) => bf16::round_to_bf16(c.g[i] * s),
+                None => c.g[i],
+            };
+            let (p2, m2, v2) =
+                adamw::update_element(&hs.hp, c.p[i], c.m[i], c.v[i], g, hs.lr, bc1, bc2);
+            let ci = base.wrapping_add(i as u32);
+            c.p[i] = bf16::stochastic_round_bf16(p2, &rng_p, ci);
+            c.m[i] = bf16::stochastic_round_bf16(m2, &rng_m, ci.wrapping_add(shard));
+            c.v[i] = bf16::stochastic_round_bf16(v2, &rng_v, ci.wrapping_add(2 * shard));
+        }
+        // Gather: the chunk is cache-hot — copy it into every rank's
+        // replica now instead of a separate all-gather pass later.
+        for rep in c.replicas {
+            rep.copy_from_slice(c.p);
+        }
+    });
+}
+
+/// The fused streaming optimizer step. Consumes the microbatch
+/// accumulators in `ws.dev_grads` (which the trainer filled after
+/// `begin_step`) and updates `p`/`m`/`v` in place; returns the pre-clip
+/// gradient norm. No heap allocation proportional to `n`.
+pub fn fused_step(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+) -> f32 {
+    reduce_phase(ws, hs);
+    let norm = norm_phase(ws);
+    update_phase(ws, p, m, v, hs, norm);
+    norm
+}
+
+/// The staged multi-pass reference: the pre-fusion `train_step` chain
+/// with every intermediate materialized (fresh average buffers,
+/// throwaway shards, a flattened gradient, per-rank AdamW, an all-gather
+/// through fresh buffers). Allocation-heavy by design — it is the
+/// bitwise oracle the fused pipeline is tested against, not a hot path.
+///
+/// Two deliberate ULP-level departures from the pre-PR chain (shared
+/// with the fused path, so the equivalence contract is unaffected —
+/// within-build determinism, not cross-commit reproducibility, is the
+/// paper's guarantee): averaging multiplies by the reciprocal microbatch
+/// count (the scale the fused reduce epilogue applies) instead of
+/// dividing per element, and the norm folds `PIPELINE_BLOCK` (8K)
+/// partials instead of `global_norm`'s 64K grid.
+pub fn staged_step(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+) -> f32 {
+    let world = ws.world();
+    let n = ws.n();
+    assert_eq!(p.len(), n);
+    let scale = hs.grad_scale();
+
+    // Pass 1: microbatch average + RNE round, one fresh buffer per device.
+    let mut avg: Vec<Vec<f32>> = ws
+        .dev_grads
+        .iter()
+        .map(|g| {
+            let mut o = vec![0f32; n];
+            bf16::scaled_round_into(g, &mut o, scale);
+            o
+        })
+        .collect();
+
+    // Passes 2+3: reduce-scatter into throwaway shards, then flatten.
+    let mut flat: Vec<f32>;
+    if world > 1 {
+        let chunk = n / world;
+        let mut shards: Vec<Vec<f32>> = vec![vec![0f32; chunk]; world];
+        let group = DeviceGroup {
+            world,
+            buffers: avg,
+        };
+        let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
+        reduce_scatter_memcpy(&group, &mut shards, &rng, hs.counter);
+        flat = vec![0f32; n];
+        for (r, sh) in shards.iter().enumerate() {
+            flat[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
+        }
+    } else {
+        flat = avg.swap_remove(0);
+    }
+
+    // Passes 4+5: two-pass global-norm clip.
+    let norm = grad_norm(&flat);
+    if norm > hs.grad_clip && norm > 0.0 {
+        let s = hs.grad_clip / norm;
+        for g in flat.iter_mut() {
+            *g = bf16::round_to_bf16(*g * s);
+        }
+    }
+
+    // Pass 6: per-rank host AdamW over the ZeRO-1 shard layout.
+    let shard = n / hs.opt_world;
+    let opt = AdamW::new(hs.hp);
+    for rank in 0..hs.opt_world {
+        let range = shard_range(n, hs.opt_world, rank);
+        let base = hs.counter.wrapping_add((rank * shard) as u32);
+        opt.step(
+            &mut p[range.clone()],
+            &mut m[range.clone()],
+            &mut v[range.clone()],
+            &flat[range],
+            hs.lr,
+            hs.step,
+            base,
+            shard as u32,
+        );
+    }
+
+    // Pass 7: all-gather of updated parameters through fresh buffers.
+    if world > 1 {
+        let shards_p: Vec<Vec<f32>> = (0..world)
+            .map(|r| p[shard_range(n, world, r)].to_vec())
+            .collect();
+        let mut gathered = DeviceGroup::from_fn(world, n, |_, _| 0.0);
+        all_gather_memcpy(&shards_p, &mut gathered);
+        p.copy_from_slice(&gathered.buffers[0]);
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::round_to_bf16;
+
+    fn mk_host_step(world_micro: usize, opt_world: usize) -> HostStep {
+        HostStep {
+            hp: AdamWParams::default(),
+            lr: 1e-3,
+            grad_clip: 1.0,
+            step: 1,
+            counter: 1,
+            seed: 7,
+            n_micro: world_micro,
+            opt_world,
+        }
+    }
+
+    fn filled_ws(world: usize, n: usize) -> StepWorkspace {
+        let mut ws = StepWorkspace::new(world, n);
+        ws.begin_step();
+        let rng = CounterRng::new(0xFEED);
+        for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+            for (i, x) in g.iter_mut().enumerate() {
+                *x = round_to_bf16((rng.next_f32((d * n + i) as u32) - 0.5) * 2.0);
+            }
+        }
+        ws
+    }
+
+    #[test]
+    fn norm_phase_matches_grad_norm() {
+        let mut ws = StepWorkspace::new(1, 3 * PIPELINE_BLOCK + 5);
+        let rng = CounterRng::new(2);
+        for (i, g) in ws.grads.iter_mut().enumerate() {
+            *g = rng.next_f32(i as u32) - 0.5;
+        }
+        let a = norm_phase(&mut ws);
+        let b = grad_norm(&ws.grads);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn fused_equals_staged_smoke() {
+        // The full matrix lives in tests/fused_step_equivalence.rs; this
+        // is the in-crate smoke version (world 2, one geometry).
+        let n = PIPELINE_BLOCK + 256; // even → divides by world = opt_world = 2
+        let hs = mk_host_step(4, 2);
+        let init = |i: usize| round_to_bf16(0.01 * (i % 97) as f32 - 0.3);
+        let mut ws = filled_ws(2, n);
+
+        let mut p1: Vec<f32> = (0..n).map(init).collect();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        let norm1 = staged_step(&mut ws, &mut p1, &mut m1, &mut v1, &hs);
+
+        let mut p2: Vec<f32> = (0..n).map(init).collect();
+        let (mut m2, mut v2) = (vec![0f32; n], vec![0f32; n]);
+        let norm2 = fused_step(&mut ws, &mut p2, &mut m2, &mut v2, &hs);
+
+        assert_eq!(norm1.to_bits(), norm2.to_bits());
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&p1), bits(&p2));
+        assert_eq!(bits(&m1), bits(&m2));
+        assert_eq!(bits(&v1), bits(&v2));
+        // replicas carry the gathered params
+        for r in &ws.rank_params {
+            assert_eq!(bits(r), bits(&p2));
+        }
+    }
+}

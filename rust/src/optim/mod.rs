@@ -5,8 +5,10 @@
 //! clipping, which the paper performs on the CPU side.
 
 pub mod adamw;
+pub mod fused;
 
 pub use adamw::{AdamW, AdamWParams};
+pub use fused::{fused_step, staged_step, HostStep};
 
 use crate::util::par;
 
@@ -28,7 +30,8 @@ pub fn global_norm(grads: &[f32]) -> f32 {
     .sqrt() as f32
 }
 
-fn sumsq(x: &[f32]) -> f64 {
+/// Linear f64 sum of squares (the per-chunk partial of both norm grids).
+pub(crate) fn sumsq(x: &[f32]) -> f64 {
     x.iter().map(|&g| (g as f64) * (g as f64)).sum()
 }
 

@@ -66,6 +66,25 @@ pub fn stochastic_round_slice_serial(x: &mut [f32], rng: &CounterRng, counter_ba
     }
 }
 
+/// Scaled RNE copy onto the bf16 grid: `out[i] = bf16(x[i] * scale)` —
+/// the microbatch-averaging kernel of the optimizer step (`scale` is the
+/// reciprocal microbatch count). Elementwise and RNG-free, so the
+/// parallel chunking is bit-identical to [`scaled_round_into_serial`].
+pub fn scaled_round_into(x: &[f32], out: &mut [f32], scale: f32) {
+    debug_assert_eq!(x.len(), out.len());
+    par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
+        scaled_round_into_serial(&x[off..off + chunk.len()], chunk, scale)
+    });
+}
+
+/// Single-threaded reference for `scaled_round_into`.
+pub fn scaled_round_into_serial(x: &[f32], out: &mut [f32], scale: f32) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = round_to_bf16(v * scale);
+    }
+}
+
 /// BF16-grid accumulation: `acc = bf16(acc + x)` elementwise — the paper's
 /// gradient-accumulation semantics. Parallel chunked; elementwise, so
 /// bit-identical to [`accumulate_bf16_serial`].
@@ -142,6 +161,16 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((mean - x as f64).abs() < 1e-4, "mean={mean}");
+    }
+
+    #[test]
+    fn scaled_round_matches_scalar() {
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let mut out = vec![0f32; x.len()];
+        scaled_round_into(&x, &mut out, 0.25);
+        for (i, (&o, &v)) in out.iter().zip(&x).enumerate() {
+            assert_eq!(o.to_bits(), round_to_bf16(v * 0.25).to_bits(), "i={i}");
+        }
     }
 
     #[test]

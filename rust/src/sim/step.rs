@@ -99,6 +99,21 @@ pub fn simulate_step(
     fp8: bool,
     cfg: &StepConfig,
 ) -> StepResult {
+    simulate_step_with(&mut Engine::new(), m, node, fp8, cfg)
+}
+
+/// `simulate_step` into a caller-owned engine: the task/dep/stream arenas
+/// are cleared and reused, so a grid search submits thousands of steps
+/// without rebuilding them per candidate (the planner holds one engine
+/// per worker via `par::parallel_map_with`).
+pub fn simulate_step_with(
+    eng: &mut Engine,
+    m: &ModelPreset,
+    node: &NodeTopology,
+    fp8: bool,
+    cfg: &StepConfig,
+) -> StepResult {
+    eng.clear();
     let cm = CostModel::new(node.clone(), fp8);
     let world = node.n_gpus;
     let tokens_micro = (cfg.micro_batch * m.seq_len) as f64;
@@ -118,8 +133,6 @@ pub fn simulate_step(
     let lw_bytes = cm.layer_weight_bytes(m);
     let lg_bytes = cm.layer_grad_bytes(m);
     let resid_bytes = m.d_model as f64 * tokens_micro * 2.0;
-
-    let mut eng = Engine::new();
 
     // Per-device prior-task handles for dependencies.
     let mut dev_done: Vec<Vec<TaskId>> = vec![vec![]; world];

@@ -2,16 +2,20 @@
 //! artifacts. Python never runs here.
 //!
 //! One optimizer step = `grad_accum` microbatch fwd+bwd executions
-//! (device-resident parameters, BF16 gradient accumulation on the host
-//! arenas), optional multi-virtual-device reduce-scatter (the Fig. 1
-//! memcpy collective — real numerics), CPU-side global-norm clip, and the
-//! ZeRO-1-sharded AdamW artifact with stochastic rounding.
+//! (device-resident parameters, BF16 gradient accumulation into the
+//! persistent [`StepWorkspace`] arenas), then the fused streaming host
+//! pipeline of `optim::fused`: the Fig. 1 memcpy reduce-scatter with the
+//! microbatch average folded into its SR epilogue, a fixed-grid
+//! global-norm barrier, and a chunked clip + ZeRO-1 AdamW + SR kernel
+//! that gathers updated parameters as it goes.
 
 pub mod eval;
 pub mod trainer;
+pub mod workspace;
 
 pub use eval::{greedy_decode, host_cross_entropy};
 pub use trainer::{StepStats, Trainer};
+pub use workspace::StepWorkspace;
 
 use anyhow::Result;
 

@@ -1,5 +1,12 @@
 //! The Trainer: state, the optimizer-step pipeline, checkpoints.
+//!
+//! The host side of one optimizer step is the fused streaming pipeline
+//! in [`crate::optim::fused`] over the persistent [`StepWorkspace`]
+//! arenas — [`Trainer::train_step`] runs it; the staged multi-pass
+//! reference survives as [`Trainer::train_step_staged`] and must stay
+//! bit-identical (see `tests/fused_step_equivalence.rs`).
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -7,13 +14,13 @@ use anyhow::{anyhow, Result};
 #[cfg(not(feature = "pjrt"))]
 use crate::xla_shim as xla;
 
-use crate::collectives::{all_gather_memcpy, reduce_scatter_memcpy, DeviceGroup};
 use crate::config::TrainConfig;
 use crate::data::{Batch, PackedDataset};
-use crate::optim;
-use crate::precision::{bf16, CounterRng};
-use crate::runtime::{literal_f32, literal_i32, Executable, Manifest, Runtime};
-use crate::shard::shard_range;
+use crate::optim::{self, fused::HostStep};
+use crate::precision::bf16;
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::train::workspace::StepWorkspace;
+use crate::util::par;
 
 /// Per-step statistics.
 #[derive(Debug, Clone)]
@@ -26,18 +33,55 @@ pub struct StepStats {
 }
 
 pub fn stats_to_csv(stats: &[StepStats]) -> String {
-    let mut s = String::from("step,loss,val_loss,grad_norm,tokens_per_s\n");
+    // ~40 bytes/row of digits; pre-size so the row loop never reallocates.
+    let mut s = String::with_capacity(48 + stats.len() * 64);
+    s.push_str("step,loss,val_loss,grad_norm,tokens_per_s\n");
     for st in stats {
-        s += &format!(
-            "{},{},{},{},{}\n",
-            st.step,
-            st.loss,
-            st.val_loss.map(|v| v.to_string()).unwrap_or_default(),
-            st.grad_norm,
-            st.tokens_per_s
-        );
+        // write! into a String is infallible
+        let _ = match st.val_loss {
+            Some(v) => writeln!(
+                s,
+                "{},{},{},{},{}",
+                st.step, st.loss, v, st.grad_norm, st.tokens_per_s
+            ),
+            None => writeln!(
+                s,
+                "{},{},,{},{}",
+                st.step, st.loss, st.grad_norm, st.tokens_per_s
+            ),
+        };
     }
     s
+}
+
+/// Elements per bulk-conversion block of the checkpoint codec.
+const CKPT_CHUNK: usize = 64 * 1024;
+
+/// Chunked bulk f32 → little-endian bytes (checkpoint state is hundreds
+/// of MB at 7B scale; blocks convert in parallel with no per-element
+/// `Vec` growth).
+fn f32s_to_le_bytes(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 4 * src.len());
+    // dst blocks stay 4-byte aligned (dst.len() is a multiple of 4), so
+    // `off / 4` indexes the matching source elements exactly.
+    let items = par::split_blocks_mut(dst, 4 * CKPT_CHUNK);
+    par::for_each_item(items, |(off, db)| {
+        let sb = &src[off / 4..off / 4 + db.len() / 4];
+        for (&x, b) in sb.iter().zip(db.chunks_exact_mut(4)) {
+            b.copy_from_slice(&x.to_le_bytes());
+        }
+    });
+}
+
+/// Chunked bulk little-endian bytes → f32 (inverse of `f32s_to_le_bytes`).
+fn le_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), 4 * dst.len());
+    par::for_each_slice_mut(dst, CKPT_CHUNK, |off, chunk| {
+        let bytes = &src[4 * off..4 * (off + chunk.len())];
+        for (x, b) in chunk.iter_mut().zip(bytes.chunks_exact(4)) {
+            *x = f32::from_le_bytes(b.try_into().expect("4-byte chunk"));
+        }
+    });
 }
 
 /// Real-training coordinator over one executable preset.
@@ -46,12 +90,13 @@ pub struct Trainer {
     pub man: Manifest,
     pub cfg: TrainConfig,
     exe_train: std::sync::Arc<Executable>,
-    exe_adamw: std::sync::Arc<Executable>,
     exe_fwd: std::sync::Arc<Executable>,
     /// Flat bf16-grid state, padded to `world * shard` (master copy).
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+    /// Persistent per-step arenas (fused pipeline; allocated once here).
+    ws: StepWorkspace,
     /// Device-resident parameter buffers (invalidated by optimizer steps).
     param_bufs: Option<Vec<xla::PjRtBuffer>>,
     pub step: u32,
@@ -67,20 +112,20 @@ impl Trainer {
             "world must divide padded_numel"
         );
         let exe_train = rt.load(man.artifact(cfg.dtype.artifact_key())?)?;
-        let exe_adamw = rt.load(man.artifact("adamw")?)?;
         let exe_fwd = rt.load(man.artifact("fwd")?)?;
         let params = man.load_init(rt.artifacts_dir())?;
         let n = params.len();
+        let ws = StepWorkspace::new(cfg.world, man.padded_numel);
         Ok(Self {
             rt,
             man,
             cfg,
             exe_train,
-            exe_adamw,
             exe_fwd,
             params,
             m: vec![0.0; n],
             v: vec![0.0; n],
+            ws,
             param_bufs: None,
             step: 0,
             counter: 1,
@@ -141,109 +186,80 @@ impl Trainer {
         Ok(loss)
     }
 
-    /// Run one full optimizer step over `grad_accum × world` microbatches.
+    /// Run one full optimizer step over `grad_accum × world` microbatches
+    /// through the fused streaming host pipeline (reduce+average → norm →
+    /// clip+AdamW+gather, no per-step `O(n)` allocation).
     pub fn train_step(&mut self, batches: &[Batch]) -> Result<StepStats> {
+        self.step_impl(batches, true)
+    }
+
+    /// The staged multi-pass reference step — every intermediate buffer
+    /// materialized, exactly the pre-fusion chain. Bit-identical outputs
+    /// to [`Self::train_step`] at any thread count; kept for equivalence
+    /// tests and A/B benchmarking, not as a hot path.
+    pub fn train_step_staged(&mut self, batches: &[Batch]) -> Result<StepStats> {
+        self.step_impl(batches, false)
+    }
+
+    fn step_impl(&mut self, batches: &[Batch], fused: bool) -> Result<StepStats> {
         let t0 = Instant::now();
         let world = self.cfg.world;
         let n = self.man.padded_numel;
         anyhow::ensure!(batches.len() == self.cfg.grad_accum * world);
 
-        // Per virtual device gradient accumulators.
-        let mut dev_grads = vec![vec![0f32; n]; world];
+        // Borrow the persistent arenas out of `self` for the duration of
+        // the step (`ensure` is a no-op after `new`; `begin_step` zeroes
+        // the accumulators in place).
+        let mut ws = std::mem::take(&mut self.ws);
+        ws.ensure(world, n);
+        ws.begin_step();
+
         let mut loss_sum = 0f32;
+        let mut failed: Option<anyhow::Error> = None;
         for (i, batch) in batches.iter().enumerate() {
             let dev = i % world;
-            loss_sum += self.micro_step(batch, &mut dev_grads[dev])?;
-        }
-        let n_micro = batches.len() as f32;
-        // Average over all microbatches (each loss is token-mean).
-        for g in dev_grads.iter_mut() {
-            for x in g.iter_mut() {
-                *x = bf16::round_to_bf16(*x / n_micro);
+            match self.micro_step(batch, &mut ws.dev_grads[dev]) {
+                Ok(l) => loss_sum += l,
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
             }
         }
-
-        // Gradient reduction across virtual devices → per-rank shards,
-        // reassembled into one flat gradient buffer (rank r owns chunk r).
-        let rng = CounterRng::new(0xC011_EC7 ^ self.cfg.seed);
-        let mut flat_grads: Vec<f32>;
-        if world > 1 {
-            let chunk = n / world;
-            let mut shards: Vec<Vec<f32>> = vec![vec![0f32; chunk]; world];
-            let group = DeviceGroup {
-                world,
-                buffers: std::mem::take(&mut dev_grads),
-            };
-            // The paper's Fig. 1 memcpy reduce-scatter, real numerics.
-            reduce_scatter_memcpy(&group, &mut shards, &rng, self.counter);
-            flat_grads = vec![0f32; n];
-            for (r, sh) in shards.iter().enumerate() {
-                flat_grads[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
-            }
-        } else {
-            flat_grads = std::mem::take(&mut dev_grads[0]);
+        if let Some(e) = failed {
+            self.ws = ws; // keep the arenas across failed steps
+            return Err(e);
         }
 
-        // CPU-side global-norm clip.
-        let grad_norm = crate::optim::global_norm(&flat_grads);
-        if grad_norm > self.cfg.grad_clip && grad_norm > 0.0 {
-            let s = self.cfg.grad_clip / grad_norm;
-            for g in flat_grads.iter_mut() {
-                *g = bf16::round_to_bf16(*g * s);
-            }
-        }
-
-        // Sharded AdamW via the artifact. The artifact is lowered for
-        // shards of padded/man.world elements (ZeRO-1 layout); a single-
-        // device run simply walks all shards itself (the paper's world=1
-        // degenerate case).
         self.step += 1;
-        let lr = self.cfg.lr_at((self.step - 1) as usize);
-        let bc1 = 1.0 - self.cfg.beta1.powi(self.step as i32);
-        let bc2 = 1.0 - self.cfg.beta2.powi(self.step as i32);
-        let shard_len = self.man.shard_numel;
-        for rank in 0..self.man.world {
-            let range = shard_range(n, self.man.world, rank);
-            let counter_base = self.counter.wrapping_add((rank * shard_len) as u32);
-            let scalars = [
-                lr,
-                self.cfg.beta1,
-                self.cfg.beta2,
-                self.cfg.eps,
-                self.cfg.weight_decay,
-                bc1,
-                bc2,
-                f32::from_bits(counter_base),
-            ];
-            let outs = self.exe_adamw.run(&[
-                literal_f32(&self.params[range.clone()], &[shard_len as i64])?,
-                literal_f32(&self.m[range.clone()], &[shard_len as i64])?,
-                literal_f32(&self.v[range.clone()], &[shard_len as i64])?,
-                literal_f32(&flat_grads[range.clone()], &[shard_len as i64])?,
-                literal_f32(&scalars, &[8])?,
-            ])?;
-            let p2: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let m2: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let v2: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            self.params[range.clone()].copy_from_slice(&p2);
-            self.m[range.clone()].copy_from_slice(&m2);
-            self.v[range].copy_from_slice(&v2);
-        }
+        let hs = HostStep {
+            hp: optim::AdamWParams {
+                beta1: self.cfg.beta1,
+                beta2: self.cfg.beta2,
+                eps: self.cfg.eps,
+                weight_decay: self.cfg.weight_decay,
+            },
+            lr: self.cfg.lr_at((self.step - 1) as usize),
+            grad_clip: self.cfg.grad_clip,
+            step: self.step,
+            counter: self.counter,
+            seed: self.cfg.seed,
+            n_micro: batches.len(),
+            // The AdamW SR counter layout follows the manifest's ZeRO-1
+            // shard count (the artifact's lowering), not the collective
+            // world size.
+            opt_world: self.man.world,
+        };
+        let grad_norm = if fused {
+            optim::fused::fused_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+        } else {
+            optim::fused::staged_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+        };
         self.counter = self.counter.wrapping_add(3 * n as u32);
-
-        // All-gather of updated parameters (real memcpy collective when
-        // world > 1; here all virtual devices share self.params, so the
-        // gather is exercised for its numerics in tests).
-        if world > 1 {
-            let shards_p: Vec<Vec<f32>> = (0..world)
-                .map(|r| self.params[shard_range(n, world, r)].to_vec())
-                .collect();
-            let mut gathered = DeviceGroup::from_fn(world, n, |_, _| 0.0);
-            all_gather_memcpy(&shards_p, &mut gathered);
-            self.params.copy_from_slice(&gathered.buffers[0]);
-        }
+        self.ws = ws;
         self.param_bufs = None; // params changed → re-upload lazily
 
+        let n_micro = batches.len() as f32;
         let tokens = self.man.tokens_per_microbatch() * batches.len();
         Ok(StepStats {
             step: self.step as usize,
@@ -318,14 +334,14 @@ impl Trainer {
     // ----- checkpoints ------------------------------------------------------
 
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let mut bytes = Vec::with_capacity(self.params.len() * 12 + 16);
-        bytes.extend_from_slice(&self.step.to_le_bytes());
-        bytes.extend_from_slice(&self.counter.to_le_bytes());
-        bytes.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
-        for buf in [&self.params, &self.m, &self.v] {
-            for &x in buf.iter() {
-                bytes.extend_from_slice(&x.to_le_bytes());
-            }
+        let n = self.params.len();
+        let mut bytes = vec![0u8; 16 + 12 * n];
+        bytes[0..4].copy_from_slice(&self.step.to_le_bytes());
+        bytes[4..8].copy_from_slice(&self.counter.to_le_bytes());
+        bytes[8..16].copy_from_slice(&(n as u64).to_le_bytes());
+        for (k, buf) in [&self.params, &self.m, &self.v].into_iter().enumerate() {
+            let base = 16 + 4 * n * k;
+            f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
         }
         std::fs::write(path, bytes)?;
         Ok(())
@@ -339,15 +355,9 @@ impl Trainer {
         let n = u64::from_le_bytes(bytes[8..16].try_into()?) as usize;
         anyhow::ensure!(n == self.params.len(), "checkpoint size mismatch");
         anyhow::ensure!(bytes.len() == 16 + 12 * n, "truncated checkpoint body");
-        let read = |dst: &mut [f32], base: usize| {
-            for (i, x) in dst.iter_mut().enumerate() {
-                let o = base + 4 * i;
-                *x = f32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
-            }
-        };
-        read(&mut self.params, 16);
-        read(&mut self.m, 16 + 4 * n);
-        read(&mut self.v, 16 + 8 * n);
+        le_bytes_to_f32s(&bytes[16..16 + 4 * n], &mut self.params);
+        le_bytes_to_f32s(&bytes[16 + 4 * n..16 + 8 * n], &mut self.m);
+        le_bytes_to_f32s(&bytes[16 + 8 * n..16 + 12 * n], &mut self.v);
         self.param_bufs = None;
         Ok(())
     }
@@ -371,5 +381,51 @@ impl Trainer {
             weight_decay: self.cfg.weight_decay,
         };
         optim::AdamW::new(hp).step(p, m, v, g, lr, step, counter_base, p.len() as u32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_codec_roundtrip() {
+        let src: Vec<f32> = (0..100_003).map(|i| (i as f32).sin() * 3.7).collect();
+        let mut bytes = vec![0u8; 4 * src.len()];
+        f32s_to_le_bytes(&src, &mut bytes);
+        // spot-check the wire format against the scalar conversion
+        assert_eq!(&bytes[0..4], &src[0].to_le_bytes());
+        assert_eq!(&bytes[400..404], &src[100].to_le_bytes());
+        let mut back = vec![0f32; src.len()];
+        le_bytes_to_f32s(&bytes, &mut back);
+        assert_eq!(
+            src.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn csv_formats_optional_val_loss() {
+        let stats = vec![
+            StepStats {
+                step: 1,
+                loss: 2.5,
+                val_loss: None,
+                grad_norm: 0.5,
+                tokens_per_s: 100.0,
+            },
+            StepStats {
+                step: 2,
+                loss: 2.0,
+                val_loss: Some(2.25),
+                grad_norm: 0.25,
+                tokens_per_s: 200.0,
+            },
+        ];
+        let csv = stats_to_csv(&stats);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,loss,val_loss,grad_norm,tokens_per_s");
+        assert_eq!(lines[1], "1,2.5,,0.5,100");
+        assert_eq!(lines[2], "2,2,2.25,0.25,200");
     }
 }

@@ -1,0 +1,136 @@
+//! Persistent per-step arenas for the fused optimizer-step pipeline.
+//!
+//! The paper's §3.1 budget only works if the host step is a streaming
+//! sweep: every buffer the step touches is allocated *once* (here) and
+//! reused across steps, so the fused path performs no per-step heap
+//! allocation proportional to `padded_numel` ("All memory allocations in
+//! LLMQ happen at program startup"). The only per-step allocations left
+//! anywhere in the fused path are work-item metadata vectors of
+//! `O(n / PIPELINE_BLOCK)` entries — the same scheduling metadata the
+//! collectives already allocate per call.
+//!
+//! Arena inventory (n = padded_numel, world = virtual devices):
+//! * `dev_grads`   — world × n per-device gradient accumulators, zeroed
+//!   at step start and filled by the microbatch loop;
+//! * `grads`       — n, the reduced+averaged flat gradient (rank r's
+//!   shard lives at `r·chunk .. (r+1)·chunk`), the buffer the norm and
+//!   AdamW phases stream over;
+//! * `rank_params` — world × n per-device replicas of the updated
+//!   parameters; phase 2 gathers each updated chunk into them directly
+//!   (replacing the per-step `DeviceGroup` the staged all-gather builds);
+//! * `norm_partials` — one f64 partial per `PIPELINE_BLOCK` chunk, the
+//!   phase-1 reduction grid.
+
+use crate::collectives::memcpy::PIPELINE_BLOCK;
+
+/// Pre-allocated arenas for one trainer's optimizer step. `Default` is
+/// the empty workspace; [`StepWorkspace::ensure`] (re)allocates on first
+/// use or geometry change.
+#[derive(Debug, Default)]
+pub struct StepWorkspace {
+    world: usize,
+    n: usize,
+    /// Per-virtual-device gradient accumulators (bf16-grid f32).
+    pub dev_grads: Vec<Vec<f32>>,
+    /// Flat reduced gradient; written by the fused reduce phase.
+    pub grads: Vec<f32>,
+    /// Per-device updated-parameter replicas (empty when world == 1 —
+    /// the single-device step has no gather). Like `dev_grads`, these
+    /// model per-virtual-device residency: world × n floats stay
+    /// resident for the trainer's lifetime — the price of the
+    /// allocate-at-startup contract vs. the old per-step `DeviceGroup`.
+    pub rank_params: Vec<Vec<f32>>,
+    /// Phase-1 norm partials, one per `PIPELINE_BLOCK` chunk.
+    pub norm_partials: Vec<f64>,
+}
+
+impl StepWorkspace {
+    pub fn new(world: usize, n: usize) -> Self {
+        let mut ws = Self::default();
+        ws.ensure(world, n);
+        ws
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of phase-1/phase-2 pipeline chunks.
+    pub fn n_chunks(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            (self.n + PIPELINE_BLOCK - 1) / PIPELINE_BLOCK
+        }
+    }
+
+    /// (Re)allocate the arenas for a (world, n) geometry. No-op when the
+    /// geometry is unchanged — the steady-state step allocates nothing.
+    pub fn ensure(&mut self, world: usize, n: usize) {
+        assert!(world >= 1, "world must be >= 1");
+        assert_eq!(n % world, 0, "padded_numel must be a multiple of world");
+        if self.world == world && self.n == n {
+            return;
+        }
+        self.world = world;
+        self.n = n;
+        self.dev_grads = (0..world).map(|_| vec![0f32; n]).collect();
+        self.grads = vec![0f32; n];
+        self.rank_params = if world > 1 {
+            (0..world).map(|_| vec![0f32; n]).collect()
+        } else {
+            Vec::new()
+        };
+        self.norm_partials = vec![0f64; self.n_chunks()];
+    }
+
+    /// Reset the per-step accumulators (the zero-fill that replaced the
+    /// per-step `vec![0.0; world * n]` allocation).
+    pub fn begin_step(&mut self) {
+        for g in self.dev_grads.iter_mut() {
+            g.fill(0.0);
+        }
+        self.grads.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_is_idempotent_and_reshapes() {
+        let mut ws = StepWorkspace::new(2, 64);
+        assert_eq!(ws.dev_grads.len(), 2);
+        assert_eq!(ws.grads.len(), 64);
+        assert_eq!(ws.rank_params.len(), 2);
+        let ptr = ws.grads.as_ptr();
+        ws.ensure(2, 64); // unchanged geometry: no reallocation
+        assert_eq!(ws.grads.as_ptr(), ptr);
+        ws.ensure(1, 32);
+        assert_eq!(ws.dev_grads.len(), 1);
+        assert!(ws.rank_params.is_empty());
+        assert_eq!(ws.n(), 32);
+    }
+
+    #[test]
+    fn begin_step_zeroes_accumulators() {
+        let mut ws = StepWorkspace::new(2, 8);
+        ws.dev_grads[1][3] = 5.0;
+        ws.grads[0] = 2.0;
+        ws.begin_step();
+        assert!(ws.dev_grads.iter().all(|g| g.iter().all(|&x| x == 0.0)));
+        assert!(ws.grads.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn chunk_count_covers_unaligned_n() {
+        let ws = StepWorkspace::new(1, PIPELINE_BLOCK + 1);
+        assert_eq!(ws.n_chunks(), 2);
+        assert_eq!(ws.norm_partials.len(), 2);
+    }
+}

@@ -212,6 +212,27 @@ where
     acc
 }
 
+/// Split `data` into `(offset, block)` work items of at most `block`
+/// elements — the shared chunk-pipeline grid builder used by the memcpy
+/// collectives and the checkpoint codec. The grid is *fixed*: item
+/// boundaries depend only on `data.len()` and `block`, never on the
+/// worker count, so elementwise kernels scheduled over it keep their
+/// bit-identity contract.
+pub fn split_blocks_mut<T>(data: &mut [T], block: usize) -> Vec<(usize, &mut [T])> {
+    assert!(block >= 1, "block size must be >= 1");
+    let mut items = Vec::with_capacity(data.len() / block + 1);
+    let mut tail = data;
+    let mut off = 0usize;
+    while !tail.is_empty() {
+        let take = tail.len().min(block);
+        let (head, rest) = tail.split_at_mut(take);
+        tail = rest;
+        items.push((off, head));
+        off += take;
+    }
+    items
+}
+
 /// Distribute owned work items round-robin across the workers and run
 /// `f` on each (serial fallback for one worker). Use only when the
 /// output does not depend on which worker runs which item — true for
@@ -261,24 +282,47 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    parallel_map_with(items, || (), |_, i, t| f(i, t))
+}
+
+/// [`parallel_map`] with per-worker scratch state: `init()` runs once on
+/// each worker thread and the resulting state is threaded through every
+/// item that worker claims. This is how the planner reuses one
+/// `sim::Engine` per worker across thousands of candidates instead of
+/// rebuilding its arenas per call. `f` must not let the state affect the
+/// *result* (only reuse allocations), or determinism is lost.
+pub fn parallel_map_with<T, R, S, I, F>(items: &[T], init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
     let n = items.len();
     let threads = num_threads().min(n.max(1));
     if threads <= 1 || n <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut state = init();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut state, i, t))
+            .collect();
     }
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         let next = AtomicUsize::new(0);
         let next_ref = &next;
         let f_ref = &f;
+        let init_ref = &init;
         let worker = move || {
+            let mut state = init_ref();
             let mut out: Vec<(usize, R)> = Vec::new();
             loop {
                 let i = next_ref.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                out.push((i, f_ref(i, &items[i])));
+                out.push((i, f_ref(&mut state, i, &items[i])));
             }
             out
         };
@@ -396,6 +440,44 @@ mod tests {
         for t in [1usize, 2, 8] {
             let out = with_threads(t, || parallel_map(&items, |i, &x| i * 1000 + x));
             let expect: Vec<usize> = (0..500).map(|i| i * 1001).collect();
+            assert_eq!(out, expect, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn split_blocks_mut_covers_with_fixed_grid() {
+        for len in [0usize, 1, 7, 64, 1000] {
+            let mut x: Vec<u32> = (0..len as u32).collect();
+            let items = split_blocks_mut(&mut x, 8);
+            let mut next = 0usize;
+            for (off, block) in items {
+                assert_eq!(off, next);
+                assert!(!block.is_empty() && block.len() <= 8);
+                assert_eq!(block[0], off as u32);
+                next += block.len();
+            }
+            assert_eq!(next, len);
+        }
+    }
+
+    #[test]
+    fn parallel_map_with_reuses_state_and_preserves_order() {
+        let items: Vec<usize> = (0..300).collect();
+        for t in [1usize, 2, 8] {
+            // State is a scratch Vec; results must not depend on whether a
+            // worker has processed earlier items with the same scratch.
+            let out = with_threads(t, || {
+                parallel_map_with(
+                    &items,
+                    Vec::<usize>::new,
+                    |scratch, i, &x| {
+                        scratch.clear();
+                        scratch.extend(0..x % 7);
+                        i * 1000 + x + scratch.len()
+                    },
+                )
+            });
+            let expect: Vec<usize> = (0..300).map(|i| i * 1001 + i % 7).collect();
             assert_eq!(out, expect, "threads {t}");
         }
     }

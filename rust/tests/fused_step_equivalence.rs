@@ -1,0 +1,152 @@
+//! Bit-identity suite for the fused streaming optimizer-step pipeline:
+//! `optim::fused::fused_step` — the host step `Trainer::train_step` runs
+//! — must be bitwise identical to the staged multi-pass reference
+//! (`staged_step`, the `Trainer::train_step_staged` chain) at 1/2/8
+//! worker threads and world ∈ {1, 2, 4}, including a clip-triggering
+//! gradient scale and a non-`PIPELINE_BLOCK`-aligned parameter count.
+//! The two Trainer entry points differ *only* in which of these two
+//! functions they call after the (shared) microbatch loop, so this
+//! covers the artifact-gated paths too.
+
+use llmq::collectives::memcpy::PIPELINE_BLOCK;
+use llmq::optim::fused::{fused_step, staged_step, HostStep};
+use llmq::optim::AdamWParams;
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::train::StepWorkspace;
+use llmq::util::par;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn host_step(grad_clip: f32, n_micro: usize, opt_world: usize) -> HostStep {
+    HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip,
+        step: 2, // exercise bias correction past step 1
+        counter: 12_345,
+        seed: 9,
+        n_micro,
+        opt_world,
+    }
+}
+
+/// Fill the workspace accumulators with deterministic bf16-grid noise of
+/// the given amplitude (amplitude controls whether the clip triggers).
+fn fill_dev_grads(ws: &mut StepWorkspace, salt: u32, amp: f32) {
+    let n = ws.n();
+    let rng = CounterRng::new(salt);
+    for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((d * n + i) as u32) - 0.5) * amp);
+        }
+    }
+}
+
+fn init_state(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let p = (0..n)
+        .map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0))
+        .collect();
+    // Non-zero bf16-grid moments: a harder target than the cold start.
+    let m = (0..n)
+        .map(|i| round_to_bf16(0.001 * (i % 13) as f32 - 0.006))
+        .collect();
+    let v = (0..n).map(|i| round_to_bf16(1e-4 * (i % 7) as f32)).collect();
+    (p, m, v)
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Run one path at a thread count; returns (norm_bits, p, m, v).
+fn run(
+    staged: bool,
+    world: usize,
+    n: usize,
+    threads: usize,
+    amp: f32,
+    hs: &HostStep,
+) -> (u32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut ws = StepWorkspace::new(world, n);
+    ws.begin_step();
+    fill_dev_grads(&mut ws, 0xACC, amp);
+    let (mut p, mut m, mut v) = init_state(n);
+    let norm = par::with_threads(threads, || {
+        if staged {
+            staged_step(&mut ws, &mut p, &mut m, &mut v, hs)
+        } else {
+            fused_step(&mut ws, &mut p, &mut m, &mut v, hs)
+        }
+    });
+    if !staged && world > 1 {
+        // the fused gather must leave every replica equal to the params
+        for r in &ws.rank_params {
+            assert_eq!(bits(r), bits(&p), "replica != params");
+        }
+    }
+    (norm.to_bits(), p, m, v)
+}
+
+fn assert_matrix(n_for: impl Fn(usize) -> usize, amp: f32, clip: f32, expect_clip: bool) {
+    for world in [1usize, 2, 4] {
+        let n = n_for(world);
+        assert_eq!(n % world, 0, "test geometry");
+        for opt_world in [1usize, 4] {
+            let hs = host_step(clip, 3 * world, opt_world);
+            let reference = run(true, world, n, 1, amp, &hs);
+            let norm = f32::from_bits(reference.0);
+            assert_eq!(
+                norm > clip && norm > 0.0,
+                expect_clip,
+                "clip precondition: norm {norm} vs clip {clip} (world {world})"
+            );
+            for t in THREAD_COUNTS {
+                for staged in [true, false] {
+                    let got = run(staged, world, n, t, amp, &hs);
+                    let label = if staged { "staged" } else { "fused" };
+                    assert_eq!(
+                        got.0, reference.0,
+                        "{label} norm, world {world} opt {opt_world} t {t}"
+                    );
+                    assert_eq!(
+                        bits(&got.1),
+                        bits(&reference.1),
+                        "{label} params, world {world} opt {opt_world} t {t}"
+                    );
+                    assert_eq!(bits(&got.2), bits(&reference.2), "{label} m");
+                    assert_eq!(bits(&got.3), bits(&reference.3), "{label} v");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_matches_staged_no_clip() {
+    // small gradients: the clip never triggers
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 0.02, 1.0, false);
+}
+
+#[test]
+fn fused_matches_staged_with_clip_triggered() {
+    // large gradients: global norm far above the clip threshold
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 4.0, 0.5, true);
+}
+
+#[test]
+fn fused_matches_staged_unaligned_n() {
+    // n divisible by every world/opt_world in the matrix but not by
+    // PIPELINE_BLOCK: the last pipeline chunk is a partial block.
+    assert_matrix(|_| 3 * PIPELINE_BLOCK + 64, 0.05, 1.0, false);
+}
+
+#[test]
+fn fused_is_deterministic_across_repeats() {
+    let hs = host_step(1.0, 6, 4);
+    let a = run(false, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
+    let b = run(false, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
+    assert_eq!(a.0, b.0);
+    assert_eq!(bits(&a.1), bits(&b.1));
+    assert_eq!(bits(&a.2), bits(&b.2));
+    assert_eq!(bits(&a.3), bits(&b.3));
+}
