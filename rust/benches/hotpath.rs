@@ -1,20 +1,36 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 operations
 //! that sit between PJRT calls in the training loop — FP8/BF16 codecs,
 //! stochastic rounding, gradient accumulation, collectives, the DES
-//! engine, and the host AdamW — each measured serial vs. parallel
-//! (`LLMQ_THREADS` workers) to track the parallel execution layer.
+//! engine, and the host AdamW — each measured three ways to separate the
+//! two execution tiers:
+//!
+//! * **serial** — the single-threaded scalar reference (`*_serial`);
+//! * **simd** — the dispatched kernel on one thread (`LLMQ_SIMD`
+//!   backend; the scalar-vs-SIMD column);
+//! * **par** — the dispatched kernel across `LLMQ_THREADS` workers.
 //!
 //! Emits machine-readable `BENCH_hotpath.json` at the repo root so the
 //! perf trajectory is comparable across PRs.
 
 use llmq::collectives::{DeviceGroup, memcpy::reduce_scatter_memcpy_serial, reduce_scatter_memcpy};
-use llmq::precision::{bf16, CounterRng, E4M3, fp8};
+use llmq::precision::{backend, bf16, CounterRng, E4M3, fp8};
 use llmq::util::{par, Bencher};
 
-/// One serial-vs-parallel comparison row for the JSON report.
+/// Which tier a benchmark closure should exercise.
+#[derive(Clone, Copy, PartialEq)]
+enum Exec {
+    Serial,
+    Simd,
+    Par,
+}
+
+/// One serial / simd / parallel comparison row for the JSON report.
 struct Row {
     op: &'static str,
     ns_serial: f64,
+    /// Single-thread dispatched-kernel time; `None` for ops with no
+    /// SIMD tier (reductions' f64 sums, the planner, host AdamW).
+    ns_simd: Option<f64>,
     ns_par: f64,
     /// Bytes read + written per iteration (consistent R+W accounting,
     /// so gb_per_s is comparable across ops), for the GB/s figure.
@@ -24,6 +40,10 @@ struct Row {
 impl Row {
     fn speedup(&self) -> f64 {
         self.ns_serial / self.ns_par
+    }
+    /// Scalar-vs-SIMD at one thread (the vectorization win alone).
+    fn simd_speedup(&self) -> Option<f64> {
+        self.ns_simd.map(|s| self.ns_serial / s)
     }
     /// `None` for ops with no meaningful byte payload (e.g. the planner).
     fn gbps(&self) -> Option<f64> {
@@ -39,27 +59,42 @@ fn median_ns(b: &Bencher, name: &str) -> f64 {
     b.stats(name).expect("bench label").median.as_secs_f64() * 1e9
 }
 
-/// Benchmark one op serial (`f(false)`) vs parallel (`f(true)`).
+/// Benchmark one op at each tier. `has_simd` adds the single-thread
+/// dispatched run (`Exec::Simd`) between the scalar reference and the
+/// multi-threaded run.
 fn duel<T>(
     b: &mut Bencher,
     rows: &mut Vec<Row>,
     op: &'static str,
     bytes: f64,
-    mut f: impl FnMut(bool) -> T,
+    has_simd: bool,
+    mut f: impl FnMut(Exec) -> T,
 ) {
     let sname = format!("{op} [serial]");
+    let vname = format!("{op} [simd {} x1]", backend::level().name());
     let pname = format!("{op} [par x{}]", par::num_threads());
-    b.bench(&sname, || f(false));
-    b.bench(&pname, || f(true));
+    b.bench(&sname, || f(Exec::Serial));
+    if has_simd {
+        b.bench(&vname, || par::with_threads(1, || f(Exec::Simd)));
+    }
+    b.bench(&pname, || f(Exec::Par));
     let row = Row {
         op,
         ns_serial: median_ns(b, &sname),
+        ns_simd: has_simd.then(|| median_ns(b, &vname)),
         ns_par: median_ns(b, &pname),
         bytes,
     };
+    let simd = match row.simd_speedup() {
+        Some(s) => format!("{s:.2}x simd, "),
+        None => String::new(),
+    };
     match row.gbps() {
-        Some(g) => println!("  -> {op}: {:.2}x speedup, {g:.2} GB/s parallel", row.speedup()),
-        None => println!("  -> {op}: {:.2}x speedup", row.speedup()),
+        Some(g) => println!(
+            "  -> {op}: {simd}{:.2}x total, {g:.2} GB/s parallel",
+            row.speedup()
+        ),
+        None => println!("  -> {op}: {simd}{:.2}x total", row.speedup()),
     }
     rows.push(row);
 }
@@ -75,17 +110,29 @@ fn repo_root_path(file: &str) -> String {
 
 fn write_json(rows: &[Row], singles: &[(&str, f64)]) {
     let threads = par::num_threads();
+    let simd = backend::level().name();
     let mut s = String::from("{\n");
-    s += &format!("  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n");
+    s += &format!(
+        "  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"simd\": \"{simd}\",\n"
+    );
     s += "  \"ops\": [\n";
     for (i, r) in rows.iter().enumerate() {
         let gbps = match r.gbps() {
             Some(g) => format!("{g:.3}"),
             None => "null".to_string(),
         };
+        let ns_simd = match r.ns_simd {
+            Some(v) => format!("{v:.0}"),
+            None => "null".to_string(),
+        };
+        let simd_speedup = match r.simd_speedup() {
+            Some(v) => format!("{v:.3}"),
+            None => "null".to_string(),
+        };
         s += &format!(
-            "    {{\"op\": \"{}\", \"ns_serial\": {:.0}, \"ns_par\": {:.0}, \
-             \"speedup\": {:.3}, \"gb_per_s\": {gbps}, \"threads\": {threads}}}{}\n",
+            "    {{\"op\": \"{}\", \"ns_serial\": {:.0}, \"ns_simd\": {ns_simd}, \
+             \"ns_par\": {:.0}, \"simd_speedup\": {simd_speedup}, \"speedup\": {:.3}, \
+             \"gb_per_s\": {gbps}, \"threads\": {threads}}}{}\n",
             r.op,
             r.ns_serial,
             r.ns_par,
@@ -114,7 +161,11 @@ fn main() {
     let base: Vec<f32> = (0..n).map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0).collect();
     let mut b = Bencher::new(2, 7);
     let mut rows: Vec<Row> = vec![];
-    println!("hotpath: {} worker threads (LLMQ_THREADS)\n", par::num_threads());
+    println!(
+        "hotpath: {} worker threads (LLMQ_THREADS), simd backend {} (LLMQ_SIMD)\n",
+        par::num_threads(),
+        backend::level().name()
+    );
 
     // --- FP8 codec ----------------------------------------------------------
     let mut x = base.clone();
@@ -123,12 +174,12 @@ fn main() {
         &mut rows,
         "fp8 quantize 4M f32 (absmax + RNE)",
         (n * 8) as f64, // read + write in place
-        |p| {
+        true,
+        |e| {
             x.copy_from_slice(&base);
-            if p {
-                E4M3.quantize(&mut x)
-            } else {
-                E4M3.quantize_serial(&mut x)
+            match e {
+                Exec::Serial => E4M3.quantize_serial(&mut x),
+                _ => E4M3.quantize(&mut x),
             }
         },
     );
@@ -140,12 +191,10 @@ fn main() {
         &mut rows,
         "fp8 decode 1M bytes",
         ((1 << 20) * 5) as f64, // 1B/elem read + 4B/elem written
-        |p| {
-            if p {
-                fp8::decode_tensor(E4M3, &enc, scale, &mut out)
-            } else {
-                fp8::decode_tensor_serial(E4M3, &enc, scale, &mut out)
-            }
+        true,
+        |e| match e {
+            Exec::Serial => fp8::decode_tensor_serial(E4M3, &enc, scale, &mut out),
+            _ => fp8::decode_tensor(E4M3, &enc, scale, &mut out),
         },
     );
 
@@ -156,12 +205,12 @@ fn main() {
         &mut rows,
         "bf16 stochastic round 4M",
         (n * 8) as f64, // read + write in place
-        |p| {
+        true,
+        |e| {
             y.copy_from_slice(&base);
-            if p {
-                bf16::stochastic_round_slice(&mut y, &rng, 0)
-            } else {
-                bf16::stochastic_round_slice_serial(&mut y, &rng, 0)
+            match e {
+                Exec::Serial => bf16::stochastic_round_slice_serial(&mut y, &rng, 0),
+                _ => bf16::stochastic_round_slice(&mut y, &rng, 0),
             }
         },
     );
@@ -172,22 +221,20 @@ fn main() {
         &mut rows,
         "bf16 grad accumulate 4M",
         (n * 12) as f64, // acc read + x read + acc written
-        |p| {
-            if p {
-                bf16::accumulate_bf16(&mut acc, &base)
-            } else {
-                bf16::accumulate_bf16_serial(&mut acc, &base)
-            }
+        true,
+        |e| match e {
+            Exec::Serial => bf16::accumulate_bf16_serial(&mut acc, &base),
+            _ => bf16::accumulate_bf16(&mut acc, &base),
         },
     );
 
     // --- global norm (the unhidable reduction, §3.2) -------------------------
-    // read-only reduction: n * 4 bytes read, nothing written
-    duel(&mut b, &mut rows, "global_norm 4M", (n * 4) as f64, |p| {
-        if p {
-            llmq::optim::global_norm(&base)
-        } else {
-            llmq::optim::global_norm_serial(&base)
+    // read-only reduction: n * 4 bytes read, nothing written. The f64
+    // sum-of-squares fold has no SIMD tier (fixed-grid scalar sums).
+    duel(&mut b, &mut rows, "global_norm 4M", (n * 4) as f64, false, |e| {
+        match e {
+            Exec::Serial => llmq::optim::global_norm_serial(&base),
+            _ => llmq::optim::global_norm(&base),
         }
     });
 
@@ -201,14 +248,14 @@ fn main() {
         "reduce_scatter_memcpy 4x1M",
         // each of the 1M outputs reads `world` srcs + acc and writes once
         ((1 << 20) * (world + 2) * 4) as f64,
-        |p| {
+        true,
+        |e| {
             for a in racc.iter_mut() {
                 a.fill(0.0);
             }
-            if p {
-                reduce_scatter_memcpy(&g, &mut racc, &rng, 0)
-            } else {
-                reduce_scatter_memcpy_serial(&g, &mut racc, &rng, 0)
+            match e {
+                Exec::Serial => reduce_scatter_memcpy_serial(&g, &mut racc, &rng, 0),
+                _ => reduce_scatter_memcpy(&g, &mut racc, &rng, 0),
             }
         },
     );
@@ -224,12 +271,10 @@ fn main() {
         &mut rows,
         "host adamw step 4M",
         (n * 28) as f64, // p, m, v, g read + p, m, v written
-        |p| {
-            if p {
-                opt.step(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
-            } else {
-                opt.step_serial(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32)
-            }
+        false, // AdamW's update math has no SIMD tier yet (ROADMAP item)
+        |e| match e {
+            Exec::Serial => opt.step_serial(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32),
+            _ => opt.step(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32),
         },
     );
 
@@ -253,7 +298,7 @@ fn main() {
     let singles = vec![(des_name, median_ns(&b, des_name))];
 
     // --- auto-planner grid search (parallel candidates) -----------------------
-    duel(&mut b, &mut rows, "autoplan 14B@4090x4", 0.0, |p| {
+    duel(&mut b, &mut rows, "autoplan 14B@4090x4", 0.0, false, |e| {
         let run = || {
             llmq::coordinator::autoplan(
                 &model,
@@ -266,10 +311,9 @@ fn main() {
             )
             .unwrap()
         };
-        if p {
-            run()
-        } else {
-            par::with_threads(1, run)
+        match e {
+            Exec::Serial => par::with_threads(1, run),
+            _ => run(),
         }
     });
 

@@ -26,12 +26,16 @@ pub const LF_COMPUTE_INFLATION: f64 = 1.12;
 /// The ZeRO level LF ends up using (Table 8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LfZero {
+    /// No ZeRO (plain DDP).
     None,
+    /// DeepSpeed ZeRO-2: optimizer + gradient sharding.
     Zero2,
+    /// DeepSpeed ZeRO-3: + parameter sharding (full offload mode).
     Zero3,
 }
 
 impl LfZero {
+    /// Table-8 display label.
     pub fn label(&self) -> &'static str {
         match self {
             LfZero::None => "-",

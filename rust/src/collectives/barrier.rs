@@ -25,12 +25,14 @@ pub struct CpuBarrier {
 }
 
 impl CpuBarrier {
+    /// A barrier for `world` worker threads.
     pub fn new(world: usize) -> Self {
         Self {
             inner: Barrier::new(world),
         }
     }
 
+    /// Block until all workers arrive.
     pub fn wait(&self) {
         self.inner.wait();
     }
@@ -58,12 +60,16 @@ pub struct QueueDeadlock {
     gave_up: AtomicBool,
 }
 
+/// Outcome of a queue submission attempt.
 pub enum Submitted {
+    /// Submitted (and possibly executed).
     Ok,
+    /// Timed out blocked on the full queue — the test-mode deadlock detector.
     WouldDeadlock,
 }
 
 impl QueueDeadlock {
+    /// A queue shared by `world` workers with `capacity` submission slots.
     pub fn new(world: usize, capacity: usize) -> Arc<Self> {
         Arc::new(Self {
             capacity,

@@ -25,9 +25,10 @@
 //! are *chunk-pipelined and multi-threaded*: each rank's shard is cut
 //! into [`PIPELINE_BLOCK`]-element blocks (the per-channel copy-engine
 //! split of the paper) and the (rank × block) grid is spread over the
-//! `LLMQ_THREADS` workers. Outputs are elementwise with
-//! counter-per-index SR, so any schedule is bit-identical to
-//! [`reduce_scatter_memcpy_serial`].
+//! `LLMQ_THREADS` workers; each block's sum + SR epilogue runs on the
+//! `precision::backend` SIMD tier. Outputs are elementwise with
+//! counter-per-index SR, so any schedule — and any lane width — is
+//! bit-identical to [`reduce_scatter_memcpy_serial`].
 
 use super::DeviceGroup;
 use crate::precision::{bf16, CounterRng};
@@ -77,6 +78,11 @@ pub fn reduce_scatter_memcpy(
 /// With `scale = Some(s)` each source term is pre-scaled and RNE-rounded
 /// onto the bf16 grid before the sum — fusing the microbatch
 /// average/round pass into the reduction epilogue.
+///
+/// Runs on the `precision::backend` SIMD tier: lanes keep the
+/// ascending-src sum order and draw SR by global element index, so the
+/// vector path is bit-identical to the scalar loop the `*_serial`
+/// references below keep.
 fn reduce_block(
     grads: &DeviceGroup,
     base: usize,
@@ -85,17 +91,7 @@ fn reduce_block(
     rng: &CounterRng,
     counter: u32,
 ) {
-    for (j, a) in block.iter_mut().enumerate() {
-        let mut sum = *a;
-        for src in 0..grads.world {
-            let g = grads.buffers[src][base + j];
-            sum += match scale {
-                Some(s) => bf16::round_to_bf16(g * s),
-                None => g,
-            };
-        }
-        *a = bf16::stochastic_round_bf16(sum, rng, counter.wrapping_add((base + j) as u32));
-    }
+    crate::precision::backend::sr_reduce_block(&grads.buffers, base, block, scale, rng, counter)
 }
 
 /// Pre-scaled reduce-scatter with a *flat* accumulator — the fused

@@ -30,6 +30,7 @@ pub use ring::{all_gather_ring, reduce_scatter_ring};
 /// demonstrates the multi-worker execution model.
 #[derive(Debug, Default)]
 pub struct DeviceGroup {
+    /// Number of virtual devices in the group.
     pub world: usize,
     /// `buffers[rank]` — that device's copy of a replicated/full tensor.
     pub buffers: Vec<Vec<f32>>,
@@ -44,6 +45,7 @@ impl DeviceGroup {
         Self { world, buffers }
     }
 
+    /// Elements per device buffer (0 for an empty group).
     pub fn numel(&self) -> usize {
         self.buffers.first().map_or(0, |b| b.len())
     }

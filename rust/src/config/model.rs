@@ -6,17 +6,26 @@
 /// Transformer shape parameters (decoder-only, SwiGLU MLP, untied LM-head).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelPreset {
+    /// Preset display name ("0.5B" .. "32B").
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// SwiGLU hidden width.
     pub d_ff: usize,
+    /// Training sequence length (tokens).
     pub seq_len: usize,
 }
 
 impl ModelPreset {
+    /// Combined Q/K/V projection width (`n_heads · d_head`).
     pub fn qkv_dim(&self) -> usize {
         self.n_heads * self.d_head
     }
@@ -34,6 +43,7 @@ impl ModelPreset {
         2 * self.vocab * self.d_model + self.d_model // + final norm
     }
 
+    /// Total parameter count.
     pub fn n_params(&self) -> usize {
         self.n_layers * self.block_params() + self.embed_head_params()
     }
@@ -75,6 +85,7 @@ pub struct StepFlops {
 }
 
 impl StepFlops {
+    /// Sum over all precision domains.
     pub fn total(&self) -> f64 {
         self.linear + self.lm_head + self.attention
     }
@@ -113,6 +124,7 @@ pub fn paper_presets() -> Vec<ModelPreset> {
     ]
 }
 
+/// Look up a paper preset by its display name.
 pub fn by_name(name: &str) -> Option<ModelPreset> {
     paper_presets().into_iter().find(|p| p.name == name)
 }

@@ -14,6 +14,7 @@ pub enum Dtype {
 }
 
 impl Dtype {
+    /// Parse a CLI dtype name (`bf16`, `fp8`/`e4m3`, `fp8_e5m2`/`e5m2`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "bf16" => Dtype::Bf16,
@@ -23,6 +24,7 @@ impl Dtype {
         })
     }
 
+    /// Manifest key of the train-step artifact for this precision.
     pub fn artifact_key(&self) -> &'static str {
         match self {
             Dtype::Bf16 => "train_bf16",
@@ -31,6 +33,7 @@ impl Dtype {
         }
     }
 
+    /// Display label for tables and CSV.
     pub fn label(&self) -> &'static str {
         match self {
             Dtype::Bf16 => "bf16",
@@ -44,24 +47,35 @@ impl Dtype {
 /// appendix A.2 style: AdamW, warmup + linear decay).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// GEMM precision policy.
     pub dtype: Dtype,
     /// Microbatches accumulated per optimizer step.
     pub grad_accum: usize,
+    /// Optimizer steps to run.
     pub steps: usize,
+    /// Peak learning rate.
     pub lr: f32,
+    /// Linear-warmup steps.
     pub warmup_steps: usize,
     /// Final LR as a fraction of peak (paper: decay to 25%).
     pub final_lr_frac: f32,
+    /// Adam first-moment decay.
     pub beta1: f32,
+    /// Adam second-moment decay.
     pub beta2: f32,
+    /// Adam denominator epsilon.
     pub eps: f32,
+    /// Decoupled weight decay.
     pub weight_decay: f32,
+    /// Global-norm clip threshold (0 disables).
     pub grad_clip: f32,
+    /// Run seed (keys every SR stream).
     pub seed: u32,
     /// Virtual devices (1 = single GPU; 4 = the paper's workstation).
     pub world: usize,
     /// Validation cadence (0 = never).
     pub eval_every: usize,
+    /// Batches per validation pass.
     pub eval_batches: usize,
 }
 

@@ -14,11 +14,17 @@ use crate::util::par;
 /// A fully resolved configuration (what Table 7 rows record).
 #[derive(Debug, Clone)]
 pub struct ChosenConfig {
+    /// Sequences per device per microbatch.
     pub micro_batch: usize,
+    /// Microbatches per optimizer step.
     pub grad_accum: usize,
+    /// Activation recomputation level.
     pub recompute: Recompute,
+    /// Host-offloaded tensor classes.
     pub offload: OffloadConfig,
+    /// ZeRO sharding levels.
     pub shard: ShardConfig,
+    /// Byte-level memory plan of the chosen point.
     pub plan: MemoryPlan,
 }
 

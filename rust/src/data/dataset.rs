@@ -8,21 +8,28 @@ use crate::precision::CounterRng;
 /// one (next-token), both row-major i32.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Input ids, row-major `[batch, seq]`.
     pub tokens: Vec<i32>,
+    /// Next-token targets (`IGNORE_INDEX` = masked), row-major.
     pub targets: Vec<i32>,
+    /// Sequences per batch.
     pub batch: usize,
+    /// Tokens per sequence.
     pub seq: usize,
 }
 
 /// A tokenized corpus packed into fixed-length windows.
 #[derive(Debug)]
 pub struct PackedDataset {
+    /// BOS + the tokenized corpus.
     pub ids: Vec<i32>,
+    /// Window length (tokens).
     pub seq: usize,
     rng: CounterRng,
 }
 
 impl PackedDataset {
+    /// Tokenize `text` and pack it into `seq`-length windows.
     pub fn from_text(text: &str, tok: &ByteTokenizer, seq: usize, seed: u32) -> Self {
         let mut ids = vec![tok.bos()];
         ids.extend(tok.encode(text));

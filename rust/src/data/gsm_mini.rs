@@ -8,12 +8,16 @@
 use crate::precision::CounterRng;
 
 #[derive(Debug, Clone)]
+/// One arithmetic word problem with its exact integer answer.
 pub struct Problem {
+    /// Question text (fixed template family).
     pub question: String,
+    /// Ground-truth integer answer.
     pub answer: i64,
 }
 
 #[derive(Debug)]
+/// Deterministic, index-addressable problem generator.
 pub struct GsmMini {
     rng: CounterRng,
 }
@@ -26,6 +30,7 @@ const ITEMS: [&str; 8] = [
 ];
 
 impl GsmMini {
+    /// Generator for a run seed; problems depend only on `(seed, idx)`.
     pub fn new(seed: u32) -> Self {
         Self {
             rng: CounterRng::new(seed ^ 0x65A1_1234),

@@ -9,6 +9,7 @@
 use crate::precision::CounterRng;
 
 #[derive(Debug)]
+/// Deterministic Markov-chain corpus generator.
 pub struct SynthCorpus {
     rng: CounterRng,
     words: Vec<String>,
@@ -20,6 +21,7 @@ const N_WORDS: usize = 512;
 const SUCCESSORS: usize = 8;
 
 impl SynthCorpus {
+    /// Corpus keyed by `seed`; text depends only on `(seed, index)`.
     pub fn new(seed: u32) -> Self {
         let rng = CounterRng::new(seed ^ 0x5EED_C0DE);
         // Zipfian word inventory with plausible letter structure.

@@ -5,16 +5,22 @@
 
 /// Special token ids.
 pub const BOS: i32 = 256;
+/// End-of-sequence token id.
 pub const EOS: i32 = 257;
+/// Padding token id.
 pub const PAD: i32 = 258;
+/// Count of special ids above the byte range.
 pub const N_SPECIAL: usize = 3;
 
 #[derive(Debug, Clone)]
+/// Byte-level tokenizer bounded by a model vocabulary.
 pub struct ByteTokenizer {
+    /// Model vocabulary size (≥ 259 for lossless byte mode).
     pub vocab: usize,
 }
 
 impl ByteTokenizer {
+    /// Tokenizer for a model with `vocab` entries.
     pub fn new(vocab: usize) -> Self {
         Self { vocab }
     }
@@ -24,6 +30,7 @@ impl ByteTokenizer {
         self.vocab >= 256 + N_SPECIAL
     }
 
+    /// Encode one byte (folded modulo the vocab in lossy mode).
     pub fn encode_byte(&self, b: u8) -> i32 {
         if self.lossless() {
             b as i32
@@ -33,16 +40,19 @@ impl ByteTokenizer {
         }
     }
 
+    /// Encode UTF-8 text as byte tokens.
     pub fn encode(&self, text: &str) -> Vec<i32> {
         text.bytes().map(|b| self.encode_byte(b)).collect()
     }
 
+    /// Encode with a leading BOS.
     pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
         let mut v = vec![self.bos()];
         v.extend(self.encode(text));
         v
     }
 
+    /// BOS id for this vocab (0 in lossy mode).
     pub fn bos(&self) -> i32 {
         if self.lossless() {
             BOS
@@ -51,6 +61,7 @@ impl ByteTokenizer {
         }
     }
 
+    /// EOS id for this vocab (last id in lossy mode).
     pub fn eos(&self) -> i32 {
         if self.lossless() {
             EOS
@@ -59,6 +70,7 @@ impl ByteTokenizer {
         }
     }
 
+    /// Decode ids back to text (special / out-of-range ids dropped).
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .filter(|&&t| (0..256).contains(&t))

@@ -21,9 +21,11 @@ pub enum Interconnect {
 /// One accelerator model.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// Marketing name (the lookup key).
     pub name: String,
     /// Dense peak TFLOP/s (no sparsity) per dtype.
     pub bf16_tflops: f64,
+    /// Dense peak FP8 TFLOP/s (no sparsity).
     pub fp8_tflops: f64,
     /// Device memory capacity, GiB.
     pub vram_gib: f64,
@@ -37,8 +39,11 @@ pub struct GpuSpec {
     pub throttle: f64,
     /// FP8 tensor cores present (Ada/Blackwell; Ampere = false).
     pub has_fp8: bool,
+    /// GPU↔GPU path in a multi-GPU node.
     pub interconnect: Interconnect,
+    /// Street price for the cost-efficiency tables (USD).
     pub cost_usd: f64,
+    /// Board power (W).
     pub power_w: f64,
 }
 
@@ -53,6 +58,7 @@ impl GpuSpec {
         peak * 1e12 * self.throttle
     }
 
+    /// Device memory capacity in bytes.
     pub fn vram_bytes(&self) -> f64 {
         self.vram_gib * super::GIB
     }
@@ -104,6 +110,7 @@ pub fn all_gpus() -> Vec<GpuSpec> {
     ]
 }
 
+/// Case- and space-insensitive lookup into [`all_gpus`].
 pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
     all_gpus()
         .into_iter()

@@ -8,5 +8,7 @@ pub mod node;
 pub use gpu::{gpu_by_name, GpuSpec, Interconnect};
 pub use node::{NodeTopology, COMM_LATENCY_S};
 
+/// Bytes per GiB.
 pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// Bytes per decimal GB.
 pub const GB: f64 = 1e9;

@@ -11,8 +11,11 @@ pub const COMM_LATENCY_S: f64 = 15e-6;
 /// A single machine: `n_gpus` × `gpu`, `host_mem_gib` of DRAM.
 #[derive(Debug, Clone)]
 pub struct NodeTopology {
+    /// The accelerator model (all GPUs in a node are identical).
     pub gpu: GpuSpec,
+    /// GPU count.
     pub n_gpus: usize,
+    /// Host DRAM capacity (GiB).
     pub host_mem_gib: f64,
     /// Aggregate host-DRAM bandwidth (GB/s) shared by all PCIe streams —
     /// on a consumer board all GPU↔GPU traffic bounces through this.
@@ -20,6 +23,7 @@ pub struct NodeTopology {
 }
 
 impl NodeTopology {
+    /// A node of `n_gpus` × `gpu` with the paper's testbed host sizing.
     pub fn new(gpu: GpuSpec, n_gpus: usize) -> Self {
         // Paper's testbeds: the 5060Ti sits in a high-end gaming PC
         // (~96 GB DDR5; §3.1: "even a high-end gaming PC will reach its

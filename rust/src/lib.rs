@@ -15,6 +15,9 @@
 // MSRV is 1.70 (`rust-version` in Cargo.toml): `usize::div_ceil` landed
 // in 1.73, so the manual `(a + b - 1) / b` form is deliberate.
 #![allow(clippy::manual_div_ceil)]
+// Every public item carries documentation; rustdoc runs in CI with
+// `-D warnings`, so this keeps the API docs complete as the crate grows.
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod collectives;

@@ -13,7 +13,9 @@ pub use planner::{device_floor_fits, plan, MemoryPlan, PlanInput};
 
 /// Bytes per element of each storage class.
 pub const BYTES_BF16: f64 = 2.0;
+/// Bytes per FP8 element.
 pub const BYTES_FP8: f64 = 1.0;
+/// Bytes per f32 element.
 pub const BYTES_F32: f64 = 4.0;
 
 /// Fixed reserve for CUDA context, cuBLAS/cuDNN workspaces and kernel

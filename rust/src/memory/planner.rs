@@ -12,11 +12,17 @@ use crate::shard::ShardConfig;
 /// Everything the planner needs to know about a configuration.
 #[derive(Debug, Clone)]
 pub struct PlanInput<'a> {
+    /// Model shape.
     pub model: &'a ModelPreset,
+    /// Target accelerator.
     pub gpu: &'a GpuSpec,
+    /// FP8 block-GEMMs enabled.
     pub fp8: bool,
+    /// Activation recomputation level.
     pub recompute: Recompute,
+    /// Host-offloaded tensor classes.
     pub offload: OffloadConfig,
+    /// ZeRO sharding levels.
     pub shard: ShardConfig,
     /// Micro-batch size (sequences of model.seq_len tokens).
     pub micro_batch: usize,
@@ -26,27 +32,41 @@ pub struct PlanInput<'a> {
 #[derive(Debug, Clone, Default)]
 pub struct MemoryPlan {
     // device-resident
+    /// Quantized compute weights.
     pub dev_weights: f64,
+    /// Master (bf16-grid) parameters.
     pub dev_master: f64,
+    /// Adam moments m, v.
     pub dev_moments: f64,
+    /// Gradient accumulators.
     pub dev_grads: f64,
+    /// Activations at the peak of the backward.
     pub dev_activations: f64,
+    /// Residual-stream checkpoints.
     pub dev_residuals: f64,
+    /// Staging buffers (double-buffer slots, collective scratch).
     pub dev_workspace: f64,
+    /// CUDA context + kernel-image reserve.
     pub dev_reserve: f64,
     // host-resident (pinned)
+    /// Pinned host-arena total.
     pub host_bytes: f64,
     // verdicts
+    /// Sum of the device-resident classes.
     pub dev_total: f64,
+    /// Device verdict: `dev_total` ≤ VRAM.
     pub fits: bool,
+    /// Host verdict: `host_bytes` ≤ host DRAM.
     pub host_fits: bool,
 }
 
 impl MemoryPlan {
+    /// Device total in GiB.
     pub fn dev_gib(&self) -> f64 {
         self.dev_total / GIB
     }
 
+    /// Host total in GiB.
     pub fn host_gib(&self) -> f64 {
         self.host_bytes / GIB
     }

@@ -15,14 +15,20 @@ use crate::hw::GpuSpec;
 /// Per-step timing decomposition coming out of the simulator or a real run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepBreakdown {
+    /// Kernel compute time.
     pub compute_s: f64,
+    /// Communication not hidden behind compute.
     pub exposed_comm_s: f64,
+    /// PCIe offload traffic not hidden behind compute.
     pub exposed_offload_s: f64,
+    /// Host optimizer time on the critical path.
     pub optimizer_s: f64,
+    /// Framework/launch overhead.
     pub overhead_s: f64,
 }
 
 impl StepBreakdown {
+    /// Wall-clock step time (sum of the exposed parts).
     pub fn total(&self) -> f64 {
         self.compute_s
             + self.exposed_comm_s

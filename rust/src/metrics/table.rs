@@ -4,12 +4,16 @@
 /// Simple aligned markdown table builder.
 #[derive(Debug, Default, Clone)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Row cells (each row matches the header width).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -18,11 +22,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width");
         self.rows.push(cells);
     }
 
+    /// Render as an aligned markdown table.
     pub fn to_markdown(&self) -> String {
         let ncol = self.header.len();
         let mut width = vec![0usize; ncol];
@@ -54,10 +60,12 @@ impl Table {
         s
     }
 
+    /// Print the markdown rendering to stdout.
     pub fn print(&self) {
         println!("{}", self.to_markdown());
     }
 
+    /// Render as CSV (header + rows).
     pub fn to_csv(&self) -> String {
         let mut s = self.header.join(",") + "\n";
         for r in &self.rows {

@@ -35,6 +35,7 @@ impl TransferMode {
 /// by compute, slot B is being filled for the next layer.
 #[derive(Debug)]
 pub struct DoubleBuffer {
+    /// Layers in the rotation.
     pub n_layers: usize,
     /// `slot_of[layer] = layer % 2`
     cursor: usize,
@@ -43,6 +44,7 @@ pub struct DoubleBuffer {
 }
 
 impl DoubleBuffer {
+    /// Empty rotation over `n_layers` layers.
     pub fn new(n_layers: usize) -> Self {
         Self {
             n_layers,
@@ -79,6 +81,7 @@ impl DoubleBuffer {
         (evicted, prefetch)
     }
 
+    /// Is `layer` currently held by its slot?
     pub fn is_resident(&self, layer: usize) -> bool {
         self.resident[self.slot(layer)] == Some(layer)
     }

@@ -13,10 +13,15 @@ pub use double_buffer::{DoubleBuffer, TransferMode};
 /// x, m, v, θ* (master), θ (quantized weights), g.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OffloadConfig {
+    /// Residual-stream activations `x`.
     pub residuals: bool,
+    /// Adam moments `m` and `v` (always together).
     pub moments: bool, // m and v together
+    /// Master parameters θ*.
     pub master: bool,  // θ*
+    /// Quantized compute weights θ.
     pub params: bool,  // θ (compute weights)
+    /// Gradients `g`.
     pub grads: bool,   // g
     /// Zero-copy (GPU reads host directly) instead of double-buffering.
     /// Paper: zero-copy is *slower* on gaming cards, faster on L40S.
@@ -24,6 +29,7 @@ pub struct OffloadConfig {
 }
 
 impl OffloadConfig {
+    /// Nothing offloaded.
     pub const NONE: OffloadConfig = OffloadConfig {
         residuals: false,
         moments: false,
@@ -87,6 +93,7 @@ impl OffloadConfig {
         steps
     }
 
+    /// Is any tensor class offloaded?
     pub fn any(&self) -> bool {
         self.residuals || self.moments || self.master || self.params || self.grads
     }

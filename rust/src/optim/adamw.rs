@@ -10,10 +10,15 @@ use crate::precision::{bf16, CounterRng};
 use crate::util::par;
 
 #[derive(Debug, Clone, Copy)]
+/// AdamW hyper-parameters (betas, epsilon, decoupled weight decay).
 pub struct AdamWParams {
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator epsilon.
     pub eps: f32,
+    /// Decoupled weight decay.
     pub weight_decay: f32,
 }
 
@@ -31,7 +36,9 @@ impl Default for AdamWParams {
 /// Flat AdamW with SR-to-bf16 state, bit-identical to the Pallas kernel.
 #[derive(Debug)]
 pub struct AdamW {
+    /// Hyper-parameters.
     pub hp: AdamWParams,
+    /// SR stream, keyed [`ADAMW_RNG_KEY`] (matches the Pallas kernel).
     pub rng: CounterRng,
 }
 
@@ -68,6 +75,7 @@ pub(crate) fn update_element(
 }
 
 impl AdamW {
+    /// Optimizer with the kernel's fixed RNG key.
     pub fn new(hp: AdamWParams) -> Self {
         Self {
             hp,

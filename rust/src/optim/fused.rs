@@ -42,9 +42,11 @@ pub const REDUCE_RNG_KEY: u32 = 0xC011_EC7;
 /// Everything the host step needs beyond the state buffers themselves.
 #[derive(Debug, Clone)]
 pub struct HostStep {
+    /// AdamW hyper-parameters.
     pub hp: AdamWParams,
     /// LR for this step (schedule already applied).
     pub lr: f32,
+    /// Global-norm clip threshold (≤ 0 disables clipping).
     pub grad_clip: f32,
     /// 1-based optimizer step (bias correction).
     pub step: u32,

@@ -1,0 +1,370 @@
+//! NEON (4-lane) kernels for the FP8/BF16 codec hot loops — the aarch64
+//! mirror of the `x86` submodule, pinned bit-identical to the
+//! crate-private `scalar` reference loops.
+//!
+//! The same bit-exactness arguments apply (see
+//! [`crate::precision::backend`] and `docs/NUMERICS.md`); the NEON-
+//! specific wrinkles are:
+//!
+//! * `vminq_f32`/`vmaxq_f32` *propagate* NaN (unlike `f32::min`/`max`,
+//!   which ignore it), so every clamp and the absmax fold use an explicit
+//!   compare + `vbslq` select, which reproduces the scalar semantics for
+//!   every input including NaN;
+//! * `vrndnq_f32` is exact round-half-even, matching the scalar
+//!   `round_half_even` helper on the codecs' bounded domains;
+//! * runtime shift amounts (the per-format mantissa width) use
+//!   `vshlq_u32` with a signed shift-count vector (negative = right).
+//!
+//! # Safety
+//!
+//! All functions require NEON, which is architecturally mandatory on
+//! aarch64 — [`super::level`] dispatches here unconditionally on that
+//! target unless `LLMQ_SIMD=scalar`.
+
+#![allow(clippy::missing_safety_doc)] // one shared safety contract, documented above
+
+use super::scalar;
+use super::CounterRng;
+use crate::precision::fp8::Fp8Format;
+use core::arch::aarch64::*;
+
+/// Per-format splatted constants shared by the round/encode kernels.
+struct Fp8Consts {
+    vmax: float32x4_t,
+    vnan: float32x4_t,
+    v127: int32x4_t,
+    vmin_e: int32x4_t,
+    vman: int32x4_t,
+    vbias: int32x4_t,
+    vimplicit: uint32x4_t,
+}
+
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn consts(fmt: Fp8Format) -> Fp8Consts {
+    let man = fmt.man_bits as i32;
+    Fp8Consts {
+        vmax: vdupq_n_f32(fmt.max_val()),
+        vnan: vdupq_n_f32(f32::NAN),
+        v127: vdupq_n_s32(127),
+        vmin_e: vdupq_n_s32(1 - fmt.bias),
+        vman: vdupq_n_s32(man),
+        vbias: vdupq_n_s32(fmt.bias),
+        vimplicit: vdupq_n_u32(1 << fmt.man_bits),
+    }
+}
+
+/// `a.min(b)` with the scalar `f32::min` semantics (NaN lanes take `b`),
+/// which NEON's native `vminq_f32` (NaN-propagating) does not provide.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn min_scalar_sem(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+    vbslq_f32(vcltq_f32(a, b), a, b)
+}
+
+/// `fmt.round(t)` on 4 lanes — clamp, effective-exponent ulp, RNE,
+/// saturate, with the scalar early-returns (NaN, zero) as selects.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn fp8_round_vec(t: float32x4_t, c: &Fp8Consts) -> float32x4_t {
+    let ord = vceqq_f32(t, t); // false on NaN lanes
+    let sign = vandq_u32(vreinterpretq_u32_f32(t), vdupq_n_u32(0x8000_0000));
+    let a = min_scalar_sem(vabsq_f32(t), c.vmax);
+    let zero = vceqq_f32(a, vdupq_n_f32(0.0));
+    let abits = vreinterpretq_u32_f32(a);
+    let e = vsubq_s32(vreinterpretq_s32_u32(vshrq_n_u32::<23>(abits)), c.v127);
+    let e_eff = vmaxq_s32(e, c.vmin_e);
+    let ulp = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vsubq_s32(e_eff, c.vman),
+        c.v127,
+    )));
+    let q = vmulq_f32(vrndnq_f32(vdivq_f32(a, ulp)), ulp);
+    let q = min_scalar_sem(q, c.vmax);
+    let r = vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(q), sign));
+    let r = vbslq_f32(zero, vdupq_n_f32(0.0), r);
+    vbslq_f32(ord, r, c.vnan)
+}
+
+/// `fmt.encode(r)` on 4 lanes for grid values `r`; byte in each u32 lane.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn fp8_encode_vec(r: float32x4_t, c: &Fp8Consts) -> uint32x4_t {
+    let ord = vceqq_f32(r, r);
+    let rbits = vreinterpretq_u32_f32(r);
+    let sign_byte = vshrq_n_u32::<24>(vandq_u32(rbits, vdupq_n_u32(0x8000_0000)));
+    let a = vabsq_f32(r);
+    let abits = vreinterpretq_u32_f32(a);
+    let e = vsubq_s32(vreinterpretq_s32_u32(vshrq_n_u32::<23>(abits)), c.v127);
+    let e_eff = vmaxq_s32(e, c.vmin_e);
+    let ulp = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vsubq_s32(e_eff, c.vman),
+        c.v127,
+    )));
+    // exact for grid values; round-toward-zero == the scalar `as u32` cast
+    let units = vcvtq_u32_f32(vdivq_f32(a, ulp));
+    let sub = vcltq_s32(e, c.vmin_e); // subnormal (includes zero)
+    let normal = vorrq_u32(
+        vshlq_u32(vreinterpretq_u32_s32(vaddq_s32(e, c.vbias)), c.vman),
+        vsubq_u32(units, c.vimplicit),
+    );
+    let code = vorrq_u32(sign_byte, vbslq_u32(sub, units, normal));
+    vbslq_u32(ord, code, vdupq_n_u32(0x7F))
+}
+
+/// 4-lane murmur3 finalizer — lane `i` is [`CounterRng::next_u32`]`(ctr_i)`.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn murmur_vec(ctr: uint32x4_t, key: uint32x4_t) -> uint32x4_t {
+    let mut x = vmulq_u32(ctr, vdupq_n_u32(0x9E37_79B9));
+    x = veorq_u32(x, key);
+    x = veorq_u32(x, vshrq_n_u32::<16>(x));
+    x = vmulq_u32(x, vdupq_n_u32(0x85EB_CA6B));
+    x = veorq_u32(x, vshrq_n_u32::<13>(x));
+    x = vmulq_u32(x, vdupq_n_u32(0xC2B2_AE35));
+    veorq_u32(x, vshrq_n_u32::<16>(x))
+}
+
+/// RNE f32 → bf16 grid on 4 lanes (canonical-NaN select included).
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn bf16_rne_vec(x: float32x4_t) -> float32x4_t {
+    let ord = vceqq_f32(x, x);
+    let bits = vreinterpretq_u32_f32(x);
+    let lsb = vandq_u32(vshrq_n_u32::<16>(bits), vdupq_n_u32(1));
+    let r = vaddq_u32(vaddq_u32(bits, vdupq_n_u32(0x7FFF)), lsb);
+    let y = vreinterpretq_f32_u32(vandq_u32(r, vdupq_n_u32(0xFFFF_0000)));
+    vbslq_f32(ord, y, vdupq_n_f32(f32::NAN))
+}
+
+/// Stochastic round to bf16 on 4 lanes (canonical-NaN select included).
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn bf16_sr_vec(x: float32x4_t, ctr: uint32x4_t, key: uint32x4_t) -> float32x4_t {
+    let ord = vceqq_f32(x, x);
+    let r = vandq_u32(murmur_vec(ctr, key), vdupq_n_u32(0xFFFF));
+    let bits = vaddq_u32(vreinterpretq_u32_f32(x), r);
+    let y = vreinterpretq_f32_u32(vandq_u32(bits, vdupq_n_u32(0xFFFF_0000)));
+    vbslq_f32(ord, y, vdupq_n_f32(f32::NAN))
+}
+
+/// The `{0,1,2,3}` lane-offset vector for global-index counters.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn lane_iota() -> uint32x4_t {
+    let iota = [0u32, 1, 2, 3];
+    vld1q_u32(iota.as_ptr())
+}
+
+/// NEON `max(|x_i|)`; lane fold + scalar horizontal fold (order-
+/// insensitive, NaN-ignoring — matches `f32::max` exactly).
+#[target_feature(enable = "neon")]
+pub unsafe fn absmax(x: &[f32]) -> f32 {
+    let mut acc = vdupq_n_f32(0.0);
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        let a = vabsq_f32(vld1q_f32(c.as_ptr()));
+        acc = vbslq_f32(vcgtq_f32(a, acc), a, acc);
+    }
+    let mut lanes = [0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), acc);
+    let m = lanes.iter().fold(0.0f32, |m, &v| m.max(v));
+    m.max(scalar::absmax(chunks.remainder()))
+}
+
+/// NEON `x[i] = fmt.round(x[i] / scale)`.
+#[target_feature(enable = "neon")]
+pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
+    let c = consts(fmt);
+    let vscale = vdupq_n_f32(scale);
+    let mut chunks = x.chunks_exact_mut(4);
+    for ch in &mut chunks {
+        let t = vdivq_f32(vld1q_f32(ch.as_ptr()), vscale);
+        vst1q_f32(ch.as_mut_ptr(), fp8_round_vec(t, &c));
+    }
+    scalar::fp8_round_scaled(fmt, chunks.into_remainder(), scale);
+}
+
+/// NEON fused `out[i] = fmt.encode(fmt.round(x[i] / scale))`.
+#[target_feature(enable = "neon")]
+pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut [u8]) {
+    debug_assert_eq!(x.len(), out.len());
+    let c = consts(fmt);
+    let vscale = vdupq_n_f32(scale);
+    let main = x.len() - x.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let t = vdivq_f32(vld1q_f32(x.as_ptr().add(k)), vscale);
+        let code = fp8_encode_vec(fp8_round_vec(t, &c), &c);
+        // u32 lanes (≤ 0xFF) → 4 contiguous bytes
+        let n16 = vmovn_u32(code);
+        let n8 = vmovn_u16(vcombine_u16(n16, n16));
+        let w = vget_lane_u32::<0>(vreinterpret_u32_u8(n8));
+        core::ptr::write_unaligned(out.as_mut_ptr().add(k) as *mut u32, w);
+        k += 4;
+    }
+    scalar::fp8_encode_scaled(fmt, &x[main..], scale, &mut out[main..]);
+}
+
+/// NEON fused `out[i] = fmt.decode(bytes[i]) * scale`.
+#[target_feature(enable = "neon")]
+pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    let man = fmt.man_bits as i32;
+    let vman_r = vdupq_n_s32(-man);
+    let vman_mask = vdupq_n_u32((1 << man) - 1);
+    let vexp_off = vdupq_n_s32(127 - fmt.bias);
+    let sub_unit = vdupq_n_f32(f32::from_bits(((1 - fmt.bias - man + 127) as u32) << 23));
+    let two_man = vdupq_n_f32((1u32 << man) as f32);
+    let vone = vdupq_n_f32(1.0);
+    let vscale = vdupq_n_f32(scale);
+    let main = out.len() - out.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let w = core::ptr::read_unaligned(bytes.as_ptr().add(k) as *const u32);
+        let vb = vmovl_u16(vget_low_u16(vmovl_u8(vcreate_u8(w as u64))));
+        let sign = vshlq_n_u32::<24>(vandq_u32(vb, vdupq_n_u32(0x80)));
+        let body = vandq_u32(vb, vdupq_n_u32(0x7F));
+        let exp_f = vshlq_u32(body, vman_r);
+        let man_ps = vcvtq_f32_u32(vandq_u32(body, vman_mask));
+        let subv = vmulq_f32(man_ps, sub_unit);
+        let frac = vaddq_f32(vone, vdivq_f32(man_ps, two_man));
+        let pow = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+            vreinterpretq_s32_u32(exp_f),
+            vexp_off,
+        )));
+        let sub_mask = vceqq_u32(exp_f, vdupq_n_u32(0));
+        let v = vbslq_f32(sub_mask, subv, vmulq_f32(frac, pow));
+        let v = vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(v), sign));
+        vst1q_f32(out.as_mut_ptr().add(k), vmulq_f32(v, vscale));
+        k += 4;
+    }
+    scalar::fp8_decode_scaled(fmt, &bytes[main..], scale, &mut out[main..]);
+}
+
+/// NEON RNE round onto the bf16 grid, in place.
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_round(x: &mut [f32]) {
+    let mut chunks = x.chunks_exact_mut(4);
+    for ch in &mut chunks {
+        vst1q_f32(ch.as_mut_ptr(), bf16_rne_vec(vld1q_f32(ch.as_ptr())));
+    }
+    scalar::bf16_round(chunks.into_remainder());
+}
+
+/// NEON stochastic round onto the bf16 grid; lane `j` at element offset
+/// `o` draws counter `counter_base + o + j` (global-index keying).
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
+    let key = vdupq_n_u32(rng.key);
+    let mut ctr = vaddq_u32(vdupq_n_u32(counter_base), lane_iota());
+    let step = vdupq_n_u32(4);
+    let main = x.len() - x.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let y = bf16_sr_vec(vld1q_f32(x.as_ptr().add(k)), ctr, key);
+        vst1q_f32(x.as_mut_ptr().add(k), y);
+        ctr = vaddq_u32(ctr, step);
+        k += 4;
+    }
+    scalar::bf16_stochastic_round(&mut x[main..], rng, counter_base.wrapping_add(main as u32));
+}
+
+/// NEON `out[i] = bf16_rne(x[i] * scale)`.
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
+    debug_assert_eq!(x.len(), out.len());
+    let vscale = vdupq_n_f32(scale);
+    let main = out.len() - out.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let y = bf16_rne_vec(vmulq_f32(vld1q_f32(x.as_ptr().add(k)), vscale));
+        vst1q_f32(out.as_mut_ptr().add(k), y);
+        k += 4;
+    }
+    scalar::bf16_scaled_round(&x[main..], &mut out[main..], scale);
+}
+
+/// NEON `acc[i] = bf16_rne(acc[i] + x[i])`.
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let main = acc.len() - acc.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let s = vaddq_f32(vld1q_f32(acc.as_ptr().add(k)), vld1q_f32(x.as_ptr().add(k)));
+        vst1q_f32(acc.as_mut_ptr().add(k), bf16_rne_vec(s));
+        k += 4;
+    }
+    scalar::bf16_accumulate(&mut acc[main..], &x[main..]);
+}
+
+/// NEON bf16 bit packing: `out[i] = (x[i].to_bits() >> 16) as u16`.
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(x.len(), out.len());
+    let main = out.len() - out.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let hi = vshrq_n_u32::<16>(vreinterpretq_u32_f32(vld1q_f32(x.as_ptr().add(k))));
+        vst1_u16(out.as_mut_ptr().add(k), vmovn_u32(hi));
+        k += 4;
+    }
+    scalar::bf16_pack(&x[main..], &mut out[main..]);
+}
+
+/// NEON bf16 bit unpacking: `out[i] = f32::from_bits((bits[i] as u32) << 16)`.
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(bits.len(), out.len());
+    let main = out.len() - out.len() % 4;
+    let mut k = 0;
+    while k < main {
+        let w = vmovl_u16(vld1_u16(bits.as_ptr().add(k)));
+        vst1q_f32(
+            out.as_mut_ptr().add(k),
+            vreinterpretq_f32_u32(vshlq_n_u32::<16>(w)),
+        );
+        k += 4;
+    }
+    scalar::bf16_unpack(&bits[main..], &mut out[main..]);
+}
+
+/// NEON SR reduce epilogue over one collective pipeline block (ascending-
+/// src sum, optional per-term `bf16_rne(g * scale)`, SR keyed by
+/// `counter + base + j`).
+#[target_feature(enable = "neon")]
+pub unsafe fn sr_reduce_block(
+    srcs: &[Vec<f32>],
+    base: usize,
+    block: &mut [f32],
+    scale: Option<f32>,
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let n = block.len();
+    // no per-block allocation here — this runs once per pipeline block on
+    // the collective hot path; bounds are checked once, loads are raw
+    for s in srcs {
+        assert!(s.len() >= base + n, "source shorter than block span");
+    }
+    let key = vdupq_n_u32(rng.key);
+    let mut ctr = vaddq_u32(vdupq_n_u32(counter.wrapping_add(base as u32)), lane_iota());
+    let step = vdupq_n_u32(4);
+    let vscale = vdupq_n_f32(scale.unwrap_or(1.0));
+    let main = n - n % 4;
+    let mut k = 0;
+    while k < main {
+        let mut sum = vld1q_f32(block.as_ptr().add(k));
+        for s in srcs {
+            let mut g = vld1q_f32(s.as_ptr().add(base + k));
+            if scale.is_some() {
+                g = bf16_rne_vec(vmulq_f32(g, vscale));
+            }
+            sum = vaddq_f32(sum, g);
+        }
+        vst1q_f32(block.as_mut_ptr().add(k), bf16_sr_vec(sum, ctr, key));
+        ctr = vaddq_u32(ctr, step);
+        k += 4;
+    }
+    scalar::sr_reduce_block(srcs, base + main, &mut block[main..], scale, rng, counter);
+}

@@ -1,0 +1,385 @@
+//! AVX2 (8-lane) kernels for the FP8/BF16 codec hot loops.
+//!
+//! Every function here is pinned **bit-identical** to the scalar
+//! reference loops (the crate-private `scalar` submodule) — see the
+//! module docs of
+//! [`crate::precision::backend`] and `docs/NUMERICS.md` for the contract
+//! and the argument for why each intrinsic matches the scalar op:
+//!
+//! * divisions/multiplications map 1:1 (`vdivps`/`vmulps` are IEEE
+//!   correctly-rounded, same as the scalar ops; no FMA is ever emitted
+//!   from these explicit intrinsics);
+//! * `vroundps` with `_MM_FROUND_TO_NEAREST_INT` is exact round-half-even
+//!   on the bounded domains the codecs produce (|t| < 2^mantissa+1), which
+//!   is precisely what the scalar `round_half_even` helper computes;
+//! * scalar early-returns (`NaN` → canonical NaN, zero → `+0.0`) become
+//!   compare-and-blend epilogues, so the asymmetric NaN conventions of
+//!   `vminps`/`vmaxps` never leak into results;
+//! * sub-lane tails always fall back to the scalar reference loops, so a
+//!   length never changes numerics, only which instructions computed them.
+//!
+//! # Safety
+//!
+//! All functions are `unsafe` with the single contract that the CPU
+//! supports AVX2; [`super::level`] only dispatches here after
+//! `is_x86_feature_detected!("avx2")` has confirmed that.
+
+#![allow(clippy::missing_safety_doc)] // one shared safety contract, documented above
+
+use super::scalar;
+use super::CounterRng;
+use crate::precision::fp8::Fp8Format;
+use core::arch::x86_64::*;
+
+const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Per-format splatted constants shared by the round/encode kernels.
+struct Fp8Consts {
+    vmax: __m256,
+    vabs: __m256,
+    vsign: __m256,
+    vnan: __m256,
+    v127: __m256i,
+    vmin_e: __m256i,
+    vman: __m256i,
+    vbias: __m256i,
+    vimplicit: __m256i,
+}
+
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn consts(fmt: Fp8Format) -> Fp8Consts {
+    Fp8Consts {
+        vmax: _mm256_set1_ps(fmt.max_val()),
+        vabs: _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)),
+        vsign: _mm256_castsi256_ps(_mm256_set1_epi32(0x8000_0000u32 as i32)),
+        vnan: _mm256_set1_ps(f32::NAN),
+        v127: _mm256_set1_epi32(127),
+        vmin_e: _mm256_set1_epi32(1 - fmt.bias),
+        vman: _mm256_set1_epi32(fmt.man_bits as i32),
+        vbias: _mm256_set1_epi32(fmt.bias),
+        vimplicit: _mm256_set1_epi32(1 << fmt.man_bits),
+    }
+}
+
+/// `fmt.round(t)` on 8 lanes: clamp, effective-exponent ulp, RNE,
+/// saturate — with the scalar early-returns (`NaN`, zero) as blends.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn fp8_round_vec(t: __m256, c: &Fp8Consts) -> __m256 {
+    let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(t, t);
+    let sign = _mm256_and_ps(t, c.vsign);
+    // min_ps returns the second operand on NaN — the NaN lane result is
+    // garbage either way and is blended to canonical NaN below.
+    let a = _mm256_min_ps(_mm256_and_ps(t, c.vabs), c.vmax);
+    let zero = _mm256_cmp_ps::<_CMP_EQ_OQ>(a, _mm256_setzero_ps());
+    let e = _mm256_sub_epi32(_mm256_srli_epi32::<23>(_mm256_castps_si256(a)), c.v127);
+    let e_eff = _mm256_max_epi32(e, c.vmin_e);
+    let ulp = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_sub_epi32(e_eff, c.vman),
+        c.v127,
+    )));
+    let q = _mm256_mul_ps(_mm256_round_ps::<RNE>(_mm256_div_ps(a, ulp)), ulp);
+    let q = _mm256_min_ps(q, c.vmax);
+    let r = _mm256_or_ps(q, sign);
+    let r = _mm256_blendv_ps(r, _mm256_setzero_ps(), zero);
+    _mm256_blendv_ps(r, c.vnan, nan)
+}
+
+/// `fmt.encode(r)` on 8 lanes for grid values `r` (the output of
+/// [`fp8_round_vec`]); returns the byte in each epi32 lane.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn fp8_encode_vec(r: __m256, c: &Fp8Consts) -> __m256i {
+    let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(r, r));
+    let rbits = _mm256_castps_si256(r);
+    let sign_byte = _mm256_srli_epi32::<24>(_mm256_and_si256(
+        rbits,
+        _mm256_castps_si256(c.vsign),
+    ));
+    let a = _mm256_and_ps(r, c.vabs);
+    let e = _mm256_sub_epi32(_mm256_srli_epi32::<23>(_mm256_castps_si256(a)), c.v127);
+    let e_eff = _mm256_max_epi32(e, c.vmin_e);
+    let ulp = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_sub_epi32(e_eff, c.vman),
+        c.v127,
+    )));
+    // exact for grid values; truncation == the scalar `as u32` cast
+    let units = _mm256_cvttps_epi32(_mm256_div_ps(a, ulp));
+    // subnormal (e < 1-bias, includes zero): field is just `units`
+    let sub = _mm256_cmpgt_epi32(c.vmin_e, e);
+    let normal = _mm256_or_si256(
+        _mm256_sllv_epi32(_mm256_add_epi32(e, c.vbias), c.vman),
+        _mm256_sub_epi32(units, c.vimplicit),
+    );
+    let code = _mm256_or_si256(sign_byte, _mm256_blendv_epi8(normal, units, sub));
+    _mm256_blendv_epi8(code, _mm256_set1_epi32(0x7F), nan)
+}
+
+/// 8-lane murmur3 finalizer over `(counter, key)` — lane `i` computes
+/// exactly [`CounterRng::next_u32`]`(ctr_i)`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn murmur_vec(ctr: __m256i, key: __m256i) -> __m256i {
+    let mut x = _mm256_mullo_epi32(ctr, _mm256_set1_epi32(0x9E37_79B9u32 as i32));
+    x = _mm256_xor_si256(x, key);
+    x = _mm256_xor_si256(x, _mm256_srli_epi32::<16>(x));
+    x = _mm256_mullo_epi32(x, _mm256_set1_epi32(0x85EB_CA6Bu32 as i32));
+    x = _mm256_xor_si256(x, _mm256_srli_epi32::<13>(x));
+    x = _mm256_mullo_epi32(x, _mm256_set1_epi32(0xC2B2_AE35u32 as i32));
+    _mm256_xor_si256(x, _mm256_srli_epi32::<16>(x))
+}
+
+/// RNE f32 → bf16-grid on 8 lanes (canonical-NaN blend included).
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn bf16_rne_vec(x: __m256) -> __m256 {
+    let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+    let bits = _mm256_castps_si256(x);
+    let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+    let r = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7FFF)), lsb);
+    let y = _mm256_castsi256_ps(_mm256_and_si256(r, _mm256_set1_epi32(0xFFFF_0000u32 as i32)));
+    _mm256_blendv_ps(y, _mm256_set1_ps(f32::NAN), nan)
+}
+
+/// Stochastic round to bf16 on 8 lanes: `bits + (draw & 0xFFFF)`, then
+/// truncate (canonical-NaN blend included).
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn bf16_sr_vec(x: __m256, ctr: __m256i, key: __m256i) -> __m256 {
+    let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+    let r = _mm256_and_si256(murmur_vec(ctr, key), _mm256_set1_epi32(0xFFFF));
+    let bits = _mm256_add_epi32(_mm256_castps_si256(x), r);
+    let y = _mm256_castsi256_ps(_mm256_and_si256(bits, _mm256_set1_epi32(0xFFFF_0000u32 as i32)));
+    _mm256_blendv_ps(y, _mm256_set1_ps(f32::NAN), nan)
+}
+
+/// AVX2 `max(|x_i|)`; lane-parallel fold then a scalar horizontal fold —
+/// `max` over a set is order-insensitive, so this matches the sequential
+/// scalar fold bitwise (NaN lanes are never selected, exactly like
+/// `f32::max`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn absmax(x: &[f32]) -> f32 {
+    let vabs = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = x.chunks_exact(8);
+    for c in &mut chunks {
+        let a = _mm256_and_ps(_mm256_loadu_ps(c.as_ptr()), vabs);
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+        acc = _mm256_blendv_ps(acc, a, gt);
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let m = lanes.iter().fold(0.0f32, |m, &v| m.max(v));
+    m.max(scalar::absmax(chunks.remainder()))
+}
+
+/// AVX2 `x[i] = fmt.round(x[i] / scale)`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
+    let c = consts(fmt);
+    let vscale = _mm256_set1_ps(scale);
+    let mut chunks = x.chunks_exact_mut(8);
+    for ch in &mut chunks {
+        let t = _mm256_div_ps(_mm256_loadu_ps(ch.as_ptr()), vscale);
+        _mm256_storeu_ps(ch.as_mut_ptr(), fp8_round_vec(t, &c));
+    }
+    scalar::fp8_round_scaled(fmt, chunks.into_remainder(), scale);
+}
+
+/// AVX2 fused `out[i] = fmt.encode(fmt.round(x[i] / scale))`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut [u8]) {
+    debug_assert_eq!(x.len(), out.len());
+    let c = consts(fmt);
+    let vscale = _mm256_set1_ps(scale);
+    let main = x.len() - x.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let t = _mm256_div_ps(_mm256_loadu_ps(x.as_ptr().add(k)), vscale);
+        let code = fp8_encode_vec(fp8_round_vec(t, &c), &c);
+        // epi32 lanes (≤ 0xFF) → 8 contiguous bytes
+        let p16 = _mm256_permute4x64_epi64::<0x08>(_mm256_packus_epi32(code, code));
+        let p8 = _mm_packus_epi16(_mm256_castsi256_si128(p16), _mm_setzero_si128());
+        _mm_storel_epi64(out.as_mut_ptr().add(k) as *mut __m128i, p8);
+        k += 8;
+    }
+    scalar::fp8_encode_scaled(fmt, &x[main..], scale, &mut out[main..]);
+}
+
+/// AVX2 fused `out[i] = fmt.decode(bytes[i]) * scale`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    let man = fmt.man_bits as i32;
+    let vman = _mm256_set1_epi32(man);
+    let vman_mask = _mm256_set1_epi32((1 << man) - 1);
+    let vexp_off = _mm256_set1_epi32(127 - fmt.bias);
+    // 2^(1 - bias - man): the subnormal unit, exact by construction
+    let sub_unit = _mm256_set1_ps(f32::from_bits(
+        ((1 - fmt.bias - man + 127) as u32) << 23,
+    ));
+    let two_man = _mm256_set1_ps((1u32 << man) as f32);
+    let vone = _mm256_set1_ps(1.0);
+    let vscale = _mm256_set1_ps(scale);
+    let main = out.len() - out.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let vb = _mm256_cvtepu8_epi32(_mm_loadl_epi64(bytes.as_ptr().add(k) as *const __m128i));
+        let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(vb, _mm256_set1_epi32(0x80)));
+        let body = _mm256_and_si256(vb, _mm256_set1_epi32(0x7F));
+        let exp_f = _mm256_srlv_epi32(body, vman);
+        let man_ps = _mm256_cvtepi32_ps(_mm256_and_si256(body, vman_mask));
+        let subv = _mm256_mul_ps(man_ps, sub_unit);
+        let frac = _mm256_add_ps(vone, _mm256_div_ps(man_ps, two_man));
+        let pow = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(exp_f, vexp_off)));
+        let sub_mask = _mm256_castsi256_ps(_mm256_cmpeq_epi32(exp_f, _mm256_setzero_si256()));
+        let v = _mm256_blendv_ps(_mm256_mul_ps(frac, pow), subv, sub_mask);
+        let v = _mm256_or_ps(v, _mm256_castsi256_ps(sign));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), _mm256_mul_ps(v, vscale));
+        k += 8;
+    }
+    scalar::fp8_decode_scaled(fmt, &bytes[main..], scale, &mut out[main..]);
+}
+
+/// AVX2 RNE round onto the bf16 grid, in place.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_round(x: &mut [f32]) {
+    let mut chunks = x.chunks_exact_mut(8);
+    for ch in &mut chunks {
+        let y = bf16_rne_vec(_mm256_loadu_ps(ch.as_ptr()));
+        _mm256_storeu_ps(ch.as_mut_ptr(), y);
+    }
+    scalar::bf16_round(chunks.into_remainder());
+}
+
+/// AVX2 stochastic round onto the bf16 grid; lane `j` of the vector at
+/// element offset `o` draws counter `counter_base + o + j`, keeping the
+/// stream keyed by global element index.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
+    let key = _mm256_set1_epi32(rng.key as i32);
+    let mut ctr = _mm256_add_epi32(
+        _mm256_set1_epi32(counter_base as i32),
+        _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7),
+    );
+    let step = _mm256_set1_epi32(8);
+    let main = x.len() - x.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let y = bf16_sr_vec(_mm256_loadu_ps(x.as_ptr().add(k)), ctr, key);
+        _mm256_storeu_ps(x.as_mut_ptr().add(k), y);
+        ctr = _mm256_add_epi32(ctr, step);
+        k += 8;
+    }
+    scalar::bf16_stochastic_round(&mut x[main..], rng, counter_base.wrapping_add(main as u32));
+}
+
+/// AVX2 `out[i] = bf16_rne(x[i] * scale)`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
+    debug_assert_eq!(x.len(), out.len());
+    let vscale = _mm256_set1_ps(scale);
+    let main = out.len() - out.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let y = bf16_rne_vec(_mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(k)), vscale));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), y);
+        k += 8;
+    }
+    scalar::bf16_scaled_round(&x[main..], &mut out[main..], scale);
+}
+
+/// AVX2 `acc[i] = bf16_rne(acc[i] + x[i])`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let main = acc.len() - acc.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let s = _mm256_add_ps(
+            _mm256_loadu_ps(acc.as_ptr().add(k)),
+            _mm256_loadu_ps(x.as_ptr().add(k)),
+        );
+        _mm256_storeu_ps(acc.as_mut_ptr().add(k), bf16_rne_vec(s));
+        k += 8;
+    }
+    scalar::bf16_accumulate(&mut acc[main..], &x[main..]);
+}
+
+/// AVX2 bf16 bit packing: `out[i] = (x[i].to_bits() >> 16) as u16`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(x.len(), out.len());
+    let main = out.len() - out.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let hi = _mm256_srli_epi32::<16>(_mm256_castps_si256(_mm256_loadu_ps(x.as_ptr().add(k))));
+        // epi32 lanes (≤ 0xFFFF) → 8 contiguous u16
+        let p = _mm256_permute4x64_epi64::<0x08>(_mm256_packus_epi32(hi, hi));
+        _mm_storeu_si128(
+            out.as_mut_ptr().add(k) as *mut __m128i,
+            _mm256_castsi256_si128(p),
+        );
+        k += 8;
+    }
+    scalar::bf16_pack(&x[main..], &mut out[main..]);
+}
+
+/// AVX2 bf16 bit unpacking: `out[i] = f32::from_bits((bits[i] as u32) << 16)`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(bits.len(), out.len());
+    let main = out.len() - out.len() % 8;
+    let mut k = 0;
+    while k < main {
+        let w = _mm256_cvtepu16_epi32(_mm_loadu_si128(bits.as_ptr().add(k) as *const __m128i));
+        let v = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(w));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), v);
+        k += 8;
+    }
+    scalar::bf16_unpack(&bits[main..], &mut out[main..]);
+}
+
+/// AVX2 SR reduce epilogue over one collective pipeline block:
+/// ascending-src sum (each term optionally `bf16_rne(g * scale)`), then
+/// one SR draw per element keyed by `counter + base + j`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sr_reduce_block(
+    srcs: &[Vec<f32>],
+    base: usize,
+    block: &mut [f32],
+    scale: Option<f32>,
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let n = block.len();
+    // no per-block allocation here — this runs once per pipeline block on
+    // the collective hot path; bounds are checked once, loads are raw
+    for s in srcs {
+        assert!(s.len() >= base + n, "source shorter than block span");
+    }
+    let key = _mm256_set1_epi32(rng.key as i32);
+    let mut ctr = _mm256_add_epi32(
+        _mm256_set1_epi32(counter.wrapping_add(base as u32) as i32),
+        _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7),
+    );
+    let step = _mm256_set1_epi32(8);
+    let vscale = _mm256_set1_ps(scale.unwrap_or(1.0));
+    let main = n - n % 8;
+    let mut k = 0;
+    while k < main {
+        let mut sum = _mm256_loadu_ps(block.as_ptr().add(k));
+        for s in srcs {
+            let mut g = _mm256_loadu_ps(s.as_ptr().add(base + k));
+            if scale.is_some() {
+                g = bf16_rne_vec(_mm256_mul_ps(g, vscale));
+            }
+            sum = _mm256_add_ps(sum, g);
+        }
+        _mm256_storeu_ps(block.as_mut_ptr().add(k), bf16_sr_vec(sum, ctr, key));
+        ctr = _mm256_add_epi32(ctr, step);
+        k += 8;
+    }
+    scalar::sr_reduce_block(srcs, base + main, &mut block[main..], scale, rng, counter);
+}

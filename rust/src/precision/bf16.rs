@@ -6,6 +6,7 @@
 //! and accumulates gradients in BF16 ("many steps of gradient accumulation
 //! ... without catastrophic cancellation").
 
+use super::backend;
 use super::philox::CounterRng;
 use crate::util::par;
 
@@ -24,6 +25,21 @@ pub fn round_to_bf16(x: f32) -> f32 {
 
 /// Stochastic rounding f32 -> bf16 grid: element `i` draws from
 /// `rng.next_u32(counter_base + i)` (identical to the AdamW Pallas kernel).
+///
+/// # Examples
+///
+/// ```
+/// use llmq::precision::{stochastic_round_bf16, round_to_bf16, CounterRng};
+/// let rng = CounterRng::new(0x11A17);
+/// let x = 1.00390625_f32; // strictly between two bf16 grid points
+/// let lo = round_to_bf16(1.0); // bracketing grid values
+/// let hi = f32::from_bits(lo.to_bits() + 0x1_0000);
+/// // SR lands on one of the two bracketing grid values, and the draw is
+/// // a pure function of (key, counter) — same counter, same answer.
+/// let q = stochastic_round_bf16(x, &rng, 42);
+/// assert!(q == lo || q == hi);
+/// assert_eq!(q.to_bits(), stochastic_round_bf16(x, &rng, 42).to_bits());
+/// ```
 #[inline]
 pub fn stochastic_round_bf16(x: f32, rng: &CounterRng, counter: u32) -> f32 {
     if x.is_nan() {
@@ -34,10 +50,11 @@ pub fn stochastic_round_bf16(x: f32, rng: &CounterRng, counter: u32) -> f32 {
     f32::from_bits(bits.wrapping_add(r) & 0xFFFF_0000)
 }
 
-/// Round a slice onto the bf16 grid in place (RNE), in parallel.
+/// Round a slice onto the bf16 grid in place (RNE), in parallel (SIMD
+/// within each chunk; bit-identical to [`round_slice_serial`]).
 pub fn round_slice(x: &mut [f32]) {
     par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
-        round_slice_serial(chunk)
+        backend::bf16_round(chunk)
     });
 }
 
@@ -55,7 +72,7 @@ pub fn round_slice_serial(x: &mut [f32]) {
 pub fn stochastic_round_slice(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
     let rng = *rng;
     par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |off, chunk| {
-        stochastic_round_slice_serial(chunk, &rng, counter_base.wrapping_add(off as u32))
+        backend::bf16_stochastic_round(chunk, &rng, counter_base.wrapping_add(off as u32))
     });
 }
 
@@ -73,7 +90,7 @@ pub fn stochastic_round_slice_serial(x: &mut [f32], rng: &CounterRng, counter_ba
 pub fn scaled_round_into(x: &[f32], out: &mut [f32], scale: f32) {
     debug_assert_eq!(x.len(), out.len());
     par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
-        scaled_round_into_serial(&x[off..off + chunk.len()], chunk, scale)
+        backend::bf16_scaled_round(&x[off..off + chunk.len()], chunk, scale)
     });
 }
 
@@ -91,7 +108,7 @@ pub fn scaled_round_into_serial(x: &[f32], out: &mut [f32], scale: f32) {
 pub fn accumulate_bf16(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     par::for_each_slice_mut(acc, par::DEFAULT_GRAIN, |off, chunk| {
-        accumulate_bf16_serial(chunk, &x[off..off + chunk.len()])
+        backend::bf16_accumulate(chunk, &x[off..off + chunk.len()])
     });
 }
 
@@ -108,9 +125,7 @@ pub fn accumulate_bf16_serial(acc: &mut [f32], x: &[f32]) {
 pub fn pack(x: &[f32], out: &mut [u16]) {
     debug_assert_eq!(x.len(), out.len());
     par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o = (x[off + j].to_bits() >> 16) as u16;
-        }
+        backend::bf16_pack(&x[off..off + chunk.len()], chunk)
     });
 }
 
@@ -118,9 +133,7 @@ pub fn pack(x: &[f32], out: &mut [u16]) {
 pub fn unpack(bits: &[u16], out: &mut [f32]) {
     debug_assert_eq!(bits.len(), out.len());
     par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o = f32::from_bits((bits[off + j] as u32) << 16);
-        }
+        backend::bf16_unpack(&bits[off..off + chunk.len()], chunk)
     });
 }
 

@@ -5,27 +5,34 @@
 //! (5 exponent bits, bias 15, max 57344) for activation gradients.
 //! With just-in-time absmax scaling no value is ever clipped (§3).
 
+use super::backend;
 use super::philox::CounterRng;
 use crate::util::par;
 
 /// An FP8 floating-point format description.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fp8Format {
+    /// Format name ("e4m3" / "e5m2").
     pub name: &'static str,
+    /// Exponent field width.
     pub exp_bits: u32,
+    /// Mantissa field width.
     pub man_bits: u32,
+    /// Exponent bias.
     pub bias: i32,
     /// Largest finite magnitude, as f32 (exact).
     pub max_val_bits: u32,
 }
 
 impl Fp8Format {
+    /// Largest finite magnitude as an exact f32.
     pub const fn max_val(&self) -> f32 {
         f32::from_bits(self.max_val_bits)
     }
 }
 
 // `max_val` can't be a const f32 field pre-1.83 float-const rules; store bits.
+/// E4M3 "fn": bias 7, max 448, no inf — forward tensors (§3).
 pub const E4M3: Fp8Format = Fp8Format {
     name: "e4m3",
     exp_bits: 4,
@@ -34,6 +41,7 @@ pub const E4M3: Fp8Format = Fp8Format {
     max_val_bits: 0x43E0_0000, // 448.0
 };
 
+/// E5M2: bias 15, max 57344 — optional activation gradients.
 pub const E5M2: Fp8Format = Fp8Format {
     name: "e5m2",
     exp_bits: 5,
@@ -65,15 +73,13 @@ impl Fp8Format {
     }
 
     /// Quantize a slice in place given a precomputed absmax; returns
-    /// scale. Elementwise → the parallel chunking is bit-identical to
-    /// [`Self::quantize_with_amax_serial`].
+    /// scale. Elementwise → the parallel chunking (SIMD within each
+    /// chunk) is bit-identical to [`Self::quantize_with_amax_serial`].
     pub fn quantize_with_amax(&self, x: &mut [f32], amax: f32) -> f32 {
         let scale = super::absmax_scale(amax, *self);
         let fmt = *self;
         par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
-            for v in chunk.iter_mut() {
-                *v = fmt.round(*v / scale);
-            }
+            backend::fp8_round_scaled(fmt, chunk, scale)
         });
         scale
     }
@@ -202,9 +208,11 @@ pub fn stochastic_round_fp8(fmt: Fp8Format, x: f32, rng_draw: u32) -> f32 {
 }
 
 /// Round an entire slice onto the FP8 grid (no scaling), in parallel.
+/// The SIMD tier runs the scaled kernel with `scale = 1.0` — `v / 1.0`
+/// is bit-exactly `v`, so this matches [`round_slice_serial`].
 pub fn round_slice(fmt: Fp8Format, x: &mut [f32]) {
     par::for_each_slice_mut(x, par::DEFAULT_GRAIN, |_, chunk| {
-        round_slice_serial(fmt, chunk)
+        backend::fp8_round_scaled(fmt, chunk, 1.0)
     });
 }
 
@@ -222,9 +230,7 @@ pub fn encode_tensor(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
     let scale = super::absmax_scale(amax, fmt);
     let mut bytes = vec![0u8; x.len()];
     par::for_each_slice_mut(&mut bytes, par::DEFAULT_GRAIN, |off, chunk| {
-        for (j, b) in chunk.iter_mut().enumerate() {
-            *b = fmt.encode(fmt.round(x[off + j] / scale));
-        }
+        backend::fp8_encode_scaled(fmt, &x[off..off + chunk.len()], scale, chunk)
     });
     (bytes, scale)
 }
@@ -244,9 +250,7 @@ pub fn encode_tensor_serial(fmt: Fp8Format, x: &[f32]) -> (Vec<u8>, f32) {
 pub fn decode_tensor(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     assert_eq!(bytes.len(), out.len());
     par::for_each_slice_mut(out, par::DEFAULT_GRAIN, |off, chunk| {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o = fmt.decode(bytes[off + j]) * scale;
-        }
+        backend::fp8_decode_scaled(fmt, &bytes[off..off + chunk.len()], scale, chunk)
     });
 }
 

@@ -5,7 +5,15 @@
 //! `rust/tests/integration.rs` and the python parity fixtures enforce it.
 //! All buffers store f32 values that lie exactly on the lower-precision
 //! grid (same emulation strategy as the Pallas kernels — see ref.py).
+//!
+//! Execution tiers (outer to inner): `util::par` cuts tensors into
+//! per-worker chunks, and each chunk body runs on the [`backend`] SIMD
+//! tier (AVX2/NEON, or the scalar reference under `LLMQ_SIMD=scalar`).
+//! Both tiers preserve bit-identity to the single-threaded scalar
+//! `*_serial` references — the contract is written down in
+//! `docs/NUMERICS.md`.
 
+pub mod backend;
 pub mod bf16;
 pub mod fp8;
 pub mod philox;
@@ -17,20 +25,30 @@ pub use philox::CounterRng;
 use crate::util::par;
 
 /// Tensor-level absmax (paper §3: just-in-time scaling statistics).
-/// Parallel over the fixed reduction grid; `max` is order-insensitive,
-/// so the result is bit-identical to [`absmax_serial`] at any thread
-/// count.
+/// Parallel over the fixed reduction grid, SIMD within each chunk;
+/// `max` is order-insensitive, so the result is bit-identical to
+/// [`absmax_serial`] at any thread count and lane width.
+///
+/// # Examples
+///
+/// ```
+/// use llmq::precision::{absmax, absmax_serial};
+/// let x = [0.5f32, -3.0, 2.25, -0.0];
+/// assert_eq!(absmax(&x), 3.0);
+/// assert_eq!(absmax(&x).to_bits(), absmax_serial(&x).to_bits());
+/// assert_eq!(absmax(&[]), 0.0); // empty tensors scale by 1.0 downstream
+/// ```
 pub fn absmax(x: &[f32]) -> f32 {
     par::map_reduce(
         x.len(),
         par::REDUCE_CHUNK,
         0.0f32,
-        |r| absmax_serial(&x[r]),
+        |r| backend::absmax(&x[r]),
         f32::max,
     )
 }
 
-/// Single-threaded absmax reference.
+/// Single-threaded scalar absmax reference (the spec for [`absmax`]).
 pub fn absmax_serial(x: &[f32]) -> f32 {
     x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }

@@ -12,15 +12,18 @@
 /// stochastic rounding.
 #[derive(Debug, Clone, Copy)]
 pub struct CounterRng {
+    /// Stream key; streams with different keys never collide.
     pub key: u32,
 }
 
 impl CounterRng {
+    /// RNG for stream `key`.
     pub fn new(key: u32) -> Self {
         Self { key }
     }
 
     #[inline]
+    /// The draw for `counter`: murmur3 finalizer over `(counter, key)`.
     pub fn next_u32(&self, counter: u32) -> u32 {
         let mut x = counter.wrapping_mul(0x9E37_79B9);
         x ^= self.key;

@@ -29,6 +29,7 @@ pub enum Recompute {
 }
 
 impl Recompute {
+    /// Every level, in escalation order (the planner's search axis).
     pub const ALL: [Recompute; 5] = [
         Recompute::None,
         Recompute::Swiglu,
@@ -37,6 +38,7 @@ impl Recompute {
         Recompute::Block,
     ];
 
+    /// Table-7 display label.
     pub fn label(&self) -> &'static str {
         match self {
             Recompute::None => "-",

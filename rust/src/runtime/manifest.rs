@@ -11,44 +11,74 @@ use anyhow::{Context, Result};
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
+/// Executable model shape as compiled into the artifacts.
 pub struct ModelCfg {
+    /// Preset name.
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// SwiGLU hidden width.
     pub d_ff: usize,
+    /// Sequence length (tokens).
     pub seq_len: usize,
+    /// RoPE base frequency.
     pub rope_theta: f64,
+    /// RMSNorm epsilon.
     pub norm_eps: f64,
 }
 
 #[derive(Debug, Clone)]
+/// One named parameter tensor in the flat state layout.
 pub struct ParamEntry {
+    /// Parameter name (python-side ordering).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Start offset in the flat buffer (elements).
     pub offset: usize,
+    /// Element count.
     pub numel: usize,
 }
 
 #[derive(Debug, Clone)]
+/// The parsed artifact manifest — the python↔rust ABI.
 pub struct Manifest {
+    /// Model shape.
     pub config: ModelCfg,
+    /// Compiled microbatch size (sequences).
     pub batch: usize,
+    /// LM-head loss chunking factor.
     pub lmhead_chunks: usize,
+    /// Attention chunking factor.
     pub attn_chunks: usize,
+    /// Optimizer-shard count the artifacts were built for.
     pub world: usize,
+    /// Flat-layout parameter table.
     pub params: Vec<ParamEntry>,
+    /// Exact parameter count.
     pub total_numel: usize,
+    /// Parameter count padded to `world` equal shards.
     pub padded_numel: usize,
+    /// Elements per optimizer shard.
     pub shard_numel: usize,
+    /// Compile-time policy strings (recompute etc.).
     pub policies: Vec<String>,
+    /// Hash guarding python↔rust ABI drift.
     pub abi_hash: String,
+    /// Artifact key → HLO file name.
     pub artifacts: HashMap<String, String>,
 }
 
 impl Manifest {
+    /// Read + parse + validate a manifest file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
@@ -58,6 +88,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Parse a manifest from JSON text.
     pub fn from_json(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let c = j.get("config")?;
@@ -138,6 +169,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// File name for an artifact key.
     pub fn artifact(&self, key: &str) -> Result<&str> {
         self.artifacts
             .get(key)
@@ -145,6 +177,7 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("no artifact {key} in manifest"))
     }
 
+    /// `batch × seq_len`.
     pub fn tokens_per_microbatch(&self) -> usize {
         self.batch * self.config.seq_len
     }

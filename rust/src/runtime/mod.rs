@@ -29,6 +29,7 @@ pub use ::xla::{Literal, PjRtBuffer};
 /// A loaded, compiled HLO executable.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact file name (diagnostics).
     pub name: String,
 }
 
@@ -71,6 +72,7 @@ impl Executable {
 
 /// The PJRT client plus a cache of compiled executables.
 pub struct Runtime {
+    /// The PJRT client (CPU platform in this reproduction).
     pub client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
@@ -87,10 +89,12 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Directory the runtime loads artifacts from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }

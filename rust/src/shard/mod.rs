@@ -8,6 +8,7 @@
 /// Sharding configuration for a multi-GPU run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardConfig {
+    /// Worker (virtual device) count.
     pub world: usize,
     /// Optimizer states sharded — always true in LLMQ when world > 1.
     pub optimizer: bool,
@@ -20,6 +21,7 @@ pub struct ShardConfig {
 }
 
 impl ShardConfig {
+    /// The world-1 configuration (no sharding).
     pub fn single() -> Self {
         Self {
             world: 1,
@@ -76,6 +78,7 @@ impl ShardConfig {
         }
     }
 
+    /// Per-device fraction of the weights.
     pub fn weight_frac(&self) -> f64 {
         if self.weights {
             1.0 / self.world as f64
@@ -84,6 +87,7 @@ impl ShardConfig {
         }
     }
 
+    /// Per-device fraction of the gradients.
     pub fn grad_frac(&self) -> f64 {
         if self.grads {
             1.0 / self.world as f64
@@ -92,6 +96,7 @@ impl ShardConfig {
         }
     }
 
+    /// Table-7 shorthand ("Z1", "Z1+W", "Z1+WG").
     pub fn label(&self) -> String {
         if self.world == 1 {
             return "-".into();

@@ -16,24 +16,31 @@ pub const LAUNCH_OVERHEAD_S: f64 = 6e-6;
 /// Fused non-GEMM kernels per transformer layer (norm+res, swiglu, rope,
 /// quantize×4, transpose-quantize×2 in FP8...).
 pub const KERNELS_PER_LAYER_BF16: f64 = 10.0;
+/// As above in FP8 (extra quantize / transpose-quantize kernels).
 pub const KERNELS_PER_LAYER_FP8: f64 = 16.0;
 
 /// NCCL-like collective model (paper §3.2 "cudaMemcpy-based
 /// communication"): ring collectives run as SM kernels with poor PCIe
 /// utilization on host-staged consumer topologies.
 pub const NCCL_UTIL_HOST_STAGED: f64 = 0.15;
+/// NCCL ring utilization of the PCIe link with peer-to-peer.
 pub const NCCL_UTIL_P2P: f64 = 0.75;
 /// Copy-engine (cudaMemcpy) utilization of the PCIe link.
 pub const MEMCPY_UTIL: f64 = 0.88;
 
 #[derive(Debug, Clone)]
+/// Per-device cost model for one (node, precision) setting.
 pub struct CostModel {
+    /// The accelerator (clone of `node.gpu`).
     pub gpu: GpuSpec,
+    /// Node topology.
     pub node: NodeTopology,
+    /// FP8 block-GEMMs enabled.
     pub fp8: bool,
 }
 
 impl CostModel {
+    /// Cost model for a node and GEMM precision.
     pub fn new(node: NodeTopology, fp8: bool) -> Self {
         Self {
             gpu: node.gpu.clone(),
@@ -152,6 +159,7 @@ impl CostModel {
         m.block_params() as f64 * if self.fp8 { 1.0 } else { 2.0 }
     }
 
+    /// Gradient bytes produced per transformer layer (bf16).
     pub fn layer_grad_bytes(&self, m: &ModelPreset) -> f64 {
         m.block_params() as f64 * 2.0 // grads always BF16
     }

@@ -11,11 +11,14 @@ use std::collections::HashMap;
 /// Stream identity: (device, lane).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Stream {
+    /// Virtual device index.
     pub device: usize,
+    /// Execution lane on that device.
     pub lane: Lane,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+/// Execution-lane classes of one device.
 pub enum Lane {
     /// Streaming multiprocessors (compute kernels, NCCL kernels).
     Sm,
@@ -28,20 +31,25 @@ pub enum Lane {
 }
 
 impl Stream {
+    /// Compute stream of `device`.
     pub fn sm(device: usize) -> Self {
         Stream { device, lane: Lane::Sm }
     }
+    /// Host→device copy-engine stream of `device`.
     pub fn ce_in(device: usize) -> Self {
         Stream { device, lane: Lane::CeIn }
     }
+    /// Device→host copy-engine stream of `device`.
     pub fn ce_out(device: usize) -> Self {
         Stream { device, lane: Lane::CeOut }
     }
+    /// Host-thread stream of `device`.
     pub fn host(device: usize) -> Self {
         Stream { device, lane: Lane::Host }
     }
 }
 
+/// Dense task handle returned by [`Engine::push`].
 pub type TaskId = usize;
 
 #[derive(Debug, Clone, Copy)]
@@ -72,14 +80,20 @@ pub struct Engine {
 }
 
 #[derive(Debug)]
+/// Computed schedule: per-task times + per-stream utilization.
 pub struct Schedule {
+    /// Task finish times (s).
     pub finish: Vec<f64>,
+    /// Task start times (s).
     pub start: Vec<f64>,
+    /// Latest finish time (s).
     pub makespan: f64,
+    /// Busy seconds per stream.
     pub busy: HashMap<Stream, f64>,
 }
 
 impl Engine {
+    /// Empty engine.
     pub fn new() -> Self {
         Self::default()
     }
@@ -96,6 +110,7 @@ impl Engine {
         self.push_tagged(stream, dur, deps, label, 0)
     }
 
+    /// [`Engine::push`] with a breakdown tag (compute/comm/offload/opt).
     pub fn push_tagged(
         &mut self,
         stream: Stream,
@@ -147,6 +162,7 @@ impl Engine {
         self.push(stream, 0.0, deps, "barrier")
     }
 
+    /// Submitted task count.
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
     }

@@ -37,6 +37,7 @@ pub enum CommBackend {
 }
 
 impl CommBackend {
+    /// Parse a CLI backend name (`nccl`, `gather`, `scatter`, `full`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "nccl" | "none" => CommBackend::Nccl,
@@ -47,14 +48,17 @@ impl CommBackend {
         })
     }
 
+    /// Does the all-gather run on copy engines?
     pub fn gather_is_memcpy(&self) -> bool {
         matches!(self, CommBackend::MemcpyGather | CommBackend::MemcpyFull)
     }
 
+    /// Does the reduce-scatter run on copy engines?
     pub fn scatter_is_memcpy(&self) -> bool {
         matches!(self, CommBackend::MemcpyScatter | CommBackend::MemcpyFull)
     }
 
+    /// Table-5 column label.
     pub fn label(&self) -> &'static str {
         match self {
             CommBackend::Nccl => "None",
@@ -68,22 +72,34 @@ impl CommBackend {
 /// Full step configuration.
 #[derive(Debug, Clone)]
 pub struct StepConfig {
+    /// Sequences per device per microbatch.
     pub micro_batch: usize,
+    /// Microbatches per optimizer step.
     pub grad_accum: usize,
+    /// Activation recomputation level.
     pub recompute: Recompute,
+    /// Host-offloaded tensor classes.
     pub offload: OffloadConfig,
+    /// ZeRO sharding levels.
     pub shard: ShardConfig,
+    /// Collective implementation.
     pub comm: CommBackend,
+    /// Offload transfer mode.
     pub transfer_mode: TransferMode,
 }
 
 /// Simulation output.
 #[derive(Debug, Clone)]
 pub struct StepResult {
+    /// Simulated wall-clock per optimizer step (s).
     pub step_s: f64,
+    /// Training throughput.
     pub tokens_per_s: f64,
+    /// Model-FLOPs utilization (the paper's definition).
     pub mfu: f64,
+    /// Tokens consumed per step.
     pub step_tokens: usize,
+    /// Exposed-time decomposition.
     pub breakdown: StepBreakdown,
 }
 

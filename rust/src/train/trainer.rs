@@ -25,13 +25,19 @@ use crate::util::par;
 /// Per-step statistics.
 #[derive(Debug, Clone)]
 pub struct StepStats {
+    /// 1-based optimizer step.
     pub step: usize,
+    /// Mean training loss of the step.
     pub loss: f32,
+    /// Validation loss (at the eval cadence).
     pub val_loss: Option<f32>,
+    /// Pre-clip global gradient norm.
     pub grad_norm: f32,
+    /// Throughput over the step wall-clock.
     pub tokens_per_s: f64,
 }
 
+/// Render step stats as CSV (header + one row per step).
 pub fn stats_to_csv(stats: &[StepStats]) -> String {
     // ~40 bytes/row of digits; pre-size so the row loop never reallocates.
     let mut s = String::with_capacity(48 + stats.len() * 64);
@@ -86,24 +92,32 @@ fn le_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
 
 /// Real-training coordinator over one executable preset.
 pub struct Trainer {
+    /// PJRT runtime (artifact loader + executor).
     pub rt: Runtime,
+    /// The artifact manifest (ABI).
     pub man: Manifest,
+    /// Run hyper-parameters.
     pub cfg: TrainConfig,
     exe_train: std::sync::Arc<Executable>,
     exe_fwd: std::sync::Arc<Executable>,
     /// Flat bf16-grid state, padded to `world * shard` (master copy).
     pub params: Vec<f32>,
+    /// First-moment state (bf16 grid).
     pub m: Vec<f32>,
+    /// Second-moment state (bf16 grid).
     pub v: Vec<f32>,
     /// Persistent per-step arenas (fused pipeline; allocated once here).
     ws: StepWorkspace,
     /// Device-resident parameter buffers (invalidated by optimizer steps).
     param_bufs: Option<Vec<xla::PjRtBuffer>>,
+    /// Completed optimizer steps.
     pub step: u32,
+    /// SR counter base; advances by `3 · n` per step.
     pub counter: u32,
 }
 
 impl Trainer {
+    /// Build a trainer for an executable preset rooted at `artifacts`.
     pub fn new(artifacts: &str, preset: &str, cfg: TrainConfig) -> Result<Self> {
         let rt = Runtime::new(artifacts)?;
         let man = rt.manifest(preset)?;
@@ -141,6 +155,7 @@ impl Trainer {
         Ok(())
     }
 
+    /// Tokens consumed per optimizer step.
     pub fn tokens_per_step(&self) -> usize {
         self.man.tokens_per_microbatch() * self.cfg.grad_accum * self.cfg.world
     }
@@ -333,6 +348,7 @@ impl Trainer {
 
     // ----- checkpoints ------------------------------------------------------
 
+    /// Write params / moments / step / counter as little-endian binary.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
         let n = self.params.len();
         let mut bytes = vec![0u8; 16 + 12 * n];
@@ -347,6 +363,7 @@ impl Trainer {
         Ok(())
     }
 
+    /// Restore a checkpoint written by [`Trainer::save_checkpoint`].
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let bytes = std::fs::read(path)?;
         anyhow::ensure!(bytes.len() >= 16, "truncated checkpoint");

@@ -45,16 +45,19 @@ pub struct StepWorkspace {
 }
 
 impl StepWorkspace {
+    /// Workspace sized for `world` devices × `n` padded elements.
     pub fn new(world: usize, n: usize) -> Self {
         let mut ws = Self::default();
         ws.ensure(world, n);
         ws
     }
 
+    /// Device count the arenas are sized for.
     pub fn world(&self) -> usize {
         self.world
     }
 
+    /// Padded element count per buffer.
     pub fn n(&self) -> usize {
         self.n
     }

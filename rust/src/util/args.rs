@@ -5,6 +5,7 @@ use std::collections::HashMap;
 /// Parsed command line: a subcommand plus `--key value` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare (non-`--`) argument.
     pub subcommand: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
@@ -16,6 +17,7 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an argument iterator (without argv[0]).
     pub fn parse(iter: impl IntoIterator<Item = String>) -> Self {
         let mut out = Args::default();
         let mut it = iter.into_iter().peekable();
@@ -40,26 +42,32 @@ impl Args {
         out
     }
 
+    /// Raw option value.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String option with default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `usize` option with default.
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `u32` option with default.
     pub fn u32(&self, key: &str, default: u32) -> u32 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `f32` option with default.
     pub fn f32(&self, key: &str, default: f32) -> f32 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Was a bare `--flag` present?
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -6,14 +6,20 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations run.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub median: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl BenchStats {
+    /// One human-readable stats line.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10.3?} median   {:>10.3?} mean   {:>10.3?} min   ({} iters)",
@@ -24,8 +30,11 @@ impl BenchStats {
 
 /// Runs closures with warmup and prints stats.
 pub struct Bencher {
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Timed iterations per benchmark.
     pub iters: usize,
+    /// Stats in benchmark order.
     pub results: Vec<BenchStats>,
 }
 
@@ -40,6 +49,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Harness with explicit warmup / iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Self {
             warmup,

@@ -7,16 +7,24 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value.
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number, as f64.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object.
     Obj(HashMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -31,6 +39,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Required object member.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key}")),
@@ -38,6 +47,7 @@ impl Json {
         }
     }
 
+    /// Optional object member.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -45,6 +55,7 @@ impl Json {
         }
     }
 
+    /// This value as a string.
     pub fn str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn num(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -59,10 +71,12 @@ impl Json {
         }
     }
 
+    /// This value as a `usize` (truncating).
     pub fn usize(&self) -> Result<usize> {
         Ok(self.num()? as usize)
     }
 
+    /// This value as an array slice.
     pub fn arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),

@@ -20,6 +20,13 @@
 //! available parallelism); [`with_threads`] overrides it for the current
 //! thread, which is how the equivalence tests pin 1/2/8 workers without
 //! process-global env mutation.
+//!
+//! Beneath this layer sits the `precision::backend` SIMD tier
+//! (`LLMQ_SIMD`): chunk bodies of the codec hot paths run AVX2/NEON
+//! kernels pinned bit-identical to their scalar references, and
+//! [`for_each_slice_mut`] aligns chunk boundaries to [`SIMD_ALIGN`] so
+//! those kernels see whole vectors (alignment is a pure scheduling
+//! choice — the elementwise contract makes results boundary-invariant).
 
 use std::cell::Cell;
 use std::ops::Range;
@@ -35,6 +42,14 @@ pub const DEFAULT_GRAIN: usize = 16 * 1024;
 /// boundaries — and therefore floating-point results — do not depend on
 /// the worker count.
 pub const REDUCE_CHUNK: usize = 64 * 1024;
+
+/// Elementwise chunk boundaries are rounded to multiples of this (16 f32
+/// = one 64-byte cache line, and a multiple of every SIMD lane width in
+/// `precision::backend`), so each worker's vector main loop sees at most
+/// one sub-lane remainder — at the tensor tail — instead of one per
+/// worker. Elementwise kernels are keyed by global element index, so
+/// boundary placement never changes results.
+pub const SIMD_ALIGN: usize = 16;
 
 thread_local! {
     static THREAD_OVERRIDE: Cell<usize> = Cell::new(0);
@@ -106,6 +121,22 @@ pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// [`split_even`] with chunk boundaries rounded to multiples of `align`
+/// (the final chunk absorbs the sub-`align` tail). Used by
+/// [`for_each_slice_mut`] with [`SIMD_ALIGN`] so per-worker chunks stay
+/// vector-friendly; covering and ordered exactly like `split_even`.
+pub fn split_even_aligned(len: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
+    let align = align.max(1);
+    if len == 0 {
+        return vec![];
+    }
+    let blocks = (len + align - 1) / align;
+    split_even(blocks, parts)
+        .into_iter()
+        .map(|r| (r.start * align)..(r.end * align).min(len))
+        .collect()
+}
+
 /// How many workers a job of `len` elements warrants at grain `grain`
 /// (the shared grain policy — kernels should use this rather than
 /// re-deriving it from [`num_threads`]).
@@ -131,7 +162,7 @@ where
         f(0, data);
         return;
     }
-    let ranges = split_even(len, threads);
+    let ranges = split_even_aligned(len, threads, SIMD_ALIGN);
     let n_ranges = ranges.len();
     std::thread::scope(|s| {
         let mut tail = data;
@@ -364,6 +395,27 @@ mod tests {
                     let max = rs.iter().map(|r| r.len()).max().unwrap();
                     let min = rs.iter().map(|r| r.len()).min().unwrap();
                     assert!(max - min <= 1, "unbalanced: {max} vs {min}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_even_aligned_covers_with_aligned_boundaries() {
+        for len in [0usize, 1, 15, 16, 17, 1000, 100_003] {
+            for parts in [1usize, 2, 3, 8, 2000] {
+                let rs = split_even_aligned(len, parts, 16);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len {len} parts {parts}");
+                let mut next = 0;
+                for (i, r) in rs.iter().enumerate() {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    assert_eq!(r.start % 16, 0, "unaligned start");
+                    if i + 1 < rs.len() {
+                        assert_eq!(r.end % 16, 0, "unaligned interior boundary");
+                    }
+                    next = r.end;
                 }
             }
         }

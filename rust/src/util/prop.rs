@@ -11,6 +11,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator for case `case` of a run seeded `seed`.
     pub fn new(seed: u32, case: u32) -> Self {
         Self {
             rng: CounterRng::new(seed),
@@ -24,11 +25,13 @@ impl Gen {
         v
     }
 
+    /// Uniform `usize` in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(hi >= lo);
         lo + (self.draw() as usize) % (hi - lo + 1)
     }
 
+    /// Uniform `f32` in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (self.draw() as f32 / u32::MAX as f32) * (hi - lo)
     }
@@ -41,10 +44,12 @@ impl Gen {
         sign * 10f32.powf(e)
     }
 
+    /// Vector of `n` uniform draws.
     pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..n).map(|_| self.f32_in(lo, hi)).collect()
     }
 
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         self.draw() & 1 == 1
     }

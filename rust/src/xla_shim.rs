@@ -37,22 +37,27 @@ pub struct Literal {
 }
 
 impl Literal {
+    /// Host literal from a slice (shim: placeholder handle).
     pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
         Literal { _private: () }
     }
 
+    /// Scalar literal (shim: placeholder handle).
     pub fn scalar(_v: f32) -> Literal {
         Literal { _private: () }
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         unavailable()
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         unavailable()
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
         unavailable()
     }
@@ -64,6 +69,7 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Shim stub — always returns [`Error`].
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }
@@ -75,10 +81,12 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
+    /// Shim stub — always returns [`Error`].
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         unavailable()
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         unavailable()
     }
@@ -90,18 +98,22 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Shim stub — always returns [`Error`].
     pub fn cpu() -> Result<PjRtClient, Error> {
         unavailable()
     }
 
+    /// Placeholder platform name.
     pub fn platform_name(&self) -> String {
         "unavailable (xla shim)".to_string()
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         unavailable()
     }
 
+    /// Shim stub — always returns [`Error`].
     pub fn buffer_from_host_buffer<T: Copy>(
         &self,
         _data: &[T],
@@ -118,6 +130,7 @@ pub struct HloModuleProto {
 }
 
 impl HloModuleProto {
+    /// Shim stub — always returns [`Error`].
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         unavailable()
     }
@@ -129,6 +142,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module (shim: placeholder).
     pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
         XlaComputation { _private: () }
     }

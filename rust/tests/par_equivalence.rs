@@ -1,8 +1,12 @@
 //! Parallelism-correctness suite for the parallel execution layer
-//! (`util::par`): every parallel hot path must produce results
-//! bit-identical to its single-threaded reference at 1, 2 and 8 worker
-//! threads — including empty and non-chunk-aligned lengths. The one
-//! documented exception is `global_norm`, whose fixed-grid tree
+//! (`util::par`) and the SIMD tier beneath it (`precision::backend`):
+//! every parallel hot path must produce results bit-identical to its
+//! single-threaded scalar reference at 1, 2 and 8 worker threads —
+//! including empty, lane-remainder and non-chunk-aligned lengths — and
+//! every vector kernel must match the scalar spec bitwise whatever
+//! backend `LLMQ_SIMD`/detection resolves (the arch-direct tests at the
+//! bottom pin the AVX2/NEON kernels even when dispatch is scalar). The
+//! one documented exception is `global_norm`, whose fixed-grid tree
 //! reduction is bit-identical *across thread counts* but only
 //! ULP-bounded against the unchunked serial fold.
 
@@ -15,6 +19,12 @@ const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 
 /// Test lengths: empty, single, sub-grain, non-aligned multi-chunk.
 const LENS: [usize; 5] = [0, 1, 1023, 65_537, 100_003];
+
+/// Lane-remainder sweep for the SIMD kernels: 0, 1, lane−1, lane, lane+1
+/// for both lane widths (NEON 4, AVX2 8), a couple of odd multi-vector
+/// sizes, and non-`REDUCE_CHUNK`-aligned lengths (`REDUCE_CHUNK` is
+/// 65 536, `SIMD_ALIGN` is 16 — 65 537 and 100 003 straddle both).
+const SIMD_LENS: [usize; 13] = [0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 65_537, 100_003];
 
 fn data(n: usize, salt: u32) -> Vec<f32> {
     let rng = CounterRng::new(salt);
@@ -231,6 +241,365 @@ fn all_gather_parallel_matches_any_thread_count() {
             let mut out = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
             par::with_threads(t, || llmq::collectives::all_gather_memcpy(&shards, &mut out));
             assert_eq!(out.buffers, reference.buffers, "world={world} t={t}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD tier (precision::backend): dispatch-level and arch-direct kernels
+// must match the scalar spec bitwise at every lane remainder, including
+// IEEE special values (NaN, ±0, ±inf, subnormals, saturating magnitudes).
+// ---------------------------------------------------------------------------
+
+use llmq::precision::{absmax_serial, backend, round_to_bf16, stochastic_round_bf16, Fp8Format};
+
+/// Random data with IEEE special values planted in the leading slots
+/// (when the length allows) so every kernel's NaN/zero/saturation blends
+/// are exercised at every lane remainder.
+fn simd_data(n: usize, salt: u32) -> Vec<f32> {
+    let mut x = data(n, salt);
+    let specials = [
+        f32::NAN,
+        -f32::NAN,
+        0.0,
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        1e-40,
+        -1e-40,
+        448.0,
+        -448.0,
+        57_344.0,
+        -1e9,
+        1e9,
+    ];
+    for (slot, &s) in x.iter_mut().zip(specials.iter()) {
+        *slot = s;
+    }
+    x
+}
+
+/// One backend implementation under test (the safe dispatch layer, or an
+/// arch kernel set behind thin wrappers).
+struct BackendFns {
+    label: &'static str,
+    absmax: fn(&[f32]) -> f32,
+    fp8_round_scaled: fn(Fp8Format, &mut [f32], f32),
+    fp8_encode_scaled: fn(Fp8Format, &[f32], f32, &mut [u8]),
+    fp8_decode_scaled: fn(Fp8Format, &[u8], f32, &mut [f32]),
+    bf16_round: fn(&mut [f32]),
+    bf16_stochastic_round: fn(&mut [f32], &CounterRng, u32),
+    bf16_scaled_round: fn(&[f32], &mut [f32], f32),
+    bf16_accumulate: fn(&mut [f32], &[f32]),
+    bf16_pack: fn(&[f32], &mut [u16]),
+    bf16_unpack: fn(&[u16], &mut [f32]),
+    sr_reduce_block: fn(&[Vec<f32>], usize, &mut [f32], Option<f32>, &CounterRng, u32),
+}
+
+/// Pin every kernel of `b` bit-identical to the scalar spec across the
+/// `SIMD_LENS` lane-remainder sweep.
+fn check_backend_matches_scalar_spec(b: &BackendFns) {
+    let rng = CounterRng::new(0x11A17);
+    let lb = b.label;
+    for n in SIMD_LENS {
+        let base = simd_data(n, 0x51);
+
+        assert_eq!(
+            (b.absmax)(&base).to_bits(),
+            absmax_serial(&base).to_bits(),
+            "{lb} absmax n={n}"
+        );
+
+        for fmt in [E4M3, E5M2] {
+            for scale in [1.0f32, 0.37] {
+                let mut want = base.clone();
+                for v in want.iter_mut() {
+                    *v = fmt.round(*v / scale);
+                }
+                let mut got = base.clone();
+                (b.fp8_round_scaled)(fmt, &mut got, scale);
+                assert_eq!(bits(&got), bits(&want), "{lb} {} round n={n} s={scale}", fmt.name);
+
+                let want_b: Vec<u8> =
+                    base.iter().map(|&v| fmt.encode(fmt.round(v / scale))).collect();
+                let mut got_b = vec![0u8; n];
+                (b.fp8_encode_scaled)(fmt, &base, scale, &mut got_b);
+                assert_eq!(got_b, want_b, "{lb} {} encode n={n} s={scale}", fmt.name);
+
+                let mut want_d = vec![0f32; n];
+                for (o, &byte) in want_d.iter_mut().zip(&want_b) {
+                    *o = fmt.decode(byte) * scale;
+                }
+                let mut got_d = vec![0f32; n];
+                (b.fp8_decode_scaled)(fmt, &want_b, scale, &mut got_d);
+                assert_eq!(bits(&got_d), bits(&want_d), "{lb} {} decode n={n} s={scale}", fmt.name);
+            }
+        }
+
+        let mut want = base.clone();
+        bf16::round_slice_serial(&mut want);
+        let mut got = base.clone();
+        (b.bf16_round)(&mut got);
+        assert_eq!(bits(&got), bits(&want), "{lb} bf16 rne n={n}");
+
+        // counter bases straddling the u32 wrap
+        for cb in [0u32, 977, u32::MAX - 5] {
+            let mut want = base.clone();
+            bf16::stochastic_round_slice_serial(&mut want, &rng, cb);
+            let mut got = base.clone();
+            (b.bf16_stochastic_round)(&mut got, &rng, cb);
+            assert_eq!(bits(&got), bits(&want), "{lb} bf16 sr n={n} cb={cb}");
+        }
+
+        let mut want = vec![0f32; n];
+        bf16::scaled_round_into_serial(&base, &mut want, 0.25);
+        let mut got = vec![0f32; n];
+        (b.bf16_scaled_round)(&base, &mut got, 0.25);
+        assert_eq!(bits(&got), bits(&want), "{lb} bf16 scaled n={n}");
+
+        let add = data(n, 0xADD);
+        let mut want = base.clone();
+        bf16::accumulate_bf16_serial(&mut want, &add);
+        let mut got = base.clone();
+        (b.bf16_accumulate)(&mut got, &add);
+        assert_eq!(bits(&got), bits(&want), "{lb} bf16 acc n={n}");
+
+        let mut grid = base.clone();
+        bf16::round_slice_serial(&mut grid);
+        let want_p: Vec<u16> = grid.iter().map(|v| (v.to_bits() >> 16) as u16).collect();
+        let mut got_p = vec![0u16; n];
+        (b.bf16_pack)(&grid, &mut got_p);
+        assert_eq!(got_p, want_p, "{lb} pack n={n}");
+        let want_u: Vec<f32> = want_p
+            .iter()
+            .map(|&w| f32::from_bits((w as u32) << 16))
+            .collect();
+        let mut got_u = vec![0f32; n];
+        (b.bf16_unpack)(&want_p, &mut got_u);
+        assert_eq!(bits(&got_u), bits(&want_u), "{lb} unpack n={n}");
+
+        // SR reduce epilogue: world sizes, block offsets, scaled/unscaled
+        for world in [1usize, 2, 4] {
+            let srcs: Vec<Vec<f32>> = (0..world)
+                .map(|w| simd_data(n + 32, 0x70 + w as u32))
+                .collect();
+            for blk_base in [0usize, 5, 16] {
+                for scale in [None, Some(1.0f32 / 3.0)] {
+                    let acc0 = data(n, 0xACC);
+                    let mut want = acc0.clone();
+                    for (j, a) in want.iter_mut().enumerate() {
+                        let mut sum = *a;
+                        for s in &srcs {
+                            let g = s[blk_base + j];
+                            sum += match scale {
+                                Some(sc) => round_to_bf16(g * sc),
+                                None => g,
+                            };
+                        }
+                        *a = stochastic_round_bf16(
+                            sum,
+                            &rng,
+                            991u32.wrapping_add((blk_base + j) as u32),
+                        );
+                    }
+                    let mut got = acc0.clone();
+                    (b.sr_reduce_block)(&srcs, blk_base, &mut got, scale, &rng, 991);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{lb} sr_reduce world={world} n={n} base={blk_base} scale={scale:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Whatever backend `LLMQ_SIMD`/detection resolves for this process must
+/// match the scalar spec (trivially true when it resolves to scalar —
+/// CI runs the suite both ways).
+#[test]
+fn backend_dispatch_matches_scalar_spec_at_lane_remainders() {
+    check_backend_matches_scalar_spec(&BackendFns {
+        label: "dispatch",
+        absmax: backend::absmax,
+        fp8_round_scaled: backend::fp8_round_scaled,
+        fp8_encode_scaled: backend::fp8_encode_scaled,
+        fp8_decode_scaled: backend::fp8_decode_scaled,
+        bf16_round: backend::bf16_round,
+        bf16_stochastic_round: backend::bf16_stochastic_round,
+        bf16_scaled_round: backend::bf16_scaled_round,
+        bf16_accumulate: backend::bf16_accumulate,
+        bf16_pack: backend::bf16_pack,
+        bf16_unpack: backend::bf16_unpack,
+        sr_reduce_block: backend::sr_reduce_block,
+    });
+}
+
+/// Thin safe wrappers over the AVX2 kernels — sound only after the
+/// feature gate in the test below has confirmed AVX2.
+#[cfg(target_arch = "x86_64")]
+mod avx2_wrap {
+    use llmq::precision::backend::x86;
+    use llmq::precision::{CounterRng, Fp8Format};
+
+    pub fn absmax(x: &[f32]) -> f32 {
+        unsafe { x86::absmax(x) }
+    }
+    pub fn fp8_round_scaled(f: Fp8Format, x: &mut [f32], s: f32) {
+        unsafe { x86::fp8_round_scaled(f, x, s) }
+    }
+    pub fn fp8_encode_scaled(f: Fp8Format, x: &[f32], s: f32, o: &mut [u8]) {
+        unsafe { x86::fp8_encode_scaled(f, x, s, o) }
+    }
+    pub fn fp8_decode_scaled(f: Fp8Format, b: &[u8], s: f32, o: &mut [f32]) {
+        unsafe { x86::fp8_decode_scaled(f, b, s, o) }
+    }
+    pub fn bf16_round(x: &mut [f32]) {
+        unsafe { x86::bf16_round(x) }
+    }
+    pub fn bf16_stochastic_round(x: &mut [f32], r: &CounterRng, c: u32) {
+        unsafe { x86::bf16_stochastic_round(x, r, c) }
+    }
+    pub fn bf16_scaled_round(x: &[f32], o: &mut [f32], s: f32) {
+        unsafe { x86::bf16_scaled_round(x, o, s) }
+    }
+    pub fn bf16_accumulate(a: &mut [f32], x: &[f32]) {
+        unsafe { x86::bf16_accumulate(a, x) }
+    }
+    pub fn bf16_pack(x: &[f32], o: &mut [u16]) {
+        unsafe { x86::bf16_pack(x, o) }
+    }
+    pub fn bf16_unpack(b: &[u16], o: &mut [f32]) {
+        unsafe { x86::bf16_unpack(b, o) }
+    }
+    pub fn sr_reduce_block(
+        s: &[Vec<f32>],
+        base: usize,
+        blk: &mut [f32],
+        sc: Option<f32>,
+        r: &CounterRng,
+        c: u32,
+    ) {
+        unsafe { x86::sr_reduce_block(s, base, blk, sc, r, c) }
+    }
+}
+
+/// The AVX2 kernels themselves (not just whatever dispatch picked) are
+/// pinned to the scalar spec — this runs even under `LLMQ_SIMD=scalar`.
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn avx2_kernels_bit_identical_to_scalar_spec() {
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        eprintln!("skipping avx2 kernel pin: host CPU has no AVX2");
+        return;
+    }
+    check_backend_matches_scalar_spec(&BackendFns {
+        label: "avx2",
+        absmax: avx2_wrap::absmax,
+        fp8_round_scaled: avx2_wrap::fp8_round_scaled,
+        fp8_encode_scaled: avx2_wrap::fp8_encode_scaled,
+        fp8_decode_scaled: avx2_wrap::fp8_decode_scaled,
+        bf16_round: avx2_wrap::bf16_round,
+        bf16_stochastic_round: avx2_wrap::bf16_stochastic_round,
+        bf16_scaled_round: avx2_wrap::bf16_scaled_round,
+        bf16_accumulate: avx2_wrap::bf16_accumulate,
+        bf16_pack: avx2_wrap::bf16_pack,
+        bf16_unpack: avx2_wrap::bf16_unpack,
+        sr_reduce_block: avx2_wrap::sr_reduce_block,
+    });
+}
+
+/// Thin safe wrappers over the NEON kernels (NEON is mandatory on
+/// aarch64, so these are always sound there).
+#[cfg(target_arch = "aarch64")]
+mod neon_wrap {
+    use llmq::precision::backend::neon;
+    use llmq::precision::{CounterRng, Fp8Format};
+
+    pub fn absmax(x: &[f32]) -> f32 {
+        unsafe { neon::absmax(x) }
+    }
+    pub fn fp8_round_scaled(f: Fp8Format, x: &mut [f32], s: f32) {
+        unsafe { neon::fp8_round_scaled(f, x, s) }
+    }
+    pub fn fp8_encode_scaled(f: Fp8Format, x: &[f32], s: f32, o: &mut [u8]) {
+        unsafe { neon::fp8_encode_scaled(f, x, s, o) }
+    }
+    pub fn fp8_decode_scaled(f: Fp8Format, b: &[u8], s: f32, o: &mut [f32]) {
+        unsafe { neon::fp8_decode_scaled(f, b, s, o) }
+    }
+    pub fn bf16_round(x: &mut [f32]) {
+        unsafe { neon::bf16_round(x) }
+    }
+    pub fn bf16_stochastic_round(x: &mut [f32], r: &CounterRng, c: u32) {
+        unsafe { neon::bf16_stochastic_round(x, r, c) }
+    }
+    pub fn bf16_scaled_round(x: &[f32], o: &mut [f32], s: f32) {
+        unsafe { neon::bf16_scaled_round(x, o, s) }
+    }
+    pub fn bf16_accumulate(a: &mut [f32], x: &[f32]) {
+        unsafe { neon::bf16_accumulate(a, x) }
+    }
+    pub fn bf16_pack(x: &[f32], o: &mut [u16]) {
+        unsafe { neon::bf16_pack(x, o) }
+    }
+    pub fn bf16_unpack(b: &[u16], o: &mut [f32]) {
+        unsafe { neon::bf16_unpack(b, o) }
+    }
+    pub fn sr_reduce_block(
+        s: &[Vec<f32>],
+        base: usize,
+        blk: &mut [f32],
+        sc: Option<f32>,
+        r: &CounterRng,
+        c: u32,
+    ) {
+        unsafe { neon::sr_reduce_block(s, base, blk, sc, r, c) }
+    }
+}
+
+/// The NEON kernels pinned to the scalar spec, independent of dispatch.
+#[cfg(target_arch = "aarch64")]
+#[test]
+fn neon_kernels_bit_identical_to_scalar_spec() {
+    check_backend_matches_scalar_spec(&BackendFns {
+        label: "neon",
+        absmax: neon_wrap::absmax,
+        fp8_round_scaled: neon_wrap::fp8_round_scaled,
+        fp8_encode_scaled: neon_wrap::fp8_encode_scaled,
+        fp8_decode_scaled: neon_wrap::fp8_decode_scaled,
+        bf16_round: neon_wrap::bf16_round,
+        bf16_stochastic_round: neon_wrap::bf16_stochastic_round,
+        bf16_scaled_round: neon_wrap::bf16_scaled_round,
+        bf16_accumulate: neon_wrap::bf16_accumulate,
+        bf16_pack: neon_wrap::bf16_pack,
+        bf16_unpack: neon_wrap::bf16_unpack,
+        sr_reduce_block: neon_wrap::sr_reduce_block,
+    });
+}
+
+/// The parallel wrappers (now SIMD inside each chunk) still match their
+/// serial references at every thread count for the lane-remainder sweep
+/// — catches any interaction between `SIMD_ALIGN` chunking and kernels.
+#[test]
+fn parallel_simd_wrappers_match_serial_at_lane_remainders() {
+    let rng = CounterRng::new(0x11A17);
+    for n in SIMD_LENS {
+        let base = simd_data(n, 0x77);
+        let mut q_ref = base.clone();
+        let s_ref = E4M3.quantize_serial(&mut q_ref);
+        let mut sr_ref = base.clone();
+        bf16::stochastic_round_slice_serial(&mut sr_ref, &rng, 31);
+        for t in THREAD_COUNTS {
+            let mut q = base.clone();
+            let s = par::with_threads(t, || E4M3.quantize(&mut q));
+            assert_eq!(s.to_bits(), s_ref.to_bits(), "scale n={n} t={t}");
+            assert_eq!(bits(&q), bits(&q_ref), "quantize n={n} t={t}");
+
+            let mut sr = base.clone();
+            par::with_threads(t, || bf16::stochastic_round_slice(&mut sr, &rng, 31));
+            assert_eq!(bits(&sr), bits(&sr_ref), "sr n={n} t={t}");
         }
     }
 }
