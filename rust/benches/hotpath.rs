@@ -29,7 +29,8 @@ struct Row {
     op: &'static str,
     ns_serial: f64,
     /// Single-thread dispatched-kernel time; `None` for ops with no
-    /// SIMD tier (reductions' f64 sums, the planner, host AdamW).
+    /// SIMD tier (the DES planner — every codec/norm/AdamW hot loop
+    /// now has one).
     ns_simd: Option<f64>,
     ns_par: f64,
     /// Bytes read + written per iteration (consistent R+W accounting,
@@ -110,10 +111,10 @@ fn repo_root_path(file: &str) -> String {
 
 fn write_json(rows: &[Row], singles: &[(&str, f64)]) {
     let threads = par::num_threads();
-    let simd = backend::level().name();
     let mut s = String::from("{\n");
     s += &format!(
-        "  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"simd\": \"{simd}\",\n"
+        "  \"bench\": \"hotpath\",\n  {},\n",
+        llmq::util::bench::provenance_json()
     );
     s += "  \"ops\": [\n";
     for (i, r) in rows.iter().enumerate() {
@@ -230,8 +231,9 @@ fn main() {
 
     // --- global norm (the unhidable reduction, §3.2) -------------------------
     // read-only reduction: n * 4 bytes read, nothing written. The f64
-    // sum-of-squares fold has no SIMD tier (fixed-grid scalar sums).
-    duel(&mut b, &mut rows, "global_norm 4M", (n * 4) as f64, false, |e| {
+    // sum-of-squares fold runs the widened per-lane grid (Rule 2a), so
+    // it now has a SIMD tier.
+    duel(&mut b, &mut rows, "global_norm 4M", (n * 4) as f64, true, |e| {
         match e {
             Exec::Serial => llmq::optim::global_norm_serial(&base),
             _ => llmq::optim::global_norm(&base),
@@ -271,7 +273,7 @@ fn main() {
         &mut rows,
         "host adamw step 4M",
         (n * 28) as f64, // p, m, v, g read + p, m, v written
-        false, // AdamW's update math has no SIMD tier yet (ROADMAP item)
+        true, // the FMA-free vector AdamW kernel (backend::adamw_update)
         |e| match e {
             Exec::Serial => opt.step_serial(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32),
             _ => opt.step(&mut p_, &mut m, &mut v, &base, 1e-4, 1, 0, n as u32),

@@ -20,6 +20,22 @@ struct Phase {
     path: &'static str,
     phase: &'static str,
     ns: f64,
+    /// Scalar-reference-kernel time at 1 thread (fused phases with a
+    /// SIMD tier only).
+    ns_scalar: Option<f64>,
+    /// Dispatched-kernel time at 1 thread (fused phases with a SIMD
+    /// tier only); `simd_speedup = ns_scalar / ns_simd` is the
+    /// vectorization win alone, same convention as BENCH_hotpath.json.
+    ns_simd: Option<f64>,
+}
+
+impl Phase {
+    fn simd_speedup(&self) -> Option<f64> {
+        match (self.ns_scalar, self.ns_simd) {
+            (Some(sc), Some(si)) => Some(sc / si),
+            _ => None,
+        }
+    }
 }
 
 fn median_ns(b: &Bencher, name: &str) -> f64 {
@@ -43,19 +59,34 @@ fn write_json(
     ns_staged: f64,
     ns_fused: f64,
 ) {
-    let threads = par::num_threads();
     let mut s = String::from("{\n");
     s += &format!(
-        "  \"bench\": \"train_step\",\n  \"projected\": false,\n  \"threads\": {threads},\n  \
-         \"n\": {n},\n  \"world\": {world},\n  \"n_micro\": {n_micro},\n"
+        "  \"bench\": \"train_step\",\n  \"projected\": false,\n  {},\n  \
+         \"staged_kernels\": \"scalar-serial oracle (since PR 4; earlier reports ran the \
+         parallel dispatched kernels, so total.speedup is not comparable across that \
+         boundary — the vectorization win alone is the per-phase simd_speedup)\",\n  \
+         \"n\": {n},\n  \"world\": {world},\n  \"n_micro\": {n_micro},\n",
+        llmq::util::bench::provenance_json()
     );
     s += "  \"phases\": [\n";
     for (i, p) in phases.iter().enumerate() {
+        let opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.0}"),
+            None => "null".to_string(),
+        };
+        let speedup = match p.simd_speedup() {
+            Some(x) => format!("{x:.3}"),
+            None => "null".to_string(),
+        };
         s += &format!(
-            "    {{\"path\": \"{}\", \"phase\": \"{}\", \"ns\": {:.0}}}{}\n",
+            "    {{\"path\": \"{}\", \"phase\": \"{}\", \"ns\": {:.0}, \
+             \"ns_scalar\": {}, \"ns_simd\": {}, \"simd_speedup\": {}}}{}\n",
             p.path,
             p.phase,
             p.ns,
+            opt(p.ns_scalar),
+            opt(p.ns_simd),
+            speedup,
             if i + 1 < phases.len() { "," } else { "" }
         );
     }
@@ -107,9 +138,20 @@ fn main() {
         .collect();
     let mut b = Bencher::new(1, 5);
     let mut phases: Vec<Phase> = vec![];
-    let mut record = |b: &Bencher, path: &'static str, phase: &'static str, label: &str| {
+    let mut record = |b: &Bencher,
+                      path: &'static str,
+                      phase: &'static str,
+                      label: &str,
+                      scalar_label: Option<&str>,
+                      simd_label: Option<&str>| {
         let ns = median_ns(b, label);
-        phases.push(Phase { path, phase, ns });
+        phases.push(Phase {
+            path,
+            phase,
+            ns,
+            ns_scalar: scalar_label.map(|l| median_ns(b, l)),
+            ns_simd: simd_label.map(|l| median_ns(b, l)),
+        });
     };
     let scale = 1.0 / n_micro as f32;
 
@@ -126,7 +168,7 @@ fn main() {
             .collect();
         avg
     });
-    record(&b, "staged", "avg+round", "staged: avg+round (alloc + full pass/device)");
+    record(&b, "staged", "avg+round", "staged: avg+round (alloc + full pass/device)", None, None);
 
     // pre-averaged group for the isolated reduce/flatten timings
     let avg_group = DeviceGroup {
@@ -148,7 +190,7 @@ fn main() {
         reduce_scatter_memcpy(&avg_group, &mut shards, &rs_rng, hs.counter);
         shards
     });
-    record(&b, "staged", "reduce-scatter", "staged: reduce-scatter (fresh shards)");
+    record(&b, "staged", "reduce-scatter", "staged: reduce-scatter (fresh shards)", None, None);
 
     let mut shards = vec![vec![0f32; chunk]; world];
     reduce_scatter_memcpy(&avg_group, &mut shards, &rs_rng, hs.counter);
@@ -159,25 +201,29 @@ fn main() {
         }
         flat
     });
-    record(&b, "staged", "flatten", "staged: flatten shards");
+    record(&b, "staged", "flatten", "staged: flatten shards", None, None);
 
     let mut flat = vec![0f32; n];
     for (r, sh) in shards.iter().enumerate() {
         flat[r * chunk..(r + 1) * chunk].copy_from_slice(sh);
     }
-    b.bench("staged: global norm", || fused::grad_norm(&flat));
-    record(&b, "staged", "norm", "staged: global norm");
+    // staged_step runs the scalar-kernel norm and serial scalar AdamW
+    // (they are the oracle); these rows measure exactly what it does.
+    b.bench("staged: global norm (scalar kernel)", || {
+        fused::grad_norm_scalar(&flat)
+    });
+    record(&b, "staged", "norm", "staged: global norm (scalar kernel)", None, None);
 
     let opt = AdamW::new(hs.hp);
     let shard = n / hs.opt_world;
     let mut p = p0.clone();
     let mut m = vec![0f32; n];
     let mut v = vec![0f32; n];
-    b.bench("staged: per-rank adamw", || {
+    b.bench("staged: per-rank adamw (scalar serial)", || {
         for rank in 0..hs.opt_world {
             let range = shard_range(n, hs.opt_world, rank);
             let base = hs.counter.wrapping_add((rank * shard) as u32);
-            opt.step(
+            opt.step_serial(
                 &mut p[range.clone()],
                 &mut m[range.clone()],
                 &mut v[range.clone()],
@@ -189,7 +235,7 @@ fn main() {
             );
         }
     });
-    record(&b, "staged", "adamw", "staged: per-rank adamw");
+    record(&b, "staged", "adamw", "staged: per-rank adamw (scalar serial)", None, None);
 
     b.bench("staged: all-gather (fresh buffers)", || {
         let shards_p: Vec<Vec<f32>> = (0..world)
@@ -199,17 +245,33 @@ fn main() {
         all_gather_memcpy(&shards_p, &mut gathered);
         p.copy_from_slice(&gathered.buffers[0]);
     });
-    record(&b, "staged", "all-gather", "staged: all-gather (fresh buffers)");
+    record(&b, "staged", "all-gather", "staged: all-gather (fresh buffers)", None, None);
 
     // ---- fused phases (persistent workspace) --------------------------------
     b.bench("fused: reduce+avg (incl. arena zero)", || {
         ws.grads.fill(0.0);
         fused::reduce_phase(&mut ws, &hs);
     });
-    record(&b, "fused", "reduce+avg", "fused: reduce+avg (incl. arena zero)");
+    record(&b, "fused", "reduce+avg", "fused: reduce+avg (incl. arena zero)", None, None);
 
+    // Three tiers for the two phases this PR vectorized, hotpath-style:
+    // scalar kernel at 1 thread, dispatched kernel at 1 thread (the
+    // vectorization win alone), dispatched kernel at LLMQ_THREADS.
     b.bench("fused: norm (arena partials)", || fused::norm_phase(&mut ws));
-    record(&b, "fused", "norm", "fused: norm (arena partials)");
+    b.bench("fused: norm [scalar x1]", || {
+        par::with_threads(1, || fused::norm_phase_scalar(&mut ws))
+    });
+    b.bench("fused: norm [simd x1]", || {
+        par::with_threads(1, || fused::norm_phase(&mut ws))
+    });
+    record(
+        &b,
+        "fused",
+        "norm",
+        "fused: norm (arena partials)",
+        Some("fused: norm [scalar x1]"),
+        Some("fused: norm [simd x1]"),
+    );
 
     let norm = fused::norm_phase(&mut ws);
     let mut pf = p0.clone();
@@ -218,7 +280,24 @@ fn main() {
     b.bench("fused: clip+adamw+gather", || {
         fused::update_phase(&mut ws, &mut pf, &mut mf, &mut vf, &hs, norm)
     });
-    record(&b, "fused", "update+gather", "fused: clip+adamw+gather");
+    b.bench("fused: clip+adamw+gather [scalar x1]", || {
+        par::with_threads(1, || {
+            fused::update_phase_scalar(&mut ws, &mut pf, &mut mf, &mut vf, &hs, norm)
+        })
+    });
+    b.bench("fused: clip+adamw+gather [simd x1]", || {
+        par::with_threads(1, || {
+            fused::update_phase(&mut ws, &mut pf, &mut mf, &mut vf, &hs, norm)
+        })
+    });
+    record(
+        &b,
+        "fused",
+        "update+gather",
+        "fused: clip+adamw+gather",
+        Some("fused: clip+adamw+gather [scalar x1]"),
+        Some("fused: clip+adamw+gather [simd x1]"),
+    );
 
     // ---- end-to-end duel ----------------------------------------------------
     let mut ps = p0.clone();

@@ -16,14 +16,14 @@ use crate::util::Args;
 
 /// CLI: `llmq plan --model all --gpu "RTX 4090" --gpus 1 --dtype fp8`.
 pub fn run_plan_cli(args: &Args) -> Result<()> {
-    let gpu_name = args.str("gpu", "RTX 4090");
+    let gpu_name = args.str("gpu", "RTX 4090")?;
     let gpu = crate::hw::gpu_by_name(&gpu_name)
         .ok_or_else(|| anyhow::anyhow!("unknown gpu {gpu_name}"))?;
-    let dtype = crate::config::Dtype::parse(&args.str("dtype", "fp8"))?;
-    let gpus = args.usize("gpus", 1);
-    let step_tokens = args.usize("step-tokens", 500_000);
+    let dtype = crate::config::Dtype::parse(&args.str("dtype", "fp8")?)?;
+    let gpus = args.usize("gpus", 1)?;
+    let step_tokens = args.usize("step-tokens", 500_000)?;
     let fp8 = dtype != crate::config::Dtype::Bf16;
-    let model_name = args.str("model", "all");
+    let model_name = args.str("model", "all")?;
     let models: Vec<_> = if model_name == "all" {
         crate::config::paper_presets()
     } else {

@@ -11,7 +11,7 @@
 //!                   FP8/BF16 codecs.
 
 use anyhow::Result;
-use llmq::util::Args;
+use llmq::util::{ArgError, Args};
 
 const USAGE: &str = "\
 llmq — LLMQ reproduction: efficient lower-precision pretraining for consumer GPUs
@@ -28,8 +28,22 @@ USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
 ";
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    let artifacts = args.str("artifacts", "artifacts");
+    let result = run(Args::from_env());
+    if let Err(e) = &result {
+        // A malformed command line (missing/garbled flag value) gets the
+        // usage text and exit code 2, not a panic and not a silent
+        // default; every other error keeps the anyhow report.
+        if e.downcast_ref::<ArgError>().is_some() {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    result
+}
+
+fn run(args: Args) -> Result<()> {
+    let artifacts = args.str("artifacts", "artifacts")?;
     match args.subcommand.as_deref() {
         Some("selftest") => {
             let rt = llmq::runtime::Runtime::new(&artifacts)?;

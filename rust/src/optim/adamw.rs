@@ -1,12 +1,17 @@
 //! AdamW over flat f32 buffers holding bf16-grid state.
 //!
 //! The offloaded-optimizer path runs this on the host while the GPUs are
-//! busy (paper §3.1), so `step` is parallel: the four state slices are
-//! split at identical boundaries and each worker runs the scalar kernel
-//! on its part. SR counters are keyed by global element index, so the
-//! result is bit-identical to the serial kernel at any thread count.
+//! busy (paper §3.1), so `step` is parallel *and* SIMD: the four state
+//! slices are split at identical `SIMD_ALIGN`ed boundaries and each
+//! worker runs the dispatched `precision::backend::adamw_update` kernel
+//! (AVX2/NEON, or the scalar reference under `LLMQ_SIMD=scalar`) on its
+//! part. SR counters are keyed by global element index and the vector
+//! kernels are pinned bit-identical to the scalar loop, so the result
+//! matches [`AdamW::step_serial`] — the pure-scalar oracle — at any
+//! thread count and lane width.
 
-use crate::precision::{bf16, CounterRng};
+use crate::precision::backend::{self, AdamWSpec};
+use crate::precision::CounterRng;
 use crate::util::par;
 
 #[derive(Debug, Clone, Copy)]
@@ -53,9 +58,12 @@ pub(crate) const KEY_V: u32 = ADAMW_RNG_KEY ^ 0x7676_6172;
 
 /// One AdamW element update *before* stochastic rounding: returns the
 /// exact-f32 `(p', m', v')`. This is the single source of truth for the
-/// update math — `AdamW::step_serial` and `optim::fused`'s clip+AdamW+SR
-/// chunk kernel both inline it, which is what makes the fused pipeline
-/// bit-identical to the staged reference.
+/// update math — the scalar backend kernel
+/// (`precision::backend`'s `scalar::adamw_update`, which both
+/// `AdamW::step_serial` and the fused phase-3 path ultimately run or are
+/// pinned against) inlines it, which is what makes the fused pipeline
+/// bit-identical to the staged reference, and the vector kernels are an
+/// FMA-free 1:1 transcription of exactly this sequence.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn update_element(
@@ -83,11 +91,32 @@ impl AdamW {
         }
     }
 
-    /// Update a shard in place, in parallel. `step` is 1-based;
-    /// `counter_base` must advance by `3 * full_numel` per optimizer step
-    /// (trainer's job) and be offset per shard so draws never collide
-    /// across ranks. Bit-identical to [`Self::step_serial`] at any
-    /// thread count (counter-per-global-index SR).
+    /// The [`AdamWSpec`] this optimizer hands the backend kernels:
+    /// bias corrections for `step`, the three SR streams, the moment
+    /// counter offsets fixed by `shard`. Shared by [`Self::step`],
+    /// [`Self::step_serial`] and the fused phase-3 kernel so the paths
+    /// cannot drift.
+    pub(crate) fn spec(&self, lr: f32, step: u32, clip_scale: Option<f32>, shard: u32) -> AdamWSpec {
+        AdamWSpec {
+            hp: self.hp,
+            lr,
+            bc1: 1.0 - self.hp.beta1.powi(step as i32),
+            bc2: 1.0 - self.hp.beta2.powi(step as i32),
+            clip_scale,
+            rng_p: self.rng,
+            rng_m: CounterRng::new(KEY_M),
+            rng_v: CounterRng::new(KEY_V),
+            shard,
+        }
+    }
+
+    /// Update a shard in place, in parallel, dispatching each worker's
+    /// chunk through the SIMD backend. `step` is 1-based; `counter_base`
+    /// must advance by `3 * full_numel` per optimizer step (trainer's
+    /// job) and be offset per shard so draws never collide across ranks.
+    /// Bit-identical to [`Self::step_serial`] at any thread count and
+    /// any `LLMQ_SIMD` backend (counter-per-global-index SR + the
+    /// backend bit-exactness contract).
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &self,
@@ -102,11 +131,15 @@ impl AdamW {
     ) {
         let n = p.len();
         debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+        let spec = self.spec(lr, step, None, n_full);
         let threads = par::workers_for(n, par::DEFAULT_GRAIN);
         if threads <= 1 {
-            return self.step_serial(p, m, v, g, lr, step, counter_base, n_full);
+            return backend::adamw_update(&spec, p, m, v, g, counter_base);
         }
-        let ranges = par::split_even(n, threads);
+        // SIMD_ALIGNed boundaries: each worker's vector loop sees at
+        // most one sub-lane remainder (at the tensor tail). Pure
+        // scheduling — global-index SR keying makes it unobservable.
+        let ranges = par::split_even_aligned(n, threads, par::SIMD_ALIGN);
         let n_ranges = ranges.len();
         std::thread::scope(|s| {
             let (mut pt, mut mt, mut vt, mut gt) = (p, m, v, g);
@@ -122,20 +155,20 @@ impl AdamW {
                 gt = g2;
                 let base = counter_base.wrapping_add(off as u32);
                 off += r.len();
+                let spec_ref = &spec;
                 if k + 1 == n_ranges {
                     // final shard runs on the calling thread
-                    self.step_serial(p1, m1, v1, g1, lr, step, base, n_full);
+                    backend::adamw_update(spec_ref, p1, m1, v1, g1, base);
                 } else {
-                    let this = &*self;
-                    s.spawn(move || {
-                        this.step_serial(p1, m1, v1, g1, lr, step, base, n_full)
-                    });
+                    s.spawn(move || backend::adamw_update(spec_ref, p1, m1, v1, g1, base));
                 }
             }
         });
     }
 
-    /// Single-threaded reference kernel (the exact Pallas-kernel math).
+    /// Single-threaded pure-scalar reference kernel (the exact
+    /// Pallas-kernel math): runs the scalar backend loop regardless of
+    /// `LLMQ_SIMD`, so it stays a meaningful oracle for the vector path.
     #[allow(clippy::too_many_arguments)]
     pub fn step_serial(
         &self,
@@ -148,19 +181,8 @@ impl AdamW {
         counter_base: u32,
         n_full: u32,
     ) {
-        let n = p.len();
-        let bc1 = 1.0 - self.hp.beta1.powi(step as i32);
-        let bc2 = 1.0 - self.hp.beta2.powi(step as i32);
-        let key_m = CounterRng::new(KEY_M);
-        let key_v = CounterRng::new(KEY_V);
-        for i in 0..n {
-            let (p2, m2, v2) =
-                update_element(&self.hp, p[i], m[i], v[i], g[i], lr, bc1, bc2);
-            let c = counter_base.wrapping_add(i as u32);
-            p[i] = bf16::stochastic_round_bf16(p2, &self.rng, c);
-            m[i] = bf16::stochastic_round_bf16(m2, &key_m, c.wrapping_add(n_full));
-            v[i] = bf16::stochastic_round_bf16(v2, &key_v, c.wrapping_add(2 * n_full));
-        }
+        let spec = self.spec(lr, step, None, n_full);
+        backend::scalar::adamw_update(&spec, p, m, v, g, counter_base);
     }
 }
 

@@ -10,17 +10,22 @@
 //!    reduce-scatter epilogue ([`reduce_scatter_scaled_memcpy`]); each
 //!    gradient element is touched once and lands in the flat workspace
 //!    buffer in shard order (world == 1 degenerates to one scaled copy);
-//! 2. **norm** — per-[`PIPELINE_BLOCK`] f64 sum-of-squares partials into
-//!    the workspace's partials arena, folded *in chunk order* (the same
-//!    fixed-grid determinism contract as `optim::global_norm`). This is
-//!    the one barrier in the pipeline: the clip scale is global;
-//! 3. **update** — a fused clip + AdamW + stochastic-rounding kernel per
-//!    chunk that writes updated params/moments in place and gathers each
-//!    hot chunk straight into the persistent per-rank replica buffers.
+//! 2. **norm** — per-[`PIPELINE_BLOCK`] widened-lane f64 sum-of-squares
+//!    partials (NUMERICS.md Rule 2a, SIMD-dispatched) into the
+//!    workspace's lane-strided partials arena, folded lanes-then-chunks
+//!    *in index order* (the same fixed-grid determinism contract as
+//!    `optim::global_norm`). This is the one barrier in the pipeline:
+//!    the clip scale is global;
+//! 3. **update** — the fused clip + AdamW + stochastic-rounding backend
+//!    kernel per chunk (AVX2/NEON, or scalar under `LLMQ_SIMD=scalar`)
+//!    that writes updated params/moments in place and gathers each hot
+//!    chunk straight into the persistent per-rank replica buffers.
 //!
-//! Every kernel draws SR randomness by *global element index*, so any
-//! chunking or thread schedule is bit-identical to [`staged_step`], the
-//! multi-pass reference that preserves the old chain (and is what
+//! Every kernel draws SR randomness by *global element index* and every
+//! vector kernel is pinned bit-identical to its scalar reference, so any
+//! chunking, thread schedule or lane width is bit-identical to
+//! [`staged_step`] — the multi-pass reference that preserves the old
+//! chain *on the scalar kernels* (and is what
 //! `tests/fused_step_equivalence.rs` pins the pipeline against at
 //! 1/2/8 threads and world ∈ {1, 2, 4}).
 
@@ -28,14 +33,15 @@ use crate::collectives::memcpy::PIPELINE_BLOCK;
 use crate::collectives::{
     all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_scaled_memcpy, DeviceGroup,
 };
-use crate::optim::adamw::{self, AdamW, AdamWParams, ADAMW_RNG_KEY};
-use crate::precision::{bf16, CounterRng};
+use crate::optim::adamw::{AdamW, AdamWParams};
+use crate::precision::{backend, bf16, CounterRng};
 use crate::shard::shard_range;
 use crate::train::workspace::StepWorkspace;
 use crate::util::par;
 
 /// RNG key for the gradient reduce-scatter SR stream (XORed with the run
-/// seed; distinct from [`ADAMW_RNG_KEY`] so the two streams never
+/// seed; distinct from [`crate::optim::adamw::ADAMW_RNG_KEY`] so the
+/// two streams never
 /// collide even on overlapping counters).
 pub const REDUCE_RNG_KEY: u32 = 0xC011_EC7;
 
@@ -70,14 +76,35 @@ impl HostStep {
 }
 
 /// Global L2 norm over the fixed `PIPELINE_BLOCK` chunk grid: per-chunk
-/// f64 partials folded in chunk order — bit-identical at any thread
-/// count, and bit-identical to [`norm_phase`]'s arena-backed fold.
+/// widened-lane f64 partials (NUMERICS.md Rule 2a, dispatched through
+/// the SIMD backend) folded in chunk order — bit-identical at any
+/// thread count and `LLMQ_SIMD` backend, and bit-identical to
+/// [`norm_phase`]'s arena-backed fold.
 pub fn grad_norm(g: &[f32]) -> f32 {
     par::map_reduce(
         g.len(),
         PIPELINE_BLOCK,
         0.0f64,
-        |r| crate::optim::sumsq(&g[r]),
+        |r| backend::sumsq_lanes(&g[r]),
+        |a, b| a + b,
+    )
+    .sqrt() as f32
+}
+
+/// [`grad_norm`] forced through the scalar reference kernel on the same
+/// widened grid, regardless of `LLMQ_SIMD` — the oracle [`staged_step`]
+/// uses (so staged-vs-fused equality pins the vector norm kernels) and
+/// the scalar baseline `benches/train_step.rs` duels against.
+pub fn grad_norm_scalar(g: &[f32]) -> f32 {
+    par::map_reduce(
+        g.len(),
+        PIPELINE_BLOCK,
+        0.0f64,
+        |r| {
+            let mut lanes = [0.0f64; backend::NORM_LANES];
+            backend::scalar::sumsq_lanes_into(&g[r], &mut lanes);
+            backend::fold_lanes(&lanes)
+        },
         |a, b| a + b,
     )
     .sqrt() as f32
@@ -106,31 +133,57 @@ pub fn reduce_phase(ws: &mut StepWorkspace, hs: &HostStep) {
     ws.dev_grads = group.buffers;
 }
 
-/// Phase 2: the global-norm barrier. Partials land in the workspace's
-/// `norm_partials` arena (no allocation) and are folded in chunk order.
+/// Phase 2: the global-norm barrier. Each chunk's [`backend::NORM_LANES`]
+/// widened-grid lane sums land in the chunk's stride-`NORM_LANES` window
+/// of the workspace's `norm_partials` arena (no allocation, and the
+/// vector kernels store their f64 accumulators without a horizontal
+/// reduction); the fold then collapses lanes in lane order and chunks in
+/// chunk order — exactly [`grad_norm`]'s Rule 2a fold.
 pub fn norm_phase(ws: &mut StepWorkspace) -> f32 {
+    norm_phase_impl(ws, false)
+}
+
+/// [`norm_phase`] forced through the scalar reference kernel on the
+/// identical arena harness, regardless of `LLMQ_SIMD` — the phase-2
+/// oracle `benches/train_step.rs` duels against, so its `simd_speedup`
+/// column isolates the kernel (same scheduling, same arena, only the
+/// inner loop differs).
+pub fn norm_phase_scalar(ws: &mut StepWorkspace) -> f32 {
+    norm_phase_impl(ws, true)
+}
+
+fn norm_phase_impl(ws: &mut StepWorkspace, scalar_kernel: bool) -> f32 {
     let n = ws.n();
     let grads = &ws.grads;
-    let items: Vec<(usize, &mut f64)> = ws.norm_partials.iter_mut().enumerate().collect();
-    par::for_each_item(items, |(c, slot)| {
+    let items: Vec<(usize, &mut [f64])> = ws
+        .norm_partials
+        .chunks_mut(backend::NORM_LANES)
+        .enumerate()
+        .collect();
+    par::for_each_item(items, |(c, lanes)| {
         let r = c * PIPELINE_BLOCK..((c + 1) * PIPELINE_BLOCK).min(n);
-        *slot = crate::optim::sumsq(&grads[r]);
+        if scalar_kernel {
+            backend::scalar::sumsq_lanes_into(&grads[r], lanes);
+        } else {
+            backend::sumsq_lanes_into(&grads[r], lanes);
+        }
     });
     let mut acc = 0.0f64;
-    for p in &ws.norm_partials {
-        acc += p;
+    for lanes in ws.norm_partials.chunks(backend::NORM_LANES) {
+        acc += backend::fold_lanes(lanes);
     }
     acc.sqrt() as f32
 }
 
-/// Phase 3: fused clip + AdamW + SR per chunk, updated params written in
+/// Phase 3: fused clip + AdamW + SR per chunk — dispatched through the
+/// SIMD backend's `adamw_update` kernel — with updated params written in
 /// place and gathered directly into the persistent per-rank replicas.
 ///
 /// Per element (global index `j`, shard length `S = n / opt_world`):
 /// `g = bf16(grads[j] · clip_scale)` when the clip triggers (else raw),
-/// then the exact [`adamw::update_element`] math with SR counters
+/// then the exact `optim::adamw` update math with SR counters
 /// `counter + j` / `+ S` / `+ 2S` on the p/m/v streams — the same draws
-/// the staged per-rank `AdamW::step` chain makes.
+/// the staged per-rank `AdamW::step_serial` chain makes.
 pub fn update_phase(
     ws: &mut StepWorkspace,
     p: &mut [f32],
@@ -138,6 +191,32 @@ pub fn update_phase(
     v: &mut [f32],
     hs: &HostStep,
     norm: f32,
+) {
+    update_phase_impl(ws, p, m, v, hs, norm, false)
+}
+
+/// [`update_phase`] forced through the scalar reference kernel,
+/// regardless of `LLMQ_SIMD` — the phase-3 oracle the equivalence tests
+/// and `benches/train_step.rs` duel the vector path against.
+pub fn update_phase_scalar(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+    norm: f32,
+) {
+    update_phase_impl(ws, p, m, v, hs, norm, true)
+}
+
+fn update_phase_impl(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+    norm: f32,
+    scalar_kernel: bool,
 ) {
     let n = ws.n();
     assert_eq!(p.len(), n);
@@ -150,11 +229,7 @@ pub fn update_phase(
     } else {
         None
     };
-    let bc1 = 1.0 - hs.hp.beta1.powi(hs.step as i32);
-    let bc2 = 1.0 - hs.hp.beta2.powi(hs.step as i32);
-    let rng_p = CounterRng::new(ADAMW_RNG_KEY);
-    let rng_m = CounterRng::new(adamw::KEY_M);
-    let rng_v = CounterRng::new(adamw::KEY_V);
+    let spec = AdamW::new(hs.hp).spec(hs.lr, hs.step, clip_scale, shard);
 
     // One work item per pipeline chunk: disjoint p/m/v/replica windows,
     // so the (chunk × worker) schedule needs no synchronization.
@@ -208,17 +283,10 @@ pub fn update_phase(
 
     par::for_each_item(items, |c| {
         let base = hs.counter.wrapping_add(c.off as u32);
-        for i in 0..c.g.len() {
-            let g = match clip_scale {
-                Some(s) => bf16::round_to_bf16(c.g[i] * s),
-                None => c.g[i],
-            };
-            let (p2, m2, v2) =
-                adamw::update_element(&hs.hp, c.p[i], c.m[i], c.v[i], g, hs.lr, bc1, bc2);
-            let ci = base.wrapping_add(i as u32);
-            c.p[i] = bf16::stochastic_round_bf16(p2, &rng_p, ci);
-            c.m[i] = bf16::stochastic_round_bf16(m2, &rng_m, ci.wrapping_add(shard));
-            c.v[i] = bf16::stochastic_round_bf16(v2, &rng_v, ci.wrapping_add(2 * shard));
+        if scalar_kernel {
+            backend::scalar::adamw_update(&spec, c.p, c.m, c.v, c.g, base);
+        } else {
+            backend::adamw_update(&spec, c.p, c.m, c.v, c.g, base);
         }
         // Gather: the chunk is cache-hot — copy it into every rank's
         // replica now instead of a separate all-gather pass later.
@@ -250,6 +318,10 @@ pub fn fused_step(
 /// throwaway shards, a flattened gradient, per-rank AdamW, an all-gather
 /// through fresh buffers). Allocation-heavy by design — it is the
 /// bitwise oracle the fused pipeline is tested against, not a hot path.
+/// The norm and AdamW passes run the **scalar reference kernels**
+/// ([`grad_norm_scalar`], [`AdamW::step_serial`]) regardless of
+/// `LLMQ_SIMD`, so staged-vs-fused equality also pins the vector AdamW
+/// and widened-grid norm kernels against the scalar spec end to end.
 ///
 /// Two deliberate ULP-level departures from the pre-PR chain (shared
 /// with the fused path, so the equivalence contract is unaffected —
@@ -257,7 +329,8 @@ pub fn fused_step(
 /// paper's guarantee): averaging multiplies by the reciprocal microbatch
 /// count (the scale the fused reduce epilogue applies) instead of
 /// dividing per element, and the norm folds `PIPELINE_BLOCK` (8K)
-/// partials instead of `global_norm`'s 64K grid.
+/// partials instead of `global_norm`'s 64K grid (both on the Rule 2a
+/// widened lane sub-grid).
 pub fn staged_step(
     ws: &mut StepWorkspace,
     p: &mut [f32],
@@ -300,8 +373,8 @@ pub fn staged_step(
         flat = avg.swap_remove(0);
     }
 
-    // Passes 4+5: two-pass global-norm clip.
-    let norm = grad_norm(&flat);
+    // Passes 4+5: two-pass global-norm clip (scalar-kernel norm).
+    let norm = grad_norm_scalar(&flat);
     if norm > hs.grad_clip && norm > 0.0 {
         let s = hs.grad_clip / norm;
         for g in flat.iter_mut() {
@@ -309,13 +382,14 @@ pub fn staged_step(
         }
     }
 
-    // Pass 6: per-rank host AdamW over the ZeRO-1 shard layout.
+    // Pass 6: per-rank host AdamW over the ZeRO-1 shard layout, through
+    // the single-threaded scalar oracle kernel.
     let shard = n / hs.opt_world;
     let opt = AdamW::new(hs.hp);
     for rank in 0..hs.opt_world {
         let range = shard_range(n, hs.opt_world, rank);
         let base = hs.counter.wrapping_add((rank * shard) as u32);
-        opt.step(
+        opt.step_serial(
             &mut p[range.clone()],
             &mut m[range.clone()],
             &mut v[range.clone()],
@@ -379,6 +453,37 @@ mod tests {
         let a = norm_phase(&mut ws);
         let b = grad_norm(&ws.grads);
         assert_eq!(a.to_bits(), b.to_bits());
+        // ...and the dispatched grid equals the scalar-kernel grid on
+        // both harnesses (trivial under LLMQ_SIMD=scalar, a real pin
+        // otherwise).
+        let c = grad_norm_scalar(&ws.grads);
+        assert_eq!(a.to_bits(), c.to_bits());
+        let d = norm_phase_scalar(&mut ws);
+        assert_eq!(a.to_bits(), d.to_bits());
+    }
+
+    #[test]
+    fn update_phase_matches_scalar_kernel_smoke() {
+        let n = PIPELINE_BLOCK + 256;
+        let hs = mk_host_step(4, 2);
+        let mut ws = filled_ws(2, n);
+        ws.grads.fill(0.0);
+        reduce_phase(&mut ws, &hs);
+        let norm = norm_phase(&mut ws);
+        let init = |i: usize| round_to_bf16(0.01 * (i % 97) as f32 - 0.3);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let mut p1: Vec<f32> = (0..n).map(init).collect();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        update_phase_scalar(&mut ws, &mut p1, &mut m1, &mut v1, &hs, norm);
+
+        let mut p2: Vec<f32> = (0..n).map(init).collect();
+        let (mut m2, mut v2) = (vec![0f32; n], vec![0f32; n]);
+        update_phase(&mut ws, &mut p2, &mut m2, &mut v2, &hs, norm);
+
+        assert_eq!(bits(&p1), bits(&p2));
+        assert_eq!(bits(&m1), bits(&m2));
+        assert_eq!(bits(&v1), bits(&v2));
     }
 
     #[test]

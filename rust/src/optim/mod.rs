@@ -10,27 +10,31 @@ pub mod fused;
 pub use adamw::{AdamW, AdamWParams};
 pub use fused::{fused_step, staged_step, HostStep};
 
+use crate::precision::backend;
 use crate::util::par;
 
 /// Global L2 norm over a flat gradient buffer (f64 accumulation — this is
 /// the one reduction the paper cannot hide behind compute, §3.2).
 ///
-/// Parallel tree reduction over the *fixed* chunk grid: per-chunk f64
-/// partial sums folded in chunk order, so the result is bit-identical at
-/// any thread count and within a few ULP of [`global_norm_serial`]
-/// (chunked vs. linear f64 summation).
+/// Parallel tree reduction over the *fixed* chunk grid, with each
+/// chunk's partial computed on the widened per-lane sub-grid of
+/// NUMERICS.md Rule 2a (SIMD-dispatched) and folded in chunk order —
+/// bit-identical at any thread count and `LLMQ_SIMD` backend, and
+/// within a few ULP of [`global_norm_serial`] (gridded vs. linear f64
+/// summation).
 pub fn global_norm(grads: &[f32]) -> f32 {
     par::map_reduce(
         grads.len(),
         par::REDUCE_CHUNK,
         0.0f64,
-        |r| sumsq(&grads[r]),
+        |r| backend::sumsq_lanes(&grads[r]),
         |a, b| a + b,
     )
     .sqrt() as f32
 }
 
-/// Linear f64 sum of squares (the per-chunk partial of both norm grids).
+/// Linear single-accumulator f64 sum of squares (the unchunked serial
+/// oracle's fold).
 pub(crate) fn sumsq(x: &[f32]) -> f64 {
     x.iter().map(|&g| (g as f64) * (g as f64)).sum()
 }

@@ -39,8 +39,18 @@
 //!   [`CounterRng::next_u32`], so lane width is unobservable in the
 //!   output.
 //! * Reductions ([`absmax`]) only vectorize order-insensitive folds
-//!   (`max` over absolute values); ordered float sums keep their fixed
-//!   chunk grid at the `util::par` layer.
+//!   (`max` over absolute values); ordered float sums either keep their
+//!   fixed chunk grid at the `util::par` layer or — for the norm's f64
+//!   sum of squares — run on the widened per-lane sub-grid of
+//!   `docs/NUMERICS.md` Rule 2a ([`sumsq_lanes_into`]): [`NORM_LANES`]
+//!   interleaved lane sums per chunk, folded in lane-index order, the
+//!   same 8 f64 values from every backend.
+//! * The host AdamW update ([`adamw_update`]) is an FMA-free
+//!   transcription of the scalar `optim::adamw` element math: f32
+//!   div and sqrt are correctly-rounded IEEE ops, so `vdivps`/`vsqrtps`
+//!   match the scalar sequence bit-exactly, and the three SR streams
+//!   (param + both moments) are hashed per lane from global-element-
+//!   index counters exactly as the scalar kernel draws them.
 //!
 //! `tests/par_equivalence.rs` enforces the contract at lengths
 //! 0, 1, lane−1, lane, lane+1 and non-`REDUCE_CHUNK`-aligned sizes, on
@@ -49,6 +59,7 @@
 
 use super::fp8::Fp8Format;
 use super::philox::CounterRng;
+use crate::optim::adamw::AdamWParams;
 use std::sync::OnceLock;
 
 #[cfg(target_arch = "aarch64")]
@@ -60,6 +71,56 @@ pub mod x86;
 /// aligns parallel chunk boundaries to a multiple of this so per-chunk
 /// vector loops see no mid-tensor remainders.
 pub const MAX_LANES: usize = 8;
+
+/// Lane count of the widened f64 sum-of-squares sub-grid (NUMERICS.md
+/// Rule 2a). This is a **contract constant**, not a hardware width:
+/// every backend — scalar array, two 4-wide AVX2 f64 accumulators, four
+/// 2-wide NEON accumulators — produces the same `NORM_LANES` partial
+/// sums, so the norm is bit-identical across backends.
+pub const NORM_LANES: usize = 8;
+
+/// Fold the [`NORM_LANES`] lane sums of one chunk in lane-index order
+/// (starting from `0.0`) — the second level of the Rule 2a grid. Shared
+/// by every backend and by the arena-backed fold in `optim::fused` so
+/// the fold order cannot drift between them.
+pub fn fold_lanes(lanes: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+/// Everything the fused clip + AdamW + stochastic-round element kernel
+/// needs besides the state slices themselves. One spec serves a whole
+/// tensor: per-chunk calls vary only the slices and the counter base.
+///
+/// Per element at global index `j` (counter `c = counter_base + j`):
+/// `g_eff = bf16_rne(g[j] · clip_scale)` when `clip_scale` is set (else
+/// `g[j]` raw), then the exact `optim::adamw` update math with the
+/// param / first-moment / second-moment SR draws taken from `rng_p` /
+/// `rng_m` / `rng_v` at counters `c` / `c + shard` / `c + 2·shard`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWSpec {
+    /// AdamW hyper-parameters (betas, eps, decoupled weight decay).
+    pub hp: AdamWParams,
+    /// Learning rate for this step (schedule already applied).
+    pub lr: f32,
+    /// First-moment bias correction `1 - beta1^step`.
+    pub bc1: f32,
+    /// Second-moment bias correction `1 - beta2^step`.
+    pub bc2: f32,
+    /// Gradient clip scale folded into the kernel (`None` = no clip).
+    pub clip_scale: Option<f32>,
+    /// SR stream for the parameter write.
+    pub rng_p: CounterRng,
+    /// SR stream for the first moment (offset by `shard`).
+    pub rng_m: CounterRng,
+    /// SR stream for the second moment (offset by `2 * shard`).
+    pub rng_v: CounterRng,
+    /// Shard length fixing the moment-stream counter offsets.
+    pub shard: u32,
+}
 
 /// The resolved SIMD backend for this process.
 ///
@@ -170,8 +231,50 @@ pub fn level() -> SimdLevel {
 // ---------------------------------------------------------------------------
 
 pub(crate) mod scalar {
-    use super::{CounterRng, Fp8Format};
+    use super::{AdamWSpec, CounterRng, Fp8Format, NORM_LANES};
     use crate::precision::bf16::{round_to_bf16, stochastic_round_bf16};
+
+    /// The Rule 2a widened sum of squares over one chunk: lane `r % 8`
+    /// accumulates element `r`'s f64 square, ascending `r` within each
+    /// lane. Overwrites `lanes` (no accumulation across calls).
+    pub fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+        debug_assert_eq!(lanes.len(), NORM_LANES);
+        lanes.fill(0.0);
+        for (r, &v) in x.iter().enumerate() {
+            lanes[r % NORM_LANES] += (v as f64) * (v as f64);
+        }
+    }
+
+    /// The fused clip + AdamW + SR element loop — the spec the vector
+    /// AdamW kernels are pinned to. Inlines `optim::adamw`'s
+    /// `update_element` (the single source of the update math) and the
+    /// counter layout of `AdamW::step_serial` / the fused phase-3 chunk
+    /// kernel.
+    pub fn adamw_update(
+        spec: &AdamWSpec,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        counter_base: u32,
+    ) {
+        let n = p.len();
+        debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+        let shard2 = spec.shard.wrapping_mul(2);
+        for i in 0..n {
+            let gi = match spec.clip_scale {
+                Some(s) => round_to_bf16(g[i] * s),
+                None => g[i],
+            };
+            let (p2, m2, v2) = crate::optim::adamw::update_element(
+                &spec.hp, p[i], m[i], v[i], gi, spec.lr, spec.bc1, spec.bc2,
+            );
+            let c = counter_base.wrapping_add(i as u32);
+            p[i] = stochastic_round_bf16(p2, &spec.rng_p, c);
+            m[i] = stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard));
+            v[i] = stochastic_round_bf16(v2, &spec.rng_v, c.wrapping_add(shard2));
+        }
+    }
 
     /// `max(|x_i|)` with the `f32::max` NaN-ignoring fold of
     /// `precision::absmax_serial`.
@@ -435,6 +538,74 @@ pub fn sr_reduce_block(
     }
 }
 
+/// Backend-dispatched widened sum of squares over one norm-grid chunk:
+/// writes the [`NORM_LANES`] lane sums of NUMERICS.md Rule 2a into
+/// `lanes` (overwriting). Element `r` of `x` contributes `x[r]²` (as a
+/// correctly-rounded f64 square of the exact f32→f64 convert) to lane
+/// `r % NORM_LANES`, in ascending `r` order within the lane — the same
+/// 8 values from every backend, so the folded norm is bit-identical
+/// across `LLMQ_SIMD` settings.
+pub fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+    // Hard assert: the arch kernels store NORM_LANES f64s through raw
+    // pointers, so a short `lanes` would be an out-of-bounds write from
+    // this safe entry point in release builds.
+    assert_eq!(lanes.len(), NORM_LANES, "lanes buffer must hold NORM_LANES slots");
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::sumsq_lanes_into(x, lanes) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::sumsq_lanes_into(x, lanes) },
+        _ => scalar::sumsq_lanes_into(x, lanes),
+    }
+}
+
+/// [`sumsq_lanes_into`] + [`fold_lanes`] in one call: the per-chunk f64
+/// partial of the widened norm grid, as `optim::global_norm` and
+/// `optim::fused::grad_norm` consume it.
+///
+/// # Examples
+///
+/// ```
+/// use llmq::precision::backend::sumsq_lanes;
+/// // 3-4-5: sum of squares is exact in f64.
+/// assert_eq!(sumsq_lanes(&[3.0, 4.0]), 25.0);
+/// assert_eq!(sumsq_lanes(&[]), 0.0);
+/// ```
+pub fn sumsq_lanes(x: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; NORM_LANES];
+    sumsq_lanes_into(x, &mut lanes);
+    fold_lanes(&lanes)
+}
+
+/// Backend-dispatched fused clip + AdamW + stochastic-round update of
+/// one chunk, in place. Semantics are exactly the scalar reference loop
+/// (see [`AdamWSpec`] for the per-element contract); `counter_base` is
+/// the SR counter of the chunk's first element, so per-chunk calls over
+/// a split tensor reproduce the single-call stream.
+pub fn adamw_update(
+    spec: &AdamWSpec,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    counter_base: u32,
+) {
+    // Hard assert: the arch kernels index all four slices by p.len()
+    // through raw pointers, so a shorter m/v/g would be out-of-bounds
+    // reads/writes from this safe entry point in release builds.
+    assert!(
+        m.len() == p.len() && v.len() == p.len() && g.len() == p.len(),
+        "p/m/v/g must be the same length"
+    );
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::adamw_update(spec, p, m, v, g, counter_base) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::adamw_update(spec, p, m, v, g, counter_base) },
+        _ => scalar::adamw_update(spec, p, m, v, g, counter_base),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,6 +656,52 @@ mod tests {
         assert_eq!(absmax(&[f32::NAN, -2.0, 1.0]), 2.0);
         assert_eq!(absmax(&[]), 0.0);
         assert_eq!(absmax(&[-0.0]), 0.0);
+    }
+
+    #[test]
+    fn sumsq_lanes_dispatch_matches_scalar_reference() {
+        for n in [0usize, 1, 7, 8, 9, 19, 1000] {
+            let x = data(n, 0x5052);
+            let mut want = [0.0f64; NORM_LANES];
+            scalar::sumsq_lanes_into(&x, &mut want);
+            let mut got = [0.0f64; NORM_LANES];
+            sumsq_lanes_into(&x, &mut got);
+            for l in 0..NORM_LANES {
+                assert_eq!(got[l].to_bits(), want[l].to_bits(), "n={n} lane={l}");
+            }
+            assert_eq!(
+                sumsq_lanes(&x).to_bits(),
+                fold_lanes(&want).to_bits(),
+                "fold n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn adamw_update_dispatch_matches_scalar_reference() {
+        let spec = AdamWSpec {
+            hp: AdamWParams::default(),
+            lr: 1e-3,
+            bc1: 0.19,
+            bc2: 0.0975,
+            clip_scale: Some(0.5),
+            rng_p: CounterRng::new(0x11A17),
+            rng_m: CounterRng::new(0x22),
+            rng_v: CounterRng::new(0x33),
+            shard: 1000,
+        };
+        let n = 1000;
+        let p0 = data(n, 1);
+        let m0 = data(n, 2);
+        let v0: Vec<f32> = data(n, 3).iter().map(|x| x.abs()).collect();
+        let g = data(n, 4);
+        let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
+        scalar::adamw_update(&spec, &mut pa, &mut ma, &mut va, &g, 77);
+        let (mut pb, mut mb, mut vb) = (p0, m0, v0);
+        adamw_update(&spec, &mut pb, &mut mb, &mut vb, &g, 77);
+        assert_eq!(bits(&pa), bits(&pb));
+        assert_eq!(bits(&ma), bits(&mb));
+        assert_eq!(bits(&va), bits(&vb));
     }
 
     fn bits(x: &[f32]) -> Vec<u32> {

@@ -25,6 +25,7 @@
 
 use super::scalar;
 use super::CounterRng;
+use super::{AdamWSpec, NORM_LANES};
 use crate::precision::fp8::Fp8Format;
 use core::arch::aarch64::*;
 
@@ -367,4 +368,113 @@ pub unsafe fn sr_reduce_block(
         k += 4;
     }
     scalar::sr_reduce_block(srcs, base + main, &mut block[main..], scale, rng, counter);
+}
+
+/// NEON widened sum of squares (NUMERICS.md Rule 2a): the 8 contract
+/// lanes live in four 2-wide f64 accumulators — the grid is the
+/// contract's `NORM_LANES = 8`, not the register width, so the lane
+/// sums are bit-identical to the scalar reference and to AVX2. The
+/// sub-8 tail keeps the round-robin lane assignment (`main % 8 == 0`,
+/// so tail element `t` belongs to lane `t`).
+#[target_feature(enable = "neon")]
+pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+    debug_assert_eq!(lanes.len(), NORM_LANES);
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut acc45 = vdupq_n_f64(0.0);
+    let mut acc67 = vdupq_n_f64(0.0);
+    let mut chunks = x.chunks_exact(8);
+    for c in &mut chunks {
+        let a = vld1q_f32(c.as_ptr());
+        let b = vld1q_f32(c.as_ptr().add(4));
+        let d01 = vcvt_f64_f32(vget_low_f32(a));
+        let d23 = vcvt_high_f64_f32(a);
+        let d45 = vcvt_f64_f32(vget_low_f32(b));
+        let d67 = vcvt_high_f64_f32(b);
+        acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+        acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+        acc45 = vaddq_f64(acc45, vmulq_f64(d45, d45));
+        acc67 = vaddq_f64(acc67, vmulq_f64(d67, d67));
+    }
+    vst1q_f64(lanes.as_mut_ptr(), acc01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+    vst1q_f64(lanes.as_mut_ptr().add(4), acc45);
+    vst1q_f64(lanes.as_mut_ptr().add(6), acc67);
+    for (t, &v) in chunks.remainder().iter().enumerate() {
+        lanes[t] += (v as f64) * (v as f64);
+    }
+}
+
+/// NEON fused clip + AdamW + SR update on 4 lanes — the aarch64 mirror
+/// of the AVX2 kernel: FMA-free (explicit `vmulq`/`vaddq`, never
+/// `vfmaq`), with `vdivq_f32`/`vsqrtq_f32` correctly rounded so the
+/// scalar `update_element` chain is transcribed bitwise, and the three
+/// SR streams drawn per lane at counters `c`, `c + shard`, `c + 2·shard`.
+#[target_feature(enable = "neon")]
+pub unsafe fn adamw_update(
+    spec: &AdamWSpec,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    counter_base: u32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+    let vb1 = vdupq_n_f32(spec.hp.beta1);
+    let vb1c = vdupq_n_f32(1.0 - spec.hp.beta1);
+    let vb2 = vdupq_n_f32(spec.hp.beta2);
+    let vb2c = vdupq_n_f32(1.0 - spec.hp.beta2);
+    let veps = vdupq_n_f32(spec.hp.eps);
+    let vwd = vdupq_n_f32(spec.hp.weight_decay);
+    let vlr = vdupq_n_f32(spec.lr);
+    let vbc1 = vdupq_n_f32(spec.bc1);
+    let vbc2 = vdupq_n_f32(spec.bc2);
+    let vclip = vdupq_n_f32(spec.clip_scale.unwrap_or(1.0));
+    let key_p = vdupq_n_u32(spec.rng_p.key);
+    let key_m = vdupq_n_u32(spec.rng_m.key);
+    let key_v = vdupq_n_u32(spec.rng_v.key);
+    let vshard = vdupq_n_u32(spec.shard);
+    let vshard2 = vdupq_n_u32(spec.shard.wrapping_mul(2));
+    let mut ctr = vaddq_u32(vdupq_n_u32(counter_base), lane_iota());
+    let step = vdupq_n_u32(4);
+    let main = n - n % 4;
+    let mut k = 0;
+    while k < main {
+        let mut gv = vld1q_f32(g.as_ptr().add(k));
+        if spec.clip_scale.is_some() {
+            gv = bf16_rne_vec(vmulq_f32(gv, vclip));
+        }
+        let pv = vld1q_f32(p.as_ptr().add(k));
+        let mv = vld1q_f32(m.as_ptr().add(k));
+        let vv = vld1q_f32(v.as_ptr().add(k));
+        // m' = b1·m + (1-b1)·g ; v' = b2·v + ((1-b2)·g)·g — the scalar
+        // association, two mults and an add each, never an FMA.
+        let m2 = vaddq_f32(vmulq_f32(vb1, mv), vmulq_f32(vb1c, gv));
+        let v2 = vaddq_f32(vmulq_f32(vb2, vv), vmulq_f32(vmulq_f32(vb2c, gv), gv));
+        // upd = (m'/bc1) / (√(v'/bc2) + ε) + wd·p ; p' = p - lr·upd
+        let num = vdivq_f32(m2, vbc1);
+        let den = vaddq_f32(vsqrtq_f32(vdivq_f32(v2, vbc2)), veps);
+        let upd = vaddq_f32(vdivq_f32(num, den), vmulq_f32(vwd, pv));
+        let p2 = vsubq_f32(pv, vmulq_f32(vlr, upd));
+        vst1q_f32(p.as_mut_ptr().add(k), bf16_sr_vec(p2, ctr, key_p));
+        vst1q_f32(
+            m.as_mut_ptr().add(k),
+            bf16_sr_vec(m2, vaddq_u32(ctr, vshard), key_m),
+        );
+        vst1q_f32(
+            v.as_mut_ptr().add(k),
+            bf16_sr_vec(v2, vaddq_u32(ctr, vshard2), key_v),
+        );
+        ctr = vaddq_u32(ctr, step);
+        k += 4;
+    }
+    scalar::adamw_update(
+        spec,
+        &mut p[main..],
+        &mut m[main..],
+        &mut v[main..],
+        &g[main..],
+        counter_base.wrapping_add(main as u32),
+    );
 }

@@ -28,6 +28,7 @@
 
 use super::scalar;
 use super::CounterRng;
+use super::{AdamWSpec, NORM_LANES};
 use crate::precision::fp8::Fp8Format;
 use core::arch::x86_64::*;
 
@@ -382,4 +383,113 @@ pub unsafe fn sr_reduce_block(
         k += 8;
     }
     scalar::sr_reduce_block(srcs, base + main, &mut block[main..], scale, rng, counter);
+}
+
+/// AVX2 widened sum of squares (NUMERICS.md Rule 2a): the 8 lane sums
+/// live in two 4-wide f64 accumulators (lanes 0–3 and 4–7); every
+/// per-element op — f32→f64 convert, f64 square, f64 add — is exact or
+/// correctly rounded and in the same per-lane order as the scalar
+/// reference, so the lane sums match it bitwise. The sub-8 tail keeps
+/// the round-robin lane assignment (`main % 8 == 0`, so tail element
+/// `t` belongs to lane `t`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+    debug_assert_eq!(lanes.len(), NORM_LANES);
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut chunks = x.chunks_exact(8);
+    for c in &mut chunks {
+        let v = _mm256_loadu_ps(c.as_ptr());
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+    }
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    for (t, &v) in chunks.remainder().iter().enumerate() {
+        lanes[t] += (v as f64) * (v as f64);
+    }
+}
+
+/// AVX2 fused clip + AdamW + SR update on 8 lanes — an FMA-free
+/// transcription of the scalar `adamw_update` loop. Each arithmetic
+/// step maps 1:1 onto a correctly-rounded vector op in the scalar
+/// evaluation order (`vdivps`/`vsqrtps` are IEEE correctly rounded, so
+/// the m/bc1 ÷ (√(v/bc2) + ε) chain matches bitwise); the three SR
+/// streams draw per lane at counters `c`, `c + shard`, `c + 2·shard`
+/// from global-element-index counter vectors.
+#[target_feature(enable = "avx2")]
+pub unsafe fn adamw_update(
+    spec: &AdamWSpec,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    counter_base: u32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+    let vb1 = _mm256_set1_ps(spec.hp.beta1);
+    let vb1c = _mm256_set1_ps(1.0 - spec.hp.beta1);
+    let vb2 = _mm256_set1_ps(spec.hp.beta2);
+    let vb2c = _mm256_set1_ps(1.0 - spec.hp.beta2);
+    let veps = _mm256_set1_ps(spec.hp.eps);
+    let vwd = _mm256_set1_ps(spec.hp.weight_decay);
+    let vlr = _mm256_set1_ps(spec.lr);
+    let vbc1 = _mm256_set1_ps(spec.bc1);
+    let vbc2 = _mm256_set1_ps(spec.bc2);
+    let vclip = _mm256_set1_ps(spec.clip_scale.unwrap_or(1.0));
+    let key_p = _mm256_set1_epi32(spec.rng_p.key as i32);
+    let key_m = _mm256_set1_epi32(spec.rng_m.key as i32);
+    let key_v = _mm256_set1_epi32(spec.rng_v.key as i32);
+    let vshard = _mm256_set1_epi32(spec.shard as i32);
+    let vshard2 = _mm256_set1_epi32(spec.shard.wrapping_mul(2) as i32);
+    let mut ctr = _mm256_add_epi32(
+        _mm256_set1_epi32(counter_base as i32),
+        _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7),
+    );
+    let step = _mm256_set1_epi32(8);
+    let main = n - n % 8;
+    let mut k = 0;
+    while k < main {
+        let mut gv = _mm256_loadu_ps(g.as_ptr().add(k));
+        if spec.clip_scale.is_some() {
+            gv = bf16_rne_vec(_mm256_mul_ps(gv, vclip));
+        }
+        let pv = _mm256_loadu_ps(p.as_ptr().add(k));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(k));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(k));
+        // m' = b1·m + (1-b1)·g ; v' = b2·v + ((1-b2)·g)·g — two mults
+        // and an add each, the scalar association, never an FMA.
+        let m2 = _mm256_add_ps(_mm256_mul_ps(vb1, mv), _mm256_mul_ps(vb1c, gv));
+        let v2 = _mm256_add_ps(
+            _mm256_mul_ps(vb2, vv),
+            _mm256_mul_ps(_mm256_mul_ps(vb2c, gv), gv),
+        );
+        // upd = (m'/bc1) / (√(v'/bc2) + ε) + wd·p ; p' = p - lr·upd
+        let num = _mm256_div_ps(m2, vbc1);
+        let den = _mm256_add_ps(_mm256_sqrt_ps(_mm256_div_ps(v2, vbc2)), veps);
+        let upd = _mm256_add_ps(_mm256_div_ps(num, den), _mm256_mul_ps(vwd, pv));
+        let p2 = _mm256_sub_ps(pv, _mm256_mul_ps(vlr, upd));
+        _mm256_storeu_ps(p.as_mut_ptr().add(k), bf16_sr_vec(p2, ctr, key_p));
+        _mm256_storeu_ps(
+            m.as_mut_ptr().add(k),
+            bf16_sr_vec(m2, _mm256_add_epi32(ctr, vshard), key_m),
+        );
+        _mm256_storeu_ps(
+            v.as_mut_ptr().add(k),
+            bf16_sr_vec(v2, _mm256_add_epi32(ctr, vshard2), key_v),
+        );
+        ctr = _mm256_add_epi32(ctr, step);
+        k += 8;
+    }
+    scalar::adamw_update(
+        spec,
+        &mut p[main..],
+        &mut m[main..],
+        &mut v[main..],
+        &g[main..],
+        counter_base.wrapping_add(main as u32),
+    );
 }

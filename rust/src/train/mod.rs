@@ -27,23 +27,28 @@ use crate::util::Args;
 /// [--log FILE] [--save FILE] [--resume FILE]`.
 pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
     let cfg = TrainConfig {
-        dtype: Dtype::parse(&args.str("dtype", "fp8"))?,
-        grad_accum: args.usize("grad-accum", 2),
-        steps: args.usize("steps", 50),
-        lr: args.f32("lr", 3e-4),
-        seed: args.u32("seed", 0),
-        world: args.usize("world", 1),
-        eval_every: args.usize("eval-every", 10),
+        dtype: Dtype::parse(&args.str("dtype", "fp8")?)?,
+        grad_accum: args.usize("grad-accum", 2)?,
+        steps: args.usize("steps", 50)?,
+        lr: args.f32("lr", 3e-4)?,
+        seed: args.u32("seed", 0)?,
+        world: args.usize("world", 1)?,
+        eval_every: args.usize("eval-every", 10)?,
         ..Default::default()
     };
-    let preset = args.str("preset", "small");
+    let preset = args.str("preset", "small")?;
+    // Resolve every output/input path up front: a bare `--save`/`--log`
+    // must fail *before* the run, not after the work is done.
+    let log_path = args.opt_str("log")?;
+    let save_path = args.opt_str("save")?;
+    let resume_path = args.opt_str("resume")?;
     let steps = cfg.steps;
     let mut trainer = Trainer::new(artifacts, &preset, cfg)?;
-    if let Some(path) = args.get("resume") {
+    if let Some(path) = resume_path {
         trainer.load_checkpoint(path)?;
     }
 
-    let corpus_text = build_corpus(&args.str("data", "synth"), args.u32("seed", 0), &trainer)?;
+    let corpus_text = build_corpus(&args.str("data", "synth")?, args.u32("seed", 0)?, &trainer)?;
     let log = trainer.train_loop(&corpus_text, steps, |s| {
         println!(
             "step {:>4}  loss {:.4}  {}  {:>6.0} tok/s",
@@ -56,11 +61,11 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
         );
     })?;
 
-    if let Some(path) = args.get("log") {
+    if let Some(path) = log_path {
         std::fs::write(path, trainer::stats_to_csv(&log))?;
         println!("log written to {path}");
     }
-    if let Some(path) = args.get("save") {
+    if let Some(path) = save_path {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
     }

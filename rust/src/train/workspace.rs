@@ -18,10 +18,12 @@
 //! * `rank_params` — world × n per-device replicas of the updated
 //!   parameters; phase 2 gathers each updated chunk into them directly
 //!   (replacing the per-step `DeviceGroup` the staged all-gather builds);
-//! * `norm_partials` — one f64 partial per `PIPELINE_BLOCK` chunk, the
-//!   phase-1 reduction grid.
+//! * `norm_partials` — `NORM_LANES` f64 lane sums per `PIPELINE_BLOCK`
+//!   chunk (the widened per-lane norm grid of NUMERICS.md Rule 2a), the
+//!   phase-2 reduction arena.
 
 use crate::collectives::memcpy::PIPELINE_BLOCK;
+use crate::precision::backend::NORM_LANES;
 
 /// Pre-allocated arenas for one trainer's optimizer step. `Default` is
 /// the empty workspace; [`StepWorkspace::ensure`] (re)allocates on first
@@ -40,7 +42,10 @@ pub struct StepWorkspace {
     /// resident for the trainer's lifetime — the price of the
     /// allocate-at-startup contract vs. the old per-step `DeviceGroup`.
     pub rank_params: Vec<Vec<f32>>,
-    /// Phase-1 norm partials, one per `PIPELINE_BLOCK` chunk.
+    /// Phase-2 norm partials, lane-strided: chunk `c`'s `NORM_LANES`
+    /// widened-grid lane sums live at `c*NORM_LANES .. (c+1)*NORM_LANES`,
+    /// so the vector norm kernels store their f64 accumulators straight
+    /// into the arena (no per-chunk horizontal reduction, no allocation).
     pub norm_partials: Vec<f64>,
 }
 
@@ -88,7 +93,7 @@ impl StepWorkspace {
         } else {
             Vec::new()
         };
-        self.norm_partials = vec![0f64; self.n_chunks()];
+        self.norm_partials = vec![0f64; self.n_chunks() * NORM_LANES];
     }
 
     /// Reset the per-step accumulators (the zero-fill that replaced the
@@ -134,6 +139,7 @@ mod tests {
     fn chunk_count_covers_unaligned_n() {
         let ws = StepWorkspace::new(1, PIPELINE_BLOCK + 1);
         assert_eq!(ws.n_chunks(), 2);
-        assert_eq!(ws.norm_partials.len(), 2);
+        // lane-strided arena: NORM_LANES f64 slots per chunk
+        assert_eq!(ws.norm_partials.len(), 2 * NORM_LANES);
     }
 }

@@ -1,6 +1,50 @@
 //! Tiny `--flag value` / `--flag` CLI parser (clap stand-in).
+//!
+//! Hardened against the classic footguns of ad-hoc parsers: a flag that
+//! expects a value but was given none (`llmq train --steps`) and a value
+//! that fails to parse (`--steps abc`) both surface as a named
+//! [`ArgError`] from the typed accessors instead of a panic or a silent
+//! fall-back to the default.
 
 use std::collections::HashMap;
+use std::fmt;
+
+/// A named usage error from a typed accessor: the flag was present on
+/// the command line but unusable (missing or malformed value).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError {
+    flag: String,
+    reason: String,
+}
+
+impl ArgError {
+    fn missing(flag: &str) -> Self {
+        Self {
+            flag: flag.to_string(),
+            reason: "expects a value but none was given".to_string(),
+        }
+    }
+
+    fn invalid(flag: &str, value: &str, expected: &str) -> Self {
+        Self {
+            flag: flag.to_string(),
+            reason: format!("expects {expected}, got {value:?}"),
+        }
+    }
+
+    /// The flag the error names (without the `--` prefix).
+    pub fn flag(&self) -> &str {
+        &self.flag
+    }
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "--{} {}", self.flag, self.reason)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Parsed command line: a subcommand plus `--key value` options.
 #[derive(Debug, Default, Clone)]
@@ -17,7 +61,11 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
-    /// Parse an argument iterator (without argv[0]).
+    /// Parse an argument iterator (without argv[0]). Never panics: a
+    /// `--flag` with no following value (trailing, or followed by
+    /// another `--flag`) is recorded as a bare flag, and the typed
+    /// accessors turn a bare flag queried *for a value* into an
+    /// [`ArgError`].
     pub fn parse(iter: impl IntoIterator<Item = String>) -> Self {
         let mut out = Args::default();
         let mut it = iter.into_iter().peekable();
@@ -30,8 +78,14 @@ impl Args {
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    let v = it.next().unwrap();
-                    out.opts.insert(key.to_string(), v);
+                    // peek() said Some, so next() is Some — but never
+                    // unwrap on iterator state; a trailing flag must be
+                    // a usage error downstream, not an abort here.
+                    if let Some(v) = it.next() {
+                        out.opts.insert(key.to_string(), v);
+                    } else {
+                        out.flags.push(key.to_string());
+                    }
                 } else {
                     out.flags.push(key.to_string());
                 }
@@ -42,29 +96,65 @@ impl Args {
         out
     }
 
-    /// Raw option value.
+    /// Raw option value (no error reporting — prefer the typed
+    /// accessors in CLI paths).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `key`, or `None` when absent; a bare `--key` with
+    /// no value is the named missing-value error.
+    fn value_of(&self, key: &str) -> Result<Option<&str>, ArgError> {
+        if let Some(v) = self.opts.get(key) {
+            return Ok(Some(v.as_str()));
+        }
+        if self.flags.iter().any(|f| f == key) {
+            return Err(ArgError::missing(key));
+        }
+        Ok(None)
+    }
+
+    /// Optional string option (no default): `Ok(None)` when absent, the
+    /// named missing-value error when given bare — for flags like
+    /// `--save FILE` where silently ignoring a forgotten value would
+    /// throw work away.
+    pub fn opt_str(&self, key: &str) -> Result<Option<&str>, ArgError> {
+        self.value_of(key)
+    }
+
     /// String option with default.
-    pub fn str(&self, key: &str, default: &str) -> String {
-        self.get(key).unwrap_or(default).to_string()
+    pub fn str(&self, key: &str, default: &str) -> Result<String, ArgError> {
+        Ok(self.value_of(key)?.unwrap_or(default).to_string())
     }
 
     /// `usize` option with default.
-    pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::invalid(key, v, "an unsigned integer")),
+        }
     }
 
     /// `u32` option with default.
-    pub fn u32(&self, key: &str, default: u32) -> u32 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn u32(&self, key: &str, default: u32) -> Result<u32, ArgError> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::invalid(key, v, "a 32-bit unsigned integer")),
+        }
     }
 
     /// `f32` option with default.
-    pub fn f32(&self, key: &str, default: f32) -> f32 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32, ArgError> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::invalid(key, v, "a number")),
+        }
     }
 
     /// Was a bare `--flag` present?
@@ -85,17 +175,61 @@ mod tests {
     fn parses_subcommand_and_opts() {
         let a = mk("train --preset e2e --steps 50 --timeline --lr 0.001");
         assert_eq!(a.subcommand.as_deref(), Some("train"));
-        assert_eq!(a.str("preset", "x"), "e2e");
-        assert_eq!(a.usize("steps", 0), 50);
+        assert_eq!(a.str("preset", "x").unwrap(), "e2e");
+        assert_eq!(a.usize("steps", 0).unwrap(), 50);
         assert!(a.flag("timeline"));
-        assert!((a.f32("lr", 0.0) - 0.001).abs() < 1e-9);
-        assert_eq!(a.usize("missing", 7), 7);
+        assert!((a.f32("lr", 0.0).unwrap() - 0.001).abs() < 1e-9);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
     }
 
     #[test]
     fn equals_form() {
         let a = mk("plan --model=7B --gpus=4");
-        assert_eq!(a.str("model", ""), "7B");
-        assert_eq!(a.usize("gpus", 1), 4);
+        assert_eq!(a.str("model", "").unwrap(), "7B");
+        assert_eq!(a.usize("gpus", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_flag_is_a_named_error_not_a_panic() {
+        // `llmq train --steps` — the regression that used to abort.
+        let a = mk("train --steps");
+        let err = a.usize("steps", 50).unwrap_err();
+        assert_eq!(err.flag(), "steps");
+        assert!(err.to_string().contains("--steps"), "{err}");
+        assert!(err.to_string().contains("value"), "{err}");
+        // same when another flag follows instead of a value
+        let b = mk("train --steps --timeline");
+        assert_eq!(b.usize("steps", 50).unwrap_err().flag(), "steps");
+        assert!(b.flag("timeline"));
+        // querying it as a bare flag is still fine
+        assert!(a.flag("steps"));
+        // optional-value flags error the same way instead of silently
+        // dropping the work (`--save` with no path)
+        let c = mk("train --save");
+        assert_eq!(c.opt_str("save").unwrap_err().flag(), "save");
+        assert_eq!(c.opt_str("log").unwrap(), None);
+        let d = mk("train --save out.ckpt");
+        assert_eq!(d.opt_str("save").unwrap(), Some("out.ckpt"));
+    }
+
+    #[test]
+    fn malformed_value_is_a_named_error_not_the_default() {
+        let a = mk("train --steps abc --lr fast");
+        let err = a.usize("steps", 50).unwrap_err();
+        assert_eq!(err.flag(), "steps");
+        assert!(err.to_string().contains("abc"), "{err}");
+        assert_eq!(a.f32("lr", 0.0).unwrap_err().flag(), "lr");
+        // u32 accessor rejects negatives and garbage the same way
+        let b = mk("train --seed -3");
+        assert_eq!(b.u32("seed", 0).unwrap_err().flag(), "seed");
+    }
+
+    #[test]
+    fn empty_equals_value_is_distinct_from_missing() {
+        // `--model=` carries an (empty) value: fine for str, a parse
+        // error for numeric accessors.
+        let a = mk("plan --model= --gpus=");
+        assert_eq!(a.str("model", "7B").unwrap(), "");
+        assert_eq!(a.usize("gpus", 1).unwrap_err().flag(), "gpus");
     }
 }

@@ -3,6 +3,27 @@
 
 use std::time::{Duration, Instant};
 
+/// The execution-provenance fields every bench JSON report stamps —
+/// worker-thread count (`LLMQ_THREADS`) and resolved SIMD backend
+/// (`LLMQ_SIMD`) — as a `"threads": N,\n  "simd": "name"` fragment.
+/// One helper so the writers cannot drift (BENCH_trainstep.json once
+/// shipped without the backend name BENCH_hotpath.json had).
+///
+/// # Examples
+///
+/// ```
+/// let p = llmq::util::bench::provenance_json();
+/// assert!(p.starts_with("\"threads\": "));
+/// assert!(p.contains("\"simd\": "));
+/// ```
+pub fn provenance_json() -> String {
+    format!(
+        "\"threads\": {},\n  \"simd\": \"{}\"",
+        crate::util::par::num_threads(),
+        crate::precision::backend::level().name()
+    )
+}
+
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {

@@ -10,6 +10,6 @@ pub mod json;
 pub mod par;
 pub mod prop;
 
-pub use args::Args;
+pub use args::{ArgError, Args};
 pub use bench::Bencher;
 pub use json::Json;

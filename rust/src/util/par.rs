@@ -17,9 +17,10 @@
 //!   unchunked serial fold.
 //!
 //! Worker count comes from `LLMQ_THREADS` (default: the machine's
-//! available parallelism); [`with_threads`] overrides it for the current
-//! thread, which is how the equivalence tests pin 1/2/8 workers without
-//! process-global env mutation.
+//! available parallelism; `0` or an unparsable value warns once and
+//! falls back to 1 worker); [`with_threads`] overrides it for the
+//! current thread, which is how the equivalence tests pin 1/2/8 workers
+//! without process-global env mutation.
 //!
 //! Beneath this layer sits the `precision::backend` SIMD tier
 //! (`LLMQ_SIMD`): chunk bodies of the codec hot paths run AVX2/NEON
@@ -58,10 +59,20 @@ thread_local! {
 fn env_threads() -> Option<usize> {
     static ENV: OnceLock<Option<usize>> = OnceLock::new();
     *ENV.get_or_init(|| {
-        std::env::var("LLMQ_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&n| n >= 1)
+        let raw = std::env::var("LLMQ_THREADS").ok()?;
+        match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            // `LLMQ_THREADS=0` or garbage: the user *asked* for a thread
+            // count, so don't silently grab the whole machine — warn once
+            // (OnceLock) and run serial, the conservative reading.
+            _ => {
+                eprintln!(
+                    "llmq: LLMQ_THREADS={raw:?} is not a positive integer; \
+                     falling back to 1 worker thread"
+                );
+                Some(1)
+            }
+        }
     })
 }
 
@@ -104,6 +115,10 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
 
 /// Split `[0, len)` into at most `parts` contiguous near-equal ranges
 /// (first `len % parts` ranges are one longer). Empty iff `len == 0`.
+///
+/// Degenerate inputs are pinned (and tested): `parts == 0` is treated
+/// as 1, `parts > len` is clamped to `len` — the result never contains
+/// an empty range and always covers `[0, len)` exactly once.
 pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
     if len == 0 {
         return vec![];
@@ -123,14 +138,24 @@ pub fn split_even(len: usize, parts: usize) -> Vec<Range<usize>> {
 
 /// [`split_even`] with chunk boundaries rounded to multiples of `align`
 /// (the final chunk absorbs the sub-`align` tail). Used by
-/// [`for_each_slice_mut`] with [`SIMD_ALIGN`] so per-worker chunks stay
-/// vector-friendly; covering and ordered exactly like `split_even`.
+/// [`for_each_slice_mut`] (and the AdamW step's shard split) with
+/// [`SIMD_ALIGN`] so per-worker chunks stay vector-friendly; covering
+/// and ordered exactly like `split_even`.
+///
+/// Degenerate inputs are pinned (and tested): `align == 0` is treated
+/// as 1, `parts == 0` as 1; `align > len` or `len < parts` collapse to
+/// fewer (never empty, never duplicated) ranges — the full-coverage
+/// invariant `Σ len(rᵢ) == len` with ascending contiguous starts holds
+/// for every input.
 pub fn split_even_aligned(len: usize, parts: usize, align: usize) -> Vec<Range<usize>> {
     let align = align.max(1);
     if len == 0 {
         return vec![];
     }
     let blocks = (len + align - 1) / align;
+    // Each range is ≥ 1 block, so after scaling each holds ≥ 1 element:
+    // the `min(len)` trim only ever shortens the final range (the sole
+    // range whose end can exceed `len`), never empties an interior one.
     split_even(blocks, parts)
         .into_iter()
         .map(|r| (r.start * align)..(r.end * align).min(len))
@@ -416,6 +441,42 @@ mod tests {
                         assert_eq!(r.end % 16, 0, "unaligned interior boundary");
                     }
                     next = r.end;
+                }
+            }
+        }
+    }
+
+    /// The degenerate-input pins: `parts == 0`, `align == 0`,
+    /// `align > len`, `len < parts` — no empty range, no duplicated
+    /// coverage, ascending contiguous starts, exact coverage.
+    #[test]
+    fn split_degenerate_inputs_are_pinned() {
+        // parts == 0 behaves as parts == 1
+        assert_eq!(split_even(10, 0), vec![0..10]);
+        assert_eq!(split_even_aligned(10, 0, 16), vec![0..10]);
+        // align == 0 behaves as align == 1
+        assert_eq!(split_even_aligned(5, 2, 0), split_even(5, 2));
+        // align > len: a single range covering everything
+        assert_eq!(split_even_aligned(7, 4, 16), vec![0..7]);
+        // len < parts: one singleton range per element, none empty
+        assert_eq!(split_even(3, 8), vec![0..1, 1..2, 2..3]);
+        // and the empty input stays empty for every shape
+        assert_eq!(split_even(0, 0), vec![]);
+        assert_eq!(split_even_aligned(0, 0, 0), vec![]);
+
+        // exhaustive invariant sweep over small degenerate grids
+        for len in 0usize..40 {
+            for parts in 0usize..10 {
+                for align in [0usize, 1, 2, 16, 64] {
+                    let rs = split_even_aligned(len, parts, align);
+                    let total: usize = rs.iter().map(|r| r.len()).sum();
+                    assert_eq!(total, len, "coverage len={len} parts={parts} align={align}");
+                    let mut next = 0;
+                    for r in &rs {
+                        assert!(!r.is_empty(), "empty range len={len} parts={parts} align={align}");
+                        assert_eq!(r.start, next, "gap/overlap len={len} parts={parts} align={align}");
+                        next = r.end;
+                    }
                 }
             }
         }

@@ -7,9 +7,20 @@
 //! The two Trainer entry points differ *only* in which of these two
 //! functions they call after the (shared) microbatch loop, so this
 //! covers the artifact-gated paths too.
+//!
+//! Since the staged reference runs the **scalar** norm and AdamW kernels
+//! regardless of `LLMQ_SIMD`, fused-vs-staged equality here also pins
+//! the vector AdamW and widened-grid norm kernels end to end: under the
+//! default `LLMQ_SIMD=auto` the fused side dispatches AVX2/NEON, and CI
+//! re-runs the suite under `LLMQ_SIMD=scalar` so the scalar-vs-scalar
+//! pairing stays green too. The phase-level test at the bottom pins the
+//! dispatched phase kernels against their `*_scalar` twins directly.
 
 use llmq::collectives::memcpy::PIPELINE_BLOCK;
-use llmq::optim::fused::{fused_step, staged_step, HostStep};
+use llmq::optim::fused::{
+    fused_step, grad_norm_scalar, norm_phase, reduce_phase, staged_step, update_phase,
+    update_phase_scalar, HostStep,
+};
 use llmq::optim::AdamWParams;
 use llmq::precision::{round_to_bf16, CounterRng};
 use llmq::train::StepWorkspace;
@@ -149,4 +160,38 @@ fn fused_is_deterministic_across_repeats() {
     assert_eq!(bits(&a.1), bits(&b.1));
     assert_eq!(bits(&a.2), bits(&b.2));
     assert_eq!(bits(&a.3), bits(&b.3));
+}
+
+/// The dispatched phase-2 (widened-grid norm) and phase-3 (fused
+/// clip+AdamW+SR) kernels vs their forced-scalar twins, at 1/2/8
+/// threads and a clip-triggering norm — a direct scalar-vs-vector pin
+/// that holds whatever `LLMQ_SIMD` resolves (trivially when dispatch is
+/// already scalar; CI runs the suite both ways).
+#[test]
+fn fused_phases_match_scalar_kernels() {
+    let n = 3 * PIPELINE_BLOCK + 64;
+    for (amp, clip) in [(0.05f32, 1.0f32), (4.0, 0.5)] {
+        let hs = host_step(clip, 6, 4);
+        let mut ws = StepWorkspace::new(2, n);
+        ws.begin_step();
+        fill_dev_grads(&mut ws, 0xACC, amp);
+        par::with_threads(1, || reduce_phase(&mut ws, &hs));
+        let norm_ref = par::with_threads(1, || grad_norm_scalar(&ws.grads));
+        let (p0, m0, v0) = init_state(n);
+        let mut want = (p0.clone(), m0.clone(), v0.clone());
+        par::with_threads(1, || {
+            update_phase_scalar(&mut ws, &mut want.0, &mut want.1, &mut want.2, &hs, norm_ref)
+        });
+        for t in THREAD_COUNTS {
+            let norm = par::with_threads(t, || norm_phase(&mut ws));
+            assert_eq!(norm.to_bits(), norm_ref.to_bits(), "norm amp={amp} t={t}");
+            let mut got = (p0.clone(), m0.clone(), v0.clone());
+            par::with_threads(t, || {
+                update_phase(&mut ws, &mut got.0, &mut got.1, &mut got.2, &hs, norm)
+            });
+            assert_eq!(bits(&got.0), bits(&want.0), "p amp={amp} t={t}");
+            assert_eq!(bits(&got.1), bits(&want.1), "m amp={amp} t={t}");
+            assert_eq!(bits(&got.2), bits(&want.2), "v amp={amp} t={t}");
+        }
+    }
 }

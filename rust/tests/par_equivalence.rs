@@ -5,10 +5,14 @@
 //! including empty, lane-remainder and non-chunk-aligned lengths — and
 //! every vector kernel must match the scalar spec bitwise whatever
 //! backend `LLMQ_SIMD`/detection resolves (the arch-direct tests at the
-//! bottom pin the AVX2/NEON kernels even when dispatch is scalar). The
-//! one documented exception is `global_norm`, whose fixed-grid tree
-//! reduction is bit-identical *across thread counts* but only
-//! ULP-bounded against the unchunked serial fold.
+//! bottom pin the AVX2/NEON kernels even when dispatch is scalar) —
+//! including the vector AdamW update (pinned against an independent
+//! re-derivation of the update math + SR counter layout, at denormal/
+//! NaN grads and eps extremes) and the widened per-lane f64 norm grid
+//! (NUMERICS.md Rule 2a). The one documented exception is
+//! `global_norm`, whose fixed-grid tree reduction is bit-identical
+//! *across thread counts and backends* but only ULP-bounded against
+//! the unchunked serial fold.
 
 use llmq::collectives::{DeviceGroup, memcpy::reduce_scatter_memcpy_serial, reduce_scatter_memcpy};
 use llmq::optim::{AdamW, AdamWParams, clip_global_norm, global_norm, global_norm_serial};
@@ -294,6 +298,100 @@ struct BackendFns {
     bf16_pack: fn(&[f32], &mut [u16]),
     bf16_unpack: fn(&[u16], &mut [f32]),
     sr_reduce_block: fn(&[Vec<f32>], usize, &mut [f32], Option<f32>, &CounterRng, u32),
+    sumsq_lanes_into: fn(&[f32], &mut [f64]),
+    adamw_update: fn(&backend::AdamWSpec, &mut [f32], &mut [f32], &mut [f32], &[f32], u32),
+}
+
+/// Independent re-derivation of the Rule 2a widened-lane sum of squares
+/// (NUMERICS.md): element `r` contributes its f64 square to lane
+/// `r % NORM_LANES`, ascending `r` within each lane.
+fn sumsq_lanes_spec(x: &[f32]) -> [f64; backend::NORM_LANES] {
+    let mut lanes = [0.0f64; backend::NORM_LANES];
+    for (r, &v) in x.iter().enumerate() {
+        lanes[r % backend::NORM_LANES] += (v as f64) * (v as f64);
+    }
+    lanes
+}
+
+/// Independent re-derivation of the fused clip + AdamW + SR element
+/// loop from the paper's formulas — the oracle the vector AdamW kernels
+/// (and the dispatch layer) are pinned against. Deliberately *not* a
+/// call into the crate's kernel, so a transcription bug in the shared
+/// scalar loop cannot hide.
+fn adamw_update_spec(
+    spec: &backend::AdamWSpec,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    counter_base: u32,
+) {
+    let hp = &spec.hp;
+    for i in 0..p.len() {
+        let gi = match spec.clip_scale {
+            Some(s) => round_to_bf16(g[i] * s),
+            None => g[i],
+        };
+        let m2 = hp.beta1 * m[i] + (1.0 - hp.beta1) * gi;
+        let v2 = hp.beta2 * v[i] + (1.0 - hp.beta2) * gi * gi;
+        let upd = (m2 / spec.bc1) / ((v2 / spec.bc2).sqrt() + hp.eps) + hp.weight_decay * p[i];
+        let p2 = p[i] - spec.lr * upd;
+        let c = counter_base.wrapping_add(i as u32);
+        p[i] = stochastic_round_bf16(p2, &spec.rng_p, c);
+        m[i] = stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard));
+        v[i] = stochastic_round_bf16(v2, &spec.rng_v, c.wrapping_add(spec.shard.wrapping_mul(2)));
+    }
+}
+
+/// The AdamW-update battery: lane-remainder lengths, denormal/NaN/inf
+/// grads and params, eps extremes (0, tiny, huge), clip on/off, counter
+/// bases straddling the u32 wrap — every combination pinned bitwise to
+/// the independent scalar spec above.
+fn check_adamw_matches_spec(b: &BackendFns) {
+    let lb = b.label;
+    let hps = [
+        (0.9f32, 0.95f32, 1e-8f32, 0.1f32),
+        (0.9, 0.999, 0.0, 0.0),    // eps = 0: div by bare sqrt
+        (0.5, 0.5, 1e30, 0.01),    // huge eps: denominator dominated
+    ];
+    for n in SIMD_LENS {
+        let p0 = simd_data(n, 0xAD01); // NaN/±0/±inf/denormals planted
+        let m0 = data(n, 0xAD02);
+        let v0: Vec<f32> = simd_data(n, 0xAD03).iter().map(|x| x.abs()).collect();
+        let g = simd_data(n, 0xAD04); // denormal/NaN grads
+        for &(beta1, beta2, eps, weight_decay) in &hps {
+            for clip_scale in [None, Some(0.37f32)] {
+                for counter_base in [0u32, u32::MAX - 7] {
+                    let spec = backend::AdamWSpec {
+                        hp: AdamWParams {
+                            beta1,
+                            beta2,
+                            eps,
+                            weight_decay,
+                        },
+                        lr: 3e-4,
+                        bc1: 1.0 - beta1 * beta1,
+                        bc2: 1.0 - beta2 * beta2,
+                        clip_scale,
+                        rng_p: CounterRng::new(0x11A17),
+                        rng_m: CounterRng::new(0xA110),
+                        rng_v: CounterRng::new(0xB220),
+                        shard: n as u32 + 13,
+                    };
+                    let (mut pw, mut mw, mut vw) = (p0.clone(), m0.clone(), v0.clone());
+                    adamw_update_spec(&spec, &mut pw, &mut mw, &mut vw, &g, counter_base);
+                    let (mut pg, mut mg, mut vg) = (p0.clone(), m0.clone(), v0.clone());
+                    (b.adamw_update)(&spec, &mut pg, &mut mg, &mut vg, &g, counter_base);
+                    let ctx = format!(
+                        "{lb} adamw n={n} eps={eps} clip={clip_scale:?} cb={counter_base}"
+                    );
+                    assert_eq!(bits(&pg), bits(&pw), "p {ctx}");
+                    assert_eq!(bits(&mg), bits(&mw), "m {ctx}");
+                    assert_eq!(bits(&vg), bits(&vw), "v {ctx}");
+                }
+            }
+        }
+    }
 }
 
 /// Pin every kernel of `b` bit-identical to the scalar spec across the
@@ -378,6 +476,23 @@ fn check_backend_matches_scalar_spec(b: &BackendFns) {
         (b.bf16_unpack)(&want_p, &mut got_u);
         assert_eq!(bits(&got_u), bits(&want_u), "{lb} unpack n={n}");
 
+        // widened-lane norm grid: per-lane f64 sums pinned bitwise
+        let want_lanes = sumsq_lanes_spec(&base);
+        let mut got_lanes = [0.0f64; backend::NORM_LANES];
+        (b.sumsq_lanes_into)(&base, &mut got_lanes);
+        for l in 0..backend::NORM_LANES {
+            assert_eq!(
+                got_lanes[l].to_bits(),
+                want_lanes[l].to_bits(),
+                "{lb} sumsq lane {l} n={n}"
+            );
+        }
+        assert_eq!(
+            backend::fold_lanes(&got_lanes).to_bits(),
+            backend::fold_lanes(&want_lanes).to_bits(),
+            "{lb} sumsq fold n={n}"
+        );
+
         // SR reduce epilogue: world sizes, block offsets, scaled/unscaled
         for world in [1usize, 2, 4] {
             let srcs: Vec<Vec<f32>> = (0..world)
@@ -420,7 +535,7 @@ fn check_backend_matches_scalar_spec(b: &BackendFns) {
 /// CI runs the suite both ways).
 #[test]
 fn backend_dispatch_matches_scalar_spec_at_lane_remainders() {
-    check_backend_matches_scalar_spec(&BackendFns {
+    let fns = BackendFns {
         label: "dispatch",
         absmax: backend::absmax,
         fp8_round_scaled: backend::fp8_round_scaled,
@@ -433,7 +548,11 @@ fn backend_dispatch_matches_scalar_spec_at_lane_remainders() {
         bf16_pack: backend::bf16_pack,
         bf16_unpack: backend::bf16_unpack,
         sr_reduce_block: backend::sr_reduce_block,
-    });
+        sumsq_lanes_into: backend::sumsq_lanes_into,
+        adamw_update: backend::adamw_update,
+    };
+    check_backend_matches_scalar_spec(&fns);
+    check_adamw_matches_spec(&fns);
 }
 
 /// Thin safe wrappers over the AVX2 kernels — sound only after the
@@ -483,6 +602,19 @@ mod avx2_wrap {
     ) {
         unsafe { x86::sr_reduce_block(s, base, blk, sc, r, c) }
     }
+    pub fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+        unsafe { x86::sumsq_lanes_into(x, lanes) }
+    }
+    pub fn adamw_update(
+        spec: &llmq::precision::backend::AdamWSpec,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        c: u32,
+    ) {
+        unsafe { x86::adamw_update(spec, p, m, v, g, c) }
+    }
 }
 
 /// The AVX2 kernels themselves (not just whatever dispatch picked) are
@@ -494,7 +626,7 @@ fn avx2_kernels_bit_identical_to_scalar_spec() {
         eprintln!("skipping avx2 kernel pin: host CPU has no AVX2");
         return;
     }
-    check_backend_matches_scalar_spec(&BackendFns {
+    let fns = BackendFns {
         label: "avx2",
         absmax: avx2_wrap::absmax,
         fp8_round_scaled: avx2_wrap::fp8_round_scaled,
@@ -507,7 +639,11 @@ fn avx2_kernels_bit_identical_to_scalar_spec() {
         bf16_pack: avx2_wrap::bf16_pack,
         bf16_unpack: avx2_wrap::bf16_unpack,
         sr_reduce_block: avx2_wrap::sr_reduce_block,
-    });
+        sumsq_lanes_into: avx2_wrap::sumsq_lanes_into,
+        adamw_update: avx2_wrap::adamw_update,
+    };
+    check_backend_matches_scalar_spec(&fns);
+    check_adamw_matches_spec(&fns);
 }
 
 /// Thin safe wrappers over the NEON kernels (NEON is mandatory on
@@ -557,13 +693,26 @@ mod neon_wrap {
     ) {
         unsafe { neon::sr_reduce_block(s, base, blk, sc, r, c) }
     }
+    pub fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
+        unsafe { neon::sumsq_lanes_into(x, lanes) }
+    }
+    pub fn adamw_update(
+        spec: &llmq::precision::backend::AdamWSpec,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        c: u32,
+    ) {
+        unsafe { neon::adamw_update(spec, p, m, v, g, c) }
+    }
 }
 
 /// The NEON kernels pinned to the scalar spec, independent of dispatch.
 #[cfg(target_arch = "aarch64")]
 #[test]
 fn neon_kernels_bit_identical_to_scalar_spec() {
-    check_backend_matches_scalar_spec(&BackendFns {
+    let fns = BackendFns {
         label: "neon",
         absmax: neon_wrap::absmax,
         fp8_round_scaled: neon_wrap::fp8_round_scaled,
@@ -576,7 +725,85 @@ fn neon_kernels_bit_identical_to_scalar_spec() {
         bf16_pack: neon_wrap::bf16_pack,
         bf16_unpack: neon_wrap::bf16_unpack,
         sr_reduce_block: neon_wrap::sr_reduce_block,
-    });
+        sumsq_lanes_into: neon_wrap::sumsq_lanes_into,
+        adamw_update: neon_wrap::adamw_update,
+    };
+    check_backend_matches_scalar_spec(&fns);
+    check_adamw_matches_spec(&fns);
+}
+
+/// `AdamW::step` (parallel + SIMD-dispatched) vs the pure-scalar
+/// `step_serial` oracle at lane-remainder lengths and 1/2/8 threads,
+/// with IEEE specials planted in params and grads — the dispatch-level
+/// face of the AdamW battery above.
+#[test]
+fn adamw_step_matches_scalar_serial_at_lane_remainders() {
+    let opt = AdamW::new(AdamWParams::default());
+    for n in SIMD_LENS {
+        let p0 = simd_data(n, 0x9A);
+        let m0 = data(n, 0x9B);
+        let v0: Vec<f32> = data(n, 0x9C).iter().map(|x| x.abs()).collect();
+        let g = simd_data(n, 0x9D);
+        let (mut pr, mut mr, mut vr) = (p0.clone(), m0.clone(), v0.clone());
+        opt.step_serial(&mut pr, &mut mr, &mut vr, &g, 1e-3, 7, 4321, n as u32 + 13);
+        for t in THREAD_COUNTS {
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            par::with_threads(t, || {
+                opt.step(&mut p, &mut m, &mut v, &g, 1e-3, 7, 4321, n as u32 + 13)
+            });
+            assert_eq!(bits(&p), bits(&pr), "p n={n} t={t}");
+            assert_eq!(bits(&m), bits(&mr), "m n={n} t={t}");
+            assert_eq!(bits(&v), bits(&vr), "v n={n} t={t}");
+        }
+    }
+}
+
+/// The widened-grid norm sweep: `global_norm` and `fused::grad_norm`
+/// are bit-identical (a) across 1/2/8 threads, (b) to their scalar-
+/// kernel counterparts whatever backend dispatch resolves, and (c) to
+/// an independent re-derivation of the Rule 2a two-level grid.
+#[test]
+fn widened_norm_grid_matches_scalar_spec_and_threads() {
+    // lengths straddling both chunk grids (REDUCE_CHUNK 64K, PIPELINE
+    // block 8K) and the 8-lane sub-grid
+    for n in [0usize, 1, 7, 9, 8191, 8193, 65_537, 100_003] {
+        let g = data(n, 0x6068);
+        // independent spec: REDUCE_CHUNK chunks of 8-lane partials
+        let spec_norm = |chunk: usize| -> f32 {
+            let mut acc = 0.0f64;
+            let mut s = 0usize;
+            while s < n {
+                let e = (s + chunk).min(n);
+                acc += backend::fold_lanes(&sumsq_lanes_spec(&g[s..e]));
+                s = e;
+            }
+            acc.sqrt() as f32
+        };
+        let want_global = spec_norm(par::REDUCE_CHUNK);
+        let want_pipeline = spec_norm(llmq::collectives::memcpy::PIPELINE_BLOCK);
+        let one = par::with_threads(1, || global_norm(&g));
+        assert_eq!(one.to_bits(), want_global.to_bits(), "global spec n={n}");
+        let pipe = par::with_threads(1, || llmq::optim::fused::grad_norm(&g));
+        assert_eq!(pipe.to_bits(), want_pipeline.to_bits(), "pipeline spec n={n}");
+        for t in THREAD_COUNTS {
+            assert_eq!(
+                par::with_threads(t, || global_norm(&g)).to_bits(),
+                one.to_bits(),
+                "global threads n={n} t={t}"
+            );
+            assert_eq!(
+                par::with_threads(t, || llmq::optim::fused::grad_norm(&g)).to_bits(),
+                pipe.to_bits(),
+                "pipeline threads n={n} t={t}"
+            );
+            // dispatched kernel vs forced-scalar kernel on the same grid
+            assert_eq!(
+                par::with_threads(t, || llmq::optim::fused::grad_norm_scalar(&g)).to_bits(),
+                pipe.to_bits(),
+                "scalar-kernel pin n={n} t={t}"
+            );
+        }
+    }
 }
 
 /// The parallel wrappers (now SIMD inside each chunk) still match their
