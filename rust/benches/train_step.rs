@@ -58,6 +58,7 @@ fn write_json(
     phases: &[Phase],
     ns_staged: f64,
     ns_fused: f64,
+    ns_async: f64,
 ) {
     let mut s = String::from("{\n");
     s += &format!(
@@ -93,8 +94,10 @@ fn write_json(
     s += "  ],\n";
     s += &format!(
         "  \"total\": {{\"ns_staged\": {ns_staged:.0}, \"ns_fused\": {ns_fused:.0}, \
-         \"speedup\": {:.3}}}\n}}\n",
-        ns_staged / ns_fused
+         \"ns_async\": {ns_async:.0}, \"speedup\": {:.3}, \
+         \"async_speedup\": {:.3}}}\n}}\n",
+        ns_staged / ns_fused,
+        ns_fused / ns_async
     );
     let path = repo_root_path("BENCH_trainstep.json");
     match std::fs::write(&path, &s) {
@@ -314,13 +317,48 @@ fn main() {
         fused::fused_step(&mut ws, &mut pf, &mut mf, &mut vf, &hs)
     });
 
+    // The exec stream-program port: same kernels, same grid, overlap
+    // from streams instead of par workers — the sync-vs-async duel.
+    let mut pa = p0.clone();
+    let mut ma = vec![0f32; n];
+    let mut va = vec![0f32; n];
+    b.bench("async step [end-to-end, LLMQ_STREAMS]", || {
+        ws.grads.fill(0.0);
+        fused::fused_step_async(&mut ws, &mut pa, &mut ma, &mut va, &hs)
+    });
+    b.bench("async step [serial oracle x1]", || {
+        ws.grads.fill(0.0);
+        llmq::exec::with_async(false, || {
+            fused::fused_step_async(&mut ws, &mut pa, &mut ma, &mut va, &hs)
+        })
+    });
+
+    record(
+        &b,
+        "async",
+        "end-to-end",
+        "async step [end-to-end, LLMQ_STREAMS]",
+        None,
+        None,
+    );
+    record(
+        &b,
+        "async-serial-oracle",
+        "end-to-end",
+        "async step [serial oracle x1]",
+        None,
+        None,
+    );
+
     let ns_staged = median_ns(&b, "staged step [end-to-end]");
     let ns_fused = median_ns(&b, "fused step [end-to-end]");
+    let ns_async = median_ns(&b, "async step [end-to-end, LLMQ_STREAMS]");
     println!(
-        "\n  -> host step: {:.2}x speedup (staged {:.2} ms -> fused {:.2} ms)",
+        "\n  -> host step: {:.2}x speedup (staged {:.2} ms -> fused {:.2} ms -> async {:.2} ms)",
         ns_staged / ns_fused,
         ns_staged / 1e6,
-        ns_fused / 1e6
+        ns_fused / 1e6,
+        ns_async / 1e6
     );
-    write_json(n, world, n_micro, &phases, ns_staged, ns_fused);
+    write_json(n, world, n_micro, &phases, ns_staged, ns_fused, ns_async);
 }

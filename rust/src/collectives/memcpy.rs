@@ -56,6 +56,7 @@ pub fn reduce_scatter_memcpy(
     let chunk = grads.chunk_len();
     assert_eq!(acc.len(), world);
     let rng = *rng;
+    let srcs: Vec<&[f32]> = grads.buffers.iter().map(|b| b.as_slice()).collect();
 
     // (global-offset, block) work grid — the chunk pipeline.
     let mut items: Vec<(usize, &mut [f32])> = Vec::new();
@@ -69,7 +70,7 @@ pub fn reduce_scatter_memcpy(
     // Round-robin blocks across workers: balances ranks and keeps every
     // worker streaming from all source buffers (the multi-channel split).
     par::for_each_item(items, |(base, block)| {
-        reduce_block(grads, base, block, None, &rng, counter)
+        reduce_block(&srcs, base, block, None, &rng, counter)
     });
 }
 
@@ -84,14 +85,14 @@ pub fn reduce_scatter_memcpy(
 /// vector path is bit-identical to the scalar loop the `*_serial`
 /// references below keep.
 fn reduce_block(
-    grads: &DeviceGroup,
+    srcs: &[&[f32]],
     base: usize,
     block: &mut [f32],
     scale: Option<f32>,
     rng: &CounterRng,
     counter: u32,
 ) {
-    crate::precision::backend::sr_reduce_block(&grads.buffers, base, block, scale, rng, counter)
+    crate::precision::backend::sr_reduce_block(srcs, base, block, scale, rng, counter)
 }
 
 /// Pre-scaled reduce-scatter with a *flat* accumulator — the fused
@@ -117,10 +118,11 @@ pub fn reduce_scatter_scaled_memcpy(
     assert_eq!(out.len(), grads.numel(), "flat accumulator length");
     let _ = grads.chunk_len(); // assert world | numel
     let rng = *rng;
+    let srcs: Vec<&[f32]> = grads.buffers.iter().map(|b| b.as_slice()).collect();
 
     let items = par::split_blocks_mut(out, PIPELINE_BLOCK);
     par::for_each_item(items, |(i0, block)| {
-        reduce_block(grads, i0, block, Some(scale), &rng, counter)
+        reduce_block(&srcs, i0, block, Some(scale), &rng, counter)
     });
 }
 

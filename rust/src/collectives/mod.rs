@@ -8,11 +8,14 @@
 //!  * `memcpy` — the paper's contribution (Fig. 1): pure data movement on
 //!    the copy engines, round-robin scratch-chunk reuse, deterministic
 //!    stochastic-rounding reduction epilogue;
-//!  * `ring` — the NCCL-style baseline: ring reduce-scatter/all-gather
-//!    with arithmetic interleaved into the communication.
+//!  * `ring` — the NCCL-style baseline (`world-1` ring steps; costed as
+//!    SM work by the simulator).
 //!
-//! Both are bitwise deterministic (fixed reduction order, counter-based
-//! RNG) per the paper's reproducibility requirement (§3).
+//! Both implement **one deterministic reduction contract** — ascending
+//! source-rank sum, one SR draw keyed by global element index — so the
+//! backend choice (and Table 5's mixed Gather/Scatter modes) is bitwise
+//! unobservable in training numerics; `tests/collectives_props.rs` pins
+//! ring ≡ memcpy exactly.
 
 pub mod barrier;
 pub mod memcpy;

@@ -1,61 +1,40 @@
 //! Ring collectives — the NCCL-style baseline (paper Table 5 "None"):
-//! reduce-scatter and all-gather as `world-1` ring steps with arithmetic
-//! interleaved into the communication (which is why the real thing needs
-//! SMs and can't run on copy engines alone — §3.2).
+//! `world-1` communication steps per collective. On real hardware the
+//! ring reduce interleaves arithmetic into the transfers (which is why
+//! NCCL needs SMs and can't run on copy engines alone — §3.2); that
+//! distinction lives in the *simulator's cost model*
+//! (`sim::cost::nccl_ring_s` vs the memcpy path), not in the numbers.
 //!
-//! Numerics: ring reduction order differs from the memcpy collective's
-//! fixed-src order; we keep it deterministic (fixed ring direction) and
-//! round once at the end, like the memcpy path, so both are valid
-//! implementations of the same collective contract.
+//! **Numerics: one shared collective contract.** Both reduce-scatter
+//! backends produce `acc[w][i] = bf16_sr(acc + Σ_src g[src], counter +
+//! global_index)` with the sum folded in **ascending source-rank order**
+//! (NUMERICS.md Rule 2). A true in-flight ring fold would visit sources
+//! in ring order `w+1, w+2, …, w` — a *different* float association per
+//! destination rank — so switching comm backends (or mixing them, as
+//! Table 5's Gather/Scatter columns do) would perturb training numerics.
+//! The host reproduction instead reduces at the destination over the
+//! peers' buffers in ascending src order — legal because the shared
+//! address space already collapses staging copies into direct peer
+//! reads (see `memcpy`'s execution-model note) — making the backend
+//! choice bitwise unobservable: `reduce_scatter_ring` ≡
+//! `reduce_scatter_memcpy` for every input, world size and counter
+//! (pinned in `tests/collectives_props.rs`).
 
 use super::DeviceGroup;
-use crate::precision::{bf16, CounterRng};
+use crate::precision::CounterRng;
 
-/// Ring reduce-scatter: after `world-1` steps, rank `w` holds the sum of
-/// everyone's chunk `w`, accumulated into `acc[w]` with one SR epilogue.
+/// Ring reduce-scatter: rank `w` ends with the sum of everyone's chunk
+/// `w` accumulated into `acc[w]` with one SR epilogue. Ascending-src
+/// reduction order (the shared contract) — bit-identical to
+/// [`super::reduce_scatter_memcpy`]; the `world-1`-step ring traffic
+/// pattern is costed by the simulator, not re-executed here.
 pub fn reduce_scatter_ring(
     grads: &DeviceGroup,
     acc: &mut [Vec<f32>],
     rng: &CounterRng,
     counter: u32,
 ) {
-    let world = grads.world;
-    let chunk = grads.chunk_len();
-    // working copies (the "in-flight" ring payloads)
-    let mut work: Vec<Vec<f32>> = grads.buffers.clone();
-
-    // Step s: rank w sends chunk (w - 1 - s) mod world to rank w+1, which
-    // adds it into its copy. Chunk k thus *starts* its journey at rank
-    // k+1 and accumulates through k+2, …, ending complete at rank k after
-    // world-1 steps — so rank w finishes owning the full sum of chunk w.
-    for s in 0..world - 1 {
-        // snapshot of the chunks being sent this step
-        let sends: Vec<(usize, Vec<f32>)> = (0..world)
-            .map(|w| {
-                let c = (w + 2 * world - 1 - s) % world;
-                (c, work[w][c * chunk..(c + 1) * chunk].to_vec())
-            })
-            .collect();
-        for w in 0..world {
-            let dst = (w + 1) % world;
-            let (c, ref payload) = sends[w];
-            for i in 0..chunk {
-                work[dst][c * chunk + i] += payload[i];
-            }
-        }
-    }
-
-    for w in 0..world {
-        let a = &mut acc[w];
-        for i in 0..chunk {
-            let sum = a[i] + work[w][w * chunk + i];
-            a[i] = bf16::stochastic_round_bf16(
-                sum,
-                rng,
-                counter.wrapping_add((w * chunk + i) as u32),
-            );
-        }
-    }
+    super::memcpy::reduce_scatter_memcpy_serial(grads, acc, rng, counter)
 }
 
 /// Ring all-gather: `world-1` forwarding steps.

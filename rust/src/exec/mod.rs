@@ -1,0 +1,711 @@
+//! Host-side asynchronous execution runtime modeled on CUDA streams and
+//! events — the copy-engine overlap substrate (paper §3.1/§3.2).
+//!
+//! The paper's headline wins come from overlapping compute with
+//! copy-engine transfers: double-buffered offload and memcpy collectives
+//! only pay off when a chunk's transfer can start the moment its sources
+//! are ready, instead of at a bulk barrier. This module provides the
+//! host-side runtime that expresses those schedules:
+//!
+//! * a **stream** is a FIFO op queue (CUDA stream semantics: ops on one
+//!   stream run in submission order, ops on different streams may
+//!   overlap). Streams are plain indices `0..Exec::n_streams()`;
+//! * an **[`Event`]** is recorded on a stream ([`Exec::record`]) and
+//!   fires when every op submitted to that stream before it has
+//!   finished. Other streams order themselves after it with
+//!   [`Exec::wait`]; the host can [`Event::query`] (poll) or
+//!   [`Event::sync`] (block);
+//! * an **[`Exec`]** owns one worker thread per stream for the duration
+//!   of an [`scope`] call, on the same std-only scoped-thread substrate
+//!   as `util::par` (no pool daemon, no dependencies). Worker count
+//!   comes from `LLMQ_STREAMS` (default: the `util::par` worker count);
+//!   `LLMQ_ASYNC=off` replaces the workers with inline execution at
+//!   submission — the **serial oracle** every async schedule must match
+//!   bitwise.
+//!
+//! # Determinism (NUMERICS.md Rule 4)
+//!
+//! The runtime never makes results depend on *completion* order. Ops are
+//! required to be deterministic functions of their buffers (elementwise
+//! kernels keyed by global element index, reductions on fixed grids) and
+//! the dependency edges — FIFO within a stream, events across streams —
+//! must cover every read-after-write, write-after-read and
+//! write-after-write pair. Under that contract, every legal schedule
+//! (including the serial oracle's submission-order schedule) produces
+//! bit-identical memory. [`Baton`] makes violations loud: it panics on
+//! contended access instead of silently serializing.
+//!
+//! # Deadlock freedom
+//!
+//! Events are *created by* [`Exec::record`], so a wait can only name an
+//! event whose record is already enqueued — dependency edges always
+//! point backwards in submission order, exactly like `sim::engine` task
+//! deps. By induction on event creation order every record is eventually
+//! reached and every wait eventually satisfied: stream programs cannot
+//! deadlock. The DES cross-check (`sim::replay`) re-verifies this edge
+//! direction on a recorded [`Trace`].
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, TryLockError};
+
+use crate::util::par;
+
+/// Hard cap on stream workers (matches `util::par`'s spirit: a knob,
+/// not a footgun).
+pub const MAX_STREAMS: usize = 64;
+
+thread_local! {
+    static STREAMS_OVERRIDE: Cell<usize> = Cell::new(0);
+    // 0 = follow env, 1 = force serial, 2 = force async
+    static ASYNC_OVERRIDE: Cell<u8> = Cell::new(0);
+}
+
+fn env_async() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        match std::env::var("LLMQ_ASYNC") {
+            // Anything that reads as "off" selects the serial oracle;
+            // unset or any other value keeps the async runtime on.
+            Ok(v) => !matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "off" | "0" | "false" | "no"
+            ),
+            Err(_) => true,
+        }
+    })
+}
+
+fn env_streams() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var("LLMQ_STREAMS").ok()?;
+        match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            // Same policy as LLMQ_THREADS: an explicit-but-broken value
+            // warns once and falls back to the conservative reading.
+            _ => {
+                eprintln!(
+                    "llmq: LLMQ_STREAMS={raw:?} is not a positive integer; \
+                     falling back to 1 stream"
+                );
+                Some(1)
+            }
+        }
+    })
+}
+
+/// Is the async runtime enabled? [`with_async`] override, else
+/// `LLMQ_ASYNC` (default on; `off`/`0`/`false`/`no` select the serial
+/// oracle).
+pub fn async_enabled() -> bool {
+    match ASYNC_OVERRIDE.with(|c| c.get()) {
+        1 => false,
+        2 => true,
+        _ => env_async(),
+    }
+}
+
+/// Stream count for [`scope`]: [`with_streams`] override, else
+/// `LLMQ_STREAMS`, else the `util::par` worker count. Clamped to
+/// `[1, MAX_STREAMS]`.
+pub fn num_streams() -> usize {
+    let o = STREAMS_OVERRIDE.with(|c| c.get());
+    let n = if o != 0 {
+        o
+    } else {
+        env_streams().unwrap_or_else(par::num_threads)
+    };
+    n.clamp(1, MAX_STREAMS)
+}
+
+/// Pin the stream count to `n` on this thread for the duration of `f`
+/// (nested calls: innermost wins; restored on unwind) — how tests sweep
+/// 1/2/4 streams without touching process env.
+pub fn with_streams<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    assert!(n >= 1, "stream count must be >= 1");
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            STREAMS_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(STREAMS_OVERRIDE.with(|c| c.replace(n)));
+    f()
+}
+
+/// Force the async runtime on (`true`) or the serial oracle (`false`)
+/// on this thread for the duration of `f` — the test-side twin of
+/// `LLMQ_ASYNC`, with the same restore-on-unwind semantics as
+/// [`with_streams`].
+pub fn with_async<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ASYNC_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let v = if on { 2 } else { 1 };
+    let _restore = Restore(ASYNC_OVERRIDE.with(|c| c.replace(v)));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct EventState {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl EventState {
+    fn signal(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+    fn block(&self) {
+        let mut d = self.done.lock().unwrap();
+        while !*d {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+    fn query(&self) -> bool {
+        *self.done.lock().unwrap()
+    }
+}
+
+/// A one-shot completion marker recorded on a stream by
+/// [`Exec::record`]. Fires when every op submitted to that stream before
+/// the record has finished. Clonable; clones observe the same firing.
+#[derive(Debug, Clone)]
+pub struct Event {
+    state: Arc<EventState>,
+    id: u32,
+}
+
+impl Event {
+    /// Has the event fired? (non-blocking poll)
+    pub fn query(&self) -> bool {
+        self.state.query()
+    }
+
+    /// Block the calling thread until the event fires. Under the serial
+    /// oracle events fire at record time, so this never blocks.
+    pub fn sync(&self) {
+        self.state.block();
+    }
+
+    /// Trace identity of this event (index into its scope's records).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace
+// ---------------------------------------------------------------------------
+
+/// One submitted runtime op, in program (submission) order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// A work op enqueued on `stream`.
+    Launch {
+        /// Stream index the op was enqueued on.
+        stream: u32,
+        /// Static label for dumps and DES replay.
+        label: &'static str,
+    },
+    /// An event record enqueued on `stream`.
+    Record {
+        /// Stream index the record was enqueued on.
+        stream: u32,
+        /// Event id ([`Event::id`]).
+        event: u32,
+    },
+    /// A cross-stream wait enqueued on `stream`.
+    Wait {
+        /// Stream index that waits.
+        stream: u32,
+        /// Event id being waited on.
+        event: u32,
+    },
+}
+
+/// The recorded program of one [`scope`]: every launch/record/wait in
+/// submission order. `sim::replay` turns this into a DES task graph and
+/// verifies its dependency edges.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Stream count of the scope that recorded this trace.
+    pub n_streams: usize,
+    /// Whether the scope ran the async workers (false = serial oracle).
+    pub async_mode: bool,
+    /// Ops in submission order.
+    pub ops: Vec<TraceOp>,
+}
+
+// ---------------------------------------------------------------------------
+// The executor
+// ---------------------------------------------------------------------------
+
+type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+enum Msg<'env> {
+    Run(Job<'env>, &'static str),
+    Record(Arc<EventState>),
+    Wait(Arc<EventState>),
+}
+
+#[derive(Default)]
+struct Shared {
+    failed: AtomicBool,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Shared {
+    /// First panic wins; later ops are skipped so the scope drains fast
+    /// and the panic resurfaces on the submitting thread.
+    fn fail(&self, payload: Box<dyn std::any::Any + Send>, label: &'static str) {
+        {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        self.failed.store(true, Ordering::Release);
+        eprintln!("llmq exec: op {label:?} panicked; draining streams");
+    }
+}
+
+fn worker(rx: Receiver<Msg<'_>>, shared: &Shared) {
+    for msg in rx {
+        match msg {
+            Msg::Run(job, label) => {
+                if shared.failed.load(Ordering::Acquire) {
+                    continue; // drain without running more user ops
+                }
+                if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                    shared.fail(p, label);
+                }
+            }
+            // Records always execute (even after a failure) so that no
+            // Wait — on this or any other stream — can block forever:
+            // every wait's record is already enqueued (see module docs).
+            Msg::Record(ev) => ev.signal(),
+            Msg::Wait(ev) => ev.block(),
+        }
+    }
+}
+
+enum Mode<'env> {
+    /// `LLMQ_ASYNC=off`: ops run inline at submission, in program order
+    /// — a legal schedule of any correct stream program, and the oracle
+    /// the async schedules are pinned against.
+    Serial,
+    /// One FIFO worker per stream.
+    Streams(Vec<Sender<Msg<'env>>>),
+}
+
+/// The per-[`scope`] executor: submit ops/records/waits onto streams.
+/// All submission happens from the thread that entered the scope; the
+/// ops themselves run on the stream workers (or inline under the serial
+/// oracle).
+pub struct Exec<'env> {
+    mode: Mode<'env>,
+    trace: Mutex<Vec<TraceOp>>,
+    n_events: Cell<u32>,
+    n_streams: usize,
+}
+
+impl<'env> Exec<'env> {
+    /// Stream count of this scope.
+    pub fn n_streams(&self) -> usize {
+        self.n_streams
+    }
+
+    /// Is this scope running the async workers (vs the serial oracle)?
+    pub fn is_async(&self) -> bool {
+        matches!(self.mode, Mode::Streams(_))
+    }
+
+    /// Enqueue `job` on `stream`. FIFO with everything previously
+    /// enqueued on the same stream; unordered with other streams unless
+    /// an [`Exec::wait`] edge says otherwise. `label` names the op in
+    /// the trace and DES replay.
+    pub fn launch(&self, stream: usize, label: &'static str, job: impl FnOnce() + Send + 'env) {
+        assert!(stream < self.n_streams, "stream {stream} out of range");
+        self.trace.lock().unwrap().push(TraceOp::Launch {
+            stream: stream as u32,
+            label,
+        });
+        match &self.mode {
+            Mode::Serial => job(),
+            Mode::Streams(tx) => tx[stream]
+                .send(Msg::Run(Box::new(job), label))
+                .expect("stream worker exited early"),
+        }
+    }
+
+    /// Record a completion event on `stream`: it fires once every op
+    /// enqueued on `stream` so far has finished. Creating events *only*
+    /// through this method is what keeps dependency edges pointing
+    /// backwards (module docs).
+    pub fn record(&self, stream: usize) -> Event {
+        assert!(stream < self.n_streams, "stream {stream} out of range");
+        let id = self.n_events.get();
+        self.n_events.set(id + 1);
+        let ev = Event {
+            state: Arc::new(EventState::default()),
+            id,
+        };
+        self.trace.lock().unwrap().push(TraceOp::Record {
+            stream: stream as u32,
+            event: id,
+        });
+        match &self.mode {
+            Mode::Serial => ev.state.signal(),
+            Mode::Streams(tx) => tx[stream]
+                .send(Msg::Record(Arc::clone(&ev.state)))
+                .expect("stream worker exited early"),
+        }
+        ev
+    }
+
+    /// Make every op enqueued on `stream` *after* this call run only
+    /// once `ev` has fired (CUDA `cudaStreamWaitEvent`).
+    pub fn wait(&self, stream: usize, ev: &Event) {
+        assert!(stream < self.n_streams, "stream {stream} out of range");
+        self.trace.lock().unwrap().push(TraceOp::Wait {
+            stream: stream as u32,
+            event: ev.id,
+        });
+        match &self.mode {
+            Mode::Serial => {
+                // Records signal at submission, so a correctly ordered
+                // program can never trip this.
+                assert!(
+                    ev.query(),
+                    "serial oracle: wait on unfired event {} — record must \
+                     precede wait in submission order",
+                    ev.id
+                );
+            }
+            Mode::Streams(tx) => tx[stream]
+                .send(Msg::Wait(Arc::clone(&ev.state)))
+                .expect("stream worker exited early"),
+        }
+    }
+
+    /// Block the host until every stream has drained everything
+    /// submitted so far (records an event on each stream and syncs it).
+    pub fn sync_all(&self) {
+        let evs: Vec<Event> = (0..self.n_streams).map(|s| self.record(s)).collect();
+        for ev in &evs {
+            ev.sync();
+        }
+    }
+
+    /// Snapshot of the program submitted so far, in submission order.
+    pub fn trace(&self) -> Trace {
+        Trace {
+            n_streams: self.n_streams,
+            async_mode: self.is_async(),
+            ops: self.trace.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Run `f` with an executor resolved from the environment
+/// ([`num_streams`] streams; serial oracle iff `LLMQ_ASYNC=off` /
+/// [`with_async`]`(false)`). Returns once every submitted op has
+/// finished — leaving the scope is a full device sync. A panic inside
+/// any op drains the streams and resurfaces on this thread.
+pub fn scope<'env, R>(f: impl FnOnce(&Exec<'env>) -> R) -> R {
+    scope_cfg(num_streams(), async_enabled(), f)
+}
+
+/// [`scope`] with explicit stream count and async mode (tests/benches).
+pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'env>) -> R) -> R {
+    let streams = streams.clamp(1, MAX_STREAMS);
+    if !async_on {
+        let ex = Exec {
+            mode: Mode::Serial,
+            trace: Mutex::new(Vec::new()),
+            n_events: Cell::new(0),
+            n_streams: streams,
+        };
+        return f(&ex);
+    }
+    let shared = Arc::new(Shared::default());
+    let result = std::thread::scope(|s| {
+        let mut senders = Vec::with_capacity(streams);
+        for _ in 0..streams {
+            let (tx, rx) = channel::<Msg<'env>>();
+            let sh = Arc::clone(&shared);
+            s.spawn(move || worker(rx, &sh));
+            senders.push(tx);
+        }
+        let ex = Exec {
+            mode: Mode::Streams(senders),
+            trace: Mutex::new(Vec::new()),
+            n_events: Cell::new(0),
+            n_streams: streams,
+        };
+        let r = f(&ex);
+        drop(ex); // closes the channels; workers drain and exit
+        r
+    });
+    if shared.failed.load(Ordering::Acquire) {
+        let payload = shared
+            .panic
+            .lock()
+            .unwrap()
+            .take()
+            .expect("failed scope without payload");
+        resume_unwind(payload);
+    }
+    result
+}
+
+// ---------------------------------------------------------------------------
+// Baton: buffer ownership that follows the stream program
+// ---------------------------------------------------------------------------
+
+/// A buffer handle whose *exclusive access* follows the stream program:
+/// ops on the same stream (FIFO) or ordered by events take turns through
+/// [`Baton::with`]; a missing dependency edge shows up as a loud panic
+/// (contended `try_lock`) instead of a silent nondeterministic
+/// serialization. [`Baton::take`]/[`Baton::put`] move the payload across
+/// an explicit handoff (e.g. an accumulation chain publishing its window
+/// to the reduce stage).
+///
+/// Create batons *before* entering [`scope`] so ops can borrow them for
+/// the executor's `'env` lifetime.
+#[derive(Debug, Default)]
+pub struct Baton<T>(Mutex<Option<T>>);
+
+impl<T> Baton<T> {
+    /// A filled baton.
+    pub fn new(v: T) -> Self {
+        Baton(Mutex::new(Some(v)))
+    }
+
+    /// An empty baton, to be filled by a [`Baton::put`] handoff.
+    pub fn empty() -> Self {
+        Baton(Mutex::new(None))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Option<T>> {
+        match self.0.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => panic!(
+                "exec::Baton contended: two ops touched it concurrently — \
+                 add a FIFO or event dependency edge between them"
+            ),
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    /// Exclusive access to the payload. Panics if the baton is empty
+    /// (handoff not yet run) or contended (missing dependency edge).
+    pub fn with<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut g = self.lock();
+        f(g.as_mut().expect("exec::Baton empty: handoff op has not run"))
+    }
+
+    /// Move the payload out (panics if empty or contended).
+    pub fn take(&self) -> T {
+        self.lock()
+            .take()
+            .expect("exec::Baton empty: handoff op has not run")
+    }
+
+    /// Fill the baton (panics if already occupied — a double handoff).
+    pub fn put(&self, v: T) {
+        let mut g = self.lock();
+        assert!(g.is_none(), "exec::Baton occupied: double handoff");
+        *g = Some(v);
+    }
+
+    /// Consume the baton after the scope has drained, returning the
+    /// payload if present.
+    pub fn into_inner(self) -> Option<T> {
+        self.0.into_inner().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Both modes: every op runs exactly once, FIFO per stream.
+    #[test]
+    fn fifo_within_stream_both_modes() {
+        for async_on in [false, true] {
+            let log = Mutex::new(Vec::new());
+            let lr = &log;
+            scope_cfg(2, async_on, |ex| {
+                for i in 0..10 {
+                    ex.launch(0, "op", move || lr.lock().unwrap().push(i));
+                }
+            });
+            assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn event_orders_across_streams() {
+        for async_on in [false, true] {
+            for streams in [1usize, 2, 4] {
+                let log = Mutex::new(Vec::new());
+                scope_cfg(streams, async_on, |ex| {
+                    let s1 = 1 % ex.n_streams();
+                    ex.launch(0, "a", || log.lock().unwrap().push("a"));
+                    let ev = ex.record(0);
+                    ex.wait(s1, &ev);
+                    ex.launch(s1, "b", || log.lock().unwrap().push("b"));
+                });
+                assert_eq!(*log.lock().unwrap(), vec!["a", "b"], "async {async_on}");
+            }
+        }
+    }
+
+    #[test]
+    fn scope_exit_is_a_full_sync() {
+        let hits = AtomicUsize::new(0);
+        scope_cfg(4, true, |ex| {
+            for s in 0..4 {
+                for _ in 0..25 {
+                    ex.launch(s, "inc", || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }
+            // no explicit sync: leaving the scope must drain everything
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn sync_all_blocks_until_drained() {
+        let hits = AtomicUsize::new(0);
+        scope_cfg(3, true, |ex| {
+            for s in 0..3 {
+                ex.launch(s, "inc", || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            ex.sync_all();
+            assert_eq!(hits.load(Ordering::Relaxed), 3);
+        });
+    }
+
+    #[test]
+    fn event_query_and_sync() {
+        scope_cfg(1, true, |ex| {
+            let ev = ex.record(0);
+            ev.sync();
+            assert!(ev.query());
+        });
+        // serial: fired at record time
+        scope_cfg(1, false, |ex| {
+            assert!(ex.record(0).query());
+        });
+    }
+
+    #[test]
+    fn baton_chains_through_fifo_and_events() {
+        for async_on in [false, true] {
+            let mut data = vec![0u64; 64];
+            {
+                let baton = Baton::new(&mut data[..]);
+                scope_cfg(2, async_on, |ex| {
+                    ex.launch(0, "fill", || {
+                        baton.with(|d| d.iter_mut().for_each(|x| *x += 1))
+                    });
+                    let ev = ex.record(0);
+                    ex.wait(1, &ev);
+                    ex.launch(1, "double", || {
+                        baton.with(|d| d.iter_mut().for_each(|x| *x *= 2))
+                    });
+                });
+            }
+            assert!(data.iter().all(|&x| x == 2), "async {async_on}");
+        }
+    }
+
+    #[test]
+    fn baton_handoff_take_put() {
+        let mut a = vec![1.0f32; 8];
+        let work = Baton::new(&mut a[..]);
+        let published: Baton<&[f32]> = Baton::empty();
+        let sum = Mutex::new(0.0f32);
+        scope_cfg(2, true, |ex| {
+            ex.launch(0, "acc", || work.with(|w| w[0] = 5.0));
+            ex.launch(0, "publish", || {
+                // &mut -> & coercion: the window demotes to a shared view
+                let w: &[f32] = work.take();
+                published.put(w);
+            });
+            let ev = ex.record(0);
+            ex.wait(1, &ev);
+            ex.launch(1, "read", || {
+                let s: f32 = published.with(|r| r.iter().sum());
+                *sum.lock().unwrap() = s;
+            });
+        });
+        assert_eq!(*sum.lock().unwrap(), 12.0);
+    }
+
+    #[test]
+    fn trace_records_program_order() {
+        let t = scope_cfg(2, false, |ex| {
+            ex.launch(0, "x", || {});
+            let ev = ex.record(0);
+            ex.wait(1, &ev);
+            ex.launch(1, "y", || {});
+            ex.trace()
+        });
+        assert_eq!(t.n_streams, 2);
+        assert!(!t.async_mode);
+        assert_eq!(
+            t.ops,
+            vec![
+                TraceOp::Launch { stream: 0, label: "x" },
+                TraceOp::Record { stream: 0, event: 0 },
+                TraceOp::Wait { stream: 1, event: 0 },
+                TraceOp::Launch { stream: 1, label: "y" },
+            ]
+        );
+    }
+
+    #[test]
+    fn op_panic_propagates_without_hanging() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope_cfg(2, true, |ex| {
+                ex.launch(0, "boom", || panic!("kernel exploded"));
+                // later ops on other streams must not wedge the join
+                let ev = ex.record(0);
+                ex.wait(1, &ev);
+                ex.launch(1, "after", || {});
+            });
+        }));
+        assert!(r.is_err(), "panic must resurface on the scope thread");
+    }
+
+    #[test]
+    fn overrides_resolve_and_restore() {
+        let base = num_streams();
+        assert_eq!(with_streams(3, num_streams), 3);
+        assert_eq!(num_streams(), base);
+        assert!(with_async(true, async_enabled));
+        assert!(!with_async(false, async_enabled));
+        // nested: innermost wins
+        assert!(with_async(false, || with_async(true, async_enabled)));
+    }
+}

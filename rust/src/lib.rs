@@ -24,6 +24,7 @@ pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod hw;
 pub mod memory;
 pub mod metrics;

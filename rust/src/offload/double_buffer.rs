@@ -2,10 +2,19 @@
 //! buffers on the GPU to do explicit double-buffering" — one buffer holds
 //! the layer being computed while the copy engine prefetches the next.
 //!
-//! This module implements the *schedule* generically over a `Transfer`
-//! sink; the real training loop uses it over host `Vec<f32>` arenas, the
-//! simulator uses it to emit DMA events.
+//! Two layers here:
+//! * [`DoubleBuffer`] — the slot-rotation *bookkeeping* (which slot
+//!   holds which layer, what to evict, what to prefetch next);
+//! * [`stream_pass`] — the rotation driven as recorded ops on the
+//!   `exec` stream runtime: prefetches on a CE-in stream, evictions on
+//!   a CE-out stream, per-layer compute on a compute stream, with event
+//!   edges carrying the RAW/WAR hazards (slot reuse) — so a prefetch
+//!   runs *during* the previous layer's compute exactly like the
+//!   copy-engine schedule the simulator models. [`serial_pass`] is the
+//!   inline oracle; any stream schedule is bit-identical to it because
+//!   the ops are pure copies plus a deterministic per-layer kernel.
 
+use crate::exec::{self, Baton, Event};
 
 /// How offloaded tensors reach the GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +96,161 @@ impl DoubleBuffer {
     }
 }
 
+/// One double-buffered sweep over `host` layer arenas as a recorded
+/// stream program: for each visited layer, evict the slot's previous
+/// occupant (CE-out, only with `writeback`), prefetch the layer into its
+/// slot (CE-in, after the WAR hazard clears), run `compute` on the slot
+/// (compute stream, after the prefetch event), and finally flush the
+/// resident slots. Visits layers in index order, or reversed when
+/// `backward` (the backward-pass rotation).
+///
+/// The returned [`exec::Trace`] replays through `sim::replay` — the DES
+/// cross-check that the recorded dependency edges are well-formed.
+///
+/// Every `host[l]` must have the same length as both `slots`. The final
+/// host state is bit-identical to [`serial_pass`] under any stream
+/// count and `LLMQ_ASYNC` setting: copies are exact, `compute` must be
+/// a deterministic function of `(layer, slot contents)`, and the event
+/// edges cover every slot-reuse hazard ([`Baton`] turns a missed edge
+/// into a panic rather than a wrong number).
+pub fn stream_pass(
+    host: &mut [Vec<f32>],
+    slots: &mut [Vec<f32>; 2],
+    backward: bool,
+    writeback: bool,
+    compute: impl Fn(usize, &mut [f32]) + Send + Sync,
+) -> exec::Trace {
+    let nl = host.len();
+    for h in host.iter() {
+        assert_eq!(h.len(), slots[0].len(), "layer/slot length mismatch");
+    }
+    assert_eq!(slots[0].len(), slots[1].len(), "slot length mismatch");
+    let order: Vec<usize> = if backward {
+        (0..nl).rev().collect()
+    } else {
+        (0..nl).collect()
+    };
+    let mut db = DoubleBuffer::new(nl);
+
+    // Batons own the buffer windows for the scope's duration; ops take
+    // turns through the FIFO/event edges below.
+    let host_b: Vec<Baton<&mut [f32]>> = host
+        .iter_mut()
+        .map(|h| Baton::new(h.as_mut_slice()))
+        .collect();
+    let slot_b: Vec<Baton<&mut [f32]>> = slots
+        .iter_mut()
+        .map(|s| Baton::new(s.as_mut_slice()))
+        .collect();
+    let compute = &compute;
+
+    exec::scope(|ex| {
+        let ns = ex.n_streams();
+        let (ce_in, comp, ce_out) = (0, 1 % ns, 2 % ns);
+        let hb = &host_b;
+        let sb = &slot_b;
+        let mut compute_done: [Option<Event>; 2] = [None, None];
+        let mut resident: [Option<usize>; 2] = [None, None];
+
+        for &l in &order {
+            let s = db.slot(l);
+            let (evicted, _next) = if backward {
+                db.advance_rev(l)
+            } else {
+                db.advance(l)
+            };
+
+            // CE-out: write the previous occupant back before the slot
+            // is overwritten (RAW on the slot against its compute op).
+            let mut evict_ev: Option<Event> = None;
+            if writeback {
+                if let Some(e) = evicted {
+                    if let Some(ev) = &compute_done[s] {
+                        ex.wait(ce_out, ev);
+                    }
+                    ex.launch(ce_out, "evict", move || {
+                        sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl)))
+                    });
+                    evict_ev = Some(ex.record(ce_out));
+                }
+            }
+
+            // CE-in: prefetch layer l into its slot. WAR hazard: the
+            // previous occupant must be done computing (and, with
+            // writeback, done evicting) before the overwrite.
+            match (&evict_ev, &compute_done[s]) {
+                (Some(ev), _) => ex.wait(ce_in, ev),
+                (None, Some(ev)) => ex.wait(ce_in, ev),
+                (None, None) => {}
+            }
+            ex.launch(ce_in, "prefetch", move || {
+                hb[l].with(|h| sb[s].with(|sl| sl.copy_from_slice(&**h)))
+            });
+            let ready = ex.record(ce_in);
+
+            // Compute: waits only on its own prefetch — the other
+            // slot's prefetch/evict traffic overlaps freely.
+            ex.wait(comp, &ready);
+            ex.launch(comp, "compute", move || sb[s].with(|sl| compute(l, &mut **sl)));
+            compute_done[s] = Some(ex.record(comp));
+            resident[s] = Some(l);
+        }
+
+        // Flush the layers still resident in the two slots.
+        if writeback {
+            for (s, r) in resident.iter().enumerate() {
+                if let Some(e) = *r {
+                    if let Some(ev) = &compute_done[s] {
+                        ex.wait(ce_out, ev);
+                    }
+                    ex.launch(ce_out, "evict-final", move || {
+                        sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl)))
+                    });
+                }
+            }
+        }
+        ex.trace()
+    })
+}
+
+/// The inline reference for [`stream_pass`]: the same evict → prefetch →
+/// compute rotation executed directly, no runtime. This is the schedule
+/// oracle — `tests/exec_runtime.rs` pins the stream program against it
+/// bitwise at several stream counts and in both `LLMQ_ASYNC` modes.
+pub fn serial_pass(
+    host: &mut [Vec<f32>],
+    slots: &mut [Vec<f32>; 2],
+    backward: bool,
+    writeback: bool,
+    compute: impl Fn(usize, &mut [f32]),
+) {
+    let nl = host.len();
+    let order: Vec<usize> = if backward {
+        (0..nl).rev().collect()
+    } else {
+        (0..nl).collect()
+    };
+    let mut resident: [Option<usize>; 2] = [None, None];
+    for l in order {
+        let s = l % 2;
+        if writeback {
+            if let Some(e) = resident[s] {
+                host[e].copy_from_slice(&slots[s]);
+            }
+        }
+        slots[s].copy_from_slice(&host[l]);
+        compute(l, &mut slots[s]);
+        resident[s] = Some(l);
+    }
+    if writeback {
+        for (s, r) in resident.iter().enumerate() {
+            if let Some(e) = *r {
+                host[e].copy_from_slice(&slots[s]);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +275,54 @@ mod tests {
         assert_eq!(db.advance_rev(3), (None, Some(2)));
         assert_eq!(db.advance_rev(2), (None, Some(1)));
         assert_eq!(db.advance_rev(1), (Some(3), Some(0)));
+    }
+
+    /// The streamed rotation equals the inline oracle bitwise, forward
+    /// and backward, with and without writeback, in both async modes
+    /// (the stream-count sweep lives in tests/exec_runtime.rs).
+    #[test]
+    fn stream_pass_matches_serial_pass_smoke() {
+        let nl = 5;
+        let len = 64;
+        let mk_host = || -> Vec<Vec<f32>> {
+            (0..nl)
+                .map(|l| (0..len).map(|i| (l * 100 + i) as f32).collect())
+                .collect()
+        };
+        let kernel = |l: usize, s: &mut [f32]| {
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = *x * 0.5 + (l * 7 + i) as f32;
+            }
+        };
+        for backward in [false, true] {
+            for writeback in [false, true] {
+                for async_on in [false, true] {
+                    let mut h1 = mk_host();
+                    let mut s1 = [vec![0f32; len], vec![0f32; len]];
+                    serial_pass(&mut h1, &mut s1, backward, writeback, kernel);
+
+                    let mut h2 = mk_host();
+                    let mut s2 = [vec![0f32; len], vec![0f32; len]];
+                    let trace = exec::with_async(async_on, || {
+                        exec::with_streams(3, || {
+                            stream_pass(&mut h2, &mut s2, backward, writeback, kernel)
+                        })
+                    });
+                    assert_eq!(trace.n_streams, 3);
+                    assert!(!trace.ops.is_empty());
+                    let bits = |v: &Vec<Vec<f32>>| -> Vec<Vec<u32>> {
+                        v.iter()
+                            .map(|b| b.iter().map(|x| x.to_bits()).collect())
+                            .collect()
+                    };
+                    assert_eq!(
+                        bits(&h1),
+                        bits(&h2),
+                        "bwd={backward} wb={writeback} async={async_on}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 pub mod double_buffer;
 
 
-pub use double_buffer::{DoubleBuffer, TransferMode};
+pub use double_buffer::{serial_pass, stream_pass, DoubleBuffer, TransferMode};
 
 /// Which tensor classes are offloaded to host memory. Table 7 notation:
 /// x, m, v, θ* (master), θ (quantized weights), g.

@@ -28,12 +28,24 @@
 //! chain *on the scalar kernels* (and is what
 //! `tests/fused_step_equivalence.rs` pins the pipeline against at
 //! 1/2/8 threads and world ∈ {1, 2, 4}).
+//!
+//! The same three phases also exist as a stream program on the `exec`
+//! async runtime ([`fused_step_async`] — what `Trainer::train_step` runs
+//! unless `LLMQ_ASYNC=off`): per-chunk reduce+norm ops fan out over
+//! copy-engine streams, the norm barrier is an event join, and update
+//! chunks stream behind it. [`fused_step_overlapped`] further streams
+//! the microbatch accumulation in, starting each chunk's reduce the
+//! moment its last accumulation event fires. Both are bit-identical to
+//! [`fused_step`] by NUMERICS.md Rule 4 (fixed chunk grid,
+//! element-index-keyed SR, dependency edges covering every hazard).
 
 use crate::collectives::memcpy::PIPELINE_BLOCK;
 use crate::collectives::{
     all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_scaled_memcpy, DeviceGroup,
 };
+use crate::exec::{self, Baton, Event};
 use crate::optim::adamw::{AdamW, AdamWParams};
+use crate::precision::backend::AdamWSpec;
 use crate::precision::{backend, bf16, CounterRng};
 use crate::shard::shard_range;
 use crate::train::workspace::StepWorkspace;
@@ -72,6 +84,19 @@ impl HostStep {
     /// The per-element gradient scale (reciprocal microbatch count).
     fn grad_scale(&self) -> f32 {
         1.0 / self.n_micro.max(1) as f32
+    }
+
+    /// Clip scale + backend AdamW spec for a measured pre-clip `norm` —
+    /// the single derivation of the numerics-critical clip rule, shared
+    /// by the sync phase 3 and the async norm-fold op so the two paths
+    /// cannot diverge.
+    fn update_spec(&self, norm: f32, shard: u32) -> AdamWSpec {
+        let clip_scale = if norm > self.grad_clip && norm > 0.0 {
+            Some(self.grad_clip / norm)
+        } else {
+            None
+        };
+        AdamW::new(self.hp).spec(self.lr, self.step, clip_scale, shard)
     }
 }
 
@@ -224,12 +249,7 @@ fn update_phase_impl(
     assert_eq!(v.len(), n);
     assert!(hs.opt_world >= 1 && n % hs.opt_world == 0, "unpadded opt shard");
     let shard = (n / hs.opt_world) as u32;
-    let clip_scale = if norm > hs.grad_clip && norm > 0.0 {
-        Some(hs.grad_clip / norm)
-    } else {
-        None
-    };
-    let spec = AdamW::new(hs.hp).spec(hs.lr, hs.step, clip_scale, shard);
+    let spec = hs.update_spec(norm, shard);
 
     // One work item per pipeline chunk: disjoint p/m/v/replica windows,
     // so the (chunk × worker) schedule needs no synchronization.
@@ -311,6 +331,322 @@ pub fn fused_step(
     let norm = norm_phase(ws);
     update_phase(ws, p, m, v, hs, norm);
     norm
+}
+
+/// [`fused_step`] expressed as a stream program on the `exec` async
+/// runtime: per-chunk reduce+norm-partial ops fan out over the
+/// copy-engine streams, the global-norm barrier is an event join, and
+/// the clip+AdamW+SR+gather chunks stream behind it. Bit-identical to
+/// [`fused_step`] (and therefore to [`staged_step`]) at any stream
+/// count, thread count and `LLMQ_ASYNC` setting: every kernel is the
+/// same backend-dispatched chunk kernel the synchronous phases run, on
+/// the same fixed `PIPELINE_BLOCK` grid, with the same
+/// global-element-index SR keying (NUMERICS.md Rule 4).
+///
+/// Same contract as [`fused_step`]: `ws.begin_step()` has run and the
+/// microbatch accumulators in `ws.dev_grads` are complete.
+pub fn fused_step_async(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+) -> f32 {
+    fused_step_streamed(ws, p, m, v, hs, &[]).0
+}
+
+/// [`fused_step_async`] returning the recorded stream program alongside
+/// the norm — the schedule `sim::replay` cross-checks (dependency-edge
+/// verification + DES replay of the step's real op graph).
+pub fn fused_step_async_traced(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+) -> (f32, exec::Trace) {
+    fused_step_streamed(ws, p, m, v, hs, &[])
+}
+
+/// [`fused_step_async`] with the microbatch accumulation itself streamed
+/// into the program — the overlap the ROADMAP's "true async chunk
+/// overlap" item asked for: each `PIPELINE_BLOCK` chunk's phase-1
+/// reduce-scatter is enqueued to start **as soon as that chunk's last
+/// microbatch accumulation event fires**, instead of behind a
+/// whole-step barrier. `micros` lists `(device, gradient)` microbatch
+/// contributions in arrival order; `ws.dev_grads` must be zeroed
+/// (`begin_step`) and every device must appear at least once.
+///
+/// Accumulation for device `d` runs FIFO on a per-device stream; after
+/// the device's final microbatch touches chunk `c`, the finished window
+/// is handed (via [`Baton`]) to the reduce stage and the chunk's
+/// source-ready event is recorded immediately — so chunk 0's
+/// reduce+norm runs while later chunks are still accumulating.
+/// Bit-identical to accumulating every microbatch first and then
+/// running [`fused_step`] (accumulation is elementwise on disjoint
+/// windows; reduce order per element is fixed ascending-src).
+pub fn fused_step_overlapped(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+    micros: &[(usize, Vec<f32>)],
+) -> f32 {
+    assert!(!micros.is_empty(), "overlapped step needs microbatches");
+    fused_step_streamed(ws, p, m, v, hs, micros).0
+}
+
+/// One chunk's disjoint windows over every buffer the pipeline touches.
+/// A [`Baton`] per chunk threads exclusive access through the stream
+/// program: reduce+partials (phase 1+2), the norm fold's read, then
+/// update+gather (phase 3).
+struct ChunkWin<'a> {
+    off: usize,
+    grads: &'a mut [f32],
+    partials: &'a mut [f64],
+    p: &'a mut [f32],
+    m: &'a mut [f32],
+    v: &'a mut [f32],
+    reps: Vec<&'a mut [f32]>,
+}
+
+fn fused_step_streamed(
+    ws: &mut StepWorkspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hs: &HostStep,
+    micros: &[(usize, Vec<f32>)],
+) -> (f32, exec::Trace) {
+    let n = ws.n();
+    let world = ws.world();
+    let n_chunks = ws.n_chunks();
+    assert_eq!(p.len(), n);
+    assert_eq!(m.len(), n);
+    assert_eq!(v.len(), n);
+    assert!(hs.opt_world >= 1 && n % hs.opt_world == 0, "unpadded opt shard");
+    for (d, g) in micros {
+        assert!(*d < world, "microbatch device out of range");
+        assert_eq!(g.len(), n, "microbatch gradient length");
+    }
+    let overlapped = !micros.is_empty();
+    let scale = hs.grad_scale();
+    let shard = (n / hs.opt_world) as u32;
+    let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
+
+    // ---- per-chunk windows (the same fixed grid as the sync phases);
+    // built before the exec scope so ops can borrow the batons. ----
+    let mut chunk_batons: Vec<Baton<ChunkWin<'_>>> = Vec::with_capacity(n_chunks);
+    {
+        let (mut pt, mut mt, mut vt) = (&mut *p, &mut *m, &mut *v);
+        let mut gt: &mut [f32] = &mut ws.grads;
+        let mut nt: &mut [f64] = &mut ws.norm_partials;
+        let mut reps: Vec<&mut [f32]> = ws
+            .rank_params
+            .iter_mut()
+            .map(|b| b.as_mut_slice())
+            .collect();
+        let mut off = 0usize;
+        while !gt.is_empty() {
+            let take = gt.len().min(PIPELINE_BLOCK);
+            let (g1, rest) = gt.split_at_mut(take);
+            gt = rest;
+            let (l1, rest) = nt.split_at_mut(backend::NORM_LANES);
+            nt = rest;
+            let (p1, rest) = pt.split_at_mut(take);
+            pt = rest;
+            let (m1, rest) = mt.split_at_mut(take);
+            mt = rest;
+            let (v1, rest) = vt.split_at_mut(take);
+            vt = rest;
+            let mut chunk_reps = Vec::with_capacity(reps.len());
+            let mut next_reps = Vec::with_capacity(reps.len());
+            for r in reps {
+                let (head, rest) = r.split_at_mut(take);
+                chunk_reps.push(head);
+                next_reps.push(rest);
+            }
+            reps = next_reps;
+            chunk_batons.push(Baton::new(ChunkWin {
+                off,
+                grads: g1,
+                partials: l1,
+                p: p1,
+                m: m1,
+                v: v1,
+                reps: chunk_reps,
+            }));
+            off += take;
+        }
+    }
+
+    // ---- per-(device, chunk) gradient sources, indexed d·n_chunks+c.
+    // Non-overlapped: shared views of the finished accumulators.
+    // Overlapped: mutable accumulation windows that each device's final
+    // microbatch op demotes and publishes into `src_ready`. ----
+    let mut src_ready: Vec<Baton<&[f32]>> = Vec::with_capacity(world * n_chunks);
+    let mut work: Vec<Baton<&mut [f32]>> = Vec::new();
+    if overlapped {
+        work.reserve(world * n_chunks);
+        for dev in ws.dev_grads.iter_mut() {
+            let mut tail: &mut [f32] = dev;
+            while !tail.is_empty() {
+                let take = tail.len().min(PIPELINE_BLOCK);
+                let (head, rest) = tail.split_at_mut(take);
+                tail = rest;
+                work.push(Baton::new(head));
+            }
+        }
+        for _ in 0..world * n_chunks {
+            src_ready.push(Baton::empty());
+        }
+    } else {
+        for dev in ws.dev_grads.iter() {
+            let mut off = 0usize;
+            while off < n {
+                let take = (n - off).min(PIPELINE_BLOCK);
+                src_ready.push(Baton::new(&dev[off..off + take]));
+                off += take;
+            }
+        }
+    }
+
+    // The barrier result: written once by the fold op, read concurrently
+    // by every update op after the norm event — OnceLock, not Baton,
+    // because post-barrier reads are legitimately concurrent.
+    let norm_out: std::sync::OnceLock<(f32, AdamWSpec)> = std::sync::OnceLock::new();
+
+    let trace = exec::scope(|ex| {
+        let ns = ex.n_streams();
+        let cb = &chunk_batons;
+        let sources = &src_ready;
+        let wk = &work;
+        let no = &norm_out;
+        // Stream roles: per-device accumulation streams, then chunk
+        // worker streams behind them (they alias when ns is small —
+        // correctness never depends on the mapping, only overlap does).
+        let acc_stream = |d: usize| d % ns;
+        let work_stream = |c: usize| (world + c) % ns;
+        let fold_stream = 0usize;
+
+        // -- phase 0 (overlapped only): stream microbatch accumulation.
+        let mut ready: Vec<Vec<Event>> = vec![Vec::new(); n_chunks];
+        if overlapped {
+            let mut last = vec![usize::MAX; world];
+            for (k, (d, _)) in micros.iter().enumerate() {
+                last[*d] = k;
+            }
+            for (d, l) in last.iter().enumerate() {
+                assert!(*l != usize::MAX, "device {d} has no microbatch");
+            }
+            for (k, (d, g)) in micros.iter().enumerate() {
+                let d = *d;
+                let is_last = last[d] == k;
+                let mut off = 0usize;
+                for (c, ready_c) in ready.iter_mut().enumerate() {
+                    let len = (n - off).min(PIPELINE_BLOCK);
+                    let gw = &g[off..off + len];
+                    let idx = d * n_chunks + c;
+                    ex.launch(acc_stream(d), "grad-accum", move || {
+                        wk[idx].with(|w| backend::bf16_accumulate(&mut **w, gw))
+                    });
+                    if is_last {
+                        // Hand the finished window to the reduce stage
+                        // and fire this chunk's source-ready event now —
+                        // its reduce-scatter starts while later chunks
+                        // of this device are still accumulating.
+                        ex.launch(acc_stream(d), "grad-publish", move || {
+                            let w: &[f32] = wk[idx].take();
+                            sources[idx].put(w);
+                        });
+                        ready_c.push(ex.record(acc_stream(d)));
+                    }
+                    off += len;
+                }
+            }
+        }
+
+        // -- phase 1+2: per-chunk reduce (+average) and norm partials,
+        // enqueued behind that chunk's source-ready events only.
+        let mut chunk_done: Vec<Event> = Vec::with_capacity(n_chunks);
+        for (c, evs) in ready.iter().enumerate() {
+            let s = work_stream(c);
+            for ev in evs {
+                ex.wait(s, ev);
+            }
+            ex.launch(s, "reduce+partials", move || {
+                cb[c].with(|w| {
+                    if world == 1 {
+                        // Degenerate single-device reduce: scaled RNE
+                        // copy, exactly `reduce_phase`'s fast path.
+                        let src = sources[c].with(|r| *r);
+                        backend::bf16_scaled_round(src, &mut *w.grads, scale);
+                    } else {
+                        let srcs: Vec<&[f32]> = (0..world)
+                            .map(|d| sources[d * n_chunks + c].with(|r| *r))
+                            .collect();
+                        backend::sr_reduce_block(
+                            &srcs,
+                            0,
+                            &mut *w.grads,
+                            Some(scale),
+                            &rng,
+                            hs.counter.wrapping_add(w.off as u32),
+                        );
+                    }
+                    backend::sumsq_lanes_into(&*w.grads, &mut *w.partials);
+                })
+            });
+            chunk_done.push(ex.record(s));
+        }
+
+        // -- the global-norm barrier, expressed as an event join: the
+        // fold op waits on every chunk's partials, folds them in chunk
+        // order (Rule 2/2a), and publishes (norm, AdamWSpec).
+        for ev in &chunk_done {
+            ex.wait(fold_stream, ev);
+        }
+        ex.launch(fold_stream, "norm-fold", move || {
+            let mut acc = 0.0f64;
+            for baton in cb.iter() {
+                acc += baton.with(|w| backend::fold_lanes(&*w.partials));
+            }
+            let norm = acc.sqrt() as f32;
+            let spec = hs.update_spec(norm, shard);
+            assert!(no.set((norm, spec)).is_ok(), "norm barrier ran twice");
+        });
+        let norm_ev = ex.record(fold_stream);
+
+        // -- phase 3: update+gather chunks stream behind the barrier
+        // (one wait per stream; FIFO covers the rest).
+        for s in 0..ns {
+            ex.wait(s, &norm_ev);
+        }
+        for c in 0..n_chunks {
+            ex.launch(work_stream(c), "update+gather", move || {
+                let (_, spec) = *no.get().expect("norm barrier must run before update");
+                cb[c].with(|w| {
+                    backend::adamw_update(
+                        &spec,
+                        &mut *w.p,
+                        &mut *w.m,
+                        &mut *w.v,
+                        &*w.grads,
+                        hs.counter.wrapping_add(w.off as u32),
+                    );
+                    // Gather: the chunk is cache-hot — copy it into the
+                    // per-rank replicas now, like the sync phase 3.
+                    for rep in w.reps.iter_mut() {
+                        rep.copy_from_slice(&*w.p);
+                    }
+                });
+            });
+        }
+        ex.trace()
+    });
+
+    (norm_out.get().expect("norm barrier did not run").0, trace)
 }
 
 /// The staged multi-pass reference: the pre-fusion `train_step` chain
@@ -511,6 +847,90 @@ mod tests {
         // replicas carry the gathered params
         for r in &ws.rank_params {
             assert_eq!(bits(r), bits(&p2));
+        }
+    }
+
+    /// The async stream program equals the synchronous fused pipeline
+    /// bitwise, under the serial oracle and under real workers at 1/4
+    /// streams (the full matrix lives in tests/exec_runtime.rs).
+    #[test]
+    fn async_step_matches_fused_smoke() {
+        let n = PIPELINE_BLOCK + 256;
+        let hs = mk_host_step(4, 2);
+        let init = |i: usize| round_to_bf16(0.01 * (i % 97) as f32 - 0.3);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let mut ws = filled_ws(2, n);
+        let mut p1: Vec<f32> = (0..n).map(init).collect();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        let norm1 = fused_step(&mut ws, &mut p1, &mut m1, &mut v1, &hs);
+
+        for (async_on, streams) in [(false, 1usize), (true, 1), (true, 4)] {
+            let mut ws2 = filled_ws(2, n);
+            let mut p2: Vec<f32> = (0..n).map(init).collect();
+            let (mut m2, mut v2) = (vec![0f32; n], vec![0f32; n]);
+            let norm2 = crate::exec::with_async(async_on, || {
+                crate::exec::with_streams(streams, || {
+                    fused_step_async(&mut ws2, &mut p2, &mut m2, &mut v2, &hs)
+                })
+            });
+            let label = format!("async={async_on} streams={streams}");
+            assert_eq!(norm1.to_bits(), norm2.to_bits(), "{label}");
+            assert_eq!(bits(&p1), bits(&p2), "{label}");
+            assert_eq!(bits(&m1), bits(&m2), "{label}");
+            assert_eq!(bits(&v1), bits(&v2), "{label}");
+            for r in &ws2.rank_params {
+                assert_eq!(bits(r), bits(&p2), "{label} replica");
+            }
+        }
+    }
+
+    /// Streaming the microbatch accumulation into the program (per-chunk
+    /// source-ready events) changes nothing in the numbers: overlapped ≡
+    /// accumulate-everything-then-fused ≡ staged.
+    #[test]
+    fn overlapped_step_matches_fused_smoke() {
+        let n = 2 * PIPELINE_BLOCK;
+        let world = 2;
+        let hs = mk_host_step(4, 2);
+        let rng = CounterRng::new(0x31C0);
+        let micros: Vec<(usize, Vec<f32>)> = (0..4)
+            .map(|k| {
+                let dev = k % world;
+                let g: Vec<f32> = (0..n)
+                    .map(|i| round_to_bf16((rng.next_f32((k * n + i) as u32) - 0.5) * 0.1))
+                    .collect();
+                (dev, g)
+            })
+            .collect();
+        let init = |i: usize| round_to_bf16(0.01 * (i % 89) as f32 - 0.2);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        // reference: accumulate on the host, then the sync fused step
+        let mut ws1 = StepWorkspace::new(world, n);
+        ws1.begin_step();
+        for (d, g) in &micros {
+            bf16::accumulate_bf16(&mut ws1.dev_grads[*d], g);
+        }
+        let mut p1: Vec<f32> = (0..n).map(init).collect();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        let norm1 = fused_step(&mut ws1, &mut p1, &mut m1, &mut v1, &hs);
+
+        for (async_on, streams) in [(false, 1usize), (true, 4)] {
+            let mut ws2 = StepWorkspace::new(world, n);
+            ws2.begin_step();
+            let mut p2: Vec<f32> = (0..n).map(init).collect();
+            let (mut m2, mut v2) = (vec![0f32; n], vec![0f32; n]);
+            let norm2 = crate::exec::with_async(async_on, || {
+                crate::exec::with_streams(streams, || {
+                    fused_step_overlapped(&mut ws2, &mut p2, &mut m2, &mut v2, &hs, &micros)
+                })
+            });
+            let label = format!("async={async_on} streams={streams}");
+            assert_eq!(norm1.to_bits(), norm2.to_bits(), "{label}");
+            assert_eq!(bits(&p1), bits(&p2), "{label}");
+            assert_eq!(bits(&m1), bits(&m2), "{label}");
+            assert_eq!(bits(&v1), bits(&v2), "{label}");
         }
     }
 }

@@ -351,9 +351,12 @@ pub(crate) mod scalar {
     /// The collectives' SR reduce epilogue over one pipeline block:
     /// ascending-src sum (each term optionally pre-scaled and RNE-rounded
     /// onto the bf16 grid) followed by one SR draw keyed by the global
-    /// element index `base + j`.
+    /// element index `base + j`. Sources are plain slices so callers can
+    /// pass whole device buffers (`base` = block offset) or handed-off
+    /// per-chunk windows (`base = 0`, counter pre-offset) — the async
+    /// runtime does the latter.
     pub fn sr_reduce_block(
-        srcs: &[Vec<f32>],
+        srcs: &[&[f32]],
         base: usize,
         block: &mut [f32],
         scale: Option<f32>,
@@ -520,9 +523,12 @@ pub fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
 ///
 /// `term(g)` is `g` when `scale` is `None`, else `bf16_rne(g · scale)`
 /// (the fused microbatch-average variant). Every `srcs[s]` must have at
-/// least `base + block.len()` elements.
+/// least `base + block.len()` elements. Sources are plain slices: whole
+/// device buffers (with `base` = block offset) and handed-off per-chunk
+/// windows (`base = 0`, counter pre-offset by the chunk offset) make
+/// identical draws — the global-index keying is `counter + base + j`.
 pub fn sr_reduce_block(
-    srcs: &[Vec<f32>],
+    srcs: &[&[f32]],
     base: usize,
     block: &mut [f32],
     scale: Option<f32>,

@@ -335,7 +335,7 @@ pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
 /// `counter + base + j`).
 #[target_feature(enable = "neon")]
 pub unsafe fn sr_reduce_block(
-    srcs: &[Vec<f32>],
+    srcs: &[&[f32]],
     base: usize,
     block: &mut [f32],
     scale: Option<f32>,

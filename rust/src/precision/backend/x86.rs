@@ -347,7 +347,7 @@ pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
 /// one SR draw per element keyed by `counter + base + j`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn sr_reduce_block(
-    srcs: &[Vec<f32>],
+    srcs: &[&[f32]],
     base: usize,
     block: &mut [f32],
     scale: Option<f32>,

@@ -1,0 +1,223 @@
+//! Checkpoint wire format: a hardened little-endian binary codec.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"LLMQ"
+//!      4     4  format version (u32) — currently 2
+//!      8     4  optimizer step (u32)
+//!     12     4  SR counter base (u32)
+//!     16     8  element count n (u64)
+//!     24  4·n   params  (f32 le)
+//! 24+4n   4·n   first moments
+//! 24+8n   4·n   second moments
+//! ```
+//!
+//! Version history: v1 (pre-header) began directly with the step word —
+//! any 16-byte-prefixed blob of the right length decoded "successfully",
+//! silently misreading foreign files. v2 added the magic + version words;
+//! [`decode_into`] now rejects foreign and stale files with named errors
+//! instead of loading garbage state.
+//!
+//! The body converts in `CKPT_CHUNK` blocks in parallel (checkpoint
+//! state is hundreds of MB at 7B scale); pure byte movement, bitwise
+//! exact both ways.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::par;
+
+/// File magic: an LLMQ checkpoint and nothing else.
+pub const MAGIC: [u8; 4] = *b"LLMQ";
+
+/// Current checkpoint format version.
+pub const VERSION: u32 = 2;
+
+/// Header bytes before the f32 body.
+pub const HEADER_LEN: usize = 24;
+
+/// Elements per bulk-conversion block of the checkpoint codec.
+const CKPT_CHUNK: usize = 64 * 1024;
+
+/// Chunked bulk f32 → little-endian bytes (blocks convert in parallel
+/// with no per-element `Vec` growth).
+pub fn f32s_to_le_bytes(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 4 * src.len());
+    // dst blocks stay 4-byte aligned (dst.len() is a multiple of 4), so
+    // `off / 4` indexes the matching source elements exactly.
+    let items = par::split_blocks_mut(dst, 4 * CKPT_CHUNK);
+    par::for_each_item(items, |(off, db)| {
+        let sb = &src[off / 4..off / 4 + db.len() / 4];
+        for (&x, b) in sb.iter().zip(db.chunks_exact_mut(4)) {
+            b.copy_from_slice(&x.to_le_bytes());
+        }
+    });
+}
+
+/// Chunked bulk little-endian bytes → f32 (inverse of
+/// [`f32s_to_le_bytes`]).
+pub fn le_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), 4 * dst.len());
+    par::for_each_slice_mut(dst, CKPT_CHUNK, |off, chunk| {
+        let bytes = &src[4 * off..4 * (off + chunk.len())];
+        for (x, b) in chunk.iter_mut().zip(bytes.chunks_exact(4)) {
+            *x = f32::from_le_bytes(b.try_into().expect("4-byte chunk"));
+        }
+    });
+}
+
+/// Serialize trainer state (`step`, SR `counter`, params/moments of
+/// equal length) into the v2 wire format.
+pub fn encode(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n, "state buffers must match");
+    let mut bytes = vec![0u8; HEADER_LEN + 12 * n];
+    bytes[0..4].copy_from_slice(&MAGIC);
+    bytes[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    bytes[8..12].copy_from_slice(&step.to_le_bytes());
+    bytes[12..16].copy_from_slice(&counter.to_le_bytes());
+    bytes[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+    for (k, buf) in [p, m, v].into_iter().enumerate() {
+        let base = HEADER_LEN + 4 * n * k;
+        f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
+    }
+    bytes
+}
+
+/// Validate the header and restore state into the provided buffers.
+/// Returns `(step, counter)`. Named errors for every rejection: short
+/// file, foreign magic, stale/unknown version, element-count mismatch,
+/// truncated body — a foreign or v1 file can no longer be misread as
+/// state.
+pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) -> Result<(u32, u32)> {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n, "state buffers must match");
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "truncated checkpoint header: {} bytes, need {HEADER_LEN}",
+        bytes.len()
+    );
+    if bytes[0..4] != MAGIC {
+        let got = &bytes[0..4];
+        bail!("not an LLMQ checkpoint (magic {got:02x?}, expected {MAGIC:02x?})");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+    ensure!(
+        version == VERSION,
+        "unsupported checkpoint version {version} (this build reads v{VERSION}; \
+         v1 files predate the header and must be regenerated)"
+    );
+    let step = u32::from_le_bytes(bytes[8..12].try_into()?);
+    let counter = u32::from_le_bytes(bytes[12..16].try_into()?);
+    let stored_n = u64::from_le_bytes(bytes[16..24].try_into()?) as usize;
+    ensure!(
+        stored_n == n,
+        "checkpoint holds {stored_n} elements, trainer expects {n}"
+    );
+    ensure!(
+        bytes.len() == HEADER_LEN + 12 * n,
+        "truncated checkpoint body: {} bytes, expected {}",
+        bytes.len(),
+        HEADER_LEN + 12 * n
+    );
+    le_bytes_to_f32s(&bytes[HEADER_LEN..HEADER_LEN + 4 * n], p);
+    le_bytes_to_f32s(&bytes[HEADER_LEN + 4 * n..HEADER_LEN + 8 * n], m);
+    le_bytes_to_f32s(&bytes[HEADER_LEN + 8 * n..HEADER_LEN + 12 * n], v);
+    Ok((step, counter))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let p = (0..n).map(|i| (i as f32).sin() * 3.7).collect();
+        let m = (0..n).map(|i| (i as f32).cos() * 0.1).collect();
+        let v = (0..n).map(|i| (i as f32 * 0.01).exp()).collect();
+        (p, m, v)
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let n = 100_003;
+        let (p, m, v) = state(n);
+        let bytes = encode(7, 42, &p, &m, &v);
+        assert_eq!(bytes.len(), HEADER_LEN + 12 * n);
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let (step, counter) = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap();
+        assert_eq!((step, counter), (7, 42));
+        assert_eq!(bits(&p), bits(&p2));
+        assert_eq!(bits(&m), bits(&m2));
+        assert_eq!(bits(&v), bits(&v2));
+    }
+
+    #[test]
+    fn codec_wire_format_spot_checks() {
+        let src: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 3.7).collect();
+        let mut bytes = vec![0u8; 4 * src.len()];
+        f32s_to_le_bytes(&src, &mut bytes);
+        assert_eq!(&bytes[0..4], &src[0].to_le_bytes());
+        assert_eq!(&bytes[400..404], &src[100].to_le_bytes());
+        let mut back = vec![0f32; src.len()];
+        le_bytes_to_f32s(&bytes, &mut back);
+        assert_eq!(bits(&src), bits(&back));
+    }
+
+    #[test]
+    fn foreign_magic_is_rejected_by_name() {
+        let n = 8;
+        let (p, m, v) = state(n);
+        let mut bytes = encode(1, 1, &p, &m, &v);
+        bytes[0..4].copy_from_slice(b"GGUF");
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        assert!(err.to_string().contains("not an LLMQ checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn stale_version_is_rejected_by_name() {
+        let n = 8;
+        let (p, m, v) = state(n);
+        let mut bytes = encode(1, 1, &p, &m, &v);
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        assert!(err.to_string().contains("version 1"), "{err}");
+    }
+
+    /// The exact failure the header fixes: a 16-byte-prefixed blob of
+    /// the right overall length (the v1 layout) must NOT decode.
+    #[test]
+    fn v1_style_headerless_blob_is_rejected() {
+        let n = 8usize;
+        let mut bytes = vec![0u8; 16 + 12 * n];
+        bytes[0..4].copy_from_slice(&3u32.to_le_bytes()); // v1 "step"
+        bytes[8..16].copy_from_slice(&(n as u64).to_le_bytes());
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        assert!(err.to_string().contains("not an LLMQ checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn size_mismatch_and_truncation_are_named() {
+        let n = 8;
+        let (p, m, v) = state(n);
+        let bytes = encode(1, 1, &p, &m, &v);
+        // element-count mismatch
+        let (mut p2, mut m2, mut v2) = (vec![0f32; 9], vec![0f32; 9], vec![0f32; 9]);
+        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        assert!(err.to_string().contains("expects 9"), "{err}");
+        // truncated body
+        let (mut p3, mut m3, mut v3) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let err = decode_into(&bytes[..bytes.len() - 4], &mut p3, &mut m3, &mut v3).unwrap_err();
+        assert!(err.to_string().contains("truncated checkpoint body"), "{err}");
+        // truncated header
+        let err = decode_into(&bytes[..10], &mut p3, &mut m3, &mut v3).unwrap_err();
+        assert!(err.to_string().contains("truncated checkpoint header"), "{err}");
+    }
+}

@@ -9,6 +9,7 @@
 //! global-norm barrier, and a chunked clip + ZeRO-1 AdamW + SR kernel
 //! that gathers updated parameters as it goes.
 
+pub mod checkpoint;
 pub mod eval;
 pub mod trainer;
 pub mod workspace;

@@ -20,7 +20,6 @@ use crate::optim::{self, fused::HostStep};
 use crate::precision::bf16;
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::train::workspace::StepWorkspace;
-use crate::util::par;
 
 /// Per-step statistics.
 #[derive(Debug, Clone)]
@@ -58,36 +57,6 @@ pub fn stats_to_csv(stats: &[StepStats]) -> String {
         };
     }
     s
-}
-
-/// Elements per bulk-conversion block of the checkpoint codec.
-const CKPT_CHUNK: usize = 64 * 1024;
-
-/// Chunked bulk f32 → little-endian bytes (checkpoint state is hundreds
-/// of MB at 7B scale; blocks convert in parallel with no per-element
-/// `Vec` growth).
-fn f32s_to_le_bytes(src: &[f32], dst: &mut [u8]) {
-    debug_assert_eq!(dst.len(), 4 * src.len());
-    // dst blocks stay 4-byte aligned (dst.len() is a multiple of 4), so
-    // `off / 4` indexes the matching source elements exactly.
-    let items = par::split_blocks_mut(dst, 4 * CKPT_CHUNK);
-    par::for_each_item(items, |(off, db)| {
-        let sb = &src[off / 4..off / 4 + db.len() / 4];
-        for (&x, b) in sb.iter().zip(db.chunks_exact_mut(4)) {
-            b.copy_from_slice(&x.to_le_bytes());
-        }
-    });
-}
-
-/// Chunked bulk little-endian bytes → f32 (inverse of `f32s_to_le_bytes`).
-fn le_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
-    debug_assert_eq!(src.len(), 4 * dst.len());
-    par::for_each_slice_mut(dst, CKPT_CHUNK, |off, chunk| {
-        let bytes = &src[4 * off..4 * (off + chunk.len())];
-        for (x, b) in chunk.iter_mut().zip(bytes.chunks_exact(4)) {
-            *x = f32::from_le_bytes(b.try_into().expect("4-byte chunk"));
-        }
-    });
 }
 
 /// Real-training coordinator over one executable preset.
@@ -203,7 +172,12 @@ impl Trainer {
 
     /// Run one full optimizer step over `grad_accum × world` microbatches
     /// through the fused streaming host pipeline (reduce+average → norm →
-    /// clip+AdamW+gather, no per-step `O(n)` allocation).
+    /// clip+AdamW+gather, no per-step `O(n)` allocation). With the async
+    /// runtime on (the `LLMQ_ASYNC`/`LLMQ_STREAMS` knobs, default on),
+    /// the pipeline runs as an `exec` stream program — per-chunk
+    /// reduce+norm ops overlapping across copy-engine streams with the
+    /// norm barrier as an event join — which is bit-identical to the
+    /// synchronous path by NUMERICS.md Rule 4.
     pub fn train_step(&mut self, batches: &[Batch]) -> Result<StepStats> {
         self.step_impl(batches, true)
     }
@@ -266,7 +240,17 @@ impl Trainer {
             opt_world: self.man.world,
         };
         let grad_norm = if fused {
-            optim::fused::fused_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+            if crate::exec::async_enabled() {
+                optim::fused::fused_step_async(
+                    &mut ws,
+                    &mut self.params,
+                    &mut self.m,
+                    &mut self.v,
+                    &hs,
+                )
+            } else {
+                optim::fused::fused_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+            }
         } else {
             optim::fused::staged_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
         };
@@ -348,33 +332,24 @@ impl Trainer {
 
     // ----- checkpoints ------------------------------------------------------
 
-    /// Write params / moments / step / counter as little-endian binary.
+    /// Write params / moments / step / counter in the v2 wire format
+    /// (magic + version header; see [`crate::train::checkpoint`]).
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let n = self.params.len();
-        let mut bytes = vec![0u8; 16 + 12 * n];
-        bytes[0..4].copy_from_slice(&self.step.to_le_bytes());
-        bytes[4..8].copy_from_slice(&self.counter.to_le_bytes());
-        bytes[8..16].copy_from_slice(&(n as u64).to_le_bytes());
-        for (k, buf) in [&self.params, &self.m, &self.v].into_iter().enumerate() {
-            let base = 16 + 4 * n * k;
-            f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
-        }
+        let bytes =
+            super::checkpoint::encode(self.step, self.counter, &self.params, &self.m, &self.v);
         std::fs::write(path, bytes)?;
         Ok(())
     }
 
     /// Restore a checkpoint written by [`Trainer::save_checkpoint`].
+    /// Foreign files, pre-header (v1) files, and size mismatches are
+    /// rejected with named errors instead of being misread as state.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let bytes = std::fs::read(path)?;
-        anyhow::ensure!(bytes.len() >= 16, "truncated checkpoint");
-        self.step = u32::from_le_bytes(bytes[0..4].try_into()?);
-        self.counter = u32::from_le_bytes(bytes[4..8].try_into()?);
-        let n = u64::from_le_bytes(bytes[8..16].try_into()?) as usize;
-        anyhow::ensure!(n == self.params.len(), "checkpoint size mismatch");
-        anyhow::ensure!(bytes.len() == 16 + 12 * n, "truncated checkpoint body");
-        le_bytes_to_f32s(&bytes[16..16 + 4 * n], &mut self.params);
-        le_bytes_to_f32s(&bytes[16 + 4 * n..16 + 8 * n], &mut self.m);
-        le_bytes_to_f32s(&bytes[16 + 8 * n..16 + 12 * n], &mut self.v);
+        let (step, counter) =
+            super::checkpoint::decode_into(&bytes, &mut self.params, &mut self.m, &mut self.v)?;
+        self.step = step;
+        self.counter = counter;
         self.param_bufs = None;
         Ok(())
     }
@@ -404,22 +379,6 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn checkpoint_codec_roundtrip() {
-        let src: Vec<f32> = (0..100_003).map(|i| (i as f32).sin() * 3.7).collect();
-        let mut bytes = vec![0u8; 4 * src.len()];
-        f32s_to_le_bytes(&src, &mut bytes);
-        // spot-check the wire format against the scalar conversion
-        assert_eq!(&bytes[0..4], &src[0].to_le_bytes());
-        assert_eq!(&bytes[400..404], &src[100].to_le_bytes());
-        let mut back = vec![0f32; src.len()];
-        le_bytes_to_f32s(&bytes, &mut back);
-        assert_eq!(
-            src.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
-        );
-    }
 
     #[test]
     fn csv_formats_optional_val_loss() {

@@ -4,10 +4,11 @@
 use std::time::{Duration, Instant};
 
 /// The execution-provenance fields every bench JSON report stamps —
-/// worker-thread count (`LLMQ_THREADS`) and resolved SIMD backend
-/// (`LLMQ_SIMD`) — as a `"threads": N,\n  "simd": "name"` fragment.
-/// One helper so the writers cannot drift (BENCH_trainstep.json once
-/// shipped without the backend name BENCH_hotpath.json had).
+/// worker-thread count (`LLMQ_THREADS`), resolved SIMD backend
+/// (`LLMQ_SIMD`), and the exec runtime's stream count / async mode
+/// (`LLMQ_STREAMS` / `LLMQ_ASYNC`). One helper so the writers cannot
+/// drift (BENCH_trainstep.json once shipped without the backend name
+/// BENCH_hotpath.json had).
 ///
 /// # Examples
 ///
@@ -15,12 +16,16 @@ use std::time::{Duration, Instant};
 /// let p = llmq::util::bench::provenance_json();
 /// assert!(p.starts_with("\"threads\": "));
 /// assert!(p.contains("\"simd\": "));
+/// assert!(p.contains("\"streams\": "));
+/// assert!(p.contains("\"async\": "));
 /// ```
 pub fn provenance_json() -> String {
     format!(
-        "\"threads\": {},\n  \"simd\": \"{}\"",
+        "\"threads\": {},\n  \"simd\": \"{}\",\n  \"streams\": {},\n  \"async\": {}",
         crate::util::par::num_threads(),
-        crate::precision::backend::level().name()
+        crate::precision::backend::level().name(),
+        crate::exec::num_streams(),
+        crate::exec::async_enabled()
     )
 }
 

@@ -50,8 +50,8 @@ fn prop_memcpy_rs_matches_reference() {
 
 #[test]
 fn prop_ring_and_memcpy_rs_agree() {
-    // Same reduction contract: both within one bf16 SR ulp of the
-    // reference, hence within 2 ulp of each other.
+    // One reduction contract (ascending-src sum + element-index-keyed
+    // SR): the two backends are bit-identical, not merely ULP-close.
     prop::check(0xB0B, 40, |g| {
         let grp = random_group(g);
         let world = grp.world;
@@ -62,12 +62,91 @@ fn prop_ring_and_memcpy_rs_agree() {
         reduce_scatter_ring(&grp, &mut b, &CounterRng::new(9), 7);
         for w in 0..world {
             for i in 0..chunk {
-                let err = (a[w][i] - b[w][i]).abs();
-                let ulp = a[w][i].abs().max(1e-3) / 64.0;
-                assert!(err <= ulp, "w{w} i{i}: {} vs {}", a[w][i], b[w][i]);
+                assert_eq!(
+                    a[w][i].to_bits(),
+                    b[w][i].to_bits(),
+                    "w{w} i{i}: {} vs {}",
+                    a[w][i],
+                    b[w][i]
+                );
             }
         }
     });
+}
+
+/// The ascending-src reduction-order contract, pinned for both backends
+/// by an independent re-derivation: world ∈ {1, 2, 4}, unaligned n (not
+/// a multiple of the pipeline block), non-zero accumulators, counter
+/// offsets, and 1/2/8 worker threads on the memcpy side.
+#[test]
+fn ring_memcpy_bit_identity_sweep() {
+    use llmq::collectives::memcpy::PIPELINE_BLOCK;
+    use llmq::precision::bf16::stochastic_round_bf16;
+
+    for world in [1usize, 2, 4] {
+        // unaligned: chunks are odd and not pipeline-block multiples
+        for chunk in [1usize, 37, PIPELINE_BLOCK + 129] {
+            let n = world * chunk;
+            let rng_data = CounterRng::new(0x5EED);
+            let grp = DeviceGroup::from_fn(world, n, |r, i| {
+                round_to_bf16((rng_data.next_f32((r * n + i) as u32) - 0.5) * 2.0)
+            });
+            for counter in [0u32, 1_000_003] {
+                let sr = CounterRng::new(0x0D0);
+                // independent re-derivation of the contract: ascending
+                // src fold seeded with the accumulator, one SR draw at
+                // counter + global index
+                let mut want = vec![vec![0.25f32; chunk]; world];
+                for (w, acc) in want.iter_mut().enumerate() {
+                    for (i, a) in acc.iter_mut().enumerate() {
+                        let mut sum = *a;
+                        for src in 0..world {
+                            sum += grp.buffers[src][w * chunk + i];
+                        }
+                        *a = stochastic_round_bf16(
+                            sum,
+                            &sr,
+                            counter.wrapping_add((w * chunk + i) as u32),
+                        );
+                    }
+                }
+
+                let mut ring = vec![vec![0.25f32; chunk]; world];
+                reduce_scatter_ring(&grp, &mut ring, &sr, counter);
+                assert_eq!(ring, want, "ring world={world} chunk={chunk}");
+
+                for threads in [1usize, 2, 8] {
+                    let mut mc = vec![vec![0.25f32; chunk]; world];
+                    llmq::util::par::with_threads(threads, || {
+                        reduce_scatter_memcpy(&grp, &mut mc, &sr, counter)
+                    });
+                    assert_eq!(mc, want, "memcpy world={world} chunk={chunk} t={threads}");
+                }
+            }
+        }
+    }
+}
+
+/// All-gather parity at the same sweep geometry: pure copies, bit-exact
+/// and identical between backends.
+#[test]
+fn all_gather_ring_memcpy_bit_identity_sweep() {
+    for world in [1usize, 2, 4] {
+        for chunk in [1usize, 37, 1000] {
+            let shards: Vec<Vec<f32>> = (0..world)
+                .map(|r| {
+                    (0..chunk)
+                        .map(|i| round_to_bf16((r * 31 + i) as f32 * 0.17 - 3.0))
+                        .collect()
+                })
+                .collect();
+            let mut a = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+            let mut b = DeviceGroup::from_fn(world, world * chunk, |_, _| 0.0);
+            all_gather_memcpy(&shards, &mut a);
+            all_gather_ring(&shards, &mut b);
+            assert_eq!(a.buffers, b.buffers, "world={world} chunk={chunk}");
+        }
+    }
 }
 
 #[test]

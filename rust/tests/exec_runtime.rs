@@ -1,0 +1,319 @@
+//! Cross-cutting pins for the `exec` async stream/event runtime
+//! (NUMERICS.md Rule 4):
+//!
+//! * the async fused-step stream program ≡ the `LLMQ_ASYNC=off` serial
+//!   oracle ≡ the synchronous fused pipeline, bitwise, across stream
+//!   counts, thread counts, world sizes and clip regimes;
+//! * the overlapped variant (per-chunk source-ready events driving
+//!   phase-1 starts) changes nothing in the numbers;
+//! * every recorded schedule replays through the DES engine with
+//!   well-formed dependency edges (`sim::replay`);
+//! * the double-buffer stream schedule ≡ its inline oracle;
+//! * mid-run resume determinism: k steps → save → load into fresh state
+//!   → k more steps ≡ 2k straight steps, async on/off, 1 and 8 threads.
+
+use llmq::collectives::memcpy::PIPELINE_BLOCK;
+use llmq::exec;
+use llmq::offload::{serial_pass, stream_pass};
+use llmq::optim::fused::{
+    fused_step, fused_step_async, fused_step_overlapped, staged_step, HostStep,
+};
+use llmq::optim::AdamWParams;
+use llmq::precision::{bf16, round_to_bf16, CounterRng};
+use llmq::sim::{replay_trace, Engine};
+use llmq::train::{checkpoint, StepWorkspace};
+use llmq::util::par;
+
+fn host_step(grad_clip: f32, n_micro: usize, opt_world: usize, step: u32, counter: u32) -> HostStep {
+    HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip,
+        step,
+        counter,
+        seed: 9,
+        n_micro,
+        opt_world,
+    }
+}
+
+fn fill_dev_grads(ws: &mut StepWorkspace, salt: u32, amp: f32) {
+    let n = ws.n();
+    let rng = CounterRng::new(salt);
+    for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((d * n + i) as u32) - 0.5) * amp);
+        }
+    }
+}
+
+fn init_state(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let p = (0..n)
+        .map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0))
+        .collect();
+    let m = (0..n)
+        .map(|i| round_to_bf16(0.001 * (i % 13) as f32 - 0.006))
+        .collect();
+    let v = (0..n).map(|i| round_to_bf16(1e-4 * (i % 7) as f32)).collect();
+    (p, m, v)
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The acceptance pin: `LLMQ_ASYNC=off` ≡ async output, across worlds,
+/// stream counts, thread counts and clip regimes — referenced against
+/// the staged scalar oracle so the whole tower is pinned at once.
+#[test]
+fn async_off_equals_async_on_matrix() {
+    for (amp, clip) in [(0.05f32, 1.0f32), (4.0, 0.5)] {
+        for world in [1usize, 2, 4] {
+            let n = 3 * PIPELINE_BLOCK + 64; // non-block-aligned
+            let hs = host_step(clip, 3 * world, 4, 2, 12_345);
+
+            // staged scalar-kernel reference
+            let mut ws = StepWorkspace::new(world, n);
+            ws.begin_step();
+            fill_dev_grads(&mut ws, 0xACC, amp);
+            let (mut p0, mut m0, mut v0) = init_state(n);
+            let norm0 =
+                par::with_threads(1, || staged_step(&mut ws, &mut p0, &mut m0, &mut v0, &hs));
+
+            for threads in [1usize, 2, 8] {
+                for (async_on, streams) in [(false, 1usize), (true, 1), (true, 2), (true, 4)] {
+                    let mut ws2 = StepWorkspace::new(world, n);
+                    ws2.begin_step();
+                    fill_dev_grads(&mut ws2, 0xACC, amp);
+                    let (mut p, mut m, mut v) = init_state(n);
+                    let norm = par::with_threads(threads, || {
+                        exec::with_async(async_on, || {
+                            exec::with_streams(streams, || {
+                                fused_step_async(&mut ws2, &mut p, &mut m, &mut v, &hs)
+                            })
+                        })
+                    });
+                    let label = format!(
+                        "amp={amp} world={world} t={threads} async={async_on} s={streams}"
+                    );
+                    assert_eq!(norm.to_bits(), norm0.to_bits(), "norm {label}");
+                    assert_eq!(bits(&p), bits(&p0), "p {label}");
+                    assert_eq!(bits(&m), bits(&m0), "m {label}");
+                    assert_eq!(bits(&v), bits(&v0), "v {label}");
+                    for r in &ws2.rank_params {
+                        assert_eq!(bits(r), bits(&p), "replica {label}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The overlapped step (accumulation streamed in, per-chunk source-ready
+/// events) ≡ accumulate-first + fused, at several stream counts.
+#[test]
+fn overlapped_accumulation_is_unobservable() {
+    let world = 2;
+    let n = 2 * PIPELINE_BLOCK + 64;
+    let hs = host_step(1.0, 6, 2, 3, 777);
+    let rng = CounterRng::new(0xBEEF);
+    // 3 microbatches per device, interleaved arrival order
+    let micros: Vec<(usize, Vec<f32>)> = (0..6)
+        .map(|k| {
+            let dev = k % world;
+            let g: Vec<f32> = (0..n)
+                .map(|i| round_to_bf16((rng.next_f32((k * n + i) as u32) - 0.5) * 0.2))
+                .collect();
+            (dev, g)
+        })
+        .collect();
+
+    let mut ws1 = StepWorkspace::new(world, n);
+    ws1.begin_step();
+    for (d, g) in &micros {
+        bf16::accumulate_bf16(&mut ws1.dev_grads[*d], g);
+    }
+    let (mut p1, mut m1, mut v1) = init_state(n);
+    let norm1 = fused_step(&mut ws1, &mut p1, &mut m1, &mut v1, &hs);
+
+    for (async_on, streams) in [(false, 1usize), (true, 1), (true, 2), (true, 4)] {
+        let mut ws2 = StepWorkspace::new(world, n);
+        ws2.begin_step();
+        let (mut p2, mut m2, mut v2) = init_state(n);
+        let norm2 = exec::with_async(async_on, || {
+            exec::with_streams(streams, || {
+                fused_step_overlapped(&mut ws2, &mut p2, &mut m2, &mut v2, &hs, &micros)
+            })
+        });
+        let label = format!("async={async_on} streams={streams}");
+        assert_eq!(norm1.to_bits(), norm2.to_bits(), "{label}");
+        assert_eq!(bits(&p1), bits(&p2), "{label}");
+        assert_eq!(bits(&m1), bits(&m2), "{label}");
+        assert_eq!(bits(&v1), bits(&v2), "{label}");
+    }
+}
+
+/// Every schedule the consumers record replays through the DES engine:
+/// dependency edges verified (record-before-wait, one-shot events,
+/// stream bounds) and the replay produces a finite schedule.
+#[test]
+fn recorded_schedules_replay_through_des() {
+    // 1) the fused step's real recorded stream program
+    let n = 4 * PIPELINE_BLOCK;
+    let hs = host_step(1.0, 4, 2, 2, 99);
+    let mut ws = StepWorkspace::new(2, n);
+    ws.begin_step();
+    fill_dev_grads(&mut ws, 0xACC, 0.05);
+    let (mut p, mut m, mut v) = init_state(n);
+    let (_, trace) = exec::with_async(true, || {
+        exec::with_streams(3, || {
+            llmq::optim::fused::fused_step_async_traced(&mut ws, &mut p, &mut m, &mut v, &hs)
+        })
+    });
+    let mut eng = Engine::new();
+    let sched = replay_trace(&mut eng, &trace).expect("well-formed fused schedule");
+    assert!(sched.makespan > 0.0 && sched.makespan.is_finite());
+    // per-chunk reduce + norm fold + per-chunk update = 2·chunks + 1 ops
+    let launches = trace
+        .ops
+        .iter()
+        .filter(|op| matches!(op, exec::TraceOp::Launch { .. }))
+        .count();
+    assert_eq!(launches, 2 * ws.n_chunks() + 1);
+    // unit-cost overlap: the chunk fan-out must beat serial execution
+    assert!(
+        sched.makespan < launches as f64,
+        "fused stream schedule shows no overlap: {} vs {launches}",
+        sched.makespan
+    );
+
+    // 2) the double-buffer consumer's recorded schedule
+    let mut host: Vec<Vec<f32>> = (0..6).map(|l| vec![l as f32; 32]).collect();
+    let mut slots = [vec![0f32; 32], vec![0f32; 32]];
+    let trace = exec::with_async(true, || {
+        exec::with_streams(3, || {
+            stream_pass(&mut host, &mut slots, false, true, |l, s| {
+                s.iter_mut().for_each(|x| *x += l as f32)
+            })
+        })
+    });
+    let sched = replay_trace(&mut eng, &trace).expect("double-buffer schedule");
+    // 6 compute ops + 6 prefetches + evictions, all at unit cost: the
+    // makespan must show overlap (strictly less than the serial total).
+    let total_ops = trace
+        .ops
+        .iter()
+        .filter(|op| matches!(op, exec::TraceOp::Launch { .. }))
+        .count() as f64;
+    assert!(
+        sched.makespan < total_ops,
+        "stream schedule shows no overlap: makespan {} vs {total_ops} serial ops",
+        sched.makespan
+    );
+}
+
+/// The double-buffer stream schedule ≡ the inline oracle, across stream
+/// counts and async modes, forward and backward, with writeback.
+#[test]
+fn double_buffer_stream_schedule_is_unobservable() {
+    let nl = 7;
+    let len = 96;
+    let mk = || -> Vec<Vec<f32>> {
+        (0..nl)
+            .map(|l| {
+                (0..len)
+                    .map(|i| round_to_bf16((l * 13 + i) as f32 * 0.05 - 1.0))
+                    .collect()
+            })
+            .collect()
+    };
+    let kernel = |l: usize, s: &mut [f32]| {
+        for (i, x) in s.iter_mut().enumerate() {
+            *x = round_to_bf16(*x * 0.75 + (l * 3 + i % 5) as f32 * 0.01);
+        }
+    };
+    for backward in [false, true] {
+        let mut h1 = mk();
+        let mut s1 = [vec![0f32; len], vec![0f32; len]];
+        serial_pass(&mut h1, &mut s1, backward, true, kernel);
+        for (async_on, streams) in [(false, 1usize), (true, 1), (true, 3), (true, 4)] {
+            let mut h2 = mk();
+            let mut s2 = [vec![0f32; len], vec![0f32; len]];
+            exec::with_async(async_on, || {
+                exec::with_streams(streams, || {
+                    stream_pass(&mut h2, &mut s2, backward, true, kernel)
+                })
+            });
+            for l in 0..nl {
+                assert_eq!(
+                    bits(&h1[l]),
+                    bits(&h2[l]),
+                    "layer {l} bwd={backward} async={async_on} s={streams}"
+                );
+            }
+        }
+    }
+}
+
+/// Mid-run resume determinism at the host-step level (artifact-free):
+/// run k steps advancing (step, counter) exactly like the Trainer, save
+/// through the v2 checkpoint codec, restore into fresh buffers, run k
+/// more — bitwise equal to 2k straight steps. 1 and 8 threads, async
+/// on/off.
+#[test]
+fn resume_after_save_load_is_bitwise() {
+    let world = 2;
+    let n = 2 * PIPELINE_BLOCK;
+    let k = 3;
+
+    // One trainer-shaped step: fill grads (salted by step), run the
+    // async fused step, advance counter by 3n like Trainer::step_impl.
+    let run_steps = |p: &mut Vec<f32>,
+                     m: &mut Vec<f32>,
+                     v: &mut Vec<f32>,
+                     step0: u32,
+                     counter0: u32,
+                     steps: usize|
+     -> (u32, u32) {
+        let mut ws = StepWorkspace::new(world, n);
+        let (mut step, mut counter) = (step0, counter0);
+        for _ in 0..steps {
+            ws.begin_step();
+            fill_dev_grads(&mut ws, 0x1000 + step, 0.08);
+            step += 1;
+            let hs = host_step(1.0, 4, 2, step, counter);
+            fused_step_async(&mut ws, p, m, v, &hs);
+            counter = counter.wrapping_add(3 * n as u32);
+        }
+        (step, counter)
+    };
+
+    for threads in [1usize, 8] {
+        for async_on in [false, true] {
+            par::with_threads(threads, || {
+                exec::with_async(async_on, || {
+                    // straight 2k
+                    let (mut p0, mut m0, mut v0) = init_state(n);
+                    run_steps(&mut p0, &mut m0, &mut v0, 0, 1, 2 * k);
+
+                    // k, save, load into fresh state, k more
+                    let (mut p1, mut m1, mut v1) = init_state(n);
+                    let (step, counter) = run_steps(&mut p1, &mut m1, &mut v1, 0, 1, k);
+                    let blob = checkpoint::encode(step, counter, &p1, &m1, &v1);
+
+                    let (mut p2, mut m2, mut v2) =
+                        (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+                    let (step2, counter2) =
+                        checkpoint::decode_into(&blob, &mut p2, &mut m2, &mut v2).unwrap();
+                    assert_eq!((step2, counter2), (step, counter));
+                    run_steps(&mut p2, &mut m2, &mut v2, step2, counter2, k);
+
+                    let label = format!("t={threads} async={async_on}");
+                    assert_eq!(bits(&p0), bits(&p2), "p {label}");
+                    assert_eq!(bits(&m0), bits(&m2), "m {label}");
+                    assert_eq!(bits(&v0), bits(&v2), "v {label}");
+                })
+            });
+        }
+    }
+}

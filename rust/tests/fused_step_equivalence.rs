@@ -1,9 +1,14 @@
 //! Bit-identity suite for the fused streaming optimizer-step pipeline:
-//! `optim::fused::fused_step` — the host step `Trainer::train_step` runs
-//! — must be bitwise identical to the staged multi-pass reference
+//! `optim::fused::fused_step` and its `exec` stream-program port
+//! `fused_step_async` — the host step `Trainer::train_step` runs — must
+//! be bitwise identical to the staged multi-pass reference
 //! (`staged_step`, the `Trainer::train_step_staged` chain) at 1/2/8
 //! worker threads and world ∈ {1, 2, 4}, including a clip-triggering
 //! gradient scale and a non-`PIPELINE_BLOCK`-aligned parameter count.
+//! The async rows run under whatever `LLMQ_ASYNC`/`LLMQ_STREAMS`
+//! resolve (CI covers async-on, the `LLMQ_ASYNC=off` serial oracle, and
+//! a 2-stream × 2-thread interleaving stress) plus an explicit
+//! stream-count sweep.
 //! The two Trainer entry points differ *only* in which of these two
 //! functions they call after the (shared) microbatch loop, so this
 //! covers the artifact-gated paths too.
@@ -17,9 +22,10 @@
 //! dispatched phase kernels against their `*_scalar` twins directly.
 
 use llmq::collectives::memcpy::PIPELINE_BLOCK;
+use llmq::exec;
 use llmq::optim::fused::{
-    fused_step, grad_norm_scalar, norm_phase, reduce_phase, staged_step, update_phase,
-    update_phase_scalar, HostStep,
+    fused_step, fused_step_async, grad_norm_scalar, norm_phase, reduce_phase, staged_step,
+    update_phase, update_phase_scalar, HostStep,
 };
 use llmq::optim::AdamWParams;
 use llmq::precision::{round_to_bf16, CounterRng};
@@ -27,6 +33,19 @@ use llmq::train::StepWorkspace;
 use llmq::util::par;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Which host-step implementation a matrix run exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Path {
+    /// Staged multi-pass scalar-kernel oracle.
+    Staged,
+    /// Synchronous fused streaming pipeline.
+    Fused,
+    /// The `exec` stream program (whatever `LLMQ_ASYNC` resolves to —
+    /// CI runs the suite with the async workers on and with the serial
+    /// oracle via `LLMQ_ASYNC=off`).
+    Async,
+}
 
 fn host_step(grad_clip: f32, n_micro: usize, opt_world: usize) -> HostStep {
     HostStep {
@@ -71,7 +90,7 @@ fn bits(x: &[f32]) -> Vec<u32> {
 
 /// Run one path at a thread count; returns (norm_bits, p, m, v).
 fn run(
-    staged: bool,
+    path: Path,
     world: usize,
     n: usize,
     threads: usize,
@@ -82,14 +101,12 @@ fn run(
     ws.begin_step();
     fill_dev_grads(&mut ws, 0xACC, amp);
     let (mut p, mut m, mut v) = init_state(n);
-    let norm = par::with_threads(threads, || {
-        if staged {
-            staged_step(&mut ws, &mut p, &mut m, &mut v, hs)
-        } else {
-            fused_step(&mut ws, &mut p, &mut m, &mut v, hs)
-        }
+    let norm = par::with_threads(threads, || match path {
+        Path::Staged => staged_step(&mut ws, &mut p, &mut m, &mut v, hs),
+        Path::Fused => fused_step(&mut ws, &mut p, &mut m, &mut v, hs),
+        Path::Async => fused_step_async(&mut ws, &mut p, &mut m, &mut v, hs),
     });
-    if !staged && world > 1 {
+    if path != Path::Staged && world > 1 {
         // the fused gather must leave every replica equal to the params
         for r in &ws.rank_params {
             assert_eq!(bits(r), bits(&p), "replica != params");
@@ -104,7 +121,7 @@ fn assert_matrix(n_for: impl Fn(usize) -> usize, amp: f32, clip: f32, expect_cli
         assert_eq!(n % world, 0, "test geometry");
         for opt_world in [1usize, 4] {
             let hs = host_step(clip, 3 * world, opt_world);
-            let reference = run(true, world, n, 1, amp, &hs);
+            let reference = run(Path::Staged, world, n, 1, amp, &hs);
             let norm = f32::from_bits(reference.0);
             assert_eq!(
                 norm > clip && norm > 0.0,
@@ -112,20 +129,19 @@ fn assert_matrix(n_for: impl Fn(usize) -> usize, amp: f32, clip: f32, expect_cli
                 "clip precondition: norm {norm} vs clip {clip} (world {world})"
             );
             for t in THREAD_COUNTS {
-                for staged in [true, false] {
-                    let got = run(staged, world, n, t, amp, &hs);
-                    let label = if staged { "staged" } else { "fused" };
+                for path in [Path::Staged, Path::Fused, Path::Async] {
+                    let got = run(path, world, n, t, amp, &hs);
                     assert_eq!(
                         got.0, reference.0,
-                        "{label} norm, world {world} opt {opt_world} t {t}"
+                        "{path:?} norm, world {world} opt {opt_world} t {t}"
                     );
                     assert_eq!(
                         bits(&got.1),
                         bits(&reference.1),
-                        "{label} params, world {world} opt {opt_world} t {t}"
+                        "{path:?} params, world {world} opt {opt_world} t {t}"
                     );
-                    assert_eq!(bits(&got.2), bits(&reference.2), "{label} m");
-                    assert_eq!(bits(&got.3), bits(&reference.3), "{label} v");
+                    assert_eq!(bits(&got.2), bits(&reference.2), "{path:?} m");
+                    assert_eq!(bits(&got.3), bits(&reference.3), "{path:?} v");
                 }
             }
         }
@@ -154,12 +170,31 @@ fn fused_matches_staged_unaligned_n() {
 #[test]
 fn fused_is_deterministic_across_repeats() {
     let hs = host_step(1.0, 6, 4);
-    let a = run(false, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
-    let b = run(false, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
-    assert_eq!(a.0, b.0);
-    assert_eq!(bits(&a.1), bits(&b.1));
-    assert_eq!(bits(&a.2), bits(&b.2));
-    assert_eq!(bits(&a.3), bits(&b.3));
+    for path in [Path::Fused, Path::Async] {
+        let a = run(path, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
+        let b = run(path, 2, PIPELINE_BLOCK + 128, 8, 0.1, &hs);
+        assert_eq!(a.0, b.0, "{path:?}");
+        assert_eq!(bits(&a.1), bits(&b.1), "{path:?}");
+        assert_eq!(bits(&a.2), bits(&b.2), "{path:?}");
+        assert_eq!(bits(&a.3), bits(&b.3), "{path:?}");
+    }
+}
+
+/// The async path across explicit stream counts (independent of the
+/// `LLMQ_STREAMS` env): every stream schedule lands on the staged
+/// reference bits.
+#[test]
+fn async_stream_count_is_unobservable() {
+    let n = 2 * PIPELINE_BLOCK + 64;
+    let hs = host_step(1.0, 6, 4);
+    let reference = run(Path::Staged, 2, n, 1, 0.1, &hs);
+    for streams in [1usize, 2, 3, 8] {
+        let got = exec::with_streams(streams, || run(Path::Async, 2, n, 8, 0.1, &hs));
+        assert_eq!(got.0, reference.0, "streams {streams}");
+        assert_eq!(bits(&got.1), bits(&reference.1), "streams {streams}");
+        assert_eq!(bits(&got.2), bits(&reference.2), "streams {streams}");
+        assert_eq!(bits(&got.3), bits(&reference.3), "streams {streams}");
+    }
 }
 
 /// The dispatched phase-2 (widened-grid norm) and phase-3 (fused

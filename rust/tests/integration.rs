@@ -106,6 +106,73 @@ fn checkpoint_roundtrip_resumes_identically() {
     assert_eq!(a.counter, b.counter);
 }
 
+/// Mid-run resume determinism at the trainer level: train k steps →
+/// save → load into a *fresh* Trainer → train k more ≡ 2k straight
+/// steps, bitwise (params, moments, counter). The host-level artifact-
+/// free version (threads × async sweep) lives in tests/exec_runtime.rs.
+#[test]
+fn resume_mid_run_matches_straight_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("llmq_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid.bin");
+    let text = corpus();
+    let k = 2;
+
+    let mut straight = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    straight.train_loop(&text, 2 * k, |_| {}).unwrap();
+
+    let mut a = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    a.train_loop(&text, k, |_| {}).unwrap();
+    a.save_checkpoint(path.to_str().unwrap()).unwrap();
+
+    let mut b = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    b.load_checkpoint(path.to_str().unwrap()).unwrap();
+    // The loop re-derives batches from the step index, so resuming
+    // replays exactly the straight run's second half.
+    let per_step = b.cfg.grad_accum * b.cfg.world;
+    let tok = ByteTokenizer::new(b.man.config.vocab);
+    let ds = PackedDataset::from_text(&text, &tok, b.man.config.seq_len, b.cfg.seed);
+    for s in k..2 * k {
+        let batches: Vec<_> = (0..per_step)
+            .map(|i| ds.batch(s * per_step + i, i % b.cfg.world, b.man.batch))
+            .collect();
+        b.train_step(&batches).unwrap();
+    }
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(straight.step, b.step);
+    assert_eq!(straight.counter, b.counter);
+    assert_eq!(bits(&straight.params), bits(&b.params));
+    assert_eq!(bits(&straight.m), bits(&b.m));
+    assert_eq!(bits(&straight.v), bits(&b.v));
+}
+
+/// Foreign and pre-header checkpoint files are rejected by name instead
+/// of being misread as state (the v2 header hardening).
+#[test]
+fn foreign_checkpoint_file_is_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("llmq_ckpt_reject_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("foreign.bin");
+    let mut t = Trainer::new("artifacts", "tiny", tiny_cfg(Dtype::Fp8, 1)).unwrap();
+    // a v1-shaped blob of exactly the legacy-accepted length
+    let n = t.params.len();
+    let mut blob = vec![0u8; 16 + 12 * n];
+    blob[8..16].copy_from_slice(&(n as u64).to_le_bytes());
+    std::fs::write(&path, &blob).unwrap();
+    let err = t.load_checkpoint(path.to_str().unwrap()).unwrap_err();
+    assert!(
+        err.to_string().contains("not an LLMQ checkpoint"),
+        "named rejection, got: {err}"
+    );
+}
+
 #[test]
 fn val_loss_close_to_train_loss_at_init() {
     if !have_artifacts() {

@@ -297,7 +297,7 @@ struct BackendFns {
     bf16_accumulate: fn(&mut [f32], &[f32]),
     bf16_pack: fn(&[f32], &mut [u16]),
     bf16_unpack: fn(&[u16], &mut [f32]),
-    sr_reduce_block: fn(&[Vec<f32>], usize, &mut [f32], Option<f32>, &CounterRng, u32),
+    sr_reduce_block: fn(&[&[f32]], usize, &mut [f32], Option<f32>, &CounterRng, u32),
     sumsq_lanes_into: fn(&[f32], &mut [f64]),
     adamw_update: fn(&backend::AdamWSpec, &mut [f32], &mut [f32], &mut [f32], &[f32], u32),
 }
@@ -518,7 +518,8 @@ fn check_backend_matches_scalar_spec(b: &BackendFns) {
                         );
                     }
                     let mut got = acc0.clone();
-                    (b.sr_reduce_block)(&srcs, blk_base, &mut got, scale, &rng, 991);
+                    let src_refs: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
+                    (b.sr_reduce_block)(&src_refs, blk_base, &mut got, scale, &rng, 991);
                     assert_eq!(
                         bits(&got),
                         bits(&want),
@@ -593,7 +594,7 @@ mod avx2_wrap {
         unsafe { x86::bf16_unpack(b, o) }
     }
     pub fn sr_reduce_block(
-        s: &[Vec<f32>],
+        s: &[&[f32]],
         base: usize,
         blk: &mut [f32],
         sc: Option<f32>,
@@ -684,7 +685,7 @@ mod neon_wrap {
         unsafe { neon::bf16_unpack(b, o) }
     }
     pub fn sr_reduce_block(
-        s: &[Vec<f32>],
+        s: &[&[f32]],
         base: usize,
         blk: &mut [f32],
         sc: Option<f32>,
