@@ -157,6 +157,15 @@ fn write_json(rows: &[Row], singles: &[(&str, f64)]) {
 }
 
 fn main() {
+    // Fault-injected figures must never reach a BENCH JSON: refuse the
+    // whole run, loudly, rather than stamp a poisoned report.
+    if llmq::fault::active() {
+        eprintln!(
+            "hotpath: refusing to benchmark under fault injection (LLMQ_FAULT={}); unset it first",
+            llmq::fault::descriptor()
+        );
+        std::process::exit(2);
+    }
     let n = 1 << 22; // 4M elements
     let rng = CounterRng::new(1);
     let base: Vec<f32> = (0..n).map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0).collect();

@@ -107,6 +107,15 @@ fn write_json(
 }
 
 fn main() {
+    // Fault-injected figures must never reach a BENCH JSON: refuse the
+    // whole run, loudly, rather than stamp a poisoned report.
+    if llmq::fault::active() {
+        eprintln!(
+            "train_step: refusing to benchmark under fault injection (LLMQ_FAULT={}); unset it first",
+            llmq::fault::descriptor()
+        );
+        std::process::exit(2);
+    }
     let small = std::env::var("LLMQ_TRAINSTEP_SMALL").is_ok();
     // 4M f32 = 16 MiB of parameters (multi-MB host step); CI smoke: 256K.
     let n: usize = if small { 1 << 18 } else { 1 << 22 };

@@ -44,13 +44,29 @@
 //! reached and every wait eventually satisfied: stream programs cannot
 //! deadlock. The DES cross-check (`sim::replay`) re-verifies this edge
 //! direction on a recorded [`Trace`].
+//!
+//! # Failure model (NUMERICS.md Rule 5)
+//!
+//! An op panic never wedges the scope: the first panic wins, later ops
+//! are skipped while records still execute (so no wait can block
+//! forever), and the panic resurfaces on the scope thread **wrapped with
+//! its stream index, op label and queue depth** so chaos-test failures
+//! are diagnosable. A configured **watchdog** (`LLMQ_WATCHDOG_MS` /
+//! [`with_watchdog`]) converts a stalled op into a named error carrying
+//! a dump of the stream program state — per-stream running op + elapsed
+//! time + queue depths + the trace tail — instead of a hang, and cancels
+//! any `fault`-injected stalls so the streams can drain. The scope
+//! captures the calling thread's `fault` plane at creation, which is how
+//! `LLMQ_FAULT` stream-site injections reach worker threads.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, TryLockError};
+use std::time::{Duration, Instant};
 
+use crate::fault::FaultPlane;
 use crate::util::par;
 
 /// Hard cap on stream workers (matches `util::par`'s spirit: a knob,
@@ -58,9 +74,11 @@ use crate::util::par;
 pub const MAX_STREAMS: usize = 64;
 
 thread_local! {
-    static STREAMS_OVERRIDE: Cell<usize> = Cell::new(0);
+    static STREAMS_OVERRIDE: Cell<usize> = const { Cell::new(0) };
     // 0 = follow env, 1 = force serial, 2 = force async
-    static ASYNC_OVERRIDE: Cell<u8> = Cell::new(0);
+    static ASYNC_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+    // < 0 = follow env, otherwise a millisecond timeout (0 = off)
+    static WATCHDOG_OVERRIDE: Cell<i64> = const { Cell::new(-1) };
 }
 
 fn env_async() -> bool {
@@ -97,6 +115,23 @@ fn env_streams() -> Option<usize> {
     })
 }
 
+fn env_watchdog_ms() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LLMQ_WATCHDOG_MS") {
+        Ok(raw) => match raw.trim().parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!(
+                    "llmq: LLMQ_WATCHDOG_MS={raw:?} is not an integer; \
+                     watchdog disabled"
+                );
+                0
+            }
+        },
+        Err(_) => 0,
+    })
+}
+
 /// Is the async runtime enabled? [`with_async`] override, else
 /// `LLMQ_ASYNC` (default on; `off`/`0`/`false`/`no` select the serial
 /// oracle).
@@ -119,6 +154,17 @@ pub fn num_streams() -> usize {
         env_streams().unwrap_or_else(par::num_threads)
     };
     n.clamp(1, MAX_STREAMS)
+}
+
+/// The stream watchdog timeout in milliseconds (0 = disabled):
+/// [`with_watchdog`] override, else `LLMQ_WATCHDOG_MS`, else off.
+pub fn watchdog_ms() -> u64 {
+    let o = WATCHDOG_OVERRIDE.with(|c| c.get());
+    if o >= 0 {
+        o as u64
+    } else {
+        env_watchdog_ms()
+    }
 }
 
 /// Pin the stream count to `n` on this thread for the duration of `f`
@@ -149,6 +195,20 @@ pub fn with_async<R>(on: bool, f: impl FnOnce() -> R) -> R {
     }
     let v = if on { 2 } else { 1 };
     let _restore = Restore(ASYNC_OVERRIDE.with(|c| c.replace(v)));
+    f()
+}
+
+/// Arm the stream watchdog with timeout `ms` (0 = off) on this thread
+/// for the duration of `f` — the test/supervisor-side twin of
+/// `LLMQ_WATCHDOG_MS`, with restore-on-unwind semantics.
+pub fn with_watchdog<R>(ms: u64, f: impl FnOnce() -> R) -> R {
+    struct Restore(i64);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WATCHDOG_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(WATCHDOG_OVERRIDE.with(|c| c.replace(ms as i64)));
     f()
 }
 
@@ -235,6 +295,18 @@ pub enum TraceOp {
     },
 }
 
+impl TraceOp {
+    /// Compact one-token rendering for watchdog dumps:
+    /// `L<stream>:<label>`, `R<stream>#<event>`, `W<stream>#<event>`.
+    pub fn compact(&self) -> String {
+        match self {
+            TraceOp::Launch { stream, label } => format!("L{stream}:{label}"),
+            TraceOp::Record { stream, event } => format!("R{stream}#{event}"),
+            TraceOp::Wait { stream, event } => format!("W{stream}#{event}"),
+        }
+    }
+}
+
 /// The recorded program of one [`scope`]: every launch/record/wait in
 /// submission order. `sim::replay` turns this into a DES task graph and
 /// verifies its dependency edges.
@@ -260,16 +332,72 @@ enum Msg<'env> {
     Wait(Arc<EventState>),
 }
 
-#[derive(Default)]
+/// Per-stream execution state the watchdog observes: the op currently
+/// running (start time + label) and submission/completion counters
+/// whose difference is the queue depth.
+#[derive(Debug, Default)]
+struct StreamStatus {
+    running: Mutex<Option<(Instant, &'static str)>>,
+    submitted: AtomicUsize,
+    completed: AtomicUsize,
+}
+
+impl StreamStatus {
+    fn depth(&self) -> usize {
+        self.submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.completed.load(Ordering::Relaxed))
+    }
+}
+
 struct Shared {
     failed: AtomicBool,
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    statuses: Vec<StreamStatus>,
+    trace: Mutex<Vec<TraceOp>>,
+    fault: Option<Arc<FaultPlane>>,
+}
+
+/// Best-effort text of a panic payload (the `&str`/`String` cases every
+/// `panic!` in this crate produces).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Wrap an op panic with the context a chaos-test failure needs: stream
+/// index, op label and queue depth at the moment of the panic.
+fn wrap_op_panic(
+    p: Box<dyn std::any::Any + Send>,
+    stream: usize,
+    label: &'static str,
+    depth: usize,
+) -> Box<dyn std::any::Any + Send> {
+    Box::new(format!(
+        "exec op {label:?} on stream {stream} panicked (queue depth {depth}): {}",
+        panic_msg(p.as_ref())
+    ))
 }
 
 impl Shared {
+    fn new(streams: usize, fault: Option<Arc<FaultPlane>>) -> Self {
+        Self {
+            failed: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            statuses: (0..streams).map(|_| StreamStatus::default()).collect(),
+            trace: Mutex::new(Vec::new()),
+            fault,
+        }
+    }
+
     /// First panic wins; later ops are skipped so the scope drains fast
     /// and the panic resurfaces on the submitting thread.
-    fn fail(&self, payload: Box<dyn std::any::Any + Send>, label: &'static str) {
+    fn fail(&self, payload: Box<dyn std::any::Any + Send>, what: &str) {
         {
             let mut slot = self.panic.lock().unwrap();
             if slot.is_none() {
@@ -277,19 +405,49 @@ impl Shared {
             }
         }
         self.failed.store(true, Ordering::Release);
-        eprintln!("llmq exec: op {label:?} panicked; draining streams");
+        eprintln!("llmq exec: {what}; draining streams");
+    }
+
+    /// Run one op with the full failure protocol: status bookkeeping,
+    /// fault-plane injection, skip-after-failure, contextual panic
+    /// capture. Returns the wrapped payload on panic.
+    fn run_op(
+        &self,
+        stream: usize,
+        label: &'static str,
+        job: impl FnOnce(),
+    ) -> Result<(), Box<dyn std::any::Any + Send>> {
+        *self.statuses[stream].running.lock().unwrap() = Some((Instant::now(), label));
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &self.fault {
+                f.exec_site(stream, self.statuses.len(), label);
+            }
+            // Re-check after the injection site: a watchdog firing during
+            // an injected stall fails the scope, and the op must not run
+            // on top of that.
+            if !self.failed.load(Ordering::Acquire) {
+                job();
+            }
+        }));
+        *self.statuses[stream].running.lock().unwrap() = None;
+        let depth = self.statuses[stream].depth();
+        self.statuses[stream].completed.fetch_add(1, Ordering::Relaxed);
+        res.map_err(|p| wrap_op_panic(p, stream, label, depth))
     }
 }
 
-fn worker(rx: Receiver<Msg<'_>>, shared: &Shared) {
+fn worker(rx: Receiver<Msg<'_>>, shared: &Shared, stream: usize) {
     for msg in rx {
         match msg {
             Msg::Run(job, label) => {
                 if shared.failed.load(Ordering::Acquire) {
-                    continue; // drain without running more user ops
+                    // drain without running more user ops
+                    shared.statuses[stream].completed.fetch_add(1, Ordering::Relaxed);
+                    continue;
                 }
-                if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
-                    shared.fail(p, label);
+                if let Err(p) = shared.run_op(stream, label, job) {
+                    let what = format!("op {label:?} on stream {stream} panicked");
+                    shared.fail(p, &what);
                 }
             }
             // Records always execute (even after a failure) so that no
@@ -297,6 +455,44 @@ fn worker(rx: Receiver<Msg<'_>>, shared: &Shared) {
             // every wait's record is already enqueued (see module docs).
             Msg::Record(ev) => ev.signal(),
             Msg::Wait(ev) => ev.block(),
+        }
+    }
+}
+
+/// The watchdog loop: poll the per-stream running slots; the first op
+/// to exceed `timeout` fails the scope with a named error carrying the
+/// stream program state, then cancels any injected stalls so the
+/// streams drain.
+fn watchdog_loop(shared: &Shared, timeout: Duration, stop: &AtomicBool) {
+    let poll = (timeout / 8).clamp(Duration::from_millis(1), Duration::from_millis(10));
+    while !stop.load(Ordering::Acquire) {
+        std::thread::sleep(poll);
+        if shared.failed.load(Ordering::Acquire) {
+            return; // already failing; nothing left to watch
+        }
+        for (i, st) in shared.statuses.iter().enumerate() {
+            let hung = st
+                .running
+                .lock()
+                .unwrap()
+                .filter(|(t0, _)| t0.elapsed() >= timeout);
+            let Some((t0, label)) = hung else { continue };
+            let depths: Vec<usize> = shared.statuses.iter().map(StreamStatus::depth).collect();
+            let trace = shared.trace.lock().unwrap();
+            let tail_from = trace.len().saturating_sub(12);
+            let tail: Vec<String> = trace[tail_from..].iter().map(TraceOp::compact).collect();
+            drop(trace);
+            let msg = format!(
+                "exec watchdog: op {label:?} on stream {i} exceeded {timeout:?} \
+                 (running for {:?}; queue depths {depths:?}; trace tail [{}])",
+                t0.elapsed(),
+                tail.join(" ")
+            );
+            shared.fail(Box::new(msg.clone()), &msg);
+            if let Some(f) = &shared.fault {
+                f.cancel_stalls();
+            }
+            return;
         }
     }
 }
@@ -316,7 +512,7 @@ enum Mode<'env> {
 /// oracle).
 pub struct Exec<'env> {
     mode: Mode<'env>,
-    trace: Mutex<Vec<TraceOp>>,
+    shared: Arc<Shared>,
     n_events: Cell<u32>,
     n_streams: usize,
 }
@@ -332,18 +528,54 @@ impl<'env> Exec<'env> {
         matches!(self.mode, Mode::Streams(_))
     }
 
+    /// Ops submitted to `stream` but not yet finished (0 under the
+    /// serial oracle, where ops complete at submission).
+    pub fn queue_depth(&self, stream: usize) -> usize {
+        assert!(stream < self.n_streams, "stream {stream} out of range");
+        self.shared.statuses[stream].depth()
+    }
+
+    /// Re-raise a failure recorded by an earlier inline op or by the
+    /// watchdog (serial path; the async path defers to scope exit).
+    fn propagate_failure(&self) -> ! {
+        let payload = self
+            .shared
+            .panic
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| Box::new("exec scope failed".to_string()));
+        resume_unwind(payload)
+    }
+
     /// Enqueue `job` on `stream`. FIFO with everything previously
     /// enqueued on the same stream; unordered with other streams unless
     /// an [`Exec::wait`] edge says otherwise. `label` names the op in
     /// the trace and DES replay.
     pub fn launch(&self, stream: usize, label: &'static str, job: impl FnOnce() + Send + 'env) {
         assert!(stream < self.n_streams, "stream {stream} out of range");
-        self.trace.lock().unwrap().push(TraceOp::Launch {
+        self.shared.trace.lock().unwrap().push(TraceOp::Launch {
             stream: stream as u32,
             label,
         });
+        self.shared.statuses[stream]
+            .submitted
+            .fetch_add(1, Ordering::Relaxed);
         match &self.mode {
-            Mode::Serial => job(),
+            Mode::Serial => {
+                // A failure (watchdog or earlier op) surfaces at the
+                // next submission, preserving the serial oracle's
+                // panic-at-submission semantics.
+                if self.shared.failed.load(Ordering::Acquire) {
+                    self.propagate_failure();
+                }
+                if let Err(p) = self.shared.run_op(stream, label, job) {
+                    resume_unwind(p);
+                }
+                if self.shared.failed.load(Ordering::Acquire) {
+                    self.propagate_failure();
+                }
+            }
             Mode::Streams(tx) => tx[stream]
                 .send(Msg::Run(Box::new(job), label))
                 .expect("stream worker exited early"),
@@ -362,7 +594,7 @@ impl<'env> Exec<'env> {
             state: Arc::new(EventState::default()),
             id,
         };
-        self.trace.lock().unwrap().push(TraceOp::Record {
+        self.shared.trace.lock().unwrap().push(TraceOp::Record {
             stream: stream as u32,
             event: id,
         });
@@ -379,7 +611,7 @@ impl<'env> Exec<'env> {
     /// once `ev` has fired (CUDA `cudaStreamWaitEvent`).
     pub fn wait(&self, stream: usize, ev: &Event) {
         assert!(stream < self.n_streams, "stream {stream} out of range");
-        self.trace.lock().unwrap().push(TraceOp::Wait {
+        self.shared.trace.lock().unwrap().push(TraceOp::Wait {
             stream: stream as u32,
             event: ev.id,
         });
@@ -414,7 +646,7 @@ impl<'env> Exec<'env> {
         Trace {
             n_streams: self.n_streams,
             async_mode: self.is_async(),
-            ops: self.trace.lock().unwrap().clone(),
+            ops: self.shared.trace.lock().unwrap().clone(),
         }
     }
 }
@@ -423,35 +655,66 @@ impl<'env> Exec<'env> {
 /// ([`num_streams`] streams; serial oracle iff `LLMQ_ASYNC=off` /
 /// [`with_async`]`(false)`). Returns once every submitted op has
 /// finished — leaving the scope is a full device sync. A panic inside
-/// any op drains the streams and resurfaces on this thread.
+/// any op drains the streams and resurfaces on this thread, wrapped
+/// with its stream/label/queue-depth context.
 pub fn scope<'env, R>(f: impl FnOnce(&Exec<'env>) -> R) -> R {
     scope_cfg(num_streams(), async_enabled(), f)
 }
 
 /// [`scope`] with explicit stream count and async mode (tests/benches).
+/// Captures the calling thread's `fault` plane and watchdog setting.
 pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'env>) -> R) -> R {
     let streams = streams.clamp(1, MAX_STREAMS);
+    let shared = Arc::new(Shared::new(streams, crate::fault::current()));
+
+    // The watchdog runs on its own (non-scoped) thread so it can watch
+    // both the async workers and the serial oracle's inline ops; it is
+    // always stopped and joined before the scope returns or unwinds.
+    let wd_ms = watchdog_ms();
+    let wd_stop = Arc::new(AtomicBool::new(false));
+    let wd_handle = (wd_ms > 0).then(|| {
+        let sh = Arc::clone(&shared);
+        let stop = Arc::clone(&wd_stop);
+        std::thread::spawn(move || watchdog_loop(&sh, Duration::from_millis(wd_ms), &stop))
+    });
+    struct StopWatchdog(Arc<AtomicBool>, Option<std::thread::JoinHandle<()>>);
+    impl Drop for StopWatchdog {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Release);
+            if let Some(h) = self.1.take() {
+                let _ = h.join();
+            }
+        }
+    }
+    let _stop = StopWatchdog(Arc::clone(&wd_stop), wd_handle);
+
     if !async_on {
         let ex = Exec {
             mode: Mode::Serial,
-            trace: Mutex::new(Vec::new()),
+            shared: Arc::clone(&shared),
             n_events: Cell::new(0),
             n_streams: streams,
         };
-        return f(&ex);
+        let r = f(&ex);
+        // A watchdog firing after the last submission still fails the
+        // scope (nothing is in flight serially, so this is rare — an op
+        // that stalled and was cancelled right at the end).
+        if shared.failed.load(Ordering::Acquire) {
+            ex.propagate_failure();
+        }
+        return r;
     }
-    let shared = Arc::new(Shared::default());
     let result = std::thread::scope(|s| {
         let mut senders = Vec::with_capacity(streams);
-        for _ in 0..streams {
+        for i in 0..streams {
             let (tx, rx) = channel::<Msg<'env>>();
             let sh = Arc::clone(&shared);
-            s.spawn(move || worker(rx, &sh));
+            s.spawn(move || worker(rx, &sh, i));
             senders.push(tx);
         }
         let ex = Exec {
             mode: Mode::Streams(senders),
-            trace: Mutex::new(Vec::new()),
+            shared: Arc::clone(&shared),
             n_events: Cell::new(0),
             n_streams: streams,
         };
@@ -481,7 +744,8 @@ pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'
 /// (contended `try_lock`) instead of a silent nondeterministic
 /// serialization. [`Baton::take`]/[`Baton::put`] move the payload across
 /// an explicit handoff (e.g. an accumulation chain publishing its window
-/// to the reduce stage).
+/// to the reduce stage). Baton panics fire *inside* ops, so they surface
+/// wrapped with the op's stream index, label and queue depth.
 ///
 /// Create batons *before* entering [`scope`] so ops can borrow them for
 /// the executor's `'env` lifetime.
@@ -541,6 +805,7 @@ impl<T> Baton<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{self, FaultPlane, FaultSpec};
     use std::sync::atomic::AtomicUsize;
 
     /// Both modes: every op runs exactly once, FIFO per stream.
@@ -602,6 +867,7 @@ mod tests {
             }
             ex.sync_all();
             assert_eq!(hits.load(Ordering::Relaxed), 3);
+            assert_eq!(ex.queue_depth(0), 0);
         });
     }
 
@@ -698,6 +964,107 @@ mod tests {
         assert!(r.is_err(), "panic must resurface on the scope thread");
     }
 
+    /// Satellite: op panics carry stream index, op label and queue depth
+    /// — in both modes.
+    #[test]
+    fn op_panic_carries_context() {
+        for async_on in [false, true] {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                scope_cfg(2, async_on, |ex| {
+                    ex.launch(1, "boom", || panic!("kernel exploded"));
+                });
+            }));
+            let payload = r.expect_err("must panic");
+            let msg = payload
+                .downcast_ref::<String>()
+                .expect("wrapped payload is a String");
+            assert!(msg.contains("\"boom\""), "label in {msg:?}");
+            assert!(msg.contains("stream 1"), "stream in {msg:?}");
+            assert!(msg.contains("queue depth"), "depth in {msg:?}");
+            assert!(msg.contains("kernel exploded"), "cause in {msg:?}");
+        }
+    }
+
+    /// Baton contention panics happen inside ops, so they get the same
+    /// stream/label/depth context.
+    #[test]
+    fn baton_contention_panic_carries_context() {
+        let mut data = vec![0u64; 1 << 14];
+        let baton = Baton::new(&mut data[..]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope_cfg(2, true, |ex| {
+                // Two ops on different streams with no ordering edge —
+                // the contract violation Baton exists to catch. One of
+                // them panics with contention context (timing-dependent
+                // which, so retry the racy setup a few times).
+                for _ in 0..64 {
+                    ex.launch(0, "racer-a", || {
+                        baton.with(|d| d.iter_mut().for_each(|x| *x += 1))
+                    });
+                    ex.launch(1, "racer-b", || {
+                        baton.with(|d| d.iter_mut().for_each(|x| *x += 1))
+                    });
+                }
+            });
+        }));
+        if let Err(payload) = r {
+            let msg = payload.downcast_ref::<String>().expect("wrapped");
+            assert!(msg.contains("Baton contended"), "cause in {msg:?}");
+            assert!(msg.contains("racer-"), "label in {msg:?}");
+            assert!(msg.contains("stream"), "stream in {msg:?}");
+        }
+        // (if the race never fired, the ops serialized by luck — fine)
+    }
+
+    /// Tentpole: an injected stall becomes a named watchdog error with a
+    /// stream-state dump — never a hang — in both modes.
+    #[test]
+    fn watchdog_turns_stall_into_named_error() {
+        for async_on in [false, true] {
+            let plane = FaultPlane::new(
+                FaultSpec::parse_program("rank0:step1:stall").unwrap(),
+            );
+            plane.set_step(1);
+            let r = fault::with_plane(&plane, || {
+                with_watchdog(50, || {
+                    catch_unwind(AssertUnwindSafe(|| {
+                        scope_cfg(2, async_on, |ex| {
+                            ex.launch(0, "stalls-here", || {});
+                            ex.launch(1, "fine", || {});
+                        });
+                    }))
+                })
+            });
+            let payload = r.expect_err("watchdog must fail the scope");
+            let msg = payload
+                .downcast_ref::<String>()
+                .expect("named watchdog error");
+            assert!(msg.contains("watchdog"), "async {async_on}: {msg:?}");
+            assert!(msg.contains("stalls-here"), "label in {msg:?}");
+            assert!(msg.contains("queue depths"), "dump in {msg:?}");
+            assert!(msg.contains("trace tail"), "trace in {msg:?}");
+        }
+    }
+
+    /// Without a fault, an armed watchdog is invisible: results and
+    /// traces are bit-identical to an unwatched run.
+    #[test]
+    fn watchdog_is_transparent_when_nothing_stalls() {
+        let hits = AtomicUsize::new(0);
+        with_watchdog(200, || {
+            scope_cfg(2, true, |ex| {
+                for s in 0..2 {
+                    for _ in 0..10 {
+                        ex.launch(s, "inc", || {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                }
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 20);
+    }
+
     #[test]
     fn overrides_resolve_and_restore() {
         let base = num_streams();
@@ -707,5 +1074,10 @@ mod tests {
         assert!(!with_async(false, async_enabled));
         // nested: innermost wins
         assert!(with_async(false, || with_async(true, async_enabled)));
+        // watchdog override resolves and restores
+        let wd = watchdog_ms();
+        assert_eq!(with_watchdog(25, watchdog_ms), 25);
+        assert_eq!(with_watchdog(0, watchdog_ms), 0);
+        assert_eq!(watchdog_ms(), wd);
     }
 }

@@ -1,0 +1,739 @@
+//! Deterministic, seeded fault injection for the training runtime.
+//!
+//! LLMQ's pitch is multi-day runs on consumer hardware — the machines
+//! most likely to hit driver resets, thermal stalls and interrupted
+//! runs. Before the multi-process scale-out can be made elastic, the
+//! fault model has to exist *in-process*, where every recovery can be
+//! verified bitwise against an uninterrupted run. This module is that
+//! fault plane: a parsed [`FaultSpec`] program (`LLMQ_FAULT`) whose
+//! injection hooks are threaded through `Trainer::train_step` /
+//! the supervised host step (rank sites), `exec` op dispatch (stream
+//! sites), the synchronous collective entry, and the checkpoint save
+//! path.
+//!
+//! # Spec grammar (`LLMQ_FAULT`)
+//!
+//! One or more `;`-separated faults. Each fault is either **targeted**
+//!
+//! ```text
+//! rank<R>:step<S>:<kind>[:sticky][:exec|:collective|:step]
+//! ```
+//!
+//! or **seeded probabilistic** (chaos sweeps):
+//!
+//! ```text
+//! prob:p<P>:seed<N>:<kind>[:sticky]
+//! ```
+//!
+//! with `<kind>` one of `crash`, `stall`, `slow-collective`, `io-error`,
+//! `corrupt-checkpoint`. Examples:
+//!
+//! ```text
+//! LLMQ_FAULT=rank1:step3:crash                    # rank 1 dies at step 3, once
+//! LLMQ_FAULT=rank0:step2:stall                    # stream op stalls (watchdog test)
+//! LLMQ_FAULT=rank0:step2:corrupt-checkpoint;rank1:step3:crash
+//! LLMQ_FAULT=prob:p0.01:seed7:crash               # 1% per (rank, step), seeded
+//! ```
+//!
+//! # Determinism
+//!
+//! Every injection decision is a pure function of `(spec, site, rank,
+//! step)` — the probabilistic mode draws from the same murmur3 counter
+//! RNG the SR streams use, keyed by the spec seed — so a chaos run is
+//! exactly reproducible from its `LLMQ_FAULT` string. Each fault fires
+//! **once** per `(rank, step)` site unless marked `sticky`: a retried
+//! step after supervised recovery does not re-trip the fault, which is
+//! what lets `tests/fault_tolerance.rs` pin *recovered ≡ uninterrupted,
+//! bitwise*. Sticky faults model a permanently dead rank; they disarm
+//! when the supervisor reshards the world down ([`notify_world_shrunk`]).
+//!
+//! # Wiring
+//!
+//! The active plane resolves like the other runtime knobs: a
+//! thread-local [`with_plane`] override (tests), else the parse-once
+//! `LLMQ_FAULT` environment plane. `exec::scope` captures the plane at
+//! scope creation and hands it to its stream workers, so stream-site
+//! faults fire on worker threads without any global mutable state.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::precision::CounterRng;
+
+/// Hard ceiling on an injected stall (reached only when no watchdog is
+/// configured — a stall must never hang CI forever).
+pub const STALL_CAP: Duration = Duration::from_secs(30);
+
+/// The failure kinds the plane can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// The rank panics mid-step (fires at the rank/step site).
+    Crash,
+    /// A stream op blocks until the exec watchdog cancels it (fires at
+    /// the exec op-dispatch site) — the watchdog-timeout test vector.
+    Stall,
+    /// A bounded delay on collective/reduce work — perturbs the
+    /// schedule, must never perturb the numbers.
+    SlowCollective,
+    /// The checkpoint save fails with a named io error (nothing is
+    /// written).
+    IoError,
+    /// The checkpoint save silently writes a bit-flipped file — the
+    /// CRC-at-load / fall-back-a-generation test vector.
+    CorruptCheckpoint,
+}
+
+impl FaultKind {
+    /// Spec-grammar name of the kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Stall => "stall",
+            FaultKind::SlowCollective => "slow-collective",
+            FaultKind::IoError => "io-error",
+            FaultKind::CorruptCheckpoint => "corrupt-checkpoint",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "crash" => FaultKind::Crash,
+            "stall" => FaultKind::Stall,
+            "slow-collective" => FaultKind::SlowCollective,
+            "io-error" => FaultKind::IoError,
+            "corrupt-checkpoint" => FaultKind::CorruptCheckpoint,
+            other => bail!(
+                "unknown fault kind {other:?} (expected crash|stall|\
+                 slow-collective|io-error|corrupt-checkpoint)"
+            ),
+        })
+    }
+
+    /// The site this kind fires at unless the spec overrides it.
+    fn default_site(self) -> Site {
+        match self {
+            FaultKind::Crash => Site::Step,
+            FaultKind::Stall | FaultKind::SlowCollective => Site::Exec,
+            FaultKind::IoError | FaultKind::CorruptCheckpoint => Site::Checkpoint,
+        }
+    }
+}
+
+/// Where in the runtime an injection hook sits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// The per-rank point of a training step (trainer microbatch loop /
+    /// supervised host step).
+    Step,
+    /// `exec` stream op dispatch (worker side; the watchdog's domain).
+    Exec,
+    /// The synchronous collective entry (`optim::fused::reduce_phase`).
+    Collective,
+    /// The checkpoint save path.
+    Checkpoint,
+}
+
+/// When a fault fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Exactly at `(rank, step)`.
+    Targeted {
+        /// Rank (or stream, at exec sites) the fault targets.
+        rank: u32,
+        /// 1-based optimizer step the fault targets.
+        step: u32,
+    },
+    /// Independently at every `(rank, step)` site with probability `p`,
+    /// drawn from a seeded counter RNG (reproducible chaos sweeps).
+    Seeded {
+        /// Per-site firing probability in `[0, 1]`.
+        p: f32,
+        /// RNG seed; the draw for a site is a pure function of
+        /// `(seed, kind, rank, step)`.
+        seed: u32,
+    },
+}
+
+/// One parsed fault: what to inject, where, and when.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Failure kind.
+    pub kind: FaultKind,
+    /// Firing rule.
+    pub trigger: Trigger,
+    /// Site the fault fires at (defaults per kind).
+    pub site: Site,
+    /// Sticky faults re-fire on retry (a permanently dead rank) until
+    /// the plane is disarmed by a world shrink.
+    pub sticky: bool,
+}
+
+impl FaultSpec {
+    /// Parse one fault clause of the `LLMQ_FAULT` grammar.
+    pub fn parse(s: &str) -> Result<Self> {
+        let toks: Vec<&str> = s.split(':').map(str::trim).collect();
+        anyhow::ensure!(
+            toks.len() >= 3,
+            "fault spec {s:?}: expected rank<R>:step<S>:<kind> or prob:p<P>:seed<N>:<kind>"
+        );
+        let (kind_idx, trigger) = if toks[0] == "prob" {
+            let p: f32 = toks[1]
+                .strip_prefix('p')
+                .and_then(|v| v.parse().ok())
+                .filter(|p| (0.0..=1.0).contains(p))
+                .ok_or_else(|| anyhow::anyhow!("fault spec {s:?}: bad probability {:?}", toks[1]))?;
+            let seed: u32 = toks[2]
+                .strip_prefix("seed")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("fault spec {s:?}: bad seed {:?}", toks[2]))?;
+            anyhow::ensure!(toks.len() >= 4, "fault spec {s:?}: missing kind");
+            (3, Trigger::Seeded { p, seed })
+        } else {
+            let rank: u32 = toks[0]
+                .strip_prefix("rank")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("fault spec {s:?}: bad rank {:?}", toks[0]))?;
+            let step: u32 = toks[1]
+                .strip_prefix("step")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("fault spec {s:?}: bad step {:?}", toks[1]))?;
+            (2, Trigger::Targeted { rank, step })
+        };
+        let kind = FaultKind::parse(toks[kind_idx])?;
+        let mut spec = FaultSpec {
+            kind,
+            trigger,
+            site: kind.default_site(),
+            sticky: false,
+        };
+        for flag in &toks[kind_idx + 1..] {
+            match *flag {
+                "sticky" => spec.sticky = true,
+                "exec" => spec.site = Site::Exec,
+                "collective" => spec.site = Site::Collective,
+                "step" => spec.site = Site::Step,
+                other => bail!("fault spec {s:?}: unknown flag {other:?}"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a full `LLMQ_FAULT` program (`;`-separated clauses).
+    pub fn parse_program(s: &str) -> Result<Vec<Self>> {
+        s.split(';')
+            .map(str::trim)
+            .filter(|c| !c.is_empty())
+            .map(Self::parse)
+            .collect()
+    }
+
+    /// Render the clause back in spec grammar (provenance stamps).
+    pub fn render(&self) -> String {
+        let mut out = match self.trigger {
+            Trigger::Targeted { rank, step } => format!("rank{rank}:step{step}"),
+            Trigger::Seeded { p, seed } => format!("prob:p{p}:seed{seed}"),
+        };
+        out.push(':');
+        out.push_str(self.kind.name());
+        if self.site != self.kind.default_site() {
+            out.push_str(match self.site {
+                Site::Step => ":step",
+                Site::Exec => ":exec",
+                Site::Collective => ":collective",
+                Site::Checkpoint => ":checkpoint",
+            });
+        }
+        if self.sticky {
+            out.push_str(":sticky");
+        }
+        out
+    }
+}
+
+/// The live injection plane: a fault program plus the firing state
+/// (current step, fired-once bookkeeping, stall cancellation, the
+/// injection log the supervisor folds into its event log).
+#[derive(Debug)]
+pub struct FaultPlane {
+    specs: Vec<FaultSpec>,
+    step: AtomicU32,
+    armed: AtomicBool,
+    cancel: AtomicBool,
+    fired: Mutex<HashSet<(usize, u32, u32)>>,
+    log: Mutex<Vec<String>>,
+}
+
+impl FaultPlane {
+    /// A plane running `specs`.
+    pub fn new(specs: Vec<FaultSpec>) -> Arc<Self> {
+        Arc::new(Self {
+            specs,
+            step: AtomicU32::new(0),
+            armed: AtomicBool::new(true),
+            cancel: AtomicBool::new(false),
+            fired: Mutex::new(HashSet::new()),
+            log: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Parse-and-build ([`FaultSpec::parse_program`]).
+    pub fn from_program(s: &str) -> Result<Arc<Self>> {
+        Ok(Self::new(FaultSpec::parse_program(s)?))
+    }
+
+    /// Tell the plane which 1-based optimizer step is running — the
+    /// trainer / supervised step calls this at step start so exec-site
+    /// and collective-site checks (which don't know the step) can match.
+    pub fn set_step(&self, step: u32) {
+        self.step.store(step, Ordering::Release);
+    }
+
+    /// The step the plane believes is running.
+    pub fn step(&self) -> u32 {
+        self.step.load(Ordering::Acquire)
+    }
+
+    /// Disarm every fault (no further injections). The supervisor calls
+    /// this through [`notify_world_shrunk`] when it reshards a dead rank
+    /// away — the fault modeled that rank's hardware.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+    }
+
+    /// Cancel in-flight injected stalls so streams can drain (the exec
+    /// watchdog calls this after it has converted the stall into a named
+    /// error).
+    pub fn cancel_stalls(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    /// Injection log so far (one line per fired fault), oldest first.
+    pub fn injections(&self) -> Vec<String> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// Render the whole program in spec grammar.
+    pub fn descriptor(&self) -> String {
+        self.specs
+            .iter()
+            .map(FaultSpec::render)
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Should spec `idx` fire at `(site, rank, step)`? Pure decision
+    /// plus the fire-once bookkeeping.
+    fn should_fire(&self, idx: usize, site: Site, rank: u32, step: u32) -> bool {
+        if !self.armed.load(Ordering::Acquire) {
+            return false;
+        }
+        let spec = &self.specs[idx];
+        if spec.site != site {
+            return false;
+        }
+        let matched = match spec.trigger {
+            Trigger::Targeted { rank: r, step: s } => r == rank && s == step,
+            Trigger::Seeded { p, seed } => {
+                // One deterministic draw per (kind, rank, step): the same
+                // murmur3 counter mix as the SR streams, keyed by the
+                // spec seed so sweeps are reproducible from the string.
+                let rng = CounterRng::new(seed ^ 0xFA17_0000 ^ ((spec.kind as u32) << 8));
+                rng.next_f32(rank.wrapping_mul(0x0001_0003).wrapping_add(step)) < p
+            }
+        };
+        if !matched {
+            return false;
+        }
+        let key = (idx, rank, step);
+        let mut fired = self.fired.lock().unwrap();
+        if fired.contains(&key) && !spec.sticky {
+            return false;
+        }
+        fired.insert(key);
+        true
+    }
+
+    fn log_fire(&self, spec: &FaultSpec, site: Site, rank: u32, step: u32, what: &str) {
+        let line = format!(
+            "injected {} at {site:?} site (rank {rank}, step {step}): {what} [{}]",
+            spec.kind.name(),
+            spec.render()
+        );
+        eprintln!("llmq fault: {line}");
+        self.log.lock().unwrap().push(line);
+    }
+
+    /// Rank/step injection site — call once per rank at the top of a
+    /// training step. A matched `crash` panics (the in-process model of
+    /// a rank death the supervisor must catch).
+    pub fn step_site(&self, rank: usize, step: u32) {
+        for (idx, spec) in self.specs.iter().enumerate() {
+            if spec.kind == FaultKind::Crash && self.should_fire(idx, Site::Step, rank as u32, step)
+            {
+                self.log_fire(spec, Site::Step, rank as u32, step, "rank panic");
+                panic!("llmq fault: injected crash — rank {rank} died at step {step}");
+            }
+        }
+    }
+
+    /// Exec op-dispatch injection site — called by the stream worker
+    /// (or the serial inline path) before running an op. Stalls block
+    /// until [`FaultPlane::cancel_stalls`] (watchdog) or [`STALL_CAP`];
+    /// slow-collective delays ops whose label looks like reduction
+    /// work; an exec-sited crash panics inside the op.
+    pub fn exec_site(&self, stream: usize, n_streams: usize, label: &'static str) {
+        let step = self.step();
+        for (idx, spec) in self.specs.iter().enumerate() {
+            // At exec sites a targeted spec's rank addresses a stream,
+            // folded into the scope's stream count so the fault fires
+            // even when fewer streams are configured.
+            let hit = match spec.trigger {
+                Trigger::Targeted { rank, .. } => {
+                    stream == (rank as usize) % n_streams.max(1)
+                        && self.should_fire(idx, Site::Exec, rank, step)
+                }
+                Trigger::Seeded { .. } => self.should_fire(idx, Site::Exec, stream as u32, step),
+            };
+            if !hit {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Stall => {
+                    self.log_fire(spec, Site::Exec, stream as u32, step, "op stall");
+                    let t0 = Instant::now();
+                    while !self.cancel.load(Ordering::Acquire) && t0.elapsed() < STALL_CAP {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                FaultKind::SlowCollective => {
+                    if label.contains("reduce") || label.contains("gather") {
+                        self.log_fire(spec, Site::Exec, stream as u32, step, "slow collective op");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                FaultKind::Crash => {
+                    self.log_fire(spec, Site::Exec, stream as u32, step, "op panic");
+                    panic!(
+                        "llmq fault: injected crash in op {label:?} on stream {stream} \
+                         at step {step}"
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Synchronous collective injection site (`reduce_phase` when the
+    /// async runtime is off). Slow-collective sleeps; a
+    /// collective-sited crash panics mid-collective.
+    pub fn collective_site(&self) {
+        let step = self.step();
+        for (idx, spec) in self.specs.iter().enumerate() {
+            let rank = match spec.trigger {
+                Trigger::Targeted { rank, .. } => rank,
+                Trigger::Seeded { .. } => 0,
+            };
+            if !self.should_fire(idx, Site::Collective, rank, step) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::SlowCollective => {
+                    self.log_fire(spec, Site::Collective, rank, step, "slow collective");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                FaultKind::Crash => {
+                    self.log_fire(spec, Site::Collective, rank, step, "collective panic");
+                    panic!("llmq fault: injected crash in collective at step {step}");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Checkpoint-save injection site — called with the encoded bytes
+    /// before they reach the filesystem. `io-error` returns a named
+    /// error (nothing written); `corrupt-checkpoint` silently flips one
+    /// deterministically chosen bit (the load-side CRC must catch it).
+    pub fn checkpoint_site(&self, bytes: &mut [u8], step: u32) -> Result<()> {
+        for (idx, spec) in self.specs.iter().enumerate() {
+            let rank = match spec.trigger {
+                Trigger::Targeted { rank, .. } => rank,
+                Trigger::Seeded { .. } => 0,
+            };
+            if !self.should_fire(idx, Site::Checkpoint, rank, step) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::IoError => {
+                    self.log_fire(spec, Site::Checkpoint, rank, step, "save io error");
+                    bail!("llmq fault: injected io error writing checkpoint at step {step}");
+                }
+                FaultKind::CorruptCheckpoint => {
+                    if !bytes.is_empty() {
+                        let rng = CounterRng::new(0xC0FF_EE ^ step);
+                        let pos = rng.next_u32(idx as u32) as usize % bytes.len();
+                        let bit = rng.next_u32(!(idx as u32)) % 8;
+                        bytes[pos] ^= 1 << bit;
+                        self.log_fire(
+                            spec,
+                            Site::Checkpoint,
+                            rank,
+                            step,
+                            &format!("flipped bit {bit} of byte {pos}"),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plane resolution: thread-local override, else the LLMQ_FAULT env plane
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static PLANE_OVERRIDE: std::cell::RefCell<Option<Arc<FaultPlane>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn env_plane() -> Option<Arc<FaultPlane>> {
+    static ENV: OnceLock<Option<Arc<FaultPlane>>> = OnceLock::new();
+    ENV.get_or_init(|| {
+        let raw = std::env::var("LLMQ_FAULT").ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        match FaultPlane::from_program(&raw) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                // Same policy as LLMQ_THREADS garbage: warn once, take
+                // the conservative reading (no injection) — run_cli
+                // validates eagerly so chaos jobs fail loud instead.
+                eprintln!("llmq: ignoring unparsable LLMQ_FAULT={raw:?}: {e}");
+                None
+            }
+        }
+    })
+    .clone()
+}
+
+/// Validate `LLMQ_FAULT` eagerly (the CLI calls this so a typo'd chaos
+/// spec aborts the run instead of silently injecting nothing).
+pub fn validate_env() -> Result<()> {
+    if let Ok(raw) = std::env::var("LLMQ_FAULT") {
+        if !raw.trim().is_empty() {
+            FaultSpec::parse_program(&raw)?;
+        }
+    }
+    Ok(())
+}
+
+/// The active fault plane: [`with_plane`] override on this thread, else
+/// the parse-once `LLMQ_FAULT` environment plane, else none.
+pub fn current() -> Option<Arc<FaultPlane>> {
+    PLANE_OVERRIDE
+        .with(|c| c.borrow().clone())
+        .or_else(env_plane)
+}
+
+/// Is any fault plane active? (Benches refuse to write BENCH JSONs when
+/// this is true.)
+pub fn active() -> bool {
+    current().is_some()
+}
+
+/// Spec-grammar description of the active plane, or `"off"` — the value
+/// `util::bench::provenance_json` stamps so a BENCH JSON can never
+/// silently carry fault-injected figures.
+pub fn descriptor() -> String {
+    current().map_or_else(|| "off".into(), |p| p.descriptor())
+}
+
+/// Pin `plane` as the active fault plane on this thread for the
+/// duration of `f` (restored on unwind) — the test-side twin of
+/// `LLMQ_FAULT`, mirroring `par::with_threads`. `exec::scope` captures
+/// the plane at scope creation, so stream-site faults fire on worker
+/// threads too.
+pub fn with_plane<R>(plane: &Arc<FaultPlane>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<FaultPlane>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PLANE_OVERRIDE.with(|c| *c.borrow_mut() = self.0.take());
+        }
+    }
+    let _restore = Restore(
+        PLANE_OVERRIDE.with(|c| c.borrow_mut().replace(Arc::clone(plane))),
+    );
+    f()
+}
+
+/// Convenience: tell the active plane (if any) the current step.
+pub fn set_step(step: u32) {
+    if let Some(p) = current() {
+        p.set_step(step);
+    }
+}
+
+/// Convenience: fire the rank/step site against the active plane.
+pub fn step_site(rank: usize, step: u32) {
+    if let Some(p) = current() {
+        p.step_site(rank, step);
+    }
+}
+
+/// Convenience: fire the synchronous-collective site.
+pub fn collective_site() {
+    if let Some(p) = current() {
+        p.collective_site();
+    }
+}
+
+/// Convenience: fire the checkpoint-save site over `bytes`.
+pub fn checkpoint_site(bytes: &mut [u8], step: u32) -> Result<()> {
+    match current() {
+        Some(p) => p.checkpoint_site(bytes, step),
+        None => Ok(()),
+    }
+}
+
+/// The supervisor resharded a dead rank away: disarm the active plane
+/// (its faults modeled that rank's hardware).
+pub fn notify_world_shrunk() {
+    if let Some(p) = current() {
+        p.disarm();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrips() {
+        for s in [
+            "rank1:step3:crash",
+            "rank0:step2:stall",
+            "rank2:step5:slow-collective",
+            "rank0:step1:io-error",
+            "rank3:step4:corrupt-checkpoint",
+            "rank1:step3:crash:sticky",
+            "rank1:step3:crash:exec",
+            "prob:p0.01:seed7:crash",
+        ] {
+            let spec = FaultSpec::parse(s).unwrap();
+            assert_eq!(spec.render(), s, "roundtrip of {s:?}");
+        }
+        // programs: multiple clauses
+        let prog = FaultSpec::parse_program("rank0:step2:corrupt-checkpoint; rank1:step3:crash")
+            .unwrap();
+        assert_eq!(prog.len(), 2);
+        assert_eq!(prog[1].kind, FaultKind::Crash);
+    }
+
+    #[test]
+    fn bad_specs_are_named_errors() {
+        for s in [
+            "step3:crash",
+            "rank1:step3:meltdown",
+            "rankx:step3:crash",
+            "rank1:stepx:crash",
+            "prob:p2.0:seed1:crash",
+            "prob:p0.1:seedx:crash",
+            "rank1:step3:crash:loud",
+        ] {
+            assert!(FaultSpec::parse(s).is_err(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn targeted_crash_fires_once_then_not_on_retry() {
+        let plane = FaultPlane::new(FaultSpec::parse_program("rank1:step3:crash").unwrap());
+        // wrong rank / wrong step: nothing
+        plane.step_site(0, 3);
+        plane.step_site(1, 2);
+        // the hit panics
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plane.step_site(1, 3)));
+        assert!(r.is_err());
+        // the retry of the same (rank, step) passes — fire-once
+        plane.step_site(1, 3);
+        assert_eq!(plane.injections().len(), 1);
+    }
+
+    #[test]
+    fn sticky_refires_until_disarmed() {
+        let plane =
+            FaultPlane::new(FaultSpec::parse_program("rank0:step1:crash:sticky").unwrap());
+        for _ in 0..2 {
+            let r =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plane.step_site(0, 1)));
+            assert!(r.is_err(), "sticky must re-fire");
+        }
+        plane.disarm();
+        plane.step_site(0, 1); // disarmed: no panic
+    }
+
+    #[test]
+    fn seeded_mode_is_deterministic() {
+        let fire_set = |seed: u32| -> Vec<(u32, u32)> {
+            let plane =
+                FaultPlane::new(FaultSpec::parse_program(&format!("prob:p0.2:seed{seed}:crash"))
+                    .unwrap());
+            let mut out = Vec::new();
+            for step in 1..=20u32 {
+                for rank in 0..4u32 {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        plane.step_site(rank as usize, step)
+                    }));
+                    if r.is_err() {
+                        out.push((rank, step));
+                    }
+                }
+            }
+            out
+        };
+        let a = fire_set(7);
+        assert_eq!(a, fire_set(7), "same seed, same firings");
+        assert!(!a.is_empty(), "p=0.2 over 80 sites should fire");
+        assert_ne!(a, fire_set(8), "different seed, different firings");
+    }
+
+    #[test]
+    fn io_error_and_corruption_hooks() {
+        let plane = FaultPlane::new(
+            FaultSpec::parse_program("rank0:step1:io-error;rank0:step2:corrupt-checkpoint")
+                .unwrap(),
+        );
+        let mut bytes = vec![0u8; 64];
+        let err = plane.checkpoint_site(&mut bytes, 1).unwrap_err();
+        assert!(err.to_string().contains("injected io error"), "{err}");
+        assert!(bytes.iter().all(|&b| b == 0), "io-error must not corrupt");
+        plane.checkpoint_site(&mut bytes, 2).unwrap();
+        assert_eq!(
+            bytes.iter().map(|b| b.count_ones()).sum::<u32>(),
+            1,
+            "corrupt flips exactly one bit"
+        );
+        // fire-once: saving step 2 again is clean
+        let again = bytes.clone();
+        let mut bytes2 = again.clone();
+        plane.checkpoint_site(&mut bytes2, 2).unwrap();
+        assert_eq!(bytes2, again);
+    }
+
+    #[test]
+    fn with_plane_overrides_and_restores() {
+        assert!(current().is_none() || std::env::var("LLMQ_FAULT").is_ok());
+        let plane = FaultPlane::new(FaultSpec::parse_program("rank0:step1:crash").unwrap());
+        with_plane(&plane, || {
+            assert!(active());
+            assert_eq!(descriptor(), "rank0:step1:crash");
+        });
+    }
+}

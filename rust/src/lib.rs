@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod fault;
 pub mod hw;
 pub mod memory;
 pub mod metrics;

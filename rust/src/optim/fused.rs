@@ -141,6 +141,10 @@ pub fn grad_norm_scalar(g: &[f32]) -> f32 {
 /// `REDUCE_RNG_KEY ^ seed` at counter-per-global-index, exactly like the
 /// staged reduce-scatter.
 pub fn reduce_phase(ws: &mut StepWorkspace, hs: &HostStep) {
+    // The synchronous collective entry is a fault-injection site: an
+    // injected slow-collective delays here (and must not change a bit);
+    // a collective-sited crash panics here.
+    crate::fault::collective_site();
     let scale = hs.grad_scale();
     if ws.world() == 1 {
         // Degenerate case: no reduction, no SR — one scaled RNE copy.
@@ -150,12 +154,35 @@ pub fn reduce_phase(ws: &mut StepWorkspace, hs: &HostStep) {
     let world = ws.world();
     let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
     // Move the accumulators into a DeviceGroup view and back — no copy.
-    let group = DeviceGroup {
-        world,
-        buffers: std::mem::take(&mut ws.dev_grads),
+    // The restore rides a drop guard so a panic inside the collective
+    // (injected or real) cannot leave the workspace with its
+    // accumulators stolen: a supervised retry of the step must find the
+    // arenas intact (NUMERICS.md Rule 5).
+    struct RestoreGrads<'a> {
+        slot: &'a mut Vec<Vec<f32>>,
+        group: Option<DeviceGroup>,
+    }
+    impl Drop for RestoreGrads<'_> {
+        fn drop(&mut self) {
+            if let Some(g) = self.group.take() {
+                *self.slot = g.buffers;
+            }
+        }
+    }
+    let slot = &mut ws.dev_grads;
+    let buffers = std::mem::take(slot);
+    let guard = RestoreGrads {
+        slot,
+        group: Some(DeviceGroup { world, buffers }),
     };
-    reduce_scatter_scaled_memcpy(&group, &mut ws.grads, scale, &rng, hs.counter);
-    ws.dev_grads = group.buffers;
+    reduce_scatter_scaled_memcpy(
+        guard.group.as_ref().expect("group present until drop"),
+        &mut ws.grads,
+        scale,
+        &rng,
+        hs.counter,
+    );
+    drop(guard); // puts the accumulators back
 }
 
 /// Phase 2: the global-norm barrier. Each chunk's [`backend::NORM_LANES`]
@@ -431,6 +458,10 @@ fn fused_step_streamed(
         assert_eq!(g.len(), n, "microbatch gradient length");
     }
     let overlapped = !micros.is_empty();
+    // Collective-site injection fires here too: the streamed program
+    // embeds the reduce phase in its ops, so this is the path's
+    // collective entry (the sync path's twin lives in `reduce_phase`).
+    crate::fault::collective_site();
     let scale = hs.grad_scale();
     let shard = (n / hs.opt_world) as u32;
     let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
@@ -883,6 +914,71 @@ mod tests {
                 assert_eq!(bits(r), bits(&p2), "{label} replica");
             }
         }
+    }
+
+    /// Regression (fault tolerance): a step killed mid-flight by an
+    /// exec-sited crash leaves no poisoned shared state behind — the
+    /// norm-barrier `OnceLock` and chunk batons are per-call, the
+    /// workspace repairs via `ensure`/`begin_step`, and `reduce_phase`'s
+    /// accumulator move-out restores on unwind — so a retried step is
+    /// bit-identical to a never-interrupted one.
+    #[test]
+    fn retried_step_after_mid_step_panic_is_bit_clean() {
+        use crate::fault::{self, FaultPlane, FaultSpec};
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let n = PIPELINE_BLOCK + 256;
+        let hs = mk_host_step(4, 2);
+        let init = |i: usize| round_to_bf16(0.01 * (i % 97) as f32 - 0.3);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        // reference: the uninterrupted step
+        let mut ws1 = filled_ws(2, n);
+        let mut p1: Vec<f32> = (0..n).map(init).collect();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        let norm1 = crate::exec::with_async(true, || {
+            crate::exec::with_streams(2, || {
+                fused_step_async(&mut ws1, &mut p1, &mut m1, &mut v1, &hs)
+            })
+        });
+
+        // faulted: an injected crash inside a stream op kills attempt 1
+        let plane =
+            FaultPlane::new(FaultSpec::parse_program("rank0:step1:crash:exec").unwrap());
+        plane.set_step(1);
+        let mut ws2 = filled_ws(2, n);
+        let mut p2: Vec<f32> = (0..n).map(init).collect();
+        let (mut m2, mut v2) = (vec![0f32; n], vec![0f32; n]);
+        let (p_save, m_save, v_save) = (p2.clone(), m2.clone(), v2.clone());
+        let r = fault::with_plane(&plane, || {
+            catch_unwind(AssertUnwindSafe(|| {
+                crate::exec::with_async(true, || {
+                    crate::exec::with_streams(2, || {
+                        fused_step_async(&mut ws2, &mut p2, &mut m2, &mut v2, &hs)
+                    })
+                })
+            }))
+        });
+        assert!(r.is_err(), "injected crash must kill the first attempt");
+        assert!(ws2.is_intact(), "unwound step must not steal the arenas");
+
+        // retry exactly as the supervisor does: restore state, reset the
+        // per-step workspace, rerun (the targeted fault fired once).
+        p2.copy_from_slice(&p_save);
+        m2.copy_from_slice(&m_save);
+        v2.copy_from_slice(&v_save);
+        let mut ws2 = filled_ws(2, n);
+        let norm2 = fault::with_plane(&plane, || {
+            crate::exec::with_async(true, || {
+                crate::exec::with_streams(2, || {
+                    fused_step_async(&mut ws2, &mut p2, &mut m2, &mut v2, &hs)
+                })
+            })
+        });
+        assert_eq!(norm1.to_bits(), norm2.to_bits());
+        assert_eq!(bits(&p1), bits(&p2));
+        assert_eq!(bits(&m1), bits(&m2));
+        assert_eq!(bits(&v1), bits(&v2));
     }
 
     /// Streaming the microbatch accumulation into the program (per-chunk

@@ -1,30 +1,48 @@
 //! Checkpoint wire format: a hardened little-endian binary codec.
 //!
-//! Layout (all little-endian):
+//! v3 layout (all little-endian):
 //!
 //! ```text
 //! offset  size  field
 //!      0     4  magic  b"LLMQ"
-//!      4     4  format version (u32) — currently 2
+//!      4     4  format version (u32) — currently 3
 //!      8     4  optimizer step (u32)
 //!     12     4  SR counter base (u32)
 //!     16     8  element count n (u64)
-//!     24  4·n   params  (f32 le)
-//! 24+4n   4·n   first moments
-//! 24+8n   4·n   second moments
+//!     24     4  collective world size at save time (u32, provenance)
+//!     28     4  CRC32 (IEEE) over bytes [0, 28) ++ body
+//!     32  4·n   params  (f32 le)
+//! 32+4n   4·n   first moments
+//! 32+8n   4·n   second moments
 //! ```
 //!
 //! Version history: v1 (pre-header) began directly with the step word —
 //! any 16-byte-prefixed blob of the right length decoded "successfully",
-//! silently misreading foreign files. v2 added the magic + version words;
-//! [`decode_into`] now rejects foreign and stale files with named errors
-//! instead of loading garbage state.
+//! silently misreading foreign files. v2 added the magic + version
+//! words; [`decode_into`] rejects foreign and stale files with named
+//! errors instead of loading garbage state. v3 adds the save-time world
+//! (provenance for supervised recovery — the state itself is flat and
+//! world-agnostic, which is what makes resharded recovery exact) and a
+//! CRC32 over everything but the CRC word itself, so **any** single
+//! flipped bit — header or body — is rejected by name at load instead
+//! of silently perturbing a multi-day run (in v2, header corruption was
+//! caught structurally but body corruption loaded clean). v2 files
+//! remain readable.
+//!
+//! Durability: [`save_atomic`] stages bytes in `<path>.tmp` and renames
+//! into place, so a crash mid-write can truncate only the temp file,
+//! never a previous good generation; [`list_generations`] /
+//! [`generation_path`] define the `ckpt-step<N>.llmq` naming the
+//! supervisor's keep-last-k rotation and fall-back-a-generation
+//! recovery walk over.
 //!
 //! The body converts in `CKPT_CHUNK` blocks in parallel (checkpoint
 //! state is hundreds of MB at 7B scale); pure byte movement, bitwise
 //! exact both ways.
 
-use anyhow::{bail, ensure, Result};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::par;
 
@@ -32,13 +50,61 @@ use crate::util::par;
 pub const MAGIC: [u8; 4] = *b"LLMQ";
 
 /// Current checkpoint format version.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
-/// Header bytes before the f32 body.
-pub const HEADER_LEN: usize = 24;
+/// Header bytes before the f32 body (current, v3).
+pub const HEADER_LEN: usize = 32;
+
+/// Header bytes of the still-readable v2 format.
+pub const HEADER_LEN_V2: usize = 24;
+
+/// Byte offset of the v3 CRC word (the one span the CRC skips).
+pub const CRC_OFFSET: usize = 28;
 
 /// Elements per bulk-conversion block of the checkpoint codec.
 const CKPT_CHUNK: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib polynomial) — std-only, table built at
+// compile time.
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// Feed `bytes` into a running (pre-inverted) CRC state. Start from
+/// `!0`, finish with a final `!`; [`crc32`] does both for the one-shot
+/// case.
+pub fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// One-shot CRC32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(!0, bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Bulk f32 <-> little-endian byte conversion
+// ---------------------------------------------------------------------------
 
 /// Chunked bulk f32 → little-endian bytes (blocks convert in parallel
 /// with no per-element `Vec` growth).
@@ -67,9 +133,14 @@ pub fn le_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
     });
 }
 
-/// Serialize trainer state (`step`, SR `counter`, params/moments of
-/// equal length) into the v2 wire format.
-pub fn encode(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
+// ---------------------------------------------------------------------------
+// Encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize trainer state (`step`, SR `counter`, the save-time
+/// collective `world`, params/moments of equal length) into the v3 wire
+/// format, CRC included.
+pub fn encode(step: u32, counter: u32, world: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
     let n = p.len();
     assert!(m.len() == n && v.len() == n, "state buffers must match");
     let mut bytes = vec![0u8; HEADER_LEN + 12 * n];
@@ -78,24 +149,59 @@ pub fn encode(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u
     bytes[8..12].copy_from_slice(&step.to_le_bytes());
     bytes[12..16].copy_from_slice(&counter.to_le_bytes());
     bytes[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+    bytes[24..28].copy_from_slice(&world.to_le_bytes());
     for (k, buf) in [p, m, v].into_iter().enumerate() {
         let base = HEADER_LEN + 4 * n * k;
+        f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
+    }
+    let crc = !crc32_update(
+        crc32_update(!0, &bytes[..CRC_OFFSET]),
+        &bytes[HEADER_LEN..],
+    );
+    bytes[CRC_OFFSET..HEADER_LEN].copy_from_slice(&crc.to_le_bytes());
+    bytes
+}
+
+/// The legacy v2 writer (24-byte header, no world, no CRC) — kept so
+/// compat tests can pin that v2 files stay readable; new saves are v3.
+pub fn encode_v2(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n, "state buffers must match");
+    let mut bytes = vec![0u8; HEADER_LEN_V2 + 12 * n];
+    bytes[0..4].copy_from_slice(&MAGIC);
+    bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+    bytes[8..12].copy_from_slice(&step.to_le_bytes());
+    bytes[12..16].copy_from_slice(&counter.to_le_bytes());
+    bytes[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+    for (k, buf) in [p, m, v].into_iter().enumerate() {
+        let base = HEADER_LEN_V2 + 4 * n * k;
         f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
     }
     bytes
 }
 
-/// Validate the header and restore state into the provided buffers.
-/// Returns `(step, counter)`. Named errors for every rejection: short
-/// file, foreign magic, stale/unknown version, element-count mismatch,
-/// truncated body — a foreign or v1 file can no longer be misread as
-/// state.
-pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) -> Result<(u32, u32)> {
-    let n = p.len();
-    assert!(m.len() == n && v.len() == n, "state buffers must match");
+/// Header summary of a checkpoint blob, without touching the body —
+/// what the supervisor logs before deciding to restore.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CkptInfo {
+    /// Wire format version (2 or 3).
+    pub version: u32,
+    /// Optimizer step stored in the header.
+    pub step: u32,
+    /// SR counter base stored in the header.
+    pub counter: u32,
+    /// Element count stored in the header.
+    pub n: usize,
+    /// Save-time collective world (v3 only; `None` for v2 files).
+    pub world: Option<u32>,
+}
+
+/// Validate magic/version and read the header fields (no CRC or body
+/// check — [`decode_into`] does those).
+pub fn inspect(bytes: &[u8]) -> Result<CkptInfo> {
     ensure!(
-        bytes.len() >= HEADER_LEN,
-        "truncated checkpoint header: {} bytes, need {HEADER_LEN}",
+        bytes.len() >= 8,
+        "truncated checkpoint header: {} bytes, need at least 8",
         bytes.len()
     );
     if bytes[0..4] != MAGIC {
@@ -103,28 +209,140 @@ pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) ->
         bail!("not an LLMQ checkpoint (magic {got:02x?}, expected {MAGIC:02x?})");
     }
     let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+    let header = match version {
+        2 => HEADER_LEN_V2,
+        3 => HEADER_LEN,
+        _ => bail!(
+            "unsupported checkpoint version {version} (this build reads v2/v{VERSION}; \
+             v1 files predate the header and must be regenerated)"
+        ),
+    };
     ensure!(
-        version == VERSION,
-        "unsupported checkpoint version {version} (this build reads v{VERSION}; \
-         v1 files predate the header and must be regenerated)"
+        bytes.len() >= header,
+        "truncated checkpoint header: {} bytes, need {header} for v{version}",
+        bytes.len()
     );
-    let step = u32::from_le_bytes(bytes[8..12].try_into()?);
-    let counter = u32::from_le_bytes(bytes[12..16].try_into()?);
-    let stored_n = u64::from_le_bytes(bytes[16..24].try_into()?) as usize;
+    Ok(CkptInfo {
+        version,
+        step: u32::from_le_bytes(bytes[8..12].try_into()?),
+        counter: u32::from_le_bytes(bytes[12..16].try_into()?),
+        n: u64::from_le_bytes(bytes[16..24].try_into()?) as usize,
+        world: (version >= 3).then(|| u32::from_le_bytes(bytes[24..28].try_into().unwrap())),
+    })
+}
+
+/// Validate the header (and, for v3, the CRC over header + body) and
+/// restore state into the provided buffers. Returns `(step, counter)`.
+/// Named errors for every rejection: short file, foreign magic,
+/// stale/unknown version, element-count mismatch, truncated body, CRC
+/// mismatch — a foreign, stale, truncated or bit-flipped file can no
+/// longer be misread as state.
+pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) -> Result<(u32, u32)> {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n, "state buffers must match");
+    let info = inspect(bytes)?;
+    let header = if info.version == 2 { HEADER_LEN_V2 } else { HEADER_LEN };
     ensure!(
-        stored_n == n,
-        "checkpoint holds {stored_n} elements, trainer expects {n}"
+        info.n == n,
+        "checkpoint holds {} elements, trainer expects {n}",
+        info.n
     );
     ensure!(
-        bytes.len() == HEADER_LEN + 12 * n,
+        bytes.len() == header + 12 * n,
         "truncated checkpoint body: {} bytes, expected {}",
         bytes.len(),
-        HEADER_LEN + 12 * n
+        header + 12 * n
     );
-    le_bytes_to_f32s(&bytes[HEADER_LEN..HEADER_LEN + 4 * n], p);
-    le_bytes_to_f32s(&bytes[HEADER_LEN + 4 * n..HEADER_LEN + 8 * n], m);
-    le_bytes_to_f32s(&bytes[HEADER_LEN + 8 * n..HEADER_LEN + 12 * n], v);
-    Ok((step, counter))
+    if info.version >= 3 {
+        let stored = u32::from_le_bytes(bytes[CRC_OFFSET..HEADER_LEN].try_into()?);
+        let computed = !crc32_update(
+            crc32_update(!0, &bytes[..CRC_OFFSET]),
+            &bytes[HEADER_LEN..],
+        );
+        ensure!(
+            stored == computed,
+            "checkpoint CRC mismatch (stored {stored:08x}, computed {computed:08x}) — \
+             the file is corrupt; fall back to the previous generation"
+        );
+    }
+    le_bytes_to_f32s(&bytes[header..header + 4 * n], p);
+    le_bytes_to_f32s(&bytes[header + 4 * n..header + 8 * n], m);
+    le_bytes_to_f32s(&bytes[header + 8 * n..header + 12 * n], v);
+    Ok((info.step, info.counter))
+}
+
+// ---------------------------------------------------------------------------
+// Durability: atomic saves + generation naming
+// ---------------------------------------------------------------------------
+
+/// Write `bytes` to `path` atomically: stage in `<path>.tmp`, then
+/// rename into place. A crash mid-write can truncate only the temp
+/// file; an existing good file at `path` (or an older generation) is
+/// never left half-overwritten. Runs the `fault` checkpoint injection
+/// site first — an injected `io-error` fails the save (nothing
+/// written), an injected `corrupt-checkpoint` silently flips one bit
+/// (which the load-side CRC then catches).
+pub fn save_atomic(path: &Path, mut bytes: Vec<u8>, step: u32) -> Result<()> {
+    crate::fault::checkpoint_site(&mut bytes, step)?;
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing checkpoint temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming checkpoint into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// The canonical generation filename for `step` under `dir`:
+/// `ckpt-step<N:08>.llmq` (zero-padded so lexical order is step order).
+pub fn generation_path(dir: &Path, step: u32) -> PathBuf {
+    dir.join(format!("ckpt-step{step:08}.llmq"))
+}
+
+/// List checkpoint generations in `dir`, ascending by step. Only files
+/// matching the [`generation_path`] naming participate — temp files and
+/// foreign droppings are ignored.
+pub fn list_generations(dir: &Path) -> Result<Vec<(u32, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out), // missing dir == no generations
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix("ckpt-step")
+            .and_then(|s| s.strip_suffix(".llmq"))
+            .and_then(|s| s.parse::<u32>().ok())
+        else {
+            continue;
+        };
+        out.push((step, entry.path()));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Keep the newest `keep` generations in `dir`, deleting older ones.
+/// Returns the deleted paths. `keep == 0` is clamped to 1 — rotation
+/// must never delete the only recovery point.
+pub fn rotate_generations(dir: &Path, keep: usize) -> Result<Vec<PathBuf>> {
+    let gens = list_generations(dir)?;
+    let keep = keep.max(1);
+    let mut deleted = Vec::new();
+    if gens.len() > keep {
+        for (_, path) in &gens[..gens.len() - keep] {
+            std::fs::remove_file(path)
+                .with_context(|| format!("rotating old checkpoint {}", path.display()))?;
+            deleted.push(path.clone());
+        }
+    }
+    Ok(deleted)
 }
 
 #[cfg(test)]
@@ -142,18 +360,54 @@ mod tests {
         x.iter().map(|v| v.to_bits()).collect()
     }
 
+    fn decode_err(bytes: &[u8], n: usize) -> anyhow::Error {
+        let (mut p, mut m, mut v) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        decode_into(bytes, &mut p, &mut m, &mut v).unwrap_err()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The classic IEEE-polynomial check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // split-update equals one-shot
+        let data = b"the quick brown fox";
+        let split = !crc32_update(crc32_update(!0, &data[..7]), &data[7..]);
+        assert_eq!(split, crc32(data));
+    }
+
     #[test]
     fn roundtrip_is_bitwise() {
         let n = 100_003;
         let (p, m, v) = state(n);
-        let bytes = encode(7, 42, &p, &m, &v);
+        let bytes = encode(7, 42, 4, &p, &m, &v);
         assert_eq!(bytes.len(), HEADER_LEN + 12 * n);
+        let info = inspect(&bytes).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!(info.world, Some(4));
+        assert_eq!(info.n, n);
         let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
         let (step, counter) = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap();
         assert_eq!((step, counter), (7, 42));
         assert_eq!(bits(&p), bits(&p2));
         assert_eq!(bits(&m), bits(&m2));
         assert_eq!(bits(&v), bits(&v2));
+    }
+
+    /// v2 files (no world, no CRC) stay readable — the compat contract.
+    #[test]
+    fn v2_files_remain_readable() {
+        let n = 1000;
+        let (p, m, v) = state(n);
+        let bytes = encode_v2(9, 77, &p, &m, &v);
+        assert_eq!(bytes.len(), HEADER_LEN_V2 + 12 * n);
+        let info = inspect(&bytes).unwrap();
+        assert_eq!(info.version, 2);
+        assert_eq!(info.world, None);
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let (step, counter) = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap();
+        assert_eq!((step, counter), (9, 77));
+        assert_eq!(bits(&p), bits(&p2));
     }
 
     #[test]
@@ -172,10 +426,9 @@ mod tests {
     fn foreign_magic_is_rejected_by_name() {
         let n = 8;
         let (p, m, v) = state(n);
-        let mut bytes = encode(1, 1, &p, &m, &v);
+        let mut bytes = encode(1, 1, 1, &p, &m, &v);
         bytes[0..4].copy_from_slice(b"GGUF");
-        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
-        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        let err = decode_err(&bytes, n);
         assert!(err.to_string().contains("not an LLMQ checkpoint"), "{err}");
     }
 
@@ -183,10 +436,9 @@ mod tests {
     fn stale_version_is_rejected_by_name() {
         let n = 8;
         let (p, m, v) = state(n);
-        let mut bytes = encode(1, 1, &p, &m, &v);
+        let mut bytes = encode(1, 1, 1, &p, &m, &v);
         bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
-        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
-        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        let err = decode_err(&bytes, n);
         assert!(err.to_string().contains("version 1"), "{err}");
     }
 
@@ -198,26 +450,131 @@ mod tests {
         let mut bytes = vec![0u8; 16 + 12 * n];
         bytes[0..4].copy_from_slice(&3u32.to_le_bytes()); // v1 "step"
         bytes[8..16].copy_from_slice(&(n as u64).to_le_bytes());
-        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
-        let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
+        let err = decode_err(&bytes, n);
         assert!(err.to_string().contains("not an LLMQ checkpoint"), "{err}");
     }
 
     #[test]
-    fn size_mismatch_and_truncation_are_named() {
+    fn size_mismatch_and_zero_length_are_named() {
         let n = 8;
         let (p, m, v) = state(n);
-        let bytes = encode(1, 1, &p, &m, &v);
+        let bytes = encode(1, 1, 1, &p, &m, &v);
         // element-count mismatch
         let (mut p2, mut m2, mut v2) = (vec![0f32; 9], vec![0f32; 9], vec![0f32; 9]);
         let err = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap_err();
         assert!(err.to_string().contains("expects 9"), "{err}");
-        // truncated body
-        let (mut p3, mut m3, mut v3) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
-        let err = decode_into(&bytes[..bytes.len() - 4], &mut p3, &mut m3, &mut v3).unwrap_err();
-        assert!(err.to_string().contains("truncated checkpoint body"), "{err}");
-        // truncated header
-        let err = decode_into(&bytes[..10], &mut p3, &mut m3, &mut v3).unwrap_err();
+        // zero-length input
+        let err = decode_err(&[], n);
         assert!(err.to_string().contains("truncated checkpoint header"), "{err}");
+        // zero-length state buffers against a real file
+        let (mut p0, mut m0, mut v0) = (vec![], vec![], vec![]);
+        let err = decode_into(&bytes, &mut p0, &mut m0, &mut v0).unwrap_err();
+        assert!(err.to_string().contains("expects 0"), "{err}");
+    }
+
+    /// Satellite: truncation at every section boundary (and one byte
+    /// inside each section) must be rejected by name — v2 and v3.
+    #[test]
+    fn truncation_at_every_section_boundary_is_rejected() {
+        let n = 64usize;
+        let (p, m, v) = state(n);
+        for (bytes, header) in [
+            (encode(3, 5, 2, &p, &m, &v), HEADER_LEN),
+            (encode_v2(3, 5, &p, &m, &v), HEADER_LEN_V2),
+        ] {
+            // header-internal cuts, each field edge and one byte short
+            // of each; then body section edges p|m|v and one inside.
+            let mut cuts: Vec<usize> = vec![0, 3, 4, 7, 8, 12, 16, 23];
+            cuts.push(header - 1);
+            cuts.push(header);
+            for k in 1..=3usize {
+                cuts.push(header + 4 * n * k - 1);
+            }
+            cuts.push(header + 4 * n); // p|m edge
+            cuts.push(header + 8 * n); // m|v edge
+            for cut in cuts {
+                if cut >= bytes.len() {
+                    continue;
+                }
+                let err = decode_err(&bytes[..cut], n);
+                assert!(
+                    err.to_string().contains("truncated checkpoint"),
+                    "header {header}, cut {cut}: {err}"
+                );
+            }
+            // the full file still decodes
+            let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+            decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap();
+        }
+    }
+
+    /// Satellite: a single-bit-corruption sweep. v3 rejects **every**
+    /// flipped bit (the CRC covers header and body); v2 rejects header
+    /// flips structurally but silently accepts body flips — the exact
+    /// gap v3 closes, documented here as a pinned contrast.
+    #[test]
+    fn single_bit_corruption_sweep() {
+        let n = 96usize;
+        let (p, m, v) = state(n);
+
+        // v3: every flip position (stride through the file to keep the
+        // sweep fast; stride is coprime-ish with 8 so bit indices vary).
+        let clean = encode(3, 5, 2, &p, &m, &v);
+        let mut pos = 0usize;
+        let mut flips = 0usize;
+        while pos < clean.len() {
+            let mut corrupt = clean.clone();
+            corrupt[pos] ^= 1 << (pos % 8);
+            let err = decode_err(&corrupt, n);
+            let msg = err.to_string();
+            assert!(
+                msg.contains("CRC mismatch")
+                    || msg.contains("not an LLMQ checkpoint")
+                    || msg.contains("version")
+                    || msg.contains("elements")
+                    || msg.contains("truncated"),
+                "v3 flip at byte {pos} must be rejected, got: {msg}"
+            );
+            flips += 1;
+            pos += 13;
+        }
+        assert!(flips > 100, "sweep covered {flips} positions");
+
+        // v2 contrast: a body flip decodes "successfully" with silently
+        // different state — the failure mode that motivated the CRC.
+        let clean2 = encode_v2(3, 5, &p, &m, &v);
+        let mut corrupt2 = clean2.clone();
+        let body_pos = HEADER_LEN_V2 + 5; // inside the params section
+        corrupt2[body_pos] ^= 0x10;
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        decode_into(&corrupt2, &mut p2, &mut m2, &mut v2).unwrap();
+        assert_ne!(bits(&p), bits(&p2), "v2 body corruption loads silently");
+    }
+
+    #[test]
+    fn atomic_save_and_generation_rotation() {
+        let dir = std::env::temp_dir().join(format!("llmq-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let n = 16;
+        let (p, m, v) = state(n);
+        for step in [1u32, 2, 3, 4] {
+            let bytes = encode(step, 1 + 3 * step, 1, &p, &m, &v);
+            save_atomic(&generation_path(&dir, step), bytes, step).unwrap();
+        }
+        // a temp dropping and a foreign file must not register
+        std::fs::write(dir.join("ckpt-step00000009.llmq.tmp"), b"junk").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"junk").unwrap();
+        let gens = list_generations(&dir).unwrap();
+        assert_eq!(gens.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+
+        let deleted = rotate_generations(&dir, 2).unwrap();
+        assert_eq!(deleted.len(), 2);
+        let gens = list_generations(&dir).unwrap();
+        assert_eq!(gens.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![3, 4]);
+        // survivors still decode
+        let bytes = std::fs::read(&gens[1].1).unwrap();
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        assert_eq!(decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap(), (4, 13));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

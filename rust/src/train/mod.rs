@@ -11,10 +11,12 @@
 
 pub mod checkpoint;
 pub mod eval;
+pub mod supervisor;
 pub mod trainer;
 pub mod workspace;
 
 pub use eval::{greedy_decode, host_cross_entropy};
+pub use supervisor::{Supervised, Supervisor, SupervisorCfg, TrainerWorkload};
 pub use trainer::{StepStats, Trainer};
 pub use workspace::StepWorkspace;
 
@@ -25,8 +27,18 @@ use crate::util::Args;
 
 /// CLI: `llmq train --preset small --dtype fp8 --steps 50 --grad-accum 2
 /// --world 1 --lr 3e-4 --seed 0 --data synth --eval-every 10
-/// [--log FILE] [--save FILE] [--resume FILE]`.
+/// [--log FILE] [--save FILE] [--resume FILE]
+/// [--supervise --retries N --backoff-ms B --ckpt-every K --keep-last G
+///  --ckpt-dir DIR --no-shrink]`.
+///
+/// Under `--supervise` the run is driven by [`supervisor::Supervisor`]:
+/// rank death / stalls recover from the newest checkpoint generation in
+/// `--ckpt-dir`, and exhausted retries shrink the world (unless
+/// `--no-shrink`). `LLMQ_WATCHDOG_MS` bounds stall detection either way.
 pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
+    // A mistyped LLMQ_FAULT program must fail the run loudly, before any
+    // work happens — not silently inject nothing.
+    crate::fault::validate_env()?;
     let cfg = TrainConfig {
         dtype: Dtype::parse(&args.str("dtype", "fp8")?)?,
         grad_accum: args.usize("grad-accum", 2)?,
@@ -43,6 +55,20 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
     let log_path = args.opt_str("log")?;
     let save_path = args.opt_str("save")?;
     let resume_path = args.opt_str("resume")?;
+    let supervise = args.flag("supervise");
+    let sup_cfg = supervisor::SupervisorCfg {
+        max_retries: args.u32("retries", 2)?,
+        backoff_ms: args.u32("backoff-ms", 10)? as u64,
+        ckpt_every: args.u32("ckpt-every", 1)?,
+        keep_last: args.usize("keep-last", 3)?,
+        ckpt_dir: args.str("ckpt-dir", "ckpts")?.into(),
+        watchdog_ms: match crate::exec::watchdog_ms() {
+            0 => None,
+            ms => Some(ms),
+        },
+        allow_shrink: !args.flag("no-shrink"),
+        ..supervisor::SupervisorCfg::default()
+    };
     let steps = cfg.steps;
     let mut trainer = Trainer::new(artifacts, &preset, cfg)?;
     if let Some(path) = resume_path {
@@ -50,22 +76,41 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
     }
 
     let corpus_text = build_corpus(&args.str("data", "synth")?, args.u32("seed", 0)?, &trainer)?;
-    let log = trainer.train_loop(&corpus_text, steps, |s| {
-        println!(
-            "step {:>4}  loss {:.4}  {}  {:>6.0} tok/s",
-            s.step,
-            s.loss,
-            s.val_loss
-                .map(|v| format!("val {v:.4}"))
-                .unwrap_or_else(|| "        ".into()),
-            s.tokens_per_s
-        );
-    })?;
 
-    if let Some(path) = log_path {
-        std::fs::write(path, trainer::stats_to_csv(&log))?;
-        println!("log written to {path}");
+    if supervise {
+        let mut workload = supervisor::TrainerWorkload::new(trainer, &corpus_text);
+        let target = workload.step() + steps as u32;
+        let report = supervisor::Supervisor::new(sup_cfg.clone()).run(&mut workload, target);
+        let event_log = sup_cfg.ckpt_dir.join("supervisor-events.log");
+        supervisor::write_event_log(&event_log, &report.events)?;
+        println!(
+            "supervised run: step {} world {} ({} failures, {} shrinks); events in {}",
+            report.final_step,
+            report.final_world,
+            report.failures,
+            report.shrinks,
+            event_log.display()
+        );
+        report.into_result()?;
+        trainer = workload.trainer;
+    } else {
+        let log = trainer.train_loop(&corpus_text, steps, |s| {
+            println!(
+                "step {:>4}  loss {:.4}  {}  {:>6.0} tok/s",
+                s.step,
+                s.loss,
+                s.val_loss
+                    .map(|v| format!("val {v:.4}"))
+                    .unwrap_or_else(|| "        ".into()),
+                s.tokens_per_s
+            );
+        })?;
+        if let Some(path) = log_path {
+            std::fs::write(path, trainer::stats_to_csv(&log))?;
+            println!("log written to {path}");
+        }
     }
+
     if let Some(path) = save_path {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");

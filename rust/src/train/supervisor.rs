@@ -1,0 +1,741 @@
+//! Supervised crash recovery for the training runtime.
+//!
+//! The supervisor runs a workload's steps under `catch_unwind`, so a
+//! dead rank (panic), a failed collective, or a watchdog-detected stall
+//! surfaces as a *named failure event* instead of a wedged process. On
+//! failure it backs off (bounded exponential), restores the newest
+//! restorable checkpoint generation — corrupt or truncated generations
+//! are rejected by the v3 CRC and skipped with an event — and replays.
+//! When a rank keeps dying (`max_retries` consecutive failures) and
+//! shrinking is allowed, the supervisor reshards the flat optimizer
+//! state to `world − 1` and continues.
+//!
+//! Recovery is *deterministic* (NUMERICS.md Rule 5): the trainer commits
+//! `step`/`counter` only after a step completes, checkpoints carry the
+//! full `(step, counter, params, m, v)` tuple, and the SR streams are
+//! keyed by global element index — so a recovered run is bitwise
+//! identical to an uninterrupted run, and a W→W−1 recovery is bitwise
+//! identical to a fresh W−1 run restored from the same generation.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::checkpoint;
+use super::trainer::Trainer;
+use crate::data::{Batch, ByteTokenizer, PackedDataset};
+
+/// A workload the supervisor can drive: stepped, checkpointable, and
+/// reshardable. [`TrainerWorkload`] adapts [`Trainer`]; tests implement
+/// it directly to script failure shapes.
+pub trait Supervised {
+    /// Current collective world size.
+    fn world(&self) -> usize;
+    /// Completed steps (the next step to run is `step() + 1`).
+    fn step(&self) -> u32;
+    /// Run one optimizer step. May return `Err` or panic; either is a
+    /// recoverable rank failure.
+    fn run_step(&mut self) -> Result<()>;
+    /// Serialize the full recovery tuple (step, counter, state).
+    fn encode_checkpoint(&self) -> Vec<u8>;
+    /// Restore from bytes produced by `encode_checkpoint` (or an older
+    /// on-disk generation). Must reject corrupt input with `Err`.
+    fn restore_checkpoint(&mut self, bytes: &[u8]) -> Result<()>;
+    /// Reshard state to a new world size (the post-shrink recovery).
+    fn reshard(&mut self, new_world: usize) -> Result<()>;
+}
+
+/// Supervisor policy knobs (CLI: `--supervise --retries N --backoff-ms B
+/// --ckpt-every K --keep-last G --ckpt-dir D`).
+#[derive(Debug, Clone)]
+pub struct SupervisorCfg {
+    /// Consecutive failures tolerated per step before the world shrinks
+    /// (or, at `min_world`, the run gives up).
+    pub max_retries: u32,
+    /// Base backoff before a retry; doubles per consecutive failure.
+    pub backoff_ms: u64,
+    /// Upper bound on the exponential backoff.
+    pub backoff_cap_ms: u64,
+    /// Checkpoint every K completed steps (0 = only the start-of-run
+    /// generation).
+    pub ckpt_every: u32,
+    /// Checkpoint generations retained on disk (clamped to ≥ 1).
+    pub keep_last: usize,
+    /// Directory for `ckpt-stepNNNNNNNN.llmq` generations.
+    pub ckpt_dir: PathBuf,
+    /// Run each attempt under [`crate::exec::with_watchdog`] with this
+    /// timeout, turning stalled ops into recoverable failures.
+    pub watchdog_ms: Option<u64>,
+    /// Allow W→W−1 resharding when retries are exhausted.
+    pub allow_shrink: bool,
+    /// Smallest world the supervisor may shrink to.
+    pub min_world: usize,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            backoff_ms: 10,
+            backoff_cap_ms: 2_000,
+            ckpt_every: 1,
+            keep_last: 3,
+            ckpt_dir: PathBuf::from("ckpts"),
+            watchdog_ms: None,
+            allow_shrink: true,
+            min_world: 1,
+        }
+    }
+}
+
+/// One entry in the supervisor's event log. Rendered one-per-line by
+/// [`render_events`]; CI uploads the log on chaos-job failure.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Run began at `step` with `world` ranks.
+    Start {
+        /// Completed steps at entry.
+        step: u32,
+        /// World size at entry.
+        world: usize,
+    },
+    /// A step completed.
+    StepOk {
+        /// The step that completed.
+        step: u32,
+    },
+    /// A checkpoint generation was written.
+    Checkpointed {
+        /// Step stamped into the generation.
+        step: u32,
+        /// On-disk path of the generation.
+        path: PathBuf,
+    },
+    /// A checkpoint save failed (run continues on live state).
+    CheckpointFailed {
+        /// Step whose save failed.
+        step: u32,
+        /// Named error.
+        reason: String,
+    },
+    /// A step attempt died (panic or error).
+    RankFailure {
+        /// The step that was being attempted.
+        step: u32,
+        /// 1-based consecutive-failure count for this streak.
+        attempt: u32,
+        /// Panic message or error chain.
+        reason: String,
+    },
+    /// An on-disk generation was rejected during recovery.
+    CheckpointRejected {
+        /// The rejected file.
+        path: PathBuf,
+        /// Named rejection (CRC mismatch, truncation, …).
+        reason: String,
+    },
+    /// State was restored from a generation.
+    Recovered {
+        /// Step recorded in the restored generation.
+        from_step: u32,
+        /// The generation restored.
+        path: PathBuf,
+    },
+    /// Retries exhausted; the world was resharded.
+    WorldShrunk {
+        /// World before the shrink.
+        from: usize,
+        /// World after the shrink.
+        to: usize,
+    },
+    /// Unrecoverable; the run stops.
+    GaveUp {
+        /// The step that could not be completed.
+        step: u32,
+        /// Why recovery was impossible.
+        reason: String,
+    },
+    /// Target reached.
+    Done {
+        /// Final completed step.
+        step: u32,
+        /// Final world size.
+        world: usize,
+    },
+}
+
+impl Event {
+    /// One-line rendering for the event log.
+    pub fn render(&self) -> String {
+        match self {
+            Event::Start { step, world } => format!("start step={step} world={world}"),
+            Event::StepOk { step } => format!("step-ok step={step}"),
+            Event::Checkpointed { step, path } => {
+                format!("checkpointed step={step} path={}", path.display())
+            }
+            Event::CheckpointFailed { step, reason } => {
+                format!("checkpoint-failed step={step} reason={reason}")
+            }
+            Event::RankFailure {
+                step,
+                attempt,
+                reason,
+            } => format!("rank-failure step={step} attempt={attempt} reason={reason}"),
+            Event::CheckpointRejected { path, reason } => {
+                format!("checkpoint-rejected path={} reason={reason}", path.display())
+            }
+            Event::Recovered { from_step, path } => {
+                format!("recovered from_step={from_step} path={}", path.display())
+            }
+            Event::WorldShrunk { from, to } => format!("world-shrunk from={from} to={to}"),
+            Event::GaveUp { step, reason } => format!("gave-up step={step} reason={reason}"),
+            Event::Done { step, world } => format!("done step={step} world={world}"),
+        }
+    }
+}
+
+/// Render the event log one line per event (newline-terminated).
+pub fn render_events(events: &[Event]) -> String {
+    let mut s = String::new();
+    for e in events {
+        s.push_str(&e.render());
+        s.push('\n');
+    }
+    s
+}
+
+/// Write the rendered event log to `path` (parents created).
+pub fn write_event_log(path: &Path, events: &[Event]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, render_events(events))?;
+    Ok(())
+}
+
+/// Outcome of a supervised run. `error` is `Some` when the run gave up;
+/// the event log is populated either way so failures stay diagnosable.
+#[derive(Debug)]
+pub struct Report {
+    /// Chronological event log.
+    pub events: Vec<Event>,
+    /// Completed steps when the run ended.
+    pub final_step: u32,
+    /// World size when the run ended.
+    pub final_world: usize,
+    /// Total failed step attempts.
+    pub failures: u32,
+    /// Number of W→W−1 reshards performed.
+    pub shrinks: u32,
+    /// `Some(named reason)` when the run gave up before the target.
+    pub error: Option<String>,
+}
+
+impl Report {
+    /// Did the run reach its target?
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Convert to a `Result`, carrying the give-up reason.
+    pub fn into_result(self) -> Result<Self> {
+        match &self.error {
+            None => Ok(self),
+            Some(e) => Err(anyhow::anyhow!("supervised run failed: {e}")),
+        }
+    }
+}
+
+/// The supervisor: drives a [`Supervised`] workload to a target step,
+/// converting rank death into recovery instead of a hang or a wedge.
+#[derive(Debug)]
+pub struct Supervisor {
+    cfg: SupervisorCfg,
+}
+
+impl Supervisor {
+    /// Supervisor with the given policy.
+    pub fn new(cfg: SupervisorCfg) -> Self {
+        Self { cfg }
+    }
+
+    /// Run `w` until `w.step() == target_step` (or recovery becomes
+    /// impossible). Never panics and never returns early without a log:
+    /// every outcome — including setup failures — lands in the
+    /// [`Report`].
+    pub fn run<W: Supervised>(&self, w: &mut W, target_step: u32) -> Report {
+        let mut events = Vec::new();
+        let mut failures = 0u32;
+        let mut shrinks = 0u32;
+        events.push(Event::Start {
+            step: w.step(),
+            world: w.world(),
+        });
+
+        fn give_up<W: Supervised>(
+            w: &W,
+            mut events: Vec<Event>,
+            failures: u32,
+            shrinks: u32,
+            reason: String,
+        ) -> Report {
+            events.push(Event::GaveUp {
+                step: w.step() + 1,
+                reason: reason.clone(),
+            });
+            Report {
+                final_step: w.step(),
+                final_world: w.world(),
+                failures,
+                shrinks,
+                error: Some(reason),
+                events,
+            }
+        }
+
+        if let Err(e) = std::fs::create_dir_all(&self.cfg.ckpt_dir) {
+            let reason = format!(
+                "cannot create checkpoint dir {}: {e}",
+                self.cfg.ckpt_dir.display()
+            );
+            return give_up(w, events, failures, shrinks, reason);
+        }
+
+        // Generation zero: written before any step runs, so recovery
+        // always has a target even if the very first attempt dies.
+        if let Err(e) = self.save_generation(w, &mut events) {
+            let reason = format!("cannot write start-of-run checkpoint: {e:#}");
+            return give_up(w, events, failures, shrinks, reason);
+        }
+
+        let mut streak = 0u32;
+        while w.step() < target_step {
+            let attempting = w.step() + 1;
+            let result = catch_unwind(AssertUnwindSafe(|| match self.cfg.watchdog_ms {
+                Some(ms) => crate::exec::with_watchdog(ms, || w.run_step()),
+                None => w.run_step(),
+            }));
+            match result {
+                Ok(Ok(())) => {
+                    streak = 0;
+                    let step = w.step();
+                    events.push(Event::StepOk { step });
+                    if self.cfg.ckpt_every > 0 && step % self.cfg.ckpt_every == 0 {
+                        if let Err(e) = self.save_generation(w, &mut events) {
+                            // Non-fatal: live state is intact; the next
+                            // cadence point tries again.
+                            events.push(Event::CheckpointFailed {
+                                step,
+                                reason: format!("{e:#}"),
+                            });
+                        }
+                    }
+                }
+                other => {
+                    let reason = match other {
+                        Ok(Err(e)) => format!("{e:#}"),
+                        Err(payload) => panic_text(payload.as_ref()),
+                        Ok(Ok(())) => unreachable!("handled above"),
+                    };
+                    failures += 1;
+                    streak += 1;
+                    events.push(Event::RankFailure {
+                        step: attempting,
+                        attempt: streak,
+                        reason,
+                    });
+
+                    if streak > self.cfg.max_retries {
+                        if self.cfg.allow_shrink && w.world() > self.cfg.min_world {
+                            let from = w.world();
+                            let to = from - 1;
+                            if let Err(e) = w.reshard(to) {
+                                let reason = format!("reshard {from}->{to} failed: {e:#}");
+                                return give_up(w, events, failures, shrinks, reason);
+                            }
+                            // Sticky faults model a dead rank; the rank
+                            // is gone now, so disarm them.
+                            crate::fault::notify_world_shrunk();
+                            shrinks += 1;
+                            streak = 0;
+                            events.push(Event::WorldShrunk { from, to });
+                        } else {
+                            let reason = format!(
+                                "step {attempting} failed {streak} consecutive times at world {} \
+                                 (shrink {})",
+                                w.world(),
+                                if self.cfg.allow_shrink {
+                                    "exhausted"
+                                } else {
+                                    "disabled"
+                                }
+                            );
+                            return give_up(w, events, failures, shrinks, reason);
+                        }
+                    } else {
+                        let shift = (streak - 1).min(6);
+                        let ms = self
+                            .cfg
+                            .backoff_ms
+                            .saturating_mul(1u64 << shift)
+                            .min(self.cfg.backoff_cap_ms);
+                        if ms > 0 {
+                            std::thread::sleep(Duration::from_millis(ms));
+                        }
+                    }
+
+                    // A failed attempt may have left live state mid-step
+                    // (partially applied AdamW chunks); always rewind to
+                    // the newest restorable generation before retrying.
+                    match self.restore_latest(w, &mut events) {
+                        Ok((from_step, path)) => {
+                            events.push(Event::Recovered { from_step, path })
+                        }
+                        Err(e) => {
+                            let reason = format!("recovery impossible: {e:#}");
+                            return give_up(w, events, failures, shrinks, reason);
+                        }
+                    }
+                }
+            }
+        }
+
+        events.push(Event::Done {
+            step: w.step(),
+            world: w.world(),
+        });
+        Report {
+            final_step: w.step(),
+            final_world: w.world(),
+            failures,
+            shrinks,
+            error: None,
+            events,
+        }
+    }
+
+    fn save_generation<W: Supervised>(&self, w: &W, events: &mut Vec<Event>) -> Result<()> {
+        let step = w.step();
+        let path = checkpoint::generation_path(&self.cfg.ckpt_dir, step);
+        checkpoint::save_atomic(&path, w.encode_checkpoint(), step)?;
+        events.push(Event::Checkpointed {
+            step,
+            path: path.clone(),
+        });
+        // Rotation failures are cosmetic (extra files on disk), not
+        // correctness; fold them into the save result anyway so they
+        // are not silent.
+        checkpoint::rotate_generations(&self.cfg.ckpt_dir, self.cfg.keep_last)?;
+        Ok(())
+    }
+
+    fn restore_latest<W: Supervised>(
+        &self,
+        w: &mut W,
+        events: &mut Vec<Event>,
+    ) -> Result<(u32, PathBuf)> {
+        let gens = checkpoint::list_generations(&self.cfg.ckpt_dir)?;
+        for (step, path) in gens.iter().rev() {
+            let attempt = std::fs::read(path)
+                .map_err(anyhow::Error::from)
+                .and_then(|bytes| w.restore_checkpoint(&bytes));
+            match attempt {
+                Ok(()) => return Ok((*step, path.clone())),
+                Err(e) => events.push(Event::CheckpointRejected {
+                    path: path.clone(),
+                    reason: format!("{e:#}"),
+                }),
+            }
+        }
+        anyhow::bail!(
+            "no restorable checkpoint generation in {}",
+            self.cfg.ckpt_dir.display()
+        )
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "rank died with a non-string panic payload".to_string()
+    }
+}
+
+/// [`Supervised`] adapter over [`Trainer`]: batches for step `s` are a
+/// pure function of `(corpus, seed, s, world)`, so replay after recovery
+/// feeds the retried step exactly the data the failed attempt saw — the
+/// data half of the Rule 5 determinism contract.
+pub struct TrainerWorkload {
+    /// The supervised trainer (public for post-run inspection).
+    pub trainer: Trainer,
+    ds: PackedDataset,
+}
+
+impl TrainerWorkload {
+    /// Wrap a trainer with a deterministic corpus-backed batch schedule.
+    pub fn new(trainer: Trainer, corpus: &str) -> Self {
+        let tok = ByteTokenizer::new(trainer.man.config.vocab);
+        let ds = PackedDataset::from_text(corpus, &tok, trainer.man.config.seq_len, trainer.cfg.seed);
+        Self { trainer, ds }
+    }
+
+    fn batches_for(&self, step_idx: usize) -> Vec<Batch> {
+        let world = self.trainer.cfg.world;
+        let per_step = self.trainer.cfg.grad_accum * world;
+        (0..per_step)
+            .map(|i| {
+                self.ds
+                    .batch(step_idx * per_step + i, i % world, self.trainer.man.batch)
+            })
+            .collect()
+    }
+}
+
+impl Supervised for TrainerWorkload {
+    fn world(&self) -> usize {
+        self.trainer.cfg.world
+    }
+
+    fn step(&self) -> u32 {
+        self.trainer.step
+    }
+
+    fn run_step(&mut self) -> Result<()> {
+        let batches = self.batches_for(self.trainer.step as usize);
+        self.trainer.train_step(&batches)?;
+        Ok(())
+    }
+
+    fn encode_checkpoint(&self) -> Vec<u8> {
+        checkpoint::encode(
+            self.trainer.step,
+            self.trainer.counter,
+            self.trainer.cfg.world as u32,
+            &self.trainer.params,
+            &self.trainer.m,
+            &self.trainer.v,
+        )
+    }
+
+    fn restore_checkpoint(&mut self, bytes: &[u8]) -> Result<()> {
+        let (step, counter) = checkpoint::decode_into(
+            bytes,
+            &mut self.trainer.params,
+            &mut self.trainer.m,
+            &mut self.trainer.v,
+        )?;
+        self.trainer.step = step;
+        self.trainer.counter = counter;
+        self.trainer.invalidate_param_bufs();
+        Ok(())
+    }
+
+    fn reshard(&mut self, new_world: usize) -> Result<()> {
+        self.trainer.reshard_world(new_world)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    /// Scriptable workload: a counter with a failure schedule. State is
+    /// one u64 "model" value advanced deterministically per step, so the
+    /// tests can pin recovered-vs-uninterrupted equality without the
+    /// full trainer.
+    struct Scripted {
+        step: u32,
+        world: usize,
+        state: u64,
+        /// (step, panics_remaining) — attempts of `step` panic while
+        /// the count is positive.
+        fail_at: Vec<(u32, AtomicU32)>,
+    }
+
+    impl Scripted {
+        fn new(world: usize) -> Self {
+            Self {
+                step: 0,
+                world,
+                state: 0x5EED,
+                fail_at: Vec::new(),
+            }
+        }
+
+        fn advance(state: u64, step: u32, world: usize) -> u64 {
+            state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(u64::from(step) ^ ((world as u64) << 32))
+        }
+    }
+
+    impl Supervised for Scripted {
+        fn world(&self) -> usize {
+            self.world
+        }
+        fn step(&self) -> u32 {
+            self.step
+        }
+        fn run_step(&mut self) -> Result<()> {
+            let next = self.step + 1;
+            for (s, left) in &self.fail_at {
+                if *s == next && left.load(Ordering::Relaxed) > 0 {
+                    left.fetch_sub(1, Ordering::Relaxed);
+                    // poison state *before* dying, like a mid-step crash
+                    self.state ^= 0xDEAD_BEEF;
+                    panic!("scripted rank death at step {next}");
+                }
+            }
+            self.state = Self::advance(self.state, next, self.world);
+            self.step = next;
+            Ok(())
+        }
+        fn encode_checkpoint(&self) -> Vec<u8> {
+            let mut b = Vec::new();
+            b.extend_from_slice(b"SCRP");
+            b.extend_from_slice(&self.step.to_le_bytes());
+            b.extend_from_slice(&(self.world as u32).to_le_bytes());
+            b.extend_from_slice(&self.state.to_le_bytes());
+            b
+        }
+        fn restore_checkpoint(&mut self, bytes: &[u8]) -> Result<()> {
+            anyhow::ensure!(bytes.len() == 20 && &bytes[..4] == b"SCRP", "bad blob");
+            self.step = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+            self.state = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+            Ok(())
+        }
+        fn reshard(&mut self, new_world: usize) -> Result<()> {
+            self.world = new_world;
+            Ok(())
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("llmq-supervisor-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cfg(dir: PathBuf) -> SupervisorCfg {
+        SupervisorCfg {
+            backoff_ms: 0,
+            ckpt_dir: dir,
+            ..SupervisorCfg::default()
+        }
+    }
+
+    #[test]
+    fn clean_run_reaches_target_with_checkpoints() {
+        let dir = tmp_dir("clean");
+        let mut w = Scripted::new(2);
+        let report = Supervisor::new(cfg(dir.clone())).run(&mut w, 5);
+        assert!(report.ok(), "{:?}", report.error);
+        assert_eq!(report.final_step, 5);
+        assert_eq!(report.failures, 0);
+        // keep-last rotation: at most `keep_last` generations remain
+        let gens = checkpoint::list_generations(&dir).unwrap();
+        assert_eq!(gens.len(), 3);
+        assert_eq!(gens.last().unwrap().0, 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_recovers_and_matches_uninterrupted_run() {
+        let dir = tmp_dir("crash");
+        let mut w = Scripted::new(1);
+        w.fail_at.push((3, AtomicU32::new(1)));
+        let report = Supervisor::new(cfg(dir.clone())).run(&mut w, 6);
+        assert!(report.ok(), "{:?}", report.error);
+        assert_eq!(report.failures, 1);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::Recovered { .. })));
+
+        // uninterrupted reference
+        let dir2 = tmp_dir("crash-ref");
+        let mut r = Scripted::new(1);
+        let ref_report = Supervisor::new(cfg(dir2.clone())).run(&mut r, 6);
+        assert!(ref_report.ok());
+        assert_eq!(
+            w.state, r.state,
+            "recovered run must be bit-identical to the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn persistent_failure_shrinks_world_then_gives_up_at_min() {
+        let dir = tmp_dir("shrink");
+        let mut w = Scripted::new(2);
+        // step 4 fails forever at world 2 (sticky rank death), succeeds
+        // after the shrink because Scripted keys failures only by step
+        // count remaining — model it with exactly max_retries+1 panics.
+        w.fail_at.push((4, AtomicU32::new(3)));
+        let report = Supervisor::new(cfg(dir.clone())).run(&mut w, 5);
+        assert!(report.ok(), "{:?}", report.error);
+        assert_eq!(report.shrinks, 1);
+        assert_eq!(report.final_world, 1);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::WorldShrunk { from: 2, to: 1 })));
+
+        // at min_world, exhausted retries end the run with a named error
+        let dir2 = tmp_dir("giveup");
+        let mut g = Scripted::new(1);
+        g.fail_at.push((2, AtomicU32::new(u32::MAX)));
+        let report = Supervisor::new(cfg(dir2.clone())).run(&mut g, 4);
+        assert!(!report.ok());
+        assert!(report.error.as_deref().unwrap().contains("consecutive"));
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::GaveUp { .. })));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn event_log_renders_and_writes() {
+        let dir = tmp_dir("log");
+        let mut w = Scripted::new(1);
+        w.fail_at.push((2, AtomicU32::new(1)));
+        let report = Supervisor::new(cfg(dir.clone())).run(&mut w, 3);
+        let text = render_events(&report.events);
+        assert!(text.contains("start step=0 world=1"));
+        assert!(text.contains("rank-failure step=2 attempt=1"));
+        assert!(text.contains("scripted rank death"));
+        assert!(text.contains("done step=3 world=1"));
+        let log = dir.join("logs").join("events.log");
+        write_event_log(&log, &report.events).unwrap();
+        assert_eq!(std::fs::read_to_string(&log).unwrap(), text);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unusable_checkpoint_dir_is_a_named_give_up() {
+        let dir = tmp_dir("badsave");
+        let mut w = Scripted::new(1);
+        // Point ckpt_dir at a regular file: create_dir_all fails, the
+        // run gives up by name instead of training unrecoverably.
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("not-a-dir");
+        std::fs::write(&file, b"x").unwrap();
+        let report = Supervisor::new(cfg(file.clone())).run(&mut w, 2);
+        assert!(!report.ok());
+        assert!(report.error.as_deref().unwrap().contains("checkpoint dir"));
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::GaveUp { .. })));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

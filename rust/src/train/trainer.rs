@@ -196,9 +196,21 @@ impl Trainer {
         let n = self.man.padded_numel;
         anyhow::ensure!(batches.len() == self.cfg.grad_accum * world);
 
-        // Borrow the persistent arenas out of `self` for the duration of
-        // the step (`ensure` is a no-op after `new`; `begin_step` zeroes
-        // the accumulators in place).
+        // The step number is committed only after the pipeline finishes:
+        // a panic unwinding through here (a supervised retry will follow)
+        // must not leave the trainer claiming a step it never completed.
+        let step = self.step + 1;
+        crate::fault::set_step(step);
+        for rank in 0..world {
+            crate::fault::step_site(rank, step);
+        }
+
+        // Borrow the persistent arenas out of `self` for the microbatch
+        // loop (`ensure` repairs geometry or unwind damage; `begin_step`
+        // zeroes the accumulators in place). A panic inside the loop
+        // loses the arenas to the unwind — `ensure` rebuilds them on the
+        // retry, trading one reallocation for never running on stolen
+        // buffers.
         let mut ws = std::mem::take(&mut self.ws);
         ws.ensure(world, n);
         ws.begin_step();
@@ -215,12 +227,14 @@ impl Trainer {
                 }
             }
         }
+        // Arenas go back before the fused call: the pipeline borrows the
+        // workspace in place, so a panic inside it cannot cost the
+        // trainer its arenas.
+        self.ws = ws;
         if let Some(e) = failed {
-            self.ws = ws; // keep the arenas across failed steps
             return Err(e);
         }
 
-        self.step += 1;
         let hs = HostStep {
             hp: optim::AdamWParams {
                 beta1: self.cfg.beta1,
@@ -228,9 +242,9 @@ impl Trainer {
                 eps: self.cfg.eps,
                 weight_decay: self.cfg.weight_decay,
             },
-            lr: self.cfg.lr_at((self.step - 1) as usize),
+            lr: self.cfg.lr_at((step - 1) as usize),
             grad_clip: self.cfg.grad_clip,
-            step: self.step,
+            step,
             counter: self.counter,
             seed: self.cfg.seed,
             n_micro: batches.len(),
@@ -242,20 +256,28 @@ impl Trainer {
         let grad_norm = if fused {
             if crate::exec::async_enabled() {
                 optim::fused::fused_step_async(
-                    &mut ws,
+                    &mut self.ws,
                     &mut self.params,
                     &mut self.m,
                     &mut self.v,
                     &hs,
                 )
             } else {
-                optim::fused::fused_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+                optim::fused::fused_step(
+                    &mut self.ws,
+                    &mut self.params,
+                    &mut self.m,
+                    &mut self.v,
+                    &hs,
+                )
             }
         } else {
-            optim::fused::staged_step(&mut ws, &mut self.params, &mut self.m, &mut self.v, &hs)
+            optim::fused::staged_step(&mut self.ws, &mut self.params, &mut self.m, &mut self.v, &hs)
         };
+        // Commit only now — step and counter advance together or not at
+        // all (the recovery-determinism contract of NUMERICS.md Rule 5).
+        self.step = step;
         self.counter = self.counter.wrapping_add(3 * n as u32);
-        self.ws = ws;
         self.param_bufs = None; // params changed → re-upload lazily
 
         let n_micro = batches.len() as f32;
@@ -332,17 +354,25 @@ impl Trainer {
 
     // ----- checkpoints ------------------------------------------------------
 
-    /// Write params / moments / step / counter in the v2 wire format
-    /// (magic + version header; see [`crate::train::checkpoint`]).
+    /// Write params / moments / step / counter in the CRC32-checked v3
+    /// wire format (see [`crate::train::checkpoint`]) via an atomic
+    /// write-temp-then-rename, so a crash mid-save never clobbers the
+    /// previous good file with a torn one.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let bytes =
-            super::checkpoint::encode(self.step, self.counter, &self.params, &self.m, &self.v);
-        std::fs::write(path, bytes)?;
-        Ok(())
+        let bytes = super::checkpoint::encode(
+            self.step,
+            self.counter,
+            self.cfg.world as u32,
+            &self.params,
+            &self.m,
+            &self.v,
+        );
+        super::checkpoint::save_atomic(std::path::Path::new(path), bytes, self.step)
     }
 
-    /// Restore a checkpoint written by [`Trainer::save_checkpoint`].
-    /// Foreign files, pre-header (v1) files, and size mismatches are
+    /// Restore a checkpoint written by [`Trainer::save_checkpoint`] (v3,
+    /// CRC-verified) or by an older v2 build. Foreign files, pre-header
+    /// (v1) files, size mismatches, truncation, and CRC failures are
     /// rejected with named errors instead of being misread as state.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let bytes = std::fs::read(path)?;
@@ -351,6 +381,32 @@ impl Trainer {
         self.step = step;
         self.counter = counter;
         self.param_bufs = None;
+        Ok(())
+    }
+
+    /// Drop the cached device parameter uploads so the next forward
+    /// re-uploads from host `params` — required after any out-of-band
+    /// mutation of `params` (e.g. a supervisor restore that bypasses
+    /// [`Trainer::load_checkpoint`]).
+    pub fn invalidate_param_bufs(&mut self) {
+        self.param_bufs = None;
+    }
+
+    /// Re-size the collective world — the supervised-recovery reshard.
+    /// The flat params/moments and the element-index-keyed SR streams are
+    /// world-agnostic (ascending-source reduction, global-element AdamW
+    /// counters, `opt_world` pinned to the manifest), so a W→W−1 recovery
+    /// that reshards and replays from a checkpoint is bit-identical to a
+    /// fresh W−1 run restored from the same file (NUMERICS.md Rule 5).
+    pub fn reshard_world(&mut self, new_world: usize) -> Result<()> {
+        anyhow::ensure!(new_world >= 1, "world must be >= 1");
+        anyhow::ensure!(
+            self.man.padded_numel % new_world == 0,
+            "cannot reshard: world {new_world} does not divide padded_numel {}",
+            self.man.padded_numel
+        );
+        self.cfg.world = new_world;
+        self.ws.ensure(new_world, self.man.padded_numel);
         Ok(())
     }
 

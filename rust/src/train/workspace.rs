@@ -76,12 +76,27 @@ impl StepWorkspace {
         }
     }
 
+    /// Are the arenas consistent with the recorded geometry? A step
+    /// abandoned mid-flight (panic between a buffer move-out and its
+    /// restore) can leave them short; `ensure` repairs that case so a
+    /// supervised retry starts from intact arenas.
+    pub fn is_intact(&self) -> bool {
+        self.dev_grads.len() == self.world
+            && self.dev_grads.iter().all(|g| g.len() == self.n)
+            && self.grads.len() == self.n
+            && self.rank_params.len() == if self.world > 1 { self.world } else { 0 }
+            && self.rank_params.iter().all(|r| r.len() == self.n)
+            && self.norm_partials.len() == self.n_chunks() * NORM_LANES
+    }
+
     /// (Re)allocate the arenas for a (world, n) geometry. No-op when the
-    /// geometry is unchanged — the steady-state step allocates nothing.
+    /// geometry is unchanged **and** the arenas are intact — the
+    /// steady-state step allocates nothing; a workspace damaged by an
+    /// unwound step is rebuilt instead of trusted.
     pub fn ensure(&mut self, world: usize, n: usize) {
         assert!(world >= 1, "world must be >= 1");
         assert_eq!(n % world, 0, "padded_numel must be a multiple of world");
-        if self.world == world && self.n == n {
+        if self.world == world && self.n == n && self.is_intact() {
             return;
         }
         self.world = world;
@@ -133,6 +148,21 @@ mod tests {
         ws.begin_step();
         assert!(ws.dev_grads.iter().all(|g| g.iter().all(|&x| x == 0.0)));
         assert!(ws.grads.iter().all(|&x| x == 0.0));
+    }
+
+    /// Regression (fault tolerance): a workspace whose buffers were
+    /// moved out by an unwound step is repaired by `ensure`, not trusted
+    /// because its recorded geometry still matches.
+    #[test]
+    fn ensure_repairs_a_damaged_workspace() {
+        let mut ws = StepWorkspace::new(2, 64);
+        // simulate a panic between `mem::take(dev_grads)` and restore
+        let _stolen = std::mem::take(&mut ws.dev_grads);
+        assert!(!ws.is_intact());
+        ws.ensure(2, 64);
+        assert!(ws.is_intact());
+        assert_eq!(ws.dev_grads.len(), 2);
+        assert!(ws.dev_grads.iter().all(|g| g.len() == 64));
     }
 
     #[test]

@@ -5,8 +5,10 @@ use std::time::{Duration, Instant};
 
 /// The execution-provenance fields every bench JSON report stamps —
 /// worker-thread count (`LLMQ_THREADS`), resolved SIMD backend
-/// (`LLMQ_SIMD`), and the exec runtime's stream count / async mode
-/// (`LLMQ_STREAMS` / `LLMQ_ASYNC`). One helper so the writers cannot
+/// (`LLMQ_SIMD`), the exec runtime's stream count / async mode
+/// (`LLMQ_STREAMS` / `LLMQ_ASYNC`), and the fault-injection plane
+/// (`LLMQ_FAULT`; must render `"off"` in any committed figure — the
+/// benches refuse to run otherwise). One helper so the writers cannot
 /// drift (BENCH_trainstep.json once shipped without the backend name
 /// BENCH_hotpath.json had).
 ///
@@ -18,14 +20,16 @@ use std::time::{Duration, Instant};
 /// assert!(p.contains("\"simd\": "));
 /// assert!(p.contains("\"streams\": "));
 /// assert!(p.contains("\"async\": "));
+/// assert!(p.contains("\"fault\": \"off\""));
 /// ```
 pub fn provenance_json() -> String {
     format!(
-        "\"threads\": {},\n  \"simd\": \"{}\",\n  \"streams\": {},\n  \"async\": {}",
+        "\"threads\": {},\n  \"simd\": \"{}\",\n  \"streams\": {},\n  \"async\": {},\n  \"fault\": \"{}\"",
         crate::util::par::num_threads(),
         crate::precision::backend::level().name(),
         crate::exec::num_streams(),
-        crate::exec::async_enabled()
+        crate::exec::async_enabled(),
+        crate::fault::descriptor()
     )
 }
 

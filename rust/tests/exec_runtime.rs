@@ -299,7 +299,7 @@ fn resume_after_save_load_is_bitwise() {
                     // k, save, load into fresh state, k more
                     let (mut p1, mut m1, mut v1) = init_state(n);
                     let (step, counter) = run_steps(&mut p1, &mut m1, &mut v1, 0, 1, k);
-                    let blob = checkpoint::encode(step, counter, &p1, &m1, &v1);
+                    let blob = checkpoint::encode(step, counter, 1, &p1, &m1, &v1);
 
                     let (mut p2, mut m2, mut v2) =
                         (vec![0f32; n], vec![0f32; n], vec![0f32; n]);

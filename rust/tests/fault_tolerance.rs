@@ -1,0 +1,445 @@
+//! Chaos matrix for the fault plane + supervisor (NUMERICS.md Rule 5):
+//!
+//! * every fault kind × world {1, 2, 4} × threads {1, 8} × async on/off:
+//!   the supervised run recovers and its final state is **bitwise
+//!   identical** to an uninterrupted run of the same shape;
+//! * sticky rank death exhausts retries, the world shrinks W→W−1, and
+//!   the recovered run is bitwise identical to a fresh W−1 run restored
+//!   from the same checkpoint;
+//! * an injected stream stall becomes a *named* watchdog error within
+//!   the configured timeout — never a hang;
+//! * corrupted checkpoint generations are rejected by CRC at recovery
+//!   and the supervisor falls back a generation;
+//! * the seeded probabilistic mode is reproducible from its spec string.
+//!
+//! Each supervised run writes its event log under `target/chaos-logs/`
+//! so CI can upload the logs when the job fails.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use llmq::collectives::memcpy::PIPELINE_BLOCK;
+use llmq::exec;
+use llmq::fault::{self, FaultPlane};
+use llmq::optim::fused::{fused_step_async, HostStep};
+use llmq::optim::AdamWParams;
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::train::checkpoint;
+use llmq::train::supervisor::{Event, Supervised, Supervisor, SupervisorCfg};
+use llmq::train::StepWorkspace;
+use llmq::util::par;
+
+/// Non-block-aligned, divisible by every world in the matrix (1, 2, 4).
+const N: usize = PIPELINE_BLOCK + 128;
+/// ZeRO-1 shard count baked into the AdamW SR counter layout — pinned
+/// independently of the collective world so W→W−1 recovery replays the
+/// exact same per-element counters.
+const OPT_WORLD: usize = 4;
+
+/// A `Supervised` workload over the fused optimizer-step pipeline: the
+/// same state tuple the trainer checkpoints, minus the model forward
+/// (gradients are a pure function of the step), so the chaos matrix
+/// runs without artifact files.
+struct FusedWorkload {
+    world: usize,
+    threads: usize,
+    async_on: bool,
+    streams: usize,
+    step: u32,
+    counter: u32,
+    p: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    ws: StepWorkspace,
+}
+
+impl FusedWorkload {
+    fn new(world: usize, threads: usize, async_on: bool, streams: usize) -> Self {
+        let p = (0..N)
+            .map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0))
+            .collect();
+        let m = (0..N)
+            .map(|i| round_to_bf16(0.001 * (i % 13) as f32 - 0.006))
+            .collect();
+        let v = (0..N).map(|i| round_to_bf16(1e-4 * (i % 7) as f32)).collect();
+        Self {
+            world,
+            threads,
+            async_on,
+            streams,
+            step: 0,
+            counter: 1,
+            p,
+            m,
+            v,
+            ws: StepWorkspace::new(world, N),
+        }
+    }
+
+    /// Deterministic per-(step, device) gradients — replay after
+    /// recovery feeds the retried step exactly what the failed attempt
+    /// saw.
+    fn fill_grads(&mut self, step: u32) {
+        let rng = CounterRng::new(0xFA01 ^ step);
+        for (d, g) in self.ws.dev_grads.iter_mut().enumerate() {
+            for (i, x) in g.iter_mut().enumerate() {
+                *x = round_to_bf16((rng.next_f32((d * N + i) as u32) - 0.5) * 0.08);
+            }
+        }
+    }
+
+    fn bits(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>, u32, u32) {
+        let b = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        (b(&self.p), b(&self.m), b(&self.v), self.step, self.counter)
+    }
+}
+
+impl Supervised for FusedWorkload {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn step(&self) -> u32 {
+        self.step
+    }
+
+    fn run_step(&mut self) -> Result<()> {
+        let step = self.step + 1;
+        // mirror Trainer::step_impl: announce the step, fire rank sites
+        fault::set_step(step);
+        for rank in 0..self.world {
+            fault::step_site(rank, step);
+        }
+        self.ws.ensure(self.world, N); // repairs unwind damage on retry
+        self.ws.begin_step();
+        self.fill_grads(step);
+        let hs = HostStep {
+            hp: AdamWParams::default(),
+            lr: 3e-4,
+            grad_clip: 1.0,
+            step,
+            counter: self.counter,
+            seed: 9,
+            n_micro: 2 * self.world,
+            opt_world: OPT_WORLD,
+        };
+        let (ws, p, m, v) = (&mut self.ws, &mut self.p, &mut self.m, &mut self.v);
+        par::with_threads(self.threads, || {
+            exec::with_async(self.async_on, || {
+                exec::with_streams(self.streams, || {
+                    fused_step_async(ws, p, m, v, &hs);
+                })
+            })
+        });
+        // commit after success, like the trainer
+        self.step = step;
+        self.counter = self.counter.wrapping_add(3 * N as u32);
+        Ok(())
+    }
+
+    fn encode_checkpoint(&self) -> Vec<u8> {
+        checkpoint::encode(
+            self.step,
+            self.counter,
+            self.world as u32,
+            &self.p,
+            &self.m,
+            &self.v,
+        )
+    }
+
+    fn restore_checkpoint(&mut self, bytes: &[u8]) -> Result<()> {
+        let (step, counter) =
+            checkpoint::decode_into(bytes, &mut self.p, &mut self.m, &mut self.v)?;
+        self.step = step;
+        self.counter = counter;
+        Ok(())
+    }
+
+    fn reshard(&mut self, new_world: usize) -> Result<()> {
+        anyhow::ensure!(N % new_world == 0, "world must divide n");
+        self.world = new_world;
+        self.ws.ensure(new_world, N);
+        Ok(())
+    }
+}
+
+fn chaos_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("llmq-chaos-{tag}-{}", std::process::id()))
+}
+
+fn sup_cfg(tag: &str) -> SupervisorCfg {
+    let dir = chaos_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    SupervisorCfg {
+        backoff_ms: 0,
+        keep_last: 4,
+        ckpt_dir: dir,
+        ..SupervisorCfg::default()
+    }
+}
+
+/// Write the run's event log where CI collects chaos artifacts.
+fn log_events(label: &str, events: &[Event]) {
+    let path = PathBuf::from("target")
+        .join("chaos-logs")
+        .join(format!("{label}.log"));
+    let _ = llmq::train::supervisor::write_event_log(&path, events);
+}
+
+/// An uninterrupted run of the same shape, driven without a supervisor.
+fn reference(world: usize, threads: usize, async_on: bool, streams: usize, steps: u32) -> FusedWorkload {
+    let mut w = FusedWorkload::new(world, threads, async_on, streams);
+    for _ in 0..steps {
+        w.run_step().unwrap();
+    }
+    w
+}
+
+/// The acceptance matrix: fault kind × world × threads × async; the
+/// recovered run must be bitwise identical to the uninterrupted one.
+#[test]
+fn chaos_matrix_recovered_equals_uninterrupted() {
+    const STEPS: u32 = 5;
+    for world in [1usize, 2, 4] {
+        // the uninterrupted reference is mode-invariant (Rule 4), so one
+        // per world pins every (threads, async) cell at once
+        let reference = reference(world, 1, false, 1, STEPS).bits();
+        for threads in [1usize, 8] {
+            for async_on in [false, true] {
+                let streams = if async_on { 2 } else { 1 };
+                let cells: [(&str, String, bool); 5] = [
+                    (
+                        "step-crash",
+                        format!("rank{}:step3:crash", world - 1),
+                        true,
+                    ),
+                    ("exec-crash", "rank0:step2:crash:exec".into(), true),
+                    (
+                        "collective-crash",
+                        "rank0:step4:crash:collective".into(),
+                        true,
+                    ),
+                    ("ckpt-io-error", "rank0:step2:io-error".into(), false),
+                    (
+                        "ckpt-corrupt-fallback",
+                        "rank0:step3:corrupt-checkpoint;rank0:step4:crash".into(),
+                        true,
+                    ),
+                ];
+                for (tag, program, expect_failures) in cells {
+                    let label = format!("{tag}-w{world}-t{threads}-a{async_on}");
+                    let plane = FaultPlane::from_program(&program).unwrap();
+                    let mut w = FusedWorkload::new(world, threads, async_on, streams);
+                    let report = fault::with_plane(&plane, || {
+                        Supervisor::new(sup_cfg(&label)).run(&mut w, STEPS)
+                    });
+                    log_events(&label, &report.events);
+                    assert!(report.ok(), "{label}: {:?}", report.error);
+                    assert_eq!(report.final_step, STEPS, "{label}");
+                    if expect_failures {
+                        assert!(report.failures > 0, "{label}: fault never fired");
+                        assert!(
+                            report
+                                .events
+                                .iter()
+                                .any(|e| matches!(e, Event::Recovered { .. })),
+                            "{label}: no recovery event"
+                        );
+                    } else {
+                        assert!(
+                            report
+                                .events
+                                .iter()
+                                .any(|e| matches!(e, Event::CheckpointFailed { .. })),
+                            "{label}: io-error save should surface as an event"
+                        );
+                    }
+                    if tag == "ckpt-corrupt-fallback" {
+                        assert!(
+                            report
+                                .events
+                                .iter()
+                                .any(|e| matches!(e, Event::CheckpointRejected { .. })),
+                            "{label}: corrupt generation must be rejected by CRC"
+                        );
+                    }
+                    assert_eq!(
+                        w.bits(),
+                        reference,
+                        "{label}: recovered run is not bitwise identical"
+                    );
+                    let _ = std::fs::remove_dir_all(chaos_dir(&label));
+                }
+            }
+        }
+    }
+}
+
+/// Sticky rank death: retries exhaust, the supervisor reshards W→W−1,
+/// and the result is bitwise identical to a fresh W−1 run restored from
+/// the same generation.
+#[test]
+fn sticky_rank_death_shrinks_world_bitwise() {
+    const STEPS: u32 = 5;
+    let plane = FaultPlane::from_program("rank1:step3:crash:sticky").unwrap();
+    let label = "sticky-shrink";
+    let mut w = FusedWorkload::new(2, 8, true, 2);
+    let cfg = SupervisorCfg {
+        max_retries: 1,
+        ..sup_cfg(label)
+    };
+    let report = fault::with_plane(&plane, || Supervisor::new(cfg).run(&mut w, STEPS));
+    log_events(label, &report.events);
+    assert!(report.ok(), "{:?}", report.error);
+    assert_eq!(report.shrinks, 1);
+    assert_eq!(report.final_world, 1);
+    assert!(report
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::WorldShrunk { from: 2, to: 1 })));
+
+    // Fresh W−1 reference: world 2 up to the last good generation
+    // (step 2 — the crash kills every attempt of step 3), then reshard
+    // to 1 and replay. The supervised run restored from the step-2
+    // generation, so equality here *is* the Rule 5 reshard pin.
+    let mut r = FusedWorkload::new(2, 8, true, 2);
+    r.run_step().unwrap();
+    r.run_step().unwrap();
+    let blob = r.encode_checkpoint();
+    let mut fresh = FusedWorkload::new(1, 8, true, 2);
+    fresh.restore_checkpoint(&blob).unwrap();
+    for _ in fresh.step..STEPS {
+        fresh.run_step().unwrap();
+    }
+    assert_eq!(
+        w.bits(),
+        fresh.bits(),
+        "W→W−1 recovery must equal a fresh W−1 run from the same checkpoint"
+    );
+    let _ = std::fs::remove_dir_all(chaos_dir(label));
+}
+
+/// An injected stream stall must surface as a *named* watchdog error
+/// within the configured timeout — never a hang — and the supervised
+/// retry must still land bitwise on the uninterrupted result.
+#[test]
+fn stall_becomes_named_watchdog_error_and_recovers() {
+    const STEPS: u32 = 4;
+    for async_on in [true, false] {
+        let label = format!("stall-watchdog-a{async_on}");
+        let plane = FaultPlane::from_program("rank0:step2:stall").unwrap();
+        let mut w = FusedWorkload::new(1, 2, async_on, 2);
+        let cfg = SupervisorCfg {
+            watchdog_ms: Some(100),
+            ..sup_cfg(&label)
+        };
+        let t0 = std::time::Instant::now();
+        let report = fault::with_plane(&plane, || Supervisor::new(cfg).run(&mut w, STEPS));
+        log_events(&label, &report.events);
+        assert!(report.ok(), "{label}: {:?}", report.error);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(20),
+            "{label}: stall was not cancelled promptly"
+        );
+        // the named error must carry the stream-program state dump
+        let named = report.events.iter().any(|e| {
+            matches!(e, Event::RankFailure { reason, .. }
+                     if reason.contains("watchdog") && reason.contains("queue depths"))
+        });
+        assert!(
+            named,
+            "{label}: stall must surface as a named watchdog error; events:\n{}",
+            llmq::train::supervisor::render_events(&report.events)
+        );
+        let reference = reference(1, 2, async_on, 2, STEPS);
+        assert_eq!(w.bits(), reference.bits(), "{label}");
+        let _ = std::fs::remove_dir_all(chaos_dir(&label));
+    }
+}
+
+/// Slow-collective perturbs the schedule, never the numbers, and needs
+/// no recovery at all.
+#[test]
+fn slow_collective_is_numerically_transparent() {
+    const STEPS: u32 = 3;
+    let label = "slow-collective";
+    let plane = FaultPlane::from_program("prob:p1.0:seed3:slow-collective").unwrap();
+    let mut w = FusedWorkload::new(2, 8, true, 2);
+    let report = fault::with_plane(&plane, || Supervisor::new(sup_cfg(label)).run(&mut w, STEPS));
+    log_events(label, &report.events);
+    assert!(report.ok(), "{:?}", report.error);
+    assert_eq!(report.failures, 0, "slow-collective must not fail steps");
+    assert_eq!(w.bits(), reference(2, 8, true, 2, STEPS).bits());
+    let _ = std::fs::remove_dir_all(chaos_dir(label));
+}
+
+/// The seeded probabilistic mode is a pure function of its spec string:
+/// two runs with the same seed fail at the same points and land on the
+/// same bits; the bits also match the uninterrupted reference.
+#[test]
+fn seeded_chaos_sweep_is_reproducible() {
+    const STEPS: u32 = 8;
+    // Pick the first seed whose deterministic draws fire at least once
+    // inside the run's (rank, step) window — the choice is itself a pure
+    // function of the grammar, so the test can never go quietly fault-free.
+    let seed = (1u32..200)
+        .find(|s| {
+            let probe =
+                FaultPlane::from_program(&format!("prob:p0.2:seed{s}:crash")).unwrap();
+            (1..=STEPS).any(|step| {
+                (0..2usize).any(|rank| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        probe.step_site(rank, step)
+                    }))
+                    .is_err()
+                })
+            })
+        })
+        .expect("some seed in 1..200 fires at p=0.2 over 16 sites");
+    let program = format!("prob:p0.2:seed{seed}:crash");
+    let run = |tag: &str| {
+        let plane = FaultPlane::from_program(&program).unwrap();
+        let mut w = FusedWorkload::new(2, 2, true, 2);
+        let report =
+            fault::with_plane(&plane, || Supervisor::new(sup_cfg(tag)).run(&mut w, STEPS));
+        log_events(tag, &report.events);
+        assert!(report.ok(), "{tag}: {:?}", report.error);
+        let _ = std::fs::remove_dir_all(chaos_dir(tag));
+        (report.failures, plane.injections().len(), w.bits())
+    };
+    let (fail_a, inj_a, bits_a) = run("seeded-a");
+    let (fail_b, inj_b, bits_b) = run("seeded-b");
+    assert!(fail_a > 0, "chosen seed {seed} must fire in the run window");
+    assert_eq!(fail_a, fail_b, "same seed, same failures");
+    assert_eq!(inj_a, inj_b, "same seed, same injections");
+    assert_eq!(bits_a, bits_b, "same seed, same bits");
+    assert_eq!(bits_a, reference(2, 2, true, 2, STEPS).bits());
+}
+
+/// Supervised resume across process "restarts": run half the steps,
+/// drop the workload, rebuild from the on-disk generation, finish — the
+/// composite equals the straight run.
+#[test]
+fn resume_from_disk_generation_is_bitwise() {
+    const STEPS: u32 = 6;
+    let label = "resume";
+    let cfg = sup_cfg(label);
+    let mut w = FusedWorkload::new(2, 1, true, 2);
+    let report = Supervisor::new(cfg.clone()).run(&mut w, 3);
+    assert!(report.ok());
+    drop(w);
+
+    // "restart": a fresh workload restored from the newest generation
+    let gens = checkpoint::list_generations(&cfg.ckpt_dir).unwrap();
+    let (step, path) = gens.last().unwrap();
+    assert_eq!(*step, 3);
+    let mut w2 = FusedWorkload::new(2, 1, true, 2);
+    w2.restore_checkpoint(&std::fs::read(path).unwrap()).unwrap();
+    let report = Supervisor::new(cfg.clone()).run(&mut w2, STEPS);
+    assert!(report.ok());
+    log_events(label, &report.events);
+
+    assert_eq!(w2.bits(), reference(2, 1, true, 2, STEPS).bits());
+    let _ = std::fs::remove_dir_all(&cfg.ckpt_dir);
+}
