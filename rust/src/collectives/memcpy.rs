@@ -95,6 +95,31 @@ fn reduce_block(
     crate::precision::backend::sr_reduce_block(srcs, base, block, scale, rng, counter)
 }
 
+/// Reduce one contiguous output range directly from full-length source
+/// slices — the kernel the multi-process data plane (`comm`) shares
+/// with the in-process collectives. `srcs` are the per-source
+/// full-length gradient buffers *in ascending source-rank order*,
+/// `base` is the output range's global element offset (`out` receives
+/// elements `base .. base + out.len()`), and the SR draw for global
+/// element `base + i` is keyed at `counter + base + i` — exactly the
+/// contract of [`reduce_scatter_scaled_memcpy`], so a rank reducing its
+/// own chunk out-of-process lands on the same bits as the in-process
+/// oracle. Chunk-pipelined over [`PIPELINE_BLOCK`]s.
+pub fn reduce_chunk(
+    srcs: &[&[f32]],
+    base: usize,
+    out: &mut [f32],
+    scale: Option<f32>,
+    rng: &CounterRng,
+    counter: u32,
+) {
+    let rng = *rng;
+    let items = par::split_blocks_mut(out, PIPELINE_BLOCK);
+    par::for_each_item(items, |(i0, block)| {
+        reduce_block(srcs, base + i0, block, scale, &rng, counter)
+    });
+}
+
 /// Pre-scaled reduce-scatter with a *flat* accumulator — the fused
 /// optimizer-step epilogue. `out` is the concatenation of all rank
 /// shards (rank `r` owns `out[r·chunk .. (r+1)·chunk]`, the layout the
@@ -308,6 +333,40 @@ mod tests {
                 out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
                 reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
                 "threads {t}"
+            );
+        }
+    }
+
+    /// `reduce_chunk` over each rank's own range must reproduce the
+    /// flat in-process reduce bitwise — the contract the multi-process
+    /// data plane (`comm`) is pinned against.
+    #[test]
+    fn reduce_chunk_matches_flat_reduce_per_rank_range() {
+        let world = 4;
+        let n = {
+            let raw = 2 * PIPELINE_BLOCK + 999; // unaligned
+            raw - raw % world
+        };
+        let g = mk_group(world, n);
+        let rng = CounterRng::new(11);
+        let scale = 0.5f32;
+        let counter = 31;
+
+        let mut flat = vec![0.25f32; n];
+        reduce_scatter_scaled_memcpy(&g, &mut flat, scale, &rng, counter);
+
+        let srcs: Vec<&[f32]> = g.buffers.iter().map(|b| b.as_slice()).collect();
+        let chunk = n / world;
+        for r in 0..world {
+            let mut out = vec![0.25f32; chunk];
+            reduce_chunk(&srcs, r * chunk, &mut out, Some(scale), &rng, counter);
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                flat[r * chunk..(r + 1) * chunk]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                "rank {r} chunk"
             );
         }
     }

@@ -1,0 +1,677 @@
+//! The elastic coordinator: spawns one OS process per rank, runs the
+//! rendezvous, watches heartbeats, and drives torchelastic-style
+//! recovery when a rank dies.
+//!
+//! **Membership epochs.** A rank process lives for exactly one epoch.
+//! Any failure — a dead process, missed heartbeats, a `fail` report, a
+//! cross-rank norm divergence — aborts the whole epoch: every child is
+//! killed and reaped, then the *entire* world is respawned as epoch
+//! `E+1`, restoring from the newest restorable sharded generation. When
+//! the respawn budget is spent the coordinator sheds the world by one
+//! (W→W−1, allowed whenever `W−1` divides `n`) and resets the budget;
+//! when it can neither respawn nor shrink it gives up with the state of
+//! the newest durable generation intact on disk.
+//!
+//! This "kill everything, restart the world" shape is deliberately
+//! simpler than in-place repair: because the checkpoint tuple is flat
+//! and world-agnostic (NUMERICS.md Rule 5/6), a restart is
+//! indistinguishable from a fresh run that began at the restore step —
+//! which is exactly the property the multi-process chaos tests pin
+//! bitwise.
+//!
+//! **Step integrity.** Every rank reports each step's pre-clip gradient
+//! norm as its exact bit pattern; the coordinator cross-checks that all
+//! ranks agree. A disagreement means replicas diverged — that epoch is
+//! aborted like any other failure rather than allowed to keep training
+//! on split state.
+//!
+//! **Checkpoint commit.** Ranks write their own shards; the coordinator
+//! is the only writer of the generation *manifest*, and only after all
+//! `W` shard CRCs for that step have arrived. A generation with no
+//! manifest is restorable only through the manifest-less fallback scan,
+//! so a half-written generation can never shadow an older complete one.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::liveness::{Liveness, LivenessCfg};
+use super::wire::{self, Ctrl};
+use super::workload::{DEFAULT_N, OPT_WORLD};
+use crate::train::checkpoint::{self, ShardManifest};
+use crate::util::Json;
+
+/// Coordinator configuration for one distributed run.
+#[derive(Debug, Clone)]
+pub struct CoordCfg {
+    /// Path of the `llmq` binary to spawn rank processes from.
+    pub exe: PathBuf,
+    /// Initial world size.
+    pub world: u32,
+    /// Flat element count (must divide by every admissible world and by
+    /// [`OPT_WORLD`]).
+    pub n: usize,
+    /// Run seed.
+    pub seed: u32,
+    /// Optimizer step to train through (inclusive).
+    pub target_step: u32,
+    /// Checkpoint cadence in steps (the target step always checkpoints).
+    pub ckpt_every: u32,
+    /// Sharded generations kept on disk after each manifest commit.
+    pub keep_last: usize,
+    /// Checkpoint + log directory (created if missing).
+    pub ckpt_dir: PathBuf,
+    /// Same-world epoch restarts allowed before shedding a rank.
+    pub max_respawns: u32,
+    /// Whether W→W−1 shrink is allowed once the respawn budget is spent.
+    pub allow_shrink: bool,
+    /// Heartbeat send interval handed to ranks.
+    pub hb_interval_ms: u64,
+    /// Missed-heartbeat window after which a rank is declared dead.
+    pub hb_timeout_ms: u64,
+    /// Data-plane socket read timeout handed to ranks.
+    pub data_timeout_ms: u64,
+    /// Hard wall-clock bound on one epoch (rendezvous through exit).
+    pub epoch_timeout_ms: u64,
+    /// `LLMQ_FAULT` plan injected into the *first* epoch's children
+    /// (recovery epochs always run fault-free).
+    pub fault: Option<String>,
+}
+
+impl Default for CoordCfg {
+    fn default() -> Self {
+        Self {
+            exe: std::env::current_exe().unwrap_or_default(),
+            world: 2,
+            n: DEFAULT_N,
+            seed: 0,
+            target_step: 4,
+            ckpt_every: 1,
+            keep_last: 3,
+            ckpt_dir: PathBuf::from("ckpts-dist"),
+            max_respawns: 2,
+            allow_shrink: true,
+            hb_interval_ms: 100,
+            hb_timeout_ms: 1000,
+            data_timeout_ms: 5000,
+            epoch_timeout_ms: 120_000,
+            fault: None,
+        }
+    }
+}
+
+/// What a distributed run came to.
+#[derive(Debug, Clone)]
+pub struct CoordReport {
+    /// Last committed optimizer step.
+    pub final_step: u32,
+    /// World size of the final epoch.
+    pub final_world: u32,
+    /// Membership epochs run (1 = no failures).
+    pub epochs: u64,
+    /// Same-world restarts performed.
+    pub respawns: u32,
+    /// W→W−1 sheds performed.
+    pub shrinks: u32,
+    /// `None` on success; the terminal failure otherwise.
+    pub error: Option<String>,
+}
+
+impl CoordReport {
+    /// Did the run reach its target step?
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Convert a failed report into an `Err` (success passes through).
+    pub fn into_result(self) -> Result<CoordReport> {
+        if let Some(e) = &self.error {
+            bail!("distributed run failed: {e}");
+        }
+        Ok(self)
+    }
+}
+
+/// One spawned rank process plus its control-plane endpoints.
+struct RankProc {
+    child: Child,
+    /// Control writer (welcome / abort). `None` until rendezvous.
+    writer: Option<TcpStream>,
+    data_port: u16,
+    exited_ok: bool,
+    reaped: bool,
+}
+
+fn now_ms(t0: Instant) -> u64 {
+    t0.elapsed().as_millis() as u64
+}
+
+fn emit(events: &mut std::fs::File, t0: Instant, kind: &str, extra: Vec<(&'static str, Json)>) {
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("t_ms", Json::Num(now_ms(t0) as f64)),
+    ];
+    fields.extend(extra);
+    let mut line = Json::obj(fields).render();
+    line.push('\n');
+    let _ = events.write_all(line.as_bytes());
+    let _ = events.flush();
+}
+
+/// Newest generation on disk that passes shard validation (manifest
+/// path, or the manifest-less complete-set fallback), if any.
+fn newest_restorable(dir: &std::path::Path, n: usize) -> Option<u32> {
+    let steps = checkpoint::sharded_generation_steps(dir).ok()?;
+    steps
+        .into_iter()
+        .rev()
+        .find(|&s| checkpoint::validate_sharded_generation(dir, s, n).is_ok())
+}
+
+/// Run a distributed training run to completion (or terminal failure).
+/// Always returns `Ok(report)` for *run* outcomes — `Err` is reserved
+/// for coordinator-side environment failures (bad config, IO on the
+/// event log).
+pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
+    ensure!(cfg.world >= 1, "world must be at least 1");
+    ensure!(cfg.n % OPT_WORLD == 0, "n {} must divide by OPT_WORLD {OPT_WORLD}", cfg.n);
+    ensure!(
+        cfg.n % cfg.world as usize == 0,
+        "world {} must divide n {}",
+        cfg.world,
+        cfg.n
+    );
+    ensure!(cfg.target_step >= 1, "target step must be at least 1");
+    ensure!(!cfg.exe.as_os_str().is_empty(), "rank executable path is empty");
+    std::fs::create_dir_all(&cfg.ckpt_dir)
+        .with_context(|| format!("creating {}", cfg.ckpt_dir.display()))?;
+    let mut events = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(cfg.ckpt_dir.join("coordinator-events.log"))
+        .context("opening coordinator event log")?;
+    let t0 = Instant::now();
+
+    let mut liveness = Liveness::new(LivenessCfg {
+        timeout_ms: cfg.hb_timeout_ms,
+    });
+    let mut world = cfg.world;
+    let mut respawns_left = cfg.max_respawns;
+    let mut respawns = 0u32;
+    let mut shrinks = 0u32;
+
+    loop {
+        let restore = newest_restorable(&cfg.ckpt_dir, cfg.n);
+        if restore == Some(cfg.target_step) {
+            // Nothing left to train (e.g. every rank committed the final
+            // generation but the previous epoch still failed afterwards).
+            let epochs = liveness.epoch();
+            emit(
+                &mut events,
+                t0,
+                "done",
+                vec![
+                    ("step", Json::Num(f64::from(cfg.target_step))),
+                    ("world", Json::Num(f64::from(world))),
+                    ("epochs", Json::Num(epochs as f64)),
+                ],
+            );
+            return Ok(CoordReport {
+                final_step: cfg.target_step,
+                final_world: world,
+                epochs,
+                respawns,
+                shrinks,
+                error: None,
+            });
+        }
+
+        let epoch = liveness.epoch() + 1;
+        emit(
+            &mut events,
+            t0,
+            "epoch-start",
+            vec![
+                ("epoch", Json::Num(epoch as f64)),
+                ("world", Json::Num(f64::from(world))),
+                (
+                    "restore",
+                    restore.map_or(Json::Null, |s| Json::Num(f64::from(s))),
+                ),
+                ("target", Json::Num(f64::from(cfg.target_step))),
+            ],
+        );
+
+        let failure = run_one_epoch(&cfg, world, epoch, restore, &mut liveness, &mut events, t0)?;
+
+        match failure {
+            None => {
+                let epochs = liveness.epoch();
+                emit(
+                    &mut events,
+                    t0,
+                    "done",
+                    vec![
+                        ("step", Json::Num(f64::from(cfg.target_step))),
+                        ("world", Json::Num(f64::from(world))),
+                        ("epochs", Json::Num(epochs as f64)),
+                    ],
+                );
+                return Ok(CoordReport {
+                    final_step: cfg.target_step,
+                    final_world: world,
+                    epochs,
+                    respawns,
+                    shrinks,
+                    error: None,
+                });
+            }
+            Some(reason) => {
+                emit(
+                    &mut events,
+                    t0,
+                    "epoch-failed",
+                    vec![
+                        ("epoch", Json::Num(epoch as f64)),
+                        ("reason", Json::Str(reason.clone())),
+                    ],
+                );
+                if respawns_left > 0 {
+                    respawns_left -= 1;
+                    respawns += 1;
+                    continue;
+                }
+                let next = world.saturating_sub(1);
+                if cfg.allow_shrink && next >= 1 && cfg.n % next as usize == 0 {
+                    emit(
+                        &mut events,
+                        t0,
+                        "shrink",
+                        vec![
+                            ("from", Json::Num(f64::from(world))),
+                            ("to", Json::Num(f64::from(next))),
+                        ],
+                    );
+                    world = next;
+                    shrinks += 1;
+                    respawns_left = cfg.max_respawns;
+                    continue;
+                }
+                emit(
+                    &mut events,
+                    t0,
+                    "gave-up",
+                    vec![("reason", Json::Str(reason.clone()))],
+                );
+                return Ok(CoordReport {
+                    final_step: newest_restorable(&cfg.ckpt_dir, cfg.n).unwrap_or(0),
+                    final_world: world,
+                    epochs: liveness.epoch(),
+                    respawns,
+                    shrinks,
+                    error: Some(reason),
+                });
+            }
+        }
+    }
+}
+
+/// Run one membership epoch end to end. `Ok(None)` means every rank
+/// committed the target step and exited cleanly; `Ok(Some(reason))`
+/// names the first failure. Children are always torn down (aborted,
+/// killed, reaped) before returning.
+#[allow(clippy::too_many_arguments)]
+fn run_one_epoch(
+    cfg: &CoordCfg,
+    world: u32,
+    epoch: u64,
+    restore: Option<u32>,
+    liveness: &mut Liveness,
+    events: &mut std::fs::File,
+    t0: Instant,
+) -> Result<Option<String>> {
+    let w = world as usize;
+    let epoch_deadline = Instant::now() + Duration::from_millis(cfg.epoch_timeout_ms.max(1));
+
+    // Control listener first: its port goes on every child's command line.
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding control listener")?;
+    let coord_port = listener.local_addr()?.port();
+    listener
+        .set_nonblocking(true)
+        .context("control listener nonblocking")?;
+
+    // Spawn the world. Children never inherit LLMQ_FAULT from our own
+    // environment (parallel test runs would collide); the configured
+    // fault plan is injected explicitly, and only into epoch 1.
+    let mut procs: Vec<RankProc> = Vec::with_capacity(w);
+    for r in 0..world {
+        let log_path = cfg.ckpt_dir.join(format!("rank{r}.epoch{epoch}.log"));
+        let log = std::fs::File::create(&log_path)
+            .with_context(|| format!("creating {}", log_path.display()))?;
+        let mut cmd = Command::new(&cfg.exe);
+        cmd.arg("_rank")
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--coord-port")
+            .arg(coord_port.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log.try_clone().context("cloning rank log")?))
+            .stderr(Stdio::from(log))
+            .env_remove("LLMQ_FAULT");
+        if epoch == 1 {
+            if let Some(f) = &cfg.fault {
+                cmd.env("LLMQ_FAULT", f);
+            }
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning rank {r} from {}", cfg.exe.display()))?;
+        procs.push(RankProc {
+            child,
+            writer: None,
+            data_port: 0,
+            exited_ok: false,
+            reaped: false,
+        });
+    }
+
+    // Teardown used on every exit path below.
+    let teardown = |procs: &mut Vec<RankProc>| {
+        for p in procs.iter_mut() {
+            if let Some(wtr) = &mut p.writer {
+                let _ = wire::send_line(wtr, &Ctrl::Abort { epoch });
+            }
+        }
+        for p in procs.iter_mut() {
+            if !p.reaped {
+                let _ = p.child.kill();
+                let _ = p.child.wait();
+                p.reaped = true;
+            }
+        }
+    };
+
+    // Rendezvous: accept one hello per rank, bounded by the epoch
+    // deadline so a child that dies pre-hello cannot hang us.
+    let mut readers: Vec<Option<BufReader<TcpStream>>> = (0..w).map(|_| None).collect();
+    let mut joined = 0usize;
+    while joined < w {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("control conn blocking")?;
+                stream.set_nodelay(true).context("control TCP_NODELAY")?;
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(10)))
+                    .context("control read timeout")?;
+                let mut reader =
+                    BufReader::new(stream.try_clone().context("cloning control stream")?);
+                let hello = match wire::recv_line(&mut reader) {
+                    Ok(Some(m)) => m,
+                    Ok(None) | Err(_) => continue, // connected then died: exit path reports it
+                };
+                let kind = hello.kind();
+                let Ctrl::Hello { rank, data_port } = hello else {
+                    teardown(&mut procs);
+                    return Ok(Some(format!("rendezvous: expected hello, got {kind:?}")));
+                };
+                if rank as usize >= w || readers[rank as usize].is_some() {
+                    teardown(&mut procs);
+                    return Ok(Some(format!("rendezvous: bad or duplicate rank {rank}")));
+                }
+                procs[rank as usize].writer = Some(stream);
+                procs[rank as usize].data_port = data_port;
+                readers[rank as usize] = Some(reader);
+                joined += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= epoch_deadline {
+                    teardown(&mut procs);
+                    return Ok(Some(format!(
+                        "rendezvous timed out with {joined} of {w} ranks joined"
+                    )));
+                }
+                // A child that crashed before hello will never join.
+                for (r, p) in procs.iter_mut().enumerate() {
+                    if readers[r].is_none() {
+                        if let Ok(Some(status)) = p.child.try_wait() {
+                            p.reaped = true;
+                            teardown(&mut procs);
+                            return Ok(Some(format!(
+                                "rank {r} exited during rendezvous ({status})"
+                            )));
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                teardown(&mut procs);
+                return Err(e).context("accepting control connection");
+            }
+        }
+    }
+
+    // Everyone is in: broadcast the epoch plan, then start the clock.
+    let peers: Vec<u16> = procs.iter().map(|p| p.data_port).collect();
+    for (r, p) in procs.iter_mut().enumerate() {
+        let welcome = Ctrl::Welcome {
+            epoch,
+            rank: r as u32,
+            world,
+            n: cfg.n as u64,
+            seed: cfg.seed,
+            target_step: cfg.target_step,
+            ckpt_every: cfg.ckpt_every,
+            ckpt_dir: cfg.ckpt_dir.display().to_string(),
+            restore_step: restore,
+            hb_interval_ms: cfg.hb_interval_ms,
+            data_timeout_ms: cfg.data_timeout_ms,
+            peers: peers.clone(),
+        };
+        if let Err(e) = wire::send_line(p.writer.as_mut().expect("joined"), &welcome) {
+            teardown(&mut procs);
+            return Ok(Some(format!("sending welcome to rank {r}: {e:#}")));
+        }
+    }
+    let begun = liveness.begin_epoch(w, now_ms(t0));
+    debug_assert_eq!(begun, epoch);
+
+    // Reader threads funnel every control message into one channel.
+    let (tx, rx) = mpsc::channel::<Ctrl>();
+    for reader in readers.iter_mut() {
+        let mut reader = reader.take().expect("joined");
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match wire::recv_line(&mut reader) {
+                Ok(Some(msg)) => {
+                    if tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) | Err(_) => break,
+            }
+        });
+    }
+    drop(tx);
+
+    // Supervision loop.
+    let mut norms: HashMap<u32, u32> = HashMap::new(); // step -> norm bits
+    let mut steps_done: HashMap<u32, u32> = HashMap::new(); // step -> ranks reported
+    let mut crcs: HashMap<u32, Vec<Option<u32>>> = HashMap::new(); // step -> per-rank crc
+    let mut failure: Option<String> = None;
+
+    'epoch: loop {
+        // 1. Drain control messages.
+        loop {
+            let msg = match rx.try_recv() {
+                Ok(m) => m,
+                Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => break,
+            };
+            match msg {
+                Ctrl::Heartbeat {
+                    rank, epoch: e, ..
+                } => {
+                    liveness.on_heartbeat(rank, e, now_ms(t0));
+                }
+                Ctrl::StepDone {
+                    rank,
+                    epoch: e,
+                    step,
+                    norm_bits,
+                } => {
+                    if e != epoch {
+                        continue;
+                    }
+                    match norms.get(&step) {
+                        None => {
+                            norms.insert(step, norm_bits);
+                        }
+                        Some(&bits) if bits != norm_bits => {
+                            failure = Some(format!(
+                                "norm divergence at step {step}: rank {rank} reported \
+                                 {norm_bits:#010x}, others {bits:#010x}"
+                            ));
+                            break 'epoch;
+                        }
+                        Some(_) => {}
+                    }
+                    let c = steps_done.entry(step).or_insert(0);
+                    *c += 1;
+                    if *c == world {
+                        emit(
+                            events,
+                            t0,
+                            "committed",
+                            vec![
+                                ("step", Json::Num(f64::from(step))),
+                                ("world", Json::Num(f64::from(world))),
+                            ],
+                        );
+                    }
+                }
+                Ctrl::CkptDone {
+                    rank,
+                    epoch: e,
+                    step,
+                    crc,
+                } => {
+                    if e != epoch {
+                        continue;
+                    }
+                    let slots = crcs.entry(step).or_insert_with(|| vec![None; w]);
+                    slots[rank as usize] = Some(crc);
+                    if slots.iter().all(Option::is_some) {
+                        let manifest = ShardManifest {
+                            step,
+                            n: cfg.n as u64,
+                            shard_crcs: slots.iter().map(|c| c.unwrap()).collect(),
+                        };
+                        let committed = checkpoint::save_manifest(&cfg.ckpt_dir, &manifest)
+                            .and_then(|_| {
+                                checkpoint::rotate_sharded_generations(
+                                    &cfg.ckpt_dir,
+                                    cfg.keep_last,
+                                )
+                            });
+                        if let Err(e) = committed {
+                            failure = Some(format!("committing generation {step}: {e:#}"));
+                            break 'epoch;
+                        }
+                    }
+                }
+                Ctrl::Fail {
+                    rank,
+                    epoch: e,
+                    reason,
+                } => {
+                    if e != epoch {
+                        continue;
+                    }
+                    liveness.mark_dead(rank);
+                    emit(
+                        events,
+                        t0,
+                        "rank-dead",
+                        vec![
+                            ("epoch", Json::Num(epoch as f64)),
+                            ("rank", Json::Num(f64::from(rank))),
+                            ("reason", Json::Str(reason.clone())),
+                        ],
+                    );
+                    failure = Some(format!("rank {rank} failed: {reason}"));
+                    break 'epoch;
+                }
+                Ctrl::Hello { .. } | Ctrl::Welcome { .. } | Ctrl::Abort { .. } => {}
+            }
+        }
+
+        // 2. Reap exits: clean exits stop being monitored; anything else
+        // fails the epoch.
+        for (r, p) in procs.iter_mut().enumerate() {
+            if p.reaped {
+                continue;
+            }
+            if let Ok(Some(status)) = p.child.try_wait() {
+                p.reaped = true;
+                liveness.mark_dead(r as u32);
+                if status.success() {
+                    p.exited_ok = true;
+                } else {
+                    emit(
+                        events,
+                        t0,
+                        "rank-dead",
+                        vec![
+                            ("epoch", Json::Num(epoch as f64)),
+                            ("rank", Json::Num(r as f64)),
+                            ("reason", Json::Str(format!("exited with {status}"))),
+                        ],
+                    );
+                    failure = Some(format!("rank {r} exited with {status}"));
+                    break 'epoch;
+                }
+            }
+        }
+
+        // 3. Heartbeat sweep: a silent rank is dead even if its process
+        // is still running (partition semantics).
+        let newly_dead = liveness.check(now_ms(t0));
+        if let Some(&r) = newly_dead.first() {
+            emit(
+                events,
+                t0,
+                "rank-dead",
+                vec![
+                    ("epoch", Json::Num(epoch as f64)),
+                    ("rank", Json::Num(f64::from(r))),
+                    ("reason", Json::Str("missed heartbeats".to_string())),
+                ],
+            );
+            failure = Some(format!("rank {r} missed heartbeats"));
+            break 'epoch;
+        }
+
+        // 4. Success: every rank exited cleanly (ranks only exit zero
+        // after committing the target step).
+        if procs.iter().all(|p| p.exited_ok) {
+            break 'epoch;
+        }
+
+        // 5. Epoch wall clock.
+        if Instant::now() >= epoch_deadline {
+            failure = Some(format!("epoch {epoch} exceeded its wall-clock bound"));
+            break 'epoch;
+        }
+
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    teardown(&mut procs);
+    Ok(failure)
+}

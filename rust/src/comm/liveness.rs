@@ -1,0 +1,205 @@
+//! Epoch-fenced heartbeat liveness — the coordinator's failure
+//! detector, as a pure state machine.
+//!
+//! All time flows in through `now_ms` parameters (a monotonic
+//! millisecond clock the caller owns), so every transition is testable
+//! with a fake clock: no timers, no threads, no IO. The coordinator
+//! feeds it real `Instant`-derived milliseconds; the tests feed it
+//! hand-picked instants.
+//!
+//! Fencing rules (the ones that keep a flaky network from corrupting
+//! membership):
+//!
+//! * a heartbeat stamped with a **stale epoch** is discarded — it must
+//!   never refresh the sender's deadline in the current epoch;
+//! * a heartbeat from a rank **already declared dead** is discarded —
+//!   a declared death is final for the epoch (the zombie is killed and
+//!   re-admitted by respawn, never resurrected in place);
+//! * [`Liveness::check`] reports each death exactly once, so the
+//!   coordinator can treat a returned rank as an edge event.
+
+/// Configuration for the failure detector.
+#[derive(Debug, Clone, Copy)]
+pub struct LivenessCfg {
+    /// A rank is declared dead when no accepted heartbeat has arrived
+    /// for this many milliseconds.
+    pub timeout_ms: u64,
+}
+
+impl Default for LivenessCfg {
+    fn default() -> Self {
+        Self { timeout_ms: 1000 }
+    }
+}
+
+/// What [`Liveness::on_heartbeat`] decided about one heartbeat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HbVerdict {
+    /// The heartbeat was accepted and refreshed the rank's deadline.
+    Accepted,
+    /// The heartbeat named an epoch other than the current one; it was
+    /// discarded without touching any deadline.
+    FencedStaleEpoch,
+    /// The rank was already declared dead this epoch; the heartbeat was
+    /// discarded (no in-place resurrection).
+    FencedDead,
+    /// The rank id is outside the current epoch's world.
+    UnknownRank,
+}
+
+/// Per-rank liveness for one epoch at a time.
+#[derive(Debug)]
+pub struct Liveness {
+    cfg: LivenessCfg,
+    epoch: u64,
+    /// Per-rank deadline in ms (`None` = declared dead this epoch).
+    deadline_ms: Vec<Option<u64>>,
+}
+
+impl Liveness {
+    /// A detector with no epoch begun yet (every heartbeat is fenced
+    /// until [`Liveness::begin_epoch`]).
+    pub fn new(cfg: LivenessCfg) -> Self {
+        Self {
+            cfg,
+            epoch: 0,
+            deadline_ms: Vec::new(),
+        }
+    }
+
+    /// The current epoch number (0 before the first epoch).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Start a new epoch with `world` ranks, all alive with a full
+    /// timeout from `now_ms`. Returns the new epoch number. Any state
+    /// from the previous epoch (including declared deaths) is dropped —
+    /// a respawned or re-admitted rank starts fresh.
+    pub fn begin_epoch(&mut self, world: usize, now_ms: u64) -> u64 {
+        self.epoch += 1;
+        self.deadline_ms = vec![Some(now_ms + self.cfg.timeout_ms); world];
+        self.epoch
+    }
+
+    /// Process one heartbeat stamped `(rank, epoch)` arriving at
+    /// `now_ms`.
+    pub fn on_heartbeat(&mut self, rank: u32, epoch: u64, now_ms: u64) -> HbVerdict {
+        if epoch != self.epoch {
+            return HbVerdict::FencedStaleEpoch;
+        }
+        match self.deadline_ms.get_mut(rank as usize) {
+            None => HbVerdict::UnknownRank,
+            Some(None) => HbVerdict::FencedDead,
+            Some(slot) => {
+                *slot = Some(now_ms + self.cfg.timeout_ms);
+                HbVerdict::Accepted
+            }
+        }
+    }
+
+    /// Declare `rank` dead out-of-band (child exited, fail message) so
+    /// later heartbeats from it are fenced. No-op for unknown ranks.
+    pub fn mark_dead(&mut self, rank: u32) {
+        if let Some(slot) = self.deadline_ms.get_mut(rank as usize) {
+            *slot = None;
+        }
+    }
+
+    /// Sweep deadlines at `now_ms`, returning the ranks that just
+    /// transitioned to dead (each rank is reported at most once per
+    /// epoch).
+    pub fn check(&mut self, now_ms: u64) -> Vec<u32> {
+        let mut newly_dead = Vec::new();
+        for (rank, slot) in self.deadline_ms.iter_mut().enumerate() {
+            if matches!(slot, Some(d) if *d <= now_ms) {
+                *slot = None;
+                newly_dead.push(rank as u32);
+            }
+        }
+        newly_dead
+    }
+
+    /// Ranks still alive this epoch.
+    pub fn alive(&self) -> usize {
+        self.deadline_ms.iter().filter(|d| d.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(timeout_ms: u64) -> Liveness {
+        Liveness::new(LivenessCfg { timeout_ms })
+    }
+
+    #[test]
+    fn timeout_declares_dead_exactly_once() {
+        let mut lv = mk(100);
+        let e = lv.begin_epoch(3, 1000);
+        assert_eq!(e, 1);
+        assert_eq!(lv.alive(), 3);
+        // everyone beats at t=1050; rank 1 then goes quiet
+        for r in 0..3 {
+            assert_eq!(lv.on_heartbeat(r, e, 1050), HbVerdict::Accepted);
+        }
+        assert_eq!(lv.on_heartbeat(0, e, 1120), HbVerdict::Accepted);
+        assert_eq!(lv.on_heartbeat(2, e, 1120), HbVerdict::Accepted);
+        // rank 1's deadline was 1150 — not dead at 1149, dead at 1150
+        assert!(lv.check(1149).is_empty());
+        assert_eq!(lv.check(1150), vec![1]);
+        assert_eq!(lv.alive(), 2);
+        // the death is an edge event: never reported again
+        assert!(lv.check(2000).is_empty() || lv.check(2000) != vec![1]);
+        // (ranks 0/2 die later at their own deadlines)
+        let later = lv.check(5000);
+        assert!(!later.contains(&1), "death must be reported once");
+    }
+
+    #[test]
+    fn late_heartbeat_from_old_epoch_is_fenced() {
+        let mut lv = mk(100);
+        let e1 = lv.begin_epoch(2, 0);
+        assert_eq!(lv.on_heartbeat(0, e1, 10), HbVerdict::Accepted);
+        let e2 = lv.begin_epoch(2, 1000);
+        assert_ne!(e1, e2);
+        // a delayed beat stamped with the old epoch arrives mid-epoch-2:
+        // it must be discarded and must NOT refresh rank 0's deadline
+        assert_eq!(lv.on_heartbeat(0, e1, 1050), HbVerdict::FencedStaleEpoch);
+        assert_eq!(lv.check(1100), vec![0, 1], "stale beat refreshed a deadline");
+    }
+
+    #[test]
+    fn dead_rank_heartbeat_is_fenced_no_resurrection() {
+        let mut lv = mk(100);
+        let e = lv.begin_epoch(2, 0);
+        assert_eq!(lv.check(100), vec![0, 1]);
+        // the partitioned rank heals and beats again — too late: dead is
+        // dead until the next epoch re-admits it
+        assert_eq!(lv.on_heartbeat(0, e, 150), HbVerdict::FencedDead);
+        assert_eq!(lv.alive(), 0);
+        // rejoin happens via the epoch barrier: a new epoch readmits all
+        let e2 = lv.begin_epoch(2, 200);
+        assert_eq!(lv.on_heartbeat(0, e2, 210), HbVerdict::Accepted);
+        assert_eq!(lv.alive(), 2);
+    }
+
+    #[test]
+    fn mark_dead_and_unknown_rank() {
+        let mut lv = mk(100);
+        let e = lv.begin_epoch(2, 0);
+        lv.mark_dead(1);
+        assert_eq!(lv.on_heartbeat(1, e, 10), HbVerdict::FencedDead);
+        assert_eq!(lv.on_heartbeat(7, e, 10), HbVerdict::UnknownRank);
+        // mark_dead suppresses the timeout edge report for that rank
+        assert_eq!(lv.check(1000), vec![0]);
+    }
+
+    #[test]
+    fn heartbeats_before_first_epoch_are_fenced() {
+        let mut lv = mk(100);
+        assert_eq!(lv.on_heartbeat(0, 1, 0), HbVerdict::FencedStaleEpoch);
+        assert!(lv.check(10_000).is_empty());
+    }
+}

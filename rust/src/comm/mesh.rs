@@ -1,0 +1,244 @@
+//! The data plane: a full localhost TCP mesh between the ranks of one
+//! epoch, carrying the gradient reduce-scatter and the reduced-chunk /
+//! parameter all-gathers as [`wire`] data frames.
+//!
+//! **Topology.** Every rank pair shares one persistent connection per
+//! epoch: the lower rank connects, the higher rank accepts, and the
+//! initiator's first frame is a `Hello` naming itself. Ports travel in
+//! the coordinator's `welcome` (each rank binds its listener before
+//! saying hello), so no port is ever guessed.
+//!
+//! **Deadlock freedom.** Collectives walk the peers in ascending rank
+//! order and order each pairwise exchange by rank (`lower: send then
+//! recv; higher: recv then send`), which sequences every transfer
+//! without relying on kernel socket buffering — correctness does not
+//! depend on payload size.
+//!
+//! **Failure.** Every mesh socket carries a read timeout; a peer that
+//! dies mid-collective surfaces as a *named* error on the blocked rank
+//! (which then reports `fail` on the control plane and exits) rather
+//! than a hang. Frames are stamped `(epoch, step, src, kind)` and
+//! checked on receipt, so nothing from a dead epoch can be mistaken for
+//! live data.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::wire::{self, FrameKind, FrameStamp};
+
+/// One rank's connections to every peer of the current epoch.
+#[derive(Debug)]
+pub struct Mesh {
+    rank: u32,
+    world: u32,
+    epoch: u64,
+    /// Indexed by peer rank; `None` at our own slot.
+    peers: Vec<Option<TcpStream>>,
+}
+
+fn local_addr(port: u16) -> SocketAddr {
+    SocketAddr::from(([127, 0, 0, 1], port))
+}
+
+impl Mesh {
+    /// Build the full mesh for `(rank, world)` in `epoch`: accept one
+    /// connection from every lower rank on `listener`, then connect to
+    /// every higher rank via `ports` (data ports indexed by rank).
+    /// `timeout` bounds the whole build and becomes each socket's read
+    /// timeout.
+    pub fn connect(
+        rank: u32,
+        world: u32,
+        epoch: u64,
+        listener: &TcpListener,
+        ports: &[u16],
+        timeout: Duration,
+    ) -> Result<Mesh> {
+        ensure!(rank < world, "rank {rank} outside world {world}");
+        ensure!(
+            ports.len() == world as usize,
+            "welcome carried {} ports for world {world}",
+            ports.len()
+        );
+        let deadline = Instant::now() + timeout;
+        let mut peers: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+
+        // Accept from every lower rank; each initiator identifies
+        // itself with a Hello frame.
+        listener
+            .set_nonblocking(true)
+            .context("data listener nonblocking")?;
+        let mut accepted = 0;
+        while accepted < rank {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    prepare(&stream, timeout)?;
+                    let stamp = wire::recv_frame(&mut (&stream), &mut [])
+                        .context("reading mesh hello")?;
+                    ensure!(
+                        stamp.kind == FrameKind::Hello && stamp.epoch == epoch,
+                        "mesh hello carried (epoch {}, {:?}), expected (epoch {epoch}, Hello)",
+                        stamp.epoch,
+                        stamp.kind
+                    );
+                    ensure!(
+                        stamp.src < rank,
+                        "rank {} connected to rank {rank}, but only lower ranks initiate",
+                        stamp.src
+                    );
+                    let slot = &mut peers[stamp.src as usize];
+                    ensure!(slot.is_none(), "rank {} connected twice", stamp.src);
+                    *slot = Some(stream);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "mesh build timed out: rank {rank} accepted {accepted} of {rank} \
+                             lower-rank connections"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e).context("accepting mesh connection"),
+            }
+        }
+        listener
+            .set_nonblocking(false)
+            .context("data listener blocking")?;
+
+        // Connect to every higher rank and say hello.
+        for q in rank + 1..world {
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            let stream = TcpStream::connect_timeout(&local_addr(ports[q as usize]), remaining)
+                .with_context(|| format!("connecting to rank {q} data port {}", ports[q as usize]))?;
+            prepare(&stream, timeout)?;
+            wire::send_frame(
+                &mut (&stream),
+                FrameStamp {
+                    epoch,
+                    step: 0,
+                    src: rank,
+                    kind: FrameKind::Hello,
+                },
+                &[],
+            )?;
+            peers[q as usize] = Some(stream);
+        }
+
+        Ok(Mesh {
+            rank,
+            world,
+            epoch,
+            peers,
+        })
+    }
+
+    /// This rank's id.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// World size of the mesh's epoch.
+    pub fn world(&self) -> u32 {
+        self.world
+    }
+
+    fn peer(&self, q: u32) -> Result<&TcpStream> {
+        self.peers
+            .get(q as usize)
+            .and_then(|p| p.as_ref())
+            .with_context(|| format!("no mesh connection to rank {q}"))
+    }
+
+    fn send_to(&self, q: u32, step: u32, kind: FrameKind, payload: &[f32]) -> Result<()> {
+        let stamp = FrameStamp {
+            epoch: self.epoch,
+            step,
+            src: self.rank,
+            kind,
+        };
+        wire::send_frame(&mut self.peer(q)?, stamp, payload)
+            .with_context(|| format!("sending {kind:?} to rank {q} (peer dead?)"))
+    }
+
+    fn recv_from(&self, q: u32, step: u32, kind: FrameKind, out: &mut [f32]) -> Result<()> {
+        let stamp = wire::recv_frame(&mut self.peer(q)?, out)
+            .with_context(|| format!("waiting for {kind:?} from rank {q} (peer dead?)"))?;
+        stamp.expect(self.epoch, step, q, kind)
+    }
+
+    /// Gradient slice exchange (the communication half of the
+    /// reduce-scatter): send every peer `q` our local gradient's slice
+    /// of *q's* owner chunk, and collect every peer's slice of *our*
+    /// chunk into `recv[q]` (each of length `n / world`; our own slot is
+    /// left untouched — the caller reads its own slice from `local`).
+    pub fn exchange_grad_slices(
+        &self,
+        step: u32,
+        local: &[f32],
+        recv: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let w = self.world as usize;
+        let n = local.len();
+        ensure!(n % w == 0 && recv.len() == w, "grad exchange geometry");
+        let chunk = n / w;
+        for q in 0..self.world {
+            if q == self.rank {
+                continue;
+            }
+            let send_slice = &local[q as usize * chunk..(q as usize + 1) * chunk];
+            let buf = &mut recv[q as usize];
+            buf.resize(chunk, 0.0);
+            if self.rank < q {
+                self.send_to(q, step, FrameKind::Grad, send_slice)?;
+                self.recv_from(q, step, FrameKind::Grad, buf)?;
+            } else {
+                self.recv_from(q, step, FrameKind::Grad, buf)?;
+                self.send_to(q, step, FrameKind::Grad, send_slice)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// All-gather of per-rank owner chunks: our chunk must already sit
+    /// at `flat[rank·chunk ..]`; every peer's chunk lands in its slot.
+    /// `kind` distinguishes the reduced-gradient gather from the
+    /// parameter gather so a schedule slip is a named error.
+    pub fn all_gather_chunks(&self, step: u32, kind: FrameKind, flat: &mut [f32]) -> Result<()> {
+        let w = self.world as usize;
+        let n = flat.len();
+        ensure!(n % w == 0, "all-gather geometry");
+        let chunk = n / w;
+        let own: Vec<f32> = flat[self.rank as usize * chunk..(self.rank as usize + 1) * chunk].to_vec();
+        for q in 0..self.world {
+            if q == self.rank {
+                continue;
+            }
+            let slot = q as usize * chunk..(q as usize + 1) * chunk;
+            if self.rank < q {
+                self.send_to(q, step, kind, &own)?;
+                self.recv_from(q, step, kind, &mut flat[slot])?;
+            } else {
+                self.recv_from(q, step, kind, &mut flat[slot])?;
+                self.send_to(q, step, kind, &own)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Socket options every mesh connection gets: no Nagle batching (frames
+/// are the unit of progress) and a read timeout so a dead peer is a
+/// named error, not a hang.
+fn prepare(stream: &TcpStream, timeout: Duration) -> Result<()> {
+    stream.set_nodelay(true).context("mesh TCP_NODELAY")?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .context("mesh read timeout")?;
+    Ok(())
+}

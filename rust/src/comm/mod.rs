@@ -1,0 +1,86 @@
+//! Elastic multi-process rank runtime: a coordinator that spawns one OS
+//! process per rank, localhost TCP control and data planes, heartbeat
+//! liveness, and torchelastic-style crash recovery — the process-level
+//! twin of the in-process fault-tolerance stack (`train::supervisor` +
+//! `fault`).
+//!
+//! `llmq train --distributed W` enters [`run_distributed_cli`]: the
+//! coordinator ([`coordinator::run_coordinator`]) spawns `W` children of
+//! its own binary (the hidden `llmq _rank` subcommand,
+//! [`rank::run_rank_cli`]), rendezvouses them into a membership epoch,
+//! and supervises heartbeats. The data plane ([`mesh::Mesh`]) implements
+//! the reduce-scatter / all-gather collectives pinned **bitwise** to the
+//! in-process memcpy oracles; on a rank death the whole epoch is torn
+//! down, state restores from the newest restorable sharded checkpoint
+//! generation, and the run resumes — at the same world while the respawn
+//! budget lasts, then shrunk W→W−1. NUMERICS.md Rule 6 makes the
+//! recovery contract exact: recovered ≡ uninterrupted, bit for bit,
+//! across the process boundary.
+//!
+//! The in-process path (`--world` without `--distributed`) remains the
+//! default and the oracle; this module exists so rank death, partitions,
+//! and recovery can be exercised against *real* process boundaries and
+//! real sockets (`tests/multiproc.rs`).
+
+pub mod coordinator;
+pub mod liveness;
+pub mod mesh;
+pub mod rank;
+pub mod wire;
+pub mod workload;
+
+pub use coordinator::{run_coordinator, CoordCfg, CoordReport};
+pub use liveness::{HbVerdict, Liveness, LivenessCfg};
+pub use mesh::Mesh;
+pub use rank::run_rank_cli;
+pub use workload::SyntheticModel;
+
+use anyhow::{Context, Result};
+
+use crate::util::Args;
+
+/// CLI entry for `llmq train --distributed W [--steps S] [--dist-n N]
+/// [--seed X] [--ckpt-every K] [--keep-last G] [--ckpt-dir DIR]
+/// [--retries R] [--no-shrink] [--hb-interval-ms ..] [--hb-timeout-ms ..]
+/// [--data-timeout-ms ..] [--epoch-timeout-ms ..]`.
+///
+/// Faults come from `LLMQ_FAULT` exactly as in-process — the plan is
+/// injected into the first epoch's rank children only, so recovery
+/// epochs replay fault-free (`fault::env` stays authoritative for the
+/// syntax).
+pub fn run_distributed_cli(args: &Args) -> Result<()> {
+    let fault = match std::env::var("LLMQ_FAULT") {
+        Ok(s) if !s.is_empty() => Some(s),
+        _ => None,
+    };
+    let cfg = CoordCfg {
+        exe: std::env::current_exe().context("resolving own binary for rank spawn")?,
+        world: args.u32("distributed", 2)?,
+        n: args.usize("dist-n", workload::DEFAULT_N)?,
+        seed: args.u32("seed", 0)?,
+        target_step: args.usize("steps", 4)? as u32,
+        ckpt_every: args.u32("ckpt-every", 1)?,
+        keep_last: args.usize("keep-last", 3)?,
+        ckpt_dir: args.str("ckpt-dir", "ckpts-dist")?.into(),
+        max_respawns: args.u32("retries", 2)?,
+        allow_shrink: !args.flag("no-shrink"),
+        hb_interval_ms: args.u64("hb-interval-ms", 100)?,
+        hb_timeout_ms: args.u64("hb-timeout-ms", 1000)?,
+        data_timeout_ms: args.u64("data-timeout-ms", 5000)?,
+        epoch_timeout_ms: args.u64("epoch-timeout-ms", 120_000)?,
+        fault,
+    };
+    let dir = cfg.ckpt_dir.clone();
+    let report = run_coordinator(cfg)?;
+    println!(
+        "distributed run: step {} world {} ({} epochs, {} respawns, {} shrinks); \
+         events in {}",
+        report.final_step,
+        report.final_world,
+        report.epochs,
+        report.respawns,
+        report.shrinks,
+        dir.join("coordinator-events.log").display(),
+    );
+    report.into_result().map(|_| ())
+}

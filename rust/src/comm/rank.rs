@@ -1,0 +1,403 @@
+//! One rank process of a distributed run (the hidden `llmq _rank`
+//! subcommand): connects to the coordinator, joins one epoch, steps the
+//! synthetic fused-optimizer workload through the TCP mesh, shards its
+//! checkpoint chunk, and exits.
+//!
+//! A rank lives for exactly one epoch. Recovery is torchelastic-style:
+//! on any membership change the coordinator tears every rank down and
+//! respawns the new world, so this loop never has to re-welcome or
+//! reshard in place — the restore tuple plus the world-agnostic flat
+//! state (NUMERICS.md Rule 5/6) carry all continuity.
+//!
+//! ## Bitwise contract with the in-process pipeline
+//!
+//! The step below is pinned, element for element, to
+//! [`fused::fused_step`] run in one process at the same world:
+//!
+//! * **reduce** — peers exchange gradient slices, then each rank runs
+//!   the shared [`memcpy::reduce_chunk`] kernel over its owner chunk:
+//!   ascending-source fold, SR keyed by *global* element index
+//!   (`REDUCE_RNG_KEY ^ seed`, counter + index) — exactly the
+//!   [`memcpy::reduce_scatter_scaled_memcpy`] oracle's math;
+//! * **norm** — after the reduced-chunk all-gather every rank holds the
+//!   full flat gradient and computes [`fused::grad_norm`] over it.
+//!   The f64 widened-lane partials of the Rule 2a grid are *not*
+//!   composable across rank boundaries at arbitrary chunk sizes, so
+//!   norms are never assembled from per-rank partials — each rank folds
+//!   the identical full grid and lands on identical bits;
+//! * **update** — [`HostStep::update_spec`] (the same clip-rule
+//!   derivation the in-process phase 3 uses) drives the backend AdamW
+//!   kernel over the rank's owner chunk with global-element SR
+//!   counters; the parameter all-gather then rebuilds the replica.
+//!   Elementwise math plus global-index keying make the chunk
+//!   decomposition invisible in the bits.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use super::mesh::Mesh;
+use super::wire::{self, Ctrl, FrameKind};
+use super::workload::SyntheticModel;
+use crate::collectives::memcpy::{self, PIPELINE_BLOCK};
+use crate::optim::fused::{self, HostStep, REDUCE_RNG_KEY};
+use crate::precision::{backend, bf16, CounterRng};
+use crate::train::checkpoint;
+use crate::util::Args;
+use crate::{exec, fault};
+
+/// CLI: `llmq _rank --rank R --coord-port P` (spawned by the
+/// coordinator, not meant for direct use).
+pub fn run_rank_cli(args: &Args) -> Result<()> {
+    let rank = args.u32("rank", u32::MAX)?;
+    ensure!(rank != u32::MAX, "_rank requires --rank");
+    let port = args.u32("coord-port", 0)?;
+    ensure!(
+        (1..=u32::from(u16::MAX)).contains(&port),
+        "_rank requires --coord-port"
+    );
+    run_rank(rank, port as u16)
+}
+
+/// Scratch buffers one step reuses (no per-step allocation of `n`-sized
+/// buffers beyond the first step).
+struct Scratch {
+    /// This rank's full-length local gradient.
+    local: Vec<f32>,
+    /// The full flat reduced gradient (assembled by the all-gather).
+    flat: Vec<f32>,
+    /// Per-peer received slices of our owner chunk.
+    recv: Vec<Vec<f32>>,
+}
+
+fn run_rank(rank: u32, coord_port: u16) -> Result<()> {
+    // Control plane up first: hello carries our data port.
+    let control = TcpStream::connect(SocketAddr::from(([127, 0, 0, 1], coord_port)))
+        .with_context(|| format!("rank {rank}: connecting to coordinator port {coord_port}"))?;
+    control.set_nodelay(true).context("control TCP_NODELAY")?;
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding data listener")?;
+    let data_port = listener.local_addr()?.port();
+    let writer = Arc::new(Mutex::new(control.try_clone()?));
+    wire::send_line(
+        &mut *writer.lock().unwrap(),
+        &Ctrl::Hello { rank, data_port },
+    )?;
+
+    // Wait for the epoch-opening welcome (bounded so a dead coordinator
+    // cannot strand us).
+    control
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .context("control read timeout")?;
+    let mut reader = BufReader::new(control.try_clone()?);
+    let welcome = loop {
+        match wire::recv_line(&mut reader).context("waiting for welcome")? {
+            Some(w @ Ctrl::Welcome { .. }) => break w,
+            Some(Ctrl::Abort { .. }) | None => return Ok(()),
+            Some(_) => continue,
+        }
+    };
+    control.set_read_timeout(None).context("control read timeout")?;
+    let Ctrl::Welcome {
+        epoch,
+        rank: my_rank,
+        world,
+        n,
+        seed,
+        target_step,
+        ckpt_every,
+        ckpt_dir,
+        restore_step,
+        hb_interval_ms,
+        data_timeout_ms,
+        peers,
+    } = welcome
+    else {
+        unreachable!("loop breaks on Welcome only");
+    };
+    ensure!(my_rank == rank, "welcome names rank {my_rank}, I am {rank}");
+    ensure!(world >= 1 && rank < world, "rank {rank} outside world {world}");
+    let n = n as usize;
+    ensure!(n % world as usize == 0, "world {world} must divide n {n}");
+    let ckpt_dir = std::path::PathBuf::from(ckpt_dir);
+
+    // Membership epoch is fenced everywhere: the abort flag trips on an
+    // abort message, a coordinator disappearance, or control EOF.
+    let abort = Arc::new(AtomicBool::new(false));
+    {
+        let abort = Arc::clone(&abort);
+        std::thread::spawn(move || loop {
+            match wire::recv_line(&mut reader) {
+                Ok(Some(Ctrl::Abort { .. })) | Ok(None) | Err(_) => {
+                    abort.store(true, Ordering::Release);
+                    break;
+                }
+                Ok(Some(_)) => {}
+            }
+        });
+    }
+
+    // State: fresh, or restored from the named sharded generation. The
+    // flat tuple is world-agnostic, so a generation saved by any world
+    // restores exactly (NUMERICS.md Rule 6).
+    let mut model = SyntheticModel::new(n, seed);
+    if let Some(gen_step) = restore_step {
+        let (step, counter, save_world) = checkpoint::load_sharded_into(
+            &ckpt_dir,
+            gen_step,
+            &mut model.p,
+            &mut model.m,
+            &mut model.v,
+        )
+        .with_context(|| format!("rank {rank}: restoring generation {gen_step}"))?;
+        ensure!(step == gen_step, "generation {gen_step} stamps step {step}");
+        model.step = step;
+        model.counter = counter;
+        let _ = save_world; // provenance only — the state is flat
+    }
+
+    // Heartbeats: a dedicated thread, stamped with epoch + last
+    // completed step + the exec progress counter. The control-plane
+    // fault site models a network partition by dropping beats.
+    let cur_step = Arc::new(AtomicU32::new(model.step));
+    {
+        let abort = Arc::clone(&abort);
+        let writer = Arc::clone(&writer);
+        let cur_step = Arc::clone(&cur_step);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_millis(hb_interval_ms.max(1)));
+            if abort.load(Ordering::Acquire) {
+                break;
+            }
+            if fault::control_site(rank) {
+                continue; // partitioned: beat dropped
+            }
+            let msg = Ctrl::Heartbeat {
+                rank,
+                epoch,
+                step: cur_step.load(Ordering::Acquire),
+                progress: exec::progress(),
+            };
+            if wire::send_line(&mut *writer.lock().unwrap(), &msg).is_err() {
+                break; // coordinator gone; the abort flag will follow
+            }
+        });
+    }
+
+    // Data plane.
+    let mesh = if world > 1 {
+        Some(
+            Mesh::connect(
+                rank,
+                world,
+                epoch,
+                &listener,
+                &peers,
+                Duration::from_millis(data_timeout_ms.max(1)),
+            )
+            .with_context(|| format!("rank {rank}: building data mesh"))?,
+        )
+    } else {
+        None
+    };
+
+    let result = run_epoch(
+        &mut model,
+        rank,
+        world,
+        epoch,
+        target_step,
+        ckpt_every,
+        &ckpt_dir,
+        mesh.as_ref(),
+        &cur_step,
+        &abort,
+        &writer,
+    );
+    if abort.load(Ordering::Acquire) {
+        // Told to die (or the coordinator vanished): exit cleanly and
+        // let the respawn re-admit us. Any collective error we hit on
+        // the way down was a symptom, not a cause.
+        return Ok(());
+    }
+    if let Err(e) = &result {
+        let _ = wire::send_line(
+            &mut *writer.lock().unwrap(),
+            &Ctrl::Fail {
+                rank,
+                epoch,
+                reason: format!("{e:#}"),
+            },
+        );
+    }
+    result
+}
+
+/// Step from the model's restored step to `target_step`, reporting
+/// step completions and checkpoint shards as we go.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    model: &mut SyntheticModel,
+    rank: u32,
+    world: u32,
+    epoch: u64,
+    target_step: u32,
+    ckpt_every: u32,
+    ckpt_dir: &std::path::Path,
+    mesh: Option<&Mesh>,
+    cur_step: &AtomicU32,
+    abort: &AtomicBool,
+    writer: &Mutex<TcpStream>,
+) -> Result<()> {
+    let n = model.n;
+    let chunk = n / world as usize;
+    let own = rank as usize * chunk..(rank as usize + 1) * chunk;
+    let mut scratch = Scratch {
+        local: vec![0.0; n],
+        flat: vec![0.0; n],
+        recv: vec![Vec::new(); world as usize],
+    };
+    for step in model.step + 1..=target_step {
+        if abort.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        // Announce the step to the fault plane; a matched rank-kill
+        // aborts this whole process right here.
+        fault::set_step(step);
+        fault::step_site(rank as usize, step);
+        // A matched partition takes our NIC dark: arming it here (not
+        // just in the beat thread) pins the firing to this exact step,
+        // and holding the data plane while it lasts models a real
+        // partition — peers block on us, the coordinator declares us
+        // dead, and the epoch is torn down around a still-live process.
+        if fault::control_site(rank) {
+            while fault::partition_active() && !abort.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        if abort.load(Ordering::Acquire) {
+            return Ok(());
+        }
+
+        let norm = distributed_step(model, rank, world, mesh, &mut scratch)?;
+        cur_step.store(step, Ordering::Release);
+        wire::send_line(
+            &mut *writer.lock().unwrap(),
+            &Ctrl::StepDone {
+                rank,
+                epoch,
+                step,
+                norm_bits: norm.to_bits(),
+            },
+        )?;
+
+        if step % ckpt_every.max(1) == 0 || step == target_step {
+            let crc = checkpoint::save_shard(
+                ckpt_dir,
+                step,
+                model.counter,
+                rank,
+                world,
+                &model.p[own.clone()],
+                &model.m[own.clone()],
+                &model.v[own.clone()],
+            )
+            .with_context(|| format!("rank {rank}: saving shard at step {step}"))?;
+            wire::send_line(
+                &mut *writer.lock().unwrap(),
+                &Ctrl::CkptDone {
+                    rank,
+                    epoch,
+                    step,
+                    crc,
+                },
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// One distributed optimizer step — see the module docs for the
+/// phase-by-phase bitwise contract with [`fused::fused_step`].
+fn distributed_step(
+    model: &mut SyntheticModel,
+    rank: u32,
+    world: u32,
+    mesh: Option<&Mesh>,
+    s: &mut Scratch,
+) -> Result<f32> {
+    let n = model.n;
+    let w = world as usize;
+    let r = rank as usize;
+    let chunk = n / w;
+    let own = r * chunk..(r + 1) * chunk;
+    let step = model.step + 1;
+    let hs: HostStep = model.host_step(w);
+    let scale = hs.grad_scale();
+
+    model.fill_grad(r, step, &mut s.local);
+    if w == 1 {
+        // Degenerate world: no reduction, no SR — one scaled RNE copy,
+        // exactly `reduce_phase`'s fast path.
+        bf16::scaled_round_into(&s.local, &mut s.flat, scale);
+    } else {
+        let mesh = mesh.context("world > 1 requires a data mesh")?;
+        mesh.exchange_grad_slices(step, &s.local, &mut s.recv)?;
+        // Reduce our owner chunk: sources in ascending rank order, SR
+        // keyed by global element index (counter folded with the chunk
+        // base, like the async pipeline's per-chunk ops).
+        let (local, recv, flat) = (&s.local, &s.recv, &mut s.flat);
+        let srcs: Vec<&[f32]> = (0..w)
+            .map(|q| {
+                if q == r {
+                    &local[own.clone()]
+                } else {
+                    recv[q].as_slice()
+                }
+            })
+            .collect();
+        flat[own.clone()].fill(0.0);
+        let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
+        memcpy::reduce_chunk(
+            &srcs,
+            0,
+            &mut flat[own.clone()],
+            Some(scale),
+            &rng,
+            hs.counter.wrapping_add(own.start as u32),
+        );
+        mesh.all_gather_chunks(step, FrameKind::Reduced, &mut s.flat)?;
+    }
+
+    // Global-norm barrier: every rank folds the identical full grid.
+    let norm = fused::grad_norm(&s.flat);
+
+    // Owner-chunk AdamW through the shared clip-rule derivation, in
+    // cache-sized windows (elementwise + global-index SR keying make the
+    // window grid invisible in the bits).
+    let spec = hs.update_spec(norm, (n / hs.opt_world) as u32);
+    let mut off = own.start;
+    while off < own.end {
+        let take = (own.end - off).min(PIPELINE_BLOCK);
+        backend::adamw_update(
+            &spec,
+            &mut model.p[off..off + take],
+            &mut model.m[off..off + take],
+            &mut model.v[off..off + take],
+            &s.flat[off..off + take],
+            hs.counter.wrapping_add(off as u32),
+        );
+        off += take;
+    }
+    if w > 1 {
+        let mesh = mesh.context("world > 1 requires a data mesh")?;
+        mesh.all_gather_chunks(step, FrameKind::Params, &mut model.p)?;
+    }
+
+    model.step = step;
+    model.counter = model.counter.wrapping_add(3 * n as u32);
+    Ok(norm)
+}

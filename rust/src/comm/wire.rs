@@ -1,0 +1,602 @@
+//! Wire formats for the multi-process rank runtime.
+//!
+//! Two planes, deliberately different encodings:
+//!
+//! * **control plane** — JSON lines (one [`Ctrl`] message per `\n`-
+//!   terminated line, rendered through [`Json::render`]'s canonical
+//!   compact form) between each rank and the coordinator. Human-
+//!   greppable in flight logs, and the same reader/writer the event
+//!   logs use.
+//! * **data plane** — length-prefixed binary frames (`LQD1` magic)
+//!   between rank pairs, carrying f32 payloads in little-endian byte
+//!   order via the checkpoint codec helpers. Every frame is stamped
+//!   with `(epoch, step, src, kind)` and the receiver checks all four,
+//!   so a delayed frame from a dead epoch is a *named* error, never a
+//!   silent corruption.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::train::checkpoint::{f32s_to_le_bytes, le_bytes_to_f32s};
+use crate::util::Json;
+
+// ---------------------------------------------------------------------------
+// Control plane: JSON lines
+// ---------------------------------------------------------------------------
+
+/// A control-plane message. Rank → coordinator: `Hello`, `Heartbeat`,
+/// `StepDone`, `CkptDone`, `Fail`. Coordinator → rank: `Welcome`,
+/// `Abort`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ctrl {
+    /// First message on a rank's control socket: its identity and the
+    /// localhost port its data-plane listener is bound to.
+    Hello {
+        /// Rank id (the spawn index).
+        rank: u32,
+        /// Data-plane listener port.
+        data_port: u16,
+    },
+    /// The coordinator's epoch-opening broadcast: membership, geometry
+    /// and the run plan for this epoch.
+    Welcome {
+        /// Epoch number (monotonic across recoveries).
+        epoch: u64,
+        /// The receiving rank's id this epoch.
+        rank: u32,
+        /// World size this epoch.
+        world: u32,
+        /// Flat element count of the replicated state.
+        n: u64,
+        /// Run seed (keys gradients and SR streams).
+        seed: u32,
+        /// Optimizer step to stop after (inclusive).
+        target_step: u32,
+        /// Checkpoint cadence in steps.
+        ckpt_every: u32,
+        /// Sharded-checkpoint directory.
+        ckpt_dir: String,
+        /// Generation to restore before stepping (`None` = fresh init).
+        restore_step: Option<u32>,
+        /// Heartbeat send interval.
+        hb_interval_ms: u64,
+        /// Data-plane socket read timeout.
+        data_timeout_ms: u64,
+        /// Data-plane ports of every rank this epoch, indexed by rank.
+        peers: Vec<u16>,
+    },
+    /// Periodic liveness beat.
+    Heartbeat {
+        /// Sender rank.
+        rank: u32,
+        /// Sender's epoch (the coordinator fences stale epochs).
+        epoch: u64,
+        /// Last completed optimizer step.
+        step: u32,
+        /// Monotonic progress counter ([`crate::exec::progress`]).
+        progress: u64,
+    },
+    /// One optimizer step completed.
+    StepDone {
+        /// Sender rank.
+        rank: u32,
+        /// Sender's epoch.
+        epoch: u64,
+        /// The completed step.
+        step: u32,
+        /// Bit pattern of the pre-clip gradient norm — the coordinator
+        /// cross-checks that all ranks agree bitwise every step.
+        norm_bits: u32,
+    },
+    /// One shard of a checkpoint generation was written.
+    CkptDone {
+        /// Sender rank.
+        rank: u32,
+        /// Sender's epoch.
+        epoch: u64,
+        /// The generation step.
+        step: u32,
+        /// Whole-file CRC32 of the shard, for the manifest.
+        crc: u32,
+    },
+    /// The rank hit an unrecoverable error and is exiting.
+    Fail {
+        /// Sender rank.
+        rank: u32,
+        /// Sender's epoch.
+        epoch: u64,
+        /// Human-readable cause.
+        reason: String,
+    },
+    /// The coordinator aborted the epoch; the rank should exit cleanly
+    /// and let the respawn re-admit it.
+    Abort {
+        /// The epoch being aborted.
+        epoch: u64,
+    },
+}
+
+impl Ctrl {
+    /// Message kind tag (the JSON `kind` member).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Ctrl::Hello { .. } => "hello",
+            Ctrl::Welcome { .. } => "welcome",
+            Ctrl::Heartbeat { .. } => "hb",
+            Ctrl::StepDone { .. } => "step-done",
+            Ctrl::CkptDone { .. } => "ckpt-done",
+            Ctrl::Fail { .. } => "fail",
+            Ctrl::Abort { .. } => "abort",
+        }
+    }
+
+    /// Encode as a [`Json`] object.
+    pub fn to_json(&self) -> Json {
+        let num = |x: u64| Json::Num(x as f64);
+        let kind = Json::Str(self.kind().to_string());
+        match self {
+            Ctrl::Hello { rank, data_port } => Json::obj([
+                ("kind", kind),
+                ("rank", num(u64::from(*rank))),
+                ("data_port", num(u64::from(*data_port))),
+            ]),
+            Ctrl::Welcome {
+                epoch,
+                rank,
+                world,
+                n,
+                seed,
+                target_step,
+                ckpt_every,
+                ckpt_dir,
+                restore_step,
+                hb_interval_ms,
+                data_timeout_ms,
+                peers,
+            } => Json::obj([
+                ("kind", kind),
+                ("epoch", num(*epoch)),
+                ("rank", num(u64::from(*rank))),
+                ("world", num(u64::from(*world))),
+                ("n", num(*n)),
+                ("seed", num(u64::from(*seed))),
+                ("target_step", num(u64::from(*target_step))),
+                ("ckpt_every", num(u64::from(*ckpt_every))),
+                ("ckpt_dir", Json::Str(ckpt_dir.clone())),
+                (
+                    "restore_step",
+                    match restore_step {
+                        Some(s) => num(u64::from(*s)),
+                        None => Json::Null,
+                    },
+                ),
+                ("hb_interval_ms", num(*hb_interval_ms)),
+                ("data_timeout_ms", num(*data_timeout_ms)),
+                (
+                    "peers",
+                    Json::Arr(peers.iter().map(|p| num(u64::from(*p))).collect()),
+                ),
+            ]),
+            Ctrl::Heartbeat {
+                rank,
+                epoch,
+                step,
+                progress,
+            } => Json::obj([
+                ("kind", kind),
+                ("rank", num(u64::from(*rank))),
+                ("epoch", num(*epoch)),
+                ("step", num(u64::from(*step))),
+                ("progress", num(*progress)),
+            ]),
+            Ctrl::StepDone {
+                rank,
+                epoch,
+                step,
+                norm_bits,
+            } => Json::obj([
+                ("kind", kind),
+                ("rank", num(u64::from(*rank))),
+                ("epoch", num(*epoch)),
+                ("step", num(u64::from(*step))),
+                ("norm_bits", num(u64::from(*norm_bits))),
+            ]),
+            Ctrl::CkptDone {
+                rank,
+                epoch,
+                step,
+                crc,
+            } => Json::obj([
+                ("kind", kind),
+                ("rank", num(u64::from(*rank))),
+                ("epoch", num(*epoch)),
+                ("step", num(u64::from(*step))),
+                ("crc", num(u64::from(*crc))),
+            ]),
+            Ctrl::Fail {
+                rank,
+                epoch,
+                reason,
+            } => Json::obj([
+                ("kind", kind),
+                ("rank", num(u64::from(*rank))),
+                ("epoch", num(*epoch)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Ctrl::Abort { epoch } => {
+                Json::obj([("kind", kind), ("epoch", num(*epoch))])
+            }
+        }
+    }
+
+    /// Parse one control line.
+    pub fn parse(line: &str) -> Result<Ctrl> {
+        let j = Json::parse(line.trim()).context("parsing control line")?;
+        let kind = j.get("kind")?.str()?.to_string();
+        let u32_of = |key: &str| -> Result<u32> { Ok(j.get(key)?.num()? as u32) };
+        let u64_of = |key: &str| -> Result<u64> { Ok(j.get(key)?.num()? as u64) };
+        Ok(match kind.as_str() {
+            "hello" => Ctrl::Hello {
+                rank: u32_of("rank")?,
+                data_port: u32_of("data_port")? as u16,
+            },
+            "welcome" => Ctrl::Welcome {
+                epoch: u64_of("epoch")?,
+                rank: u32_of("rank")?,
+                world: u32_of("world")?,
+                n: u64_of("n")?,
+                seed: u32_of("seed")?,
+                target_step: u32_of("target_step")?,
+                ckpt_every: u32_of("ckpt_every")?,
+                ckpt_dir: j.get("ckpt_dir")?.str()?.to_string(),
+                restore_step: match j.get("restore_step")? {
+                    Json::Null => None,
+                    v => Some(v.num()? as u32),
+                },
+                hb_interval_ms: u64_of("hb_interval_ms")?,
+                data_timeout_ms: u64_of("data_timeout_ms")?,
+                peers: j
+                    .get("peers")?
+                    .arr()?
+                    .iter()
+                    .map(|p| Ok(p.num()? as u16))
+                    .collect::<Result<Vec<u16>>>()?,
+            },
+            "hb" => Ctrl::Heartbeat {
+                rank: u32_of("rank")?,
+                epoch: u64_of("epoch")?,
+                step: u32_of("step")?,
+                progress: u64_of("progress")?,
+            },
+            "step-done" => Ctrl::StepDone {
+                rank: u32_of("rank")?,
+                epoch: u64_of("epoch")?,
+                step: u32_of("step")?,
+                norm_bits: u32_of("norm_bits")?,
+            },
+            "ckpt-done" => Ctrl::CkptDone {
+                rank: u32_of("rank")?,
+                epoch: u64_of("epoch")?,
+                step: u32_of("step")?,
+                crc: u32_of("crc")?,
+            },
+            "fail" => Ctrl::Fail {
+                rank: u32_of("rank")?,
+                epoch: u64_of("epoch")?,
+                reason: j.get("reason")?.str()?.to_string(),
+            },
+            "abort" => Ctrl::Abort {
+                epoch: u64_of("epoch")?,
+            },
+            other => bail!("unknown control message kind {other:?}"),
+        })
+    }
+}
+
+/// Write one control message as a JSON line and flush it.
+pub fn send_line(w: &mut impl Write, msg: &Ctrl) -> Result<()> {
+    let mut line = msg.to_json().render();
+    line.push('\n');
+    w.write_all(line.as_bytes())
+        .and_then(|_| w.flush())
+        .with_context(|| format!("sending control {:?}", msg.kind()))
+}
+
+/// Read one control line. `Ok(None)` means a clean EOF (the peer closed
+/// its socket); an unparsable line is an error.
+pub fn recv_line(r: &mut impl BufRead) -> Result<Option<Ctrl>> {
+    let mut line = String::new();
+    let read = r.read_line(&mut line).context("reading control line")?;
+    if read == 0 {
+        return Ok(None);
+    }
+    Ctrl::parse(&line).map(Some)
+}
+
+// ---------------------------------------------------------------------------
+// Data plane: binary frames
+// ---------------------------------------------------------------------------
+
+/// Data-plane frame magic.
+pub const DATA_MAGIC: [u8; 4] = *b"LQD1";
+
+/// Fixed frame header length: magic + epoch + step + src + kind + len.
+pub const FRAME_HEADER_LEN: usize = 4 + 8 + 4 + 4 + 1 + 8;
+
+/// What a data frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Mesh-connection identification (empty payload).
+    Hello,
+    /// A slice of a rank's local gradient (reduce-scatter input).
+    Grad,
+    /// A rank's reduced owner chunk (all-gather input).
+    Reduced,
+    /// A rank's updated parameter chunk (all-gather input).
+    Params,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::Grad => 1,
+            FrameKind::Reduced => 2,
+            FrameKind::Params => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => FrameKind::Hello,
+            1 => FrameKind::Grad,
+            2 => FrameKind::Reduced,
+            3 => FrameKind::Params,
+            other => bail!("unknown data-frame kind {other}"),
+        })
+    }
+}
+
+/// The decoded stamp of a received data frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameStamp {
+    /// Sender's epoch.
+    pub epoch: u64,
+    /// Sender's step.
+    pub step: u32,
+    /// Sender's rank.
+    pub src: u32,
+    /// Payload kind.
+    pub kind: FrameKind,
+}
+
+/// Write one data frame: header + little-endian f32 payload.
+pub fn send_frame(
+    w: &mut impl Write,
+    stamp: FrameStamp,
+    payload: &[f32],
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + 4 * payload.len());
+    buf.extend_from_slice(&DATA_MAGIC);
+    buf.extend_from_slice(&stamp.epoch.to_le_bytes());
+    buf.extend_from_slice(&stamp.step.to_le_bytes());
+    buf.extend_from_slice(&stamp.src.to_le_bytes());
+    buf.push(stamp.kind.code());
+    buf.extend_from_slice(&(4 * payload.len() as u64).to_le_bytes());
+    let body_at = buf.len();
+    buf.resize(body_at + 4 * payload.len(), 0);
+    f32s_to_le_bytes(payload, &mut buf[body_at..]);
+    w.write_all(&buf)
+        .and_then(|_| w.flush())
+        .with_context(|| format!("sending {:?} frame to peer", stamp.kind))
+}
+
+/// Read one data frame into `out`, which must match the payload length
+/// exactly. Returns the frame stamp; the caller checks it against the
+/// expected `(epoch, step, src, kind)` via [`FrameStamp::expect`].
+pub fn recv_frame(r: &mut impl Read, out: &mut [f32]) -> Result<FrameStamp> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut header).context("reading data-frame header")?;
+    ensure!(
+        header[0..4] == DATA_MAGIC,
+        "bad data-frame magic {:02x?} (expected {DATA_MAGIC:02x?})",
+        &header[0..4]
+    );
+    let epoch = u64::from_le_bytes(header[4..12].try_into()?);
+    let step = u32::from_le_bytes(header[12..16].try_into()?);
+    let src = u32::from_le_bytes(header[16..20].try_into()?);
+    let kind = FrameKind::from_code(header[20])?;
+    let len = u64::from_le_bytes(header[21..29].try_into()?);
+    ensure!(
+        len == 4 * out.len() as u64,
+        "{kind:?} frame from rank {src} carries {len} bytes, expected {}",
+        4 * out.len()
+    );
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .with_context(|| format!("reading {kind:?} frame body from rank {src}"))?;
+    le_bytes_to_f32s(&body, out);
+    Ok(FrameStamp {
+        epoch,
+        step,
+        src,
+        kind,
+    })
+}
+
+impl FrameStamp {
+    /// Check a received stamp against what this point in the schedule
+    /// expects; any disagreement (a frame from a dead epoch, a deranged
+    /// peer, a skipped step) is a named error.
+    pub fn expect(&self, epoch: u64, step: u32, src: u32, kind: FrameKind) -> Result<()> {
+        ensure!(
+            self.epoch == epoch && self.step == step && self.src == src && self.kind == kind,
+            "unexpected data frame: got (epoch {}, step {}, src {}, {:?}), \
+             expected (epoch {epoch}, step {step}, src {src}, {kind:?})",
+            self.epoch,
+            self.step,
+            self.src,
+            self.kind
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctrl_messages_roundtrip_as_json_lines() {
+        let msgs = [
+            Ctrl::Hello {
+                rank: 2,
+                data_port: 40001,
+            },
+            Ctrl::Welcome {
+                epoch: 3,
+                rank: 1,
+                world: 4,
+                n: 12372,
+                seed: 9,
+                target_step: 6,
+                ckpt_every: 1,
+                ckpt_dir: "ckpts/run a".into(),
+                restore_step: Some(2),
+                hb_interval_ms: 50,
+                data_timeout_ms: 5000,
+                peers: vec![40000, 40001, 40002, 40003],
+            },
+            Ctrl::Welcome {
+                epoch: 1,
+                rank: 0,
+                world: 1,
+                n: 12,
+                seed: 0,
+                target_step: 1,
+                ckpt_every: 1,
+                ckpt_dir: "c".into(),
+                restore_step: None,
+                hb_interval_ms: 100,
+                data_timeout_ms: 1000,
+                peers: vec![40000],
+            },
+            Ctrl::Heartbeat {
+                rank: 3,
+                epoch: 2,
+                step: 5,
+                progress: 12345,
+            },
+            Ctrl::StepDone {
+                rank: 0,
+                epoch: 1,
+                step: 4,
+                norm_bits: 0xDEAD_BEEF,
+            },
+            Ctrl::CkptDone {
+                rank: 1,
+                epoch: 1,
+                step: 4,
+                crc: 0xFFFF_FFFF,
+            },
+            Ctrl::Fail {
+                rank: 2,
+                epoch: 1,
+                reason: "data plane: timed out\nreading".into(),
+            },
+            Ctrl::Abort { epoch: 7 },
+        ];
+        for msg in msgs {
+            let line = msg.to_json().render();
+            assert!(!line.contains('\n'), "control line must be one line: {line}");
+            let back = Ctrl::parse(&line).unwrap();
+            assert_eq!(back, msg, "{line}");
+        }
+    }
+
+    #[test]
+    fn ctrl_line_io_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        let a = Ctrl::Abort { epoch: 2 };
+        let b = Ctrl::Heartbeat {
+            rank: 0,
+            epoch: 2,
+            step: 0,
+            progress: 0,
+        };
+        send_line(&mut buf, &a).unwrap();
+        send_line(&mut buf, &b).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        assert_eq!(recv_line(&mut r).unwrap(), Some(a));
+        assert_eq!(recv_line(&mut r).unwrap(), Some(b));
+        assert_eq!(recv_line(&mut r).unwrap(), None, "EOF is Ok(None)");
+    }
+
+    #[test]
+    fn ctrl_rejects_garbage() {
+        assert!(Ctrl::parse("not json").is_err());
+        assert!(Ctrl::parse(r#"{"kind":"warp"}"#).is_err());
+        assert!(Ctrl::parse(r#"{"kind":"hb","rank":0}"#).is_err());
+    }
+
+    #[test]
+    fn data_frame_roundtrips_bitwise() {
+        let payload: Vec<f32> = (0..97).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let stamp = FrameStamp {
+            epoch: 5,
+            step: 9,
+            src: 2,
+            kind: FrameKind::Grad,
+        };
+        let mut buf = Vec::new();
+        send_frame(&mut buf, stamp, &payload).unwrap();
+        assert_eq!(buf.len(), FRAME_HEADER_LEN + 4 * payload.len());
+        let mut out = vec![0f32; payload.len()];
+        let got = recv_frame(&mut &buf[..], &mut out).unwrap();
+        assert_eq!(got, stamp);
+        got.expect(5, 9, 2, FrameKind::Grad).unwrap();
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&payload), bits(&out));
+        // empty payload (mesh hello)
+        let hello = FrameStamp {
+            epoch: 5,
+            step: 0,
+            src: 1,
+            kind: FrameKind::Hello,
+        };
+        let mut buf = Vec::new();
+        send_frame(&mut buf, hello, &[]).unwrap();
+        let got = recv_frame(&mut &buf[..], &mut []).unwrap();
+        assert_eq!(got, hello);
+    }
+
+    #[test]
+    fn data_frame_misdelivery_is_named() {
+        let stamp = FrameStamp {
+            epoch: 5,
+            step: 9,
+            src: 2,
+            kind: FrameKind::Reduced,
+        };
+        let mut buf = Vec::new();
+        send_frame(&mut buf, stamp, &[1.0, 2.0]).unwrap();
+        let mut out = vec![0f32; 2];
+        let got = recv_frame(&mut &buf[..], &mut out).unwrap();
+        // stale epoch, wrong step, wrong peer, wrong kind: all named
+        let err = got.expect(4, 9, 2, FrameKind::Reduced).unwrap_err();
+        assert!(err.to_string().contains("epoch 4"), "{err}");
+        assert!(got.expect(5, 8, 2, FrameKind::Reduced).is_err());
+        assert!(got.expect(5, 9, 1, FrameKind::Reduced).is_err());
+        assert!(got.expect(5, 9, 2, FrameKind::Params).is_err());
+        // length mismatch is an error before any state is touched
+        let mut buf2 = Vec::new();
+        send_frame(&mut buf2, stamp, &[1.0, 2.0, 3.0]).unwrap();
+        let mut short = vec![0f32; 2];
+        assert!(recv_frame(&mut &buf2[..], &mut short).is_err());
+        // corrupt magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0x40;
+        assert!(recv_frame(&mut &bad[..], &mut out).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! The workload the multi-process rank runtime trains: the fused
+//! optimizer-step pipeline over a synthetic model whose gradients are a
+//! pure function of `(seed, step, source)` — the same shape the chaos
+//! matrix (`tests/fault_tolerance.rs`) supervises in-process, so the
+//! distributed runtime needs no artifact files and every multi-process
+//! run has an exact in-process twin to pin against bitwise.
+
+use crate::optim::fused::{self, HostStep};
+use crate::optim::AdamWParams;
+use crate::precision::{round_to_bf16, CounterRng};
+use crate::train::StepWorkspace;
+
+/// ZeRO-1 optimizer-shard count baked into the AdamW SR counter layout —
+/// pinned independently of the collective world so W→W−1 recovery
+/// replays the exact same per-element counters (NUMERICS.md Rule 5/6).
+pub const OPT_WORLD: usize = 4;
+
+/// Default flat element count for distributed runs: bigger than one
+/// [`crate::collectives::memcpy::PIPELINE_BLOCK`] but not
+/// block-aligned, and divisible by every
+/// world in 1..=4 (and by 6 and 12) as well as [`OPT_WORLD`], so every
+/// shrink path keeps an unpadded shard layout.
+pub const DEFAULT_N: usize = 12_372;
+
+/// RNG key for the synthetic per-(step, source) gradients.
+pub const GRAD_KEY: u32 = 0xFA01;
+
+/// The replicated training state plus its deterministic gradient
+/// source. `p` is replicated everywhere; in distributed mode a rank's
+/// `m`/`v` are only authoritative inside its owner chunk (ZeRO-1), and
+/// the sharded checkpoint reassembles the full tuple from the owners.
+#[derive(Debug, Clone)]
+pub struct SyntheticModel {
+    /// Flat element count.
+    pub n: usize,
+    /// Run seed (keys gradients and both SR streams).
+    pub seed: u32,
+    /// Last completed optimizer step.
+    pub step: u32,
+    /// SR counter base for the *next* step (advances by `3·n` per step).
+    pub counter: u32,
+    /// Parameters.
+    pub p: Vec<f32>,
+    /// AdamW first moments.
+    pub m: Vec<f32>,
+    /// AdamW second moments.
+    pub v: Vec<f32>,
+}
+
+impl SyntheticModel {
+    /// Fresh state at step 0 (counter 1), deterministic in `(n, seed)`.
+    pub fn new(n: usize, seed: u32) -> Self {
+        assert!(n % OPT_WORLD == 0, "n must divide by OPT_WORLD");
+        let mix = seed.wrapping_mul(0x9E37_79B9);
+        let rng = CounterRng::new(0x5EED ^ mix);
+        let p = (0..n)
+            .map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0 + 0.01 * rng.next_f32(i as u32)))
+            .collect();
+        let m = (0..n)
+            .map(|i| round_to_bf16(0.001 * (i % 13) as f32 - 0.006))
+            .collect();
+        let v = (0..n).map(|i| round_to_bf16(1e-4 * (i % 7) as f32)).collect();
+        Self {
+            n,
+            seed,
+            step: 0,
+            counter: 1,
+            p,
+            m,
+            v,
+        }
+    }
+
+    /// The [`HostStep`] for the *next* optimizer step at collective
+    /// world `world`. `n_micro` scales with the world (each source
+    /// contributes two microbatches), so a resharded run and its fresh
+    /// same-world twin derive identical gradient scales.
+    pub fn host_step(&self, world: usize) -> HostStep {
+        HostStep {
+            hp: AdamWParams::default(),
+            lr: 3e-4,
+            grad_clip: 1.0,
+            step: self.step + 1,
+            counter: self.counter,
+            seed: self.seed,
+            n_micro: 2 * world,
+            opt_world: OPT_WORLD,
+        }
+    }
+
+    /// Fill `out` (length `n`) with source `slot`'s accumulated gradient
+    /// for `step` — a pure function, so a retried or resharded step
+    /// feeds the replay exactly what the original attempt saw.
+    pub fn fill_grad(&self, slot: usize, step: u32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        let mix = self.seed.wrapping_mul(0x9E37_79B9);
+        let rng = CounterRng::new(GRAD_KEY ^ mix ^ step);
+        for (i, x) in out.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((slot * self.n + i) as u32) - 0.5) * 0.08);
+        }
+    }
+
+    /// One in-process optimizer step at collective world `ws.world()` —
+    /// the oracle the multi-process step is pinned against bitwise.
+    pub fn step_inprocess(&mut self, ws: &mut StepWorkspace) {
+        let world = ws.world();
+        let step = self.step + 1;
+        ws.ensure(world, self.n);
+        ws.begin_step();
+        for d in 0..world {
+            // fill via a scratch borrow dance: dev_grads are owned Vecs
+            let mut g = std::mem::take(&mut ws.dev_grads[d]);
+            self.fill_grad(d, step, &mut g);
+            ws.dev_grads[d] = g;
+        }
+        let hs = self.host_step(world);
+        fused::fused_step(ws, &mut self.p, &mut self.m, &mut self.v, &hs);
+        self.step = step;
+        self.counter = self.counter.wrapping_add(3 * self.n as u32);
+    }
+
+    /// Run the in-process reference through a world schedule: each
+    /// `(world, through_step)` segment steps at that collective world
+    /// until `through_step` is complete. Models an uninterrupted run
+    /// (one segment) or a mid-run W→W′ reshard (two segments) — by
+    /// NUMERICS.md Rule 5/6 the recovered distributed run must land on
+    /// these exact bits.
+    pub fn run_reference(n: usize, seed: u32, schedule: &[(usize, u32)]) -> Self {
+        let mut model = Self::new(n, seed);
+        let mut ws = StepWorkspace::new(schedule.first().map_or(1, |s| s.0), n);
+        for &(world, through) in schedule {
+            assert!(n % world == 0, "world must divide n");
+            while model.step < through {
+                ws.ensure(world, n);
+                model.step_inprocess(&mut ws);
+            }
+        }
+        model
+    }
+
+    /// The full state tuple as bit patterns (for exact comparisons).
+    pub fn bits(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>, u32, u32) {
+        let b = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        (b(&self.p), b(&self.m), b(&self.v), self.step, self.counter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::memcpy::PIPELINE_BLOCK;
+
+    #[test]
+    fn reference_is_deterministic_and_seed_sensitive() {
+        let n = 48; // small: divisible by OPT_WORLD and worlds 1/2/4
+        let a = SyntheticModel::run_reference(n, 7, &[(2, 3)]);
+        let b = SyntheticModel::run_reference(n, 7, &[(2, 3)]);
+        assert_eq!(a.bits(), b.bits());
+        assert_eq!(a.step, 3);
+        assert_eq!(a.counter, 1 + 3 * 48 * 3);
+        let c = SyntheticModel::run_reference(n, 8, &[(2, 3)]);
+        assert_ne!(a.bits(), c.bits(), "seed must reach the numbers");
+    }
+
+    #[test]
+    fn grads_are_pure_functions_of_slot_and_step() {
+        let model = SyntheticModel::new(24, 3);
+        let mut g1 = vec![0f32; 24];
+        let mut g2 = vec![0f32; 24];
+        model.fill_grad(1, 5, &mut g1);
+        model.fill_grad(1, 5, &mut g2);
+        assert_eq!(g1, g2);
+        model.fill_grad(2, 5, &mut g2);
+        assert_ne!(g1, g2);
+        model.fill_grad(1, 6, &mut g2);
+        assert_ne!(g1, g2);
+    }
+
+    #[test]
+    fn default_n_geometry() {
+        assert_eq!(DEFAULT_N % OPT_WORLD, 0);
+        for world in [1usize, 2, 3, 4, 6, 12] {
+            assert_eq!(DEFAULT_N % world, 0, "world {world}");
+        }
+        assert_ne!(DEFAULT_N % PIPELINE_BLOCK, 0, "must stay block-unaligned");
+    }
+}

@@ -73,6 +73,18 @@ use crate::util::par;
 /// not a footgun).
 pub const MAX_STREAMS: usize = 64;
 
+/// Process-wide count of completed stream ops, ever-increasing across
+/// scopes. The `comm` rank heartbeat reports this as its liveness
+/// progress signal: a rank whose watchdog is wedged stops advancing it,
+/// which the coordinator sees long before the rank misses a heartbeat.
+static PROGRESS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total stream ops completed by this process so far (monotonic; the
+/// heartbeat progress signal).
+pub fn progress() -> u64 {
+    PROGRESS.load(Ordering::Relaxed)
+}
+
 thread_local! {
     static STREAMS_OVERRIDE: Cell<usize> = const { Cell::new(0) };
     // 0 = follow env, 1 = force serial, 2 = force async
@@ -432,6 +444,7 @@ impl Shared {
         *self.statuses[stream].running.lock().unwrap() = None;
         let depth = self.statuses[stream].depth();
         self.statuses[stream].completed.fetch_add(1, Ordering::Relaxed);
+        PROGRESS.fetch_add(1, Ordering::Relaxed);
         res.map_err(|p| wrap_op_panic(p, stream, label, depth))
     }
 }

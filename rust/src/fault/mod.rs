@@ -26,14 +26,25 @@
 //! ```
 //!
 //! with `<kind>` one of `crash`, `stall`, `slow-collective`, `io-error`,
-//! `corrupt-checkpoint`. Examples:
+//! `corrupt-checkpoint`, `rank-kill`, `partition`. Examples:
 //!
 //! ```text
 //! LLMQ_FAULT=rank1:step3:crash                    # rank 1 dies at step 3, once
 //! LLMQ_FAULT=rank0:step2:stall                    # stream op stalls (watchdog test)
 //! LLMQ_FAULT=rank0:step2:corrupt-checkpoint;rank1:step3:crash
 //! LLMQ_FAULT=prob:p0.01:seed7:crash               # 1% per (rank, step), seeded
+//! LLMQ_FAULT=rank2:step3:rank-kill                # whole rank *process* aborts
+//! LLMQ_FAULT=rank1:step2:partition:beats5         # drop 5 control-plane heartbeats
 //! ```
+//!
+//! The last two are the multi-process (`comm`) failure kinds:
+//! `rank-kill` calls `std::process::abort()` at the step site — only
+//! meaningful inside a spawned rank process, where the coordinator sees
+//! the death and drives recovery — and `partition` takes the rank's NIC
+//! dark for its next `beats<N>` (default 3) heartbeat intervals:
+//! heartbeat sends are dropped and a `comm` rank holds data-plane
+//! progress until it heals, the missed-heartbeat / false-death test
+//! vector.
 //!
 //! # Determinism
 //!
@@ -85,7 +96,22 @@ pub enum FaultKind {
     /// The checkpoint save silently writes a bit-flipped file — the
     /// CRC-at-load / fall-back-a-generation test vector.
     CorruptCheckpoint,
+    /// The whole rank *process* aborts (`std::process::abort()`) at the
+    /// step site — the multi-process model of a hard rank death (OOM
+    /// kill, driver reset). Only meaningful inside a spawned `comm`
+    /// rank, where the coordinator observes the exit and recovers.
+    RankKill,
+    /// The rank's NIC goes dark: the next `beats` heartbeat sends are
+    /// dropped, and a multi-process `comm` rank also holds data-plane
+    /// progress until the partition heals (the process itself stays
+    /// alive) — the missed-heartbeat liveness / epoch-fencing test
+    /// vector.
+    Partition,
 }
+
+/// Heartbeats a `partition` fault drops when the spec gives no
+/// `beats<N>` flag.
+pub const DEFAULT_PARTITION_BEATS: u32 = 3;
 
 impl FaultKind {
     /// Spec-grammar name of the kind.
@@ -96,6 +122,8 @@ impl FaultKind {
             FaultKind::SlowCollective => "slow-collective",
             FaultKind::IoError => "io-error",
             FaultKind::CorruptCheckpoint => "corrupt-checkpoint",
+            FaultKind::RankKill => "rank-kill",
+            FaultKind::Partition => "partition",
         }
     }
 
@@ -106,9 +134,11 @@ impl FaultKind {
             "slow-collective" => FaultKind::SlowCollective,
             "io-error" => FaultKind::IoError,
             "corrupt-checkpoint" => FaultKind::CorruptCheckpoint,
+            "rank-kill" => FaultKind::RankKill,
+            "partition" => FaultKind::Partition,
             other => bail!(
                 "unknown fault kind {other:?} (expected crash|stall|\
-                 slow-collective|io-error|corrupt-checkpoint)"
+                 slow-collective|io-error|corrupt-checkpoint|rank-kill|partition)"
             ),
         })
     }
@@ -116,9 +146,10 @@ impl FaultKind {
     /// The site this kind fires at unless the spec overrides it.
     fn default_site(self) -> Site {
         match self {
-            FaultKind::Crash => Site::Step,
+            FaultKind::Crash | FaultKind::RankKill => Site::Step,
             FaultKind::Stall | FaultKind::SlowCollective => Site::Exec,
             FaultKind::IoError | FaultKind::CorruptCheckpoint => Site::Checkpoint,
+            FaultKind::Partition => Site::Control,
         }
     }
 }
@@ -135,6 +166,8 @@ pub enum Site {
     Collective,
     /// The checkpoint save path.
     Checkpoint,
+    /// The `comm` control plane (a rank's heartbeat-send loop).
+    Control,
 }
 
 /// When a fault fires.
@@ -170,6 +203,9 @@ pub struct FaultSpec {
     /// Sticky faults re-fire on retry (a permanently dead rank) until
     /// the plane is disarmed by a world shrink.
     pub sticky: bool,
+    /// Heartbeats dropped per firing (`partition` only; `beats<N>`
+    /// flag, default [`DEFAULT_PARTITION_BEATS`]).
+    pub beats: u32,
 }
 
 impl FaultSpec {
@@ -209,6 +245,7 @@ impl FaultSpec {
             trigger,
             site: kind.default_site(),
             sticky: false,
+            beats: DEFAULT_PARTITION_BEATS,
         };
         for flag in &toks[kind_idx + 1..] {
             match *flag {
@@ -216,7 +253,24 @@ impl FaultSpec {
                 "exec" => spec.site = Site::Exec,
                 "collective" => spec.site = Site::Collective,
                 "step" => spec.site = Site::Step,
-                other => bail!("fault spec {s:?}: unknown flag {other:?}"),
+                "control" => spec.site = Site::Control,
+                other => {
+                    if let Some(beats) = other.strip_prefix("beats") {
+                        anyhow::ensure!(
+                            kind == FaultKind::Partition,
+                            "fault spec {s:?}: beats flag only applies to partition"
+                        );
+                        spec.beats = beats.parse().map_err(|_| {
+                            anyhow::anyhow!("fault spec {s:?}: bad beats count {beats:?}")
+                        })?;
+                        anyhow::ensure!(
+                            spec.beats >= 1,
+                            "fault spec {s:?}: beats must be at least 1"
+                        );
+                    } else {
+                        bail!("fault spec {s:?}: unknown flag {other:?}");
+                    }
+                }
             }
         }
         Ok(spec)
@@ -245,7 +299,11 @@ impl FaultSpec {
                 Site::Exec => ":exec",
                 Site::Collective => ":collective",
                 Site::Checkpoint => ":checkpoint",
+                Site::Control => ":control",
             });
+        }
+        if self.kind == FaultKind::Partition && self.beats != DEFAULT_PARTITION_BEATS {
+            out.push_str(&format!(":beats{}", self.beats));
         }
         if self.sticky {
             out.push_str(":sticky");
@@ -264,6 +322,7 @@ pub struct FaultPlane {
     armed: AtomicBool,
     cancel: AtomicBool,
     fired: Mutex<HashSet<(usize, u32, u32)>>,
+    partition_left: AtomicU32,
     log: Mutex<Vec<String>>,
 }
 
@@ -276,6 +335,7 @@ impl FaultPlane {
             armed: AtomicBool::new(true),
             cancel: AtomicBool::new(false),
             fired: Mutex::new(HashSet::new()),
+            partition_left: AtomicU32::new(0),
             log: Mutex::new(Vec::new()),
         })
     }
@@ -369,15 +429,71 @@ impl FaultPlane {
 
     /// Rank/step injection site — call once per rank at the top of a
     /// training step. A matched `crash` panics (the in-process model of
-    /// a rank death the supervisor must catch).
+    /// a rank death the supervisor must catch); a matched `rank-kill`
+    /// aborts the whole process (the multi-process model — the `comm`
+    /// coordinator sees the child exit and recovers).
     pub fn step_site(&self, rank: usize, step: u32) {
         for (idx, spec) in self.specs.iter().enumerate() {
-            if spec.kind == FaultKind::Crash && self.should_fire(idx, Site::Step, rank as u32, step)
-            {
-                self.log_fire(spec, Site::Step, rank as u32, step, "rank panic");
-                panic!("llmq fault: injected crash — rank {rank} died at step {step}");
+            match spec.kind {
+                FaultKind::Crash => {
+                    if self.should_fire(idx, Site::Step, rank as u32, step) {
+                        self.log_fire(spec, Site::Step, rank as u32, step, "rank panic");
+                        panic!("llmq fault: injected crash — rank {rank} died at step {step}");
+                    }
+                }
+                FaultKind::RankKill => {
+                    if self.should_fire(idx, Site::Step, rank as u32, step) {
+                        self.log_fire(spec, Site::Step, rank as u32, step, "process abort");
+                        std::process::abort();
+                    }
+                }
+                _ => {}
             }
         }
+    }
+
+    /// Control-plane injection site — the `comm` rank's heartbeat loop
+    /// calls this once per beat it is about to send. Returns `true`
+    /// when the beat must be dropped: a matched `partition` arms a
+    /// countdown of `spec.beats` beats, and each subsequent call
+    /// consumes one until the partition heals.
+    pub fn control_site(&self, rank: u32) -> bool {
+        let step = self.step();
+        for (idx, spec) in self.specs.iter().enumerate() {
+            if spec.kind == FaultKind::Partition
+                && self.should_fire(idx, Site::Control, rank, step)
+            {
+                self.partition_left.fetch_add(spec.beats, Ordering::AcqRel);
+                self.log_fire(
+                    spec,
+                    Site::Control,
+                    rank,
+                    step,
+                    &format!("dropping next {} heartbeats", spec.beats),
+                );
+            }
+        }
+        let mut left = self.partition_left.load(Ordering::Acquire);
+        while left > 0 {
+            match self.partition_left.compare_exchange(
+                left,
+                left - 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(now) => left = now,
+            }
+        }
+        false
+    }
+
+    /// Is an armed partition still dropping beats? A multi-process
+    /// `comm` rank polls this to hold data-plane progress while its NIC
+    /// is dark (the beat countdown itself is consumed by
+    /// [`FaultPlane::control_site`], one per would-be heartbeat).
+    pub fn partition_active(&self) -> bool {
+        self.partition_left.load(Ordering::Acquire) > 0
     }
 
     /// Exec op-dispatch injection site — called by the stream worker
@@ -595,6 +711,21 @@ pub fn collective_site() {
     }
 }
 
+/// Convenience: fire the control-plane site against the active plane.
+/// Returns `true` when the heartbeat about to be sent must be dropped.
+pub fn control_site(rank: u32) -> bool {
+    match current() {
+        Some(p) => p.control_site(rank),
+        None => false,
+    }
+}
+
+/// Convenience: is an armed partition still in effect on the active
+/// plane?
+pub fn partition_active() -> bool {
+    current().map_or(false, |p| p.partition_active())
+}
+
 /// Convenience: fire the checkpoint-save site over `bytes`.
 pub fn checkpoint_site(bytes: &mut [u8], step: u32) -> Result<()> {
     match current() {
@@ -626,6 +757,11 @@ mod tests {
             "rank1:step3:crash:sticky",
             "rank1:step3:crash:exec",
             "prob:p0.01:seed7:crash",
+            "rank2:step3:rank-kill",
+            "rank1:step2:partition",
+            "rank1:step2:partition:beats5",
+            "rank1:step2:partition:beats5:sticky",
+            "prob:p0.05:seed3:partition",
         ] {
             let spec = FaultSpec::parse(s).unwrap();
             assert_eq!(spec.render(), s, "roundtrip of {s:?}");
@@ -647,9 +783,55 @@ mod tests {
             "prob:p2.0:seed1:crash",
             "prob:p0.1:seedx:crash",
             "rank1:step3:crash:loud",
+            "rank1:step3:partition:beatsx",
+            "rank1:step3:partition:beats0",
+            "rank1:step3:crash:beats2",
         ] {
             assert!(FaultSpec::parse(s).is_err(), "{s:?} should not parse");
         }
+    }
+
+    #[test]
+    fn rank_kill_and_partition_defaults() {
+        let kill = FaultSpec::parse("rank2:step3:rank-kill").unwrap();
+        assert_eq!(kill.kind, FaultKind::RankKill);
+        assert_eq!(kill.site, Site::Step);
+        let part = FaultSpec::parse("rank1:step2:partition").unwrap();
+        assert_eq!(part.kind, FaultKind::Partition);
+        assert_eq!(part.site, Site::Control);
+        assert_eq!(part.beats, DEFAULT_PARTITION_BEATS);
+        assert_eq!(FaultSpec::parse("rank1:step2:partition:beats7").unwrap().beats, 7);
+    }
+
+    #[test]
+    fn partition_drops_exactly_beats_heartbeats_then_heals() {
+        let plane =
+            FaultPlane::new(FaultSpec::parse_program("rank1:step2:partition:beats3").unwrap());
+        plane.set_step(1);
+        assert!(!plane.control_site(1), "wrong step: no drop");
+        plane.set_step(2);
+        assert!(!plane.control_site(0), "wrong rank: no drop");
+        for beat in 0..3 {
+            assert!(plane.control_site(1), "beat {beat} must be dropped");
+        }
+        // healed: fire-once bookkeeping keeps the same (rank, step) from
+        // re-arming, so heartbeats flow again
+        assert!(!plane.control_site(1));
+        plane.set_step(3);
+        assert!(!plane.control_site(1));
+        assert_eq!(plane.injections().len(), 1);
+    }
+
+    // `rank-kill` firing is deliberately untested in-process (it would
+    // abort the test binary); `tests/multiproc.rs` covers it end to end
+    // in a spawned rank. Here we only pin that it does NOT fire for a
+    // non-matching site.
+    #[test]
+    fn rank_kill_does_not_fire_off_target() {
+        let plane = FaultPlane::new(FaultSpec::parse_program("rank1:step3:rank-kill").unwrap());
+        plane.step_site(0, 3);
+        plane.step_site(1, 2);
+        assert!(plane.injections().is_empty());
     }
 
     #[test]

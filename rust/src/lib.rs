@@ -21,6 +21,7 @@
 
 pub mod baselines;
 pub mod collectives;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

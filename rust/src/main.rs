@@ -22,6 +22,9 @@ USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
   train     --preset tiny|small|e2e --dtype bf16|fp8|fp8_e5m2 --steps N
             --grad-accum N --world N --lr F --seed N --data synth|gsm
             --eval-every N --log FILE --save FILE --resume FILE
+            --distributed W (multi-process rank runtime: spawns W rank
+            processes under a heartbeat coordinator; --ckpt-dir,
+            --retries, --no-shrink as under --supervise)
   plan      --model 0.5B..32B|all --gpu NAME --gpus N --dtype D
   simulate  --model NAME --gpu NAME --gpus N --dtype D --comm nccl|gather|scatter|full
             --micro-batch N --step-tokens N
@@ -62,6 +65,9 @@ fn run(args: Args) -> Result<()> {
             Ok(())
         }
         Some("train") => llmq::train::run_cli(&artifacts, &args),
+        // Hidden: one rank process of a `--distributed` run (spawned by
+        // the coordinator, never by hand).
+        Some("_rank") => llmq::comm::run_rank_cli(&args),
         Some("plan") => llmq::coordinator::run_plan_cli(&args),
         Some("simulate") => llmq::sim::run_sim_cli(&args),
         _ => {

@@ -82,15 +82,16 @@ pub struct HostStep {
 
 impl HostStep {
     /// The per-element gradient scale (reciprocal microbatch count).
-    fn grad_scale(&self) -> f32 {
+    pub fn grad_scale(&self) -> f32 {
         1.0 / self.n_micro.max(1) as f32
     }
 
     /// Clip scale + backend AdamW spec for a measured pre-clip `norm` —
     /// the single derivation of the numerics-critical clip rule, shared
-    /// by the sync phase 3 and the async norm-fold op so the two paths
-    /// cannot diverge.
-    fn update_spec(&self, norm: f32, shard: u32) -> AdamWSpec {
+    /// by the sync phase 3, the async norm-fold op, and the
+    /// multi-process rank step (`comm`), so the paths cannot diverge.
+    /// `shard` is the ZeRO-1 moment-stream stride (`n / opt_world`).
+    pub fn update_spec(&self, norm: f32, shard: u32) -> AdamWSpec {
         let clip_scale = if norm > self.grad_clip && norm > 0.0 {
             Some(self.grad_clip / norm)
         } else {

@@ -35,10 +35,21 @@ use crate::util::Args;
 /// rank death / stalls recover from the newest checkpoint generation in
 /// `--ckpt-dir`, and exhausted retries shrink the world (unless
 /// `--no-shrink`). `LLMQ_WATCHDOG_MS` bounds stall detection either way.
+///
+/// `--distributed W` instead hands the run to the multi-process rank
+/// runtime ([`crate::comm`]): W spawned rank processes under a
+/// heartbeat coordinator, with the same recovery semantics across real
+/// process boundaries.
 pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
     // A mistyped LLMQ_FAULT program must fail the run loudly, before any
     // work happens — not silently inject nothing.
     crate::fault::validate_env()?;
+    // Multi-process mode hands the whole run to the comm coordinator
+    // (which spawns one OS process per rank); no trainer runs in this
+    // process.
+    if args.u32("distributed", 0)? > 0 {
+        return crate::comm::run_distributed_cli(args);
+    }
     let cfg = TrainConfig {
         dtype: Dtype::parse(&args.str("dtype", "fp8")?)?,
         grad_accum: args.usize("grad-accum", 2)?,

@@ -26,6 +26,7 @@ use anyhow::Result;
 use super::checkpoint;
 use super::trainer::Trainer;
 use crate::data::{Batch, ByteTokenizer, PackedDataset};
+use crate::util::Json;
 
 /// A workload the supervisor can drive: stepped, checkpointable, and
 /// reshardable. [`TrainerWorkload`] adapts [`Trainer`]; tests implement
@@ -167,7 +168,87 @@ pub enum Event {
 }
 
 impl Event {
-    /// One-line rendering for the event log.
+    /// The event's machine-readable kind tag (the `"kind"` member of
+    /// [`Event::to_json`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Start { .. } => "start",
+            Event::StepOk { .. } => "step-ok",
+            Event::Checkpointed { .. } => "checkpointed",
+            Event::CheckpointFailed { .. } => "checkpoint-failed",
+            Event::RankFailure { .. } => "rank-failure",
+            Event::CheckpointRejected { .. } => "checkpoint-rejected",
+            Event::Recovered { .. } => "recovered",
+            Event::WorldShrunk { .. } => "world-shrunk",
+            Event::GaveUp { .. } => "gave-up",
+            Event::Done { .. } => "done",
+        }
+    }
+
+    /// The event as a JSON object (`{"kind": ..., ...fields}`) — one of
+    /// these per line is the event-log wire format chaos CI parses.
+    pub fn to_json(&self) -> Json {
+        let num = |x: u32| Json::Num(f64::from(x));
+        let unum = |x: usize| Json::Num(x as f64);
+        let path_str = |p: &PathBuf| Json::Str(p.display().to_string());
+        let kind = Json::Str(self.kind().to_string());
+        match self {
+            Event::Start { step, world } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("world", unum(*world)),
+            ]),
+            Event::StepOk { step } => Json::obj([("kind", kind), ("step", num(*step))]),
+            Event::Checkpointed { step, path } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("path", path_str(path)),
+            ]),
+            Event::CheckpointFailed { step, reason } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Event::RankFailure {
+                step,
+                attempt,
+                reason,
+            } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("attempt", num(*attempt)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Event::CheckpointRejected { path, reason } => Json::obj([
+                ("kind", kind),
+                ("path", path_str(path)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Event::Recovered { from_step, path } => Json::obj([
+                ("kind", kind),
+                ("from_step", num(*from_step)),
+                ("path", path_str(path)),
+            ]),
+            Event::WorldShrunk { from, to } => Json::obj([
+                ("kind", kind),
+                ("from", unum(*from)),
+                ("to", unum(*to)),
+            ]),
+            Event::GaveUp { step, reason } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Event::Done { step, world } => Json::obj([
+                ("kind", kind),
+                ("step", num(*step)),
+                ("world", unum(*world)),
+            ]),
+        }
+    }
+
+    /// One-line human rendering (the `render_events` log is the JSON
+    /// form; this stays for error messages and test output).
     pub fn render(&self) -> String {
         match self {
             Event::Start { step, world } => format!("start step={step} world={world}"),
@@ -196,22 +277,29 @@ impl Event {
     }
 }
 
-/// Render the event log one line per event (newline-terminated).
+/// Render the event log as line-delimited JSON: one
+/// [`Event::to_json`] object per line (newline-terminated), so chaos CI
+/// can parse outcomes instead of scraping text.
 pub fn render_events(events: &[Event]) -> String {
     let mut s = String::new();
     for e in events {
-        s.push_str(&e.render());
+        s.push_str(&e.to_json().render());
         s.push('\n');
     }
     s
 }
 
-/// Write the rendered event log to `path` (parents created).
+/// Write the JSON-lines event log to `path` (parents created),
+/// crash-safely: the log lands via temp+rename like
+/// [`checkpoint::save_atomic`], so a crash mid-write leaves either the
+/// previous complete log or the new complete log — never a torn one.
 pub fn write_event_log(path: &Path, events: &[Event]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, render_events(events))?;
+    let tmp = path.with_extension("log.tmp");
+    std::fs::write(&tmp, render_events(events))?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -704,19 +792,44 @@ mod tests {
     }
 
     #[test]
-    fn event_log_renders_and_writes() {
+    fn event_log_is_parseable_json_lines_and_written_atomically() {
         let dir = tmp_dir("log");
         let mut w = Scripted::new(1);
         w.fail_at.push((2, AtomicU32::new(1)));
         let report = Supervisor::new(cfg(dir.clone())).run(&mut w, 3);
         let text = render_events(&report.events);
-        assert!(text.contains("start step=0 world=1"));
-        assert!(text.contains("rank-failure step=2 attempt=1"));
-        assert!(text.contains("scripted rank death"));
-        assert!(text.contains("done step=3 world=1"));
+
+        // Every line parses as a JSON object with a "kind" tag.
+        let lines: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).expect("event line must be valid JSON"))
+            .collect();
+        assert_eq!(lines.len(), report.events.len());
+        let kind = |j: &Json| j.get("kind").unwrap().str().unwrap().to_string();
+        assert_eq!(kind(&lines[0]), "start");
+        assert_eq!(lines[0].get("step").unwrap().usize().unwrap(), 0);
+        assert_eq!(lines[0].get("world").unwrap().usize().unwrap(), 1);
+        let fail = lines
+            .iter()
+            .find(|j| kind(j) == "rank-failure")
+            .expect("a rank-failure event");
+        assert_eq!(fail.get("step").unwrap().usize().unwrap(), 2);
+        assert_eq!(fail.get("attempt").unwrap().usize().unwrap(), 1);
+        assert!(fail
+            .get("reason")
+            .unwrap()
+            .str()
+            .unwrap()
+            .contains("scripted rank death"));
+        let done = lines.last().unwrap();
+        assert_eq!(kind(done), "done");
+        assert_eq!(done.get("step").unwrap().usize().unwrap(), 3);
+
+        // temp+rename write: final content matches, no .tmp left behind
         let log = dir.join("logs").join("events.log");
         write_event_log(&log, &report.events).unwrap();
         assert_eq!(std::fs::read_to_string(&log).unwrap(), text);
+        assert!(!log.with_extension("log.tmp").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -147,6 +147,16 @@ impl Args {
         }
     }
 
+    /// `u64` option with default.
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::invalid(key, v, "a 64-bit unsigned integer")),
+        }
+    }
+
     /// `f32` option with default.
     pub fn f32(&self, key: &str, default: f32) -> Result<f32, ArgError> {
         match self.value_of(key)? {

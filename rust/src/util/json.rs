@@ -1,6 +1,9 @@
-//! Minimal JSON reader (serde_json stand-in) — enough for the artifact
-//! manifests: objects, arrays, strings (with escapes), numbers, bools,
-//! null. Strict on structure, permissive on whitespace.
+//! Minimal JSON reader + writer (serde_json stand-in) — enough for the
+//! artifact manifests and the line-delimited event/control-plane
+//! formats: objects, arrays, strings (with escapes), numbers, bools,
+//! null. Strict on structure, permissive on whitespace. [`Json::render`]
+//! emits a compact canonical form (sorted object keys) so rendered
+//! documents are byte-stable across runs.
 
 use std::collections::HashMap;
 
@@ -83,6 +86,88 @@ impl Json {
             _ => bail!("not an array"),
         }
     }
+
+    /// Build an object from `(key, value)` pairs (later keys win).
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Render as compact JSON. Object keys are emitted in sorted order —
+    /// `HashMap` iteration order is nondeterministic, and the event-log
+    /// and wire-format consumers want byte-stable output. Integers that
+    /// fit f64 exactly print without a fractional part; non-finite
+    /// numbers (which JSON cannot carry) render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    e.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                out.push('{');
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    m[*k].render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -283,6 +368,44 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_and_is_canonical() {
+        let doc = r#"{"b": [1, 2.5, -3], "a": "x\n\"y\"", "z": {"k": true, "j": null}}"#;
+        let j = Json::parse(doc).unwrap();
+        let s = j.render();
+        // keys sorted, compact, integers without fraction
+        assert_eq!(
+            s,
+            r#"{"a":"x\n\"y\"","b":[1,2.5,-3],"z":{"j":null,"k":true}}"#
+        );
+        // stable fixed point: parse(render(x)) renders identically
+        assert_eq!(Json::parse(&s).unwrap().render(), s);
+    }
+
+    #[test]
+    fn render_escapes_control_chars() {
+        let j = Json::Str("a\u{1}b\tc".to_string());
+        assert_eq!(j.render(), "\"a\\u0001b\\tc\"");
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn render_large_and_nonfinite_numbers() {
+        assert_eq!(Json::Num(1.0e300).render(), "1e300");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(42.0).render(), "42");
+        assert_eq!(Json::Num(-0.5).render(), "-0.5");
+    }
+
+    #[test]
+    fn obj_builder() {
+        let j = Json::obj([
+            ("step", Json::Num(3.0)),
+            ("kind", Json::Str("hb".to_string())),
+        ]);
+        assert_eq!(j.render(), r#"{"kind":"hb","step":3}"#);
     }
 
     #[test]

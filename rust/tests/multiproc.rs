@@ -1,0 +1,301 @@
+//! Multi-process chaos tests for the elastic rank runtime (`comm`).
+//!
+//! These are the NUMERICS.md Rule 6 pins: the multi-process collectives
+//! must be bit-identical to the in-process memcpy oracles, and a world
+//! that loses a rank mid-step — a real `abort()`ed process, or a
+//! partitioned one declared dead by heartbeat timeout — must recover
+//! through the coordinator (restore newest restorable generation,
+//! respawn or reshard, resume) onto exactly the bits of the
+//! uninterrupted run.
+//!
+//! Every test writes its checkpoints, per-rank logs and coordinator
+//! events under `target/multiproc-logs/<test>/` so CI can upload the
+//! whole directory on failure.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Duration;
+
+use llmq::collectives::memcpy::reduce_chunk;
+use llmq::collectives::{reduce_scatter_scaled_memcpy, DeviceGroup};
+use llmq::comm::wire::FrameKind;
+use llmq::comm::workload::DEFAULT_N;
+use llmq::comm::{run_coordinator, CoordCfg, Mesh, SyntheticModel};
+use llmq::optim::fused::REDUCE_RNG_KEY;
+use llmq::precision::CounterRng;
+use llmq::train::checkpoint;
+
+fn logdir(test: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/multiproc-logs")
+        .join(test);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Load the sharded generation at `step` and require it to be bitwise
+/// identical to `want` (the in-process reference run).
+fn assert_generation_matches(dir: &Path, step: u32, n: usize, want: &SyntheticModel) {
+    let (mut p, mut m, mut v) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+    let (got_step, got_counter, _world) =
+        checkpoint::load_sharded_into(dir, step, &mut p, &mut m, &mut v).unwrap();
+    let (wp, wm, wv, wstep, wcounter) = want.bits();
+    assert_eq!(got_step, step);
+    assert_eq!(wstep, step, "reference must be run to the compared step");
+    assert_eq!(got_counter, wcounter, "SR counter must replay exactly");
+    assert_eq!(bits(&p), wp, "params diverged");
+    assert_eq!(bits(&m), wm, "first moments diverged");
+    assert_eq!(bits(&v), wv, "second moments diverged");
+}
+
+// ---------------------------------------------------------------------------
+// Collectives parity: real sockets vs the in-process memcpy oracle
+// ---------------------------------------------------------------------------
+
+/// Run one distributed reduce-scatter + all-gather over a real TCP mesh
+/// (threads standing in for rank processes — the wire path is identical)
+/// and pin the gathered flat gradient bitwise to
+/// `reduce_scatter_scaled_memcpy`.
+fn mesh_matches_oracle(world: usize, n: usize) {
+    let seed = 11u32;
+    let step = 3u32;
+    let counter = 1u32.wrapping_add(3 * n as u32); // as if one step committed
+    let scale = 1.0 / (2 * world) as f32;
+    let model = SyntheticModel::new(n, seed);
+
+    // Oracle: the in-process reduce over all sources at once.
+    let group = DeviceGroup {
+        world,
+        buffers: (0..world)
+            .map(|r| {
+                let mut g = vec![0f32; n];
+                model.fill_grad(r, step, &mut g);
+                g
+            })
+            .collect(),
+    };
+    let mut want = vec![0f32; n];
+    let rng = CounterRng::new(REDUCE_RNG_KEY ^ seed);
+    reduce_scatter_scaled_memcpy(&group, &mut want, scale, &rng, counter);
+    let want_bits = bits(&want);
+
+    // Distributed: one thread per rank, full TCP mesh.
+    let listeners: Vec<TcpListener> = (0..world)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let ports: Vec<u16> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().port())
+        .collect();
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(r, listener)| {
+            let ports = ports.clone();
+            let model = model.clone();
+            std::thread::spawn(move || -> Vec<u32> {
+                let mesh = Mesh::connect(
+                    r as u32,
+                    world as u32,
+                    1,
+                    &listener,
+                    &ports,
+                    Duration::from_secs(20),
+                )
+                .unwrap();
+                let chunk = n / world;
+                let own = r * chunk..(r + 1) * chunk;
+                let mut local = vec![0f32; n];
+                model.fill_grad(r, step, &mut local);
+                let mut recv = vec![Vec::new(); world];
+                mesh.exchange_grad_slices(step, &local, &mut recv).unwrap();
+                let mut flat = vec![0f32; n];
+                let srcs: Vec<&[f32]> = (0..world)
+                    .map(|q| {
+                        if q == r {
+                            &local[own.clone()]
+                        } else {
+                            recv[q].as_slice()
+                        }
+                    })
+                    .collect();
+                let rng = CounterRng::new(REDUCE_RNG_KEY ^ seed);
+                reduce_chunk(
+                    &srcs,
+                    0,
+                    &mut flat[own.clone()],
+                    Some(scale),
+                    &rng,
+                    counter.wrapping_add(own.start as u32),
+                );
+                mesh.all_gather_chunks(step, FrameKind::Reduced, &mut flat)
+                    .unwrap();
+                bits(&flat)
+            })
+        })
+        .collect();
+    for (r, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("rank thread panicked");
+        assert_eq!(got, want_bits, "rank {r} flat gradient diverged from oracle");
+    }
+}
+
+#[test]
+fn mesh_collectives_match_memcpy_oracle_world2() {
+    mesh_matches_oracle(2, DEFAULT_N);
+}
+
+#[test]
+fn mesh_collectives_match_memcpy_oracle_world4() {
+    mesh_matches_oracle(4, DEFAULT_N);
+}
+
+#[test]
+fn mesh_collectives_match_memcpy_oracle_unaligned_small() {
+    // One PIPELINE_BLOCK plus a ragged tail, per-rank chunks unaligned.
+    mesh_matches_oracle(2, 8 * 1024 + 4);
+    mesh_matches_oracle(4, 8 * 1024 + 4);
+}
+
+// ---------------------------------------------------------------------------
+// Crash recovery across real process boundaries
+// ---------------------------------------------------------------------------
+
+fn base_cfg(dir: &Path) -> CoordCfg {
+    CoordCfg {
+        exe: PathBuf::from(env!("CARGO_BIN_EXE_llmq")),
+        world: 4,
+        n: DEFAULT_N,
+        seed: 5,
+        target_step: 6,
+        ckpt_every: 1,
+        keep_last: 4,
+        ckpt_dir: dir.to_path_buf(),
+        max_respawns: 2,
+        allow_shrink: true,
+        hb_interval_ms: 50,
+        hb_timeout_ms: 2000,
+        data_timeout_ms: 10_000,
+        epoch_timeout_ms: 60_000,
+        fault: None,
+    }
+}
+
+#[test]
+fn world4_rank_kill_recovers_bitwise_via_respawn() {
+    let dir = logdir("rank-kill-respawn");
+    let cfg = CoordCfg {
+        fault: Some("rank2:step4:rank-kill".into()),
+        ..base_cfg(&dir)
+    };
+    let (n, seed, target) = (cfg.n, cfg.seed, cfg.target_step);
+    let report = run_coordinator(cfg).unwrap();
+    assert!(report.ok(), "run failed: {:?}", report.error);
+    assert_eq!(report.final_step, target);
+    assert_eq!(report.final_world, 4, "respawn must keep the world");
+    assert_eq!(report.respawns, 1);
+    assert_eq!(report.shrinks, 0);
+    assert!(report.epochs >= 2, "the kill must have cost an epoch");
+
+    // Rule 6: recovered ≡ uninterrupted, across the process boundary.
+    let want = SyntheticModel::run_reference(n, seed, &[(4, target)]);
+    assert_generation_matches(&dir, target, n, &want);
+
+    let events = std::fs::read_to_string(dir.join("coordinator-events.log")).unwrap();
+    assert!(events.contains("\"kind\":\"rank-dead\""), "{events}");
+    assert!(events.contains("\"rank\":2"), "{events}");
+    assert!(events.contains("\"kind\":\"done\""), "{events}");
+}
+
+#[test]
+fn world4_rank_kill_reshards_to_world3_bitwise() {
+    let dir = logdir("rank-kill-shrink");
+    let cfg = CoordCfg {
+        fault: Some("rank2:step4:rank-kill".into()),
+        max_respawns: 0, // no respawn budget: the failure must shed a rank
+        ckpt_every: 2,   // generations at steps 2, 4, 6 — restore lands on 2
+        ..base_cfg(&dir)
+    };
+    let (n, seed, target) = (cfg.n, cfg.seed, cfg.target_step);
+    let report = run_coordinator(cfg).unwrap();
+    assert!(report.ok(), "run failed: {:?}", report.error);
+    assert_eq!(report.final_step, target);
+    assert_eq!(report.final_world, 3, "W→W−1 reshard");
+    assert_eq!(report.respawns, 0);
+    assert_eq!(report.shrinks, 1);
+
+    // The kill fires entering step 4, so steps 1–3 ran at world 4 and
+    // only the step-2 generation is durable: the resharded run replays
+    // steps 3–6 at world 3. Rule 6 again: identical to an in-process
+    // run with the same W→W−1 schedule.
+    let want = SyntheticModel::run_reference(n, seed, &[(4, 2), (3, target)]);
+    assert_generation_matches(&dir, target, n, &want);
+
+    let events = std::fs::read_to_string(dir.join("coordinator-events.log")).unwrap();
+    assert!(events.contains("\"kind\":\"shrink\""), "{events}");
+    assert!(events.contains("\"restore\":2"), "{events}");
+}
+
+#[test]
+fn world4_partition_is_declared_dead_and_recovers_bitwise() {
+    let dir = logdir("partition");
+    let cfg = CoordCfg {
+        // Drop 20 consecutive beats at 25ms spacing: a 500ms silence
+        // against a 250ms timeout — decisively dead, 10× the normal
+        // inter-beat gap so a healthy rank can't trip it.
+        fault: Some("rank1:step3:partition:beats20".into()),
+        hb_interval_ms: 25,
+        hb_timeout_ms: 250,
+        max_respawns: 1,
+        ..base_cfg(&dir)
+    };
+    let (n, seed, target) = (cfg.n, cfg.seed, cfg.target_step);
+    let report = run_coordinator(cfg).unwrap();
+    assert!(report.ok(), "run failed: {:?}", report.error);
+    assert_eq!(report.final_step, target);
+    assert_eq!(report.final_world, 4);
+    assert_eq!(report.respawns, 1, "partition must cost exactly one epoch");
+
+    // The partitioned process was *alive* — only silent. It must still
+    // have been declared dead, killed, and the run must land on the
+    // uninterrupted bits no matter which generation the restore used.
+    let want = SyntheticModel::run_reference(n, seed, &[(4, target)]);
+    assert_generation_matches(&dir, target, n, &want);
+
+    let events = std::fs::read_to_string(dir.join("coordinator-events.log")).unwrap();
+    assert!(events.contains("missed heartbeats"), "{events}");
+}
+
+#[test]
+fn distributed_cli_smoke_matches_reference() {
+    let dir = logdir("cli-smoke");
+    let (n, seed, target) = (DEFAULT_N, 9u32, 3u32);
+    let status = Command::new(env!("CARGO_BIN_EXE_llmq"))
+        .args([
+            "train",
+            "--distributed",
+            "2",
+            "--steps",
+            "3",
+            "--dist-n",
+            &n.to_string(),
+            "--seed",
+            &seed.to_string(),
+            "--ckpt-dir",
+            dir.to_str().unwrap(),
+            "--hb-timeout-ms",
+            "4000",
+        ])
+        .env_remove("LLMQ_FAULT")
+        .status()
+        .unwrap();
+    assert!(status.success(), "CLI run failed: {status}");
+    let want = SyntheticModel::run_reference(n, seed, &[(2, target)]);
+    assert_generation_matches(&dir, target, n, &want);
+}
