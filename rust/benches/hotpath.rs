@@ -13,7 +13,8 @@
 //! perf trajectory is comparable across PRs.
 
 use llmq::collectives::{DeviceGroup, memcpy::reduce_scatter_memcpy_serial, reduce_scatter_memcpy};
-use llmq::precision::{backend, bf16, CounterRng, E4M3, fp8};
+use llmq::optim::MomentsMode;
+use llmq::precision::{backend, bf16, mx, CounterRng, E4M3, fp8};
 use llmq::util::{par, Bencher};
 
 /// Which tier a benchmark closure should exercise.
@@ -109,12 +110,13 @@ fn repo_root_path(file: &str) -> String {
     file.to_string()
 }
 
-fn write_json(rows: &[Row], singles: &[(&str, f64)]) {
+fn write_json(rows: &[Row], singles: &[(&str, f64)], moments: MomentsMode) {
     let threads = par::num_threads();
     let mut s = String::from("{\n");
     s += &format!(
-        "  \"bench\": \"hotpath\",\n  {},\n",
-        llmq::util::bench::provenance_json()
+        "  \"bench\": \"hotpath\",\n  {},\n  \"moments\": \"{}\",\n",
+        llmq::util::bench::provenance_json(),
+        moments.label()
     );
     s += "  \"ops\": [\n";
     for (i, r) in rows.iter().enumerate() {
@@ -208,6 +210,48 @@ fn main() {
         },
     );
 
+    // --- MX/e2m1 block-scaled codec (the FP4 tier) ---------------------------
+    // The tensor wrappers allocate their outputs, so the rows include
+    // the allocation — that is what the offload/communication layers pay.
+    let mx_bytes_enc = (n * 5 + mx::blocks_of(n)) as f64; // 4B read + 1B code + scale/blk
+    duel(
+        &mut b,
+        &mut rows,
+        "mx e2m1 encode 4M (RNE, block-scaled)",
+        mx_bytes_enc,
+        true,
+        |e| match e {
+            Exec::Serial => mx::encode_tensor_serial(&base),
+            _ => mx::encode_tensor(&base),
+        },
+    );
+
+    duel(
+        &mut b,
+        &mut rows,
+        "mx e2m1 encode 4M (SR, block-scaled)",
+        mx_bytes_enc,
+        true,
+        |e| match e {
+            Exec::Serial => mx::encode_tensor_sr_serial(&base, &rng, 0),
+            _ => mx::encode_tensor_sr(&base, &rng, 0),
+        },
+    );
+
+    let (mx_scales, mx_codes) = mx::encode_tensor(&base);
+    let mut mx_out = vec![0f32; n];
+    duel(
+        &mut b,
+        &mut rows,
+        "mx e2m1 decode 4M",
+        mx_bytes_enc, // same traffic in the other direction
+        true,
+        |e| match e {
+            Exec::Serial => mx::decode_tensor_serial(&mx_scales, &mx_codes, &mut mx_out),
+            _ => mx::decode_tensor(&mx_scales, &mx_codes, &mut mx_out),
+        },
+    );
+
     // --- BF16 SR + accumulation ----------------------------------------------
     let mut y = base.clone();
     duel(
@@ -272,8 +316,14 @@ fn main() {
     );
 
     // --- host AdamW (offloaded-optimizer path) --------------------------------
+    // LLMQ_MOMENTS=fp8 benches the quantized-moment update (e5m2 m /
+    // bf16 v); the mode is stamped into the report's provenance.
+    let moments = match std::env::var("LLMQ_MOMENTS") {
+        Ok(s) => MomentsMode::parse(&s).expect("LLMQ_MOMENTS must be fp32|fp8"),
+        Err(_) => MomentsMode::Fp32,
+    };
     let hp = llmq::optim::AdamWParams::default();
-    let opt = llmq::optim::AdamW::new(hp);
+    let opt = llmq::optim::AdamW::new(hp).with_moments(moments);
     let mut p_ = base.clone();
     let mut m = vec![0f32; n];
     let mut v = vec![0f32; n];
@@ -328,5 +378,5 @@ fn main() {
         }
     });
 
-    write_json(&rows, &singles);
+    write_json(&rows, &singles, moments);
 }

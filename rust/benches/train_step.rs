@@ -10,7 +10,7 @@ use llmq::collectives::{
     all_gather_memcpy, reduce_scatter_memcpy, DeviceGroup,
 };
 use llmq::optim::fused::{self, HostStep};
-use llmq::optim::{AdamW, AdamWParams};
+use llmq::optim::{AdamW, AdamWParams, MomentsMode};
 use llmq::precision::{bf16, round_to_bf16, CounterRng};
 use llmq::shard::shard_range;
 use llmq::train::StepWorkspace;
@@ -51,10 +51,12 @@ fn repo_root_path(file: &str) -> String {
     file.to_string()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     n: usize,
     world: usize,
     n_micro: usize,
+    moments: MomentsMode,
     phases: &[Phase],
     ns_staged: f64,
     ns_fused: f64,
@@ -63,11 +65,13 @@ fn write_json(
     let mut s = String::from("{\n");
     s += &format!(
         "  \"bench\": \"train_step\",\n  \"projected\": false,\n  {},\n  \
+         \"moments\": \"{}\",\n  \
          \"staged_kernels\": \"scalar-serial oracle (since PR 4; earlier reports ran the \
          parallel dispatched kernels, so total.speedup is not comparable across that \
          boundary — the vectorization win alone is the per-phase simd_speedup)\",\n  \
          \"n\": {n},\n  \"world\": {world},\n  \"n_micro\": {n_micro},\n",
-        llmq::util::bench::provenance_json()
+        llmq::util::bench::provenance_json(),
+        moments.label()
     );
     s += "  \"phases\": [\n";
     for (i, p) in phases.iter().enumerate() {
@@ -121,6 +125,13 @@ fn main() {
     let n: usize = if small { 1 << 18 } else { 1 << 22 };
     let world = 4usize;
     let n_micro = 8usize;
+    // LLMQ_MOMENTS=fp8 benches the quantized-moment pipeline (e5m2 m /
+    // bf16 v); the mode is stamped into the report's provenance so
+    // figures from the two storage modes are never conflated.
+    let moments = match std::env::var("LLMQ_MOMENTS") {
+        Ok(s) => MomentsMode::parse(&s).expect("LLMQ_MOMENTS must be fp32|fp8"),
+        Err(_) => MomentsMode::Fp32,
+    };
     let hs = HostStep {
         hp: AdamWParams::default(),
         lr: 3e-4,
@@ -130,6 +141,7 @@ fn main() {
         seed: 0,
         n_micro,
         opt_world: world,
+        moments,
     };
     println!(
         "train_step: n={n} world={world} threads={} ({})\n",
@@ -226,7 +238,7 @@ fn main() {
     });
     record(&b, "staged", "norm", "staged: global norm (scalar kernel)", None, None);
 
-    let opt = AdamW::new(hs.hp);
+    let opt = AdamW::new(hs.hp).with_moments(hs.moments);
     let shard = n / hs.opt_world;
     let mut p = p0.clone();
     let mut m = vec![0f32; n];
@@ -369,5 +381,5 @@ fn main() {
         ns_fused / 1e6,
         ns_async / 1e6
     );
-    write_json(n, world, n_micro, &phases, ns_staged, ns_fused, ns_async);
+    write_json(n, world, n_micro, moments, &phases, ns_staged, ns_fused, ns_async);
 }

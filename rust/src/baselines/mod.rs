@@ -54,6 +54,7 @@ pub fn lf_config(m: &ModelPreset, node: &NodeTopology, step_tokens: usize) -> Op
         m,
         &node.gpu,
         false,
+        crate::optim::MomentsMode::Fp32,
         Recompute::Block,
         OffloadConfig::NONE,
         ShardConfig::zero1(world),
@@ -68,6 +69,7 @@ pub fn lf_config(m: &ModelPreset, node: &NodeTopology, step_tokens: usize) -> Op
             m,
             &node.gpu,
             false,
+            crate::optim::MomentsMode::Fp32,
             Recompute::Block,
             OffloadConfig::FULL,
             ShardConfig::full(world),

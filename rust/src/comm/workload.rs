@@ -6,7 +6,7 @@
 //! run has an exact in-process twin to pin against bitwise.
 
 use crate::optim::fused::{self, HostStep};
-use crate::optim::AdamWParams;
+use crate::optim::{AdamWParams, MomentsMode};
 use crate::precision::{round_to_bf16, CounterRng};
 use crate::train::StepWorkspace;
 
@@ -85,6 +85,7 @@ impl SyntheticModel {
             seed: self.seed,
             n_micro: 2 * world,
             opt_world: OPT_WORLD,
+            moments: MomentsMode::Fp32,
         }
     }
 

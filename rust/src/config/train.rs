@@ -69,6 +69,9 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     /// Global-norm clip threshold (0 disables).
     pub grad_clip: f32,
+    /// AdamW moment-storage grids (fp32/bf16 resident vs fp8/bf16 —
+    /// FP8-LM-style quantized optimizer state).
+    pub moments: crate::optim::MomentsMode,
     /// Run seed (keys every SR stream).
     pub seed: u32,
     /// Virtual devices (1 = single GPU; 4 = the paper's workstation).
@@ -93,6 +96,7 @@ impl Default for TrainConfig {
             eps: 1e-8,
             weight_decay: 0.1,
             grad_clip: 1.0,
+            moments: crate::optim::MomentsMode::Fp32,
             seed: 0,
             world: 1,
             eval_every: 25,

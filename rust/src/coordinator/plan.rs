@@ -6,6 +6,7 @@ use crate::config::ModelPreset;
 use crate::hw::{GpuSpec, NodeTopology};
 use crate::memory::{self, MemoryPlan, PlanInput};
 use crate::offload::{OffloadConfig, TransferMode};
+use crate::optim::MomentsMode;
 use crate::recompute::Recompute;
 use crate::shard::ShardConfig;
 use crate::sim::{simulate_step_with, CommBackend, Engine, StepConfig, StepResult};
@@ -24,6 +25,10 @@ pub struct ChosenConfig {
     pub offload: OffloadConfig,
     /// ZeRO sharding levels.
     pub shard: ShardConfig,
+    /// AdamW moment-storage mode (the precision axis: fp8/bf16 moments
+    /// shrink the moments class 4 → 3 B/param, letting configurations
+    /// fit that OOM under full-width moments).
+    pub moments: MomentsMode,
     /// Byte-level memory plan of the chosen point.
     pub plan: MemoryPlan,
 }
@@ -45,6 +50,7 @@ struct Candidate {
     shard: ShardConfig,
     offload: OffloadConfig,
     recompute: Recompute,
+    moments: MomentsMode,
     micro_batch: usize,
 }
 
@@ -59,43 +65,52 @@ fn enumerate_candidates(
     forced_micro: usize,
 ) -> Vec<Candidate> {
     let mut out = Vec::new();
-    for shard in ShardConfig::ladder(world) {
-        for offload in OffloadConfig::ladder() {
-            for rc in Recompute::ALL {
-                // Prune: if the batch-independent memory floor already
-                // exceeds the device budget, no micro-batch can fit —
-                // skip the point before sizing batches or simulating.
-                if !memory::device_floor_fits(m, gpu, fp8, rc, offload, shard) {
-                    continue;
-                }
-                let bmax = memory::planner::max_micro_batch(
-                    m, gpu, fp8, rc, offload, shard, host_mem_gib, 64,
-                );
-                if bmax == 0 {
-                    continue;
-                }
-                // Candidate micro-batches: the max and a couple below it
-                // (bigger isn't always faster once transfers are hidden).
-                let mut mbs = vec![bmax];
-                if bmax >= 2 {
-                    mbs.push(bmax / 2);
-                }
-                if bmax >= 4 {
-                    mbs.push(bmax / 4);
-                }
-                if forced_micro != 0 {
-                    if forced_micro > bmax {
+    // Precision axis outermost, full-width moments first: the simulator
+    // is moments-agnostic (quantization changes memory, not modeled
+    // time), so the strict-`>` argmax keeps the earlier — unquantized —
+    // candidate whenever both reach the same speed; quantized moments
+    // are chosen only where they buy a strictly faster point (a bigger
+    // batch, or fitting at all).
+    for moments in [MomentsMode::Fp32, MomentsMode::Fp8] {
+        for shard in ShardConfig::ladder(world) {
+            for offload in OffloadConfig::ladder() {
+                for rc in Recompute::ALL {
+                    // Prune: if the batch-independent memory floor already
+                    // exceeds the device budget, no micro-batch can fit —
+                    // skip the point before sizing batches or simulating.
+                    if !memory::device_floor_fits(m, gpu, fp8, moments, rc, offload, shard) {
                         continue;
                     }
-                    mbs = vec![forced_micro];
-                }
-                for mb in mbs {
-                    out.push(Candidate {
-                        shard,
-                        offload,
-                        recompute: rc,
-                        micro_batch: mb,
-                    });
+                    let bmax = memory::planner::max_micro_batch(
+                        m, gpu, fp8, moments, rc, offload, shard, host_mem_gib, 64,
+                    );
+                    if bmax == 0 {
+                        continue;
+                    }
+                    // Candidate micro-batches: the max and a couple below it
+                    // (bigger isn't always faster once transfers are hidden).
+                    let mut mbs = vec![bmax];
+                    if bmax >= 2 {
+                        mbs.push(bmax / 2);
+                    }
+                    if bmax >= 4 {
+                        mbs.push(bmax / 4);
+                    }
+                    if forced_micro != 0 {
+                        if forced_micro > bmax {
+                            continue;
+                        }
+                        mbs = vec![forced_micro];
+                    }
+                    for mb in mbs {
+                        out.push(Candidate {
+                            shard,
+                            offload,
+                            recompute: rc,
+                            moments,
+                            micro_batch: mb,
+                        });
+                    }
                 }
             }
         }
@@ -169,6 +184,7 @@ pub fn autoplan(
             model: m,
             gpu,
             fp8,
+            moments: c.moments,
             recompute: c.recompute,
             offload: c.offload,
             shard: c.shard,
@@ -183,6 +199,7 @@ pub fn autoplan(
             recompute: c.recompute,
             offload: c.offload,
             shard: c.shard,
+            moments: c.moments,
             plan,
         },
         r,
@@ -214,6 +231,9 @@ mod tests {
         let g = gpu_by_name("RTX 4090").unwrap();
         let (cfg, r) = autoplan(&m, &g, 1, true, 500_000, CommBackend::MemcpyFull, 0).unwrap();
         assert!(!cfg.offload.any(), "0.5B should not offload: {:?}", cfg.offload);
+        // and should not quantize moments: the tie-break prefers the
+        // earlier, full-width candidate when speed is equal
+        assert_eq!(cfg.moments, MomentsMode::Fp32);
         assert!(r.tokens_per_s > 10_000.0);
     }
 

@@ -21,6 +21,8 @@ USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
   selftest                   verify artifacts + runtime numerics
   train     --preset tiny|small|e2e --dtype bf16|fp8|fp8_e5m2 --steps N
             --grad-accum N --world N --lr F --seed N --data synth|gsm
+            --moments fp32|fp8 (AdamW moment storage: fp8 packs the first
+            moment on the e5m2 grid — 3 B/param at rest, v4 checkpoints)
             --eval-every N --log FILE --save FILE --resume FILE
             --distributed W (multi-process rank runtime: spawns W rank
             processes under a heartbeat coordinator; --ckpt-dir,

@@ -9,7 +9,7 @@
 
 pub mod planner;
 
-pub use planner::{device_floor_fits, plan, MemoryPlan, PlanInput};
+pub use planner::{device_floor_fits, moment_state_bytes_per_param, plan, MemoryPlan, PlanInput};
 
 /// Bytes per element of each storage class.
 pub const BYTES_BF16: f64 = 2.0;

@@ -2,10 +2,11 @@
 //! is not the point; matching the paper's fit/OOM boundaries is).
 
 
-use super::{BYTES_BF16, BYTES_FP8, RESERVE_BYTES};
+use super::{BYTES_BF16, BYTES_F32, BYTES_FP8, RESERVE_BYTES};
 use crate::config::ModelPreset;
 use crate::hw::{GpuSpec, GIB};
 use crate::offload::OffloadConfig;
+use crate::optim::MomentsMode;
 use crate::recompute::Recompute;
 use crate::shard::ShardConfig;
 
@@ -18,6 +19,10 @@ pub struct PlanInput<'a> {
     pub gpu: &'a GpuSpec,
     /// FP8 block-GEMMs enabled.
     pub fp8: bool,
+    /// AdamW moment-storage mode (the precision axis: under
+    /// [`MomentsMode::Fp8`] the first moment packs to 1-byte e5m2 codes,
+    /// shrinking the moments class wherever it is resident).
+    pub moments: MomentsMode,
     /// Activation recomputation level.
     pub recompute: Recompute,
     /// Host-offloaded tensor classes.
@@ -26,6 +31,20 @@ pub struct PlanInput<'a> {
     pub shard: ShardConfig,
     /// Micro-batch size (sequences of model.seq_len tokens).
     pub micro_batch: usize,
+}
+
+/// At-rest bytes per parameter of the trainer's AdamW moment state
+/// under a storage mode — the resident/checkpoint view the
+/// `StepWorkspace` budget sees, as opposed to the bf16 streaming format
+/// of [`plan`]'s offload pipeline. `Fp32` holds both moments in f32
+/// buffers (the v3 checkpoint body: 8 B/param of moments); `Fp8` packs
+/// the first moment to 1-byte e5m2 codes and the second to 2-byte bf16
+/// words (the v4 body: 3 B/param) — a 2.67× drop.
+pub fn moment_state_bytes_per_param(mode: MomentsMode) -> f64 {
+    match mode {
+        MomentsMode::Fp32 => 2.0 * BYTES_F32,
+        MomentsMode::Fp8 => BYTES_FP8 + BYTES_BF16,
+    }
 }
 
 /// Byte-level breakdown of a configuration's footprint.
@@ -105,8 +124,15 @@ pub fn plan(inp: &PlanInput, host_mem_gib: f64) -> MemoryPlan {
         master_total * inp.shard.opt_frac()
     };
 
-    // ---- optimizer moments m, v (bf16 each) ------------------------------
-    let moments_total = 2.0 * (trunk_params + head_params) * BYTES_BF16;
+    // ---- optimizer moments m, v ------------------------------------------
+    // bf16 each in the paper's streaming pipeline; under fp8 moment
+    // storage the first moment packs to 1-byte e5m2 codes (v stays
+    // bf16), so the class shrinks 4 → 3 B/param wherever it lives.
+    let m_bytes = match inp.moments {
+        MomentsMode::Fp32 => BYTES_BF16,
+        MomentsMode::Fp8 => BYTES_FP8,
+    };
+    let moments_total = (trunk_params + head_params) * (m_bytes + BYTES_BF16);
     p.dev_moments = if inp.offload.moments {
         0.0
     } else {
@@ -206,10 +232,12 @@ pub fn plan(inp: &PlanInput, host_mem_gib: f64) -> MemoryPlan {
 /// footprint is monotone in the micro-batch, so a floor above the
 /// device budget means *no* batch fits and the planner can prune the
 /// point before sizing batches or simulating it.
+#[allow(clippy::too_many_arguments)]
 pub fn device_floor_fits(
     model: &ModelPreset,
     gpu: &GpuSpec,
     fp8: bool,
+    moments: MomentsMode,
     recompute: Recompute,
     offload: OffloadConfig,
     shard: ShardConfig,
@@ -218,6 +246,7 @@ pub fn device_floor_fits(
         model,
         gpu,
         fp8,
+        moments,
         recompute,
         offload,
         shard,
@@ -229,10 +258,12 @@ pub fn device_floor_fits(
 }
 
 /// Largest micro-batch that fits (0 = nothing fits).
+#[allow(clippy::too_many_arguments)]
 pub fn max_micro_batch(
     model: &ModelPreset,
     gpu: &GpuSpec,
     fp8: bool,
+    moments: MomentsMode,
     recompute: Recompute,
     offload: OffloadConfig,
     shard: ShardConfig,
@@ -245,6 +276,7 @@ pub fn max_micro_batch(
             model,
             gpu,
             fp8,
+            moments,
             recompute,
             offload,
             shard,
@@ -279,6 +311,7 @@ mod tests {
             model,
             gpu,
             fp8,
+            moments: MomentsMode::Fp32,
             recompute: rc,
             offload: off,
             shard,
@@ -315,13 +348,13 @@ mod tests {
         let m15 = by_name("1.5B").unwrap();
         let mut off = OffloadConfig::NONE;
         off.moments = true;
-        let b = max_micro_batch(&m15, &gpu, true, Recompute::Block, off,
+        let b = max_micro_batch(&m15, &gpu, true, MomentsMode::Fp32, Recompute::Block, off,
                                 ShardConfig::single(), 96.0, 32);
         assert!(b >= 8, "1.5B with m,v offload: b={b}");
 
         let m3 = by_name("3B").unwrap();
         off.master = true;
-        let b3 = max_micro_batch(&m3, &gpu, true, Recompute::Block, off,
+        let b3 = max_micro_batch(&m3, &gpu, true, MomentsMode::Fp32, Recompute::Block, off,
                                  ShardConfig::single(), 96.0, 32);
         assert!(b3 >= 4, "3B with m,v,θ* offload: b={b3}");
     }
@@ -332,7 +365,7 @@ mod tests {
     fn seven_b_on_16gb_full_offload() {
         let gpu = gpu_by_name("RTX 5060Ti").unwrap();
         let m7 = by_name("7B").unwrap();
-        let b = max_micro_batch(&m7, &gpu, true, Recompute::Block,
+        let b = max_micro_batch(&m7, &gpu, true, MomentsMode::Fp32, Recompute::Block,
                                 OffloadConfig::FULL, ShardConfig::single(),
                                 96.0, 64);
         assert!(b >= 16, "7B full offload micro-batch: {b}");
@@ -357,12 +390,12 @@ mod tests {
     fn fourteen_b_on_4090() {
         let gpu = gpu_by_name("RTX 4090").unwrap();
         let m14 = by_name("14B").unwrap();
-        let b = max_micro_batch(&m14, &gpu, true, Recompute::Block,
+        let b = max_micro_batch(&m14, &gpu, true, MomentsMode::Fp32, Recompute::Block,
                                 OffloadConfig::FULL, ShardConfig::single(),
                                 256.0, 64);
         assert!(b >= 8, "14B on 4090: b={b}");
         let m32 = by_name("32B").unwrap();
-        let b32 = max_micro_batch(&m32, &gpu, true, Recompute::Block,
+        let b32 = max_micro_batch(&m32, &gpu, true, MomentsMode::Fp32, Recompute::Block,
                                   OffloadConfig::FULL, ShardConfig::single(),
                                   96.0, 64);
         assert_eq!(b32, 0, "32B must OOM on one 4090 with 96GB host");
@@ -373,7 +406,7 @@ mod tests {
     fn thirtytwo_b_on_4x4090() {
         let gpu = gpu_by_name("RTX 4090").unwrap();
         let m32 = by_name("32B").unwrap();
-        let b = max_micro_batch(&m32, &gpu, true, Recompute::Block,
+        let b = max_micro_batch(&m32, &gpu, true, MomentsMode::Fp32, Recompute::Block,
                                 OffloadConfig::FULL, ShardConfig::full(4),
                                 256.0, 64);
         assert!(b >= 2, "32B on 4x4090: b={b}");
@@ -405,14 +438,62 @@ mod tests {
             for shard in [ShardConfig::single(), ShardConfig::full(4)] {
                 for off in [OffloadConfig::NONE, OffloadConfig::FULL] {
                     for rc in Recompute::ALL {
-                        let floor = device_floor_fits(&m, &gpu, true, rc, off, shard);
-                        let bmax = max_micro_batch(&m, &gpu, true, rc, off, shard, 256.0, 8);
+                        let floor = device_floor_fits(&m, &gpu, true, MomentsMode::Fp32, rc, off, shard);
+                        let bmax = max_micro_batch(&m, &gpu, true, MomentsMode::Fp32, rc, off, shard, 256.0, 8);
                         if !floor {
                             assert_eq!(bmax, 0, "{name} {shard:?} {off:?} {rc:?}");
                         }
                     }
                 }
             }
+        }
+    }
+
+    /// The precision axis: quantized moment storage drops the at-rest
+    /// moment bytes ≥ 2× in the memory model (8 → 3 B/param), shrinks
+    /// the streamed moments class wherever it lives (device-resident and
+    /// offloaded-host alike), and leaves every other class — and the
+    /// whole default-mode plan — untouched.
+    #[test]
+    fn quantized_moments_shrink_the_moment_classes_2x() {
+        assert!(
+            moment_state_bytes_per_param(MomentsMode::Fp32)
+                >= 2.0 * moment_state_bytes_per_param(MomentsMode::Fp8),
+            "at-rest moment bytes must drop >= 2x"
+        );
+        let gpu = gpu_by_name("RTX 5060Ti").unwrap();
+        let m = by_name("1.5B").unwrap();
+        // device-resident moments: fp8 mode strictly smaller
+        let base = inp(&m, &gpu, true, Recompute::Block, OffloadConfig::NONE,
+                       ShardConfig::single(), 4);
+        let q = PlanInput { moments: MomentsMode::Fp8, ..base.clone() };
+        let p0 = plan(&base, 96.0);
+        let p1 = plan(&q, 96.0);
+        assert!(p1.dev_moments < p0.dev_moments);
+        assert_eq!(p1.dev_moments, 0.75 * p0.dev_moments, "4 -> 3 B/param");
+        assert_eq!(p1.dev_weights, p0.dev_weights);
+        assert_eq!(p1.dev_master, p0.dev_master);
+        assert_eq!(p1.dev_activations, p0.dev_activations);
+        // offloaded moments: the saving moves to the host ledger
+        let mut off = OffloadConfig::NONE;
+        off.moments = true;
+        let base_off = inp(&m, &gpu, true, Recompute::Block, off,
+                           ShardConfig::single(), 4);
+        let q_off = PlanInput { moments: MomentsMode::Fp8, ..base_off.clone() };
+        let h0 = plan(&base_off, 96.0);
+        let h1 = plan(&q_off, 96.0);
+        assert!(h1.host_bytes < h0.host_bytes);
+        // and a model can fit under fp8 moments where fp32 moments OOM:
+        // the floor is monotone in the moment width
+        for name in ["1.5B", "3B", "7B"] {
+            let m = by_name(name).unwrap();
+            let fits32 = device_floor_fits(&m, &gpu, true, MomentsMode::Fp32,
+                                           Recompute::Block, OffloadConfig::NONE,
+                                           ShardConfig::single());
+            let fits8 = device_floor_fits(&m, &gpu, true, MomentsMode::Fp8,
+                                          Recompute::Block, OffloadConfig::NONE,
+                                          ShardConfig::single());
+            assert!(fits8 || !fits32, "{name}: fp8 floor cannot be worse");
         }
     }
 

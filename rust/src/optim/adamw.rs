@@ -38,6 +38,39 @@ impl Default for AdamWParams {
     }
 }
 
+/// AdamW moment-storage mode: which grids the two moments round onto
+/// (and therefore how many bytes per parameter they cost at rest — the
+/// planner's precision axis and the checkpoint codec field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MomentsMode {
+    /// Both moments on the bf16 grid in resident f32 buffers (the
+    /// historical default): 8 bytes/param at rest (f32 m + v).
+    Fp32,
+    /// First moment stochastically rounded onto the fp8 E5M2 grid,
+    /// second moment bf16: 3 bytes/param at rest (1 fp8 code + 1 bf16
+    /// word), a 2.67× moment-byte reduction the planner can spend.
+    Fp8,
+}
+
+impl MomentsMode {
+    /// Parse a `--moments` CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fp32" => Ok(MomentsMode::Fp32),
+            "fp8" => Ok(MomentsMode::Fp8),
+            other => anyhow::bail!("unknown moments mode {other:?} (expected fp32|fp8)"),
+        }
+    }
+
+    /// Stable lowercase label (bench provenance, checkpoint inspect).
+    pub fn label(self) -> &'static str {
+        match self {
+            MomentsMode::Fp32 => "fp32",
+            MomentsMode::Fp8 => "fp8",
+        }
+    }
+}
+
 /// Flat AdamW with SR-to-bf16 state, bit-identical to the Pallas kernel.
 #[derive(Debug)]
 pub struct AdamW {
@@ -45,6 +78,10 @@ pub struct AdamW {
     pub hp: AdamWParams,
     /// SR stream, keyed [`ADAMW_RNG_KEY`] (matches the Pallas kernel).
     pub rng: CounterRng,
+    /// Moment-storage mode (default [`MomentsMode::Fp32`]); threaded
+    /// into the backend spec so every step path — parallel, serial
+    /// oracle, fused phase 3 — quantizes the same way.
+    pub moments: MomentsMode,
 }
 
 /// The key the Pallas kernel uses (kernels/adamw.py `key=0x11A17`).
@@ -83,12 +120,19 @@ pub(crate) fn update_element(
 }
 
 impl AdamW {
-    /// Optimizer with the kernel's fixed RNG key.
+    /// Optimizer with the kernel's fixed RNG key (fp32 moment storage).
     pub fn new(hp: AdamWParams) -> Self {
         Self {
             hp,
             rng: CounterRng::new(ADAMW_RNG_KEY),
+            moments: MomentsMode::Fp32,
         }
+    }
+
+    /// Builder: select the moment-storage mode.
+    pub fn with_moments(mut self, moments: MomentsMode) -> Self {
+        self.moments = moments;
+        self
     }
 
     /// The [`AdamWSpec`] this optimizer hands the backend kernels:
@@ -107,6 +151,7 @@ impl AdamW {
             rng_m: CounterRng::new(KEY_M),
             rng_v: CounterRng::new(KEY_V),
             shard,
+            moments: self.moments,
         }
     }
 
@@ -236,6 +281,30 @@ mod tests {
         opt.step(&mut p, &mut m, &mut v, &g, 1e-3, 1, 0, 16);
         for &x in p.iter().chain(&m).chain(&v) {
             assert_eq!(x, round_to_bf16(x), "not on bf16 grid: {x}");
+        }
+    }
+
+    #[test]
+    fn fp8_moments_match_serial_and_stay_on_grid() {
+        use crate::precision::E5M2;
+        let opt = AdamW::new(AdamWParams::default()).with_moments(MomentsMode::Fp8);
+        let n = 100;
+        let p0: Vec<f32> = (0..n).map(|i| round_to_bf16(0.3 + i as f32 * 0.01)).collect();
+        let m0 = vec![0.0f32; n];
+        let v0 = vec![0.0f32; n];
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
+        opt.step(&mut pa, &mut ma, &mut va, &g, 1e-3, 1, 0, n as u32);
+        let (mut pb, mut mb, mut vb) = (p0, m0, v0);
+        opt.step_serial(&mut pb, &mut mb, &mut vb, &g, 1e-3, 1, 0, n as u32);
+        assert_eq!(pa, pb);
+        assert_eq!(ma, mb);
+        assert_eq!(va, vb);
+        for &x in &ma {
+            assert_eq!(x, E5M2.round(x), "m not on the e5m2 grid: {x}");
+        }
+        for &x in &va {
+            assert_eq!(x, round_to_bf16(x), "v not on the bf16 grid: {x}");
         }
     }
 

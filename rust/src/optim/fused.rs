@@ -44,7 +44,7 @@ use crate::collectives::{
     all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_scaled_memcpy, DeviceGroup,
 };
 use crate::exec::{self, Baton, Event};
-use crate::optim::adamw::{AdamW, AdamWParams};
+use crate::optim::adamw::{AdamW, AdamWParams, MomentsMode};
 use crate::precision::backend::AdamWSpec;
 use crate::precision::{backend, bf16, CounterRng};
 use crate::shard::shard_range;
@@ -78,6 +78,10 @@ pub struct HostStep {
     /// layout of the AdamW moments, independently of the collective
     /// world size.
     pub opt_world: usize,
+    /// Moment-storage grids (fp32/bf16 vs fp8/bf16) — threaded into the
+    /// AdamW spec so the fused phase 3, the async op graph, and the
+    /// staged oracle all quantize the first moment identically.
+    pub moments: MomentsMode,
 }
 
 impl HostStep {
@@ -97,7 +101,9 @@ impl HostStep {
         } else {
             None
         };
-        AdamW::new(self.hp).spec(self.lr, self.step, clip_scale, shard)
+        AdamW::new(self.hp)
+            .with_moments(self.moments)
+            .spec(self.lr, self.step, clip_scale, shard)
     }
 }
 
@@ -753,7 +759,7 @@ pub fn staged_step(
     // Pass 6: per-rank host AdamW over the ZeRO-1 shard layout, through
     // the single-threaded scalar oracle kernel.
     let shard = n / hs.opt_world;
-    let opt = AdamW::new(hs.hp);
+    let opt = AdamW::new(hs.hp).with_moments(hs.moments);
     for rank in 0..hs.opt_world {
         let range = shard_range(n, hs.opt_world, rank);
         let base = hs.counter.wrapping_add((rank * shard) as u32);
@@ -796,6 +802,7 @@ mod tests {
             seed: 7,
             n_micro: world_micro,
             opt_world,
+            moments: MomentsMode::Fp32,
         }
     }
 

@@ -7,7 +7,7 @@
 pub mod adamw;
 pub mod fused;
 
-pub use adamw::{AdamW, AdamWParams};
+pub use adamw::{AdamW, AdamWParams, MomentsMode};
 pub use fused::{fused_step, fused_step_async, fused_step_overlapped, staged_step, HostStep};
 
 use crate::precision::backend;

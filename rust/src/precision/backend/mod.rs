@@ -45,6 +45,13 @@
 //!   `docs/NUMERICS.md` Rule 2a ([`sumsq_lanes_into`]): [`NORM_LANES`]
 //!   interleaved lane sums per chunk, folded in lane-index order, the
 //!   same 8 f64 values from every backend.
+//! * The block-scaled MX/e2m1 kernels ([`mx_encode_rne`] /
+//!   [`mx_encode_sr`] / [`mx_decode`]) fix the scale grid structurally:
+//!   one e8m0 scale per 32-element block, selected from the block's
+//!   absmax (order-insensitive fold), elements rounded onto the scaled
+//!   e2m1 grid — a partial final block falls back to the scalar loop
+//!   *including its scale selection*, so block boundaries never move
+//!   with lane width (NUMERICS.md Rule 7).
 //! * The host AdamW update ([`adamw_update`]) is an FMA-free
 //!   transcription of the scalar `optim::adamw` element math: f32
 //!   div and sqrt are correctly-rounded IEEE ops, so `vdivps`/`vsqrtps`
@@ -120,7 +127,19 @@ pub struct AdamWSpec {
     pub rng_v: CounterRng,
     /// Shard length fixing the moment-stream counter offsets.
     pub shard: u32,
+    /// Moment-storage grids: with [`MomentsMode::Fp8`] the first moment
+    /// stochastically rounds onto the fp8 E5M2 grid (same `rng_m` stream
+    /// and counter `c + shard`, coarser grid); the second moment stays
+    /// bf16. [`MomentsMode::Fp32`] keeps both moments bf16 (the
+    /// historical behaviour — "fp32" names the resident f32 m+v buffers
+    /// the planner models, vs fp8-m/bf16-v compacted storage).
+    pub moments: MomentsMode,
 }
+
+/// AdamW moment-storage mode (see [`AdamWSpec::moments`]); re-exported
+/// from `optim::adamw` where it is defined next to the optimizer that
+/// threads it through every step path.
+pub use crate::optim::adamw::MomentsMode;
 
 /// The resolved SIMD backend for this process.
 ///
@@ -230,9 +249,15 @@ pub fn level() -> SimdLevel {
 // tail loops the vector kernels use for sub-lane remainders.
 // ---------------------------------------------------------------------------
 
-pub(crate) mod scalar {
-    use super::{AdamWSpec, CounterRng, Fp8Format, NORM_LANES};
+pub mod scalar {
+    //! Portable scalar reference loops — **the spec** every SIMD backend
+    //! is pinned bit-identical to. Public so conformance suites
+    //! (`tests/codec_conformance.rs`, `tests/par_equivalence.rs`) can pin
+    //! dispatch and raw arch kernels against the reference directly.
+    use super::{AdamWSpec, CounterRng, Fp8Format, MomentsMode, NORM_LANES};
     use crate::precision::bf16::{round_to_bf16, stochastic_round_bf16};
+    use crate::precision::fp8::{stochastic_round_fp8, E5M2};
+    use crate::precision::mx::{self, MX_BLOCK};
 
     /// The Rule 2a widened sum of squares over one chunk: lane `r % 8`
     /// accumulates element `r`'s f64 square, ascending `r` within each
@@ -271,7 +296,18 @@ pub(crate) mod scalar {
             );
             let c = counter_base.wrapping_add(i as u32);
             p[i] = stochastic_round_bf16(p2, &spec.rng_p, c);
-            m[i] = stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard));
+            // Quantized-moments mode stores m on the fp8 E5M2 grid: same
+            // rng_m stream, same counter c + shard, coarser grid.
+            m[i] = match spec.moments {
+                MomentsMode::Fp32 => {
+                    stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard))
+                }
+                MomentsMode::Fp8 => stochastic_round_fp8(
+                    E5M2,
+                    m2,
+                    spec.rng_m.next_u32(c.wrapping_add(spec.shard)),
+                ),
+            };
             v[i] = stochastic_round_bf16(v2, &spec.rng_v, c.wrapping_add(shard2));
         }
     }
@@ -373,6 +409,58 @@ pub(crate) mod scalar {
                 };
             }
             *a = stochastic_round_bf16(sum, rng, counter.wrapping_add((base + j) as u32));
+        }
+    }
+
+    /// Block-scaled MX/e2m1 RNE encode — the spec loop (NUMERICS.md
+    /// Rule 7). Per [`MX_BLOCK`]-element block `b`: the e8m0 scale is
+    /// selected from the block's absmax (the `f32::max` NaN-ignoring
+    /// fold), then every element RNE-rounds onto the scaled e2m1 grid
+    /// (`e2m1_encode(E2M1.round(x_i / scale))`). A short final block
+    /// selects its scale from the elements it has.
+    pub fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
+        for (b, block) in x.chunks(MX_BLOCK).enumerate() {
+            let sb = mx::e8m0_from_absmax(absmax(block));
+            scales[b] = sb;
+            let s = mx::e8m0_decode(sb);
+            for (j, &v) in block.iter().enumerate() {
+                codes[b * MX_BLOCK + j] = mx::e2m1_encode(mx::E2M1.round(v / s));
+            }
+        }
+    }
+
+    /// Block-scaled MX/e2m1 *stochastic* encode — the spec loop. Scale
+    /// selection is identical to [`mx_encode_rne`]; element `i` (global
+    /// index) rounds with the draw `rng.next_u32(counter_base + i)`, so
+    /// chunked/threaded/vectorized execution reproduces this stream
+    /// exactly.
+    pub fn mx_encode_sr(
+        x: &[f32],
+        scales: &mut [u8],
+        codes: &mut [u8],
+        rng: &CounterRng,
+        counter_base: u32,
+    ) {
+        for (b, block) in x.chunks(MX_BLOCK).enumerate() {
+            let sb = mx::e8m0_from_absmax(absmax(block));
+            scales[b] = sb;
+            let s = mx::e8m0_decode(sb);
+            for (j, &v) in block.iter().enumerate() {
+                let i = b * MX_BLOCK + j;
+                let draw = rng.next_u32(counter_base.wrapping_add(i as u32));
+                codes[i] = mx::e2m1_encode(stochastic_round_fp8(mx::E2M1, v / s, draw));
+            }
+        }
+    }
+
+    /// Block-scaled MX/e2m1 decode — the spec loop:
+    /// `out[i] = e2m1_decode(codes[i]) · e8m0_decode(scales[i / 32])`.
+    pub fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+        for (b, chunk) in out.chunks_mut(MX_BLOCK).enumerate() {
+            let s = mx::e8m0_decode(scales[b]);
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = mx::e2m1_decode(codes[b * MX_BLOCK + j]) * s;
+            }
         }
     }
 }
@@ -612,6 +700,67 @@ pub fn adamw_update(
     }
 }
 
+/// Shared hard assert for the MX kernels: the arch kernels address
+/// `codes` and `scales` through raw pointers from block arithmetic, so a
+/// short buffer would be an out-of-bounds write from a safe entry point.
+fn mx_assert_shapes(n: usize, scales: usize, codes: usize) {
+    assert_eq!(codes, n, "codes must hold one byte per element");
+    assert_eq!(
+        scales,
+        crate::precision::mx::blocks_of(n),
+        "scales must hold one byte per MX block"
+    );
+}
+
+/// Backend-dispatched block-scaled MX/e2m1 RNE encode (NUMERICS.md
+/// Rule 7): per 32-element block, an e8m0 scale from the block absmax,
+/// then `codes[i] = e2m1_encode(round(x[i] / scale))`. `scales` holds
+/// one byte per block (`mx::blocks_of`), `codes` one byte per element.
+pub fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
+    mx_assert_shapes(x.len(), scales.len(), codes.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::mx_encode_rne(x, scales, codes) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::mx_encode_rne(x, scales, codes) },
+        _ => scalar::mx_encode_rne(x, scales, codes),
+    }
+}
+
+/// Backend-dispatched block-scaled MX/e2m1 stochastic encode: scale
+/// selection as [`mx_encode_rne`], with element `i` drawing
+/// `rng.next_u32(counter_base + i)` — global-element-index keying, so
+/// the stream is identical at every lane width.
+pub fn mx_encode_sr(
+    x: &[f32],
+    scales: &mut [u8],
+    codes: &mut [u8],
+    rng: &CounterRng,
+    counter_base: u32,
+) {
+    mx_assert_shapes(x.len(), scales.len(), codes.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::mx_encode_sr(x, scales, codes, rng, counter_base) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::mx_encode_sr(x, scales, codes, rng, counter_base) },
+        _ => scalar::mx_encode_sr(x, scales, codes, rng, counter_base),
+    }
+}
+
+/// Backend-dispatched block-scaled MX/e2m1 decode:
+/// `out[i] = e2m1_decode(codes[i]) · e8m0_decode(scales[i / 32])`.
+pub fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+    mx_assert_shapes(out.len(), scales.len(), codes.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::mx_decode(scales, codes, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::mx_decode(scales, codes, out) },
+        _ => scalar::mx_decode(scales, codes, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,6 +796,67 @@ mod tests {
         scalar::bf16_stochastic_round(&mut a, &rng, 7);
         bf16_stochastic_round(&mut b, &rng, 7);
         assert_eq!(bits(&a), bits(&b));
+    }
+
+    /// MX dispatch equals the scalar spec loops at block-boundary
+    /// lengths (full golden/raw-kernel sweeps live in
+    /// tests/codec_conformance.rs).
+    #[test]
+    fn mx_dispatch_matches_scalar_reference() {
+        let rng = CounterRng::new(0x3C);
+        for n in [0usize, 1, 31, 32, 33, 1000] {
+            let x = data(n, 0x4A);
+            let nb = crate::precision::mx::blocks_of(n);
+            let (mut ws, mut wc) = (vec![0u8; nb], vec![0u8; n]);
+            scalar::mx_encode_rne(&x, &mut ws, &mut wc);
+            let (mut gs, mut gc) = (vec![0u8; nb], vec![0u8; n]);
+            mx_encode_rne(&x, &mut gs, &mut gc);
+            assert_eq!((&gs, &gc), (&ws, &wc), "rne n={n}");
+
+            scalar::mx_encode_sr(&x, &mut ws, &mut wc, &rng, 5);
+            mx_encode_sr(&x, &mut gs, &mut gc, &rng, 5);
+            assert_eq!((&gs, &gc), (&ws, &wc), "sr n={n}");
+
+            let mut want = vec![0.0f32; n];
+            scalar::mx_decode(&ws, &wc, &mut want);
+            let mut got = vec![0.0f32; n];
+            mx_decode(&ws, &wc, &mut got);
+            assert_eq!(bits(&got), bits(&want), "decode n={n}");
+        }
+    }
+
+    /// The quantized-moments mode changes only the first-moment grid:
+    /// same stream, same counters, m lands on the E5M2 grid.
+    #[test]
+    fn adamw_update_fp8_moments_dispatch_matches_scalar() {
+        let spec = AdamWSpec {
+            hp: AdamWParams::default(),
+            lr: 1e-3,
+            bc1: 0.19,
+            bc2: 0.0975,
+            clip_scale: Some(0.5),
+            rng_p: CounterRng::new(0x11A17),
+            rng_m: CounterRng::new(0x22),
+            rng_v: CounterRng::new(0x33),
+            shard: 500,
+            moments: MomentsMode::Fp8,
+        };
+        let n = 500;
+        let p0 = data(n, 5);
+        let m0 = data(n, 6);
+        let v0: Vec<f32> = data(n, 7).iter().map(|x| x.abs()).collect();
+        let g = data(n, 8);
+        let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
+        scalar::adamw_update(&spec, &mut pa, &mut ma, &mut va, &g, 9);
+        let (mut pb, mut mb, mut vb) = (p0, m0, v0);
+        adamw_update(&spec, &mut pb, &mut mb, &mut vb, &g, 9);
+        assert_eq!(bits(&pa), bits(&pb));
+        assert_eq!(bits(&ma), bits(&mb));
+        assert_eq!(bits(&va), bits(&vb));
+        // and the stored m really lies on the E5M2 grid
+        for &x in &ma {
+            assert_eq!(x, E5M2.round(x), "not on the e5m2 grid: {x}");
+        }
     }
 
     #[test]
@@ -695,6 +905,7 @@ mod tests {
             rng_m: CounterRng::new(0x22),
             rng_v: CounterRng::new(0x33),
             shard: 1000,
+            moments: MomentsMode::Fp32,
         };
         let n = 1000;
         let p0 = data(n, 1);

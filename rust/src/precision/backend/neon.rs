@@ -1,6 +1,6 @@
 //! NEON (4-lane) kernels for the FP8/BF16 codec hot loops — the aarch64
-//! mirror of the `x86` submodule, pinned bit-identical to the
-//! crate-private `scalar` reference loops.
+//! mirror of the `x86` submodule, pinned bit-identical to the public
+//! `scalar` reference loops.
 //!
 //! The same bit-exactness arguments apply (see
 //! [`crate::precision::backend`] and `docs/NUMERICS.md`); the NEON-
@@ -25,8 +25,9 @@
 
 use super::scalar;
 use super::CounterRng;
-use super::{AdamWSpec, NORM_LANES};
-use crate::precision::fp8::Fp8Format;
+use super::{AdamWSpec, MomentsMode, NORM_LANES};
+use crate::precision::fp8::{Fp8Format, E5M2};
+use crate::precision::mx::{self, MX_BLOCK};
 use core::arch::aarch64::*;
 
 /// Per-format splatted constants shared by the round/encode kernels.
@@ -110,6 +111,49 @@ unsafe fn fp8_encode_vec(r: float32x4_t, c: &Fp8Consts) -> uint32x4_t {
     );
     let code = vorrq_u32(sign_byte, vbslq_u32(sub, units, normal));
     vbslq_u32(ord, code, vdupq_n_u32(0x7F))
+}
+
+/// 4 raw u32 draws → unit-interval f32, bit-exact to the scalar
+/// `(draw as f64 / u32::MAX as f64) as f32` in `stochastic_round_fp8`:
+/// the zero-extended u32→f64 convert is exact, `fdiv` is correctly
+/// rounded, and `FCVTN` (f64→f32 narrow) rounds to nearest-even exactly
+/// like the scalar `as f32` cast.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn draws_to_unit_f32(draws: uint32x4_t) -> float32x4_t {
+    let umax = vdupq_n_f64(u32::MAX as f64);
+    let lo = vcvtq_f64_u64(vmovl_u32(vget_low_u32(draws)));
+    let hi = vcvtq_f64_u64(vmovl_u32(vget_high_u32(draws)));
+    let u_lo = vcvt_f32_f64(vdivq_f64(lo, umax));
+    let u_hi = vcvt_f32_f64(vdivq_f64(hi, umax));
+    vcombine_f32(u_lo, u_hi)
+}
+
+/// `stochastic_round_fp8(fmt, t, draw)` on 4 lanes: the
+/// [`fp8_round_vec`] pipeline with `vrndmq` (floor) of `a/ulp + u` in
+/// place of RNE, `u` being the unit-interval draw from
+/// [`draws_to_unit_f32`]. The zero select is load-bearing: the scalar
+/// reference early-returns `0.0` before the draw can push
+/// `floor(0 + 1.0)` up to one ulp.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn fp8_sr_vec(t: float32x4_t, u: float32x4_t, c: &Fp8Consts) -> float32x4_t {
+    let ord = vceqq_f32(t, t); // false on NaN lanes
+    let sign = vandq_u32(vreinterpretq_u32_f32(t), vdupq_n_u32(0x8000_0000));
+    let a = min_scalar_sem(vabsq_f32(t), c.vmax);
+    let zero = vceqq_f32(a, vdupq_n_f32(0.0));
+    let abits = vreinterpretq_u32_f32(a);
+    let e = vsubq_s32(vreinterpretq_s32_u32(vshrq_n_u32::<23>(abits)), c.v127);
+    let e_eff = vmaxq_s32(e, c.vmin_e);
+    let ulp = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vsubq_s32(e_eff, c.vman),
+        c.v127,
+    )));
+    let q = vmulq_f32(vrndmq_f32(vaddq_f32(vdivq_f32(a, ulp), u)), ulp);
+    let q = min_scalar_sem(q, c.vmax);
+    let r = vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(q), sign));
+    let r = vbslq_f32(zero, vdupq_n_f32(0.0), r);
+    vbslq_f32(ord, r, c.vnan)
 }
 
 /// 4-lane murmur3 finalizer — lane `i` is [`CounterRng::next_u32`]`(ctr_i)`.
@@ -206,40 +250,195 @@ pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut
     scalar::fp8_encode_scaled(fmt, &x[main..], scale, &mut out[main..]);
 }
 
+/// Per-format splatted constants for the decode kernels.
+struct DecConsts {
+    vman_r: int32x4_t,
+    vman_mask: uint32x4_t,
+    vexp_off: int32x4_t,
+    sub_unit: float32x4_t,
+    two_man: float32x4_t,
+    vone: float32x4_t,
+}
+
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn dec_consts(fmt: Fp8Format) -> DecConsts {
+    let man = fmt.man_bits as i32;
+    DecConsts {
+        vman_r: vdupq_n_s32(-man),
+        vman_mask: vdupq_n_u32((1 << man) - 1),
+        vexp_off: vdupq_n_s32(127 - fmt.bias),
+        // 2^(1 - bias - man): the subnormal unit, exact by construction
+        sub_unit: vdupq_n_f32(f32::from_bits(((1 - fmt.bias - man + 127) as u32) << 23)),
+        two_man: vdupq_n_f32((1u32 << man) as f32),
+        vone: vdupq_n_f32(1.0),
+    }
+}
+
+/// `fmt.decode(byte)` on 4 lanes, bytes in the u32 lanes of `vb`.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn fp8_decode_vec(vb: uint32x4_t, c: &DecConsts) -> float32x4_t {
+    let sign = vshlq_n_u32::<24>(vandq_u32(vb, vdupq_n_u32(0x80)));
+    let body = vandq_u32(vb, vdupq_n_u32(0x7F));
+    let exp_f = vshlq_u32(body, c.vman_r);
+    let man_ps = vcvtq_f32_u32(vandq_u32(body, c.vman_mask));
+    let subv = vmulq_f32(man_ps, c.sub_unit);
+    let frac = vaddq_f32(c.vone, vdivq_f32(man_ps, c.two_man));
+    let pow = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vreinterpretq_s32_u32(exp_f),
+        c.vexp_off,
+    )));
+    let sub_mask = vceqq_u32(exp_f, vdupq_n_u32(0));
+    let v = vbslq_f32(sub_mask, subv, vmulq_f32(frac, pow));
+    vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(v), sign))
+}
+
 /// NEON fused `out[i] = fmt.decode(bytes[i]) * scale`.
 #[target_feature(enable = "neon")]
 pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(bytes.len(), out.len());
-    let man = fmt.man_bits as i32;
-    let vman_r = vdupq_n_s32(-man);
-    let vman_mask = vdupq_n_u32((1 << man) - 1);
-    let vexp_off = vdupq_n_s32(127 - fmt.bias);
-    let sub_unit = vdupq_n_f32(f32::from_bits(((1 - fmt.bias - man + 127) as u32) << 23));
-    let two_man = vdupq_n_f32((1u32 << man) as f32);
-    let vone = vdupq_n_f32(1.0);
+    let c = dec_consts(fmt);
     let vscale = vdupq_n_f32(scale);
     let main = out.len() - out.len() % 4;
     let mut k = 0;
     while k < main {
         let w = core::ptr::read_unaligned(bytes.as_ptr().add(k) as *const u32);
         let vb = vmovl_u16(vget_low_u16(vmovl_u8(vcreate_u8(w as u64))));
-        let sign = vshlq_n_u32::<24>(vandq_u32(vb, vdupq_n_u32(0x80)));
-        let body = vandq_u32(vb, vdupq_n_u32(0x7F));
-        let exp_f = vshlq_u32(body, vman_r);
-        let man_ps = vcvtq_f32_u32(vandq_u32(body, vman_mask));
-        let subv = vmulq_f32(man_ps, sub_unit);
-        let frac = vaddq_f32(vone, vdivq_f32(man_ps, two_man));
-        let pow = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
-            vreinterpretq_s32_u32(exp_f),
-            vexp_off,
-        )));
-        let sub_mask = vceqq_u32(exp_f, vdupq_n_u32(0));
-        let v = vbslq_f32(sub_mask, subv, vmulq_f32(frac, pow));
-        let v = vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(v), sign));
+        let v = fp8_decode_vec(vb, &c);
         vst1q_f32(out.as_mut_ptr().add(k), vmulq_f32(v, vscale));
         k += 4;
     }
     scalar::fp8_decode_scaled(fmt, &bytes[main..], scale, &mut out[main..]);
+}
+
+/// NEON MX/e2m1 block encode with RNE element rounding — the
+/// `scalar::mx_encode_rne` reference transcribed per 32-element block:
+/// vector absmax (pinned to the scalar fold), scalar e8m0 scale pick,
+/// then eight 4-lane round/encode/nibble-remap iterations per block. A
+/// partial final block — including its own scale selection — falls back
+/// to the scalar reference.
+#[target_feature(enable = "neon")]
+pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
+    debug_assert_eq!(codes.len(), x.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(x.len()));
+    let c = consts(mx::E2M1);
+    let nb_full = x.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let block = &x[b * MX_BLOCK..(b + 1) * MX_BLOCK];
+        let sb = mx::e8m0_from_absmax(absmax(block));
+        scales[b] = sb;
+        let vs = vdupq_n_f32(mx::e8m0_decode(sb));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let t = vdivq_f32(vld1q_f32(block.as_ptr().add(k)), vs);
+            let ord = vceqq_f32(t, t);
+            let byte = fp8_encode_vec(fp8_round_vec(t, &c), &c);
+            // fp8 byte → nibble: sign bit 7 down to bit 3, magnitude in 2:0
+            let nib = vorrq_u32(
+                vshrq_n_u32::<4>(vandq_u32(byte, vdupq_n_u32(0x80))),
+                vandq_u32(byte, vdupq_n_u32(0x07)),
+            );
+            // scalar `e2m1_encode` maps NaN to code 0, not the fp8 0x7F
+            let code = vandq_u32(nib, ord);
+            let n16 = vmovn_u32(code);
+            let n8 = vmovn_u16(vcombine_u16(n16, n16));
+            let w = vget_lane_u32::<0>(vreinterpret_u32_u8(n8));
+            core::ptr::write_unaligned(codes.as_mut_ptr().add(b * MX_BLOCK + k) as *mut u32, w);
+            k += 4;
+        }
+    }
+    scalar::mx_encode_rne(
+        &x[nb_full * MX_BLOCK..],
+        &mut scales[nb_full..],
+        &mut codes[nb_full * MX_BLOCK..],
+    );
+}
+
+/// NEON MX/e2m1 block encode with stochastic element rounding; lane `j`
+/// at global element offset `o` draws counter `counter_base + o + j`,
+/// exactly like the scalar reference.
+#[target_feature(enable = "neon")]
+pub unsafe fn mx_encode_sr(
+    x: &[f32],
+    scales: &mut [u8],
+    codes: &mut [u8],
+    rng: &CounterRng,
+    counter_base: u32,
+) {
+    debug_assert_eq!(codes.len(), x.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(x.len()));
+    let c = consts(mx::E2M1);
+    let key = vdupq_n_u32(rng.key);
+    let nb_full = x.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let block = &x[b * MX_BLOCK..(b + 1) * MX_BLOCK];
+        let sb = mx::e8m0_from_absmax(absmax(block));
+        scales[b] = sb;
+        let vs = vdupq_n_f32(mx::e8m0_decode(sb));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let o = b * MX_BLOCK + k;
+            let ctr = vaddq_u32(
+                vdupq_n_u32(counter_base.wrapping_add(o as u32)),
+                lane_iota(),
+            );
+            let t = vdivq_f32(vld1q_f32(block.as_ptr().add(k)), vs);
+            let ord = vceqq_f32(t, t);
+            let u = draws_to_unit_f32(murmur_vec(ctr, key));
+            let byte = fp8_encode_vec(fp8_sr_vec(t, u, &c), &c);
+            let nib = vorrq_u32(
+                vshrq_n_u32::<4>(vandq_u32(byte, vdupq_n_u32(0x80))),
+                vandq_u32(byte, vdupq_n_u32(0x07)),
+            );
+            let code = vandq_u32(nib, ord);
+            let n16 = vmovn_u32(code);
+            let n8 = vmovn_u16(vcombine_u16(n16, n16));
+            let w = vget_lane_u32::<0>(vreinterpret_u32_u8(n8));
+            core::ptr::write_unaligned(codes.as_mut_ptr().add(o) as *mut u32, w);
+            k += 4;
+        }
+    }
+    scalar::mx_encode_sr(
+        &x[nb_full * MX_BLOCK..],
+        &mut scales[nb_full..],
+        &mut codes[nb_full * MX_BLOCK..],
+        rng,
+        counter_base.wrapping_add((nb_full * MX_BLOCK) as u32),
+    );
+}
+
+/// NEON MX/e2m1 block decode: `out[i] = e2m1_decode(codes[i]) * s_b`
+/// with the block's e8m0 scale splatted across its eight 4-lane groups.
+#[target_feature(enable = "neon")]
+pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(out.len()));
+    let c = dec_consts(mx::E2M1);
+    let nb_full = out.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let vs = vdupq_n_f32(mx::e8m0_decode(scales[b]));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let o = b * MX_BLOCK + k;
+            let w = core::ptr::read_unaligned(codes.as_ptr().add(o) as *const u32);
+            let vb = vmovl_u16(vget_low_u16(vmovl_u8(vcreate_u8(w as u64))));
+            let vb = vandq_u32(vb, vdupq_n_u32(0x0F));
+            // nibble → fp8 byte: sign bit 3 back up to bit 7
+            let byte = vorrq_u32(
+                vshlq_n_u32::<4>(vandq_u32(vb, vdupq_n_u32(0x8))),
+                vandq_u32(vb, vdupq_n_u32(0x7)),
+            );
+            let v = fp8_decode_vec(byte, &c);
+            vst1q_f32(out.as_mut_ptr().add(o), vmulq_f32(v, vs));
+            k += 4;
+        }
+    }
+    scalar::mx_decode(
+        &scales[nb_full..],
+        &codes[nb_full * MX_BLOCK..],
+        &mut out[nb_full * MX_BLOCK..],
+    );
 }
 
 /// NEON RNE round onto the bf16 grid, in place.
@@ -434,6 +633,8 @@ pub unsafe fn adamw_update(
     let key_p = vdupq_n_u32(spec.rng_p.key);
     let key_m = vdupq_n_u32(spec.rng_m.key);
     let key_v = vdupq_n_u32(spec.rng_v.key);
+    // only read on the Fp8 moments branch; splats are free to hoist
+    let e5m2 = consts(E5M2);
     let vshard = vdupq_n_u32(spec.shard);
     let vshard2 = vdupq_n_u32(spec.shard.wrapping_mul(2));
     let mut ctr = vaddq_u32(vdupq_n_u32(counter_base), lane_iota());
@@ -458,10 +659,15 @@ pub unsafe fn adamw_update(
         let upd = vaddq_f32(vdivq_f32(num, den), vmulq_f32(vwd, pv));
         let p2 = vsubq_f32(pv, vmulq_f32(vlr, upd));
         vst1q_f32(p.as_mut_ptr().add(k), bf16_sr_vec(p2, ctr, key_p));
-        vst1q_f32(
-            m.as_mut_ptr().add(k),
-            bf16_sr_vec(m2, vaddq_u32(ctr, vshard), key_m),
-        );
+        let mq = match spec.moments {
+            MomentsMode::Fp32 => bf16_sr_vec(m2, vaddq_u32(ctr, vshard), key_m),
+            MomentsMode::Fp8 => fp8_sr_vec(
+                m2,
+                draws_to_unit_f32(murmur_vec(vaddq_u32(ctr, vshard), key_m)),
+                &e5m2,
+            ),
+        };
+        vst1q_f32(m.as_mut_ptr().add(k), mq);
         vst1q_f32(
             v.as_mut_ptr().add(k),
             bf16_sr_vec(v2, vaddq_u32(ctr, vshard2), key_v),

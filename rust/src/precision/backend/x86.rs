@@ -1,7 +1,7 @@
 //! AVX2 (8-lane) kernels for the FP8/BF16 codec hot loops.
 //!
 //! Every function here is pinned **bit-identical** to the scalar
-//! reference loops (the crate-private `scalar` submodule) — see the
+//! reference loops (the public `scalar` submodule) — see the
 //! module docs of
 //! [`crate::precision::backend`] and `docs/NUMERICS.md` for the contract
 //! and the argument for why each intrinsic matches the scalar op:
@@ -28,8 +28,9 @@
 
 use super::scalar;
 use super::CounterRng;
-use super::{AdamWSpec, NORM_LANES};
-use crate::precision::fp8::Fp8Format;
+use super::{AdamWSpec, MomentsMode, NORM_LANES};
+use crate::precision::fp8::{Fp8Format, E5M2};
+use crate::precision::mx::{self, MX_BLOCK};
 use core::arch::x86_64::*;
 
 const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
@@ -115,6 +116,58 @@ unsafe fn fp8_encode_vec(r: __m256, c: &Fp8Consts) -> __m256i {
     );
     let code = _mm256_or_si256(sign_byte, _mm256_blendv_epi8(normal, units, sub));
     _mm256_blendv_epi8(code, _mm256_set1_epi32(0x7F), nan)
+}
+
+/// 8 raw u32 draws → unit-interval f32, bit-exact to the scalar
+/// `(draw as f64 / u32::MAX as f64) as f32` in `stochastic_round_fp8`:
+/// the u32→f64 convert is exact, `vdivpd` is correctly rounded, and
+/// `vcvtpd2ps` rounds to nearest-even exactly like the scalar `as f32`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn draws_to_unit_f32(draws: __m256i) -> __m256 {
+    let wrap = _mm256_set1_pd(4294967296.0);
+    let umax = _mm256_set1_pd(u32::MAX as f64);
+    let mut lo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(draws));
+    let mut hi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(draws));
+    // the signed convert read the top bit as −2^31: lanes that came in
+    // with it set are off by exactly −2^32 — add it back (exact, both
+    // addends are integers far below 2^53).
+    let neg_lo = _mm256_cmp_pd::<_CMP_LT_OQ>(lo, _mm256_setzero_pd());
+    let neg_hi = _mm256_cmp_pd::<_CMP_LT_OQ>(hi, _mm256_setzero_pd());
+    lo = _mm256_add_pd(lo, _mm256_and_pd(neg_lo, wrap));
+    hi = _mm256_add_pd(hi, _mm256_and_pd(neg_hi, wrap));
+    let u_lo = _mm256_cvtpd_ps(_mm256_div_pd(lo, umax));
+    let u_hi = _mm256_cvtpd_ps(_mm256_div_pd(hi, umax));
+    _mm256_set_m128(u_hi, u_lo)
+}
+
+/// `stochastic_round_fp8(fmt, t, draw)` on 8 lanes: the
+/// [`fp8_round_vec`] pipeline with `floor(a/ulp + u)` in place of RNE,
+/// `u` being the unit-interval draw from [`draws_to_unit_f32`]. The
+/// zero blend is load-bearing here: the scalar reference early-returns
+/// `0.0` before the draw can push `floor(0 + 1.0)` up to one ulp.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn fp8_sr_vec(t: __m256, u: __m256, c: &Fp8Consts) -> __m256 {
+    const FLOOR: i32 = _MM_FROUND_TO_NEG_INF | _MM_FROUND_NO_EXC;
+    let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(t, t);
+    let sign = _mm256_and_ps(t, c.vsign);
+    let a = _mm256_min_ps(_mm256_and_ps(t, c.vabs), c.vmax);
+    let zero = _mm256_cmp_ps::<_CMP_EQ_OQ>(a, _mm256_setzero_ps());
+    let e = _mm256_sub_epi32(_mm256_srli_epi32::<23>(_mm256_castps_si256(a)), c.v127);
+    let e_eff = _mm256_max_epi32(e, c.vmin_e);
+    let ulp = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_sub_epi32(e_eff, c.vman),
+        c.v127,
+    )));
+    let q = _mm256_mul_ps(
+        _mm256_round_ps::<FLOOR>(_mm256_add_ps(_mm256_div_ps(a, ulp), u)),
+        ulp,
+    );
+    let q = _mm256_min_ps(q, c.vmax);
+    let r = _mm256_or_ps(q, sign);
+    let r = _mm256_blendv_ps(r, _mm256_setzero_ps(), zero);
+    _mm256_blendv_ps(r, c.vnan, nan)
 }
 
 /// 8-lane murmur3 finalizer over `(counter, key)` — lane `i` computes
@@ -208,39 +261,190 @@ pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut
     scalar::fp8_encode_scaled(fmt, &x[main..], scale, &mut out[main..]);
 }
 
+/// Per-format splatted constants for the decode kernels.
+struct DecConsts {
+    vman: __m256i,
+    vman_mask: __m256i,
+    vexp_off: __m256i,
+    sub_unit: __m256,
+    two_man: __m256,
+    vone: __m256,
+}
+
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn dec_consts(fmt: Fp8Format) -> DecConsts {
+    let man = fmt.man_bits as i32;
+    DecConsts {
+        vman: _mm256_set1_epi32(man),
+        vman_mask: _mm256_set1_epi32((1 << man) - 1),
+        vexp_off: _mm256_set1_epi32(127 - fmt.bias),
+        // 2^(1 - bias - man): the subnormal unit, exact by construction
+        sub_unit: _mm256_set1_ps(f32::from_bits(((1 - fmt.bias - man + 127) as u32) << 23)),
+        two_man: _mm256_set1_ps((1u32 << man) as f32),
+        vone: _mm256_set1_ps(1.0),
+    }
+}
+
+/// `fmt.decode(byte)` on 8 lanes, bytes in the epi32 lanes of `vb`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn fp8_decode_vec(vb: __m256i, c: &DecConsts) -> __m256 {
+    let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(vb, _mm256_set1_epi32(0x80)));
+    let body = _mm256_and_si256(vb, _mm256_set1_epi32(0x7F));
+    let exp_f = _mm256_srlv_epi32(body, c.vman);
+    let man_ps = _mm256_cvtepi32_ps(_mm256_and_si256(body, c.vman_mask));
+    let subv = _mm256_mul_ps(man_ps, c.sub_unit);
+    let frac = _mm256_add_ps(c.vone, _mm256_div_ps(man_ps, c.two_man));
+    let pow = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(exp_f, c.vexp_off)));
+    let sub_mask = _mm256_castsi256_ps(_mm256_cmpeq_epi32(exp_f, _mm256_setzero_si256()));
+    let v = _mm256_blendv_ps(_mm256_mul_ps(frac, pow), subv, sub_mask);
+    _mm256_or_ps(v, _mm256_castsi256_ps(sign))
+}
+
 /// AVX2 fused `out[i] = fmt.decode(bytes[i]) * scale`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(bytes.len(), out.len());
-    let man = fmt.man_bits as i32;
-    let vman = _mm256_set1_epi32(man);
-    let vman_mask = _mm256_set1_epi32((1 << man) - 1);
-    let vexp_off = _mm256_set1_epi32(127 - fmt.bias);
-    // 2^(1 - bias - man): the subnormal unit, exact by construction
-    let sub_unit = _mm256_set1_ps(f32::from_bits(
-        ((1 - fmt.bias - man + 127) as u32) << 23,
-    ));
-    let two_man = _mm256_set1_ps((1u32 << man) as f32);
-    let vone = _mm256_set1_ps(1.0);
+    let c = dec_consts(fmt);
     let vscale = _mm256_set1_ps(scale);
     let main = out.len() - out.len() % 8;
     let mut k = 0;
     while k < main {
         let vb = _mm256_cvtepu8_epi32(_mm_loadl_epi64(bytes.as_ptr().add(k) as *const __m128i));
-        let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(vb, _mm256_set1_epi32(0x80)));
-        let body = _mm256_and_si256(vb, _mm256_set1_epi32(0x7F));
-        let exp_f = _mm256_srlv_epi32(body, vman);
-        let man_ps = _mm256_cvtepi32_ps(_mm256_and_si256(body, vman_mask));
-        let subv = _mm256_mul_ps(man_ps, sub_unit);
-        let frac = _mm256_add_ps(vone, _mm256_div_ps(man_ps, two_man));
-        let pow = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(exp_f, vexp_off)));
-        let sub_mask = _mm256_castsi256_ps(_mm256_cmpeq_epi32(exp_f, _mm256_setzero_si256()));
-        let v = _mm256_blendv_ps(_mm256_mul_ps(frac, pow), subv, sub_mask);
-        let v = _mm256_or_ps(v, _mm256_castsi256_ps(sign));
+        let v = fp8_decode_vec(vb, &c);
         _mm256_storeu_ps(out.as_mut_ptr().add(k), _mm256_mul_ps(v, vscale));
         k += 8;
     }
     scalar::fp8_decode_scaled(fmt, &bytes[main..], scale, &mut out[main..]);
+}
+
+/// AVX2 MX/e2m1 block encode with RNE element rounding — the
+/// `scalar::mx_encode_rne` reference transcribed per 32-element block:
+/// vector absmax (pinned to the scalar fold), scalar e8m0 scale pick,
+/// then four 8-lane round/encode/nibble-remap iterations per block. A
+/// partial final block — including its own scale selection — falls back
+/// to the scalar reference.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
+    debug_assert_eq!(codes.len(), x.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(x.len()));
+    let c = consts(mx::E2M1);
+    let nb_full = x.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let block = &x[b * MX_BLOCK..(b + 1) * MX_BLOCK];
+        let sb = mx::e8m0_from_absmax(absmax(block));
+        scales[b] = sb;
+        let vs = _mm256_set1_ps(mx::e8m0_decode(sb));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let t = _mm256_div_ps(_mm256_loadu_ps(block.as_ptr().add(k)), vs);
+            let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(t, t));
+            let byte = fp8_encode_vec(fp8_round_vec(t, &c), &c);
+            // fp8 byte → nibble: sign bit 7 down to bit 3, magnitude in 2:0
+            let nib = _mm256_or_si256(
+                _mm256_srli_epi32::<4>(_mm256_and_si256(byte, _mm256_set1_epi32(0x80))),
+                _mm256_and_si256(byte, _mm256_set1_epi32(0x07)),
+            );
+            // scalar `e2m1_encode` maps NaN to code 0, not the fp8 0x7F
+            let code = _mm256_andnot_si256(nan, nib);
+            let p16 = _mm256_permute4x64_epi64::<0x08>(_mm256_packus_epi32(code, code));
+            let p8 = _mm_packus_epi16(_mm256_castsi256_si128(p16), _mm_setzero_si128());
+            _mm_storel_epi64(codes.as_mut_ptr().add(b * MX_BLOCK + k) as *mut __m128i, p8);
+            k += 8;
+        }
+    }
+    scalar::mx_encode_rne(
+        &x[nb_full * MX_BLOCK..],
+        &mut scales[nb_full..],
+        &mut codes[nb_full * MX_BLOCK..],
+    );
+}
+
+/// AVX2 MX/e2m1 block encode with stochastic element rounding; lane `j`
+/// at global element offset `o` draws counter `counter_base + o + j`,
+/// exactly like the scalar reference.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mx_encode_sr(
+    x: &[f32],
+    scales: &mut [u8],
+    codes: &mut [u8],
+    rng: &CounterRng,
+    counter_base: u32,
+) {
+    debug_assert_eq!(codes.len(), x.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(x.len()));
+    let c = consts(mx::E2M1);
+    let key = _mm256_set1_epi32(rng.key as i32);
+    let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let nb_full = x.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let block = &x[b * MX_BLOCK..(b + 1) * MX_BLOCK];
+        let sb = mx::e8m0_from_absmax(absmax(block));
+        scales[b] = sb;
+        let vs = _mm256_set1_ps(mx::e8m0_decode(sb));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let o = b * MX_BLOCK + k;
+            let ctr = _mm256_add_epi32(
+                _mm256_set1_epi32(counter_base.wrapping_add(o as u32) as i32),
+                iota,
+            );
+            let t = _mm256_div_ps(_mm256_loadu_ps(block.as_ptr().add(k)), vs);
+            let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(t, t));
+            let u = draws_to_unit_f32(murmur_vec(ctr, key));
+            let byte = fp8_encode_vec(fp8_sr_vec(t, u, &c), &c);
+            let nib = _mm256_or_si256(
+                _mm256_srli_epi32::<4>(_mm256_and_si256(byte, _mm256_set1_epi32(0x80))),
+                _mm256_and_si256(byte, _mm256_set1_epi32(0x07)),
+            );
+            let code = _mm256_andnot_si256(nan, nib);
+            let p16 = _mm256_permute4x64_epi64::<0x08>(_mm256_packus_epi32(code, code));
+            let p8 = _mm_packus_epi16(_mm256_castsi256_si128(p16), _mm_setzero_si128());
+            _mm_storel_epi64(codes.as_mut_ptr().add(o) as *mut __m128i, p8);
+            k += 8;
+        }
+    }
+    scalar::mx_encode_sr(
+        &x[nb_full * MX_BLOCK..],
+        &mut scales[nb_full..],
+        &mut codes[nb_full * MX_BLOCK..],
+        rng,
+        counter_base.wrapping_add((nb_full * MX_BLOCK) as u32),
+    );
+}
+
+/// AVX2 MX/e2m1 block decode: `out[i] = e2m1_decode(codes[i]) * s_b`
+/// with the block's e8m0 scale splatted across its four 8-lane groups.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    debug_assert_eq!(scales.len(), mx::blocks_of(out.len()));
+    let c = dec_consts(mx::E2M1);
+    let nb_full = out.len() / MX_BLOCK;
+    for b in 0..nb_full {
+        let vs = _mm256_set1_ps(mx::e8m0_decode(scales[b]));
+        let mut k = 0;
+        while k < MX_BLOCK {
+            let o = b * MX_BLOCK + k;
+            let vb =
+                _mm256_cvtepu8_epi32(_mm_loadl_epi64(codes.as_ptr().add(o) as *const __m128i));
+            let vb = _mm256_and_si256(vb, _mm256_set1_epi32(0x0F));
+            // nibble → fp8 byte: sign bit 3 back up to bit 7
+            let byte = _mm256_or_si256(
+                _mm256_slli_epi32::<4>(_mm256_and_si256(vb, _mm256_set1_epi32(0x8))),
+                _mm256_and_si256(vb, _mm256_set1_epi32(0x7)),
+            );
+            let v = fp8_decode_vec(byte, &c);
+            _mm256_storeu_ps(out.as_mut_ptr().add(o), _mm256_mul_ps(v, vs));
+            k += 8;
+        }
+    }
+    scalar::mx_decode(
+        &scales[nb_full..],
+        &codes[nb_full * MX_BLOCK..],
+        &mut out[nb_full * MX_BLOCK..],
+    );
 }
 
 /// AVX2 RNE round onto the bf16 grid, in place.
@@ -443,6 +647,8 @@ pub unsafe fn adamw_update(
     let key_p = _mm256_set1_epi32(spec.rng_p.key as i32);
     let key_m = _mm256_set1_epi32(spec.rng_m.key as i32);
     let key_v = _mm256_set1_epi32(spec.rng_v.key as i32);
+    // only read on the Fp8 moments branch; splats are free to hoist
+    let e5m2 = consts(E5M2);
     let vshard = _mm256_set1_epi32(spec.shard as i32);
     let vshard2 = _mm256_set1_epi32(spec.shard.wrapping_mul(2) as i32);
     let mut ctr = _mm256_add_epi32(
@@ -473,10 +679,15 @@ pub unsafe fn adamw_update(
         let upd = _mm256_add_ps(_mm256_div_ps(num, den), _mm256_mul_ps(vwd, pv));
         let p2 = _mm256_sub_ps(pv, _mm256_mul_ps(vlr, upd));
         _mm256_storeu_ps(p.as_mut_ptr().add(k), bf16_sr_vec(p2, ctr, key_p));
-        _mm256_storeu_ps(
-            m.as_mut_ptr().add(k),
-            bf16_sr_vec(m2, _mm256_add_epi32(ctr, vshard), key_m),
-        );
+        let mq = match spec.moments {
+            MomentsMode::Fp32 => bf16_sr_vec(m2, _mm256_add_epi32(ctr, vshard), key_m),
+            MomentsMode::Fp8 => fp8_sr_vec(
+                m2,
+                draws_to_unit_f32(murmur_vec(_mm256_add_epi32(ctr, vshard), key_m)),
+                &e5m2,
+            ),
+        };
+        _mm256_storeu_ps(m.as_mut_ptr().add(k), mq);
         _mm256_storeu_ps(
             v.as_mut_ptr().add(k),
             bf16_sr_vec(v2, _mm256_add_epi32(ctr, vshard2), key_v),

@@ -1,5 +1,6 @@
-//! Low-precision numerics: FP8 E4M3/E5M2 codecs, the bf16 grid, absmax
-//! scaling and the counter-based RNG for stochastic rounding.
+//! Low-precision numerics: FP8 E4M3/E5M2 codecs, the block-scaled
+//! MX/e2m1 (FP4) codec, the bf16 grid, absmax scaling and the
+//! counter-based RNG for stochastic rounding.
 //!
 //! Everything here mirrors `python/compile/kernels/ref.py` **bit-exactly**;
 //! `rust/tests/integration.rs` and the python parity fixtures enforce it.
@@ -16,10 +17,12 @@
 pub mod backend;
 pub mod bf16;
 pub mod fp8;
+pub mod mx;
 pub mod philox;
 
 pub use bf16::{round_to_bf16, stochastic_round_bf16};
 pub use fp8::{Fp8Format, E4M3, E5M2};
+pub use mx::{E2M1, MX_BLOCK};
 pub use philox::CounterRng;
 
 use crate::util::par;

@@ -1,0 +1,386 @@
+//! MXFP4-style block-scaled e2m1 codec: 32-element blocks, one shared
+//! power-of-two e8m0 scale per block, 4-bit (1 sign + 2 exponent +
+//! 1 mantissa) element codes.
+//!
+//! This is the precision rung below the FP8 tier (Quartet shows native
+//! FP4 training can be optimal; the OCP MX spec fixes the block layout).
+//! The e2m1 magnitude grid is {0, 0.5, 1, 1.5, 2, 3, 4, 6}; each fixed
+//! 32-element block stores its own scale `2^(⌊log2 absmax⌋ − 2)` as an
+//! e8m0 byte (biased power-of-two exponent), so the block's largest
+//! magnitude lands in the grid's top binade.
+//!
+//! The element grid is expressed as an [`Fp8Format`] instance ([`E2M1`]),
+//! so the single-value round / stochastic-round / encode / decode
+//! machinery of [`crate::precision::fp8`] applies unchanged; only the
+//! 4-bit code layout (sign at bit 3 instead of bit 7) and the per-block
+//! scale selection are new. The loops live in `precision::backend`
+//! (`mx_encode_rne` / `mx_encode_sr` / `mx_decode`): the scalar
+//! reference loops are the spec, the AVX2/NEON kernels are pinned
+//! bit-identical to them, and stochastic-rounding draws are keyed by
+//! **global element index** — see `docs/NUMERICS.md` Rule 7 for the
+//! block-scale determinism contract.
+
+use super::backend;
+use super::fp8::Fp8Format;
+use super::philox::CounterRng;
+use crate::util::par;
+
+/// Elements per MX block (the OCP MX block size). Every block shares one
+/// e8m0 scale; a tensor's final block may be shorter (its scale is
+/// selected from the elements it actually has).
+pub const MX_BLOCK: usize = 32;
+
+/// The e2m1 element grid as an [`Fp8Format`]: 2 exponent bits, 1
+/// mantissa bit, bias 1, max 6.0. Magnitudes: 0, 0.5 (subnormal), 1,
+/// 1.5, 2, 3, 4, 6. All the generic fp8 round/encode/decode machinery
+/// applies; only note that the wire code is the low *nibble* (sign at
+/// bit 3 — see [`e2m1_encode`]), not the `Fp8Format::encode` byte.
+pub const E2M1: Fp8Format = Fp8Format {
+    name: "e2m1",
+    exp_bits: 2,
+    man_bits: 1,
+    bias: 1,
+    max_val_bits: 0x40C0_0000, // 6.0
+};
+
+/// e2m1's largest exponent (the 4..6 binade is 2^2): the scale offset in
+/// [`e8m0_from_absmax`], per the OCP MX scale rule
+/// `X = 2^(⌊log2 absmax⌋ − emax)`.
+const E2M1_EMAX: i32 = 2;
+
+/// Number of MX blocks covering `n` elements.
+pub fn blocks_of(n: usize) -> usize {
+    (n + MX_BLOCK - 1) / MX_BLOCK
+}
+
+/// Select a block's shared e8m0 scale byte from its absmax: the biased
+/// (+127) power-of-two exponent `⌊log2 absmax⌋ − 2`, clamped to the
+/// e8m0 range, so `absmax / scale` lands in `[4, 8)` — the top binade
+/// of the e2m1 grid (values above 6 saturate on round).
+///
+/// Edge cases are pinned: an all-zero block gets byte 127 (scale 1.0);
+/// an infinite absmax clamps to the largest scale `2^127`; a subnormal
+/// absmax clamps to the smallest scale `2^−127` (byte 0). Byte 255
+/// (e8m0 NaN) is never produced.
+pub fn e8m0_from_absmax(amax: f32) -> u8 {
+    if amax == 0.0 {
+        return 127; // scale 1.0
+    }
+    let ef = (amax.to_bits() >> 23) & 0xFF;
+    let exp = if ef == 0xFF {
+        127 // infinite absmax: largest scale
+    } else if ef == 0 {
+        -127 // subnormal absmax: smallest scale
+    } else {
+        (ef as i32 - 127 - E2M1_EMAX).clamp(-127, 127)
+    };
+    (exp + 127) as u8
+}
+
+/// Decode an e8m0 scale byte to its exact f32 power of two. Byte 0 is
+/// `2^−127` (an f32 subnormal, exact); byte 255 is the e8m0 NaN code
+/// (never produced by [`e8m0_from_absmax`], decoded as NaN for
+/// completeness).
+pub fn e8m0_decode(byte: u8) -> f32 {
+    match byte {
+        0 => f32::from_bits(0x0040_0000), // 2^-127
+        255 => f32::NAN,
+        b => f32::from_bits((b as u32) << 23),
+    }
+}
+
+/// Encode an e2m1 grid value (the output of `E2M1.round` or the fp8
+/// stochastic round) into its 4-bit code: sign at bit 3, exponent bits
+/// 2..1, mantissa bit 0. e2m1 has no NaN encoding, so NaN stores code 0
+/// (+0.0) — the SIMD kernels blend the same way.
+pub fn e2m1_encode(grid_val: f32) -> u8 {
+    if grid_val.is_nan() {
+        return 0;
+    }
+    let b = E2M1.encode(grid_val);
+    ((b & 0x80) >> 4) | (b & 0x07)
+}
+
+/// Decode a 4-bit e2m1 code (high nibble ignored) back to its f32 grid
+/// value.
+pub fn e2m1_decode(code: u8) -> f32 {
+    let c = code & 0x0F;
+    E2M1.decode(((c & 0x8) << 4) | (c & 0x7))
+}
+
+/// Pack one-code-per-byte element codes (as the backend kernels produce
+/// them) into two-per-byte wire nibbles: element `2k` in the low nibble
+/// of byte `k`, element `2k+1` in the high nibble. Odd lengths leave the
+/// final high nibble zero.
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; (codes.len() + 1) / 2];
+    for (i, &c) in codes.iter().enumerate() {
+        out[i / 2] |= (c & 0xF) << ((i % 2) * 4);
+    }
+    out
+}
+
+/// Inverse of [`pack_nibbles`]: expand `n` element codes from the packed
+/// wire bytes (one code per output byte, high nibble zero).
+pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<u8> {
+    assert!(
+        packed.len() >= (n + 1) / 2,
+        "packed buffer too short for {n} nibbles"
+    );
+    (0..n)
+        .map(|i| (packed[i / 2] >> ((i % 2) * 4)) & 0xF)
+        .collect()
+}
+
+/// Block-scaled RNE encode of a tensor: returns `(scales, codes)` with
+/// one e8m0 scale byte per [`MX_BLOCK`] elements and one e2m1 code byte
+/// per element (low nibble; [`pack_nibbles`] halves it for the wire).
+/// Parallel over block-aligned ranges — each block's scale and codes
+/// depend only on that block, so the split is bit-identical to
+/// [`encode_tensor_serial`] at any thread count and SIMD backend.
+pub fn encode_tensor(x: &[f32]) -> (Vec<u8>, Vec<u8>) {
+    let n = x.len();
+    let mut scales = vec![0u8; blocks_of(n)];
+    let mut codes = vec![0u8; n];
+    let threads = par::workers_for(n, par::DEFAULT_GRAIN);
+    if threads <= 1 {
+        backend::mx_encode_rne(x, &mut scales, &mut codes);
+        return (scales, codes);
+    }
+    let ranges = par::split_even_aligned(n, threads, MX_BLOCK);
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let (mut st, mut ct) = (&mut scales[..], &mut codes[..]);
+        for (k, r) in ranges.into_iter().enumerate() {
+            let nb = (r.len() + MX_BLOCK - 1) / MX_BLOCK;
+            let (s1, s2) = st.split_at_mut(nb);
+            let (c1, c2) = ct.split_at_mut(r.len());
+            st = s2;
+            ct = c2;
+            let xs = &x[r];
+            if k + 1 == n_ranges {
+                // final partition runs on the calling thread
+                backend::mx_encode_rne(xs, s1, c1);
+            } else {
+                s.spawn(move || backend::mx_encode_rne(xs, s1, c1));
+            }
+        }
+    });
+    (scales, codes)
+}
+
+/// Single-threaded pure-scalar reference for [`encode_tensor`].
+pub fn encode_tensor_serial(x: &[f32]) -> (Vec<u8>, Vec<u8>) {
+    let mut scales = vec![0u8; blocks_of(x.len())];
+    let mut codes = vec![0u8; x.len()];
+    backend::scalar::mx_encode_rne(x, &mut scales, &mut codes);
+    (scales, codes)
+}
+
+/// Block-scaled *stochastic* encode: element `i` rounds onto the scaled
+/// e2m1 grid with the draw `rng.next_u32(counter_base + i)` — keyed by
+/// global element index, so the result is bit-identical to
+/// [`encode_tensor_sr_serial`] at any thread count, lane width and
+/// async schedule.
+pub fn encode_tensor_sr(x: &[f32], rng: &CounterRng, counter_base: u32) -> (Vec<u8>, Vec<u8>) {
+    let n = x.len();
+    let mut scales = vec![0u8; blocks_of(n)];
+    let mut codes = vec![0u8; n];
+    let threads = par::workers_for(n, par::DEFAULT_GRAIN);
+    if threads <= 1 {
+        backend::mx_encode_sr(x, &mut scales, &mut codes, rng, counter_base);
+        return (scales, codes);
+    }
+    let ranges = par::split_even_aligned(n, threads, MX_BLOCK);
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let (mut st, mut ct) = (&mut scales[..], &mut codes[..]);
+        for (k, r) in ranges.into_iter().enumerate() {
+            let nb = (r.len() + MX_BLOCK - 1) / MX_BLOCK;
+            let (s1, s2) = st.split_at_mut(nb);
+            let (c1, c2) = ct.split_at_mut(r.len());
+            st = s2;
+            ct = c2;
+            let base = counter_base.wrapping_add(r.start as u32);
+            let xs = &x[r];
+            if k + 1 == n_ranges {
+                backend::mx_encode_sr(xs, s1, c1, rng, base);
+            } else {
+                s.spawn(move || backend::mx_encode_sr(xs, s1, c1, rng, base));
+            }
+        }
+    });
+    (scales, codes)
+}
+
+/// Single-threaded pure-scalar reference for [`encode_tensor_sr`].
+pub fn encode_tensor_sr_serial(
+    x: &[f32],
+    rng: &CounterRng,
+    counter_base: u32,
+) -> (Vec<u8>, Vec<u8>) {
+    let mut scales = vec![0u8; blocks_of(x.len())];
+    let mut codes = vec![0u8; x.len()];
+    backend::scalar::mx_encode_sr(x, &mut scales, &mut codes, rng, counter_base);
+    (scales, codes)
+}
+
+/// Decode `(scales, codes)` back to f32 values (`out[i] =
+/// e2m1_decode(codes[i]) · scale(block of i)`), parallel over
+/// block-aligned ranges and bit-identical to [`decode_tensor_serial`].
+pub fn decode_tensor(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    assert_eq!(codes.len(), n, "codes/out length mismatch");
+    assert_eq!(scales.len(), blocks_of(n), "scales/out length mismatch");
+    let threads = par::workers_for(n, par::DEFAULT_GRAIN);
+    if threads <= 1 {
+        return backend::mx_decode(scales, codes, out);
+    }
+    let ranges = par::split_even_aligned(n, threads, MX_BLOCK);
+    let n_ranges = ranges.len();
+    std::thread::scope(|s| {
+        let mut ot = &mut out[..];
+        for (k, r) in ranges.into_iter().enumerate() {
+            let nb = (r.len() + MX_BLOCK - 1) / MX_BLOCK;
+            let (o1, o2) = ot.split_at_mut(r.len());
+            ot = o2;
+            let sb = r.start / MX_BLOCK;
+            let ss = &scales[sb..sb + nb];
+            let cs = &codes[r];
+            if k + 1 == n_ranges {
+                backend::mx_decode(ss, cs, o1);
+            } else {
+                s.spawn(move || backend::mx_decode(ss, cs, o1));
+            }
+        }
+    });
+}
+
+/// Single-threaded pure-scalar reference for [`decode_tensor`].
+pub fn decode_tensor_serial(scales: &[u8], codes: &[u8], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len(), "codes/out length mismatch");
+    assert_eq!(
+        scales.len(),
+        blocks_of(out.len()),
+        "scales/out length mismatch"
+    );
+    backend::scalar::mx_decode(scales, codes, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_grid_is_the_mx_magnitude_set() {
+        assert_eq!(E2M1.max_val(), 6.0);
+        assert_eq!(E2M1.grid_size(), 8);
+        let mags: Vec<f32> = (0u8..8).map(|c| e2m1_decode(c)).collect();
+        assert_eq!(mags, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+        // negatives mirror with the sign bit
+        for c in 1u8..8 {
+            assert_eq!(e2m1_decode(c | 0x8), -e2m1_decode(c));
+        }
+        // -0.0 decodes from code 8
+        assert_eq!(e2m1_decode(0x8).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn e2m1_codes_roundtrip() {
+        for c in 0u8..16 {
+            let v = e2m1_decode(c);
+            let c2 = e2m1_encode(v);
+            // -0.0 canonicalizes: Fp8Format::encode keeps the sign bit,
+            // so code 8 survives; every code is reproduced exactly.
+            assert_eq!(c2, c, "code {c} → {v} → {c2}");
+        }
+        // high nibble is ignored on decode
+        assert_eq!(e2m1_decode(0xF3).to_bits(), e2m1_decode(0x3).to_bits());
+        // NaN has no e2m1 code: stores +0
+        assert_eq!(e2m1_encode(f32::NAN), 0);
+    }
+
+    #[test]
+    fn e2m1_round_matches_grid() {
+        // RNE onto the grid: 2.4 → 2, 2.5 → 2 (tie-to-even), 2.6 → 3,
+        // 5.1 → 4 (tie band is [5,5]), 7.0 → 6 (saturate)
+        assert_eq!(E2M1.round(2.4), 2.0);
+        assert_eq!(E2M1.round(2.5), 2.0);
+        assert_eq!(E2M1.round(2.6), 3.0);
+        assert_eq!(E2M1.round(5.0), 4.0); // tie at 5: even neighbour 4
+        assert_eq!(E2M1.round(7.0), 6.0);
+        assert_eq!(E2M1.round(0.25), 0.0); // tie at 0.25: even neighbour 0
+        assert_eq!(E2M1.round(0.3), 0.5);
+    }
+
+    #[test]
+    fn e8m0_scale_selection() {
+        // amax 1.0 → exponent −2 → scale 0.25: absmax/scale = 4
+        assert_eq!(e8m0_from_absmax(1.0), 125);
+        assert_eq!(e8m0_decode(125), 0.25);
+        // amax 6.0 → exponent 0 → scale 1.0
+        assert_eq!(e8m0_from_absmax(6.0), 127);
+        assert_eq!(e8m0_decode(127), 1.0);
+        // zero block → scale 1.0
+        assert_eq!(e8m0_from_absmax(0.0), 127);
+        // inf clamps high, subnormal clamps low
+        assert_eq!(e8m0_from_absmax(f32::INFINITY), 254);
+        assert_eq!(e8m0_decode(254), f32::from_bits(254u32 << 23));
+        assert_eq!(e8m0_from_absmax(f32::from_bits(1)), 0);
+        assert_eq!(e8m0_decode(0), f32::from_bits(0x0040_0000));
+        assert!(e8m0_decode(255).is_nan());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for n in [0usize, 1, 2, 3, 31, 32, 33] {
+            let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+            let packed = pack_nibbles(&codes);
+            assert_eq!(packed.len(), (n + 1) / 2);
+            assert_eq!(unpack_nibbles(&packed, n), codes);
+        }
+    }
+
+    #[test]
+    fn encode_decode_tensor_roundtrips_grid_values() {
+        // values exactly on the scaled grid survive the roundtrip
+        let x: Vec<f32> = (0..67)
+            .map(|i| e2m1_decode((i % 16) as u8) * 0.25)
+            .collect();
+        let (scales, codes) = encode_tensor_serial(&x);
+        assert_eq!(scales.len(), blocks_of(x.len()));
+        let mut out = vec![0.0f32; x.len()];
+        decode_tensor_serial(&scales, &codes, &mut out);
+        for (i, (&a, &b)) in x.iter().zip(&out).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let rng = CounterRng::new(0xA4);
+        let x: Vec<f32> = (0..100_003)
+            .map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0)
+            .collect();
+        let (ws, wc) = encode_tensor_serial(&x);
+        let sr_rng = CounterRng::new(0x5EED);
+        let (ws2, wc2) = encode_tensor_sr_serial(&x, &sr_rng, 17);
+        let mut want = vec![0.0f32; x.len()];
+        decode_tensor_serial(&ws, &wc, &mut want);
+        for t in [1usize, 2, 8] {
+            crate::util::par::with_threads(t, || {
+                let (gs, gc) = encode_tensor(&x);
+                assert_eq!(gs, ws, "rne scales t={t}");
+                assert_eq!(gc, wc, "rne codes t={t}");
+                let (gs2, gc2) = encode_tensor_sr(&x, &sr_rng, 17);
+                assert_eq!(gs2, ws2, "sr scales t={t}");
+                assert_eq!(gc2, wc2, "sr codes t={t}");
+                let mut got = vec![0.0f32; x.len()];
+                decode_tensor(&ws, &wc, &mut got);
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "decode t={t}");
+            });
+        }
+    }
+}

@@ -29,6 +29,16 @@
 //! caught structurally but body corruption loaded clean). v2 files
 //! remain readable.
 //!
+//! v4 ([`encode_q`]) is the quantized-moments variant for
+//! `MomentsMode::Fp8` state: the header grows a moments-dtype tag at
+//! offset 28 (CRC moves to 32, over bytes `[0, 32)` ++ body) and the
+//! body stores params as 4-byte f32 but the first moment as 1-byte
+//! e5m2 codes and the second as 2-byte bf16 words — 7 bytes/param
+//! instead of 12. Lossless by construction: fp8-mode AdamW keeps `m`
+//! exactly on the e5m2 grid and `v` on the bf16 grid, so
+//! encode∘decode is the identity bitwise. Flat saves pick v3 or v4 by
+//! the trainer's moments mode; per-rank shards stay v3.
+//!
 //! Durability: [`save_atomic`] stages bytes in `<path>.tmp` and renames
 //! into place, so a crash mid-write can truncate only the temp file,
 //! never a previous good generation; [`list_generations`] /
@@ -60,6 +70,19 @@ pub const HEADER_LEN_V2: usize = 24;
 
 /// Byte offset of the v3 CRC word (the one span the CRC skips).
 pub const CRC_OFFSET: usize = 28;
+
+/// Version word of the quantized-moments (fp8 m / bf16 v) format.
+pub const VERSION_Q: u32 = 4;
+
+/// Header bytes of the v4 quantized-moments format.
+pub const HEADER_LEN_V4: usize = 36;
+
+/// Byte offset of the v4 CRC word.
+pub const CRC_OFFSET_V4: usize = 32;
+
+/// v4 moments-dtype tag: first moment on the e5m2 grid (1 byte),
+/// second on the bf16 grid (2 bytes). The only tag this build writes.
+pub const MOMENTS_TAG_FP8: u32 = 1;
 
 /// Elements per bulk-conversion block of the checkpoint codec.
 const CKPT_CHUNK: usize = 64 * 1024;
@@ -162,6 +185,42 @@ pub fn encode(step: u32, counter: u32, world: u32, p: &[f32], m: &[f32], v: &[f3
     bytes
 }
 
+/// Serialize trainer state with quantized moment storage
+/// (`MomentsMode::Fp8`) into the v4 wire format: params stay 4-byte
+/// f32, the first moment stores as 1-byte e5m2 codes, the second as
+/// 2-byte bf16 words — 7 bytes/param instead of 12. Lossless for state
+/// produced under fp8 moments (`m` on the e5m2 grid, `v` on the bf16
+/// grid); off-grid inputs would round, so the trainer only routes here
+/// when its moments mode says the grids hold.
+pub fn encode_q(step: u32, counter: u32, world: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
+    use crate::precision::E5M2;
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n, "state buffers must match");
+    let mut bytes = vec![0u8; HEADER_LEN_V4 + 7 * n];
+    bytes[0..4].copy_from_slice(&MAGIC);
+    bytes[4..8].copy_from_slice(&VERSION_Q.to_le_bytes());
+    bytes[8..12].copy_from_slice(&step.to_le_bytes());
+    bytes[12..16].copy_from_slice(&counter.to_le_bytes());
+    bytes[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+    bytes[24..28].copy_from_slice(&world.to_le_bytes());
+    bytes[28..32].copy_from_slice(&MOMENTS_TAG_FP8.to_le_bytes());
+    f32s_to_le_bytes(p, &mut bytes[HEADER_LEN_V4..HEADER_LEN_V4 + 4 * n]);
+    let mb = HEADER_LEN_V4 + 4 * n;
+    for (b, &x) in bytes[mb..mb + n].iter_mut().zip(m) {
+        *b = E5M2.encode(x);
+    }
+    let vb = mb + n;
+    for (b2, &x) in bytes[vb..vb + 2 * n].chunks_exact_mut(2).zip(v) {
+        b2.copy_from_slice(&((x.to_bits() >> 16) as u16).to_le_bytes());
+    }
+    let crc = !crc32_update(
+        crc32_update(!0, &bytes[..CRC_OFFSET_V4]),
+        &bytes[HEADER_LEN_V4..],
+    );
+    bytes[CRC_OFFSET_V4..HEADER_LEN_V4].copy_from_slice(&crc.to_le_bytes());
+    bytes
+}
+
 /// The legacy v2 writer (24-byte header, no world, no CRC) — kept so
 /// compat tests can pin that v2 files stay readable; new saves are v3.
 pub fn encode_v2(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Vec<u8> {
@@ -184,7 +243,7 @@ pub fn encode_v2(step: u32, counter: u32, p: &[f32], m: &[f32], v: &[f32]) -> Ve
 /// what the supervisor logs before deciding to restore.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CkptInfo {
-    /// Wire format version (2 or 3).
+    /// Wire format version (2, 3 or 4).
     pub version: u32,
     /// Optimizer step stored in the header.
     pub step: u32,
@@ -192,8 +251,10 @@ pub struct CkptInfo {
     pub counter: u32,
     /// Element count stored in the header.
     pub n: usize,
-    /// Save-time collective world (v3 only; `None` for v2 files).
+    /// Save-time collective world (v3+; `None` for v2 files).
     pub world: Option<u32>,
+    /// Moments-dtype tag (v4 only; `None` for v2/v3 full-f32 files).
+    pub moments: Option<u32>,
 }
 
 /// Validate magic/version and read the header fields (no CRC or body
@@ -212,8 +273,9 @@ pub fn inspect(bytes: &[u8]) -> Result<CkptInfo> {
     let header = match version {
         2 => HEADER_LEN_V2,
         3 => HEADER_LEN,
+        4 => HEADER_LEN_V4,
         _ => bail!(
-            "unsupported checkpoint version {version} (this build reads v2/v{VERSION}; \
+            "unsupported checkpoint version {version} (this build reads v2–v{VERSION_Q}; \
              v1 files predate the header and must be regenerated)"
         ),
     };
@@ -228,6 +290,7 @@ pub fn inspect(bytes: &[u8]) -> Result<CkptInfo> {
         counter: u32::from_le_bytes(bytes[12..16].try_into()?),
         n: u64::from_le_bytes(bytes[16..24].try_into()?) as usize,
         world: (version >= 3).then(|| u32::from_le_bytes(bytes[24..28].try_into().unwrap())),
+        moments: (version >= 4).then(|| u32::from_le_bytes(bytes[28..32].try_into().unwrap())),
     })
 }
 
@@ -241,12 +304,48 @@ pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) ->
     let n = p.len();
     assert!(m.len() == n && v.len() == n, "state buffers must match");
     let info = inspect(bytes)?;
-    let header = if info.version == 2 { HEADER_LEN_V2 } else { HEADER_LEN };
     ensure!(
         info.n == n,
         "checkpoint holds {} elements, trainer expects {n}",
         info.n
     );
+    if info.version == VERSION_Q {
+        use crate::precision::E5M2;
+        ensure!(
+            bytes.len() == HEADER_LEN_V4 + 7 * n,
+            "truncated checkpoint body: {} bytes, expected {}",
+            bytes.len(),
+            HEADER_LEN_V4 + 7 * n
+        );
+        let stored = u32::from_le_bytes(bytes[CRC_OFFSET_V4..HEADER_LEN_V4].try_into()?);
+        let computed = !crc32_update(
+            crc32_update(!0, &bytes[..CRC_OFFSET_V4]),
+            &bytes[HEADER_LEN_V4..],
+        );
+        ensure!(
+            stored == computed,
+            "checkpoint CRC mismatch (stored {stored:08x}, computed {computed:08x}) — \
+             the file is corrupt; fall back to the previous generation"
+        );
+        let tag = info.moments.expect("v4 header carries a moments tag");
+        ensure!(
+            tag == MOMENTS_TAG_FP8,
+            "unknown moments-dtype tag {tag} (this build reads tag {MOMENTS_TAG_FP8})"
+        );
+        le_bytes_to_f32s(&bytes[HEADER_LEN_V4..HEADER_LEN_V4 + 4 * n], p);
+        let mb = HEADER_LEN_V4 + 4 * n;
+        for (x, &b) in m.iter_mut().zip(&bytes[mb..mb + n]) {
+            *x = E5M2.decode(b);
+        }
+        let vb = mb + n;
+        for (x, b2) in v.iter_mut().zip(bytes[vb..vb + 2 * n].chunks_exact(2)) {
+            *x = f32::from_bits(
+                (u16::from_le_bytes(b2.try_into().expect("2-byte chunk")) as u32) << 16,
+            );
+        }
+        return Ok((info.step, info.counter));
+    }
+    let header = if info.version == 2 { HEADER_LEN_V2 } else { HEADER_LEN };
     ensure!(
         bytes.len() == header + 12 * n,
         "truncated checkpoint body: {} bytes, expected {}",
@@ -739,6 +838,63 @@ mod tests {
         assert_eq!(bits(&p), bits(&p2));
         assert_eq!(bits(&m), bits(&m2));
         assert_eq!(bits(&v), bits(&v2));
+    }
+
+    /// v4 (quantized moments): for state already on the fp8-moments
+    /// grids — `m` e5m2-valued, `v` bf16-valued, exactly what the
+    /// trainer holds under `MomentsMode::Fp8` — the 7-byte/param wire
+    /// format roundtrips bitwise, and the strided bit-flip sweep shows
+    /// the v4 CRC covers header and body like v3's does.
+    #[test]
+    fn v4_quantized_roundtrip_is_bitwise_for_grid_state() {
+        use crate::precision::{round_to_bf16, E5M2};
+        let n = 100_003;
+        let (p, m0, v0) = state(n);
+        let m: Vec<f32> = m0.iter().map(|&x| E5M2.round(x)).collect();
+        let v: Vec<f32> = v0.iter().map(|&x| round_to_bf16(x)).collect();
+        let bytes = encode_q(11, 97, 2, &p, &m, &v);
+        assert_eq!(bytes.len(), HEADER_LEN_V4 + 7 * n);
+        let info = inspect(&bytes).unwrap();
+        assert_eq!(info.version, VERSION_Q);
+        assert_eq!(info.world, Some(2));
+        assert_eq!(info.moments, Some(MOMENTS_TAG_FP8));
+        let (mut p2, mut m2, mut v2) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+        let (step, counter) = decode_into(&bytes, &mut p2, &mut m2, &mut v2).unwrap();
+        assert_eq!((step, counter), (11, 97));
+        assert_eq!(bits(&p), bits(&p2));
+        assert_eq!(bits(&m), bits(&m2));
+        assert_eq!(bits(&v), bits(&v2));
+
+        // the v4 CRC rejects flipped bits anywhere in the file
+        let mut pos = 0usize;
+        let mut flips = 0usize;
+        while pos < bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 1 << (pos % 8);
+            let err = decode_err(&corrupt, n);
+            let msg = err.to_string();
+            assert!(
+                msg.contains("CRC mismatch")
+                    || msg.contains("not an LLMQ checkpoint")
+                    || msg.contains("version")
+                    || msg.contains("elements")
+                    || msg.contains("truncated")
+                    || msg.contains("moments-dtype"),
+                "v4 flip at byte {pos} must be rejected, got: {msg}"
+            );
+            flips += 1;
+            pos += 131;
+        }
+        assert!(flips > 100, "sweep covered {flips} positions");
+
+        // truncation at the section edges is rejected by name
+        for cut in [0, 35, 36, 36 + 4 * n, 36 + 5 * n, bytes.len() - 1] {
+            let err = decode_err(&bytes[..cut], n);
+            assert!(
+                err.to_string().contains("truncated checkpoint"),
+                "cut {cut}: {err}"
+            );
+        }
     }
 
     /// v2 files (no world, no CRC) stay readable — the compat contract.

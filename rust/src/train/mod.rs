@@ -27,7 +27,7 @@ use crate::util::Args;
 
 /// CLI: `llmq train --preset small --dtype fp8 --steps 50 --grad-accum 2
 /// --world 1 --lr 3e-4 --seed 0 --data synth --eval-every 10
-/// [--log FILE] [--save FILE] [--resume FILE]
+/// [--moments fp32|fp8] [--log FILE] [--save FILE] [--resume FILE]
 /// [--supervise --retries N --backoff-ms B --ckpt-every K --keep-last G
 ///  --ckpt-dir DIR --no-shrink]`.
 ///
@@ -44,10 +44,19 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
     // A mistyped LLMQ_FAULT program must fail the run loudly, before any
     // work happens — not silently inject nothing.
     crate::fault::validate_env()?;
+    // Validate `--moments` before the multi-process early return so a
+    // typo (or an unsupported combination) fails loudly either way.
+    let moments =
+        crate::optim::MomentsMode::parse(&args.one_of("moments", "fp32", &["fp32", "fp8"])?)?;
     // Multi-process mode hands the whole run to the comm coordinator
     // (which spawns one OS process per rank); no trainer runs in this
     // process.
     if args.u32("distributed", 0)? > 0 {
+        anyhow::ensure!(
+            moments == crate::optim::MomentsMode::Fp32,
+            "--moments fp8 is not supported under --distributed yet \
+             (rank processes exchange full-f32 v3 state shards)"
+        );
         return crate::comm::run_distributed_cli(args);
     }
     let cfg = TrainConfig {
@@ -58,6 +67,7 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
         seed: args.u32("seed", 0)?,
         world: args.usize("world", 1)?,
         eval_every: args.usize("eval-every", 10)?,
+        moments,
         ..Default::default()
     };
     let preset = args.str("preset", "small")?;

@@ -252,6 +252,7 @@ impl Trainer {
             // shard count (the artifact's lowering), not the collective
             // world size.
             opt_world: self.man.world,
+            moments: self.cfg.moments,
         };
         let grad_norm = if fused {
             if crate::exec::async_enabled() {
@@ -354,26 +355,40 @@ impl Trainer {
 
     // ----- checkpoints ------------------------------------------------------
 
-    /// Write params / moments / step / counter in the CRC32-checked v3
-    /// wire format (see [`crate::train::checkpoint`]) via an atomic
+    /// Write params / moments / step / counter in the CRC32-checked wire
+    /// format (see [`crate::train::checkpoint`]) via an atomic
     /// write-temp-then-rename, so a crash mid-save never clobbers the
-    /// previous good file with a torn one.
+    /// previous good file with a torn one. Full-f32 moments save as v3;
+    /// under `MomentsMode::Fp8` the moments already live on the
+    /// e5m2/bf16 grids, so the save routes to the 7-byte/param v4 codec
+    /// losslessly.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let bytes = super::checkpoint::encode(
-            self.step,
-            self.counter,
-            self.cfg.world as u32,
-            &self.params,
-            &self.m,
-            &self.v,
-        );
+        let bytes = match self.cfg.moments {
+            optim::MomentsMode::Fp32 => super::checkpoint::encode(
+                self.step,
+                self.counter,
+                self.cfg.world as u32,
+                &self.params,
+                &self.m,
+                &self.v,
+            ),
+            optim::MomentsMode::Fp8 => super::checkpoint::encode_q(
+                self.step,
+                self.counter,
+                self.cfg.world as u32,
+                &self.params,
+                &self.m,
+                &self.v,
+            ),
+        };
         super::checkpoint::save_atomic(std::path::Path::new(path), bytes, self.step)
     }
 
-    /// Restore a checkpoint written by [`Trainer::save_checkpoint`] (v3,
-    /// CRC-verified) or by an older v2 build. Foreign files, pre-header
-    /// (v1) files, size mismatches, truncation, and CRC failures are
-    /// rejected with named errors instead of being misread as state.
+    /// Restore a checkpoint written by [`Trainer::save_checkpoint`]
+    /// (v3/v4, CRC-verified) or by an older v2 build. Foreign files,
+    /// pre-header (v1) files, size mismatches, truncation, and CRC
+    /// failures are rejected with named errors instead of being misread
+    /// as state.
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
         let bytes = std::fs::read(path)?;
         let (step, counter) =
@@ -428,7 +443,9 @@ impl Trainer {
             eps: self.cfg.eps,
             weight_decay: self.cfg.weight_decay,
         };
-        optim::AdamW::new(hp).step(p, m, v, g, lr, step, counter_base, p.len() as u32);
+        optim::AdamW::new(hp)
+            .with_moments(self.cfg.moments)
+            .step(p, m, v, g, lr, step, counter_base, p.len() as u32);
     }
 }
 

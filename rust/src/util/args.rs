@@ -167,6 +167,23 @@ impl Args {
         }
     }
 
+    /// Enumerated string option with default: the value (lowercased)
+    /// must be one of `allowed`; anything else is the named invalid
+    /// error listing the choices — for flags like `--moments fp8` where
+    /// a typo must not silently fall back to the default.
+    pub fn one_of(&self, key: &str, default: &str, allowed: &[&str]) -> Result<String, ArgError> {
+        let v = self.value_of(key)?.unwrap_or(default).to_ascii_lowercase();
+        if allowed.iter().any(|a| *a == v) {
+            Ok(v)
+        } else {
+            Err(ArgError::invalid(
+                key,
+                &v,
+                &format!("one of {}", allowed.join("|")),
+            ))
+        }
+    }
+
     /// Was a bare `--flag` present?
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
@@ -232,6 +249,25 @@ mod tests {
         // u32 accessor rejects negatives and garbage the same way
         let b = mk("train --seed -3");
         assert_eq!(b.u32("seed", 0).unwrap_err().flag(), "seed");
+    }
+
+    #[test]
+    fn one_of_accepts_listed_values_and_names_garbage() {
+        let a = mk("train --moments fp8");
+        assert_eq!(a.one_of("moments", "fp32", &["fp32", "fp8"]).unwrap(), "fp8");
+        // absent → default; case-folded input still matches
+        assert_eq!(a.one_of("dtype", "bf16", &["bf16", "fp8"]).unwrap(), "bf16");
+        let b = mk("train --moments FP8");
+        assert_eq!(b.one_of("moments", "fp32", &["fp32", "fp8"]).unwrap(), "fp8");
+        // garbage is the named invalid error listing the choices
+        let c = mk("train --moments int4");
+        let err = c.one_of("moments", "fp32", &["fp32", "fp8"]).unwrap_err();
+        assert_eq!(err.flag(), "moments");
+        assert!(err.to_string().contains("fp32|fp8"), "{err}");
+        assert!(err.to_string().contains("int4"), "{err}");
+        // bare flag with no value is the missing-value error
+        let d = mk("train --moments");
+        assert_eq!(d.one_of("moments", "fp32", &["fp32", "fp8"]).unwrap_err().flag(), "moments");
     }
 
     #[test]

@@ -1,0 +1,738 @@
+//! Codec conformance suite: golden-vector batteries and seeded property
+//! sweeps pinning every storage codec — fp8 (e4m3 / e5m2), bf16, and the
+//! block-scaled mx/e2m1 tier — to the scalar reference loops in
+//! `precision::backend::scalar` (the spec, per NUMERICS.md Rules 1 and 7).
+//!
+//! Three layers of pinning:
+//!   1. Hand-computed golden vectors (IEEE specials, denormals, ±0,
+//!      absmax ties, block-boundary lengths) checked bit-exact against
+//!      the scalar loops.
+//!   2. The dispatch entry points AND the raw AVX2/NEON kernels checked
+//!      bit-identical to scalar at every boundary length — the arch
+//!      kernels are exercised directly (behind a runtime feature probe),
+//!      not just through whatever `LLMQ_SIMD` resolved.
+//!   3. Seeded (murmur3-derived counter RNG) property sweeps: round-trip
+//!      error bounded by the grid's scaled ULP, stochastic-rounding
+//!      expectation unbiased over counter sweeps, and encode bitwise
+//!      invariant across 1/2/8 threads × scalar/auto SIMD × async
+//!      on/off. CI re-runs this binary under `LLMQ_SIMD=scalar|auto` ×
+//!      `LLMQ_THREADS=1|8` so the env-level matrix is covered too.
+
+use llmq::exec;
+use llmq::precision::backend::{self, scalar};
+use llmq::precision::fp8::stochastic_round_fp8;
+use llmq::precision::{bf16, mx, CounterRng, Fp8Format, E2M1, E4M3, E5M2, MX_BLOCK};
+use llmq::util::par;
+
+/// The block-boundary length battery from the issue: empty, single
+/// element, one short block, exactly one block, one block + 1, and a
+/// many-block tensor with a one-element tail (2048 blocks + 1).
+const LENS: [usize; 6] = [0, 1, 31, 32, 33, 65_537];
+
+/// Seeded input in roughly [-8, 8] — `CounterRng` is the murmur3
+/// finalizer, so this is the "murmur3-derived" stream of the issue.
+fn seeded(n: usize, key: u32) -> Vec<f32> {
+    let rng = CounterRng::new(key);
+    (0..n)
+        .map(|i| (rng.next_f32(i as u32) - 0.5) * 16.0)
+        .collect()
+}
+
+/// Sprinkle IEEE specials over a seeded vector at fixed strides so the
+/// conformance sweeps also cover NaN / ±inf / ±0 / denormal lanes.
+fn with_specials(mut x: Vec<f32>) -> Vec<f32> {
+    let specials = [
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f32::from_bits(1),          // smallest positive denormal
+        -f32::from_bits(0x7F_FFFF), // largest negative denormal
+        f32::MIN_POSITIVE,
+        f32::MAX,
+    ];
+    for (k, s) in specials.iter().enumerate() {
+        let idx = k * 7 + 3;
+        if idx < x.len() {
+            x[idx] = *s;
+        }
+    }
+    x
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: e2m1 code table and rounding
+// ---------------------------------------------------------------------------
+
+/// Every 4-bit e2m1 code decodes to its hand-computed grid value, and
+/// every grid value encodes back to its code (sign at bit 3).
+#[test]
+fn golden_e2m1_code_table() {
+    let expect = [
+        (0x0u8, 0.0f32),
+        (0x1, 0.5),
+        (0x2, 1.0),
+        (0x3, 1.5),
+        (0x4, 2.0),
+        (0x5, 3.0),
+        (0x6, 4.0),
+        (0x7, 6.0),
+        (0x8, -0.0),
+        (0x9, -0.5),
+        (0xA, -1.0),
+        (0xB, -1.5),
+        (0xC, -2.0),
+        (0xD, -3.0),
+        (0xE, -4.0),
+        (0xF, -6.0),
+    ];
+    for (code, val) in expect {
+        assert_eq!(
+            mx::e2m1_decode(code).to_bits(),
+            val.to_bits(),
+            "decode({code:#x})"
+        );
+        assert_eq!(mx::e2m1_encode(val), code, "encode({val})");
+        // the high nibble is ignored on decode
+        assert_eq!(
+            mx::e2m1_decode(code | 0xF0).to_bits(),
+            val.to_bits(),
+            "decode({code:#x} | 0xF0)"
+        );
+    }
+    // e2m1 has no NaN encoding: NaN stores code 0 (+0.0)
+    assert_eq!(mx::e2m1_encode(f32::NAN), 0);
+}
+
+/// RNE onto the e2m1 grid: hand-computed table including every
+/// tie-to-even case, saturation, and the IEEE specials.
+#[test]
+fn golden_e2m1_rounding() {
+    let cases = [
+        (0.0f32, 0.0f32),
+        (0.2, 0.0),   // below the 0.25 midpoint
+        (0.25, 0.0),  // tie between 0 and 0.5 -> even (0)
+        (0.3, 0.5),
+        (0.75, 1.0),  // tie between 0.5 and 1.0 -> even (1.0)
+        (1.25, 1.0),  // tie between 1.0 and 1.5 -> even (1.0)
+        (1.75, 2.0),  // tie between 1.5 and 2.0 -> even (2.0)
+        (2.5, 2.0),   // tie between 2 and 3 -> even (2)
+        (3.5, 4.0),   // tie between 3 and 4 -> even (4)
+        (5.0, 4.0),   // tie between 4 and 6 -> even (4)
+        (5.25, 6.0),
+        (6.0, 6.0),
+        (7.0, 6.0),             // saturate
+        (f32::INFINITY, 6.0),   // saturate
+        (f32::MAX, 6.0),
+        (f32::from_bits(1), 0.0), // denormal underflows to zero
+    ];
+    for (x, want) in cases {
+        assert_eq!(E2M1.round(x).to_bits(), want.to_bits(), "round({x})");
+        if x != 0.0 {
+            // negatives mirror (a negative input that underflows keeps
+            // its sign: round(-0.2) is -0.0)
+            assert_eq!(E2M1.round(-x).to_bits(), (-want).to_bits(), "round({})", -x);
+        }
+    }
+    assert!(E2M1.round(f32::NAN).is_nan());
+    // -0.0 rounds to +0.0 (the round path drops the zero's sign)
+    assert_eq!(E2M1.round(-0.0).to_bits(), 0.0f32.to_bits());
+}
+
+/// e8m0 scale selection and decode: hand-computed byte per absmax. The
+/// invariant: `absmax / scale` lands in [4, 8) (the top e2m1 binade),
+/// with all-zero, denormal and infinite absmax clamped as documented.
+#[test]
+fn golden_e8m0_scale_bytes() {
+    let cases = [
+        (0.0f32, 127u8),              // all-zero block: scale 1.0
+        (1.0, 125),                   // scale 0.25 -> 1.0/0.25 = 4.0
+        (4.0, 127),                   // scale 1.0
+        (6.0, 127),                   // scale 1.0 -> 6.0 in [4, 8)
+        (7.99, 127),                  // still the same binade
+        (8.0, 128),                   // scale 2.0
+        (15.5, 128),                  // scale 2.0 -> 7.75
+        (448.0, 133),                 // scale 64 -> 7.0
+        (f32::INFINITY, 254),         // clamp to the largest scale 2^127
+        (f32::MAX, 252),              // scale 2^125
+        (f32::from_bits(1), 0),       // denormal absmax: smallest scale
+        (f32::MIN_POSITIVE, 0),       // 2^-126: exponent clamps to -127
+    ];
+    for (amax, byte) in cases {
+        assert_eq!(mx::e8m0_from_absmax(amax), byte, "scale byte for {amax}");
+    }
+    // decode is the exact power of two (byte 0 is an f32 subnormal)
+    assert_eq!(mx::e8m0_decode(127).to_bits(), 1.0f32.to_bits());
+    assert_eq!(mx::e8m0_decode(125).to_bits(), 0.25f32.to_bits());
+    assert_eq!(mx::e8m0_decode(128).to_bits(), 2.0f32.to_bits());
+    assert_eq!(mx::e8m0_decode(254).to_bits(), 2.0f32.powi(127).to_bits());
+    assert_eq!(mx::e8m0_decode(0).to_bits(), 0x0040_0000); // 2^-127
+    assert!(mx::e8m0_decode(255).is_nan()); // e8m0 NaN code
+    // sanity: every produced byte decodes so absmax/scale is in [4, 8)
+    for amax in [0.5f32, 1.0, 3.0, 4.0, 6.0, 100.0, 1e30] {
+        let s = mx::e8m0_decode(mx::e8m0_from_absmax(amax));
+        let u = amax / s;
+        assert!((4.0..8.0).contains(&u), "absmax {amax} -> u {u}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: whole mx blocks through the scalar spec
+// ---------------------------------------------------------------------------
+
+/// One short block, hand-encoded end to end: scale from the absmax, every
+/// element RNE onto the scaled grid. Also pins the absmax-tie case (+5
+/// vs -5 tie for absmax — sign is dropped, the scale is the same either
+/// way) and NaN flush-to-zero.
+#[test]
+fn golden_mx_single_block() {
+    // absmax 7.0 -> scale byte 127 (scale 1.0)
+    let x = [6.0f32, -6.0, 3.0, -0.5, 0.25, 0.3, 7.0, 0.0];
+    let mut scales = [0u8; 1];
+    let mut codes = [0u8; 8];
+    scalar::mx_encode_rne(&x, &mut scales, &mut codes);
+    assert_eq!(scales, [127]);
+    assert_eq!(codes, [0x7, 0xF, 0x5, 0x9, 0x0, 0x1, 0x7, 0x0]);
+    let mut out = [0.0f32; 8];
+    scalar::mx_decode(&scales, &codes, &mut out);
+    assert_eq!(out, [6.0, -6.0, 3.0, -0.5, 0.0, 0.5, 6.0, 0.0]);
+
+    // absmax tie: +5 and -5 tie for the block absmax; sign is dropped
+    let tie = [-5.0f32, 5.0, 0.0, 0.0];
+    let (mut s2, mut c2) = ([0u8; 1], [0u8; 4]);
+    scalar::mx_encode_rne(&tie, &mut s2, &mut c2);
+    assert_eq!(s2, [127]); // absmax 5.0 -> scale 1.0
+    // 5.0/1.0 = 5 ties between 4 and 6 -> even (4)
+    assert_eq!(c2, [0xE, 0x6, 0x0, 0x0]);
+
+    // NaN inside a block: ignored by the absmax fold, stored as code 0
+    let nan = [f32::NAN, 4.0, -0.0, 0.0];
+    let (mut s3, mut c3) = ([0u8; 1], [0u8; 4]);
+    scalar::mx_encode_rne(&nan, &mut s3, &mut c3);
+    assert_eq!(s3, [127]); // scale from absmax 4.0
+    assert_eq!(c3, [0x0, 0x6, 0x0, 0x0]); // NaN and -0.0 both store 0
+
+    // an all-infinite block: scale clamps to 2^127, codes saturate to 6,
+    // and the decode overflows back to infinity
+    let inf = [f32::INFINITY, f32::NEG_INFINITY];
+    let (mut s4, mut c4) = ([0u8; 1], [0u8; 2]);
+    scalar::mx_encode_rne(&inf, &mut s4, &mut c4);
+    assert_eq!(s4, [254]);
+    assert_eq!(c4, [0x7, 0xF]);
+    let mut o4 = [0.0f32; 2];
+    scalar::mx_decode(&s4, &c4, &mut o4);
+    assert_eq!(o4[0], f32::INFINITY); // 6 * 2^127 overflows f32
+    assert_eq!(o4[1], f32::NEG_INFINITY);
+}
+
+/// The worked 33-element example of NUMERICS.md Rule 7: block 0 selects
+/// its scale from elements 0..32, the one-element block 1 from element
+/// 32 alone. Every code is hand-computed.
+#[test]
+fn golden_mx_33_element_worked_example() {
+    // x[i] = i/2 for i in 0..32 (absmax 15.5 -> scale 2.0), x[32] = -0.5
+    // (absmax 0.5 -> scale 0.125; -0.5/0.125 = -4).
+    let mut x: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+    x.push(-0.5);
+    let mut scales = [0u8; 2];
+    let mut codes = [0u8; 33];
+    scalar::mx_encode_rne(&x, &mut scales, &mut codes);
+    assert_eq!(scales, [128, 124], "block scales: 2.0 and 0.125");
+    #[rustfmt::skip]
+    let want: [u8; 33] = [
+        // u = i/4 rounded onto {0,.5,1,1.5,2,3,4,6}, ties to even
+        0, 0, 1, 2, 2, 2, 3, 4,     // u = 0.00 .. 1.75
+        4, 4, 4, 5, 5, 5, 6, 6,     // u = 2.00 .. 3.75
+        6, 6, 6, 6, 6, 7, 7, 7,     // u = 4.00 .. 5.75
+        7, 7, 7, 7, 7, 7, 7, 7,     // u = 6.00 .. 7.75 (saturate at 6)
+        0xE,                        // block 1: -0.5/0.125 = -4.0
+    ];
+    assert_eq!(codes, want);
+    let mut out = [0.0f32; 33];
+    scalar::mx_decode(&scales, &codes, &mut out);
+    assert_eq!(out[0], 0.0);
+    assert_eq!(out[2], 1.0); // code 1 = 0.5, times scale 2.0
+    assert_eq!(out[31], 12.0); // saturated: 6 * 2.0
+    assert_eq!(out[32], -0.5); // block 1 decodes with its own scale
+}
+
+/// Nibble packing round-trips at even and odd lengths, with element 2k
+/// in the low nibble of byte k.
+#[test]
+fn golden_nibble_packing() {
+    let codes = [0x7u8, 0xF, 0x5, 0x9, 0x1];
+    let packed = mx::pack_nibbles(&codes);
+    assert_eq!(packed, vec![0xF7, 0x95, 0x01]);
+    assert_eq!(mx::unpack_nibbles(&packed, 5), codes.to_vec());
+    assert_eq!(mx::pack_nibbles(&[]), Vec::<u8>::new());
+    for n in [0usize, 1, 31, 32, 33] {
+        let cs: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+        assert_eq!(mx::unpack_nibbles(&mx::pack_nibbles(&cs), n), cs);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors: fp8 (e4m3 / e5m2) and bf16
+// ---------------------------------------------------------------------------
+
+/// Hand-computed e4m3 byte codes through the scalar encode/decode loops:
+/// specials, saturation, denormals and tie-to-even.
+#[test]
+fn golden_e4m3_vectors() {
+    // (input, byte, decoded grid value) at scale 1.0
+    let cases: &[(f32, u8, f32)] = &[
+        (0.0, 0x00, 0.0),
+        (-0.0, 0x00, 0.0),            // round drops the zero's sign
+        (1.0, 0x38, 1.0),
+        (-1.0, 0xB8, -1.0),
+        (448.0, 0x7E, 448.0),          // e4m3 max
+        (500.0, 0x7E, 448.0),          // saturate
+        (f32::INFINITY, 0x7E, 448.0),  // saturate
+        (f32::NEG_INFINITY, 0xFE, -448.0),
+        (0.001953125, 0x01, 0.001953125),  // 2^-9: smallest denormal
+        (0.0009765625, 0x00, 0.0),     // 2^-10 ties down to zero (even)
+        (0.0029296875, 0x02, 0.00390625), // 3*2^-10 ties up to 2^-8
+        (1.0625, 0x38, 1.0),           // tie at 8.5 ulp -> even (8)
+        (1.1875, 0x3A, 1.25),          // tie at 9.5 ulp -> even (10)
+    ];
+    for &(x, byte, dec) in cases {
+        let mut out = [0u8; 1];
+        scalar::fp8_encode_scaled(E4M3, &[x], 1.0, &mut out);
+        assert_eq!(out[0], byte, "e4m3 encode({x})");
+        let mut back = [0.0f32; 1];
+        scalar::fp8_decode_scaled(E4M3, &out, 1.0, &mut back);
+        assert_eq!(back[0].to_bits(), dec.to_bits(), "e4m3 decode({byte:#x})");
+    }
+    // NaN has the canonical all-ones code
+    let mut out = [0u8; 1];
+    scalar::fp8_encode_scaled(E4M3, &[f32::NAN], 1.0, &mut out);
+    assert_eq!(out[0], 0x7F);
+    // scaled path: encode(x/scale), decode multiplies back
+    let mut o = [0u8; 1];
+    scalar::fp8_encode_scaled(E4M3, &[3.0], 0.5, &mut o);
+    assert_eq!(o[0], 0x4C); // round(6.0) = 6.0 = 1.5 * 2^2
+    let mut b = [0.0f32; 1];
+    scalar::fp8_decode_scaled(E4M3, &o, 0.5, &mut b);
+    assert_eq!(b[0], 3.0);
+}
+
+/// Hand-computed e5m2 byte codes: the gradient format's wider exponent,
+/// max 57344, denormal floor 2^-16.
+#[test]
+fn golden_e5m2_vectors() {
+    let denorm = 2.0f32.powi(-16); // e5m2's smallest denormal step
+    let cases: &[(f32, u8, f32)] = &[
+        (0.0, 0x00, 0.0),
+        (1.0, 0x3C, 1.0),
+        (-1.5, 0xBE, -1.5),
+        (57344.0, 0x7B, 57344.0),      // e5m2 max = 1.75 * 2^15
+        (1.0e9, 0x7B, 57344.0),        // saturate
+        (f32::INFINITY, 0x7B, 57344.0),
+        (denorm, 0x01, denorm),
+        (1.125, 0x3C, 1.0),            // tie at 4.5 ulp -> even (4)
+        (1.375, 0x3E, 1.5),            // tie at 5.5 ulp -> even (6)
+    ];
+    for &(x, byte, dec) in cases {
+        let mut out = [0u8; 1];
+        scalar::fp8_encode_scaled(E5M2, &[x], 1.0, &mut out);
+        assert_eq!(out[0], byte, "e5m2 encode({x})");
+        let mut back = [0.0f32; 1];
+        scalar::fp8_decode_scaled(E5M2, &out, 1.0, &mut back);
+        assert_eq!(back[0].to_bits(), dec.to_bits(), "e5m2 decode({byte:#x})");
+    }
+}
+
+/// bf16 RNE golden vectors: tie-to-even on the 16-bit boundary, sign of
+/// zero preserved, NaN preserved, f32::MAX overflowing to infinity.
+#[test]
+fn golden_bf16_vectors() {
+    let cases: &[(u32, u32)] = &[
+        (0x3F80_0000, 0x3F80_0000), // 1.0 -> 1.0
+        (0x3F80_8000, 0x3F80_0000), // 1 + 2^-8: tie -> even (1.0)
+        (0x3F81_8000, 0x3F82_0000), // 1 + 3*2^-8: tie -> even (1.015625)
+        (0x3F80_8001, 0x3F81_0000), // just above the tie -> up
+        (0x8000_0000, 0x8000_0000), // -0.0 preserved
+        (0x0000_0001, 0x0000_0000), // tiny denormal underflows to +0
+        (0x7F80_0000, 0x7F80_0000), // +inf preserved
+        (0x7F7F_FFFF, 0x7F80_0000), // f32::MAX rounds up to +inf
+    ];
+    for &(input, want) in cases {
+        let got = llmq::precision::round_to_bf16(f32::from_bits(input));
+        assert_eq!(got.to_bits(), want, "bf16({input:#010x})");
+    }
+    assert!(llmq::precision::round_to_bf16(f32::NAN).is_nan());
+    // pack/unpack round-trips the high 16 bits exactly
+    let vals = [1.0f32, -2.5, 0.15625, -0.0, f32::INFINITY];
+    let mut packed = [0u16; 5];
+    bf16::pack(&vals, &mut packed);
+    assert_eq!(packed, [0x3F80, 0xC020, 0x3E20, 0x8000, 0x7F80]);
+    let mut un = [0.0f32; 5];
+    bf16::unpack(&packed, &mut un);
+    assert_eq!(bits(&un), bits(&vals));
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch and raw arch kernels pinned to scalar at every length
+// ---------------------------------------------------------------------------
+
+/// The codec kernel surface under test, so the scalar / dispatch / raw
+/// AVX2 / raw NEON tiers run the identical battery.
+struct CodecFns {
+    label: &'static str,
+    absmax: fn(&[f32]) -> f32,
+    fp8_encode_scaled: fn(Fp8Format, &[f32], f32, &mut [u8]),
+    fp8_decode_scaled: fn(Fp8Format, &[u8], f32, &mut [f32]),
+    mx_encode_rne: fn(&[f32], &mut [u8], &mut [u8]),
+    mx_encode_sr: fn(&[f32], &mut [u8], &mut [u8], &CounterRng, u32),
+    mx_decode: fn(&[u8], &[u8], &mut [f32]),
+}
+
+/// Run the full boundary-length battery (seeded data + IEEE specials)
+/// through `fns` and require bitwise equality with the scalar spec.
+fn check_codec_matches_scalar_spec(fns: &CodecFns) {
+    let rng = CounterRng::new(0xC0DEC);
+    for (li, &n) in LENS.iter().enumerate() {
+        let x = with_specials(seeded(n, 0xABC0 + li as u32));
+        let ctx = |what: &str| format!("{} {what} n={n}", fns.label);
+
+        assert_eq!(
+            (fns.absmax)(&x).to_bits(),
+            scalar::absmax(&x).to_bits(),
+            "{}",
+            ctx("absmax")
+        );
+
+        for fmt in [E4M3, E5M2] {
+            for scale in [1.0f32, 0.0625, 32.0] {
+                let (mut a, mut b) = (vec![0u8; n], vec![0u8; n]);
+                (fns.fp8_encode_scaled)(fmt, &x, scale, &mut a);
+                scalar::fp8_encode_scaled(fmt, &x, scale, &mut b);
+                assert_eq!(a, b, "{} s={scale}", ctx(fmt.name));
+                let (mut da, mut db) = (vec![0.0f32; n], vec![0.0f32; n]);
+                (fns.fp8_decode_scaled)(fmt, &a, scale, &mut da);
+                scalar::fp8_decode_scaled(fmt, &b, scale, &mut db);
+                assert_eq!(bits(&da), bits(&db), "{} s={scale}", ctx(fmt.name));
+            }
+        }
+
+        let blocks = mx::blocks_of(n);
+        let (mut sa, mut ca) = (vec![0u8; blocks], vec![0u8; n]);
+        let (mut sb, mut cb) = (vec![0u8; blocks], vec![0u8; n]);
+        (fns.mx_encode_rne)(&x, &mut sa, &mut ca);
+        scalar::mx_encode_rne(&x, &mut sb, &mut cb);
+        assert_eq!(sa, sb, "{}", ctx("mx scales"));
+        assert_eq!(ca, cb, "{}", ctx("mx codes"));
+
+        // SR at a plain base and at a wrapping counter base
+        for base in [0u32, 0x1234_5678, u32::MAX - 7] {
+            let (mut sa, mut ca) = (vec![0u8; blocks], vec![0u8; n]);
+            let (mut sb, mut cb) = (vec![0u8; blocks], vec![0u8; n]);
+            (fns.mx_encode_sr)(&x, &mut sa, &mut ca, &rng, base);
+            scalar::mx_encode_sr(&x, &mut sb, &mut cb, &rng, base);
+            assert_eq!(sa, sb, "{} base={base}", ctx("mx sr scales"));
+            assert_eq!(ca, cb, "{} base={base}", ctx("mx sr codes"));
+        }
+
+        let (mut oa, mut ob) = (vec![0.0f32; n], vec![0.0f32; n]);
+        (fns.mx_decode)(&sa, &ca, &mut oa);
+        scalar::mx_decode(&sb, &cb, &mut ob);
+        assert_eq!(bits(&oa), bits(&ob), "{}", ctx("mx decode"));
+    }
+}
+
+/// Whatever backend `LLMQ_SIMD` resolved (CI runs both `scalar` and
+/// `auto`), the dispatch entry points are bit-identical to the scalar
+/// spec at every boundary length.
+#[test]
+fn dispatch_codecs_bit_identical_to_scalar_spec() {
+    check_codec_matches_scalar_spec(&CodecFns {
+        label: "dispatch",
+        absmax: backend::absmax,
+        fp8_encode_scaled: backend::fp8_encode_scaled,
+        fp8_decode_scaled: backend::fp8_decode_scaled,
+        mx_encode_rne: backend::mx_encode_rne,
+        mx_encode_sr: backend::mx_encode_sr,
+        mx_decode: backend::mx_decode,
+    });
+}
+
+/// Thin safe wrappers over the raw AVX2 codec kernels — sound only after
+/// the feature probe in the test below has confirmed AVX2.
+#[cfg(target_arch = "x86_64")]
+mod avx2_wrap {
+    use llmq::precision::backend::x86;
+    use llmq::precision::{CounterRng, Fp8Format};
+
+    pub fn absmax(x: &[f32]) -> f32 {
+        unsafe { x86::absmax(x) }
+    }
+    pub fn fp8_encode_scaled(f: Fp8Format, x: &[f32], s: f32, o: &mut [u8]) {
+        unsafe { x86::fp8_encode_scaled(f, x, s, o) }
+    }
+    pub fn fp8_decode_scaled(f: Fp8Format, b: &[u8], s: f32, o: &mut [f32]) {
+        unsafe { x86::fp8_decode_scaled(f, b, s, o) }
+    }
+    pub fn mx_encode_rne(x: &[f32], s: &mut [u8], c: &mut [u8]) {
+        unsafe { x86::mx_encode_rne(x, s, c) }
+    }
+    pub fn mx_encode_sr(x: &[f32], s: &mut [u8], c: &mut [u8], r: &CounterRng, b: u32) {
+        unsafe { x86::mx_encode_sr(x, s, c, r, b) }
+    }
+    pub fn mx_decode(s: &[u8], c: &[u8], o: &mut [f32]) {
+        unsafe { x86::mx_decode(s, c, o) }
+    }
+}
+
+/// The raw AVX2 kernels themselves (not just whatever dispatch picked)
+/// are pinned to the scalar spec — this runs even under
+/// `LLMQ_SIMD=scalar`.
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn avx2_codec_kernels_bit_identical_to_scalar_spec() {
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        eprintln!("skipping avx2 codec pin: host CPU has no AVX2");
+        return;
+    }
+    check_codec_matches_scalar_spec(&CodecFns {
+        label: "avx2",
+        absmax: avx2_wrap::absmax,
+        fp8_encode_scaled: avx2_wrap::fp8_encode_scaled,
+        fp8_decode_scaled: avx2_wrap::fp8_decode_scaled,
+        mx_encode_rne: avx2_wrap::mx_encode_rne,
+        mx_encode_sr: avx2_wrap::mx_encode_sr,
+        mx_decode: avx2_wrap::mx_decode,
+    });
+}
+
+/// Thin safe wrappers over the raw NEON codec kernels (baseline on
+/// aarch64, so no runtime probe is needed).
+#[cfg(target_arch = "aarch64")]
+mod neon_wrap {
+    use llmq::precision::backend::neon;
+    use llmq::precision::{CounterRng, Fp8Format};
+
+    pub fn absmax(x: &[f32]) -> f32 {
+        unsafe { neon::absmax(x) }
+    }
+    pub fn fp8_encode_scaled(f: Fp8Format, x: &[f32], s: f32, o: &mut [u8]) {
+        unsafe { neon::fp8_encode_scaled(f, x, s, o) }
+    }
+    pub fn fp8_decode_scaled(f: Fp8Format, b: &[u8], s: f32, o: &mut [f32]) {
+        unsafe { neon::fp8_decode_scaled(f, b, s, o) }
+    }
+    pub fn mx_encode_rne(x: &[f32], s: &mut [u8], c: &mut [u8]) {
+        unsafe { neon::mx_encode_rne(x, s, c) }
+    }
+    pub fn mx_encode_sr(x: &[f32], s: &mut [u8], c: &mut [u8], r: &CounterRng, b: u32) {
+        unsafe { neon::mx_encode_sr(x, s, c, r, b) }
+    }
+    pub fn mx_decode(s: &[u8], c: &[u8], o: &mut [f32]) {
+        unsafe { neon::mx_decode(s, c, o) }
+    }
+}
+
+/// The raw NEON kernels are pinned to the scalar spec.
+#[cfg(target_arch = "aarch64")]
+#[test]
+fn neon_codec_kernels_bit_identical_to_scalar_spec() {
+    check_codec_matches_scalar_spec(&CodecFns {
+        label: "neon",
+        absmax: neon_wrap::absmax,
+        fp8_encode_scaled: neon_wrap::fp8_encode_scaled,
+        fp8_decode_scaled: neon_wrap::fp8_decode_scaled,
+        mx_encode_rne: neon_wrap::mx_encode_rne,
+        mx_encode_sr: neon_wrap::mx_encode_sr,
+        mx_decode: neon_wrap::mx_decode,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Seeded property sweeps
+// ---------------------------------------------------------------------------
+
+/// decode(encode(x)) error is bounded by the grid's scaled ULP, and
+/// rounding is idempotent (grid values are fixed points of round).
+#[test]
+fn prop_roundtrip_error_bounded_by_grid_ulp() {
+    for (li, &n) in LENS.iter().enumerate() {
+        let x = seeded(n, 0x9E37 + li as u32);
+
+        // mx/e2m1: per block, |decode - x| <= 2 * scale. RNE error is at
+        // most half the widest gap (gap 2 between 4 and 6 -> 1 * scale);
+        // values saturating from just under 8*scale add at most another
+        // 2 * scale - epsilon.
+        let (scales, codes) = mx::encode_tensor_serial(&x);
+        let mut dec = vec![0.0f32; n];
+        mx::decode_tensor_serial(&scales, &codes, &mut dec);
+        for (i, (&xi, &di)) in x.iter().zip(&dec).enumerate() {
+            let s = mx::e8m0_decode(scales[i / MX_BLOCK]);
+            assert!(
+                (di - xi).abs() <= 2.0 * s,
+                "mx roundtrip n={n} i={i}: {xi} -> {di} (scale {s})"
+            );
+        }
+
+        // fp8: relative half-ulp bound for normals plus the denormal
+        // floor; inputs stay far below either max so no saturation term.
+        for fmt in [E4M3, E5M2] {
+            let mut enc = vec![0u8; n];
+            scalar::fp8_encode_scaled(fmt, &x, 1.0, &mut enc);
+            let mut dec = vec![0.0f32; n];
+            scalar::fp8_decode_scaled(fmt, &enc, 1.0, &mut dec);
+            let denorm_floor = 2.0f32.powi(1 - fmt.bias - fmt.man_bits as i32);
+            for (i, (&xi, &di)) in x.iter().zip(&dec).enumerate() {
+                let bound = xi.abs() / 2.0f32.powi(fmt.man_bits as i32 + 1) + denorm_floor;
+                assert!(
+                    (di - xi).abs() <= bound,
+                    "{} roundtrip n={n} i={i}: {xi} -> {di}",
+                    fmt.name
+                );
+            }
+        }
+
+        // bf16: 8 mantissa bits -> relative error <= 2^-9 for normals.
+        for &xi in &x {
+            let di = llmq::precision::round_to_bf16(xi);
+            assert!((di - xi).abs() <= xi.abs() * 2.0f32.powi(-8));
+        }
+
+        // idempotence: grid values are fixed points of their own round
+        for &xi in x.iter().take(256) {
+            for fmt in [E2M1, E4M3, E5M2] {
+                let once = fmt.round(xi);
+                assert_eq!(fmt.round(once).to_bits(), once.to_bits());
+            }
+        }
+    }
+}
+
+/// Stochastic rounding is unbiased: over a counter sweep the mean of the
+/// decoded SR output converges to the input, and every draw lands on one
+/// of the two bracketing grid values.
+#[test]
+fn prop_sr_expectation_unbiased_over_counter_sweep() {
+    const SWEEPS: usize = 4096;
+    let rng = CounterRng::new(0x5EED);
+
+    // mx: element 0 pins the block scale to 1.0 (absmax 6.0); element 1
+    // is the probe, strictly between its hand-listed bracketing grid
+    // magnitudes lo and hi.
+    for (probe, lo, hi) in [
+        (2.5f32, 2.0f32, 3.0f32),
+        (1.25, 1.0, 1.5),
+        (4.5, 4.0, 6.0),
+        (-2.75, 2.0, 3.0),
+    ] {
+        let mut x = [0.0f32; MX_BLOCK];
+        x[0] = 6.0;
+        x[1] = probe;
+        let mut sum = 0.0f64;
+        for k in 0..SWEEPS {
+            let base = (k * 64) as u32;
+            let mut scales = [0u8; 1];
+            let mut codes = [0u8; MX_BLOCK];
+            scalar::mx_encode_sr(&x, &mut scales, &mut codes, &rng, base);
+            assert_eq!(scales[0], 127, "scale pinned to 1.0");
+            let mut out = [0.0f32; MX_BLOCK];
+            scalar::mx_decode(&scales, &codes, &mut out);
+            let q = out[1];
+            assert!(
+                q.abs().to_bits() == lo.to_bits() || q.abs().to_bits() == hi.to_bits(),
+                "SR({probe}) left the bracketing pair: {q}"
+            );
+            assert_eq!(q.is_sign_negative(), probe.is_sign_negative());
+            sum += q as f64;
+        }
+        let mean = sum / SWEEPS as f64;
+        // gap-2 probes (4.5) have per-draw sd ~0.87, se ~0.014 over the
+        // sweep; 0.08 is ~6 sigma, so a pass is a real unbiasedness check
+        assert!(
+            (mean - probe as f64).abs() < 0.08,
+            "SR({probe}) biased: mean {mean}"
+        );
+    }
+
+    // the same single-value property for the raw fp8 SR primitive
+    for fmt in [E4M3, E5M2] {
+        let probe = 1.3f32;
+        let mut sum = 0.0f64;
+        for k in 0..SWEEPS {
+            sum += stochastic_round_fp8(fmt, probe, rng.next_u32(k as u32)) as f64;
+        }
+        let mean = sum / SWEEPS as f64;
+        assert!(
+            (mean - 1.3).abs() < 0.02,
+            "{} SR(1.3) biased: mean {mean}",
+            fmt.name
+        );
+    }
+
+    // bf16 SR at an exact tie midpoint: mean converges to the midpoint
+    let probe = f32::from_bits(0x3F80_8000); // 1 + 2^-8
+    let mut sum = 0.0f64;
+    for k in 0..SWEEPS {
+        sum += llmq::precision::stochastic_round_bf16(probe, &rng, k as u32) as f64;
+    }
+    let mean = sum / SWEEPS as f64;
+    assert!(
+        (mean - probe as f64).abs() < 5e-4,
+        "bf16 SR biased: mean {mean}"
+    );
+}
+
+/// Encode is bitwise-invariant across 1/2/8 worker threads × the
+/// dispatch backend (scalar or SIMD, per `LLMQ_SIMD`) × async streams on
+/// or off — the parallel tensor wrappers always reproduce the
+/// single-threaded pure-scalar reference exactly.
+#[test]
+fn prop_encode_bitwise_invariant_across_threads_simd_async() {
+    let rng = CounterRng::new(0xD15B);
+    for (li, &n) in LENS.iter().enumerate() {
+        let x = with_specials(seeded(n, 0xF00 + li as u32));
+        let base = 0x600D_u32;
+
+        // single-threaded pure-scalar references
+        let (rs, rc) = mx::encode_tensor_serial(&x);
+        let (rss, rsc) = mx::encode_tensor_sr_serial(&x, &rng, base);
+        let mut rdec = vec![0.0f32; n];
+        mx::decode_tensor_serial(&rs, &rc, &mut rdec);
+        let mut rfp8 = x.clone();
+        llmq::precision::fp8::round_slice_serial(E4M3, &mut rfp8);
+        let mut rbf = x.clone();
+        bf16::stochastic_round_slice_serial(&mut rbf, &rng, base);
+
+        for threads in [1usize, 2, 8] {
+            for async_on in [false, true] {
+                let ctx = format!("n={n} threads={threads} async={async_on}");
+                par::with_threads(threads, || {
+                    exec::with_async(async_on, || {
+                        let (s, c) = mx::encode_tensor(&x);
+                        assert_eq!(s, rs, "mx rne scales {ctx}");
+                        assert_eq!(c, rc, "mx rne codes {ctx}");
+
+                        let (s, c) = mx::encode_tensor_sr(&x, &rng, base);
+                        assert_eq!(s, rss, "mx sr scales {ctx}");
+                        assert_eq!(c, rsc, "mx sr codes {ctx}");
+
+                        let mut dec = vec![0.0f32; n];
+                        mx::decode_tensor(&rs, &rc, &mut dec);
+                        assert_eq!(bits(&dec), bits(&rdec), "mx decode {ctx}");
+
+                        let mut f = x.clone();
+                        llmq::precision::fp8::round_slice(E4M3, &mut f);
+                        assert_eq!(bits(&f), bits(&rfp8), "fp8 round {ctx}");
+
+                        let mut b = x.clone();
+                        bf16::stochastic_round_slice(&mut b, &rng, base);
+                        assert_eq!(bits(&b), bits(&rbf), "bf16 sr {ctx}");
+                    })
+                });
+            }
+        }
+    }
+}

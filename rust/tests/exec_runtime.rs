@@ -18,7 +18,7 @@ use llmq::offload::{serial_pass, stream_pass};
 use llmq::optim::fused::{
     fused_step, fused_step_async, fused_step_overlapped, staged_step, HostStep,
 };
-use llmq::optim::AdamWParams;
+use llmq::optim::{AdamWParams, MomentsMode};
 use llmq::precision::{bf16, round_to_bf16, CounterRng};
 use llmq::sim::{replay_trace, Engine};
 use llmq::train::{checkpoint, StepWorkspace};
@@ -34,6 +34,7 @@ fn host_step(grad_clip: f32, n_micro: usize, opt_world: usize, step: u32, counte
         seed: 9,
         n_micro,
         opt_world,
+        moments: MomentsMode::Fp32,
     }
 }
 

@@ -22,7 +22,7 @@ use llmq::collectives::memcpy::PIPELINE_BLOCK;
 use llmq::exec;
 use llmq::fault::{self, FaultPlane};
 use llmq::optim::fused::{fused_step_async, HostStep};
-use llmq::optim::AdamWParams;
+use llmq::optim::{AdamWParams, MomentsMode};
 use llmq::precision::{round_to_bf16, CounterRng};
 use llmq::train::checkpoint;
 use llmq::train::supervisor::{Event, Supervised, Supervisor, SupervisorCfg};
@@ -122,6 +122,7 @@ impl Supervised for FusedWorkload {
             seed: 9,
             n_micro: 2 * self.world,
             opt_world: OPT_WORLD,
+            moments: MomentsMode::Fp32,
         };
         let (ws, p, m, v) = (&mut self.ws, &mut self.p, &mut self.m, &mut self.v);
         par::with_threads(self.threads, || {

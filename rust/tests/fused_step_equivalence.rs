@@ -27,8 +27,8 @@ use llmq::optim::fused::{
     fused_step, fused_step_async, grad_norm_scalar, norm_phase, reduce_phase, staged_step,
     update_phase, update_phase_scalar, HostStep,
 };
-use llmq::optim::AdamWParams;
-use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::optim::{AdamWParams, MomentsMode};
+use llmq::precision::{round_to_bf16, CounterRng, E5M2};
 use llmq::train::StepWorkspace;
 use llmq::util::par;
 
@@ -57,6 +57,7 @@ fn host_step(grad_clip: f32, n_micro: usize, opt_world: usize) -> HostStep {
         seed: 9,
         n_micro,
         opt_world,
+        moments: MomentsMode::Fp32,
     }
 }
 
@@ -115,12 +116,21 @@ fn run(
     (norm.to_bits(), p, m, v)
 }
 
-fn assert_matrix(n_for: impl Fn(usize) -> usize, amp: f32, clip: f32, expect_clip: bool) {
+fn assert_matrix(
+    n_for: impl Fn(usize) -> usize,
+    amp: f32,
+    clip: f32,
+    expect_clip: bool,
+    moments: MomentsMode,
+) {
     for world in [1usize, 2, 4] {
         let n = n_for(world);
         assert_eq!(n % world, 0, "test geometry");
         for opt_world in [1usize, 4] {
-            let hs = host_step(clip, 3 * world, opt_world);
+            let hs = HostStep {
+                moments,
+                ..host_step(clip, 3 * world, opt_world)
+            };
             let reference = run(Path::Staged, world, n, 1, amp, &hs);
             let norm = f32::from_bits(reference.0);
             assert_eq!(
@@ -151,20 +161,20 @@ fn assert_matrix(n_for: impl Fn(usize) -> usize, amp: f32, clip: f32, expect_cli
 #[test]
 fn fused_matches_staged_no_clip() {
     // small gradients: the clip never triggers
-    assert_matrix(|_| 2 * PIPELINE_BLOCK, 0.02, 1.0, false);
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 0.02, 1.0, false, MomentsMode::Fp32);
 }
 
 #[test]
 fn fused_matches_staged_with_clip_triggered() {
     // large gradients: global norm far above the clip threshold
-    assert_matrix(|_| 2 * PIPELINE_BLOCK, 4.0, 0.5, true);
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 4.0, 0.5, true, MomentsMode::Fp32);
 }
 
 #[test]
 fn fused_matches_staged_unaligned_n() {
     // n divisible by every world/opt_world in the matrix but not by
     // PIPELINE_BLOCK: the last pipeline chunk is a partial block.
-    assert_matrix(|_| 3 * PIPELINE_BLOCK + 64, 0.05, 1.0, false);
+    assert_matrix(|_| 3 * PIPELINE_BLOCK + 64, 0.05, 1.0, false, MomentsMode::Fp32);
 }
 
 #[test]
@@ -177,6 +187,44 @@ fn fused_is_deterministic_across_repeats() {
         assert_eq!(bits(&a.1), bits(&b.1), "{path:?}");
         assert_eq!(bits(&a.2), bits(&b.2), "{path:?}");
         assert_eq!(bits(&a.3), bits(&b.3), "{path:?}");
+    }
+}
+
+
+/// The full path × world × clip matrix again with fp8(m)/bf16(v)
+/// moment storage: fused and async pinned bitwise to the scalar staged
+/// quantized oracle. Only the first-moment SR grid changes, so this
+/// isolates the e5m2 moment codec inside the phase-3 chunk kernel.
+#[test]
+fn fused_matches_staged_fp8_moments_no_clip() {
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 0.02, 1.0, false, MomentsMode::Fp8);
+}
+
+#[test]
+fn fused_matches_staged_fp8_moments_with_clip_triggered() {
+    assert_matrix(|_| 2 * PIPELINE_BLOCK, 4.0, 0.5, true, MomentsMode::Fp8);
+}
+
+#[test]
+fn fused_matches_staged_fp8_moments_unaligned_n() {
+    assert_matrix(|_| 3 * PIPELINE_BLOCK + 64, 0.05, 1.0, false, MomentsMode::Fp8);
+}
+
+/// Under fp8 moment storage every stored first moment must land exactly
+/// on the e5m2 grid (that is what makes the 1-byte checkpoint and
+/// planner byte model lossless), while `v` stays on the bf16 grid.
+#[test]
+fn fp8_moments_land_on_the_e5m2_grid() {
+    let hs = HostStep {
+        moments: MomentsMode::Fp8,
+        ..host_step(1.0, 6, 4)
+    };
+    let (_, _, m, v) = run(Path::Fused, 2, 2 * PIPELINE_BLOCK, 8, 0.1, &hs);
+    for &x in &m {
+        assert_eq!(x, E5M2.round(x), "m not on the e5m2 grid: {x}");
+    }
+    for &x in &v {
+        assert_eq!(x, round_to_bf16(x), "v not on the bf16 grid: {x}");
     }
 }
 

@@ -150,6 +150,61 @@ fn resume_mid_run_matches_straight_run() {
     assert_eq!(bits(&straight.v), bits(&b.v));
 }
 
+/// Quantized-moments resume: under `--moments fp8` the save routes to
+/// the v4 wire format (7 bytes/param instead of 12), and because the
+/// resident m/v already live on the e5m2/bf16 grids the codec is
+/// lossless — save → load into a fresh Trainer → k more steps is
+/// bitwise identical to 2k straight steps, exactly like the f32 case.
+#[test]
+fn quantized_moments_resume_matches_straight_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("llmq_resume_q_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mid_q.bin");
+    let text = corpus();
+    let k = 2;
+    let cfg = || TrainConfig {
+        moments: llmq::optim::MomentsMode::Fp8,
+        ..tiny_cfg(Dtype::Fp8, 1)
+    };
+
+    let mut straight = Trainer::new("artifacts", "tiny", cfg()).unwrap();
+    straight.train_loop(&text, 2 * k, |_| {}).unwrap();
+
+    let mut a = Trainer::new("artifacts", "tiny", cfg()).unwrap();
+    a.train_loop(&text, k, |_| {}).unwrap();
+    a.save_checkpoint(path.to_str().unwrap()).unwrap();
+
+    // the file on disk really is the 7-byte/param v4 format
+    let bytes = std::fs::read(&path).unwrap();
+    let info = llmq::train::checkpoint::inspect(&bytes).unwrap();
+    assert_eq!(info.version, llmq::train::checkpoint::VERSION_Q);
+    assert_eq!(bytes.len(), 36 + 7 * a.params.len());
+
+    let mut b = Trainer::new("artifacts", "tiny", cfg()).unwrap();
+    b.load_checkpoint(path.to_str().unwrap()).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.m), bits(&b.m), "v4 moment codec is lossless");
+    assert_eq!(bits(&a.v), bits(&b.v));
+    let per_step = b.cfg.grad_accum * b.cfg.world;
+    let tok = ByteTokenizer::new(b.man.config.vocab);
+    let ds = PackedDataset::from_text(&text, &tok, b.man.config.seq_len, b.cfg.seed);
+    for s in k..2 * k {
+        let batches: Vec<_> = (0..per_step)
+            .map(|i| ds.batch(s * per_step + i, i % b.cfg.world, b.man.batch))
+            .collect();
+        b.train_step(&batches).unwrap();
+    }
+
+    assert_eq!(straight.step, b.step);
+    assert_eq!(straight.counter, b.counter);
+    assert_eq!(bits(&straight.params), bits(&b.params));
+    assert_eq!(bits(&straight.m), bits(&b.m));
+    assert_eq!(bits(&straight.v), bits(&b.v));
+}
+
 /// Foreign and pre-header checkpoint files are rejected by name instead
 /// of being misread as state (the v2 header hardening).
 #[test]

@@ -255,6 +255,8 @@ fn all_gather_parallel_matches_any_thread_count() {
 // IEEE special values (NaN, ±0, ±inf, subnormals, saturating magnitudes).
 // ---------------------------------------------------------------------------
 
+use llmq::precision::backend::MomentsMode;
+use llmq::precision::fp8::stochastic_round_fp8;
 use llmq::precision::{absmax_serial, backend, round_to_bf16, stochastic_round_bf16, Fp8Format};
 
 /// Random data with IEEE special values planted in the leading slots
@@ -338,7 +340,14 @@ fn adamw_update_spec(
         let p2 = p[i] - spec.lr * upd;
         let c = counter_base.wrapping_add(i as u32);
         p[i] = stochastic_round_bf16(p2, &spec.rng_p, c);
-        m[i] = stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard));
+        m[i] = match spec.moments {
+            MomentsMode::Fp32 => stochastic_round_bf16(m2, &spec.rng_m, c.wrapping_add(spec.shard)),
+            MomentsMode::Fp8 => stochastic_round_fp8(
+                E5M2,
+                m2,
+                spec.rng_m.next_u32(c.wrapping_add(spec.shard)),
+            ),
+        };
         v[i] = stochastic_round_bf16(v2, &spec.rng_v, c.wrapping_add(spec.shard.wrapping_mul(2)));
     }
 }
@@ -361,33 +370,37 @@ fn check_adamw_matches_spec(b: &BackendFns) {
         let g = simd_data(n, 0xAD04); // denormal/NaN grads
         for &(beta1, beta2, eps, weight_decay) in &hps {
             for clip_scale in [None, Some(0.37f32)] {
-                for counter_base in [0u32, u32::MAX - 7] {
-                    let spec = backend::AdamWSpec {
-                        hp: AdamWParams {
-                            beta1,
-                            beta2,
-                            eps,
-                            weight_decay,
-                        },
-                        lr: 3e-4,
-                        bc1: 1.0 - beta1 * beta1,
-                        bc2: 1.0 - beta2 * beta2,
-                        clip_scale,
-                        rng_p: CounterRng::new(0x11A17),
-                        rng_m: CounterRng::new(0xA110),
-                        rng_v: CounterRng::new(0xB220),
-                        shard: n as u32 + 13,
-                    };
-                    let (mut pw, mut mw, mut vw) = (p0.clone(), m0.clone(), v0.clone());
-                    adamw_update_spec(&spec, &mut pw, &mut mw, &mut vw, &g, counter_base);
-                    let (mut pg, mut mg, mut vg) = (p0.clone(), m0.clone(), v0.clone());
-                    (b.adamw_update)(&spec, &mut pg, &mut mg, &mut vg, &g, counter_base);
-                    let ctx = format!(
-                        "{lb} adamw n={n} eps={eps} clip={clip_scale:?} cb={counter_base}"
-                    );
-                    assert_eq!(bits(&pg), bits(&pw), "p {ctx}");
-                    assert_eq!(bits(&mg), bits(&mw), "m {ctx}");
-                    assert_eq!(bits(&vg), bits(&vw), "v {ctx}");
+                for moments in [MomentsMode::Fp32, MomentsMode::Fp8] {
+                    for counter_base in [0u32, u32::MAX - 7] {
+                        let spec = backend::AdamWSpec {
+                            hp: AdamWParams {
+                                beta1,
+                                beta2,
+                                eps,
+                                weight_decay,
+                            },
+                            lr: 3e-4,
+                            bc1: 1.0 - beta1 * beta1,
+                            bc2: 1.0 - beta2 * beta2,
+                            clip_scale,
+                            moments,
+                            rng_p: CounterRng::new(0x11A17),
+                            rng_m: CounterRng::new(0xA110),
+                            rng_v: CounterRng::new(0xB220),
+                            shard: n as u32 + 13,
+                        };
+                        let (mut pw, mut mw, mut vw) = (p0.clone(), m0.clone(), v0.clone());
+                        adamw_update_spec(&spec, &mut pw, &mut mw, &mut vw, &g, counter_base);
+                        let (mut pg, mut mg, mut vg) = (p0.clone(), m0.clone(), v0.clone());
+                        (b.adamw_update)(&spec, &mut pg, &mut mg, &mut vg, &g, counter_base);
+                        let ctx = format!(
+                            "{lb} adamw n={n} eps={eps} clip={clip_scale:?} \
+                             moments={moments:?} cb={counter_base}"
+                        );
+                        assert_eq!(bits(&pg), bits(&pw), "p {ctx}");
+                        assert_eq!(bits(&mg), bits(&mw), "m {ctx}");
+                        assert_eq!(bits(&vg), bits(&vw), "v {ctx}");
+                    }
                 }
             }
         }

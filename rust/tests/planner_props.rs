@@ -5,6 +5,7 @@
 use llmq::config::paper_presets;
 use llmq::hw::gpu_by_name;
 use llmq::memory::{plan, PlanInput};
+use llmq::optim::MomentsMode;
 use llmq::offload::OffloadConfig;
 use llmq::recompute::Recompute;
 use llmq::shard::ShardConfig;
@@ -40,6 +41,7 @@ fn prop_offloading_never_increases_device_bytes() {
             model: m,
             gpu: &gpu,
             fp8,
+            moments: MomentsMode::Fp32,
             recompute: rc,
             offload: OffloadConfig::NONE,
             shard: ShardConfig::single(),
@@ -65,6 +67,44 @@ fn prop_offloading_never_increases_device_bytes() {
 }
 
 #[test]
+fn prop_quantized_moments_never_increase_any_budget() {
+    // The precision axis is monotone: fp8/bf16 moment storage can only
+    // shrink the device and host ledgers, and it touches nothing but
+    // the moments class.
+    let gpus = ["RTX 5060Ti", "RTX 4090", "L40S"];
+    let models = paper_presets();
+    prop::check(0x66, 120, |g| {
+        let gpu = gpu_by_name(gpus[g.usize_in(0, 2)]).unwrap();
+        let m = &models[g.usize_in(0, models.len() - 1)];
+        let base = PlanInput {
+            model: m,
+            gpu: &gpu,
+            fp8: g.bool(),
+            moments: MomentsMode::Fp32,
+            recompute: random_recompute(g),
+            offload: random_offload(g),
+            shard: ShardConfig::single(),
+            micro_batch: g.usize_in(1, 16),
+        };
+        let q = PlanInput {
+            moments: MomentsMode::Fp8,
+            ..base.clone()
+        };
+        let p32 = plan(&base, 256.0);
+        let p8 = plan(&q, 256.0);
+        assert!(p8.dev_total <= p32.dev_total);
+        assert!(p8.host_bytes <= p32.host_bytes);
+        assert!(p8.dev_moments <= p32.dev_moments);
+        assert_eq!(p8.dev_weights, p32.dev_weights);
+        assert_eq!(p8.dev_master, p32.dev_master);
+        assert_eq!(p8.dev_grads, p32.dev_grads);
+        assert_eq!(p8.dev_activations, p32.dev_activations);
+        assert_eq!(p8.dev_residuals, p32.dev_residuals);
+        assert_eq!(p8.dev_workspace, p32.dev_workspace);
+    });
+}
+
+#[test]
 fn prop_more_recompute_less_activation_memory() {
     let models = paper_presets();
     prop::check(0x22, 80, |g| {
@@ -79,6 +119,7 @@ fn prop_more_recompute_less_activation_memory() {
                     model: m,
                     gpu: &gpu,
                     fp8,
+                    moments: MomentsMode::Fp32,
                     recompute: rc,
                     offload: OffloadConfig::NONE,
                     shard: ShardConfig::single(),
@@ -108,6 +149,7 @@ fn prop_sharding_reduces_per_device_state() {
                     model: m,
                     gpu: &gpu,
                     fp8: true,
+                    moments: MomentsMode::Fp32,
                     recompute: Recompute::Block,
                     offload: OffloadConfig::NONE,
                     shard,
