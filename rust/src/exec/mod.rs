@@ -58,6 +58,19 @@
 //! any `fault`-injected stalls so the streams can drain. The scope
 //! captures the calling thread's `fault` plane at creation, which is how
 //! `LLMQ_FAULT` stream-site injections reach worker threads.
+//!
+//! # Static verification (`LLMQ_VERIFY`)
+//!
+//! Ops may declare their memory footprint ([`Exec::launch_acc`] with an
+//! [`AccessSet`] of `(arena, byte range, read|write)` intervals); the
+//! [`verify`] module computes happens-before over the recorded program
+//! with per-stream vector clocks and reports any conflicting access
+//! pair no FIFO/event edge covers — by op label, stream and overlapping
+//! byte range — plus forward edges, unreachable waits, reused events
+//! and dead events. With `LLMQ_VERIFY=1` (or [`with_verify`]; tests and
+//! CI turn it on) every scope verifies its own trace as it exits and
+//! panics on any violation, so a missing edge fails *statically* even
+//! when the runtime schedule happened to be benign.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -68,6 +81,10 @@ use std::time::{Duration, Instant};
 
 use crate::fault::FaultPlane;
 use crate::util::par;
+
+pub mod verify;
+
+pub use verify::{Access, AccessMode, AccessSet, ArenaId};
 
 /// Hard cap on stream workers (matches `util::par`'s spirit: a knob,
 /// not a footgun).
@@ -91,6 +108,8 @@ thread_local! {
     static ASYNC_OVERRIDE: Cell<u8> = const { Cell::new(0) };
     // < 0 = follow env, otherwise a millisecond timeout (0 = off)
     static WATCHDOG_OVERRIDE: Cell<i64> = const { Cell::new(-1) };
+    // 0 = follow env, 1 = force off, 2 = force on
+    static VERIFY_OVERRIDE: Cell<u8> = const { Cell::new(0) };
 }
 
 fn env_async() -> bool {
@@ -142,6 +161,44 @@ fn env_watchdog_ms() -> u64 {
         },
         Err(_) => 0,
     })
+}
+
+fn env_verify() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LLMQ_VERIFY") {
+        Ok(v) => matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "1" | "on" | "true" | "yes"
+        ),
+        Err(_) => false,
+    })
+}
+
+/// Is scope-exit static verification enabled? [`with_verify`] override,
+/// else `LLMQ_VERIFY` (`1`/`on`/`true`/`yes` enable it; tests and CI set
+/// it, production defaults off to skip the O(ops²) analysis per step).
+pub fn verify_enabled() -> bool {
+    match VERIFY_OVERRIDE.with(|c| c.get()) {
+        1 => false,
+        2 => true,
+        _ => env_verify(),
+    }
+}
+
+/// Force scope-exit verification on (`true`) or off (`false`) on this
+/// thread for the duration of `f` — the test-side twin of
+/// `LLMQ_VERIFY`, with the same restore-on-unwind semantics as
+/// [`with_streams`].
+pub fn with_verify<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            VERIFY_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let v = if on { 2 } else { 1 };
+    let _restore = Restore(VERIFY_OVERRIDE.with(|c| c.replace(v)));
+    f()
 }
 
 /// Is the async runtime enabled? [`with_async`] override, else
@@ -282,7 +339,7 @@ impl Event {
 // ---------------------------------------------------------------------------
 
 /// One submitted runtime op, in program (submission) order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TraceOp {
     /// A work op enqueued on `stream`.
     Launch {
@@ -290,6 +347,10 @@ pub enum TraceOp {
         stream: u32,
         /// Static label for dumps and DES replay.
         label: &'static str,
+        /// Declared memory footprint ([`Exec::launch_acc`]; empty for
+        /// plain [`Exec::launch`] — "touches nothing the verifier
+        /// tracks").
+        access: AccessSet,
     },
     /// An event record enqueued on `stream`.
     Record {
@@ -312,7 +373,7 @@ impl TraceOp {
     /// `L<stream>:<label>`, `R<stream>#<event>`, `W<stream>#<event>`.
     pub fn compact(&self) -> String {
         match self {
-            TraceOp::Launch { stream, label } => format!("L{stream}:{label}"),
+            TraceOp::Launch { stream, label, .. } => format!("L{stream}:{label}"),
             TraceOp::Record { stream, event } => format!("R{stream}#{event}"),
             TraceOp::Wait { stream, event } => format!("W{stream}#{event}"),
         }
@@ -564,12 +625,29 @@ impl<'env> Exec<'env> {
     /// Enqueue `job` on `stream`. FIFO with everything previously
     /// enqueued on the same stream; unordered with other streams unless
     /// an [`Exec::wait`] edge says otherwise. `label` names the op in
-    /// the trace and DES replay.
+    /// the trace and DES replay. The op declares no memory footprint —
+    /// the static verifier skips it; use [`Exec::launch_acc`] to bring
+    /// an op under race checking.
     pub fn launch(&self, stream: usize, label: &'static str, job: impl FnOnce() + Send + 'env) {
+        self.launch_acc(stream, label, AccessSet::new(), job)
+    }
+
+    /// [`Exec::launch`] with a declared memory footprint: `access` lists
+    /// the `(arena, byte range, read|write)` intervals the op touches,
+    /// which the static verifier ([`verify`], `LLMQ_VERIFY`) checks for
+    /// conflicting pairs no dependency edge covers.
+    pub fn launch_acc(
+        &self,
+        stream: usize,
+        label: &'static str,
+        access: AccessSet,
+        job: impl FnOnce() + Send + 'env,
+    ) {
         assert!(stream < self.n_streams, "stream {stream} out of range");
         self.shared.trace.lock().unwrap().push(TraceOp::Launch {
             stream: stream as u32,
             label,
+            access,
         });
         self.shared.statuses[stream]
             .submitted
@@ -664,6 +742,25 @@ impl<'env> Exec<'env> {
     }
 }
 
+/// Scope-exit static verification (`LLMQ_VERIFY`): run the analyzer
+/// over the scope's recorded program and panic with the rendered
+/// violations if any conflicting access pair lacks a happens-before
+/// edge. Only reached on the success path — a scope that already failed
+/// re-raises its op panic instead.
+fn verify_scope(shared: &Shared, n_streams: usize, async_mode: bool) {
+    if !verify_enabled() {
+        return;
+    }
+    let trace = Trace {
+        n_streams,
+        async_mode,
+        ops: shared.trace.lock().unwrap().clone(),
+    };
+    if let Err(msg) = verify::check(&trace) {
+        panic!("exec verify (LLMQ_VERIFY): {msg}");
+    }
+}
+
 /// Run `f` with an executor resolved from the environment
 /// ([`num_streams`] streams; serial oracle iff `LLMQ_ASYNC=off` /
 /// [`with_async`]`(false)`). Returns once every submitted op has
@@ -715,6 +812,7 @@ pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'
         if shared.failed.load(Ordering::Acquire) {
             ex.propagate_failure();
         }
+        verify_scope(&shared, streams, false);
         return r;
     }
     let result = std::thread::scope(|s| {
@@ -744,6 +842,7 @@ pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'
             .expect("failed scope without payload");
         resume_unwind(payload);
     }
+    verify_scope(&shared, streams, true);
     result
 }
 
@@ -955,12 +1054,111 @@ mod tests {
         assert_eq!(
             t.ops,
             vec![
-                TraceOp::Launch { stream: 0, label: "x" },
+                TraceOp::Launch {
+                    stream: 0,
+                    label: "x",
+                    access: AccessSet::new(),
+                },
                 TraceOp::Record { stream: 0, event: 0 },
                 TraceOp::Wait { stream: 1, event: 0 },
-                TraceOp::Launch { stream: 1, label: "y" },
+                TraceOp::Launch {
+                    stream: 1,
+                    label: "y",
+                    access: AccessSet::new(),
+                },
             ]
         );
+    }
+
+    /// `launch_acc` carries the declared footprint into the trace.
+    #[test]
+    fn trace_records_declared_accesses() {
+        let a = verify::arena("buf", 0);
+        let t = scope_cfg(1, false, |ex| {
+            ex.launch_acc(
+                0,
+                "w",
+                AccessSet::new().write(a, 0..32).read(a, 32..64),
+                || {},
+            );
+            ex.trace()
+        });
+        let TraceOp::Launch { access, .. } = &t.ops[0] else {
+            panic!("expected a launch");
+        };
+        assert_eq!(access.intervals().len(), 2);
+        assert_eq!(access.intervals()[0].mode, AccessMode::Write);
+        assert_eq!(access.intervals()[1].mode, AccessMode::Read);
+    }
+
+    /// With verification on, a well-edged annotated program passes at
+    /// scope exit in both modes; results are untouched.
+    #[test]
+    fn verify_passes_well_edged_program_at_scope_exit() {
+        let a = verify::arena("buf", 0);
+        for async_on in [false, true] {
+            let mut data = vec![0u64; 16];
+            {
+                let baton = Baton::new(&mut data[..]);
+                with_verify(true, || {
+                    scope_cfg(2, async_on, |ex| {
+                        ex.launch_acc(
+                            0,
+                            "fill",
+                            AccessSet::new().write(a, 0..128),
+                            || baton.with(|d| d.iter_mut().for_each(|x| *x += 1)),
+                        );
+                        let ev = ex.record(0);
+                        ex.wait(1, &ev);
+                        ex.launch_acc(
+                            1,
+                            "double",
+                            AccessSet::new().write(a, 0..128),
+                            || baton.with(|d| d.iter_mut().for_each(|x| *x *= 2)),
+                        );
+                    })
+                });
+            }
+            assert!(data.iter().all(|&x| x == 2), "async {async_on}");
+        }
+    }
+
+    /// With verification on, a conflicting pair with no edge panics at
+    /// scope exit with the labels and the overlapping byte range — even
+    /// under the serial oracle, where the schedule happened to be safe.
+    #[test]
+    fn verify_flags_missing_edge_at_scope_exit() {
+        let a = verify::arena("buf", 0);
+        for async_on in [false, true] {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                with_verify(true, || {
+                    scope_cfg(2, async_on, |ex| {
+                        ex.launch_acc(0, "writer", AccessSet::new().write(a, 0..64), || {});
+                        ex.launch_acc(1, "reader", AccessSet::new().read(a, 0..64), || {});
+                    })
+                });
+            }));
+            let payload = r.expect_err("verifier must fail the scope");
+            let msg = payload
+                .downcast_ref::<String>()
+                .expect("verify panic is a String");
+            assert!(msg.contains("LLMQ_VERIFY"), "async {async_on}: {msg:?}");
+            assert!(msg.contains("\"writer\""), "{msg:?}");
+            assert!(msg.contains("\"reader\""), "{msg:?}");
+            assert!(msg.contains("bytes 0..64"), "{msg:?}");
+        }
+    }
+
+    /// Unannotated ops are outside the verifier's scope: the same
+    /// edge-less program passes when it declares nothing.
+    #[test]
+    fn verify_skips_unannotated_ops() {
+        with_verify(true, || {
+            scope_cfg(2, false, |ex| {
+                ex.launch(0, "a", || {});
+                ex.launch(1, "b", || {});
+            })
+        });
     }
 
     #[test]
@@ -1092,5 +1290,11 @@ mod tests {
         assert_eq!(with_watchdog(25, watchdog_ms), 25);
         assert_eq!(with_watchdog(0, watchdog_ms), 0);
         assert_eq!(watchdog_ms(), wd);
+        // verify override resolves and restores
+        let ve = verify_enabled();
+        assert!(with_verify(true, verify_enabled));
+        assert!(!with_verify(false, verify_enabled));
+        assert!(with_verify(false, || with_verify(true, verify_enabled)));
+        assert_eq!(verify_enabled(), ve);
     }
 }

@@ -1,0 +1,787 @@
+//! Static happens-before race detection for recorded stream programs.
+//!
+//! The `exec` runtime's correctness contract (NUMERICS.md Rule 4) says
+//! every read-after-write, write-after-read and write-after-write pair
+//! between ops must be covered by a FIFO or event edge. Until now that
+//! contract was enforced only *dynamically*: a missing edge surfaced if
+//! a particular interleaving happened to trip a [`super::Baton`]
+//! contention panic or the watchdog. This module proves it statically —
+//! over the submitted program, before any schedule runs.
+//!
+//! Every launched op may declare its memory footprint as an
+//! [`AccessSet`]: a list of `(arena, byte range, read|write)` intervals
+//! ([`Access`]), where an [`ArenaId`] names a logical buffer (a static
+//! name plus an instance index — e.g. `("dev.grads", device)`).
+//! [`verify`] then computes the happens-before relation with one vector
+//! clock per stream — program order within a stream, join edges from
+//! each [`TraceOp::Record`] to the [`TraceOp::Wait`]s that name it —
+//! and reports:
+//!
+//! * **races**: two accesses to overlapping byte ranges of one arena,
+//!   at least one a write, with no happens-before path between their
+//!   ops ([`Violation::Race`] — carries both op labels, both streams,
+//!   the arena and the overlapping byte range);
+//! * **forward edges**: a wait submitted before the record it names
+//!   ([`Violation::WaitBeforeRecord`]) — the edge shape that makes
+//!   deadlock possible;
+//! * **unreachable waits**: a wait naming an event no record ever
+//!   creates ([`Violation::UnreachableWait`]);
+//! * **reused events**: an event id recorded twice
+//!   ([`Violation::DoubleRecord`]) — events are one-shot;
+//! * **dead events**: recorded but never waited on
+//!   ([`Violation::DeadEvent`]) — reported as a warning, not an error,
+//!   because host-side joins ([`super::Exec::sync_all`],
+//!   [`super::Event::sync`]) legitimately consume events outside the
+//!   trace.
+//!
+//! Ops that declare no accesses (the default for [`super::Exec::launch`])
+//! are treated as touching nothing: they can never race, so existing
+//! programs stay verifiable while annotated programs
+//! (`optim::fused::fused_step_async`, `fused_step_overlapped`,
+//! `offload::stream_pass`) get full coverage. Soundness is therefore
+//! *per declaration*: the verifier proves the declared footprints are
+//! hazard-free; [`super::Baton`] remains the runtime backstop for
+//! undeclared ones.
+//!
+//! With `LLMQ_VERIFY=1` (or [`super::with_verify`]) every
+//! [`super::scope`] verifies its own recorded trace as it exits,
+//! panicking on any error-class violation; `sim::replay::verify_trace`
+//! runs the same analysis over externally recorded traces.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::ops::Range;
+
+use super::{Trace, TraceOp};
+
+// ---------------------------------------------------------------------------
+// Access declarations
+// ---------------------------------------------------------------------------
+
+/// A logical buffer identity: a static name plus an instance index
+/// (`("dev.grads", 2)` = device 2's gradient accumulator). Two accesses
+/// can only conflict when their arenas are equal — distinct arenas are
+/// assumed disjoint allocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArenaId {
+    /// Static name of the buffer family.
+    pub name: &'static str,
+    /// Instance index within the family (0 when there is only one).
+    pub inst: u32,
+}
+
+/// Shorthand constructor for an [`ArenaId`].
+pub fn arena(name: &'static str, inst: u32) -> ArenaId {
+    ArenaId { name, inst }
+}
+
+impl fmt::Display for ArenaId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}[{}]", self.name, self.inst)
+    }
+}
+
+/// Whether an op reads or writes a byte range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessMode {
+    /// The op only reads the range.
+    Read,
+    /// The op writes (or reads and writes) the range.
+    Write,
+}
+
+impl fmt::Display for AccessMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AccessMode::Read => write!(f, "read"),
+            AccessMode::Write => write!(f, "write"),
+        }
+    }
+}
+
+/// One declared interval: `mode` access to bytes `[start, end)` of
+/// `arena`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// The buffer the interval lies in.
+    pub arena: ArenaId,
+    /// First byte of the interval (inclusive).
+    pub start: u64,
+    /// One past the last byte of the interval (exclusive).
+    pub end: u64,
+    /// Read or write.
+    pub mode: AccessMode,
+}
+
+/// The declared memory footprint of one launched op — a builder-style
+/// list of [`Access`] intervals. An empty set (the default) declares
+/// "touches nothing the verifier should track".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AccessSet(Vec<Access>);
+
+impl AccessSet {
+    /// An empty footprint.
+    pub fn new() -> Self {
+        AccessSet(Vec::new())
+    }
+
+    /// Declare a read of `bytes` in `arena`.
+    pub fn read(mut self, arena: ArenaId, bytes: Range<u64>) -> Self {
+        self.0.push(Access {
+            arena,
+            start: bytes.start,
+            end: bytes.end,
+            mode: AccessMode::Read,
+        });
+        self
+    }
+
+    /// Declare a write of `bytes` in `arena`.
+    pub fn write(mut self, arena: ArenaId, bytes: Range<u64>) -> Self {
+        self.0.push(Access {
+            arena,
+            start: bytes.start,
+            end: bytes.end,
+            mode: AccessMode::Write,
+        });
+        self
+    }
+
+    /// Does this set declare nothing?
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// The declared intervals, in declaration order.
+    pub fn intervals(&self) -> &[Access] {
+        &self.0
+    }
+}
+
+/// Byte range of `len` f32 elements starting at element `off` — the
+/// conversion every f32-arena annotation needs.
+pub fn f32_range(off: usize, len: usize) -> Range<u64> {
+    (off as u64) * 4..((off + len) as u64) * 4
+}
+
+/// Byte range of `len` f64 elements starting at element `off`.
+pub fn f64_range(off: usize, len: usize) -> Range<u64> {
+    (off as u64) * 8..((off + len) as u64) * 8
+}
+
+// ---------------------------------------------------------------------------
+// Violations
+// ---------------------------------------------------------------------------
+
+/// One verification finding. Error-class variants fail [`check`];
+/// [`Violation::DeadEvent`] is warning-class (see module docs).
+#[derive(Debug, Clone)]
+pub enum Violation {
+    /// Two accesses to overlapping bytes of one arena, at least one a
+    /// write, with no happens-before path between their ops.
+    Race {
+        /// The arena both ops touch.
+        arena: ArenaId,
+        /// First overlapping byte (inclusive).
+        start: u64,
+        /// One past the last overlapping byte (exclusive).
+        end: u64,
+        /// Submission index of the earlier op.
+        first_op: usize,
+        /// Stream of the earlier op.
+        first_stream: u32,
+        /// Label of the earlier op.
+        first_label: &'static str,
+        /// How the earlier op touches the range.
+        first_mode: AccessMode,
+        /// Submission index of the later op.
+        second_op: usize,
+        /// Stream of the later op.
+        second_stream: u32,
+        /// Label of the later op.
+        second_label: &'static str,
+        /// How the later op touches the range.
+        second_mode: AccessMode,
+    },
+    /// A wait submitted before the record it names — the forward edge
+    /// shape that makes deadlock possible.
+    WaitBeforeRecord {
+        /// Submission index of the wait.
+        op: usize,
+        /// Stream that waits.
+        stream: u32,
+        /// The event id.
+        event: u32,
+        /// Submission index of the (later) record.
+        record_op: usize,
+    },
+    /// A wait naming an event that no record in the trace creates.
+    UnreachableWait {
+        /// Submission index of the wait.
+        op: usize,
+        /// Stream that waits.
+        stream: u32,
+        /// The event id.
+        event: u32,
+    },
+    /// An event id recorded twice — events are one-shot.
+    DoubleRecord {
+        /// Submission index of the second record.
+        op: usize,
+        /// Stream of the second record.
+        stream: u32,
+        /// The event id.
+        event: u32,
+        /// Submission index of the first record.
+        first_op: usize,
+    },
+    /// An op naming a stream outside the trace's stream count.
+    StreamOutOfRange {
+        /// Submission index of the op.
+        op: usize,
+        /// The out-of-range stream index.
+        stream: u32,
+        /// The trace's stream count.
+        n_streams: usize,
+    },
+    /// An event recorded but never waited on (warning-class: host-side
+    /// joins consume events outside the trace).
+    DeadEvent {
+        /// The event id.
+        event: u32,
+        /// Submission index of its record.
+        record_op: usize,
+        /// Stream it was recorded on.
+        stream: u32,
+    },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Race {
+                arena,
+                start,
+                end,
+                first_op,
+                first_stream,
+                first_label,
+                first_mode,
+                second_op,
+                second_stream,
+                second_label,
+                second_mode,
+            } => write!(
+                f,
+                "race on {arena} bytes {start}..{end}: op {first_op} \
+                 {first_label:?} (stream {first_stream}, {first_mode}) and \
+                 op {second_op} {second_label:?} (stream {second_stream}, \
+                 {second_mode}) have no happens-before path — add a FIFO or \
+                 event edge between them"
+            ),
+            Violation::WaitBeforeRecord {
+                op,
+                stream,
+                event,
+                record_op,
+            } => write!(
+                f,
+                "trace op {op}: stream {stream} waits on event {event} \
+                 before its record (record is op {record_op}) — dependency \
+                 edge points forward"
+            ),
+            Violation::UnreachableWait { op, stream, event } => write!(
+                f,
+                "trace op {op}: stream {stream} waits on event {event} \
+                 that is never recorded — unreachable wait"
+            ),
+            Violation::DoubleRecord {
+                op,
+                stream,
+                event,
+                first_op,
+            } => write!(
+                f,
+                "trace op {op}: stream {stream} records event {event} \
+                 again (first record is op {first_op}) — events are one-shot"
+            ),
+            Violation::StreamOutOfRange { op, stream, n_streams } => write!(
+                f,
+                "trace op {op}: stream {stream} out of range (program has \
+                 {n_streams} streams)"
+            ),
+            Violation::DeadEvent {
+                event,
+                record_op,
+                stream,
+            } => write!(
+                f,
+                "event {event} recorded at op {record_op} (stream {stream}) \
+                 is never waited on — dead event"
+            ),
+        }
+    }
+}
+
+/// The outcome of [`verify`]: error-class violations (races, forward
+/// edges, unreachable waits, reused events, bad streams) and
+/// warning-class ones (dead events).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Violations that make the program incorrect.
+    pub errors: Vec<Violation>,
+    /// Advisory findings (dead events).
+    pub warnings: Vec<Violation>,
+}
+
+impl Report {
+    /// No error-class violations?
+    pub fn is_clean(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// Human-readable rendering of the error-class violations (one per
+    /// line, count first).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{} schedule violation(s) in stream program:",
+            self.errors.len()
+        );
+        for v in &self.errors {
+            s.push_str("\n  - ");
+            s.push_str(&v.to_string());
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The analyzer
+// ---------------------------------------------------------------------------
+
+/// One declared access with the vector clock of its op.
+struct ClockedAccess {
+    op: usize,
+    stream: u32,
+    label: &'static str,
+    clock: Vec<u64>,
+    access: Access,
+}
+
+/// Statically verify a recorded stream program: compute happens-before
+/// with per-stream vector clocks (program order within a stream,
+/// record→wait joins across streams) and report every conflicting
+/// access pair with no happens-before path, plus the structural
+/// violations listed in the module docs. Pure function of the trace —
+/// nothing is executed.
+pub fn verify(trace: &Trace) -> Report {
+    let ns = trace.n_streams;
+    let mut errors: Vec<Violation> = Vec::new();
+    let mut warnings: Vec<Violation> = Vec::new();
+
+    // Pre-scan record positions so a wait on a not-yet-recorded event
+    // can distinguish "record comes later" from "record never comes".
+    let mut first_record: BTreeMap<u32, usize> = BTreeMap::new();
+    for (i, op) in trace.ops.iter().enumerate() {
+        if let TraceOp::Record { event, .. } = op {
+            first_record.entry(*event).or_insert(i);
+        }
+    }
+
+    struct EventInfo {
+        record_op: usize,
+        stream: u32,
+        clock: Vec<u64>,
+        waited: bool,
+    }
+    let mut events: BTreeMap<u32, EventInfo> = BTreeMap::new();
+
+    // clocks[s][t]: how far into stream t's launches stream s is
+    // guaranteed to have happened-after. A launch on s bumps
+    // clocks[s][s]; a wait joins the waited event's snapshot.
+    let mut clocks: Vec<Vec<u64>> = vec![vec![0u64; ns]; ns];
+    let mut by_arena: BTreeMap<ArenaId, Vec<ClockedAccess>> = BTreeMap::new();
+
+    for (i, op) in trace.ops.iter().enumerate() {
+        let stream = match op {
+            TraceOp::Launch { stream, .. }
+            | TraceOp::Record { stream, .. }
+            | TraceOp::Wait { stream, .. } => *stream,
+        };
+        if stream as usize >= ns {
+            errors.push(Violation::StreamOutOfRange {
+                op: i,
+                stream,
+                n_streams: ns,
+            });
+            continue;
+        }
+        let s = stream as usize;
+        match op {
+            TraceOp::Launch { label, access, .. } => {
+                clocks[s][s] += 1;
+                if !access.is_empty() {
+                    let snap = clocks[s].clone();
+                    for a in access.intervals() {
+                        by_arena.entry(a.arena).or_default().push(ClockedAccess {
+                            op: i,
+                            stream,
+                            label,
+                            clock: snap.clone(),
+                            access: *a,
+                        });
+                    }
+                }
+            }
+            TraceOp::Record { event, .. } => {
+                if let Some(info) = events.get(event) {
+                    errors.push(Violation::DoubleRecord {
+                        op: i,
+                        stream,
+                        event: *event,
+                        first_op: info.record_op,
+                    });
+                } else {
+                    events.insert(
+                        *event,
+                        EventInfo {
+                            record_op: i,
+                            stream,
+                            clock: clocks[s].clone(),
+                            waited: false,
+                        },
+                    );
+                }
+            }
+            TraceOp::Wait { event, .. } => {
+                if let Some(info) = events.get_mut(event) {
+                    info.waited = true;
+                    let snap = info.clock.clone();
+                    for (c, e) in clocks[s].iter_mut().zip(&snap) {
+                        *c = (*c).max(*e);
+                    }
+                } else if let Some(&r) = first_record.get(event) {
+                    errors.push(Violation::WaitBeforeRecord {
+                        op: i,
+                        stream,
+                        event: *event,
+                        record_op: r,
+                    });
+                } else {
+                    errors.push(Violation::UnreachableWait {
+                        op: i,
+                        stream,
+                        event: *event,
+                    });
+                }
+            }
+        }
+    }
+
+    for (event, info) in &events {
+        if !info.waited {
+            warnings.push(Violation::DeadEvent {
+                event: *event,
+                record_op: info.record_op,
+                stream: info.stream,
+            });
+        }
+    }
+
+    // Race detection. Within each arena, compare every access pair:
+    // conflicting (≥1 writer) + overlapping + no happens-before path =
+    // race. Edges only point backwards in submission order (waits name
+    // already-recorded events), so for a submitted-before b the only
+    // possible path is a→b: it exists iff b's clock has absorbed a's
+    // launch increment on a's stream. One report per op pair per arena.
+    for (arena_id, accs) in &by_arena {
+        let mut reported: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for bi in 1..accs.len() {
+            for ai in 0..bi {
+                let (a, b) = (&accs[ai], &accs[bi]);
+                if a.op == b.op {
+                    continue; // one op's own intervals cannot race
+                }
+                if a.access.mode == AccessMode::Read && b.access.mode == AccessMode::Read {
+                    continue;
+                }
+                let lo = a.access.start.max(b.access.start);
+                let hi = a.access.end.min(b.access.end);
+                if lo >= hi {
+                    continue;
+                }
+                if b.clock[a.stream as usize] >= a.clock[a.stream as usize] {
+                    continue; // a happens-before b
+                }
+                if !reported.insert((a.op, b.op)) {
+                    continue;
+                }
+                errors.push(Violation::Race {
+                    arena: *arena_id,
+                    start: lo,
+                    end: hi,
+                    first_op: a.op,
+                    first_stream: a.stream,
+                    first_label: a.label,
+                    first_mode: a.access.mode,
+                    second_op: b.op,
+                    second_stream: b.stream,
+                    second_label: b.label,
+                    second_mode: b.access.mode,
+                });
+            }
+        }
+    }
+
+    Report { errors, warnings }
+}
+
+/// [`verify`] as a pass/fail check: `Err` carries the rendered
+/// error-class violations. Warnings (dead events) do not fail.
+pub fn check(trace: &Trace) -> Result<(), String> {
+    let report = verify(trace);
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(report.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::scope_cfg;
+
+    fn launch(stream: u32, label: &'static str, access: AccessSet) -> TraceOp {
+        TraceOp::Launch {
+            stream,
+            label,
+            access,
+        }
+    }
+
+    fn trace(ns: usize, ops: Vec<TraceOp>) -> Trace {
+        Trace {
+            n_streams: ns,
+            async_mode: false,
+            ops,
+        }
+    }
+
+    #[test]
+    fn event_edge_orders_writer_before_reader() {
+        let a = arena("buf", 0);
+        let t = trace(
+            2,
+            vec![
+                launch(0, "w", AccessSet::new().write(a, 0..64)),
+                TraceOp::Record { stream: 0, event: 0 },
+                TraceOp::Wait { stream: 1, event: 0 },
+                launch(1, "r", AccessSet::new().read(a, 0..64)),
+            ],
+        );
+        let r = verify(&t);
+        assert!(r.is_clean(), "{}", r.render());
+        assert!(r.warnings.is_empty());
+    }
+
+    #[test]
+    fn fifo_orders_same_stream_ops() {
+        let a = arena("buf", 0);
+        let t = trace(
+            1,
+            vec![
+                launch(0, "w1", AccessSet::new().write(a, 0..64)),
+                launch(0, "w2", AccessSet::new().write(a, 0..64)),
+            ],
+        );
+        assert!(verify(&t).is_clean());
+    }
+
+    #[test]
+    fn missing_edge_is_a_race_with_range() {
+        let a = arena("buf", 3);
+        let t = trace(
+            2,
+            vec![
+                launch(0, "writer", AccessSet::new().write(a, 0..128)),
+                launch(1, "reader", AccessSet::new().read(a, 64..256)),
+            ],
+        );
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        let msg = r.errors[0].to_string();
+        assert!(msg.contains("race"), "{msg}");
+        assert!(msg.contains("\"writer\""), "{msg}");
+        assert!(msg.contains("\"reader\""), "{msg}");
+        assert!(msg.contains("\"buf\"[3]"), "{msg}");
+        // overlap is the intersection, not either declared range
+        assert!(msg.contains("bytes 64..128"), "{msg}");
+        assert!(msg.contains("stream 0"), "{msg}");
+        assert!(msg.contains("stream 1"), "{msg}");
+    }
+
+    #[test]
+    fn write_write_overlap_is_a_race() {
+        let a = arena("slot", 1);
+        let t = trace(
+            2,
+            vec![
+                launch(0, "w-a", AccessSet::new().write(a, 0..32)),
+                launch(1, "w-b", AccessSet::new().write(a, 16..48)),
+            ],
+        );
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        let msg = r.errors[0].to_string();
+        assert!(msg.contains("bytes 16..32"), "{msg}");
+    }
+
+    #[test]
+    fn disjoint_ranges_do_not_race() {
+        let a = arena("buf", 0);
+        let t = trace(
+            2,
+            vec![
+                launch(0, "w-lo", AccessSet::new().write(a, 0..64)),
+                launch(1, "w-hi", AccessSet::new().write(a, 64..128)),
+            ],
+        );
+        assert!(verify(&t).is_clean());
+    }
+
+    #[test]
+    fn distinct_arena_instances_do_not_race() {
+        let t = trace(
+            2,
+            vec![
+                launch(0, "w0", AccessSet::new().write(arena("dev", 0), 0..64)),
+                launch(1, "w1", AccessSet::new().write(arena("dev", 1), 0..64)),
+            ],
+        );
+        assert!(verify(&t).is_clean());
+    }
+
+    #[test]
+    fn read_read_never_races() {
+        let a = arena("buf", 0);
+        let t = trace(
+            2,
+            vec![
+                launch(0, "r-a", AccessSet::new().read(a, 0..64)),
+                launch(1, "r-b", AccessSet::new().read(a, 0..64)),
+            ],
+        );
+        assert!(verify(&t).is_clean());
+    }
+
+    #[test]
+    fn transitive_happens_before_through_two_events() {
+        // w on 0 → ev → middle on 1 → ev → r on 2: the HB path crosses
+        // two joins; the vector clocks must carry it through.
+        let a = arena("buf", 0);
+        let t = trace(
+            3,
+            vec![
+                launch(0, "w", AccessSet::new().write(a, 0..64)),
+                TraceOp::Record { stream: 0, event: 0 },
+                TraceOp::Wait { stream: 1, event: 0 },
+                launch(1, "middle", AccessSet::new()),
+                TraceOp::Record { stream: 1, event: 1 },
+                TraceOp::Wait { stream: 2, event: 1 },
+                launch(2, "r", AccessSet::new().read(a, 0..64)),
+            ],
+        );
+        let r = verify(&t);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn wait_before_record_is_named() {
+        let t = trace(
+            2,
+            vec![
+                TraceOp::Wait { stream: 1, event: 0 },
+                TraceOp::Record { stream: 0, event: 0 },
+            ],
+        );
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        let msg = r.errors[0].to_string();
+        assert!(msg.contains("before its record"), "{msg}");
+        assert!(msg.contains("event 0"), "{msg}");
+        assert!(msg.contains("record is op 1"), "{msg}");
+    }
+
+    #[test]
+    fn unreachable_wait_is_named() {
+        let t = trace(1, vec![TraceOp::Wait { stream: 0, event: 9 }]);
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        let msg = r.errors[0].to_string();
+        assert!(msg.contains("never recorded"), "{msg}");
+        assert!(msg.contains("event 9"), "{msg}");
+    }
+
+    #[test]
+    fn reused_event_is_named() {
+        let t = trace(
+            1,
+            vec![
+                TraceOp::Record { stream: 0, event: 4 },
+                TraceOp::Record { stream: 0, event: 4 },
+            ],
+        );
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        let msg = r.errors[0].to_string();
+        assert!(msg.contains("one-shot"), "{msg}");
+        assert!(msg.contains("event 4"), "{msg}");
+        assert!(msg.contains("first record is op 0"), "{msg}");
+    }
+
+    #[test]
+    fn stream_out_of_range_is_named() {
+        let t = trace(
+            1,
+            vec![launch(5, "x", AccessSet::new())],
+        );
+        let r = verify(&t);
+        assert_eq!(r.errors.len(), 1);
+        assert!(r.errors[0].to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn dead_event_is_a_warning_not_an_error() {
+        let t = trace(
+            1,
+            vec![TraceOp::Record { stream: 0, event: 0 }],
+        );
+        let r = verify(&t);
+        assert!(r.is_clean());
+        assert_eq!(r.warnings.len(), 1);
+        let msg = r.warnings[0].to_string();
+        assert!(msg.contains("dead event"), "{msg}");
+    }
+
+    #[test]
+    fn recorded_annotated_program_verifies_clean() {
+        // A real scope's trace (not hand-built): writer → event → reader.
+        let a = arena("data", 0);
+        let t = scope_cfg(2, false, |ex| {
+            ex.launch_acc(0, "w", AccessSet::new().write(a, f32_range(0, 16)), || {});
+            let ev = ex.record(0);
+            ex.wait(1, &ev);
+            ex.launch_acc(1, "r", AccessSet::new().read(a, f32_range(0, 16)), || {});
+            ex.trace()
+        });
+        let r = verify(&t);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn range_helpers_scale_by_element_width() {
+        assert_eq!(f32_range(2, 3), 8..20);
+        assert_eq!(f64_range(2, 3), 16..40);
+    }
+}

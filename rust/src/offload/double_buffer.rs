@@ -14,7 +14,8 @@
 //!   inline oracle; any stream schedule is bit-identical to it because
 //!   the ops are pure copies plus a deterministic per-layer kernel.
 
-use crate::exec::{self, Baton, Event};
+use crate::exec::verify::{arena, f32_range};
+use crate::exec::{self, AccessSet, Baton, Event};
 
 /// How offloaded tensors reach the GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,6 +126,12 @@ pub fn stream_pass(
         assert_eq!(h.len(), slots[0].len(), "layer/slot length mismatch");
     }
     assert_eq!(slots[0].len(), slots[1].len(), "slot length mismatch");
+    // Arena declarations for the static verifier: each host layer and
+    // each slot is one arena, accessed whole-buffer by every op.
+    let buf_len = slots[0].len();
+    let slot_a = |s: usize| arena("offload.slot", s as u32);
+    let host_a = |l: usize| arena("offload.host", l as u32);
+    let whole = || f32_range(0, buf_len);
     let order: Vec<usize> = if backward {
         (0..nl).rev().collect()
     } else {
@@ -168,9 +175,12 @@ pub fn stream_pass(
                     if let Some(ev) = &compute_done[s] {
                         ex.wait(ce_out, ev);
                     }
-                    ex.launch(ce_out, "evict", move || {
-                        sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl)))
-                    });
+                    ex.launch_acc(
+                        ce_out,
+                        "evict",
+                        AccessSet::new().read(slot_a(s), whole()).write(host_a(e), whole()),
+                        move || sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl))),
+                    );
                     evict_ev = Some(ex.record(ce_out));
                 }
             }
@@ -183,15 +193,23 @@ pub fn stream_pass(
                 (None, Some(ev)) => ex.wait(ce_in, ev),
                 (None, None) => {}
             }
-            ex.launch(ce_in, "prefetch", move || {
-                hb[l].with(|h| sb[s].with(|sl| sl.copy_from_slice(&**h)))
-            });
+            ex.launch_acc(
+                ce_in,
+                "prefetch",
+                AccessSet::new().read(host_a(l), whole()).write(slot_a(s), whole()),
+                move || hb[l].with(|h| sb[s].with(|sl| sl.copy_from_slice(&**h))),
+            );
             let ready = ex.record(ce_in);
 
             // Compute: waits only on its own prefetch — the other
             // slot's prefetch/evict traffic overlaps freely.
             ex.wait(comp, &ready);
-            ex.launch(comp, "compute", move || sb[s].with(|sl| compute(l, &mut **sl)));
+            ex.launch_acc(
+                comp,
+                "compute",
+                AccessSet::new().write(slot_a(s), whole()),
+                move || sb[s].with(|sl| compute(l, &mut **sl)),
+            );
             compute_done[s] = Some(ex.record(comp));
             resident[s] = Some(l);
         }
@@ -203,9 +221,12 @@ pub fn stream_pass(
                     if let Some(ev) = &compute_done[s] {
                         ex.wait(ce_out, ev);
                     }
-                    ex.launch(ce_out, "evict-final", move || {
-                        sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl)))
-                    });
+                    ex.launch_acc(
+                        ce_out,
+                        "evict-final",
+                        AccessSet::new().read(slot_a(s), whole()).write(host_a(e), whole()),
+                        move || sb[s].with(|sl| hb[e].with(|h| h.copy_from_slice(&**sl))),
+                    );
                 }
             }
         }

@@ -43,7 +43,8 @@ use crate::collectives::memcpy::PIPELINE_BLOCK;
 use crate::collectives::{
     all_gather_memcpy, reduce_scatter_memcpy, reduce_scatter_scaled_memcpy, DeviceGroup,
 };
-use crate::exec::{self, Baton, Event};
+use crate::exec::verify::{arena, f32_range, f64_range};
+use crate::exec::{self, AccessSet, Baton, Event};
 use crate::optim::adamw::{AdamW, AdamWParams, MomentsMode};
 use crate::precision::backend::AdamWSpec;
 use crate::precision::{backend, bf16, CounterRng};
@@ -390,8 +391,9 @@ pub fn fused_step_async(
 }
 
 /// [`fused_step_async`] returning the recorded stream program alongside
-/// the norm — the schedule `sim::replay` cross-checks (dependency-edge
-/// verification + DES replay of the step's real op graph).
+/// the norm — the schedule `sim::replay` cross-checks (static
+/// happens-before race detection over each op's declared access windows
+/// via `exec::verify`, then DES replay of the step's real op graph).
 pub fn fused_step_async_traced(
     ws: &mut StepWorkspace,
     p: &mut [f32],
@@ -456,6 +458,7 @@ fn fused_step_streamed(
     let n = ws.n();
     let world = ws.world();
     let n_chunks = ws.n_chunks();
+    let n_reps = ws.rank_params.len();
     assert_eq!(p.len(), n);
     assert_eq!(m.len(), n);
     assert_eq!(v.len(), n);
@@ -555,6 +558,16 @@ fn fused_step_streamed(
     // because post-barrier reads are legitimately concurrent.
     let norm_out: std::sync::OnceLock<(f32, AdamWSpec)> = std::sync::OnceLock::new();
 
+    // Declared arenas for the static verifier (`exec::verify`): every
+    // op below states the byte windows it touches, so LLMQ_VERIFY can
+    // prove each RAW/WAR/WAW pair is covered by a FIFO or event edge.
+    // The norm barrier's OnceLock is modeled as a 1-byte pseudo-arena:
+    // the fold writes it, every update reads it.
+    let chunk_range = |c: usize| {
+        let off = c * PIPELINE_BLOCK;
+        (off, (n - off).min(PIPELINE_BLOCK))
+    };
+
     let trace = exec::scope(|ex| {
         let ns = ex.n_streams();
         let cb = &chunk_batons;
@@ -586,18 +599,28 @@ fn fused_step_streamed(
                     let len = (n - off).min(PIPELINE_BLOCK);
                     let gw = &g[off..off + len];
                     let idx = d * n_chunks + c;
-                    ex.launch(acc_stream(d), "grad-accum", move || {
-                        wk[idx].with(|w| backend::bf16_accumulate(&mut **w, gw))
-                    });
+                    ex.launch_acc(
+                        acc_stream(d),
+                        "grad-accum",
+                        AccessSet::new()
+                            .write(arena("dev.grads", d as u32), f32_range(off, len)),
+                        move || wk[idx].with(|w| backend::bf16_accumulate(&mut **w, gw)),
+                    );
                     if is_last {
                         // Hand the finished window to the reduce stage
                         // and fire this chunk's source-ready event now —
                         // its reduce-scatter starts while later chunks
                         // of this device are still accumulating.
-                        ex.launch(acc_stream(d), "grad-publish", move || {
-                            let w: &[f32] = wk[idx].take();
-                            sources[idx].put(w);
-                        });
+                        ex.launch_acc(
+                            acc_stream(d),
+                            "grad-publish",
+                            AccessSet::new()
+                                .read(arena("dev.grads", d as u32), f32_range(off, len)),
+                            move || {
+                                let w: &[f32] = wk[idx].take();
+                                sources[idx].put(w);
+                            },
+                        );
                         ready_c.push(ex.record(acc_stream(d)));
                     }
                     off += len;
@@ -613,7 +636,17 @@ fn fused_step_streamed(
             for ev in evs {
                 ex.wait(s, ev);
             }
-            ex.launch(s, "reduce+partials", move || {
+            let (off, len) = chunk_range(c);
+            let mut acc = AccessSet::new()
+                .write(arena("ws.grads", 0), f32_range(off, len))
+                .write(
+                    arena("ws.norm_partials", 0),
+                    f64_range(c * backend::NORM_LANES, backend::NORM_LANES),
+                );
+            for d in 0..world {
+                acc = acc.read(arena("dev.grads", d as u32), f32_range(off, len));
+            }
+            ex.launch_acc(s, "reduce+partials", acc, move || {
                 cb[c].with(|w| {
                     if world == 1 {
                         // Degenerate single-device reduce: scaled RNE
@@ -645,15 +678,25 @@ fn fused_step_streamed(
         for ev in &chunk_done {
             ex.wait(fold_stream, ev);
         }
-        ex.launch(fold_stream, "norm-fold", move || {
-            let mut acc = 0.0f64;
-            for baton in cb.iter() {
-                acc += baton.with(|w| backend::fold_lanes(&*w.partials));
-            }
-            let norm = acc.sqrt() as f32;
-            let spec = hs.update_spec(norm, shard);
-            assert!(no.set((norm, spec)).is_ok(), "norm barrier ran twice");
-        });
+        ex.launch_acc(
+            fold_stream,
+            "norm-fold",
+            AccessSet::new()
+                .read(
+                    arena("ws.norm_partials", 0),
+                    f64_range(0, n_chunks * backend::NORM_LANES),
+                )
+                .write(arena("norm.spec", 0), 0..1),
+            move || {
+                let mut acc = 0.0f64;
+                for baton in cb.iter() {
+                    acc += baton.with(|w| backend::fold_lanes(&*w.partials));
+                }
+                let norm = acc.sqrt() as f32;
+                let spec = hs.update_spec(norm, shard);
+                assert!(no.set((norm, spec)).is_ok(), "norm barrier ran twice");
+            },
+        );
         let norm_ev = ex.record(fold_stream);
 
         // -- phase 3: update+gather chunks stream behind the barrier
@@ -662,7 +705,17 @@ fn fused_step_streamed(
             ex.wait(s, &norm_ev);
         }
         for c in 0..n_chunks {
-            ex.launch(work_stream(c), "update+gather", move || {
+            let (off, len) = chunk_range(c);
+            let mut acc = AccessSet::new()
+                .read(arena("norm.spec", 0), 0..1)
+                .read(arena("ws.grads", 0), f32_range(off, len))
+                .write(arena("params", 0), f32_range(off, len))
+                .write(arena("moment.m", 0), f32_range(off, len))
+                .write(arena("moment.v", 0), f32_range(off, len));
+            for r in 0..n_reps {
+                acc = acc.write(arena("replica", r as u32), f32_range(off, len));
+            }
+            ex.launch_acc(work_stream(c), "update+gather", acc, move || {
                 let (_, spec) = *no.get().expect("norm barrier must run before update");
                 cb[c].with(|w| {
                     backend::adamw_update(

@@ -488,8 +488,16 @@ pub mod scalar {
 pub fn absmax(x: &[f32]) -> f32 {
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::absmax(x) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::absmax(x) },
         _ => scalar::absmax(x),
     }
@@ -500,8 +508,16 @@ pub fn absmax(x: &[f32]) -> f32 {
 pub fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::fp8_round_scaled(fmt, x, scale) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::fp8_round_scaled(fmt, x, scale) },
         _ => scalar::fp8_round_scaled(fmt, x, scale),
     }
@@ -513,8 +529,16 @@ pub fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut [u8]) 
     debug_assert_eq!(x.len(), out.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::fp8_encode_scaled(fmt, x, scale, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::fp8_encode_scaled(fmt, x, scale, out) },
         _ => scalar::fp8_encode_scaled(fmt, x, scale, out),
     }
@@ -526,8 +550,16 @@ pub fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f3
     debug_assert_eq!(bytes.len(), out.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::fp8_decode_scaled(fmt, bytes, scale, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::fp8_decode_scaled(fmt, bytes, scale, out) },
         _ => scalar::fp8_decode_scaled(fmt, bytes, scale, out),
     }
@@ -537,8 +569,16 @@ pub fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f3
 pub fn bf16_round(x: &mut [f32]) {
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_round(x) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_round(x) },
         _ => scalar::bf16_round(x),
     }
@@ -549,8 +589,16 @@ pub fn bf16_round(x: &mut [f32]) {
 pub fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_stochastic_round(x, rng, counter_base) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_stochastic_round(x, rng, counter_base) },
         _ => scalar::bf16_stochastic_round(x, rng, counter_base),
     }
@@ -561,8 +609,16 @@ pub fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
     debug_assert_eq!(x.len(), out.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_scaled_round(x, out, scale) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_scaled_round(x, out, scale) },
         _ => scalar::bf16_scaled_round(x, out, scale),
     }
@@ -573,8 +629,16 @@ pub fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_accumulate(acc, x) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_accumulate(acc, x) },
         _ => scalar::bf16_accumulate(acc, x),
     }
@@ -585,8 +649,16 @@ pub fn bf16_pack(x: &[f32], out: &mut [u16]) {
     debug_assert_eq!(x.len(), out.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_pack(x, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_pack(x, out) },
         _ => scalar::bf16_pack(x, out),
     }
@@ -597,8 +669,16 @@ pub fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
     debug_assert_eq!(bits.len(), out.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::bf16_unpack(bits, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::bf16_unpack(bits, out) },
         _ => scalar::bf16_unpack(bits, out),
     }
@@ -625,8 +705,16 @@ pub fn sr_reduce_block(
 ) {
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::sr_reduce_block(srcs, base, block, scale, rng, counter) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::sr_reduce_block(srcs, base, block, scale, rng, counter) },
         _ => scalar::sr_reduce_block(srcs, base, block, scale, rng, counter),
     }
@@ -646,8 +734,16 @@ pub fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
     assert_eq!(lanes.len(), NORM_LANES, "lanes buffer must hold NORM_LANES slots");
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::sumsq_lanes_into(x, lanes) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::sumsq_lanes_into(x, lanes) },
         _ => scalar::sumsq_lanes_into(x, lanes),
     }
@@ -693,8 +789,16 @@ pub fn adamw_update(
     );
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::adamw_update(spec, p, m, v, g, counter_base) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::adamw_update(spec, p, m, v, g, counter_base) },
         _ => scalar::adamw_update(spec, p, m, v, g, counter_base),
     }
@@ -720,8 +824,16 @@ pub fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
     mx_assert_shapes(x.len(), scales.len(), codes.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::mx_encode_rne(x, scales, codes) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::mx_encode_rne(x, scales, codes) },
         _ => scalar::mx_encode_rne(x, scales, codes),
     }
@@ -741,8 +853,16 @@ pub fn mx_encode_sr(
     mx_assert_shapes(x.len(), scales.len(), codes.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::mx_encode_sr(x, scales, codes, rng, counter_base) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::mx_encode_sr(x, scales, codes, rng, counter_base) },
         _ => scalar::mx_encode_sr(x, scales, codes, rng, counter_base),
     }
@@ -754,8 +874,16 @@ pub fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
     mx_assert_shapes(out.len(), scales.len(), codes.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` returns `Avx2` only after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU, and the slice-shape preconditions the
+        // kernel indexes by are asserted by this wrapper (or equal lengths by
+        // construction) — see the module-level safety contract.
         SimdLevel::Avx2 => unsafe { x86::mx_decode(scales, codes, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` returns `Neon` only on aarch64, where NEON is a
+        // baseline architectural feature, and the slice-shape preconditions
+        // the kernel indexes by are asserted by this wrapper (or equal
+        // lengths by construction) — see the module-level safety contract.
         SimdLevel::Neon => unsafe { neon::mx_decode(scales, codes, out) },
         _ => scalar::mx_decode(scales, codes, out),
     }

@@ -21,8 +21,6 @@
 //! aarch64 — [`super::level`] dispatches here unconditionally on that
 //! target unless `LLMQ_SIMD=scalar`.
 
-#![allow(clippy::missing_safety_doc)] // one shared safety contract, documented above
-
 use super::scalar;
 use super::CounterRng;
 use super::{AdamWSpec, MomentsMode, NORM_LANES};
@@ -202,6 +200,13 @@ unsafe fn lane_iota() -> uint32x4_t {
 
 /// NEON `max(|x_i|)`; lane fold + scalar horizontal fold (order-
 /// insensitive, NaN-ignoring — matches `f32::max` exactly).
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn absmax(x: &[f32]) -> f32 {
     let mut acc = vdupq_n_f32(0.0);
@@ -217,6 +222,13 @@ pub unsafe fn absmax(x: &[f32]) -> f32 {
 }
 
 /// NEON `x[i] = fmt.round(x[i] / scale)`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
     let c = consts(fmt);
@@ -230,6 +242,13 @@ pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
 }
 
 /// NEON fused `out[i] = fmt.encode(fmt.round(x[i] / scale))`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut [u8]) {
     debug_assert_eq!(x.len(), out.len());
@@ -295,6 +314,13 @@ unsafe fn fp8_decode_vec(vb: uint32x4_t, c: &DecConsts) -> float32x4_t {
 }
 
 /// NEON fused `out[i] = fmt.decode(bytes[i]) * scale`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(bytes.len(), out.len());
@@ -318,6 +344,13 @@ pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &
 /// then eight 4-lane round/encode/nibble-remap iterations per block. A
 /// partial final block — including its own scale selection — falls back
 /// to the scalar reference.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
     debug_assert_eq!(codes.len(), x.len());
@@ -358,6 +391,13 @@ pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
 /// NEON MX/e2m1 block encode with stochastic element rounding; lane `j`
 /// at global element offset `o` draws counter `counter_base + o + j`,
 /// exactly like the scalar reference.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn mx_encode_sr(
     x: &[f32],
@@ -410,6 +450,13 @@ pub unsafe fn mx_encode_sr(
 
 /// NEON MX/e2m1 block decode: `out[i] = e2m1_decode(codes[i]) * s_b`
 /// with the block's e8m0 scale splatted across its eight 4-lane groups.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
     debug_assert_eq!(codes.len(), out.len());
@@ -442,6 +489,13 @@ pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
 }
 
 /// NEON RNE round onto the bf16 grid, in place.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_round(x: &mut [f32]) {
     let mut chunks = x.chunks_exact_mut(4);
@@ -453,6 +507,13 @@ pub unsafe fn bf16_round(x: &mut [f32]) {
 
 /// NEON stochastic round onto the bf16 grid; lane `j` at element offset
 /// `o` draws counter `counter_base + o + j` (global-index keying).
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
     let key = vdupq_n_u32(rng.key);
@@ -470,6 +531,13 @@ pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_bas
 }
 
 /// NEON `out[i] = bf16_rne(x[i] * scale)`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
     debug_assert_eq!(x.len(), out.len());
@@ -485,6 +553,13 @@ pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
 }
 
 /// NEON `acc[i] = bf16_rne(acc[i] + x[i])`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
@@ -499,6 +574,13 @@ pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
 }
 
 /// NEON bf16 bit packing: `out[i] = (x[i].to_bits() >> 16) as u16`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
     debug_assert_eq!(x.len(), out.len());
@@ -513,6 +595,13 @@ pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
 }
 
 /// NEON bf16 bit unpacking: `out[i] = f32::from_bits((bits[i] as u32) << 16)`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
     debug_assert_eq!(bits.len(), out.len());
@@ -532,6 +621,13 @@ pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
 /// NEON SR reduce epilogue over one collective pipeline block (ascending-
 /// src sum, optional per-term `bf16_rne(g * scale)`, SR keyed by
 /// `counter + base + j`).
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn sr_reduce_block(
     srcs: &[&[f32]],
@@ -575,6 +671,13 @@ pub unsafe fn sr_reduce_block(
 /// sums are bit-identical to the scalar reference and to AVX2. The
 /// sub-8 tail keeps the round-robin lane assignment (`main % 8 == 0`,
 /// so tail element `t` belongs to lane `t`).
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
     debug_assert_eq!(lanes.len(), NORM_LANES);
@@ -609,6 +712,13 @@ pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
 /// `vfmaq`), with `vdivq_f32`/`vsqrtq_f32` correctly rounded so the
 /// scalar `update_element` chain is transcribed bitwise, and the three
 /// SR streams drawn per lane at counters `c`, `c + shard`, `c + 2·shard`.
+///
+/// # Safety
+///
+/// Requires NEON, which is architecturally mandatory on aarch64 —
+/// `super::level` selects this backend unconditionally on that target.
+/// Slice-shape preconditions are asserted below or hold by construction
+/// (see the module-level safety contract).
 #[target_feature(enable = "neon")]
 pub unsafe fn adamw_update(
     spec: &AdamWSpec,

@@ -24,8 +24,6 @@
 //! supports AVX2; [`super::level`] only dispatches here after
 //! `is_x86_feature_detected!("avx2")` has confirmed that.
 
-#![allow(clippy::missing_safety_doc)] // one shared safety contract, documented above
-
 use super::scalar;
 use super::CounterRng;
 use super::{AdamWSpec, MomentsMode, NORM_LANES};
@@ -212,6 +210,13 @@ unsafe fn bf16_sr_vec(x: __m256, ctr: __m256i, key: __m256i) -> __m256 {
 /// `max` over a set is order-insensitive, so this matches the sequential
 /// scalar fold bitwise (NaN lanes are never selected, exactly like
 /// `f32::max`).
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn absmax(x: &[f32]) -> f32 {
     let vabs = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
@@ -229,6 +234,13 @@ pub unsafe fn absmax(x: &[f32]) -> f32 {
 }
 
 /// AVX2 `x[i] = fmt.round(x[i] / scale)`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
     let c = consts(fmt);
@@ -242,6 +254,13 @@ pub unsafe fn fp8_round_scaled(fmt: Fp8Format, x: &mut [f32], scale: f32) {
 }
 
 /// AVX2 fused `out[i] = fmt.encode(fmt.round(x[i] / scale))`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn fp8_encode_scaled(fmt: Fp8Format, x: &[f32], scale: f32, out: &mut [u8]) {
     debug_assert_eq!(x.len(), out.len());
@@ -303,6 +322,13 @@ unsafe fn fp8_decode_vec(vb: __m256i, c: &DecConsts) -> __m256 {
 }
 
 /// AVX2 fused `out[i] = fmt.decode(bytes[i]) * scale`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(bytes.len(), out.len());
@@ -325,6 +351,13 @@ pub unsafe fn fp8_decode_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &
 /// then four 8-lane round/encode/nibble-remap iterations per block. A
 /// partial final block — including its own scale selection — falls back
 /// to the scalar reference.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
     debug_assert_eq!(codes.len(), x.len());
@@ -364,6 +397,13 @@ pub unsafe fn mx_encode_rne(x: &[f32], scales: &mut [u8], codes: &mut [u8]) {
 /// AVX2 MX/e2m1 block encode with stochastic element rounding; lane `j`
 /// at global element offset `o` draws counter `counter_base + o + j`,
 /// exactly like the scalar reference.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn mx_encode_sr(
     x: &[f32],
@@ -416,6 +456,13 @@ pub unsafe fn mx_encode_sr(
 
 /// AVX2 MX/e2m1 block decode: `out[i] = e2m1_decode(codes[i]) * s_b`
 /// with the block's e8m0 scale splatted across its four 8-lane groups.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
     debug_assert_eq!(codes.len(), out.len());
@@ -448,6 +495,13 @@ pub unsafe fn mx_decode(scales: &[u8], codes: &[u8], out: &mut [f32]) {
 }
 
 /// AVX2 RNE round onto the bf16 grid, in place.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_round(x: &mut [f32]) {
     let mut chunks = x.chunks_exact_mut(8);
@@ -461,6 +515,13 @@ pub unsafe fn bf16_round(x: &mut [f32]) {
 /// AVX2 stochastic round onto the bf16 grid; lane `j` of the vector at
 /// element offset `o` draws counter `counter_base + o + j`, keeping the
 /// stream keyed by global element index.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_base: u32) {
     let key = _mm256_set1_epi32(rng.key as i32);
@@ -481,6 +542,13 @@ pub unsafe fn bf16_stochastic_round(x: &mut [f32], rng: &CounterRng, counter_bas
 }
 
 /// AVX2 `out[i] = bf16_rne(x[i] * scale)`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
     debug_assert_eq!(x.len(), out.len());
@@ -496,6 +564,13 @@ pub unsafe fn bf16_scaled_round(x: &[f32], out: &mut [f32], scale: f32) {
 }
 
 /// AVX2 `acc[i] = bf16_rne(acc[i] + x[i])`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
@@ -513,6 +588,13 @@ pub unsafe fn bf16_accumulate(acc: &mut [f32], x: &[f32]) {
 }
 
 /// AVX2 bf16 bit packing: `out[i] = (x[i].to_bits() >> 16) as u16`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
     debug_assert_eq!(x.len(), out.len());
@@ -532,6 +614,13 @@ pub unsafe fn bf16_pack(x: &[f32], out: &mut [u16]) {
 }
 
 /// AVX2 bf16 bit unpacking: `out[i] = f32::from_bits((bits[i] as u32) << 16)`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
     debug_assert_eq!(bits.len(), out.len());
@@ -549,6 +638,13 @@ pub unsafe fn bf16_unpack(bits: &[u16], out: &mut [f32]) {
 /// AVX2 SR reduce epilogue over one collective pipeline block:
 /// ascending-src sum (each term optionally `bf16_rne(g * scale)`), then
 /// one SR draw per element keyed by `counter + base + j`.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn sr_reduce_block(
     srcs: &[&[f32]],
@@ -596,6 +692,13 @@ pub unsafe fn sr_reduce_block(
 /// reference, so the lane sums match it bitwise. The sub-8 tail keeps
 /// the round-robin lane assignment (`main % 8 == 0`, so tail element
 /// `t` belongs to lane `t`).
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
     debug_assert_eq!(lanes.len(), NORM_LANES);
@@ -623,6 +726,13 @@ pub unsafe fn sumsq_lanes_into(x: &[f32], lanes: &mut [f64]) {
 /// the m/bc1 ÷ (√(v/bc2) + ε) chain matches bitwise); the three SR
 /// streams draw per lane at counters `c`, `c + shard`, `c + 2·shard`
 /// from global-element-index counter vectors.
+///
+/// # Safety
+///
+/// The CPU must support AVX2: `super::level` dispatches here only after
+/// `is_x86_feature_detected!("avx2")` confirmed it. Slice-shape
+/// preconditions are asserted below or hold by construction (see the
+/// module-level safety contract).
 #[target_feature(enable = "avx2")]
 pub unsafe fn adamw_update(
     spec: &AdamWSpec,

@@ -15,6 +15,13 @@
 //! * every event is recorded exactly once (one-shot events);
 //! * every op names a stream inside the trace's stream count.
 //!
+//! [`verify_trace`] layers the full static analyzer
+//! (`exec::verify`) on top of those edge-shape checks: happens-before
+//! via per-stream vector clocks over the ops' declared
+//! [`crate::exec::AccessSet`] footprints, reporting any conflicting
+//! access pair with no covering edge — so a replayed trace is checked
+//! for *races*, not just malformed edges.
+//!
 //! A malformed trace returns a named error instead of a panic, so tests
 //! can pin the failure modes. The returned [`Schedule`] carries the
 //! list-scheduled timing of the replayed program — makespan and
@@ -39,36 +46,43 @@ pub fn replay_trace(eng: &mut Engine, trace: &Trace) -> Result<Schedule> {
     let ns = trace.n_streams;
     let mut record_task: HashMap<u32, TaskId> = HashMap::new();
     for (i, op) in trace.ops.iter().enumerate() {
-        match *op {
-            TraceOp::Launch { stream, label } => {
-                check_stream(stream, ns, i)?;
-                eng.push(Stream::host(stream as usize), REPLAY_OP_S, &[], label);
+        match op {
+            TraceOp::Launch { stream, label, .. } => {
+                check_stream(*stream, ns, i)?;
+                eng.push(Stream::host(*stream as usize), REPLAY_OP_S, &[], label);
             }
             TraceOp::Record { stream, event } => {
-                check_stream(stream, ns, i)?;
-                if record_task.contains_key(&event) {
+                check_stream(*stream, ns, i)?;
+                if record_task.contains_key(event) {
                     bail!("trace op {i}: event {event} recorded twice");
                 }
-                let t = eng.push(Stream::host(stream as usize), 0.0, &[], "record");
-                record_task.insert(event, t);
+                let t = eng.push(Stream::host(*stream as usize), 0.0, &[], "record");
+                record_task.insert(*event, t);
             }
             TraceOp::Wait { stream, event } => {
-                check_stream(stream, ns, i)?;
-                let Some(&t) = record_task.get(&event) else {
+                check_stream(*stream, ns, i)?;
+                let Some(&t) = record_task.get(event) else {
                     bail!(
                         "trace op {i}: wait on event {event} with no earlier record — \
                          dependency edge points forward"
                     );
                 };
-                eng.push(Stream::host(stream as usize), 0.0, &[t], "wait");
+                eng.push(Stream::host(*stream as usize), 0.0, &[t], "wait");
             }
         }
     }
     Ok(eng.run())
 }
 
-/// Verify a trace's dependency edges without keeping the schedule.
+/// Full static verification of a recorded trace: the `exec::verify`
+/// happens-before race analysis over the ops' declared access sets
+/// (races, forward edges, unreachable waits, reused events), then the
+/// DES replay's edge-shape checks. Returns the first failing layer's
+/// named error.
 pub fn verify_trace(trace: &Trace) -> Result<()> {
+    if let Err(msg) = crate::exec::verify::check(trace) {
+        bail!("{msg}");
+    }
     replay_trace(&mut Engine::new(), trace).map(|_| ())
 }
 
@@ -111,12 +125,16 @@ mod tests {
             n_streams: 2,
             async_mode: false,
             ops: vec![
-                TraceOp::Launch { stream: 0, label: "x" },
+                TraceOp::Launch {
+                    stream: 0,
+                    label: "x",
+                    access: exec::AccessSet::new(),
+                },
                 TraceOp::Wait { stream: 1, event: 7 },
             ],
         };
         let err = verify_trace(&trace).unwrap_err();
-        assert!(err.to_string().contains("no earlier record"), "{err}");
+        assert!(err.to_string().contains("never recorded"), "{err}");
     }
 
     #[test]
@@ -130,7 +148,7 @@ mod tests {
             ],
         };
         let err = verify_trace(&trace).unwrap_err();
-        assert!(err.to_string().contains("recorded twice"), "{err}");
+        assert!(err.to_string().contains("one-shot"), "{err}");
     }
 
     #[test]
@@ -138,9 +156,62 @@ mod tests {
         let trace = Trace {
             n_streams: 1,
             async_mode: false,
-            ops: vec![TraceOp::Launch { stream: 5, label: "x" }],
+            ops: vec![TraceOp::Launch {
+                stream: 5,
+                label: "x",
+                access: exec::AccessSet::new(),
+            }],
         };
         let err = verify_trace(&trace).unwrap_err();
         assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    /// The upgrade from edge-shape checks to full race detection: a
+    /// structurally well-formed trace (edges all point backwards) whose
+    /// declared accesses conflict is now rejected, by label and range.
+    #[test]
+    fn race_in_declared_accesses_is_rejected() {
+        let a = exec::verify::arena("buf", 0);
+        let trace = Trace {
+            n_streams: 2,
+            async_mode: false,
+            ops: vec![
+                TraceOp::Launch {
+                    stream: 0,
+                    label: "writer",
+                    access: exec::AccessSet::new().write(a, 0..64),
+                },
+                TraceOp::Launch {
+                    stream: 1,
+                    label: "reader",
+                    access: exec::AccessSet::new().read(a, 0..64),
+                },
+            ],
+        };
+        let err = verify_trace(&trace).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("race"), "{msg}");
+        assert!(msg.contains("\"writer\""), "{msg}");
+        assert!(msg.contains("bytes 0..64"), "{msg}");
+        // ...and the same program with the edge in place passes.
+        let ok = Trace {
+            n_streams: 2,
+            async_mode: false,
+            ops: vec![
+                TraceOp::Launch {
+                    stream: 0,
+                    label: "writer",
+                    access: exec::AccessSet::new().write(a, 0..64),
+                },
+                TraceOp::Record { stream: 0, event: 0 },
+                TraceOp::Wait { stream: 1, event: 0 },
+                TraceOp::Launch {
+                    stream: 1,
+                    label: "reader",
+                    access: exec::AccessSet::new().read(a, 0..64),
+                },
+            ],
+        };
+        verify_trace(&ok).unwrap();
     }
 }

@@ -20,7 +20,7 @@ use llmq::optim::fused::{
 };
 use llmq::optim::{AdamWParams, MomentsMode};
 use llmq::precision::{bf16, round_to_bf16, CounterRng};
-use llmq::sim::{replay_trace, Engine};
+use llmq::sim::{replay_trace, verify_trace, Engine};
 use llmq::train::{checkpoint, StepWorkspace};
 use llmq::util::par;
 
@@ -154,9 +154,10 @@ fn overlapped_accumulation_is_unobservable() {
     }
 }
 
-/// Every schedule the consumers record replays through the DES engine:
-/// dependency edges verified (record-before-wait, one-shot events,
-/// stream bounds) and the replay produces a finite schedule.
+/// Every schedule the consumers record passes the full static verifier
+/// (`exec::verify` happens-before race detection over the ops' declared
+/// access sets, plus edge-shape checks) and replays through the DES
+/// engine to a finite, overlapping schedule.
 #[test]
 fn recorded_schedules_replay_through_des() {
     // 1) the fused step's real recorded stream program
@@ -171,6 +172,7 @@ fn recorded_schedules_replay_through_des() {
             llmq::optim::fused::fused_step_async_traced(&mut ws, &mut p, &mut m, &mut v, &hs)
         })
     });
+    verify_trace(&trace).expect("fused stream program is race-free");
     let mut eng = Engine::new();
     let sched = replay_trace(&mut eng, &trace).expect("well-formed fused schedule");
     assert!(sched.makespan > 0.0 && sched.makespan.is_finite());
@@ -198,6 +200,7 @@ fn recorded_schedules_replay_through_des() {
             })
         })
     });
+    verify_trace(&trace).expect("double-buffer stream program is race-free");
     let sched = replay_trace(&mut eng, &trace).expect("double-buffer schedule");
     // 6 compute ops + 6 prefetches + evictions, all at unit cost: the
     // makespan must show overlap (strictly less than the serial total).

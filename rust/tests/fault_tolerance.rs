@@ -444,3 +444,47 @@ fn resume_from_disk_generation_is_bitwise() {
     assert_eq!(w2.bits(), reference(2, 1, true, 2, STEPS).bits());
     let _ = std::fs::remove_dir_all(&cfg.ckpt_dir);
 }
+
+/// The stream program a *recovered* run re-submits is the same
+/// statically race-free program an uninterrupted run records: replay
+/// the chaos workload's step shape with tracing on, run the full
+/// `exec::verify` happens-before analysis over the trace (via
+/// `sim::verify_trace`), and pin that recording + the `LLMQ_VERIFY`
+/// scope hook leave the numbers bitwise identical to the supervised
+/// reference.
+#[test]
+fn recovered_step_program_passes_static_verification() {
+    let (world, threads, streams) = (2usize, 2usize, 3usize);
+    let want = reference(world, threads, true, streams, 1).bits();
+
+    let mut w = FusedWorkload::new(world, threads, true, streams);
+    let step = w.step + 1;
+    w.ws.ensure(w.world, N);
+    w.ws.begin_step();
+    w.fill_grads(step);
+    let hs = HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip: 1.0,
+        step,
+        counter: w.counter,
+        seed: 9,
+        n_micro: 2 * world,
+        opt_world: OPT_WORLD,
+        moments: MomentsMode::Fp32,
+    };
+    let (ws, p, m, v) = (&mut w.ws, &mut w.p, &mut w.m, &mut w.v);
+    let (_norm, trace) = par::with_threads(threads, || {
+        exec::with_async(true, || {
+            exec::with_verify(true, || {
+                exec::with_streams(streams, || {
+                    llmq::optim::fused::fused_step_async_traced(ws, p, m, v, &hs)
+                })
+            })
+        })
+    });
+    llmq::sim::verify_trace(&trace).expect("recovered step program is race-free");
+    w.step = step;
+    w.counter = w.counter.wrapping_add(3 * N as u32);
+    assert_eq!(w.bits(), want, "traced+verified step drifted from reference");
+}

@@ -278,3 +278,32 @@ fn fused_phases_match_scalar_kernels() {
         }
     }
 }
+
+/// The fused stream program's declared access sets pass full static
+/// race verification (`exec::verify` happens-before over per-stream
+/// vector clocks) at every stream count, both with the `LLMQ_VERIFY`
+/// scope-exit hook live and over the recorded trace after the fact —
+/// and recording + verification change none of the numbers.
+#[test]
+fn fused_stream_program_is_statically_race_free() {
+    let n = 2 * PIPELINE_BLOCK + 64;
+    let hs = host_step(1.0, 4, 2);
+    let reference = run(Path::Fused, 2, n, 1, 0.05, &hs);
+    for streams in [1usize, 2, 4] {
+        let mut ws = StepWorkspace::new(2, n);
+        ws.begin_step();
+        fill_dev_grads(&mut ws, 0xACC, 0.05);
+        let (mut p, mut m, mut v) = init_state(n);
+        let (norm, trace) = exec::with_async(true, || {
+            exec::with_verify(true, || {
+                exec::with_streams(streams, || {
+                    llmq::optim::fused::fused_step_async_traced(&mut ws, &mut p, &mut m, &mut v, &hs)
+                })
+            })
+        });
+        llmq::sim::verify_trace(&trace)
+            .unwrap_or_else(|e| panic!("streams={streams}: {e}"));
+        assert_eq!(norm.to_bits(), reference.0, "norm streams={streams}");
+        assert_eq!(bits(&p), bits(&reference.1), "p streams={streams}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Crate-wide determinism lint, driven from the test harness.
+//!
+//! The lint itself lives in `tools/lint_determinism.rs` (repo root) and
+//! is included here via `#[path]`, so `cargo test` runs it with no extra
+//! binary, build step, or dependency. The headline test walks
+//! `rust/src/` and fails — listing every violation with file, line and
+//! rule — if any source file regresses on the determinism rules:
+//! hash-collection iteration, wall-clock/OS-entropy randomness, unkeyed
+//! stochastic rounding, or `unsafe` outside `precision::backend`. The
+//! remaining tests pin the lint's own behaviour on synthetic sources so
+//! a rule cannot silently rot.
+
+#[path = "../../tools/lint_determinism.rs"]
+mod lint_determinism;
+
+use std::path::Path;
+
+use lint_determinism as lint;
+
+/// The headline check: every file under `rust/src/` passes the lint
+/// (modulo the per-file `HASH_ALLOWLIST`, each entry of which carries a
+/// written reason).
+#[test]
+fn crate_sources_pass_determinism_lint() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint::lint_tree(&src).expect("walk rust/src");
+    assert!(findings.is_empty(), "{}", lint::render(&findings));
+}
+
+#[test]
+fn flags_hash_collections_and_respects_allowlist() {
+    let source = "use std::collections::HashMap;\nfn f() {}\n";
+    let findings = lint::lint_file(Path::new("src/exec/new_module.rs"), source);
+    assert_eq!(findings.len(), 1, "{}", lint::render(&findings));
+    assert_eq!(findings[0].rule, lint::R1_HASH_COLLECTIONS);
+    assert_eq!(findings[0].line, 1);
+
+    // The same source under an allowlisted path is accepted.
+    let ok = lint::lint_file(Path::new("rust/src/util/args.rs"), source);
+    assert!(ok.is_empty(), "{}", lint::render(&ok));
+    // ...and every allowlist entry carries a reason.
+    for (file, why) in lint::HASH_ALLOWLIST {
+        assert!(!why.is_empty(), "allowlist entry {file} has no reason");
+    }
+}
+
+#[test]
+fn flags_wallclock_and_entropy_randomness() {
+    for bad in [
+        "fn now() { let _t = std::time::SystemTime::now(); }\n",
+        "fn seed() { let mut r = thread_rng(); }\n",
+        "fn seed() { let r = SmallRng::from_entropy(); }\n",
+        "fn draw() -> f32 { rand::random() }\n",
+    ] {
+        let findings = lint::lint_file(Path::new("src/x.rs"), bad);
+        assert_eq!(findings.len(), 1, "source: {bad}\n{}", lint::render(&findings));
+        assert_eq!(findings[0].rule, lint::R2_WALLCLOCK_RANDOMNESS);
+    }
+}
+
+#[test]
+fn flags_unkeyed_stochastic_rounding() {
+    // No counter key in the parameter list: rejected.
+    let bad = "pub fn stochastic_round_q(x: f32, p: f32) -> f32 { x + p }\n";
+    let findings = lint::lint_file(Path::new("src/x.rs"), bad);
+    assert_eq!(findings.len(), 1, "{}", lint::render(&findings));
+    assert_eq!(findings[0].rule, lint::R3_UNKEYED_SR);
+    assert_eq!(findings[0].line, 1);
+
+    // Keyed (counter / ctr / rng_draw), multi-line signatures, and
+    // zero-argument test helpers are all accepted.
+    for ok in [
+        "pub fn stochastic_round_q(x: f32, counter: u32) -> f32 { x }\n",
+        "fn sr_fold(t: f32, ctr: u32) -> f32 { t }\n",
+        "pub fn round_fp8_sr(fmt: u8, x: f32, rng_draw: u32) -> f32 { x }\n",
+        "pub fn mx_encode_sr(\n    x: &[f32],\n    counter_base: u32,\n) {}\n",
+        "fn sr_parity_with_python() {}\n",
+    ] {
+        let findings = lint::lint_file(Path::new("src/x.rs"), ok);
+        assert!(findings.is_empty(), "source: {ok}\n{}", lint::render(&findings));
+    }
+}
+
+#[test]
+fn flags_unsafe_outside_backend_only() {
+    let source = "fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+    let findings = lint::lint_file(Path::new("src/exec/mod.rs"), source);
+    assert_eq!(findings.len(), 1, "{}", lint::render(&findings));
+    assert_eq!(findings[0].rule, lint::R4_UNSAFE_OUTSIDE_BACKEND);
+
+    let ok = lint::lint_file(Path::new("src/precision/backend/x86.rs"), source);
+    assert!(ok.is_empty(), "{}", lint::render(&ok));
+}
+
+#[test]
+fn comments_and_strings_do_not_trip_rules() {
+    let source = "\
+// a comment naming HashMap and thread_rng is fine
+/* block comments too: HashSet, SystemTime,
+   even /* nested */ ones mentioning unsafe */
+fn f() -> &'static str {
+    \"string literals naming HashMap or unsafe are data\"
+}
+fn g() -> &'static str {
+    r#\"raw strings with HashSet and \"quotes\" inside\"#
+}
+";
+    let findings = lint::lint_file(Path::new("src/x.rs"), source);
+    assert!(findings.is_empty(), "{}", lint::render(&findings));
+    // Stripping preserves line structure, so finding line numbers are real.
+    let stripped = lint::strip_comments_and_strings(source);
+    assert_eq!(stripped.lines().count(), source.lines().count());
+}
+
+/// The tree walker visits files recursively and reports findings by
+/// path and line.
+#[test]
+fn tree_walk_finds_violations_recursively() {
+    let root = Path::new(env!("CARGO_TARGET_TMPDIR")).join("lint_determinism_walk");
+    let nested = root.join("src").join("deep");
+    std::fs::create_dir_all(&nested).unwrap();
+    std::fs::write(root.join("src").join("ok.rs"), "fn f() {}\n").unwrap();
+    std::fs::write(
+        nested.join("bad.rs"),
+        "fn f() {}\nuse std::collections::HashSet;\n",
+    )
+    .unwrap();
+    let findings = lint::lint_tree(&root.join("src")).expect("walk fixture tree");
+    assert_eq!(findings.len(), 1, "{}", lint::render(&findings));
+    assert_eq!(findings[0].rule, lint::R1_HASH_COLLECTIONS);
+    assert_eq!(findings[0].line, 2);
+    assert!(
+        findings[0].file.to_string_lossy().ends_with("bad.rs"),
+        "{}",
+        findings[0]
+    );
+}

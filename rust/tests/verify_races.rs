@@ -1,0 +1,216 @@
+//! Negative-space suite for the static race detector (`exec::verify`):
+//! seeded mutants of the *real* fused-step stream program must each be
+//! rejected with a named, range-carrying error.
+//!
+//! Geometry: world 2, 4 streams, 2 chunks — every chunk gets its own
+//! worker stream (`work_stream(c) = (world + c) % ns` → streams 2 and
+//! 3), so no FIFO edge or sibling-chunk event masks a dropped wait and
+//! each cross-stream `Wait` is individually load-bearing. The recorded
+//! program is:
+//!
+//! ```text
+//! L(s2 reduce+partials) R(s2 e0)   L(s3 reduce+partials) R(s3 e1)
+//! W(s0 e0) W(s0 e1)  L(s0 norm-fold)  R(s0 e2)
+//! W(s0 e2) W(s1 e2) W(s2 e2) W(s3 e2)
+//! L(s2 update+gather)  L(s3 update+gather)
+//! ```
+//!
+//! The sweep drops each `Wait` in turn: the four load-bearing edges
+//! must produce a race naming the op labels and the exact overlapping
+//! byte range; the two benign drops (the fold stream's FIFO-redundant
+//! self-wait and idle stream 1's barrier wait) must stay clean — the
+//! detector is exact, not conservative, on this program. Hand-built
+//! mutants cover the remaining error classes: write-write overlap,
+//! wait-before-record, and a reused (one-shot) event.
+
+use llmq::collectives::memcpy::PIPELINE_BLOCK;
+use llmq::exec::{self, verify, AccessSet, Trace, TraceOp};
+use llmq::optim::fused::{fused_step_async_traced, HostStep};
+use llmq::optim::{AdamWParams, MomentsMode};
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::train::StepWorkspace;
+
+const WORLD: usize = 2;
+const STREAMS: usize = 4;
+const N: usize = 2 * PIPELINE_BLOCK;
+
+/// Record the fused optimizer step's stream program at the pinned
+/// geometry (and let the `LLMQ_VERIFY` scope hook see it live).
+fn record_fused_trace() -> Trace {
+    let hs = HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip: 1.0,
+        step: 2,
+        counter: 12_345,
+        seed: 9,
+        n_micro: 2 * WORLD,
+        opt_world: 2,
+        moments: MomentsMode::Fp32,
+    };
+    let mut ws = StepWorkspace::new(WORLD, N);
+    ws.begin_step();
+    let rng = CounterRng::new(0xACC);
+    for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((d * N + i) as u32) - 0.5) * 0.05);
+        }
+    }
+    let mut p: Vec<f32> = (0..N).map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0)).collect();
+    let mut m = vec![0f32; N];
+    let mut v = vec![0f32; N];
+    let (_, trace) = exec::with_async(true, || {
+        exec::with_verify(true, || {
+            exec::with_streams(STREAMS, || {
+                fused_step_async_traced(&mut ws, &mut p, &mut m, &mut v, &hs)
+            })
+        })
+    });
+    trace
+}
+
+fn wait_indices(trace: &Trace) -> Vec<usize> {
+    trace
+        .ops
+        .iter()
+        .enumerate()
+        .filter(|(_, op)| matches!(op, TraceOp::Wait { .. }))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+fn drop_op(trace: &Trace, idx: usize) -> Trace {
+    let mut ops = trace.ops.clone();
+    ops.remove(idx);
+    Trace {
+        n_streams: trace.n_streams,
+        async_mode: trace.async_mode,
+        ops,
+    }
+}
+
+/// Every seeded missing-edge mutant of the fused-step program is
+/// flagged by op label and overlapping byte range; the two provably
+/// redundant edges stay clean when dropped.
+#[test]
+fn dropped_wait_mutants_are_flagged_by_label_and_range() {
+    let trace = record_fused_trace();
+    verify::check(&trace).expect("unmutated program must verify clean");
+
+    let waits = wait_indices(&trace);
+    assert_eq!(
+        waits.len(),
+        2 + STREAMS,
+        "geometry drifted: expected per-chunk fold waits + per-stream barrier waits"
+    );
+
+    // In submission order: W(s0,e0) W(s0,e1) W(s0,e2) W(s1,e2) W(s2,e2)
+    // W(s3,e2). `None` = dropping the edge is benign (FIFO-redundant or
+    // the stream runs nothing afterwards); `Some((label, arena, range))`
+    // = the race the detector must report, with the exact byte overlap.
+    let norm_lanes_bytes = 8 * llmq::precision::backend::NORM_LANES as u64;
+    let chunk0 = format!("bytes 0..{norm_lanes_bytes}");
+    let chunk1 = format!("bytes {norm_lanes_bytes}..{}", 2 * norm_lanes_bytes);
+    let expected: [Option<(&str, &str, &str)>; 6] = [
+        Some(("reduce+partials", "ws.norm_partials", &chunk0)),
+        Some(("reduce+partials", "ws.norm_partials", &chunk1)),
+        None,
+        None,
+        Some(("norm-fold", "norm.spec", "bytes 0..1")),
+        Some(("norm-fold", "norm.spec", "bytes 0..1")),
+    ];
+
+    for (k, (&idx, want)) in waits.iter().zip(expected.iter()).enumerate() {
+        let mutant = drop_op(&trace, idx);
+        match (verify::check(&mutant), want) {
+            (Ok(()), None) => {}
+            (Err(msg), Some((label, arena, range))) => {
+                assert!(msg.contains("race on"), "wait {k}: {msg}");
+                assert!(msg.contains(label), "wait {k} missing label {label}: {msg}");
+                assert!(msg.contains(arena), "wait {k} missing arena {arena}: {msg}");
+                assert!(msg.contains(range), "wait {k} missing range {range}: {msg}");
+            }
+            (Ok(()), Some(w)) => panic!("wait {k}: dropped edge not flagged, expected {w:?}"),
+            (Err(msg), None) => panic!("wait {k}: benign drop flagged: {msg}"),
+        }
+    }
+}
+
+/// A second writer overlapping a real op's declared write window is a
+/// write-write race, reported with the overlap.
+#[test]
+fn write_write_overlap_is_flagged() {
+    let trace = record_fused_trace();
+    let mut ops = trace.ops.clone();
+    // Stream 1 only ever waited the norm barrier, which happens-before
+    // none of the update writes — a rogue params write there races.
+    ops.push(TraceOp::Launch {
+        stream: 1,
+        label: "rogue-writer",
+        access: AccessSet::new().write(verify::arena("params", 0), 0..4),
+    });
+    let mutant = Trace {
+        n_streams: trace.n_streams,
+        async_mode: trace.async_mode,
+        ops,
+    };
+    let msg = verify::check(&mutant).expect_err("overlapping writers must be flagged");
+    assert!(msg.contains("race on"), "{msg}");
+    assert!(msg.contains("params"), "{msg}");
+    assert!(msg.contains("bytes 0..4"), "{msg}");
+    assert!(msg.contains("rogue-writer"), "{msg}");
+    assert!(msg.contains("update+gather"), "{msg}");
+    assert!(msg.contains("write"), "{msg}");
+}
+
+/// Moving a wait ahead of its record is a named forward-edge error.
+#[test]
+fn wait_before_record_mutant_is_flagged() {
+    let trace = record_fused_trace();
+    let waits = wait_indices(&trace);
+    let first_wait = waits[0];
+    // Find that event's record and swap the two ops.
+    let ev = match trace.ops[first_wait] {
+        TraceOp::Wait { event, .. } => event,
+        _ => unreachable!(),
+    };
+    let rec = trace
+        .ops
+        .iter()
+        .position(|op| matches!(op, TraceOp::Record { event, .. } if *event == ev))
+        .expect("waited event has a record");
+    assert!(rec < first_wait, "trace must be well-edged before mutation");
+    let mut ops = trace.ops.clone();
+    ops.swap(rec, first_wait);
+    let mutant = Trace {
+        n_streams: trace.n_streams,
+        async_mode: trace.async_mode,
+        ops,
+    };
+    let msg = verify::check(&mutant).expect_err("forward edge must be flagged");
+    assert!(msg.contains("before its record"), "{msg}");
+}
+
+/// Recording an already-recorded event violates one-shot semantics.
+#[test]
+fn reused_event_mutant_is_flagged() {
+    let trace = record_fused_trace();
+    let (rec_idx, stream, ev) = trace
+        .ops
+        .iter()
+        .enumerate()
+        .find_map(|(i, op)| match op {
+            TraceOp::Record { stream, event } => Some((i, *stream, *event)),
+            _ => None,
+        })
+        .expect("program records events");
+    let mut ops = trace.ops.clone();
+    ops.insert(rec_idx + 1, TraceOp::Record { stream, event: ev });
+    let mutant = Trace {
+        n_streams: trace.n_streams,
+        async_mode: trace.async_mode,
+        ops,
+    };
+    let msg = verify::check(&mutant).expect_err("reused event must be flagged");
+    assert!(msg.contains("one-shot"), "{msg}");
+}

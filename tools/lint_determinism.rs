@@ -1,0 +1,483 @@
+//! Crate-wide determinism lint for `rust/src/`.
+//!
+//! LLMQ's central promise is bit-exact reproducibility (docs/NUMERICS.md):
+//! every float, every checkpoint CRC, every replayed trace must be
+//! identical across runs, thread counts and backends. The easiest way to
+//! lose that property is not a numeric bug but an *incidental* source of
+//! nondeterminism — iterating a `HashMap`, seeding from the wall clock,
+//! or a stochastic-rounding path whose draw is not keyed by element
+//! index. This file is a small, dependency-free source lint that rejects
+//! those patterns crate-wide; `rust/tests/lint_determinism.rs` includes
+//! it via `#[path]` and drives it from `cargo test`, so the lint runs in
+//! every CI test job without a separate binary or toolchain component.
+//!
+//! Rules (comment and string-literal text is stripped before matching):
+//!
+//! * **R1 `hash-collections`** — `HashMap` / `HashSet` anywhere in a
+//!   source file. Hash iteration order is randomized per process, so any
+//!   use is guilty until a human vouches for it: files whose uses are
+//!   provably order-independent (keyed lookups only, or serialization
+//!   through sorted keys) are grandfathered in [`HASH_ALLOWLIST`], each
+//!   with a reason. New files should reach for `BTreeMap` / `BTreeSet`.
+//! * **R2 `wallclock-randomness`** — `thread_rng`, `from_entropy`,
+//!   `rand::random`, or `SystemTime`-derived seeds. All randomness in
+//!   this crate flows from the run config seed through counter-based
+//!   generators; OS entropy and wall clocks are banned outside timing
+//!   telemetry (none of which currently feeds numerics).
+//! * **R3 `unkeyed-sr`** — a stochastic-rounding function (name contains
+//!   `stochastic`, starts with `sr_`, or ends with `_sr`) whose
+//!   parameter list carries no counter key (`counter`, `ctr`, or
+//!   `rng_draw`). NUMERICS.md Rule 1: every SR draw is keyed by global
+//!   element index so lane width, chunking and replay are unobservable.
+//! * **R4 `unsafe-outside-backend`** — `unsafe` anywhere except
+//!   `precision/backend/`, the one module with an audited safety
+//!   contract (SIMD dispatch behind runtime feature detection).
+//!
+//! The lint is intentionally lexical: no parser, no false comfort. It
+//! can over-flag (that is what the allowlist is for) but it cannot be
+//! silently defeated by formatting.
+
+// Included via `#[path]` from the test harness; not every helper is
+// reachable from every test configuration.
+#![allow(dead_code)]
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers, used in findings and allowlist scoping.
+pub const R1_HASH_COLLECTIONS: &str = "hash-collections";
+pub const R2_WALLCLOCK_RANDOMNESS: &str = "wallclock-randomness";
+pub const R3_UNKEYED_SR: &str = "unkeyed-sr";
+pub const R4_UNSAFE_OUTSIDE_BACKEND: &str = "unsafe-outside-backend";
+
+/// Files (matched by path suffix, `/`-normalized) exempt from R1, each
+/// with the reason a human signed off on the hash-collection use. Keep
+/// this list short: the bar for an entry is "no behaviour depends on
+/// iteration order".
+pub const HASH_ALLOWLIST: &[(&str, &str)] = &[
+    (
+        "fault/mod.rs",
+        "fired-site HashSet is membership-only; never iterated",
+    ),
+    (
+        "util/args.rs",
+        "CLI flag map; keyed lookups only, never iterated",
+    ),
+    (
+        "util/json.rs",
+        "JSON objects serialize through explicitly sorted keys",
+    ),
+    (
+        "runtime/mod.rs",
+        "executable cache; keyed lookups only, never iterated",
+    ),
+    (
+        "runtime/manifest.rs",
+        "artifact map round-trips through the sorted JSON serializer",
+    ),
+    (
+        "sim/engine.rs",
+        "stream-id interning and per-stream busy totals; read by key",
+    ),
+    (
+        "sim/replay.rs",
+        "event-id -> task map; keyed lookups only, never iterated",
+    ),
+    (
+        "data/synth.rs",
+        "test-only histogram compared entry-by-key, never iterated for output",
+    ),
+    (
+        "comm/coordinator.rs",
+        "per-step tally maps; keyed by step id, never iterated for output",
+    ),
+];
+
+/// One lint violation: file, 1-based line, rule id, human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file.display(),
+            self.line,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// Render findings as one block, for a test assertion message.
+pub fn render(findings: &[Finding]) -> String {
+    let mut s = format!("{} determinism lint violation(s):\n", findings.len());
+    for f in findings {
+        s.push_str(&format!("  - {f}\n"));
+    }
+    s.push_str(
+        "fix the source (BTreeMap/BTreeSet, seed-derived counter RNGs, \
+         counter-keyed SR, unsafe only in precision::backend) or — for \
+         provably order-independent hash-collection uses — add a \
+         HASH_ALLOWLIST entry in tools/lint_determinism.rs with a reason",
+    );
+    s
+}
+
+/// Replace comment and string-literal interiors with spaces (newlines
+/// kept, so line numbers survive). Handles nested `/* */`, `//` lines,
+/// `"…"` with escapes, `r"…"` / `r#"…"#` raw strings, char literals,
+/// and leaves lifetimes (`'a`) alone.
+pub fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    let n = b.len();
+    let keep = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"…" or r#"…"# (any number of #).
+        if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                // Emit placeholder for the opener, then scan to the
+                // matching closer `"` + hashes `#`s.
+                for _ in i..=j {
+                    out.push(' ');
+                }
+                i = j + 1;
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+            // `r` not starting a raw string (e.g. an identifier): fall
+            // through to the default arm below.
+        }
+        // Ordinary string literal.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals; `'a` in
+        // `&'a T` (no closing quote right after) is a lifetime.
+        if c == '\'' {
+            if i + 2 < n && b[i + 1] == '\\' {
+                // Escaped char literal: skip to the closing quote.
+                out.push(' ');
+                i += 1;
+                while i < n && b[i] != '\'' {
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // Lifetime (or stray quote): keep as-is.
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+fn word_hit(line: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !line[..at]
+                .chars()
+                .next_back()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false);
+        let after = at + word.len();
+        let after_ok = after >= line.len()
+            || !line[after..]
+                .chars()
+                .next()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+fn norm(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+fn on_hash_allowlist(rel: &str) -> Option<&'static str> {
+    HASH_ALLOWLIST
+        .iter()
+        .find(|(suffix, _)| rel.ends_with(suffix))
+        .map(|&(_, why)| why)
+}
+
+/// Does `name` look like a stochastic-rounding entry point?
+fn is_sr_name(name: &str) -> bool {
+    name.contains("stochastic") || name.starts_with("sr_") || name.ends_with("_sr")
+}
+
+/// Lint one file's source. `rel` is the path as reported in findings and
+/// matched against the allowlist / backend exemption.
+pub fn lint_file(rel: &Path, src: &str) -> Vec<Finding> {
+    let clean = strip_comments_and_strings(src);
+    let rel_s = norm(rel);
+    let in_backend = rel_s.contains("precision/backend/");
+    let mut findings = Vec::new();
+
+    let lines: Vec<&str> = clean.lines().collect();
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        // R1: hash collections.
+        if on_hash_allowlist(&rel_s).is_none() {
+            for word in ["HashMap", "HashSet"] {
+                if word_hit(line, word) {
+                    findings.push(Finding {
+                        file: rel.to_path_buf(),
+                        line: lineno,
+                        rule: R1_HASH_COLLECTIONS,
+                        message: format!(
+                            "{word} has randomized iteration order — use \
+                             BTreeMap/BTreeSet, or allowlist this file with a reason"
+                        ),
+                    });
+                }
+            }
+        }
+        // R2: wall-clock / OS-entropy randomness.
+        for word in ["thread_rng", "from_entropy", "SystemTime"] {
+            if word_hit(line, word) {
+                findings.push(Finding {
+                    file: rel.to_path_buf(),
+                    line: lineno,
+                    rule: R2_WALLCLOCK_RANDOMNESS,
+                    message: format!(
+                        "{word} is nondeterministic — all randomness must \
+                         derive from the run-config seed via counter RNGs"
+                    ),
+                });
+            }
+        }
+        if line.contains("rand::random") {
+            findings.push(Finding {
+                file: rel.to_path_buf(),
+                line: lineno,
+                rule: R2_WALLCLOCK_RANDOMNESS,
+                message: "rand::random draws from thread-local OS entropy".into(),
+            });
+        }
+        // R4: unsafe outside the audited backend module.
+        if !in_backend && word_hit(line, "unsafe") {
+            findings.push(Finding {
+                file: rel.to_path_buf(),
+                line: lineno,
+                rule: R4_UNSAFE_OUTSIDE_BACKEND,
+                message: "unsafe is confined to precision::backend (the audited \
+                          SIMD dispatch layer)"
+                    .into(),
+            });
+        }
+    }
+
+    // R3: stochastic-rounding functions must take a counter key. Scan
+    // `fn` items and accumulate the parameter list to its closing paren.
+    let chars: Vec<char> = clean.chars().collect();
+    let mut i = 0usize;
+    let mut lineno = 1usize;
+    while i < chars.len() {
+        if chars[i] == '\n' {
+            lineno += 1;
+            i += 1;
+            continue;
+        }
+        // Match the token `fn` on a word boundary.
+        if chars[i] == 'f'
+            && i + 1 < chars.len()
+            && chars[i + 1] == 'n'
+            && (i == 0 || !(chars[i - 1].is_alphanumeric() || chars[i - 1] == '_'))
+            && (i + 2 >= chars.len() || !(chars[i + 2].is_alphanumeric() || chars[i + 2] == '_'))
+        {
+            let fn_line = lineno;
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].is_whitespace() {
+                if chars[j] == '\n' {
+                    lineno += 1;
+                }
+                j += 1;
+            }
+            let name_start = j;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let name: String = chars[name_start..j].iter().collect();
+            if is_sr_name(&name) {
+                // Accumulate the parameter list (balanced parens; the
+                // signature may span lines).
+                while j < chars.len() && chars[j] != '(' {
+                    if chars[j] == '\n' {
+                        lineno += 1;
+                    }
+                    j += 1;
+                }
+                let mut depth = 0usize;
+                let mut sig = String::new();
+                while j < chars.len() {
+                    let c = chars[j];
+                    if c == '\n' {
+                        lineno += 1;
+                    }
+                    if c == '(' {
+                        depth += 1;
+                    }
+                    if depth > 0 {
+                        sig.push(c);
+                    }
+                    if c == ')' {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let inner = sig.trim_start_matches('(').trim_end_matches(')').trim();
+                let keyed = ["counter", "ctr", "rng_draw"]
+                    .iter()
+                    .any(|k| sig.contains(k));
+                if !inner.is_empty() && !keyed {
+                    findings.push(Finding {
+                        file: rel.to_path_buf(),
+                        line: fn_line,
+                        rule: R3_UNKEYED_SR,
+                        message: format!(
+                            "stochastic-rounding fn `{name}` takes no counter key \
+                             (`counter`/`ctr`/`rng_draw`) — SR draws must be keyed \
+                             by global element index (NUMERICS.md Rule 1)"
+                        ),
+                    });
+                }
+            }
+            i = j.max(i + 2);
+            continue;
+        }
+        i += 1;
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Walk `root` (typically `rust/src/`) and lint every `.rs` file.
+/// Findings report paths relative to `root`'s parent so messages read
+/// `src/exec/mod.rs:…`. Directory entries are visited in sorted order —
+/// the lint practices what it preaches.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<io::Result<_>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                let src = fs::read_to_string(&path)?;
+                let rel = path.strip_prefix(root.parent().unwrap_or(root)).unwrap_or(&path);
+                findings.extend(lint_file(rel, &src));
+            }
+        }
+    }
+    findings.sort_by(|a, b| (a.file.clone(), a.line, a.rule).cmp(&(b.file.clone(), b.line, b.rule)));
+    Ok(findings)
+}
