@@ -168,6 +168,15 @@ fn main() {
         );
         std::process::exit(2);
     }
+    // Same rule for tracing: span recording perturbs timings, so a
+    // bench under LLMQ_TRACE must refuse rather than stamp a report.
+    if llmq::telemetry::descriptor() != "off" {
+        eprintln!(
+            "hotpath: refusing to benchmark with tracing active (LLMQ_TRACE={}); unset it first",
+            llmq::telemetry::descriptor()
+        );
+        std::process::exit(2);
+    }
     let n = 1 << 22; // 4M elements
     let rng = CounterRng::new(1);
     let base: Vec<f32> = (0..n).map(|i| (rng.next_f32(i as u32) - 0.5) * 8.0).collect();

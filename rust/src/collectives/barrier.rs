@@ -86,18 +86,21 @@ impl QueueDeadlock {
     /// (the detector for tests — real CUDA would hang forever).
     fn take_slot(&self, timeout: Duration) -> Submitted {
         let mut q = self.in_flight.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = crate::telemetry::now_ns() + timeout.as_nanos() as u64;
         while *q >= self.capacity {
             if self.gave_up.load(Ordering::SeqCst) {
                 return Submitted::WouldDeadlock;
             }
-            let now = std::time::Instant::now();
+            let now = crate::telemetry::now_ns();
             if now >= deadline {
                 self.gave_up.store(true, Ordering::SeqCst);
                 self.space.notify_all();
                 return Submitted::WouldDeadlock;
             }
-            let (qq, _res) = self.space.wait_timeout(q, deadline - now).unwrap();
+            let (qq, _res) = self
+                .space
+                .wait_timeout(q, Duration::from_nanos(deadline - now))
+                .unwrap();
             q = qq;
         }
         *q += 1;

@@ -32,7 +32,17 @@
 
 use super::DeviceGroup;
 use crate::precision::{bf16, CounterRng};
+use crate::telemetry::{self, Counter};
 use crate::util::par;
+
+/// Bump the reduce-side telemetry counters for one reduction producing
+/// `out_elems` outputs from `n_srcs` full-length sources (observation
+/// only; no-op unless `LLMQ_TRACE` is on). Bytes are the f32 source
+/// bytes consumed; every output element costs one SR draw.
+fn count_reduce(n_srcs: usize, out_elems: usize) {
+    telemetry::add(Counter::BytesReduced, (n_srcs * out_elems * 4) as u64);
+    telemetry::add(Counter::SrDraws, out_elems as u64);
+}
 
 /// Elements per pipelined block (32 KiB of f32): small enough that the
 /// `world` source streams stay cache-resident, large enough to amortize
@@ -55,6 +65,7 @@ pub fn reduce_scatter_memcpy(
     let world = grads.world;
     let chunk = grads.chunk_len();
     assert_eq!(acc.len(), world);
+    count_reduce(world, grads.numel());
     let rng = *rng;
     let srcs: Vec<&[f32]> = grads.buffers.iter().map(|b| b.as_slice()).collect();
 
@@ -113,6 +124,7 @@ pub fn reduce_chunk(
     rng: &CounterRng,
     counter: u32,
 ) {
+    count_reduce(srcs.len(), out.len());
     let rng = *rng;
     let items = par::split_blocks_mut(out, PIPELINE_BLOCK);
     par::for_each_item(items, |(i0, block)| {
@@ -142,6 +154,7 @@ pub fn reduce_scatter_scaled_memcpy(
 ) {
     assert_eq!(out.len(), grads.numel(), "flat accumulator length");
     let _ = grads.chunk_len(); // assert world | numel
+    count_reduce(grads.world, out.len());
     let rng = *rng;
     let srcs: Vec<&[f32]> = grads.buffers.iter().map(|b| b.as_slice()).collect();
 
@@ -205,6 +218,10 @@ pub fn all_gather_memcpy(shards: &[Vec<f32>], out: &mut DeviceGroup) {
     assert_eq!(out.world, world);
     let chunk = shards[0].len();
     assert_eq!(out.numel(), world * chunk);
+    telemetry::add(
+        Counter::BytesGathered,
+        (world * world * chunk * 4) as u64,
+    );
     let bufs: Vec<&mut Vec<f32>> = out.buffers.iter_mut().collect();
     par::for_each_item(bufs, |buf| {
         for (src, sh) in shards.iter().enumerate() {

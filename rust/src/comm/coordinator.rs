@@ -37,15 +37,16 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::liveness::{Liveness, LivenessCfg};
 use super::wire::{self, Ctrl};
 use super::workload::{DEFAULT_N, OPT_WORLD};
+use crate::telemetry;
 use crate::train::checkpoint::{self, ShardManifest};
-use crate::util::Json;
+use crate::util::{EventWriter, Json};
 
 /// Coordinator configuration for one distributed run.
 #[derive(Debug, Clone)]
@@ -148,20 +149,65 @@ struct RankProc {
     reaped: bool,
 }
 
-fn now_ms(t0: Instant) -> u64 {
-    t0.elapsed().as_millis() as u64
+/// The coordinator's JSONL event log: the shared [`EventWriter`] schema
+/// (`kind` type tag + monotone `seq`, the same lines
+/// `train::supervisor` writes) plus a coordinator-relative `t_ms` wall
+/// stamp. `t_ms` is observation only — liveness and epoch deadlines run
+/// on the same `telemetry::now_ns` reading, never on a value read back
+/// from the log.
+struct EventLog {
+    file: std::fs::File,
+    writer: EventWriter,
+    t0_ns: u64,
 }
 
-fn emit(events: &mut std::fs::File, t0: Instant, kind: &str, extra: Vec<(&'static str, Json)>) {
-    let mut fields: Vec<(&'static str, Json)> = vec![
-        ("kind", Json::Str(kind.to_string())),
-        ("t_ms", Json::Num(now_ms(t0) as f64)),
-    ];
-    fields.extend(extra);
-    let mut line = Json::obj(fields).render();
-    line.push('\n');
-    let _ = events.write_all(line.as_bytes());
-    let _ = events.flush();
+impl EventLog {
+    fn now_ms(&self) -> u64 {
+        telemetry::now_ns().saturating_sub(self.t0_ns) / 1_000_000
+    }
+
+    fn emit(&mut self, kind: &str, extra: Vec<(&'static str, Json)>) {
+        let mut fields: Vec<(&'static str, Json)> =
+            vec![("t_ms", Json::Num(self.now_ms() as f64))];
+        fields.extend(extra);
+        let line = self.writer.line(kind, fields);
+        let _ = self.file.write_all(line.as_bytes());
+        let _ = self.file.flush();
+    }
+}
+
+/// Fold every `rank*-counters.jsonl` sink under `dir` into one total per
+/// counter name (ranks append one totals line per epoch; lines sum).
+fn aggregate_rank_counters(dir: &std::path::Path) -> Vec<(&'static str, u64)> {
+    let mut totals: Vec<(&'static str, u64)> =
+        telemetry::COUNTER_NAMES.iter().map(|n| (*n, 0u64)).collect();
+    let mut any = false;
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return vec![];
+    };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("rank") && name.ends_with("-counters.jsonl")) {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(e.path()) else {
+            continue;
+        };
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = Json::parse(line) else { continue };
+            for (name, total) in totals.iter_mut() {
+                if let Some(v) = j.opt(name).and_then(|v| v.num().ok()) {
+                    *total += v as u64;
+                    any = true;
+                }
+            }
+        }
+    }
+    if any {
+        totals
+    } else {
+        vec![]
+    }
 }
 
 /// Newest generation on disk that passes shard validation (manifest
@@ -191,12 +237,16 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
     ensure!(!cfg.exe.as_os_str().is_empty(), "rank executable path is empty");
     std::fs::create_dir_all(&cfg.ckpt_dir)
         .with_context(|| format!("creating {}", cfg.ckpt_dir.display()))?;
-    let mut events = std::fs::OpenOptions::new()
+    let events = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
         .open(cfg.ckpt_dir.join("coordinator-events.log"))
         .context("opening coordinator event log")?;
-    let t0 = Instant::now();
+    let mut log = EventLog {
+        file: events,
+        writer: EventWriter::new(),
+        t0_ns: telemetry::now_ns(),
+    };
 
     let mut liveness = Liveness::new(LivenessCfg {
         timeout_ms: cfg.hb_timeout_ms,
@@ -212,9 +262,14 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
             // Nothing left to train (e.g. every rank committed the final
             // generation but the previous epoch still failed afterwards).
             let epochs = liveness.epoch();
-            emit(
-                &mut events,
-                t0,
+            let totals = aggregate_rank_counters(&cfg.ckpt_dir);
+            if !totals.is_empty() {
+                log.emit(
+                    "counters",
+                    totals.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect(),
+                );
+            }
+            log.emit(
                 "done",
                 vec![
                     ("step", Json::Num(f64::from(cfg.target_step))),
@@ -233,9 +288,7 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
         }
 
         let epoch = liveness.epoch() + 1;
-        emit(
-            &mut events,
-            t0,
+        log.emit(
             "epoch-start",
             vec![
                 ("epoch", Json::Num(epoch as f64)),
@@ -248,14 +301,19 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
             ],
         );
 
-        let failure = run_one_epoch(&cfg, world, epoch, restore, &mut liveness, &mut events, t0)?;
+        let failure = run_one_epoch(&cfg, world, epoch, restore, &mut liveness, &mut log)?;
 
         match failure {
             None => {
                 let epochs = liveness.epoch();
-                emit(
-                    &mut events,
-                    t0,
+                let totals = aggregate_rank_counters(&cfg.ckpt_dir);
+                if !totals.is_empty() {
+                    log.emit(
+                        "counters",
+                        totals.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect(),
+                    );
+                }
+                log.emit(
                     "done",
                     vec![
                         ("step", Json::Num(f64::from(cfg.target_step))),
@@ -273,9 +331,7 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
                 });
             }
             Some(reason) => {
-                emit(
-                    &mut events,
-                    t0,
+                log.emit(
                     "epoch-failed",
                     vec![
                         ("epoch", Json::Num(epoch as f64)),
@@ -289,9 +345,7 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
                 }
                 let next = world.saturating_sub(1);
                 if cfg.allow_shrink && next >= 1 && cfg.n % next as usize == 0 {
-                    emit(
-                        &mut events,
-                        t0,
+                    log.emit(
                         "shrink",
                         vec![
                             ("from", Json::Num(f64::from(world))),
@@ -303,12 +357,7 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
                     respawns_left = cfg.max_respawns;
                     continue;
                 }
-                emit(
-                    &mut events,
-                    t0,
-                    "gave-up",
-                    vec![("reason", Json::Str(reason.clone()))],
-                );
+                log.emit("gave-up", vec![("reason", Json::Str(reason.clone()))]);
                 return Ok(CoordReport {
                     final_step: newest_restorable(&cfg.ckpt_dir, cfg.n).unwrap_or(0),
                     final_world: world,
@@ -326,18 +375,17 @@ pub fn run_coordinator(cfg: CoordCfg) -> Result<CoordReport> {
 /// committed the target step and exited cleanly; `Ok(Some(reason))`
 /// names the first failure. Children are always torn down (aborted,
 /// killed, reaped) before returning.
-#[allow(clippy::too_many_arguments)]
 fn run_one_epoch(
     cfg: &CoordCfg,
     world: u32,
     epoch: u64,
     restore: Option<u32>,
     liveness: &mut Liveness,
-    events: &mut std::fs::File,
-    t0: Instant,
+    log: &mut EventLog,
 ) -> Result<Option<String>> {
     let w = world as usize;
-    let epoch_deadline = Instant::now() + Duration::from_millis(cfg.epoch_timeout_ms.max(1));
+    let epoch_deadline = telemetry::now_ns()
+        + Duration::from_millis(cfg.epoch_timeout_ms.max(1)).as_nanos() as u64;
 
     // Control listener first: its port goes on every child's command line.
     let listener = TcpListener::bind("127.0.0.1:0").context("binding control listener")?;
@@ -430,7 +478,7 @@ fn run_one_epoch(
                 joined += 1;
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() >= epoch_deadline {
+                if telemetry::now_ns() >= epoch_deadline {
                     teardown(&mut procs);
                     return Ok(Some(format!(
                         "rendezvous timed out with {joined} of {w} ranks joined"
@@ -479,7 +527,7 @@ fn run_one_epoch(
             return Ok(Some(format!("sending welcome to rank {r}: {e:#}")));
         }
     }
-    let begun = liveness.begin_epoch(w, now_ms(t0));
+    let begun = liveness.begin_epoch(w, log.now_ms());
     debug_assert_eq!(begun, epoch);
 
     // Reader threads funnel every control message into one channel.
@@ -517,7 +565,7 @@ fn run_one_epoch(
                 Ctrl::Heartbeat {
                     rank, epoch: e, ..
                 } => {
-                    liveness.on_heartbeat(rank, e, now_ms(t0));
+                    liveness.on_heartbeat(rank, e, log.now_ms());
                 }
                 Ctrl::StepDone {
                     rank,
@@ -544,9 +592,7 @@ fn run_one_epoch(
                     let c = steps_done.entry(step).or_insert(0);
                     *c += 1;
                     if *c == world {
-                        emit(
-                            events,
-                            t0,
+                        log.emit(
                             "committed",
                             vec![
                                 ("step", Json::Num(f64::from(step))),
@@ -594,9 +640,7 @@ fn run_one_epoch(
                         continue;
                     }
                     liveness.mark_dead(rank);
-                    emit(
-                        events,
-                        t0,
+                    log.emit(
                         "rank-dead",
                         vec![
                             ("epoch", Json::Num(epoch as f64)),
@@ -623,9 +667,7 @@ fn run_one_epoch(
                 if status.success() {
                     p.exited_ok = true;
                 } else {
-                    emit(
-                        events,
-                        t0,
+                    log.emit(
                         "rank-dead",
                         vec![
                             ("epoch", Json::Num(epoch as f64)),
@@ -641,11 +683,10 @@ fn run_one_epoch(
 
         // 3. Heartbeat sweep: a silent rank is dead even if its process
         // is still running (partition semantics).
-        let newly_dead = liveness.check(now_ms(t0));
+        let newly_dead = liveness.check(log.now_ms());
+        telemetry::add(telemetry::Counter::HeartbeatMisses, newly_dead.len() as u64);
         if let Some(&r) = newly_dead.first() {
-            emit(
-                events,
-                t0,
+            log.emit(
                 "rank-dead",
                 vec![
                     ("epoch", Json::Num(epoch as f64)),
@@ -664,7 +705,7 @@ fn run_one_epoch(
         }
 
         // 5. Epoch wall clock.
-        if Instant::now() >= epoch_deadline {
+        if telemetry::now_ns() >= epoch_deadline {
             failure = Some(format!("epoch {epoch} exceeded its wall-clock bound"));
             break 'epoch;
         }

@@ -4,8 +4,8 @@
 //! All time flows in through `now_ms` parameters (a monotonic
 //! millisecond clock the caller owns), so every transition is testable
 //! with a fake clock: no timers, no threads, no IO. The coordinator
-//! feeds it real `Instant`-derived milliseconds; the tests feed it
-//! hand-picked instants.
+//! feeds it real `telemetry::now_ns`-derived milliseconds; the tests
+//! feed it hand-picked instants.
 //!
 //! Fencing rules (the ones that keep a flaky network from corrupting
 //! membership):

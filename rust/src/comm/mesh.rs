@@ -22,11 +22,12 @@
 //! live data.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::wire::{self, FrameKind, FrameStamp};
+use crate::telemetry::{self, Counter};
 
 /// One rank's connections to every peer of the current epoch.
 #[derive(Debug)]
@@ -62,7 +63,7 @@ impl Mesh {
             "welcome carried {} ports for world {world}",
             ports.len()
         );
-        let deadline = Instant::now() + timeout;
+        let deadline = telemetry::now_ns() + timeout.as_nanos() as u64;
         let mut peers: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
 
         // Accept from every lower rank; each initiator identifies
@@ -94,7 +95,7 @@ impl Mesh {
                     accepted += 1;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
+                    if telemetry::now_ns() >= deadline {
                         bail!(
                             "mesh build timed out: rank {rank} accepted {accepted} of {rank} \
                              lower-rank connections"
@@ -111,8 +112,7 @@ impl Mesh {
 
         // Connect to every higher rank and say hello.
         for q in rank + 1..world {
-            let remaining = deadline
-                .saturating_duration_since(Instant::now())
+            let remaining = Duration::from_nanos(deadline.saturating_sub(telemetry::now_ns()))
                 .max(Duration::from_millis(1));
             let stream = TcpStream::connect_timeout(&local_addr(ports[q as usize]), remaining)
                 .with_context(|| format!("connecting to rank {q} data port {}", ports[q as usize]))?;
@@ -162,6 +162,7 @@ impl Mesh {
             src: self.rank,
             kind,
         };
+        telemetry::add(Counter::MeshSendBytes, (payload.len() * 4) as u64);
         wire::send_frame(&mut self.peer(q)?, stamp, payload)
             .with_context(|| format!("sending {kind:?} to rank {q} (peer dead?)"))
     }
@@ -169,6 +170,7 @@ impl Mesh {
     fn recv_from(&self, q: u32, step: u32, kind: FrameKind, out: &mut [f32]) -> Result<()> {
         let stamp = wire::recv_frame(&mut self.peer(q)?, out)
             .with_context(|| format!("waiting for {kind:?} from rank {q} (peer dead?)"))?;
+        telemetry::add(Counter::MeshRecvBytes, (out.len() * 4) as u64);
         stamp.expect(self.epoch, step, q, kind)
     }
 

@@ -123,6 +123,9 @@ fn run_rank(rank: u32, coord_port: u16) -> Result<()> {
     let n = n as usize;
     ensure!(n % world as usize == 0, "world {world} must divide n {n}");
     let ckpt_dir = std::path::PathBuf::from(ckpt_dir);
+    // Stamp this process's rank into every span/counter line it emits
+    // (LLMQ_TRACE flows down from the coordinator's environment).
+    crate::telemetry::set_rank(rank);
 
     // Membership epoch is fenced everywhere: the abort flag trips on an
     // abort message, a coordinator disappearance, or control EOF.
@@ -217,6 +220,17 @@ fn run_rank(rank: u32, coord_port: u16) -> Result<()> {
         &abort,
         &writer,
     );
+    // Per-rank telemetry sinks (best effort, observation only): counter
+    // totals as JSONL — the coordinator folds them into its event log —
+    // and this rank's own Perfetto track, rank-suffixed so the world's
+    // processes never clobber one output file.
+    if crate::telemetry::enabled() {
+        let _ = crate::telemetry::write_counters_jsonl(
+            &ckpt_dir.join(format!("rank{rank}-counters.jsonl")),
+        );
+        let _ =
+            crate::telemetry::write_trace(&ckpt_dir.join(format!("rank{rank}-trace.json")));
+    }
     if abort.load(Ordering::Acquire) {
         // Told to die (or the coordinator vanished): exit cleanly and
         // let the respawn re-admit us. Any collective error we hit on
@@ -267,6 +281,7 @@ fn run_epoch(
         // Announce the step to the fault plane; a matched rank-kill
         // aborts this whole process right here.
         fault::set_step(step);
+        crate::telemetry::set_step(step);
         fault::step_site(rank as usize, step);
         // A matched partition takes our NIC dark: arming it here (not
         // just in the beat thread) pins the firing to this exact step,
@@ -338,14 +353,21 @@ fn distributed_step(
     let hs: HostStep = model.host_step(w);
     let scale = hs.grad_scale();
 
-    model.fill_grad(r, step, &mut s.local);
+    {
+        let _sp = crate::telemetry::Span::begin("micro-step", 0);
+        model.fill_grad(r, step, &mut s.local);
+    }
     if w == 1 {
         // Degenerate world: no reduction, no SR — one scaled RNE copy,
         // exactly `reduce_phase`'s fast path.
+        let _sp = crate::telemetry::Span::begin("reduce+avg", 0);
         bf16::scaled_round_into(&s.local, &mut s.flat, scale);
     } else {
         let mesh = mesh.context("world > 1 requires a data mesh")?;
-        mesh.exchange_grad_slices(step, &s.local, &mut s.recv)?;
+        {
+            let _sp = crate::telemetry::Span::begin("mesh-exchange", 0);
+            mesh.exchange_grad_slices(step, &s.local, &mut s.recv)?;
+        }
         // Reduce our owner chunk: sources in ascending rank order, SR
         // keyed by global element index (counter folded with the chunk
         // base, like the async pipeline's per-chunk ops).
@@ -361,39 +383,50 @@ fn distributed_step(
             .collect();
         flat[own.clone()].fill(0.0);
         let rng = CounterRng::new(REDUCE_RNG_KEY ^ hs.seed);
-        memcpy::reduce_chunk(
-            &srcs,
-            0,
-            &mut flat[own.clone()],
-            Some(scale),
-            &rng,
-            hs.counter.wrapping_add(own.start as u32),
-        );
+        {
+            let _sp = crate::telemetry::Span::begin("reduce+partials", 0);
+            memcpy::reduce_chunk(
+                &srcs,
+                0,
+                &mut flat[own.clone()],
+                Some(scale),
+                &rng,
+                hs.counter.wrapping_add(own.start as u32),
+            );
+        }
+        let _sp = crate::telemetry::Span::begin("all-gather", 0);
         mesh.all_gather_chunks(step, FrameKind::Reduced, &mut s.flat)?;
     }
 
     // Global-norm barrier: every rank folds the identical full grid.
-    let norm = fused::grad_norm(&s.flat);
+    let norm = {
+        let _sp = crate::telemetry::Span::begin("norm", 0);
+        fused::grad_norm(&s.flat)
+    };
 
     // Owner-chunk AdamW through the shared clip-rule derivation, in
     // cache-sized windows (elementwise + global-index SR keying make the
     // window grid invisible in the bits).
     let spec = hs.update_spec(norm, (n / hs.opt_world) as u32);
-    let mut off = own.start;
-    while off < own.end {
-        let take = (own.end - off).min(PIPELINE_BLOCK);
-        backend::adamw_update(
-            &spec,
-            &mut model.p[off..off + take],
-            &mut model.m[off..off + take],
-            &mut model.v[off..off + take],
-            &s.flat[off..off + take],
-            hs.counter.wrapping_add(off as u32),
-        );
-        off += take;
+    {
+        let _sp = crate::telemetry::Span::begin("adamw", 0);
+        let mut off = own.start;
+        while off < own.end {
+            let take = (own.end - off).min(PIPELINE_BLOCK);
+            backend::adamw_update(
+                &spec,
+                &mut model.p[off..off + take],
+                &mut model.m[off..off + take],
+                &mut model.v[off..off + take],
+                &s.flat[off..off + take],
+                hs.counter.wrapping_add(off as u32),
+            );
+            off += take;
+        }
     }
     if w > 1 {
         let mesh = mesh.context("world > 1 requires a data mesh")?;
+        let _sp = crate::telemetry::Span::begin("all-gather", 0);
         mesh.all_gather_chunks(step, FrameKind::Params, &mut model.p)?;
     }
 

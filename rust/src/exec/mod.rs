@@ -77,9 +77,10 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, TryLockError};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::fault::FaultPlane;
+use crate::telemetry;
 use crate::util::par;
 
 pub mod verify;
@@ -406,11 +407,11 @@ enum Msg<'env> {
 }
 
 /// Per-stream execution state the watchdog observes: the op currently
-/// running (start time + label) and submission/completion counters
-/// whose difference is the queue depth.
+/// running (start ns + label; `telemetry::now_ns` timebase) and
+/// submission/completion counters whose difference is the queue depth.
 #[derive(Debug, Default)]
 struct StreamStatus {
-    running: Mutex<Option<(Instant, &'static str)>>,
+    running: Mutex<Option<(u64, &'static str)>>,
     submitted: AtomicUsize,
     completed: AtomicUsize,
 }
@@ -429,6 +430,12 @@ struct Shared {
     statuses: Vec<StreamStatus>,
     trace: Mutex<Vec<TraceOp>>,
     fault: Option<Arc<FaultPlane>>,
+    /// `telemetry::enabled()` captured on the submitting thread at scope
+    /// creation — worker threads cannot see the thread-local override,
+    /// so the gate travels with the scope (same pattern as `fault`).
+    trace_on: bool,
+    /// Watchdog budget in ns (0 = off), for the near-miss counter.
+    wd_ns: u64,
 }
 
 /// Best-effort text of a panic payload (the `&str`/`String` cases every
@@ -458,13 +465,15 @@ fn wrap_op_panic(
 }
 
 impl Shared {
-    fn new(streams: usize, fault: Option<Arc<FaultPlane>>) -> Self {
+    fn new(streams: usize, fault: Option<Arc<FaultPlane>>, wd_ns: u64) -> Self {
         Self {
             failed: AtomicBool::new(false),
             panic: Mutex::new(None),
             statuses: (0..streams).map(|_| StreamStatus::default()).collect(),
             trace: Mutex::new(Vec::new()),
             fault,
+            trace_on: telemetry::enabled(),
+            wd_ns,
         }
     }
 
@@ -490,8 +499,10 @@ impl Shared {
         label: &'static str,
         job: impl FnOnce(),
     ) -> Result<(), Box<dyn std::any::Any + Send>> {
-        *self.statuses[stream].running.lock().unwrap() = Some((Instant::now(), label));
+        let t0 = telemetry::now_ns();
+        *self.statuses[stream].running.lock().unwrap() = Some((t0, label));
         let res = catch_unwind(AssertUnwindSafe(|| {
+            let _sp = telemetry::Span::begin_if(self.trace_on, label, stream as u32);
             if let Some(f) = &self.fault {
                 f.exec_site(stream, self.statuses.len(), label);
             }
@@ -503,6 +514,9 @@ impl Shared {
             }
         }));
         *self.statuses[stream].running.lock().unwrap() = None;
+        if self.wd_ns > 0 && telemetry::now_ns().saturating_sub(t0) * 2 >= self.wd_ns {
+            telemetry::add_if(self.trace_on, telemetry::Counter::WatchdogNearMiss, 1);
+        }
         let depth = self.statuses[stream].depth();
         self.statuses[stream].completed.fetch_add(1, Ordering::Relaxed);
         PROGRESS.fetch_add(1, Ordering::Relaxed);
@@ -527,8 +541,14 @@ fn worker(rx: Receiver<Msg<'_>>, shared: &Shared, stream: usize) {
             // Records always execute (even after a failure) so that no
             // Wait — on this or any other stream — can block forever:
             // every wait's record is already enqueued (see module docs).
-            Msg::Record(ev) => ev.signal(),
-            Msg::Wait(ev) => ev.block(),
+            Msg::Record(ev) => {
+                let _sp = telemetry::Span::begin_if(shared.trace_on, "record", stream as u32);
+                ev.signal();
+            }
+            Msg::Wait(ev) => {
+                let _sp = telemetry::Span::begin_if(shared.trace_on, "wait", stream as u32);
+                ev.block();
+            }
         }
     }
 }
@@ -539,6 +559,7 @@ fn worker(rx: Receiver<Msg<'_>>, shared: &Shared, stream: usize) {
 /// streams drain.
 fn watchdog_loop(shared: &Shared, timeout: Duration, stop: &AtomicBool) {
     let poll = (timeout / 8).clamp(Duration::from_millis(1), Duration::from_millis(10));
+    let timeout_ns = timeout.as_nanos() as u64;
     while !stop.load(Ordering::Acquire) {
         std::thread::sleep(poll);
         if shared.failed.load(Ordering::Acquire) {
@@ -549,7 +570,7 @@ fn watchdog_loop(shared: &Shared, timeout: Duration, stop: &AtomicBool) {
                 .running
                 .lock()
                 .unwrap()
-                .filter(|(t0, _)| t0.elapsed() >= timeout);
+                .filter(|(t0, _)| telemetry::now_ns().saturating_sub(*t0) >= timeout_ns);
             let Some((t0, label)) = hung else { continue };
             let depths: Vec<usize> = shared.statuses.iter().map(StreamStatus::depth).collect();
             let trace = shared.trace.lock().unwrap();
@@ -559,7 +580,7 @@ fn watchdog_loop(shared: &Shared, timeout: Duration, stop: &AtomicBool) {
             let msg = format!(
                 "exec watchdog: op {label:?} on stream {i} exceeded {timeout:?} \
                  (running for {:?}; queue depths {depths:?}; trace tail [{}])",
-                t0.elapsed(),
+                Duration::from_nanos(telemetry::now_ns().saturating_sub(t0)),
                 tail.join(" ")
             );
             shared.fail(Box::new(msg.clone()), &msg);
@@ -690,7 +711,11 @@ impl<'env> Exec<'env> {
             event: id,
         });
         match &self.mode {
-            Mode::Serial => ev.state.signal(),
+            Mode::Serial => {
+                let _sp =
+                    telemetry::Span::begin_if(self.shared.trace_on, "record", stream as u32);
+                ev.state.signal();
+            }
             Mode::Streams(tx) => tx[stream]
                 .send(Msg::Record(Arc::clone(&ev.state)))
                 .expect("stream worker exited early"),
@@ -708,6 +733,7 @@ impl<'env> Exec<'env> {
         });
         match &self.mode {
             Mode::Serial => {
+                let _sp = telemetry::Span::begin_if(self.shared.trace_on, "wait", stream as u32);
                 // Records signal at submission, so a correctly ordered
                 // program can never trip this.
                 assert!(
@@ -775,12 +801,16 @@ pub fn scope<'env, R>(f: impl FnOnce(&Exec<'env>) -> R) -> R {
 /// Captures the calling thread's `fault` plane and watchdog setting.
 pub fn scope_cfg<'env, R>(streams: usize, async_on: bool, f: impl FnOnce(&Exec<'env>) -> R) -> R {
     let streams = streams.clamp(1, MAX_STREAMS);
-    let shared = Arc::new(Shared::new(streams, crate::fault::current()));
+    let wd_ms = watchdog_ms();
+    let shared = Arc::new(Shared::new(
+        streams,
+        crate::fault::current(),
+        wd_ms.saturating_mul(1_000_000),
+    ));
 
     // The watchdog runs on its own (non-scoped) thread so it can watch
     // both the async workers and the serial oracle's inline ops; it is
     // always stopped and joined before the scope returns or unwinds.
-    let wd_ms = watchdog_ms();
     let wd_stop = Arc::new(AtomicBool::new(false));
     let wd_handle = (wd_ms > 0).then(|| {
         let sh = Arc::clone(&shared);

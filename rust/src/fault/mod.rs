@@ -69,7 +69,7 @@
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -424,6 +424,7 @@ impl FaultPlane {
             spec.render()
         );
         eprintln!("llmq fault: {line}");
+        crate::telemetry::add(crate::telemetry::Counter::FaultsInjected, 1);
         self.log.lock().unwrap().push(line);
     }
 
@@ -520,8 +521,11 @@ impl FaultPlane {
             match spec.kind {
                 FaultKind::Stall => {
                     self.log_fire(spec, Site::Exec, stream as u32, step, "op stall");
-                    let t0 = Instant::now();
-                    while !self.cancel.load(Ordering::Acquire) && t0.elapsed() < STALL_CAP {
+                    let t0 = crate::telemetry::now_ns();
+                    let cap_ns = STALL_CAP.as_nanos() as u64;
+                    while !self.cancel.load(Ordering::Acquire)
+                        && crate::telemetry::now_ns().saturating_sub(t0) < cap_ns
+                    {
                         std::thread::sleep(Duration::from_millis(1));
                     }
                 }

@@ -37,6 +37,7 @@ pub mod recompute;
 pub mod runtime;
 pub mod shard;
 pub mod sim;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 

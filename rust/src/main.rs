@@ -16,7 +16,7 @@ use llmq::util::{ArgError, Args};
 const USAGE: &str = "\
 llmq — LLMQ reproduction: efficient lower-precision pretraining for consumer GPUs
 
-USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
+USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate|trace-report> [options]
 
   selftest                   verify artifacts + runtime numerics
   train     --preset tiny|small|e2e --dtype bf16|fp8|fp8_e5m2 --steps N
@@ -30,6 +30,9 @@ USAGE: llmq [--artifacts DIR] <selftest|train|plan|simulate> [options]
   plan      --model 0.5B..32B|all --gpu NAME --gpus N --dtype D
   simulate  --model NAME --gpu NAME --gpus N --dtype D --comm nccl|gather|scatter|full
             --micro-batch N --step-tokens N
+  trace-report --trace FILE (from LLMQ_TRACE=FILE llmq train) --model NAME
+            --gpu NAME --step-tokens N — per-phase span summary, measured
+            step breakdown, and MFU from a recorded trace
 ";
 
 fn main() -> Result<()> {
@@ -72,6 +75,7 @@ fn run(args: Args) -> Result<()> {
         Some("_rank") => llmq::comm::run_rank_cli(&args),
         Some("plan") => llmq::coordinator::run_plan_cli(&args),
         Some("simulate") => llmq::sim::run_sim_cli(&args),
+        Some("trace-report") => llmq::telemetry::report::run_cli(&args),
         _ => {
             eprint!("{USAGE}");
             Ok(())

@@ -149,6 +149,7 @@ pub fn grad_norm_scalar(g: &[f32]) -> f32 {
 /// `REDUCE_RNG_KEY ^ seed` at counter-per-global-index, exactly like the
 /// staged reduce-scatter.
 pub fn reduce_phase(ws: &mut StepWorkspace, hs: &HostStep) {
+    let _sp = crate::telemetry::Span::begin("reduce+avg", 0);
     // The synchronous collective entry is a fault-injection site: an
     // injected slow-collective delays here (and must not change a bit);
     // a collective-sited crash panics here.
@@ -213,6 +214,7 @@ pub fn norm_phase_scalar(ws: &mut StepWorkspace) -> f32 {
 }
 
 fn norm_phase_impl(ws: &mut StepWorkspace, scalar_kernel: bool) -> f32 {
+    let _sp = crate::telemetry::Span::begin("norm", 0);
     let n = ws.n();
     let grads = &ws.grads;
     let items: Vec<(usize, &mut [f64])> = ws
@@ -278,6 +280,7 @@ fn update_phase_impl(
     norm: f32,
     scalar_kernel: bool,
 ) {
+    let _sp = crate::telemetry::Span::begin("update+gather", 0);
     let n = ws.n();
     assert_eq!(p.len(), n);
     assert_eq!(m.len(), n);

@@ -1,0 +1,652 @@
+//! Observation-only instrumentation: timed spans, live counters, and
+//! the monotonic clock every other module borrows time from.
+//!
+//! This module is the **only** place in the crate allowed to touch
+//! `std::time::Instant` (the determinism lint's clock rule has exactly
+//! one allowlist entry, and it is this file). Everything else reads
+//! time as plain `u64` nanoseconds through [`now_ns`] and does ns
+//! arithmetic — which keeps every clock read greppable and makes the
+//! observation-only contract auditable: telemetry may *read* clocks,
+//! but no clock value ever feeds a numeric decision (NUMERICS.md,
+//! "Observation-only telemetry").
+//!
+//! ## Spans
+//!
+//! A [`Span`] is a label + start/end ns + stream/rank/step tags.
+//! Recording is enabled by `LLMQ_TRACE=<path|1>` (default off; the
+//! gate is a cached boolean like `LLMQ_VERIFY`, so a disabled build
+//! pays one relaxed atomic load per site). Finished spans land in a
+//! thread-local buffer that flushes into the global [`Collector`] when
+//! the thread's buffer guard drops (scoped workers flush at scope
+//! exit) or on an explicit [`flush_thread`]. [`drain`] snapshots the
+//! collector for export or per-step folding.
+//!
+//! Span *timestamps* are wall-clock and inherently nondeterministic —
+//! tests pin the export's **shape** (labels, track layout), never its
+//! byte content. Counter totals, by contrast, are deterministic
+//! functions of the workload and are pinned exactly.
+//!
+//! ## Counters
+//!
+//! [`Counter`] is a fixed registry of crate-wide totals (bytes
+//! reduced/gathered, SR draws, checkpoint bytes + CRC ns, watchdog
+//! near-misses, supervisor retries, heartbeat misses, mesh send/recv
+//! bytes, fault firings) backed by static atomics. Adds are gated on
+//! [`enabled`]; snapshot with [`counters`], export one JSONL line with
+//! [`counters_jsonl`].
+//!
+//! ## Export
+//!
+//! [`chrome_trace_json`] renders drained spans as Chrome trace-event
+//! JSON (one Perfetto track per stream, one process per rank);
+//! [`write_trace`] is the end-of-run flush `llmq train` performs when
+//! tracing is on. `llmq trace-report` (see [`report`]) reads the file
+//! back and prints per-phase and MFU tables.
+
+use std::cell::{Cell, RefCell};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+pub mod report;
+
+// ---------------------------------------------------------------- clock
+
+/// Process-wide monotonic epoch. All telemetry timestamps are offsets
+/// from this instant, so `u64` ns arithmetic is safe everywhere else.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic nanoseconds since the first telemetry clock read of this
+/// process. The crate's only clock: watchdog deadlines, bench timings,
+/// socket timeouts and span stamps all do ns arithmetic on this value
+/// (rebuilding a `Duration` via `Duration::from_nanos` where an OS API
+/// needs one).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// ----------------------------------------------------------------- gate
+
+/// Parsed `LLMQ_TRACE`: `None` = off, `Some(path)` = on (the value `1`
+/// or a truthy word selects the default path).
+fn env_trace() -> Option<&'static str> {
+    static TRACE: OnceLock<Option<String>> = OnceLock::new();
+    TRACE
+        .get_or_init(|| match std::env::var("LLMQ_TRACE") {
+            Err(_) => None,
+            Ok(v) => {
+                let t = v.trim();
+                match t {
+                    "" | "0" | "off" | "false" | "no" => None,
+                    "1" | "on" | "true" | "yes" => Some(DEFAULT_TRACE_PATH.to_string()),
+                    path => Some(path.to_string()),
+                }
+            }
+        })
+        .as_deref()
+}
+
+/// Where `LLMQ_TRACE=1` (bare truthy) writes the trace.
+pub const DEFAULT_TRACE_PATH: &str = "llmq-trace.json";
+
+thread_local! {
+    /// 0 = follow env, 1 = force off, 2 = force on (test override).
+    static TRACE_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// Is span/counter recording enabled on this thread? Cached env gate
+/// plus the [`with_trace`] test override. Worker threads that outlive
+/// an override capture the decision at scope creation instead (see
+/// `exec`).
+pub fn enabled() -> bool {
+    match TRACE_OVERRIDE.with(Cell::get) {
+        1 => false,
+        2 => true,
+        _ => env_trace().is_some(),
+    }
+}
+
+/// Run `f` with tracing forced on or off on this thread, restoring the
+/// previous state even on unwind (same shape as `exec::with_verify`).
+pub fn with_trace<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TRACE_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = TRACE_OVERRIDE.with(Cell::get);
+    let _restore = Restore(prev);
+    TRACE_OVERRIDE.with(|c| c.set(if on { 2 } else { 1 }));
+    f()
+}
+
+/// The trace output path when tracing is enabled via the environment
+/// (`None` when off or only force-enabled by [`with_trace`]).
+pub fn trace_path() -> Option<PathBuf> {
+    env_trace().map(PathBuf::from)
+}
+
+/// Provenance descriptor for bench reports: `"off"` when tracing is
+/// disabled, the output path otherwise — the same convention as
+/// `fault::descriptor()`. Benches refuse to record timings unless this
+/// reads `"off"`.
+pub fn descriptor() -> &'static str {
+    env_trace().unwrap_or("off")
+}
+
+// ----------------------------------------------------------------- tags
+
+static RANK: AtomicU32 = AtomicU32::new(0);
+static STEP: AtomicU32 = AtomicU32::new(0);
+
+/// Stamp this process's rank into subsequent spans (distributed ranks
+/// call this once after the welcome).
+pub fn set_rank(rank: u32) {
+    RANK.store(rank, Ordering::Relaxed);
+}
+
+/// Stamp the current optimizer step into subsequent spans.
+pub fn set_step(step: u32) {
+    STEP.store(step, Ordering::Relaxed);
+}
+
+/// The rank stamped by [`set_rank`] (0 until set).
+pub fn rank() -> u32 {
+    RANK.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------- spans
+
+/// One finished span: what ran, where, and when (ns offsets from the
+/// process epoch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Op/phase label (the `TraceOp` label for exec ops).
+    pub label: &'static str,
+    /// Stream index (0 for host-side phases).
+    pub stream: u32,
+    /// Rank tag at completion.
+    pub rank: u32,
+    /// Optimizer step tag at completion.
+    pub step: u32,
+    /// Start, ns since the process epoch.
+    pub t0_ns: u64,
+    /// End, ns since the process epoch.
+    pub t1_ns: u64,
+}
+
+/// The global span sink. Thread-local buffers flush here; kept as an
+/// append-only Vec so per-step folds can snapshot a suffix without
+/// losing spans from the end-of-run export.
+struct Collector;
+
+static COLLECTED: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
+/// Fast emptiness probe so `mark`/`spans_since` stay cheap when off.
+static ANY_SPANS: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    static BUF: RefCell<Vec<SpanRec>> = const { RefCell::new(Vec::new()) };
+    /// Flushes this thread's buffer into the collector on thread exit —
+    /// scoped stream/par workers drain at scope exit for free.
+    static FLUSH_GUARD: FlushGuard = const { FlushGuard };
+}
+
+struct FlushGuard;
+
+impl Drop for FlushGuard {
+    fn drop(&mut self) {
+        let buf = BUF.with(|b| std::mem::take(&mut *b.borrow_mut()));
+        if !buf.is_empty() {
+            ANY_SPANS.store(true, Ordering::Release);
+            COLLECTED.lock().unwrap().extend(buf);
+        }
+    }
+}
+
+fn push_span(rec: SpanRec) {
+    FLUSH_GUARD.with(|_| {}); // arm the drop-flush for this thread
+    BUF.with(|b| b.borrow_mut().push(rec));
+}
+
+/// Flush this thread's span buffer into the global collector.
+pub fn flush_thread() {
+    let buf = BUF.with(|b| std::mem::take(&mut *b.borrow_mut()));
+    if !buf.is_empty() {
+        ANY_SPANS.store(true, Ordering::Release);
+        COLLECTED.lock().unwrap().extend(buf);
+    }
+}
+
+/// A live timed span; records into the thread-local buffer on drop.
+/// `None` when tracing is off, so the disabled path is one gate check.
+#[must_use = "a span measures the scope it is alive for"]
+pub struct Span {
+    label: &'static str,
+    stream: u32,
+    t0_ns: u64,
+}
+
+impl Span {
+    /// Begin a span if tracing is enabled on this thread.
+    pub fn begin(label: &'static str, stream: u32) -> Option<Span> {
+        Span::begin_if(enabled(), label, stream)
+    }
+
+    /// Begin a span under an explicitly captured gate — for worker
+    /// threads where the submitting scope resolved [`enabled`] once
+    /// (the thread-local override is invisible across threads).
+    pub fn begin_if(on: bool, label: &'static str, stream: u32) -> Option<Span> {
+        on.then(|| Span {
+            label,
+            stream,
+            t0_ns: now_ns(),
+        })
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        push_span(SpanRec {
+            label: self.label,
+            stream: self.stream,
+            rank: RANK.load(Ordering::Relaxed),
+            step: STEP.load(Ordering::Relaxed),
+            t0_ns: self.t0_ns,
+            t1_ns: now_ns(),
+        });
+    }
+}
+
+/// Index marking the current end of the collector, for
+/// [`spans_since`]. Flushes the calling thread first so serial-path
+/// spans are visible.
+pub fn mark() -> usize {
+    if !enabled() {
+        return 0;
+    }
+    flush_thread();
+    COLLECTED.lock().unwrap().len()
+}
+
+/// Clone every span collected after `mark` (worker buffers must have
+/// flushed — exec scope exit joins its workers, so calling this after
+/// a scope returns sees that scope's ops).
+pub fn spans_since(mark: usize) -> Vec<SpanRec> {
+    if !ANY_SPANS.load(Ordering::Acquire) {
+        return Vec::new();
+    }
+    flush_thread();
+    let all = COLLECTED.lock().unwrap();
+    all.get(mark..).map(<[SpanRec]>::to_vec).unwrap_or_default()
+}
+
+/// Take every collected span, leaving the collector empty (the
+/// end-of-run export, and test isolation).
+pub fn drain() -> Vec<SpanRec> {
+    flush_thread();
+    ANY_SPANS.store(false, Ordering::Release);
+    std::mem::take(&mut *COLLECTED.lock().unwrap())
+}
+
+// -------------------------------------------------------------- counters
+
+/// The fixed counter registry. Every counter is a monotone `u64`
+/// total; adds are dropped unless tracing is enabled (or the caller
+/// captured the gate — [`add_if`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Gradient bytes consumed by reduce kernels (all sources).
+    BytesReduced,
+    /// Parameter/gradient bytes produced by all-gathers (all replicas).
+    BytesGathered,
+    /// Stochastic-rounding draws made by collective epilogues.
+    SrDraws,
+    /// Checkpoint bytes handed to atomic saves.
+    CkptBytes,
+    /// Nanoseconds spent computing checkpoint CRC32s.
+    CkptCrcNs,
+    /// Exec ops that consumed ≥ half the watchdog budget.
+    WatchdogNearMiss,
+    /// Supervisor step retries (failure events).
+    SupervisorRetries,
+    /// Ranks declared dead by the heartbeat sweep.
+    HeartbeatMisses,
+    /// Payload bytes written to mesh peers.
+    MeshSendBytes,
+    /// Payload bytes read from mesh peers.
+    MeshRecvBytes,
+    /// Fault-plane firings.
+    FaultsInjected,
+}
+
+/// Counter names in registry order, used by snapshots and the JSONL
+/// sink (stable keys, so logs are greppable across versions).
+pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "bytes_reduced",
+    "bytes_gathered",
+    "sr_draws",
+    "ckpt_bytes",
+    "ckpt_crc_ns",
+    "watchdog_near_miss",
+    "supervisor_retries",
+    "heartbeat_misses",
+    "mesh_send_bytes",
+    "mesh_recv_bytes",
+    "faults_injected",
+];
+
+const N_COUNTERS: usize = 11;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO; N_COUNTERS];
+
+/// Add `v` to counter `c` if tracing is enabled on this thread.
+pub fn add(c: Counter, v: u64) {
+    add_if(enabled(), c, v);
+}
+
+/// Add under an explicitly captured gate (worker threads; see
+/// [`Span::begin_if`]).
+pub fn add_if(on: bool, c: Counter, v: u64) {
+    if on {
+        COUNTERS[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot every counter as `(name, total)` in registry order.
+pub fn counters() -> Vec<(&'static str, u64)> {
+    COUNTER_NAMES
+        .iter()
+        .zip(&COUNTERS)
+        .map(|(&n, c)| (n, c.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// The total for one counter.
+pub fn counter(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Zero every counter (test isolation; the registry is process-global).
+pub fn reset_counters() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One canonical JSONL line with every counter total plus rank, for
+/// the per-rank sinks the coordinator aggregates.
+pub fn counters_jsonl() -> String {
+    use crate::util::Json;
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("kind", Json::Str("counters".to_string())),
+        ("rank", Json::Num(f64::from(rank()))),
+    ];
+    for (name, v) in counters() {
+        fields.push((name, Json::Num(v as f64)));
+    }
+    Json::obj(fields).render()
+}
+
+/// Append this process's counter totals to a per-rank JSONL sink.
+pub fn write_counters_jsonl(path: &std::path::Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", counters_jsonl())
+}
+
+// ------------------------------------------------------ chrome export
+
+/// Render spans as Chrome trace-event JSON (Perfetto-loadable):
+/// complete events (`ph: "X"`, microsecond stamps), `pid` = rank,
+/// `tid` = stream, sorted by `(pid, tid, ts)` so the export's shape is
+/// stable even though span collection order is not. Counter totals
+/// ride along under `otherData`.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    let mut sorted: Vec<&SpanRec> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.rank, s.stream, s.t0_ns, s.t1_ns, s.label));
+    let mut out = String::from("{\n\"traceEvents\": [\n");
+    for (i, s) in sorted.iter().enumerate() {
+        out.push_str(&format!(
+            "{{\"name\": \"{}\", \"cat\": \"llmq\", \"ph\": \"X\", \"ts\": {:.3}, \
+             \"dur\": {:.3}, \"pid\": {}, \"tid\": {}, \"args\": {{\"step\": {}}}}}{}\n",
+            s.label,
+            s.t0_ns as f64 / 1e3,
+            s.t1_ns.saturating_sub(s.t0_ns) as f64 / 1e3,
+            s.rank,
+            s.stream,
+            s.step,
+            if i + 1 < sorted.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("],\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {\"counters\": {");
+    for (i, (name, v)) in counters().iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{name}\": {v}"));
+    }
+    out.push_str("}}\n}\n");
+    out
+}
+
+/// Drain the collector and write the Chrome trace to `path`. The
+/// end-of-run flush for `llmq train` (ranks suffix their own path).
+pub fn write_trace(path: &std::path::Path) -> std::io::Result<()> {
+    let spans = drain();
+    std::fs::write(path, chrome_trace_json(&spans))
+}
+
+// --------------------------------------------------- step breakdown
+
+/// Which `StepBreakdown` bucket a span label folds into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bucket {
+    /// Gradient compute (microbatch accumulation).
+    Compute,
+    /// Communication (reduce, publish, gather, mesh exchange).
+    Comm,
+    /// Host<->device offload traffic.
+    Offload,
+    /// Optimizer math (norm fold, AdamW update).
+    Optimizer,
+    /// Anything unclassified (counts as overhead).
+    Other,
+}
+
+/// Classify an op/phase label into its breakdown bucket. Labels are
+/// the existing `TraceOp` identities — this map is the single place
+/// the folding semantics live.
+pub fn classify(label: &str) -> Bucket {
+    match label {
+        "grad-accum" | "micro-step" => Bucket::Compute,
+        "reduce+partials" | "reduce+avg" | "grad-publish" | "all-gather" | "mesh-exchange" => {
+            Bucket::Comm
+        }
+        "prefetch" | "evict" => Bucket::Offload,
+        "norm-fold" | "norm" | "update+gather" | "adamw" => Bucket::Optimizer,
+        _ => Bucket::Other,
+    }
+}
+
+/// Merged-interval length (ns) of the spans selected by `keep`.
+/// Overlapping spans (parallel streams) count once — this is *exposed*
+/// time on the step's critical path, not summed busy time.
+fn union_ns(spans: &[SpanRec], keep: impl Fn(&SpanRec) -> bool) -> u64 {
+    let mut iv: Vec<(u64, u64)> = spans
+        .iter()
+        .filter(|s| keep(s))
+        .map(|s| (s.t0_ns, s.t1_ns.max(s.t0_ns)))
+        .collect();
+    iv.sort_unstable();
+    let mut total = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    for (a, b) in iv {
+        match cur {
+            Some((_, ce)) if a <= ce => {
+                if let Some(c) = cur.as_mut() {
+                    c.1 = c.1.max(b);
+                }
+            }
+            _ => {
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                cur = Some((a, b));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Fold spans into a measured [`crate::metrics::StepBreakdown`] for a
+/// step that took `wall_ns` end to end. Compute gets its full union;
+/// each later bucket only its time **not** hidden behind earlier
+/// buckets (comm behind compute, offload behind both, optimizer behind
+/// all three) — the same "exposed" semantics the simulator's breakdown
+/// uses; `overhead` is the wall time no span covers.
+pub fn fold_breakdown(spans: &[SpanRec], wall_ns: u64) -> crate::metrics::StepBreakdown {
+    let is = |b: Bucket| move |s: &SpanRec| classify(s.label) == b;
+    let compute = union_ns(spans, is(Bucket::Compute));
+    let comm = union_ns(spans, |s| {
+        matches!(classify(s.label), Bucket::Compute | Bucket::Comm)
+    });
+    let offload = union_ns(spans, |s| {
+        matches!(
+            classify(s.label),
+            Bucket::Compute | Bucket::Comm | Bucket::Offload
+        )
+    });
+    let opt = union_ns(spans, |s| classify(s.label) != Bucket::Other);
+    let sec = |ns: u64| ns as f64 / 1e9;
+    crate::metrics::StepBreakdown {
+        compute_s: sec(compute),
+        exposed_comm_s: sec(comm.saturating_sub(compute)),
+        exposed_offload_s: sec(offload.saturating_sub(comm)),
+        optimizer_s: sec(opt.saturating_sub(offload)),
+        // Whatever the classified buckets do not cover — launch
+        // overhead, unclassified spans, gaps — is overhead, so the
+        // buckets always sum to the measured wall time.
+        overhead_s: sec(wall_ns.saturating_sub(opt)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_override_restores() {
+        with_trace(false, || {
+            assert!(!enabled());
+            assert!(Span::begin("x", 0).is_none());
+        });
+        with_trace(true, || {
+            assert!(enabled());
+            with_trace(false, || assert!(!enabled()));
+            assert!(enabled());
+        });
+    }
+
+    #[test]
+    fn span_records_label_and_ordering() {
+        with_trace(true, || {
+            let m = mark();
+            {
+                let _s = Span::begin("unit-test-span", 3);
+            }
+            let spans = spans_since(m);
+            let s = spans
+                .iter()
+                .find(|s| s.label == "unit-test-span")
+                .expect("span recorded");
+            assert_eq!(s.stream, 3);
+            assert!(s.t1_ns >= s.t0_ns);
+        });
+    }
+
+    #[test]
+    fn counters_gated_and_snapshot_names_align() {
+        with_trace(false, || {
+            // Other tests in this binary may add small amounts
+            // concurrently (the registry is process-global), so probe
+            // the gate with a sentinel far above any legitimate total
+            // instead of asserting exact equality.
+            let before = counter(Counter::SrDraws);
+            add(Counter::SrDraws, 1 << 40);
+            assert!(counter(Counter::SrDraws) < before + (1 << 40), "gated off");
+        });
+        assert_eq!(COUNTER_NAMES.len(), counters().len());
+        let line = counters_jsonl();
+        assert!(line.contains("\"kind\":\"counters\""), "{line}");
+        assert!(line.contains("\"sr_draws\""), "{line}");
+    }
+
+    #[test]
+    fn union_counts_overlap_once() {
+        let sp = |a: u64, b: u64| SpanRec {
+            label: "grad-accum",
+            stream: 0,
+            rank: 0,
+            step: 0,
+            t0_ns: a,
+            t1_ns: b,
+        };
+        let spans = vec![sp(0, 10), sp(5, 15), sp(20, 25)];
+        assert_eq!(union_ns(&spans, |_| true), 20);
+    }
+
+    #[test]
+    fn breakdown_exposes_only_unhidden_time() {
+        let sp = |label, a: u64, b: u64| SpanRec {
+            label,
+            stream: 0,
+            rank: 0,
+            step: 1,
+            t0_ns: a,
+            t1_ns: b,
+        };
+        // compute 0..10; comm 5..20 (5 hidden); optimizer 20..30.
+        let spans = vec![
+            sp("grad-accum", 0, 10),
+            sp("reduce+partials", 5, 20),
+            sp("update+gather", 20, 30),
+        ];
+        let b = fold_breakdown(&spans, 40);
+        assert!((b.compute_s - 10e-9).abs() < 1e-15);
+        assert!((b.exposed_comm_s - 10e-9).abs() < 1e-15);
+        assert!((b.exposed_offload_s).abs() < 1e-15);
+        assert!((b.optimizer_s - 10e-9).abs() < 1e-15);
+        assert!((b.overhead_s - 10e-9).abs() < 1e-15);
+        assert!((b.total() - 40e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let spans = vec![SpanRec {
+            label: "reduce+partials",
+            stream: 1,
+            rank: 2,
+            step: 4,
+            t0_ns: 1000,
+            t1_ns: 3000,
+        }];
+        let j = chrome_trace_json(&spans);
+        let parsed = crate::util::Json::parse(&j).expect("valid JSON");
+        let events = parsed.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.get("name").unwrap().str().unwrap(), "reduce+partials");
+        assert_eq!(e.get("ph").unwrap().str().unwrap(), "X");
+        assert_eq!(e.get("pid").unwrap().num().unwrap(), 2.0);
+        assert_eq!(e.get("tid").unwrap().num().unwrap(), 1.0);
+        assert_eq!(e.get("dur").unwrap().num().unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,311 @@
+//! `llmq trace-report` — read a Chrome trace written by
+//! `LLMQ_TRACE=<path> llmq train`, print a per-phase summary table, the
+//! measured [`StepBreakdown`], and the resulting MFU (paper §4:
+//! `t_ideal / t_actual`). The report is a pure reader: it never touches
+//! the clock or the live collector, so it can run long after the trace
+//! was produced.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config;
+use crate::hw;
+use crate::metrics::{mfu, table, StepBreakdown, Table};
+use crate::util::{Args, Json};
+
+use super::{classify, fold_breakdown, Bucket, SpanRec, DEFAULT_TRACE_PATH};
+
+/// Span labels the reader recognizes (the exec/phase vocabulary). An
+/// unknown label folds into `"other"` — [`classify`] already maps it to
+/// overhead, and the phase table prints it under its own name first.
+const KNOWN_LABELS: &[&str] = &[
+    "grad-accum",
+    "micro-step",
+    "reduce+partials",
+    "reduce+avg",
+    "grad-publish",
+    "all-gather",
+    "mesh-exchange",
+    "prefetch",
+    "evict",
+    "norm-fold",
+    "norm",
+    "update+gather",
+    "adamw",
+    "record",
+    "wait",
+    "other",
+];
+
+fn intern(label: &str) -> &'static str {
+    KNOWN_LABELS
+        .iter()
+        .find(|k| **k == label)
+        .copied()
+        .unwrap_or("other")
+}
+
+fn bucket_name(b: Bucket) -> &'static str {
+    match b {
+        Bucket::Compute => "compute",
+        Bucket::Comm => "comm",
+        Bucket::Offload => "offload",
+        Bucket::Optimizer => "optimizer",
+        Bucket::Other => "overhead",
+    }
+}
+
+/// One parsed trace: spans plus the counter totals the writer stamped.
+pub struct TraceFile {
+    /// Spans, with labels interned into the known vocabulary.
+    pub spans: Vec<SpanRec>,
+    /// The original (uninterned) label of each span, for the phase table.
+    pub raw_labels: Vec<String>,
+    /// `(name, total)` counter pairs from `otherData.counters`.
+    pub counters: Vec<(String, u64)>,
+}
+
+/// Parse a Chrome trace-event document produced by
+/// [`super::chrome_trace_json`] (tolerant of other writers: only `X`
+/// events with the standard fields are read).
+pub fn parse_trace(text: &str) -> Result<TraceFile> {
+    let doc = Json::parse(text).context("parsing trace JSON")?;
+    let events = doc
+        .get("traceEvents")
+        .context("trace has no traceEvents array")?
+        .arr()?;
+    let mut spans = Vec::with_capacity(events.len());
+    let mut raw_labels = Vec::with_capacity(events.len());
+    for e in events {
+        if e.opt("ph").and_then(|p| p.str().ok()) != Some("X") {
+            continue;
+        }
+        let name = e.get("name")?.str()?.to_string();
+        let ts_us = e.get("ts")?.num()?;
+        let dur_us = e.opt("dur").and_then(|d| d.num().ok()).unwrap_or(0.0);
+        let t0_ns = (ts_us * 1e3) as u64;
+        spans.push(SpanRec {
+            label: intern(&name),
+            stream: e.opt("tid").and_then(|v| v.num().ok()).unwrap_or(0.0) as u32,
+            rank: e.opt("pid").and_then(|v| v.num().ok()).unwrap_or(0.0) as u32,
+            step: e
+                .opt("args")
+                .and_then(|a| a.opt("step"))
+                .and_then(|s| s.num().ok())
+                .unwrap_or(0.0) as u32,
+            t0_ns,
+            t1_ns: t0_ns + (dur_us * 1e3) as u64,
+        });
+        raw_labels.push(name);
+    }
+    let mut counters = Vec::new();
+    if let Some(c) = doc.opt("otherData").and_then(|o| o.opt("counters")) {
+        if let Json::Obj(m) = c {
+            let mut keys: Vec<&String> = m.keys().collect();
+            keys.sort();
+            for k in keys {
+                if let Ok(v) = m[k].num() {
+                    counters.push((k.clone(), v as u64));
+                }
+            }
+        }
+    }
+    Ok(TraceFile {
+        spans,
+        raw_labels,
+        counters,
+    })
+}
+
+/// Per-phase totals: busy ns and span count per distinct label.
+fn phase_table(t: &TraceFile) -> Table {
+    let mut phases: Vec<(String, u64, u64)> = Vec::new(); // label, busy ns, count
+    for (s, raw) in t.spans.iter().zip(&t.raw_labels) {
+        let dur = s.t1_ns.saturating_sub(s.t0_ns);
+        match phases.iter_mut().find(|(l, _, _)| l == raw) {
+            Some(p) => {
+                p.1 += dur;
+                p.2 += 1;
+            }
+            None => phases.push((raw.clone(), dur, 1)),
+        }
+    }
+    phases.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let busy_total: u64 = phases.iter().map(|p| p.1).sum();
+    let mut tbl = Table::new(
+        "Trace phases (busy time per label)",
+        &["phase", "bucket", "spans", "busy ms", "share"],
+    );
+    for (label, ns, count) in &phases {
+        tbl.row(vec![
+            label.clone(),
+            bucket_name(classify(intern(label))).to_string(),
+            count.to_string(),
+            format!("{:.3}", *ns as f64 / 1e6),
+            format!("{:.1}%", 100.0 * *ns as f64 / busy_total.max(1) as f64),
+        ]);
+    }
+    tbl
+}
+
+/// Measured per-step breakdown over the whole trace: spans are folded
+/// with exposed-time semantics, then normalized by the number of
+/// distinct step tags so the figures read "per step".
+pub fn measured_breakdown(spans: &[SpanRec]) -> (StepBreakdown, usize, f64) {
+    let t0 = spans.iter().map(|s| s.t0_ns).min().unwrap_or(0);
+    let t1 = spans.iter().map(|s| s.t1_ns).max().unwrap_or(0);
+    let wall_ns = t1.saturating_sub(t0);
+    let mut steps: Vec<u32> = spans.iter().map(|s| s.step).collect();
+    steps.sort_unstable();
+    steps.dedup();
+    let n_steps = steps.len().max(1);
+    let total = fold_breakdown(spans, wall_ns);
+    let per = 1.0 / n_steps as f64;
+    let b = StepBreakdown {
+        compute_s: total.compute_s * per,
+        exposed_comm_s: total.exposed_comm_s * per,
+        exposed_offload_s: total.exposed_offload_s * per,
+        optimizer_s: total.optimizer_s * per,
+        overhead_s: total.overhead_s * per,
+    };
+    (b, n_steps, wall_ns as f64 / 1e9)
+}
+
+/// CLI: `llmq trace-report [--trace PATH] [--model 7B] [--gpu NAME]
+/// [--step-tokens N]`. Prints the phase table, the measured breakdown,
+/// and MFU against the named model/GPU pair.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let default_path = super::trace_path()
+        .unwrap_or_else(|| std::path::PathBuf::from(DEFAULT_TRACE_PATH));
+    let path = args.str("trace", &default_path.display().to_string())?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading trace {path} (run with LLMQ_TRACE=<path> first)"))?;
+    let trace = parse_trace(&text)?;
+    if trace.spans.is_empty() {
+        bail!("trace {path} contains no spans");
+    }
+    println!(
+        "trace {path}: {} spans, {} counter totals",
+        trace.spans.len(),
+        trace.counters.len()
+    );
+    phase_table(&trace).print();
+
+    let (b, n_steps, wall_s) = measured_breakdown(&trace.spans);
+    let mut bt = Table::new(
+        &format!("Measured step breakdown ({n_steps} steps, {wall_s:.3} s traced)"),
+        &["component", "ms/step", "share"],
+    );
+    let total = b.total().max(1e-12);
+    for (name, v) in [
+        ("compute", b.compute_s),
+        ("exposed comm", b.exposed_comm_s),
+        ("exposed offload", b.exposed_offload_s),
+        ("optimizer", b.optimizer_s),
+        ("overhead", b.overhead_s),
+    ] {
+        bt.row(vec![
+            name.to_string(),
+            format!("{:.3}", v * 1e3),
+            format!("{:.1}%", 100.0 * v / total),
+        ]);
+    }
+    bt.row(vec![
+        "total".to_string(),
+        format!("{:.3}", total * 1e3),
+        "100.0%".to_string(),
+    ]);
+    bt.print();
+
+    let model = args.str("model", "7B")?;
+    let gpu_name = args.str("gpu", "RTX 4090")?;
+    let tokens = args.usize("step-tokens", 16 * 2048)?;
+    let preset = config::by_name(&model)
+        .with_context(|| format!("unknown model preset {model}"))?;
+    let gpu = hw::gpu_by_name(&gpu_name)
+        .with_context(|| format!("unknown GPU {gpu_name}"))?;
+    let flops = preset.step_flops(tokens);
+    let mut mt = Table::new(
+        "Measured MFU (paper §4: t_ideal / t_actual)",
+        &["model", "gpu", "tokens/step", "wall ms/step", "MFU bf16", "MFU fp8"],
+    );
+    mt.row(vec![
+        model.clone(),
+        gpu_name.clone(),
+        tokens.to_string(),
+        format!("{:.3}", total * 1e3),
+        table::fmt_mfu(mfu(&flops, &gpu, false, total)),
+        table::fmt_mfu(mfu(&flops, &gpu, true, total)),
+    ]);
+    mt.print();
+
+    if !trace.counters.is_empty() {
+        let mut ct = Table::new("Counters", &["counter", "total"]);
+        for (name, v) in &trace.counters {
+            ct.row(vec![name.clone(), v.to_string()]);
+        }
+        ct.print();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_trace() -> String {
+        let spans = vec![
+            SpanRec {
+                label: "grad-accum",
+                stream: 0,
+                rank: 0,
+                step: 1,
+                t0_ns: 0,
+                t1_ns: 10_000,
+            },
+            SpanRec {
+                label: "reduce+partials",
+                stream: 1,
+                rank: 0,
+                step: 1,
+                t0_ns: 5_000,
+                t1_ns: 20_000,
+            },
+            SpanRec {
+                label: "update+gather",
+                stream: 1,
+                rank: 0,
+                step: 1,
+                t0_ns: 20_000,
+                t1_ns: 30_000,
+            },
+        ];
+        super::super::chrome_trace_json(&spans)
+    }
+
+    #[test]
+    fn parse_roundtrips_spans() {
+        let t = parse_trace(&synth_trace()).unwrap();
+        assert_eq!(t.spans.len(), 3);
+        let s = &t.spans[0];
+        assert_eq!(s.label, "grad-accum");
+        assert_eq!(s.step, 1);
+        assert_eq!(s.t1_ns - s.t0_ns, 10_000);
+    }
+
+    #[test]
+    fn breakdown_from_parsed_trace() {
+        let t = parse_trace(&synth_trace()).unwrap();
+        let (b, n_steps, _) = measured_breakdown(&t.spans);
+        assert_eq!(n_steps, 1);
+        assert!((b.compute_s - 10_000e-9).abs() < 1e-12);
+        assert!((b.exposed_comm_s - 10_000e-9).abs() < 1e-12);
+        assert!((b.optimizer_s - 10_000e-9).abs() < 1e-12);
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn unknown_labels_fold_to_overhead() {
+        assert_eq!(intern("mystery-op"), "other");
+        assert_eq!(classify("other"), Bucket::Other);
+    }
+}

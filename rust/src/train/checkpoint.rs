@@ -177,9 +177,14 @@ pub fn encode(step: u32, counter: u32, world: u32, p: &[f32], m: &[f32], v: &[f3
         let base = HEADER_LEN + 4 * n * k;
         f32s_to_le_bytes(buf, &mut bytes[base..base + 4 * n]);
     }
+    let t0 = crate::telemetry::now_ns();
     let crc = !crc32_update(
         crc32_update(!0, &bytes[..CRC_OFFSET]),
         &bytes[HEADER_LEN..],
+    );
+    crate::telemetry::add(
+        crate::telemetry::Counter::CkptCrcNs,
+        crate::telemetry::now_ns().saturating_sub(t0),
     );
     bytes[CRC_OFFSET..HEADER_LEN].copy_from_slice(&crc.to_le_bytes());
     bytes
@@ -213,9 +218,14 @@ pub fn encode_q(step: u32, counter: u32, world: u32, p: &[f32], m: &[f32], v: &[
     for (b2, &x) in bytes[vb..vb + 2 * n].chunks_exact_mut(2).zip(v) {
         b2.copy_from_slice(&((x.to_bits() >> 16) as u16).to_le_bytes());
     }
+    let t0 = crate::telemetry::now_ns();
     let crc = !crc32_update(
         crc32_update(!0, &bytes[..CRC_OFFSET_V4]),
         &bytes[HEADER_LEN_V4..],
+    );
+    crate::telemetry::add(
+        crate::telemetry::Counter::CkptCrcNs,
+        crate::telemetry::now_ns().saturating_sub(t0),
     );
     bytes[CRC_OFFSET_V4..HEADER_LEN_V4].copy_from_slice(&crc.to_le_bytes());
     bytes
@@ -382,6 +392,7 @@ pub fn decode_into(bytes: &[u8], p: &mut [f32], m: &mut [f32], v: &mut [f32]) ->
 /// written), an injected `corrupt-checkpoint` silently flips one bit
 /// (which the load-side CRC then catches).
 pub fn save_atomic(path: &Path, mut bytes: Vec<u8>, step: u32) -> Result<()> {
+    crate::telemetry::add(crate::telemetry::Counter::CkptBytes, bytes.len() as u64);
     crate::fault::checkpoint_site(&mut bytes, step)?;
     let tmp = {
         let mut os = path.as_os_str().to_os_string();

@@ -136,6 +136,13 @@ pub fn run_cli(artifacts: &str, args: &Args) -> Result<()> {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
     }
+    // End-of-run trace export: everything the span collector gathered
+    // lands as Chrome trace-event JSON at the LLMQ_TRACE path (load it
+    // in Perfetto, or summarize with `llmq trace-report`).
+    if let Some(path) = crate::telemetry::trace_path() {
+        crate::telemetry::write_trace(&path)?;
+        println!("trace written to {}", path.display());
+    }
     Ok(())
 }
 

@@ -279,12 +279,15 @@ impl Event {
 
 /// Render the event log as line-delimited JSON: one
 /// [`Event::to_json`] object per line (newline-terminated), so chaos CI
-/// can parse outcomes instead of scraping text.
+/// can parse outcomes instead of scraping text. Lines carry the shared
+/// `util::json::EventWriter` schema — a `kind` type tag plus a monotone
+/// `seq` — the same shape `comm`'s coordinator-events.log writes, so
+/// one reader covers both logs.
 pub fn render_events(events: &[Event]) -> String {
+    let mut ew = crate::util::EventWriter::new();
     let mut s = String::new();
     for e in events {
-        s.push_str(&e.to_json().render());
-        s.push('\n');
+        s.push_str(&ew.stamp(e.to_json()));
     }
     s
 }
@@ -429,6 +432,7 @@ impl Supervisor {
                     };
                     failures += 1;
                     streak += 1;
+                    crate::telemetry::add(crate::telemetry::Counter::SupervisorRetries, 1);
                     events.push(Event::RankFailure {
                         step: attempting,
                         attempt: streak,
@@ -824,6 +828,12 @@ mod tests {
         let done = lines.last().unwrap();
         assert_eq!(kind(done), "done");
         assert_eq!(done.get("step").unwrap().usize().unwrap(), 3);
+
+        // Shared event schema: every line carries the writer's monotone
+        // seq, in file order (same contract as coordinator-events.log).
+        for (i, j) in lines.iter().enumerate() {
+            assert_eq!(j.get("seq").unwrap().usize().unwrap(), i, "seq at line {i}");
+        }
 
         // temp+rename write: final content matches, no .tmp left behind
         let log = dir.join("logs").join("events.log");

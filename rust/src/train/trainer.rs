@@ -7,7 +7,6 @@
 //! bit-identical (see `tests/fused_step_equivalence.rs`).
 
 use std::fmt::Write as _;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -34,25 +33,37 @@ pub struct StepStats {
     pub grad_norm: f32,
     /// Throughput over the step wall-clock.
     pub tokens_per_s: f64,
+    /// Measured step wall time, ns (observation only — never feeds a
+    /// numeric decision; see NUMERICS.md "Observation-only telemetry").
+    pub wall_ns: u64,
+    /// Exposed (not compute-hidden) communication time, ns. Zero unless
+    /// `LLMQ_TRACE` is on — span folding needs the recorder.
+    pub comm_ns: u64,
+    /// Exposed optimizer time, ns. Zero unless `LLMQ_TRACE` is on.
+    pub optim_ns: u64,
 }
 
-/// Render step stats as CSV (header + one row per step).
+/// Render step stats as CSV (header + one row per step), including the
+/// per-step breakdown columns so `--log` CSVs are analyzable without a
+/// trace file.
 pub fn stats_to_csv(stats: &[StepStats]) -> String {
-    // ~40 bytes/row of digits; pre-size so the row loop never reallocates.
-    let mut s = String::with_capacity(48 + stats.len() * 64);
-    s.push_str("step,loss,val_loss,grad_norm,tokens_per_s\n");
+    // ~60 bytes/row of digits; pre-size so the row loop never reallocates.
+    let mut s = String::with_capacity(72 + stats.len() * 96);
+    s.push_str("step,loss,val_loss,grad_norm,tokens_per_s,wall_ns,comm_ns,optim_ns\n");
     for st in stats {
         // write! into a String is infallible
         let _ = match st.val_loss {
             Some(v) => writeln!(
                 s,
-                "{},{},{},{},{}",
-                st.step, st.loss, v, st.grad_norm, st.tokens_per_s
+                "{},{},{},{},{},{},{},{}",
+                st.step, st.loss, v, st.grad_norm, st.tokens_per_s, st.wall_ns, st.comm_ns,
+                st.optim_ns
             ),
             None => writeln!(
                 s,
-                "{},{},,{},{}",
-                st.step, st.loss, st.grad_norm, st.tokens_per_s
+                "{},{},,{},{},{},{},{}",
+                st.step, st.loss, st.grad_norm, st.tokens_per_s, st.wall_ns, st.comm_ns,
+                st.optim_ns
             ),
         };
     }
@@ -191,7 +202,8 @@ impl Trainer {
     }
 
     fn step_impl(&mut self, batches: &[Batch], fused: bool) -> Result<StepStats> {
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now_ns();
+        let span_mark = crate::telemetry::mark();
         let world = self.cfg.world;
         let n = self.man.padded_numel;
         anyhow::ensure!(batches.len() == self.cfg.grad_accum * world);
@@ -201,6 +213,7 @@ impl Trainer {
         // must not leave the trainer claiming a step it never completed.
         let step = self.step + 1;
         crate::fault::set_step(step);
+        crate::telemetry::set_step(step);
         for rank in 0..world {
             crate::fault::step_site(rank, step);
         }
@@ -283,12 +296,21 @@ impl Trainer {
 
         let n_micro = batches.len() as f32;
         let tokens = self.man.tokens_per_microbatch() * batches.len();
+        let wall_ns = crate::telemetry::now_ns().saturating_sub(t0);
+        // Fold this step's spans into the measured breakdown. Empty
+        // (all-zero buckets) unless tracing is on; purely observational
+        // either way — no numeric state reads these figures.
+        let spans = crate::telemetry::spans_since(span_mark);
+        let bd = crate::telemetry::fold_breakdown(&spans, wall_ns);
         Ok(StepStats {
             step: self.step as usize,
             loss: loss_sum / n_micro,
             val_loss: None,
             grad_norm,
-            tokens_per_s: tokens as f64 / t0.elapsed().as_secs_f64(),
+            tokens_per_s: tokens as f64 / (wall_ns.max(1) as f64 / 1e9),
+            wall_ns,
+            comm_ns: (bd.exposed_comm_s * 1e9) as u64,
+            optim_ns: (bd.optimizer_s * 1e9) as u64,
         })
     }
 
@@ -462,6 +484,9 @@ mod tests {
                 val_loss: None,
                 grad_norm: 0.5,
                 tokens_per_s: 100.0,
+                wall_ns: 5_000,
+                comm_ns: 0,
+                optim_ns: 0,
             },
             StepStats {
                 step: 2,
@@ -469,12 +494,18 @@ mod tests {
                 val_loss: Some(2.25),
                 grad_norm: 0.25,
                 tokens_per_s: 200.0,
+                wall_ns: 6_000,
+                comm_ns: 1_500,
+                optim_ns: 250,
             },
         ];
         let csv = stats_to_csv(&stats);
         let lines: Vec<&str> = csv.lines().collect();
-        assert_eq!(lines[0], "step,loss,val_loss,grad_norm,tokens_per_s");
-        assert_eq!(lines[1], "1,2.5,,0.5,100");
-        assert_eq!(lines[2], "2,2,2.25,0.25,200");
+        assert_eq!(
+            lines[0],
+            "step,loss,val_loss,grad_norm,tokens_per_s,wall_ns,comm_ns,optim_ns"
+        );
+        assert_eq!(lines[1], "1,2.5,,0.5,100,5000,0,0");
+        assert_eq!(lines[2], "2,2,2.25,0.25,200,6000,1500,250");
     }
 }

@@ -1,16 +1,17 @@
 //! Micro-benchmark harness (criterion stand-in): warmup + timed
 //! iterations, reporting median/mean/min, used by `rust/benches/*`.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// The execution-provenance fields every bench JSON report stamps —
 /// worker-thread count (`LLMQ_THREADS`), resolved SIMD backend
 /// (`LLMQ_SIMD`), the exec runtime's stream count / async mode
-/// (`LLMQ_STREAMS` / `LLMQ_ASYNC`), and the fault-injection plane
-/// (`LLMQ_FAULT`; must render `"off"` in any committed figure — the
-/// benches refuse to run otherwise). One helper so the writers cannot
-/// drift (BENCH_trainstep.json once shipped without the backend name
-/// BENCH_hotpath.json had).
+/// (`LLMQ_STREAMS` / `LLMQ_ASYNC`), the fault-injection plane
+/// (`LLMQ_FAULT`), and the trace gate (`LLMQ_TRACE`). Fault *and*
+/// trace must render `"off"` in any committed figure — the benches
+/// refuse to record timings otherwise. One helper so the writers
+/// cannot drift (BENCH_trainstep.json once shipped without the
+/// backend name BENCH_hotpath.json had).
 ///
 /// # Examples
 ///
@@ -21,15 +22,17 @@ use std::time::{Duration, Instant};
 /// assert!(p.contains("\"streams\": "));
 /// assert!(p.contains("\"async\": "));
 /// assert!(p.contains("\"fault\": \"off\""));
+/// assert!(p.contains("\"trace\": \"off\""));
 /// ```
 pub fn provenance_json() -> String {
     format!(
-        "\"threads\": {},\n  \"simd\": \"{}\",\n  \"streams\": {},\n  \"async\": {},\n  \"fault\": \"{}\"",
+        "\"threads\": {},\n  \"simd\": \"{}\",\n  \"streams\": {},\n  \"async\": {},\n  \"fault\": \"{}\",\n  \"trace\": \"{}\"",
         crate::util::par::num_threads(),
         crate::precision::backend::level().name(),
         crate::exec::num_streams(),
         crate::exec::async_enabled(),
-        crate::fault::descriptor()
+        crate::fault::descriptor(),
+        crate::telemetry::descriptor()
     )
 }
 
@@ -95,9 +98,11 @@ impl Bencher {
         }
         let mut times = Vec::with_capacity(self.iters);
         for _ in 0..self.iters {
-            let t0 = Instant::now();
+            let t0 = crate::telemetry::now_ns();
             std::hint::black_box(f());
-            times.push(t0.elapsed());
+            times.push(Duration::from_nanos(
+                crate::telemetry::now_ns().saturating_sub(t0),
+            ));
         }
         times.sort();
         let mean = times.iter().sum::<Duration>() / times.len() as u32;

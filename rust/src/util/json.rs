@@ -150,6 +150,58 @@ impl Json {
     }
 }
 
+/// The shared JSONL event schema: every line the single-process
+/// supervisor log (`events.log`) or the coordinator's
+/// `coordinator-events.log` carries is one compact JSON object with a
+/// `kind` type tag and a monotone `seq` number (0-based, per log file),
+/// plus whatever rank/step/reason fields the event itself adds. One
+/// writer per log file owns the sequence counter, so readers can detect
+/// truncated or interleaved logs by a gap in `seq`.
+#[derive(Debug, Default)]
+pub struct EventWriter {
+    seq: u64,
+}
+
+impl EventWriter {
+    /// A writer whose next event line gets `seq` 0.
+    pub fn new() -> Self {
+        Self { seq: 0 }
+    }
+
+    /// Render one newline-terminated event line: `kind` and this
+    /// writer's next `seq`, then `fields` (later keys win on collision,
+    /// per [`Json::obj`]).
+    pub fn line(&mut self, kind: &str, fields: Vec<(&'static str, Json)>) -> String {
+        let mut all: Vec<(&'static str, Json)> = vec![
+            ("kind", Json::Str(kind.to_string())),
+            ("seq", Json::Num(self.seq as f64)),
+        ];
+        self.seq += 1;
+        all.extend(fields);
+        let mut s = Json::obj(all).render();
+        s.push('\n');
+        s
+    }
+
+    /// Stamp this writer's next `seq` into an already-built event
+    /// object (one that carries its own `kind`, e.g. a supervisor
+    /// `Event::to_json`) and render it as one newline-terminated line.
+    pub fn stamp(&mut self, mut obj: Json) -> String {
+        if let Json::Obj(m) = &mut obj {
+            m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        }
+        self.seq += 1;
+        let mut s = obj.render();
+        s.push('\n');
+        s
+    }
+
+    /// Event lines rendered so far (= the next event's `seq`).
+    pub fn count(&self) -> u64 {
+        self.seq
+    }
+}
+
 fn escape_into(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -406,6 +458,24 @@ mod tests {
             ("kind", Json::Str("hb".to_string())),
         ]);
         assert_eq!(j.render(), r#"{"kind":"hb","step":3}"#);
+    }
+
+    #[test]
+    fn event_writer_stamps_kind_and_monotone_seq() {
+        let mut ew = EventWriter::new();
+        let a = ew.line("epoch-start", vec![("epoch", Json::Num(1.0))]);
+        let b = ew.line("rank-dead", vec![("rank", Json::Num(3.0))]);
+        assert_eq!(a, "{\"epoch\":1,\"kind\":\"epoch-start\",\"seq\":0}\n");
+        assert_eq!(b, "{\"kind\":\"rank-dead\",\"rank\":3,\"seq\":1}\n");
+        assert_eq!(ew.count(), 2);
+        let c = ew.stamp(Json::obj([("kind", Json::Str("done".to_string()))]));
+        assert_eq!(c, "{\"kind\":\"done\",\"seq\":2}\n");
+        // every line is standalone-parseable with the shared fields
+        for (i, line) in [a, b].iter().enumerate() {
+            let j = Json::parse(line.trim_end()).unwrap();
+            assert_eq!(j.get("seq").unwrap().usize().unwrap(), i);
+            assert!(j.get("kind").unwrap().str().is_ok());
+        }
     }
 
     #[test]

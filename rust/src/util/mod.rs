@@ -12,4 +12,4 @@ pub mod prop;
 
 pub use args::{ArgError, Args};
 pub use bench::Bencher;
-pub use json::Json;
+pub use json::{EventWriter, Json};

@@ -59,6 +59,29 @@ fn flags_wallclock_and_entropy_randomness() {
 }
 
 #[test]
+fn flags_instant_outside_telemetry_and_respects_clock_allowlist() {
+    let bad = "use std::time::Instant;\nfn t() { let _x = Instant::now(); }\n";
+    let findings = lint::lint_file(Path::new("src/exec/mod.rs"), bad);
+    assert_eq!(findings.len(), 2, "{}", lint::render(&findings));
+    assert!(findings.iter().all(|f| f.rule == lint::R2_WALLCLOCK_RANDOMNESS));
+    assert_eq!(findings[0].line, 1);
+    assert_eq!(findings[1].line, 2);
+
+    // The telemetry module is the one sanctioned clock reader.
+    let ok = lint::lint_file(Path::new("rust/src/telemetry/mod.rs"), bad);
+    assert!(ok.is_empty(), "{}", lint::render(&ok));
+    // Exactly one clock allowlist entry, with a written reason — the
+    // issue's contract: the telemetry clock, nothing else.
+    assert_eq!(lint::CLOCK_ALLOWLIST.len(), 1);
+    assert_eq!(lint::CLOCK_ALLOWLIST[0].0, "telemetry/mod.rs");
+    assert!(!lint::CLOCK_ALLOWLIST[0].1.is_empty());
+    // `Instant` in a comment stays fine (strings/comments stripped).
+    let commented = "// the caller feeds Instant-derived ms\nfn f() {}\n";
+    let ok = lint::lint_file(Path::new("src/comm/liveness.rs"), commented);
+    assert!(ok.is_empty(), "{}", lint::render(&ok));
+}
+
+#[test]
 fn flags_unkeyed_stochastic_rounding() {
     // No counter key in the parameter list: rejected.
     let bad = "pub fn stochastic_round_q(x: f32, p: f32) -> f32 { x + p }\n";

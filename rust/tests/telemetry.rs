@@ -1,0 +1,297 @@
+//! Telemetry invariance and export-shape suite.
+//!
+//! The observation-only contract (NUMERICS.md, "Observation-only
+//! telemetry") says tracing may never change a number. The headline
+//! test here pins that bitwise: the fused optimizer step — the host
+//! step `Trainer::train_step` runs — produces identical norm, params
+//! and moments with `LLMQ_TRACE` forced on and forced off, across
+//! threads {1, 8} × streams {1, 2} × async on/off × world {1, 2, 4}.
+//!
+//! Span *timestamps* are wall-clock and inherently nondeterministic, so
+//! the Chrome export is pinned by **shape** (event fields, track
+//! layout, sort order), never by byte content. Counter totals, by
+//! contrast, are deterministic functions of the workload and are pinned
+//! to exact values on a synthetic reduce + gather.
+//!
+//! Counters and the span collector are process-global, so every test
+//! that forces tracing or reads totals serializes on one lock and
+//! cleans up (`reset_counters` + `drain`) before releasing it.
+
+use std::sync::Mutex;
+
+use llmq::collectives::memcpy::{
+    all_gather_memcpy, reduce_scatter_scaled_memcpy, PIPELINE_BLOCK,
+};
+use llmq::collectives::DeviceGroup;
+use llmq::exec;
+use llmq::optim::fused::{fused_step_async, HostStep};
+use llmq::optim::{AdamWParams, MomentsMode};
+use llmq::precision::{round_to_bf16, CounterRng};
+use llmq::telemetry::{self, Counter, SpanRec};
+use llmq::train::StepWorkspace;
+use llmq::util::par;
+
+/// Serializes the tests that touch the process-global counter registry
+/// and span collector.
+static TELEMETRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TELEMETRY_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn host_step(n_micro: usize, opt_world: usize) -> HostStep {
+    HostStep {
+        hp: AdamWParams::default(),
+        lr: 3e-4,
+        grad_clip: 1.0,
+        step: 2,
+        counter: 12_345,
+        seed: 9,
+        n_micro,
+        opt_world,
+        moments: MomentsMode::Fp32,
+    }
+}
+
+fn fill_dev_grads(ws: &mut StepWorkspace, salt: u32, amp: f32) {
+    let n = ws.n();
+    let rng = CounterRng::new(salt);
+    for (d, g) in ws.dev_grads.iter_mut().enumerate() {
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = round_to_bf16((rng.next_f32((d * n + i) as u32) - 0.5) * amp);
+        }
+    }
+}
+
+fn init_state(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let p = (0..n)
+        .map(|i| round_to_bf16(0.02 * (i % 101) as f32 - 1.0))
+        .collect();
+    let m = (0..n)
+        .map(|i| round_to_bf16(0.001 * (i % 13) as f32 - 0.006))
+        .collect();
+    let v = (0..n).map(|i| round_to_bf16(1e-4 * (i % 7) as f32)).collect();
+    (p, m, v)
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// One fused async step under an explicit (threads, streams, async,
+/// traced) configuration; returns bit patterns only.
+fn run_step(
+    world: usize,
+    n: usize,
+    threads: usize,
+    streams: usize,
+    async_on: bool,
+    traced: bool,
+) -> (u32, Vec<u32>, Vec<u32>, Vec<u32>) {
+    telemetry::with_trace(traced, || {
+        let mut ws = StepWorkspace::new(world, n);
+        ws.begin_step();
+        fill_dev_grads(&mut ws, 0xACC, 0.1);
+        let (mut p, mut m, mut v) = init_state(n);
+        let hs = host_step(3 * world, world.max(2));
+        let norm = par::with_threads(threads, || {
+            exec::with_async(async_on, || {
+                exec::with_streams(streams, || {
+                    fused_step_async(&mut ws, &mut p, &mut m, &mut v, &hs)
+                })
+            })
+        });
+        (norm.to_bits(), bits(&p), bits(&m), bits(&v))
+    })
+}
+
+/// The tentpole invariance pin: tracing-on ≡ tracing-off, bitwise, for
+/// every cell of the threads × streams × async × world matrix — and
+/// every cell equals the serial untraced reference, so the matrix also
+/// re-pins schedule-independence with the recorder live.
+#[test]
+fn tracing_is_bitwise_invisible_across_matrix() {
+    let _g = lock();
+    for world in [1usize, 2, 4] {
+        let n = 2 * PIPELINE_BLOCK + 64; // 16448: divisible by 1/2/4
+        assert_eq!(n % world, 0, "test geometry");
+        let reference = run_step(world, n, 1, 1, false, false);
+        for threads in [1usize, 8] {
+            for streams in [1usize, 2] {
+                for async_on in [false, true] {
+                    for traced in [false, true] {
+                        let got = run_step(world, n, threads, streams, async_on, traced);
+                        let tag = format!(
+                            "world {world} t {threads} s {streams} \
+                             async {async_on} traced {traced}"
+                        );
+                        assert_eq!(got.0, reference.0, "norm: {tag}");
+                        assert_eq!(got.1, reference.1, "params: {tag}");
+                        assert_eq!(got.2, reference.2, "m: {tag}");
+                        assert_eq!(got.3, reference.3, "v: {tag}");
+                    }
+                }
+            }
+        }
+    }
+    telemetry::reset_counters();
+    let _ = telemetry::drain();
+}
+
+/// A traced async step actually produces spans, every label lands in
+/// the known vocabulary, and the measured breakdown's buckets sum to
+/// the wall time handed to the fold.
+#[test]
+fn traced_step_spans_fold_into_a_full_breakdown() {
+    let _g = lock();
+    let _ = telemetry::drain();
+    let (spans, wall_ns) = telemetry::with_trace(true, || {
+        let m0 = telemetry::mark();
+        let t0 = telemetry::now_ns();
+        let _ = run_step(2, 2 * PIPELINE_BLOCK, 8, 2, true, true);
+        let wall = telemetry::now_ns().saturating_sub(t0);
+        (telemetry::spans_since(m0), wall)
+    });
+    assert!(!spans.is_empty(), "traced step recorded no spans");
+    const KNOWN: &[&str] = &[
+        "grad-accum",
+        "micro-step",
+        "reduce+partials",
+        "reduce+avg",
+        "grad-publish",
+        "all-gather",
+        "mesh-exchange",
+        "prefetch",
+        "evict",
+        "norm-fold",
+        "norm",
+        "update+gather",
+        "adamw",
+        "record",
+        "wait",
+    ];
+    for s in &spans {
+        assert!(KNOWN.contains(&s.label), "unknown span label {:?}", s.label);
+        assert!(s.t1_ns >= s.t0_ns, "span {} ends before it starts", s.label);
+    }
+    // The async pipeline must show both comm and optimizer work.
+    let has = |b| spans.iter().any(|s| telemetry::classify(s.label) == b);
+    assert!(has(telemetry::Bucket::Comm), "no comm spans");
+    assert!(has(telemetry::Bucket::Optimizer), "no optimizer spans");
+    let b = telemetry::fold_breakdown(&spans, wall_ns);
+    let wall_s = wall_ns as f64 / 1e9;
+    assert!(
+        (b.total() - wall_s).abs() <= 1e-9 + wall_s * 1e-12,
+        "buckets {} != wall {}",
+        b.total(),
+        wall_s
+    );
+    telemetry::reset_counters();
+    let _ = telemetry::drain();
+}
+
+/// Counter totals are deterministic functions of the workload: exact
+/// values for a known reduce + gather, no drift when tracing is off.
+#[test]
+fn counter_totals_are_exact_on_synthetic_collectives() {
+    let _g = lock();
+    telemetry::reset_counters();
+    let world = 2;
+    let n = 512;
+    let chunk = n / world;
+    let g = DeviceGroup::from_fn(world, n, |r, i| {
+        round_to_bf16(0.01 * (r * n + i) as f32)
+    });
+    let rng = CounterRng::new(5);
+    let shards: Vec<Vec<f32>> = vec![vec![1.0f32; chunk]; world];
+
+    telemetry::with_trace(true, || {
+        let mut out = vec![0f32; n];
+        reduce_scatter_scaled_memcpy(&g, &mut out, 0.5, &rng, 0);
+        let mut gathered = DeviceGroup::from_fn(world, n, |_, _| 0.0);
+        all_gather_memcpy(&shards, &mut gathered);
+    });
+    // One reduce over `world` full-length f32 sources; one SR draw per
+    // output element; the gather copies every shard into every replica.
+    assert_eq!(telemetry::counter(Counter::BytesReduced), (world * n * 4) as u64);
+    assert_eq!(telemetry::counter(Counter::SrDraws), n as u64);
+    assert_eq!(
+        telemetry::counter(Counter::BytesGathered),
+        (world * world * chunk * 4) as u64
+    );
+
+    // The same work with tracing off adds nothing.
+    telemetry::with_trace(false, || {
+        let mut out = vec![0f32; n];
+        reduce_scatter_scaled_memcpy(&g, &mut out, 0.5, &rng, 0);
+    });
+    assert_eq!(telemetry::counter(Counter::BytesReduced), (world * n * 4) as u64);
+    assert_eq!(telemetry::counter(Counter::SrDraws), n as u64);
+
+    // The JSONL sink renders those exact totals under stable keys.
+    let line = telemetry::counters_jsonl();
+    let j = llmq::util::Json::parse(&line).expect("counters line parses");
+    assert_eq!(j.get("kind").unwrap().str().unwrap(), "counters");
+    assert_eq!(
+        j.get("bytes_reduced").unwrap().num().unwrap(),
+        (world * n * 4) as f64
+    );
+    assert_eq!(j.get("sr_draws").unwrap().num().unwrap(), n as f64);
+    telemetry::reset_counters();
+    let _ = telemetry::drain();
+}
+
+/// Golden shape of the Chrome trace-event export on synthetic spans:
+/// one process per rank, one track per stream, events sorted by
+/// `(pid, tid, ts)`, counters riding along under `otherData` with every
+/// registry name present.
+#[test]
+fn chrome_export_golden_shape() {
+    let _g = lock();
+    let sp = |label, stream, rank, t0: u64, t1: u64| SpanRec {
+        label,
+        stream,
+        rank,
+        step: 7,
+        t0_ns: t0,
+        t1_ns: t1,
+    };
+    // Deliberately out of order: the export must sort them.
+    let spans = vec![
+        sp("update+gather", 0, 1, 9_000, 12_000),
+        sp("grad-accum", 1, 0, 2_000, 5_000),
+        sp("grad-accum", 0, 0, 1_000, 4_000),
+        sp("reduce+partials", 0, 0, 4_000, 8_000),
+    ];
+    let j = telemetry::chrome_trace_json(&spans);
+    let parsed = llmq::util::Json::parse(&j).expect("export is valid JSON");
+    let events = parsed.get("traceEvents").unwrap().arr().unwrap();
+    assert_eq!(events.len(), spans.len());
+    let key = |e: &llmq::util::Json| {
+        (
+            e.get("pid").unwrap().num().unwrap() as u64,
+            e.get("tid").unwrap().num().unwrap() as u64,
+            (e.get("ts").unwrap().num().unwrap() * 1e3) as u64,
+        )
+    };
+    for w in events.windows(2) {
+        assert!(key(&w[0]) <= key(&w[1]), "events not sorted by (pid, tid, ts)");
+    }
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().str().unwrap(), "X");
+        assert_eq!(e.get("cat").unwrap().str().unwrap(), "llmq");
+        assert_eq!(e.get("args").unwrap().get("step").unwrap().num().unwrap(), 7.0);
+    }
+    // Track layout: rank 0 carries streams {0, 1}, rank 1 stream 0.
+    assert_eq!(key(&events[0]), (0, 0, 1_000));
+    assert_eq!(key(&events[3]), (1, 0, 9_000));
+    let counters = parsed.get("otherData").unwrap().get("counters").unwrap();
+    for name in telemetry::COUNTER_NAMES {
+        assert!(counters.opt(name).is_some(), "counter {name} missing from export");
+    }
+    assert_eq!(parsed.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+    // CI's LLMQ_TRACE=1 config uploads this file as the sample trace
+    // artifact and smoke-reads it with `llmq trace-report`.
+    let out = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("llmq-trace-sample.json");
+    std::fs::write(&out, &j).expect("write sample trace");
+}

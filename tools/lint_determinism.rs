@@ -20,10 +20,12 @@
 //!   through sorted keys) are grandfathered in [`HASH_ALLOWLIST`], each
 //!   with a reason. New files should reach for `BTreeMap` / `BTreeSet`.
 //! * **R2 `wallclock-randomness`** — `thread_rng`, `from_entropy`,
-//!   `rand::random`, or `SystemTime`-derived seeds. All randomness in
-//!   this crate flows from the run config seed through counter-based
-//!   generators; OS entropy and wall clocks are banned outside timing
-//!   telemetry (none of which currently feeds numerics).
+//!   `rand::random`, `SystemTime`-derived seeds, or a direct `Instant`
+//!   read. All randomness in this crate flows from the run config seed
+//!   through counter-based generators, and all *timing* flows through
+//!   `telemetry::now_ns` — the one sanctioned monotonic-clock reader
+//!   ([`CLOCK_ALLOWLIST`]), observation-only by contract (NUMERICS.md):
+//!   clock values may be logged, but never fed into a numeric decision.
 //! * **R3 `unkeyed-sr`** — a stochastic-rounding function (name contains
 //!   `stochastic`, starts with `sr_`, or ends with `_sr`) whose
 //!   parameter list carries no counter key (`counter`, `ctr`, or
@@ -94,6 +96,20 @@ pub const HASH_ALLOWLIST: &[(&str, &str)] = &[
         "per-step tally maps; keyed by step id, never iterated for output",
     ),
 ];
+
+/// Files (matched by path suffix) allowed to read the monotonic clock
+/// (`Instant`) directly. Exactly one entry: the telemetry module owns
+/// the crate's clock (`telemetry::now_ns`), and every other timing
+/// consumer — exec watchdog, bench harness, comm deadlines, span
+/// recorders — goes through it. Clock readings are observation-only
+/// (spans, counters, timeouts); they never feed a numeric decision, so
+/// bitwise reproducibility is unaffected (pinned by the tracing
+/// equivalence suite).
+pub const CLOCK_ALLOWLIST: &[(&str, &str)] = &[(
+    "telemetry/mod.rs",
+    "the single monotonic-clock reader behind telemetry::now_ns; \
+     observation-only by contract, never feeds numerics",
+)];
 
 /// One lint violation: file, 1-based line, rule id, human message.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -301,6 +317,13 @@ fn on_hash_allowlist(rel: &str) -> Option<&'static str> {
         .map(|&(_, why)| why)
 }
 
+fn on_clock_allowlist(rel: &str) -> Option<&'static str> {
+    CLOCK_ALLOWLIST
+        .iter()
+        .find(|(suffix, _)| rel.ends_with(suffix))
+        .map(|&(_, why)| why)
+}
+
 /// Does `name` look like a stochastic-rounding entry point?
 fn is_sr_name(name: &str) -> bool {
     name.contains("stochastic") || name.starts_with("sr_") || name.ends_with("_sr")
@@ -353,6 +376,20 @@ pub fn lint_file(rel: &Path, src: &str) -> Vec<Finding> {
                 line: lineno,
                 rule: R2_WALLCLOCK_RANDOMNESS,
                 message: "rand::random draws from thread-local OS entropy".into(),
+            });
+        }
+        // R2 (clocks): a direct `Instant` read outside the telemetry
+        // module. Timing flows through `telemetry::now_ns` so the
+        // observation-only clock rule has one enforcement point.
+        if on_clock_allowlist(&rel_s).is_none() && word_hit(line, "Instant") {
+            findings.push(Finding {
+                file: rel.to_path_buf(),
+                line: lineno,
+                rule: R2_WALLCLOCK_RANDOMNESS,
+                message: "Instant reads the wall clock — route timing through \
+                          telemetry::now_ns (telemetry/mod.rs is the one \
+                          CLOCK_ALLOWLIST entry; clocks are observation-only)"
+                    .into(),
             });
         }
         // R4: unsafe outside the audited backend module.
